@@ -1,0 +1,159 @@
+//! End-to-end driver: the full system on a real small workload.
+//!
+//! Starts the mapping-as-a-service coordinator, submits a batched stream
+//! of mapping requests for the paper's workload families (rgg/del/mesh
+//! task graphs) across machine hierarchies, exercising every layer:
+//!
+//!   TCP protocol → router → GPU-IM / GPU-HM-ultra (device pipelines)
+//!   → PJRT-offloaded QAP polish (AOT JAX/Pallas kernel) → metrics.
+//!
+//! Reports the paper's headline metric (communication cost J) per request
+//! plus speedup vs the serial SharedMap-S baseline, and verifies the
+//! returned mappings are valid and ε-balanced. Recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_service
+//! ```
+
+use heipa::algo::Algorithm;
+use heipa::coordinator::service::Service;
+use heipa::coordinator::{MapRequest, MapResponse};
+use heipa::graph::gen;
+use heipa::partition;
+use heipa::topology::Hierarchy;
+use std::io::{BufRead, BufReader, Write};
+
+fn main() -> anyhow::Result<()> {
+    let svc = std::sync::Arc::new(Service::start("artifacts".into(), 0));
+
+    // --- 1. TCP smoke: drive one request through the wire protocol. ----
+    let addr = spawn_tcp(svc.clone());
+    {
+        let mut conn = std::net::TcpStream::connect(addr)?;
+        writeln!(conn, "ping")?;
+        writeln!(
+            conn,
+            "map instance=sten_cop20k algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.03 seed=1"
+        )?;
+        let mut lines = BufReader::new(conn).lines();
+        let pong = lines.next().unwrap()?;
+        assert!(pong.contains("pong"), "bad ping reply: {pong}");
+        let reply = lines.next().unwrap()?;
+        assert!(reply.starts_with("ok "), "bad map reply: {reply}");
+        println!("TCP protocol OK: {reply}\n");
+    }
+
+    // --- 2. Batched workload over the full stack. -----------------------
+    let workload = [
+        ("rgg15", "4:8:2", None),
+        ("rgg15", "4:8:6", Some(Algorithm::GpuIm)),
+        ("del15", "4:8:2", None),
+        ("del15", "4:8:6", Some(Algorithm::GpuIm)),
+        ("wal_598a", "4:8:4", None),
+        ("sten_shipsec", "4:8:4", Some(Algorithm::GpuIm)),
+    ];
+    let requests: Vec<MapRequest> = workload
+        .iter()
+        .map(|&(inst, hier, algorithm)| MapRequest {
+            instance: inst.into(),
+            algorithm, // None → router decides
+            hierarchy: hier.into(),
+            distance: "1:10:100".into(),
+            eps: 0.03,
+            seed: 1,
+            polish: true,
+            return_mapping: true,
+        })
+        .collect();
+
+    println!(
+        "| instance | hierarchy | routed to | J | imb | host ms | GPU ms (modeled) | polish ΔJ | speedup vs sharedmap-s |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let responses = svc.submit_batch(requests);
+    let mut speedups: Vec<f64> = Vec::new();
+    for (&(inst, hier, _), resp) in workload.iter().zip(responses) {
+        let resp: MapResponse = resp?;
+        // Validate the mapping end-to-end.
+        let g = gen::generate_by_name(inst);
+        let h = Hierarchy::parse(hier, "1:10:100")?;
+        let mapping = resp.mapping.as_ref().expect("requested mapping");
+        partition::validate_mapping(mapping, g.n(), h.k()).map_err(anyhow::Error::msg)?;
+        assert!(
+            partition::is_balanced(&g, mapping, h.k(), 0.034),
+            "{inst}: imbalance {:.4}",
+            partition::imbalance(&g, mapping, h.k())
+        );
+        let j_check = partition::comm_cost(&g, mapping, &h);
+        assert!((j_check - resp.comm_cost).abs() < 1e-6 * j_check.max(1.0));
+
+        // Serial baseline for the headline speedup.
+        let baseline = heipa::algo::run_algorithm(
+            Algorithm::SharedMapS,
+            &heipa::par::Pool::default(),
+            &g,
+            &h,
+            0.03,
+            1,
+        );
+        let speedup = baseline.host_ms / resp.device_ms.max(1e-9);
+        speedups.push(speedup);
+        println!(
+            "| {} | {} | {} | {:.0} | {:.4} | {:.1} | {:.2} | {:.0} | {:.0}x |",
+            inst,
+            hier,
+            resp.algorithm.name(),
+            resp.comm_cost,
+            resp.imbalance,
+            resp.host_ms,
+            resp.device_ms,
+            resp.polish_improvement,
+            speedup
+        );
+    }
+
+    let geo = heipa::harness::stats::geomean(&speedups);
+    let m = svc.metrics();
+    println!(
+        "\nheadline: geometric-mean modeled speedup vs SharedMap-S = {geo:.0}x \
+         (paper: GPU-IM 1454x, GPU-HM-ultra 22x on the full testbed)"
+    );
+    println!(
+        "service metrics: {} requests, {} failures, per-algorithm {:?}",
+        m.requests, m.failures, m.per_algorithm
+    );
+    Ok(())
+}
+
+/// Bind an ephemeral port and serve the coordinator protocol on it.
+fn spawn_tcp(svc: std::sync::Arc<Service>) -> std::net::SocketAddr {
+    use heipa::coordinator::protocol;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    let reply = match protocol::parse_command(&line) {
+                        Ok(protocol::Command::Ping) => "ok pong=1".to_string(),
+                        Ok(protocol::Command::Metrics) => protocol::render_metrics(&svc.metrics()),
+                        Ok(protocol::Command::Map(req)) => match svc.submit(req) {
+                            Ok(resp) => protocol::render_response(&resp),
+                            Err(e) => protocol::render_error(&e),
+                        },
+                        Err(e) => protocol::render_error(&e),
+                    };
+                    if writeln!(writer, "{reply}").is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    addr
+}

@@ -1,0 +1,89 @@
+//! Run the paper's full evaluation (scaled) in one shot and print every
+//! table/figure summary. Heavier than the benches; scale with
+//! `HEIPA_SEEDS=1,2` and `HEIPA_TOPS=2,6` (defaults: seed 1; tops 2 and 6).
+//!
+//! ```bash
+//! HEIPA_TOPS=2,6 cargo run --release --example paper_experiments
+//! ```
+
+use heipa::algo::Algorithm;
+use heipa::graph::gen;
+use heipa::harness::{self, profiles::ProfileInput, stats};
+use heipa::par::Pool;
+
+fn main() -> anyhow::Result<()> {
+    let pool = Pool::default();
+    let seeds = harness::seeds_from_env(&[1]);
+    let hierarchies = if std::env::var("HEIPA_TOPS").is_ok() {
+        harness::hierarchies_from_env()
+    } else {
+        vec![
+            heipa::topology::Hierarchy::new(vec![4, 8, 2], vec![1.0, 10.0, 100.0])?,
+            heipa::topology::Hierarchy::new(vec![4, 8, 6], vec![1.0, 10.0, 100.0])?,
+        ]
+    };
+    let instances = gen::smoke_suite();
+    let algos = [
+        Algorithm::GpuHm,
+        Algorithm::GpuHmUltra,
+        Algorithm::GpuIm,
+        Algorithm::SharedMapF,
+        Algorithm::SharedMapS,
+        Algorithm::IntMapF,
+        Algorithm::IntMapS,
+        Algorithm::Jet,
+    ];
+    eprintln!(
+        "running {} algos x {} instances x {} hierarchies x {} seeds …",
+        algos.len(),
+        instances.len(),
+        hierarchies.len(),
+        seeds.len()
+    );
+    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+    harness::write_csv(&records, std::path::Path::new("paper_experiments.csv"))?;
+
+    // Quality profile (Fig. 2 right).
+    let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+    let quality: Vec<Vec<f64>> = algos
+        .iter()
+        .map(|a| {
+            records
+                .iter()
+                .filter(|r| r.algorithm == *a)
+                .map(|r| r.comm_cost)
+                .collect()
+        })
+        .collect();
+    let profile = ProfileInput { algorithm_names: names.clone(), quality };
+    println!("\n== mean overhead over best solution (paper Fig. 2) ==");
+    for (name, pct) in profile.mean_overhead_pct() {
+        println!("  {name:>14}: +{pct:.1}%");
+    }
+    println!("\n== best-solution fractions (tau = 1) ==");
+    for (name, frac) in profile.best_fractions() {
+        println!("  {name:>14}: {:.1}%", frac * 100.0);
+    }
+
+    // Speedups vs SharedMap-S (Fig. 2 left).
+    let base: Vec<f64> = records
+        .iter()
+        .filter(|r| r.algorithm == Algorithm::SharedMapS)
+        .map(|r| r.device_ms)
+        .collect();
+    println!("\n== speedup vs sharedmap-s (geomean / max) ==");
+    for a in algos {
+        if a == Algorithm::SharedMapS {
+            continue;
+        }
+        let mine: Vec<f64> = records
+            .iter()
+            .filter(|r| r.algorithm == a)
+            .map(|r| r.device_ms)
+            .collect();
+        let (geo, mx, _) = stats::speedup_summary(&base, &mine);
+        println!("  {:>14}: {geo:.1}x geomean, {mx:.1}x max", a.name());
+    }
+    println!("\nwrote paper_experiments.csv");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Interchange is HLO **text**, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: `python -m compile.aot --out-dir ../artifacts` (from python/).
+"""
+
+import argparse
+import pathlib
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Padded QAP kernel sizes; must match
+# rust/src/runtime/offload.rs::QAP_KERNEL_SIZES.
+QAP_SIZES = (32, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (return_tuple=True so the
+    Rust side can unwrap with to_tupleN)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: pathlib.Path) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for k in QAP_SIZES:
+        lowered = model.qap_step_jit(k)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"qap_step_k{k}.hlo.txt"
+        path.write_text(text)
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

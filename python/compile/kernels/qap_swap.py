@@ -1,0 +1,131 @@
+"""L1 Pallas kernels for the device-side QAP swap search.
+
+The paper's GPU hot spots are irregular CSR sweeps; the dense hot spot of
+the *two-phase* pipeline — evaluating all O(k^2) block-swap candidates on
+the communication model graph — is reformulated here for matrix units
+(DESIGN.md "Hardware adaptation"):
+
+    E     = P @ D @ P^T          (permuted distance matrix)
+    M     = W @ E                (all row-interaction sums; E symmetric)
+    delta = 2*(M + M^T - diag(M) - diag(M)^T + 2 * W ⊙ E)
+    J     = sum(W ⊙ E)
+
+`delta[x, y]` is the exact change of the mapping objective J if blocks x
+and y swap PEs; two matmuls amortize the whole O(k^3) sweep onto the MXU.
+
+Kernels are written with `pl.pallas_call(..., interpret=True)`: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode lowers
+them to plain HLO (numerics identical; real-TPU tiling estimated in
+EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile edge for the matmul grid. 128 matches the MXU systolic array; the
+# k=32/64 variants use a single full-size tile.
+def _tile(k: int) -> int:
+    return min(k, 128)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile, accumulated over the k-grid axis.
+
+    The output block's index map ignores the k axis, so the same VMEM tile
+    is revisited across k steps — the standard Pallas accumulation idiom
+    (no HBM round-trips between partial products).
+    """
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul C = A @ B for square f32 matrices."""
+    k = a.shape[0]
+    assert a.shape == (k, k) and b.shape == (k, k)
+    bt = _tile(k)
+    n_k = k // bt
+    grid = (k // bt, k // bt, n_k)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bt), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bt, bt), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bt), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+def _combine_kernel(m_ref, mt_ref, drow_ref, dcol_ref, w_ref, e_ref, o_ref):
+    """delta = 2*(M + M^T - diag_row - diag_col + 2*W.*E), elementwise."""
+    o_ref[...] = 2.0 * (
+        m_ref[...]
+        + mt_ref[...]
+        - drow_ref[...]
+        - dcol_ref[...]
+        + 2.0 * w_ref[...] * e_ref[...]
+    )
+
+
+def combine(m, mt, drow, dcol, w, e):
+    """Elementwise delta combination as a tiled Pallas kernel."""
+    k = m.shape[0]
+    bt = _tile(k)
+    grid = (k // bt, k // bt)
+    spec = pl.BlockSpec((bt, bt), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=spec,
+        interpret=True,
+    )(m, mt, drow, dcol, w, e)
+
+
+def _weighted_sum_kernel(w_ref, e_ref, o_ref):
+    """Tile-wise partial sums of W ⊙ E (reduced outside)."""
+    o_ref[0, 0] = jnp.sum(w_ref[...] * e_ref[...])
+
+
+def weighted_cost(w: jax.Array, e: jax.Array) -> jax.Array:
+    """J = sum(W ⊙ E) via a tiled Pallas partial-reduction."""
+    k = w.shape[0]
+    bt = _tile(k)
+    grid = (k // bt, k // bt)
+    partials = pl.pallas_call(
+        _weighted_sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((k // bt, k // bt), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, bt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        interpret=True,
+    )(w, e)
+    return jnp.sum(partials)
+
+
+def qap_swap_kernel(w: jax.Array, d: jax.Array, p: jax.Array):
+    """Full device step: (delta, J) from W, D and one-hot assignment P."""
+    pd = matmul(p, d)  # P @ D
+    e = matmul(pd, p.T)  # (P @ D) @ P^T
+    m = matmul(w, e)  # W @ E  (E symmetric)
+    diag = jnp.diagonal(m)
+    drow = jnp.broadcast_to(diag[:, None], m.shape)
+    dcol = jnp.broadcast_to(diag[None, :], m.shape)
+    delta = combine(m, m.T, drow, dcol, w, e)
+    j = weighted_cost(w, e)
+    return delta, j

@@ -1,0 +1,60 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Two layers of reference:
+* `*_ref` — vectorized jnp implementations of the same math (used to test
+  the Pallas kernels shape-by-shape under hypothesis), and
+* `swap_delta_brute` — an O(k^4) literal re-evaluation of J for every swap
+  (used to certify the *math*, not just the kernels).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def permuted_distance_ref(d, p):
+    """E = P @ D @ P^T."""
+    return p @ d @ p.T
+
+
+def cost_ref(w, d, p):
+    """J = sum(W ⊙ E)."""
+    e = permuted_distance_ref(d, p)
+    return jnp.sum(w * e)
+
+
+def swap_delta_ref(w, d, p):
+    """Vectorized delta matrix (same math the kernel implements)."""
+    e = permuted_distance_ref(d, p)
+    m = w @ e  # E symmetric
+    diag = jnp.diagonal(m)
+    return 2.0 * (m + m.T - diag[:, None] - diag[None, :] + 2.0 * w * e)
+
+
+def onehot(sigma, k):
+    """One-hot permutation matrix P[x, sigma[x]] = 1."""
+    p = np.zeros((k, k), dtype=np.float32)
+    p[np.arange(len(sigma)), np.asarray(sigma)] = 1.0
+    return p
+
+
+def cost_brute(w, d, sigma):
+    """J by definition: sum_{x,y} W[x,y] * D[sigma_x, sigma_y]."""
+    k = w.shape[0]
+    j = 0.0
+    for x in range(k):
+        for y in range(k):
+            j += w[x, y] * d[sigma[x], sigma[y]]
+    return j
+
+
+def swap_delta_brute(w, d, sigma):
+    """delta[x,y] = J(after swapping sigma_x, sigma_y) - J(before)."""
+    k = w.shape[0]
+    base = cost_brute(w, d, sigma)
+    out = np.zeros((k, k), dtype=np.float64)
+    for x in range(k):
+        for y in range(k):
+            s = list(sigma)
+            s[x], s[y] = s[y], s[x]
+            out[x, y] = cost_brute(w, d, s) - base
+    return out

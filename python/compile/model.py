@@ -1,0 +1,30 @@
+"""L2 compute graph: the device-side QAP swap step.
+
+`qap_step(W, D, P)` composes the L1 Pallas kernels into the computation
+the Rust coordinator executes per refinement sweep:
+
+* `delta` — exact objective change for all k x k block swaps,
+* `j`     — the current block-level communication cost.
+
+This module is build-time only: `aot.py` lowers `qap_step` once per padded
+size and the Rust runtime executes the artifacts; Python is never on the
+request path.
+"""
+
+import jax
+
+from .kernels import qap_swap
+
+
+def qap_step(w: jax.Array, d: jax.Array, p: jax.Array):
+    """One device sweep: (delta[k,k], j[]) from W, D, one-hot P."""
+    delta, j = qap_swap.qap_swap_kernel(w, d, p)
+    return delta, j
+
+
+def qap_step_jit(k: int):
+    """Jitted `qap_step` specialized to f32[k,k] inputs."""
+    import jax.numpy as jnp
+
+    spec = jax.ShapeDtypeStruct((k, k), jnp.float32)
+    return jax.jit(qap_step).lower(spec, spec, spec)

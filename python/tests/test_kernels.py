@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp references, swept with hypothesis.
+
+Certifies (a) the kernel implementations against the vectorized jnp math
+and (b) the math itself against a brute-force re-evaluation of J for
+every swap.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qap_swap, ref
+
+
+def random_instance(k, seed, weight_scale=20.0):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, int(weight_scale), size=(k, k)).astype(np.float32)
+    w = w + w.T
+    np.fill_diagonal(w, 0.0)
+    # Hierarchical-ish distance: random symmetric with zero diagonal.
+    d = rng.choice([1.0, 10.0, 100.0], size=(k, k)).astype(np.float32)
+    d = np.maximum(d, d.T)
+    np.fill_diagonal(d, 0.0)
+    sigma = rng.permutation(k)
+    return w, d, sigma
+
+
+# --- certify the math against brute force (small k) ---------------------
+
+
+@pytest.mark.parametrize("k", [2, 3, 5, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_delta_math_matches_brute_force(k, seed):
+    w, d, sigma = random_instance(k, seed)
+    p = ref.onehot(sigma, k)
+    got = np.asarray(ref.swap_delta_ref(jnp.array(w), jnp.array(d), jnp.array(p)))
+    want = ref.swap_delta_brute(w, d, sigma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("k", [2, 4, 7])
+def test_cost_math_matches_brute_force(k):
+    w, d, sigma = random_instance(k, 9)
+    p = ref.onehot(sigma, k)
+    got = float(ref.cost_ref(jnp.array(w), jnp.array(d), jnp.array(p)))
+    want = ref.cost_brute(w, d, sigma)
+    assert abs(got - want) < 1e-3 * max(1.0, abs(want))
+
+
+# --- certify the Pallas kernels against the jnp references --------------
+
+
+@pytest.mark.parametrize("k", [32, 64, 256])
+def test_matmul_matches_jnp(k):
+    rng = np.random.default_rng(k)
+    a = rng.standard_normal((k, k)).astype(np.float32)
+    b = rng.standard_normal((k, k)).astype(np.float32)
+    got = np.asarray(qap_swap.matmul(jnp.array(a), jnp.array(b)))
+    want = a @ b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("k", [32, 64, 256])
+def test_full_kernel_matches_ref(k):
+    w, d, sigma = random_instance(k, k + 1)
+    p = ref.onehot(sigma, k)
+    delta, j = qap_swap.qap_swap_kernel(jnp.array(w), jnp.array(d), jnp.array(p))
+    want_delta = ref.swap_delta_ref(jnp.array(w), jnp.array(d), jnp.array(p))
+    want_j = ref.cost_ref(jnp.array(w), jnp.array(d), jnp.array(p))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(want_delta), rtol=1e-4, atol=1e-2)
+    assert abs(float(j) - float(want_j)) < 1e-4 * max(1.0, float(want_j))
+
+
+def test_kernel_on_padded_input():
+    # Zero-padding (what the Rust side does for k < k_pad) must leave the
+    # real sub-block intact.
+    k, kp = 6, 32
+    w, d, sigma = random_instance(k, 3)
+    wp = np.zeros((kp, kp), np.float32)
+    dp = np.zeros((kp, kp), np.float32)
+    pp = np.zeros((kp, kp), np.float32)
+    wp[:k, :k] = w
+    dp[:k, :k] = d
+    pp[:k, :k] = ref.onehot(sigma, k)
+    delta, j = qap_swap.qap_swap_kernel(jnp.array(wp), jnp.array(dp), jnp.array(pp))
+    want = ref.swap_delta_brute(w, d, sigma)
+    np.testing.assert_allclose(np.asarray(delta)[:k, :k], want, rtol=1e-4, atol=1e-2)
+    assert abs(float(j) - ref.cost_brute(w, d, sigma)) < 1e-2
+
+
+# --- hypothesis sweep over shapes/values ---------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([2, 3, 4, 6, 8, 12]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1.0, 5.0, 50.0]),
+)
+def test_hypothesis_delta_math(k, seed, scale):
+    w, d, sigma = random_instance(k, seed, weight_scale=scale)
+    p = ref.onehot(sigma, k)
+    got = np.asarray(ref.swap_delta_ref(jnp.array(w), jnp.array(d), jnp.array(p)))
+    want = ref.swap_delta_brute(w, d, sigma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+    # Diagonal must be exactly zero-change.
+    np.testing.assert_allclose(np.diagonal(got), 0.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_kernel_vs_ref_k32(seed):
+    k = 32
+    w, d, sigma = random_instance(k, seed)
+    p = ref.onehot(sigma, k)
+    delta, j = qap_swap.qap_swap_kernel(jnp.array(w), jnp.array(d), jnp.array(p))
+    want = ref.swap_delta_ref(jnp.array(w), jnp.array(d), jnp.array(p))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(want), rtol=1e-4, atol=1e-2)
+    assert float(j) >= 0.0

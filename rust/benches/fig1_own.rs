@@ -1,0 +1,56 @@
+//! Figure 1 (both panels): own comparison — GPU-HM vs GPU-HM-ultra vs
+//! GPU-IM. Left: performance profile of solution quality. Right: speedup
+//! over GPU-HM-ultra (the quality baseline).
+//!
+//! Scale with `HEIPA_TOPS=1,…,6` (hierarchy tops) and `HEIPA_SEEDS`.
+//! Paper reference: GPU-HM geomean speedup 6.5x (max 9.1x), GPU-IM 64.9x
+//! (max 150.1x); ultra best on 95.3% of instances.
+
+use heipa::algo::Algorithm;
+use heipa::graph::gen;
+use heipa::harness::{self, profiles, stats};
+use heipa::par::Pool;
+
+fn main() {
+    let pool = Pool::default();
+    let seeds = harness::seeds_from_env(&[1]);
+    let hierarchies = harness::hierarchies_from_env();
+    let instances = gen::smoke_suite();
+    let algos = [Algorithm::GpuHm, Algorithm::GpuHmUltra, Algorithm::GpuIm];
+
+    eprintln!("fig1_own: {} instances x {} hierarchies x {} seeds", instances.len(), hierarchies.len(), seeds.len());
+    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+
+    let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+    let quality: Vec<Vec<f64>> = algos
+        .iter()
+        .map(|a| records.iter().filter(|r| r.algorithm == *a).map(|r| r.comm_cost).collect())
+        .collect();
+    let input = profiles::ProfileInput { algorithm_names: names, quality };
+
+    println!("== Figure 1 (left): performance profile (communication cost) ==");
+    let p = input.compute(&profiles::tau_grid(1.5, 12));
+    print!("{}", profiles::profile_markdown(&p));
+    println!("\nbest-solution fractions (paper: ultra 95.3%, GPU-HM 4.7%, GPU-IM 0%):");
+    for (name, frac) in input.best_fractions() {
+        println!("  {name:>14}: {:.1}%", frac * 100.0);
+    }
+    println!("\nmean overhead over best (paper: ultra +0.2%, GPU-HM +5.1%, GPU-IM +17.4%):");
+    for (name, pct) in input.mean_overhead_pct() {
+        println!("  {name:>14}: +{pct:.1}%");
+    }
+
+    println!("\n== Figure 1 (right): speedup over gpu-hm-ultra (modeled device time) ==");
+    let base: Vec<f64> = records
+        .iter()
+        .filter(|r| r.algorithm == Algorithm::GpuHmUltra)
+        .map(|r| r.device_ms)
+        .collect();
+    for a in [Algorithm::GpuHm, Algorithm::GpuIm] {
+        let mine: Vec<f64> =
+            records.iter().filter(|r| r.algorithm == a).map(|r| r.device_ms).collect();
+        let (geo, mx, mn) = stats::speedup_summary(&base, &mine);
+        println!("  {:>10}: geomean {geo:.1}x  max {mx:.1}x  min {mn:.1}x", a.name());
+    }
+    println!("  (paper: gpu-hm 6.5x geomean / 9.1x max; gpu-im 64.9x / 150.1x)");
+}

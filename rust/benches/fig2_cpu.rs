@@ -1,0 +1,91 @@
+//! Figure 2 (both panels): CPU-based comparison — GPU-HM-ultra and GPU-IM
+//! vs SharedMap-F/-S and IntMap-F/-S.
+//!
+//! Left: speedup over SharedMap-S (GPU algorithms use the modeled device
+//! time, CPU baselines their wall time — DESIGN.md §1). Right:
+//! performance profile / mean overhead of the communication cost.
+//!
+//! Paper reference: quality order SharedMap-S (+0.2%) < GPU-HM-ultra
+//! (+12.2%) < IntMap-S (+14.4%) < IntMap-F (+20.9%) < SharedMap-F
+//! (+30.8%) < GPU-IM (+33.1%); speedups vs SharedMap-S: GPU-IM 1454.6x
+//! geomean / 12376.9x max, GPU-HM-ultra 22.4x / 934.7x, SharedMap-F
+//! 42.7x, IntMap-F 36.7x, IntMap-S 11.7x.
+
+use heipa::algo::Algorithm;
+use heipa::graph::gen;
+use heipa::harness::{self, profiles, stats};
+use heipa::par::Pool;
+
+fn main() {
+    let pool = Pool::default();
+    let seeds = harness::seeds_from_env(&[1]);
+    let hierarchies = harness::hierarchies_from_env();
+    let instances = gen::smoke_suite();
+    let algos = [
+        Algorithm::GpuHmUltra,
+        Algorithm::GpuIm,
+        Algorithm::SharedMapF,
+        Algorithm::SharedMapS,
+        Algorithm::IntMapF,
+        Algorithm::IntMapS,
+    ];
+
+    eprintln!(
+        "fig2_cpu: {} instances x {} hierarchies x {} seeds",
+        instances.len(),
+        hierarchies.len(),
+        seeds.len()
+    );
+    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+
+    println!("== Figure 2 (right): quality ==");
+    let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+    let quality: Vec<Vec<f64>> = algos
+        .iter()
+        .map(|a| records.iter().filter(|r| r.algorithm == *a).map(|r| r.comm_cost).collect())
+        .collect();
+    let input = profiles::ProfileInput { algorithm_names: names, quality };
+    let paper = [
+        ("gpu-hm-ultra", 12.2),
+        ("gpu-im", 33.1),
+        ("sharedmap-f", 30.8),
+        ("sharedmap-s", 0.2),
+        ("intmap-f", 20.9),
+        ("intmap-s", 14.4),
+    ];
+    println!("mean overhead over best (ours vs paper):");
+    let overheads = input.mean_overhead_pct();
+    for (name, paper_pct) in paper {
+        let ours = overheads.get(name).copied().unwrap_or(f64::NAN);
+        println!("  {name:>14}: +{ours:.1}%  (paper +{paper_pct}%)");
+    }
+    println!("\nbest-solution fractions (paper: sharedmap-s 82.7%, gpu-hm-ultra 17.3%):");
+    for (name, frac) in input.best_fractions() {
+        println!("  {name:>14}: {:.1}%", frac * 100.0);
+    }
+    let p = input.compute(&profiles::tau_grid(2.0, 10));
+    print!("\n{}", profiles::profile_markdown(&p));
+
+    println!("\n== Figure 2 (left): speedup over sharedmap-s ==");
+    let base: Vec<f64> = records
+        .iter()
+        .filter(|r| r.algorithm == Algorithm::SharedMapS)
+        .map(|r| r.device_ms)
+        .collect();
+    let paper_speed = [
+        ("gpu-hm-ultra", 22.4, 934.7),
+        ("gpu-im", 1454.6, 12376.9),
+        ("sharedmap-f", 42.7, f64::NAN),
+        ("intmap-f", 36.7, f64::NAN),
+        ("intmap-s", 11.7, f64::NAN),
+    ];
+    for (name, paper_geo, paper_max) in paper_speed {
+        let a = Algorithm::from_name(name).unwrap();
+        let mine: Vec<f64> =
+            records.iter().filter(|r| r.algorithm == a).map(|r| r.device_ms).collect();
+        let (geo, mx, _) = stats::speedup_summary(&base, &mine);
+        println!(
+            "  {name:>14}: geomean {geo:.1}x  max {mx:.1}x  (paper {paper_geo}x / {paper_max}x)"
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmarks of the device-kernel building blocks — the §Perf
+//! baseline: par primitives, ECSR build, matching, CAS contraction,
+//! subgraph extraction, conn-table build, one LP step.
+//!
+//! Prints host throughput (items/µs) per kernel; the optimization log in
+//! EXPERIMENTS.md §Perf tracks these numbers across iterations.
+
+use heipa::coarsen::contract_cas::contract_cas;
+use heipa::coarsen::{match_par::preference_matching, matching_to_map};
+use heipa::graph::{gen, subgraph, EdgeList};
+use heipa::par::Pool;
+use heipa::refine::gains::ConnTable;
+use heipa::refine::jet_lp::{Filter, JetLp};
+use heipa::refine::Objective;
+use heipa::rng::Rng;
+use heipa::topology::Hierarchy;
+
+fn time_ms(f: impl FnOnce()) -> f64 {
+    let t = std::time::Instant::now();
+    f();
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() {
+    let pool = Pool::default();
+    println!("threads = {}", pool.threads());
+    let g = gen::rgg(1 << 16, gen::rgg_paper_radius(1 << 16), 3);
+    println!("graph: {}", g.summary());
+    let n = g.n();
+    let md = g.num_directed();
+
+    // Pool primitives.
+    let iters = 20;
+    let t_for = time_ms(|| {
+        for _ in 0..iters {
+            pool.parallel_for(md, |_| {});
+        }
+    }) / iters as f64;
+    let t_red = time_ms(|| {
+        for _ in 0..iters {
+            let _ = pool.reduce_sum_u64(md, |i| i as u64);
+        }
+    }) / iters as f64;
+    let t_scan = time_ms(|| {
+        for _ in 0..iters {
+            let _ = pool.scan_exclusive(n, |_| 1);
+        }
+    }) / iters as f64;
+    println!("\n| kernel | ms | items/us |");
+    println!("|---|---|---|");
+    println!("| parallel_for(2m) | {t_for:.3} | {:.0} |", md as f64 / t_for / 1e3);
+    println!("| parallel_reduce(2m) | {t_red:.3} | {:.0} |", md as f64 / t_red / 1e3);
+    println!("| parallel_scan(n) | {t_scan:.3} | {:.0} |", n as f64 / t_scan / 1e3);
+
+    // ECSR build.
+    let t_ecsr = time_ms(|| {
+        let _ = EdgeList::build_par(&pool, &g);
+    });
+    println!("| ecsr build | {t_ecsr:.3} | {:.0} |", md as f64 / t_ecsr / 1e3);
+    let el = EdgeList::build(&g);
+
+    // Matching.
+    let mut mate = Vec::new();
+    let t_match = time_ms(|| {
+        mate = preference_matching(&g, &pool, i64::MAX, 1, 8);
+    });
+    println!("| preference matching | {t_match:.3} | {:.0} |", md as f64 / t_match / 1e3);
+
+    // Contraction.
+    let (map, nc) = matching_to_map(&mate);
+    let t_contract = time_ms(|| {
+        let _ = contract_cas(&pool, &g, &el, &map, nc);
+    });
+    println!("| cas contraction | {t_contract:.3} | {:.0} |", md as f64 / t_contract / 1e3);
+
+    // Subgraph extraction (4 blocks).
+    let mut rng = Rng::new(2);
+    let part4: Vec<u32> = (0..n).map(|_| rng.below(4) as u32).collect();
+    let t_sub = time_ms(|| {
+        let _ = subgraph::build_all_subgraphs(&pool, &g, &part4, 4);
+    });
+    println!("| subgraph build (k=4) | {t_sub:.3} | {:.0} |", md as f64 / t_sub / 1e3);
+
+    // Conn table + one LP step.
+    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let k = h.k();
+    let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+    let mut conn_opt = None;
+    let t_conn = time_ms(|| {
+        conn_opt = Some(ConnTable::build(&pool, &g, &el, &part, k));
+    });
+    println!("| conn table build | {t_conn:.3} | {:.0} |", md as f64 / t_conn / 1e3);
+    let conn = conn_opt.unwrap();
+    let mut lp = JetLp::new(n);
+    // Hot path uses the materialized distance matrix (as jet_refine does).
+    let dm = h.distance_matrix();
+    let t_lp = time_ms(|| {
+        let _ = lp.run(&pool, &g, &conn, &part, &Objective::CommMat(&dm), Filter::NonNegative);
+    });
+    println!("| jet LP step (k={k}, matrix) | {t_lp:.3} | {:.0} |", md as f64 / t_lp / 1e3);
+    let mut lp2 = JetLp::new(n);
+    let t_lp_o = time_ms(|| {
+        let _ = lp2.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative);
+    });
+    println!("| jet LP step (k={k}, oracle) | {t_lp_o:.3} | {:.0} |", md as f64 / t_lp_o / 1e3);
+}

@@ -1,0 +1,76 @@
+//! P1 (§Perf): the PJRT-offloaded QAP swap search vs the host
+//! implementation — quality parity and per-sweep cost of the
+//! AOT-compiled JAX/Pallas kernel at every padded size.
+//!
+//! Requires `make artifacts`; skips gracefully without them.
+
+use heipa::algo::qap;
+use heipa::partition::comm_cost_blocks;
+use heipa::rng::Rng;
+use heipa::runtime::{offload, Runtime};
+use heipa::topology::Hierarchy;
+
+fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut b = vec![0.0; k * k];
+    for x in 0..k {
+        for y in x + 1..k {
+            let w = if rng.f64() < 0.3 { rng.below(100) as f64 } else { 0.0 };
+            b[x * k + y] = w;
+            b[y * k + x] = w;
+        }
+    }
+    b
+}
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        eprintln!("offload bench: PJRT client failed to start; skipping");
+        return;
+    };
+    if !rt.available("qap_step_k32") {
+        eprintln!("offload bench: artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    println!("PJRT platform: {}", rt.platform());
+
+    let cases = [("2:4:4", 4u64), ("4:8:2", 5), ("4:8:6", 6)];
+    println!("\n| k | pad | J init | J host | J device | host ms | device ms | device sweeps ms/sweep |");
+    println!("|---|---|---|---|---|---|---|---|");
+    for (hier, seed) in cases {
+        let h = Hierarchy::parse(hier, "1:10:100").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, seed);
+        let mut rng = Rng::new(seed ^ 0xff);
+        let mut sigma0: Vec<u32> = (0..k as u32).collect();
+        rng.shuffle(&mut sigma0);
+        let j0 = comm_cost_blocks(&bmat, k, &sigma0, &h);
+
+        let mut s_host = sigma0.clone();
+        let t0 = std::time::Instant::now();
+        qap::swap_refine(&bmat, k, &mut s_host, &h, 30);
+        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let j_host = comm_cost_blocks(&bmat, k, &s_host, &h);
+
+        let mut s_dev = sigma0.clone();
+        let t1 = std::time::Instant::now();
+        offload::swap_refine_offload(&rt, &bmat, k, &h, &mut s_dev, 30).unwrap();
+        let dev_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let j_dev = comm_cost_blocks(&bmat, k, &s_dev, &h);
+
+        // Per-sweep kernel cost (after warm-up compile).
+        let warm = std::time::Instant::now();
+        let sweeps = 10;
+        for _ in 0..sweeps {
+            let _ = offload::qap_step_device(&rt, &bmat, k, &h, &s_dev).unwrap();
+        }
+        let per_sweep = warm.elapsed().as_secs_f64() * 1e3 / sweeps as f64;
+
+        println!(
+            "| {k} | {} | {j0:.0} | {j_host:.0} | {j_dev:.0} | {host_ms:.1} | {dev_ms:.1} | {per_sweep:.2} |",
+            offload::qap_kernel_size(k).unwrap()
+        );
+        assert!(j_dev <= j0, "device refinement must not worsen");
+    }
+    println!("\n(device quality must track host quality; per-sweep time is the amortized cost of\nthe AOT-compiled two-matmul Pallas kernel incl. upload/download)");
+}

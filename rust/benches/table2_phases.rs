@@ -1,0 +1,71 @@
+//! Table 2: runtime distribution across GPU-IM phases, small vs large
+//! graphs, plus absolute per-phase times for the cop20k_A and europe_osm
+//! stand-ins on the 4:8:6 hierarchy (modeled device time).
+//!
+//! Paper reference (shares): small — Coarsening 13.0%, Contraction 3.5%,
+//! Init 13.9%, Uncontr. 0.1%, Refine+Reb 65.2%, Misc 4.3%;
+//! large — 11.6 / 11.2 / 4.2 / 0.2 / 45.5 / 27.2.
+
+use heipa::algo::gpu_im::{gpu_im, GpuImConfig};
+use heipa::graph::gen;
+use heipa::metrics::{Phase, PhaseBreakdown};
+use heipa::par::Pool;
+use heipa::topology::Hierarchy;
+
+fn main() {
+    let pool = Pool::default();
+    let h = Hierarchy::parse("4:8:6", "1:10:100").unwrap();
+
+    let small = ["sten_cop20k", "sten_cubes", "wal_598a"];
+    let large = ["rgg16", "road_eu"];
+
+    let mut small_agg = PhaseBreakdown::default();
+    let mut large_agg = PhaseBreakdown::default();
+    let mut named: Vec<(&str, PhaseBreakdown)> = Vec::new();
+
+    for (group, names, agg) in
+        [("small", &small[..], &mut small_agg), ("large", &large[..], &mut large_agg)]
+    {
+        for name in names {
+            let g = gen::generate_by_name(name);
+            eprintln!("table2: {group} {name} ({})", g.summary());
+            let mut phases = PhaseBreakdown::default();
+            let _ = gpu_im(&pool, &g, &h, 0.03, 1, &GpuImConfig::default(), Some(&mut phases));
+            agg.merge(&phases);
+            if *name == "sten_cop20k" || *name == "road_eu" {
+                named.push((name, phases.clone()));
+            }
+        }
+    }
+
+    let paper_small = [13.02, 3.49, 13.85, 0.14, 65.22, 4.28];
+    let paper_large = [11.59, 11.16, 4.23, 0.24, 45.53, 27.24];
+    println!("== Table 2: GPU-IM phase shares (modeled device time) ==");
+    println!("| phase | small (ours) | small (paper) | large (ours) | large (paper) |");
+    println!("|---|---|---|---|---|");
+    for (i, ph) in Phase::all().into_iter().enumerate() {
+        println!(
+            "| {} | {:.2}% | {:.2}% | {:.2}% | {:.2}% |",
+            ph.label(),
+            small_agg.share(ph),
+            paper_small[i],
+            large_agg.share(ph),
+            paper_large[i]
+        );
+    }
+
+    println!("\n== absolute per-phase times (ms, modeled; paper column = RTX 4090) ==");
+    let paper_cop = [4.351, 1.010, 11.116, 0.046, 24.359, 1.193];
+    let paper_osm = [41.020, 38.694, 7.244, 1.523, 116.598, 115.469];
+    for (name, phases) in &named {
+        let paper = if *name == "sten_cop20k" { &paper_cop } else { &paper_osm };
+        let stand = if *name == "sten_cop20k" { "cop20k_A" } else { "europe_osm" };
+        println!("\n{name} (stand-in for {stand}):");
+        println!("| phase | ours ms | paper ms |");
+        println!("|---|---|---|");
+        for (i, ph) in Phase::all().into_iter().enumerate() {
+            println!("| {} | {:.3} | {:.3} |", ph.label(), phases.device_ms(ph), paper[i]);
+        }
+        println!("| Total | {:.3} | {:.3} |", phases.total_device_ms(), paper.iter().sum::<f64>());
+    }
+}

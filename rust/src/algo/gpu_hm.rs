@@ -1,0 +1,159 @@
+//! GPU-HM — hierarchical multisection on the device (paper §4.1,
+//! Algorithms 1 + 2).
+//!
+//! Recursively partitions the task graph along the machine hierarchy with
+//! the Jet partitioner ([`super::jet`]), computing the adaptive imbalance
+//! ε′ (Eq. 2) for every call and building the induced subgraphs entirely
+//! with device kernels (Alg. 1, [`crate::graph::subgraph`]). The PE ids of
+//! the final mapping fall out of the recursion structure.
+
+use super::jet::{jet_partition, JetPartConfig};
+use crate::graph::subgraph::build_all_subgraphs;
+use crate::graph::CsrGraph;
+use crate::metrics::{Phase, PhaseBreakdown};
+use crate::par::Pool;
+use crate::topology::Hierarchy;
+use crate::{Block, Vertex};
+
+/// GPU-HM configuration: the Jet flavor used for every multisection step.
+#[derive(Clone, Debug)]
+pub struct GpuHmConfig {
+    pub jet: JetPartConfig,
+    /// Use the adaptive imbalance ε′ of Eq. 2 (ablation A1 disables it).
+    pub adaptive: bool,
+}
+
+impl GpuHmConfig {
+    /// Default flavor (Jet with 12 refinement iterations).
+    pub fn default_flavor() -> Self {
+        GpuHmConfig { jet: JetPartConfig::default(), adaptive: true }
+    }
+
+    /// The *ultra* flavor (18 iterations; paper's GPU-HM-ultra).
+    pub fn ultra() -> Self {
+        GpuHmConfig { jet: JetPartConfig::ultra(), adaptive: true }
+    }
+}
+
+/// Run GPU-HM. Returns the vertex → PE mapping; `phases` accumulates the
+/// partitioning / subgraph-construction split (the paper reports > 95 %
+/// of the runtime in partitioning).
+pub fn gpu_hm(
+    pool: &Pool,
+    g: &CsrGraph,
+    h: &Hierarchy,
+    eps: f64,
+    seed: u64,
+    cfg: &GpuHmConfig,
+    mut phases: Option<&mut PhaseBreakdown>,
+) -> Vec<Block> {
+    let k = h.k();
+    let total = g.total_vweight();
+    let ell = h.levels();
+    let mut mapping = vec![0 as Block; g.n()];
+
+    // Explicit recursion stack: (subgraph, original ids, level, PE offset).
+    let mut stack: Vec<(CsrGraph, Vec<Vertex>, usize, Block)> =
+        vec![(g.clone(), (0..g.n() as Vertex).collect(), ell, 0)];
+
+    while let Some((sub, orig, level, pe_off)) = stack.pop() {
+        if sub.n() == 0 {
+            continue;
+        }
+        let a_i = h.a[level - 1] as usize;
+        let k_sub: usize = h.a[..level].iter().map(|&x| x as usize).product();
+        // Line 2: adaptive imbalance (Eq. 2).
+        let eps_prime = if cfg.adaptive {
+            Hierarchy::adaptive_imbalance(eps, total, sub.total_vweight().max(1), k, k_sub, level)
+                .max(0.001)
+        } else {
+            eps
+        };
+        // Line 3: GPU graph partitioner.
+        let part = jet_partition(
+            pool,
+            &sub,
+            a_i,
+            eps_prime,
+            seed ^ (pe_off as u64) << 20 ^ (level as u64),
+            &cfg.jet,
+            phases.as_deref_mut(),
+        );
+        if level == 1 {
+            // Lines 4–6: propagate Π′ into the final mapping.
+            for (i, &v) in orig.iter().enumerate() {
+                mapping[v as usize] = pe_off + part[i];
+            }
+        } else {
+            // Lines 7–8: build subgraphs on the device and recurse.
+            let span = h.pes_per_block_at_level(level) as Block;
+            let subs = match phases.as_deref_mut() {
+                Some(p) => p.time(Phase::Misc, || build_all_subgraphs(pool, &sub, &part, a_i)),
+                None => build_all_subgraphs(pool, &sub, &part, a_i),
+            };
+            for (b, s) in subs.into_iter().enumerate() {
+                let sub_orig: Vec<Vertex> =
+                    s.local_to_parent.iter().map(|&lv| orig[lv as usize]).collect();
+                stack.push((s.graph, sub_orig, level - 1, pe_off + b as Block * span));
+            }
+        }
+    }
+    mapping
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{comm_cost, is_balanced, validate_mapping};
+
+    #[test]
+    fn balanced_valid_mapping_paper_hierarchy() {
+        let g = gen::grid2d(32, 32, false);
+        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let pool = Pool::new(1);
+        let m = gpu_hm(&pool, &g, &h, 0.03, 1, &GpuHmConfig::default_flavor(), None);
+        validate_mapping(&m, g.n(), h.k()).unwrap();
+        assert!(
+            is_balanced(&g, &m, h.k(), 0.04),
+            "imbalance {}",
+            crate::partition::imbalance(&g, &m, h.k())
+        );
+    }
+
+    #[test]
+    fn competitive_with_serial_sharedmap() {
+        let g = gen::stencil9(35, 35, 2);
+        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let pool = Pool::new(1);
+        let m_gpu = gpu_hm(&pool, &g, &h, 0.03, 3, &GpuHmConfig::ultra(), None);
+        let m_cpu = super::super::sharedmap::sharedmap(
+            &g, &h, 0.03, 3, &super::super::sharedmap::SharedMapConfig::fast(),
+        );
+        let (jg, jc) = (comm_cost(&g, &m_gpu, &h), comm_cost(&g, &m_cpu, &h));
+        // Paper: GPU-HM within ~12% of SharedMap; allow slack on tiny instances.
+        assert!(jg <= jc * 1.35, "gpu-hm {jg} vs sharedmap {jc}");
+    }
+
+    #[test]
+    fn ultra_not_worse_than_default() {
+        let g = gen::delaunay_like(45, 4);
+        let h = Hierarchy::parse("4:8", "1:10").unwrap();
+        let pool = Pool::new(1);
+        let jd = comm_cost(&g, &gpu_hm(&pool, &g, &h, 0.03, 5, &GpuHmConfig::default_flavor(), None), &h);
+        let ju = comm_cost(&g, &gpu_hm(&pool, &g, &h, 0.03, 5, &GpuHmConfig::ultra(), None), &h);
+        assert!(ju <= jd * 1.10, "ultra {ju} vs default {jd}");
+    }
+
+    #[test]
+    fn partitioning_dominates_runtime() {
+        // Paper: subgraph construction < 5% of GPU-HM runtime.
+        let g = gen::rgg(6_000, 0.04, 6);
+        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let pool = Pool::new(1);
+        let mut phases = PhaseBreakdown::default();
+        let _ = gpu_hm(&pool, &g, &h, 0.03, 1, &GpuHmConfig::default_flavor(), Some(&mut phases));
+        let misc_share = phases.share(Phase::Misc);
+        assert!(misc_share < 25.0, "subgraph/misc share {misc_share}%");
+    }
+}

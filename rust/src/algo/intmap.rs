@@ -1,0 +1,148 @@
+//! IntMap-like serial integrated mapping (Faraj et al., SEA 2020).
+//!
+//! Integrates the mapping objective `J(C, D, Π)` into a serial multilevel
+//! pipeline: matching-based coarsening (`expansion*` rating family),
+//! hierarchical multisection as initial mapping, and J-objective label
+//! propagation during uncoarsening. The Fast/Strong flavors mirror
+//! IntMap's configurations.
+
+use super::sharedmap::{sharedmap, SharedMapConfig};
+use crate::coarsen::coarsen_step_serial;
+use crate::graph::CsrGraph;
+use crate::partition::l_max;
+use crate::refine::{
+    lp_serial::{force_balance_serial, lp_refine_serial},
+    Objective,
+};
+use crate::topology::Hierarchy;
+use crate::{Block, Vertex};
+
+/// Configuration of the serial integrated mapper.
+#[derive(Clone, Debug)]
+pub struct IntMapConfig {
+    /// Coarsen until `max(coarsest_factor · k, coarsest_min)` vertices.
+    pub coarsest_factor: usize,
+    pub coarsest_min: usize,
+    /// LP refinement rounds per level.
+    pub lp_rounds: usize,
+    /// Extra LP rounds on the finest level.
+    pub finest_extra_rounds: usize,
+    /// Multisection flavor for the initial mapping.
+    pub init: SharedMapConfig,
+}
+
+impl IntMapConfig {
+    pub fn fast() -> Self {
+        IntMapConfig {
+            coarsest_factor: 8,
+            coarsest_min: 400,
+            lp_rounds: 2,
+            finest_extra_rounds: 0,
+            init: SharedMapConfig::fast(),
+        }
+    }
+
+    pub fn strong() -> Self {
+        IntMapConfig {
+            coarsest_factor: 8,
+            coarsest_min: 400,
+            lp_rounds: 6,
+            finest_extra_rounds: 6,
+            init: SharedMapConfig::strong(),
+        }
+    }
+}
+
+/// Serial integrated mapping. Returns the vertex → PE mapping.
+pub fn intmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &IntMapConfig) -> Vec<Block> {
+    let k = h.k();
+    let total = g.total_vweight();
+    let lmax = l_max(total, k, eps);
+    let coarsest = (cfg.coarsest_factor * k).max(cfg.coarsest_min);
+
+    // Coarsening.
+    let mut graphs: Vec<CsrGraph> = vec![];
+    let mut maps: Vec<Vec<Vertex>> = vec![];
+    let mut cur = g.clone();
+    let mut level = 0u64;
+    while cur.n() > coarsest {
+        let (coarse, map) = coarsen_step_serial(&cur, lmax, seed ^ (level << 24));
+        if coarse.n() as f64 > cur.n() as f64 * 0.96 {
+            break;
+        }
+        graphs.push(cur);
+        maps.push(map);
+        cur = coarse;
+        level += 1;
+    }
+
+    // Initial mapping: hierarchical multisection on the coarsest graph.
+    // Coarse vertex weights are chunky relative to L_max, so repair the
+    // balance explicitly before refining.
+    let mut mapping = sharedmap(&cur, h, eps, seed ^ 0xabcd, &cfg.init);
+    force_balance_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(h), seed ^ 2);
+    lp_refine_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(h), cfg.lp_rounds, seed ^ 1);
+
+    // Uncoarsening with J-objective label propagation.
+    for lev in (0..maps.len()).rev() {
+        let fine = &graphs[lev];
+        let map = &maps[lev];
+        let mut fine_mapping = vec![0 as Block; fine.n()];
+        for v in 0..fine.n() {
+            fine_mapping[v] = mapping[map[v] as usize];
+        }
+        let rounds = if lev == 0 { cfg.lp_rounds + cfg.finest_extra_rounds } else { cfg.lp_rounds };
+        force_balance_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(h), seed ^ 3);
+        lp_refine_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(h), rounds, seed ^ (lev as u64) << 16);
+        mapping = fine_mapping;
+    }
+    mapping
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{comm_cost, is_balanced, validate_mapping};
+
+    #[test]
+    fn balanced_valid_mapping() {
+        let g = gen::grid2d(30, 30, false);
+        let h = Hierarchy::parse("4:8", "1:10").unwrap();
+        let m = intmap(&g, &h, 0.03, 1, &IntMapConfig::fast());
+        validate_mapping(&m, g.n(), h.k()).unwrap();
+        assert!(is_balanced(&g, &m, h.k(), 0.035));
+    }
+
+    #[test]
+    fn close_to_sharedmap_quality() {
+        // The paper orders quality SharedMap-S < IntMap-S (worse) — IntMap
+        // should land within ~1.4× of SharedMap-S on mesh graphs.
+        let g = gen::delaunay_like(40, 2);
+        let h = Hierarchy::parse("4:4:2", "1:10:100").unwrap();
+        let j_im = comm_cost(&g, &intmap(&g, &h, 0.03, 3, &IntMapConfig::strong()), &h);
+        let j_sm = comm_cost(
+            &g,
+            &sharedmap(&g, &h, 0.03, 3, &SharedMapConfig::strong()),
+            &h,
+        );
+        assert!(j_im <= j_sm * 1.45, "intmap {j_im} vs sharedmap {j_sm}");
+    }
+
+    #[test]
+    fn strong_not_worse_than_fast() {
+        let g = gen::stencil9(25, 25, 4);
+        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let jf = comm_cost(&g, &intmap(&g, &h, 0.03, 5, &IntMapConfig::fast()), &h);
+        let js = comm_cost(&g, &intmap(&g, &h, 0.03, 5, &IntMapConfig::strong()), &h);
+        assert!(js <= jf * 1.10, "strong {js} vs fast {jf}");
+    }
+
+    #[test]
+    fn works_when_graph_smaller_than_coarsest_bound() {
+        let g = gen::grid2d(10, 10, false);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let m = intmap(&g, &h, 0.10, 2, &IntMapConfig::fast());
+        validate_mapping(&m, g.n(), 4).unwrap();
+    }
+}

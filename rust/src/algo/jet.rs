@@ -1,0 +1,212 @@
+//! Reimplementation of the Jet GPU graph partitioner (Gilbert et al.,
+//! SISC 2024) — the partitioning engine inside GPU-HM and the edge-cut
+//! comparison point of §5.4.
+//!
+//! Multilevel: device preference matching (+ two-hop when < 75 % matched),
+//! CAS-hash contraction (Alg. 3), CPU initial partitioning on the ≤ 8·k
+//! coarsest graph (the paper delegates to METIS; we use the kaffpa-lite
+//! substrate), then per-level Jet refinement (Alg. 4–6) with the edge-cut
+//! objective and Jet's original negative-move filter.
+
+use crate::coarsen::{match_par::preference_matching, matched_fraction, matching_to_map, twohop::twohop_matching};
+use crate::coarsen::contract_cas::contract_cas;
+use crate::graph::{CsrGraph, EdgeList};
+use crate::initial::{recursive_kway, MlConfig};
+use crate::metrics::{Phase, PhaseBreakdown};
+use crate::par::Pool;
+use crate::partition::l_max;
+use crate::refine::jet_loop::{jet_refine, JetConfig};
+use crate::refine::jet_lp::Filter;
+use crate::refine::Objective;
+use crate::{Block, Vertex};
+
+/// Jet partitioner configuration.
+#[derive(Clone, Debug)]
+pub struct JetPartConfig {
+    /// Refinement iteration limit (12; 18 = ultra).
+    pub iter_limit: usize,
+    /// Negative-move filter constant `c`.
+    pub c_factor: f64,
+    /// Coarsen until `coarsest_factor · k` vertices (paper: 8).
+    pub coarsest_factor: usize,
+    /// Matching rounds per level.
+    pub match_rounds: usize,
+}
+
+impl Default for JetPartConfig {
+    fn default() -> Self {
+        JetPartConfig { iter_limit: 12, c_factor: 0.25, coarsest_factor: 8, match_rounds: 8 }
+    }
+}
+
+impl JetPartConfig {
+    pub fn ultra() -> Self {
+        JetPartConfig { iter_limit: 18, ..Default::default() }
+    }
+}
+
+/// Partition `g` into `k` ε-balanced blocks minimizing edge-cut.
+/// `phases` (optional) accumulates the per-phase breakdown.
+pub fn jet_partition(
+    pool: &Pool,
+    g: &CsrGraph,
+    k: usize,
+    eps: f64,
+    seed: u64,
+    cfg: &JetPartConfig,
+    mut phases: Option<&mut PhaseBreakdown>,
+) -> Vec<Block> {
+    let total = g.total_vweight();
+    let lmax = l_max(total, k, eps);
+    let coarsest = (cfg.coarsest_factor * k).max(64);
+
+    macro_rules! timed {
+        ($ph:expr, $e:expr) => {{
+            match phases.as_deref_mut() {
+                Some(p) => p.time($ph, || $e),
+                None => $e,
+            }
+        }};
+    }
+    macro_rules! timed_cpu {
+        ($ph:expr, $e:expr) => {{
+            match phases.as_deref_mut() {
+                Some(p) => p.time_cpu($ph, || $e),
+                None => $e,
+            }
+        }};
+    }
+
+    // Coarsening.
+    let mut graphs: Vec<CsrGraph> = vec![];
+    let mut edge_lists: Vec<EdgeList> = vec![];
+    let mut maps: Vec<Vec<Vertex>> = vec![];
+    let mut cur = g.clone();
+    let mut cur_el = timed!(Phase::Misc, {
+        // Modeled H2D upload of the CSR graph (xadj + adj + weights).
+        crate::par::ledger::charge(3, (cur.n() + 2 * cur.num_directed()) as u64);
+        EdgeList::build_par(pool, &cur)
+    });
+    let mut level = 0u64;
+    while cur.n() > coarsest {
+        let mut mate = timed!(
+            Phase::Coarsening,
+            preference_matching(&cur, pool, lmax, seed ^ (level << 32), cfg.match_rounds)
+        );
+        if matched_fraction(&mate) < 0.75 {
+            timed_cpu!(Phase::Coarsening, {
+                twohop_matching(&cur, &mut mate, lmax);
+            });
+        }
+        let (map, nc) = matching_to_map(&mate);
+        if nc as f64 > cur.n() as f64 * 0.96 {
+            break; // stalled
+        }
+        let coarse = timed!(Phase::Contraction, contract_cas(pool, &cur, &cur_el, &map, nc));
+        let coarse_el = timed!(Phase::Misc, EdgeList::build_par(pool, &coarse));
+        graphs.push(cur);
+        edge_lists.push(cur_el);
+        maps.push(map);
+        cur = coarse;
+        cur_el = coarse_el;
+        level += 1;
+    }
+
+    // Initial partitioning on the CPU.
+    let mut part = timed_cpu!(
+        Phase::InitialPartitioning,
+        recursive_kway(&cur, k, eps, seed ^ 0x1111, &MlConfig::fast())
+    );
+
+    // Refine the coarsest level too.
+    let jet_cfg = JetConfig {
+        iter_limit: cfg.iter_limit,
+        filter: Filter::JetNegative { c_factor: cfg.c_factor },
+        seed,
+        ..Default::default()
+    };
+    timed!(
+        Phase::RefineRebalance,
+        jet_refine(pool, &cur, &cur_el, &mut part, k, lmax, &Objective::Cut, &jet_cfg)
+    );
+
+    // Uncoarsening.
+    for lev in (0..maps.len()).rev() {
+        let fine = &graphs[lev];
+        let el = &edge_lists[lev];
+        let map = &maps[lev];
+        let mut fine_part = vec![0 as Block; fine.n()];
+        timed!(Phase::Uncontraction, {
+            let fp = crate::par::SharedMut::new(&mut fine_part);
+            pool.parallel_for(fine.n(), |v| unsafe {
+                fp.write(v, part[map[v] as usize]);
+            });
+        });
+        timed!(
+            Phase::RefineRebalance,
+            jet_refine(pool, fine, el, &mut fine_part, k, lmax, &Objective::Cut, &jet_cfg)
+        );
+        part = fine_part;
+    }
+    // Modeled D2H download of the final partition.
+    timed!(Phase::Misc, crate::par::ledger::charge(1, part.len() as u64));
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{edge_cut, is_balanced};
+
+    #[test]
+    fn partitions_grid_balanced_low_cut() {
+        let g = gen::grid2d(40, 40, false);
+        let pool = Pool::new(1);
+        let part = jet_partition(&pool, &g, 4, 0.03, 1, &JetPartConfig::default(), None);
+        assert!(is_balanced(&g, &part, 4, 0.031));
+        let cut = edge_cut(&g, &part);
+        // 40×40 grid, k=4: good cuts are ≈ 80; accept < 160.
+        assert!(cut < 160.0, "cut {cut}");
+    }
+
+    #[test]
+    fn quality_comparable_to_serial_substrate() {
+        let g = gen::rgg(4_000, 0.045, 2);
+        let pool = Pool::new(1);
+        let jet = jet_partition(&pool, &g, 8, 0.03, 3, &JetPartConfig::default(), None);
+        let serial = recursive_kway(&g, 8, 0.03, 3, &MlConfig::default());
+        let (cj, cs) = (edge_cut(&g, &jet), edge_cut(&g, &serial));
+        assert!(is_balanced(&g, &jet, 8, 0.031));
+        assert!(cj <= cs * 1.3, "jet {cj} vs serial {cs}");
+    }
+
+    #[test]
+    fn ultra_not_worse() {
+        let g = gen::delaunay_like(50, 5);
+        let pool = Pool::new(1);
+        let d = edge_cut(&g, &jet_partition(&pool, &g, 8, 0.03, 7, &JetPartConfig::default(), None));
+        let u = edge_cut(&g, &jet_partition(&pool, &g, 8, 0.03, 7, &JetPartConfig::ultra(), None));
+        assert!(u <= d * 1.10, "ultra {u} vs default {d}");
+    }
+
+    #[test]
+    fn phase_breakdown_covers_pipeline() {
+        let g = gen::grid2d(50, 50, false);
+        let pool = Pool::new(1);
+        let mut phases = PhaseBreakdown::default();
+        let _ = jet_partition(&pool, &g, 4, 0.03, 1, &JetPartConfig::default(), Some(&mut phases));
+        assert!(phases.device_ms(Phase::Coarsening) > 0.0);
+        assert!(phases.device_ms(Phase::Contraction) > 0.0);
+        assert!(phases.device_ms(Phase::InitialPartitioning) > 0.0);
+        assert!(phases.device_ms(Phase::RefineRebalance) > 0.0);
+    }
+
+    #[test]
+    fn small_graph_no_coarsening_needed() {
+        let g = gen::grid2d(6, 6, false);
+        let pool = Pool::new(1);
+        let part = jet_partition(&pool, &g, 2, 0.10, 1, &JetPartConfig::default(), None);
+        assert!(is_balanced(&g, &part, 2, 0.11));
+    }
+}

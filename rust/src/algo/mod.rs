@@ -1,0 +1,179 @@
+//! The process-mapping algorithms: the paper's two GPU contributions and
+//! every solver they are evaluated against.
+
+pub mod gpu_hm;
+pub mod gpu_im;
+pub mod intmap;
+pub mod jet;
+pub mod qap;
+pub mod sharedmap;
+
+use crate::graph::CsrGraph;
+use crate::metrics::{MappingResult, PhaseBreakdown};
+use crate::par::cost::DeviceTimer;
+use crate::par::Pool;
+use crate::partition::{comm_cost, imbalance};
+use crate::topology::Hierarchy;
+use crate::Block;
+
+/// Every algorithm in the paper's evaluation (§5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// GPU hierarchical multisection (Alg. 2 with Jet).
+    GpuHm,
+    /// GPU-HM with Jet's ultra refinement (18 iterations).
+    GpuHmUltra,
+    /// GPU integrated mapping (Alg. 3–6).
+    GpuIm,
+    /// SharedMap-like serial multisection, fast flavor.
+    SharedMapF,
+    /// SharedMap-like serial multisection, strong flavor.
+    SharedMapS,
+    /// IntMap-like serial integrated mapping, fast flavor.
+    IntMapF,
+    /// IntMap-like serial integrated mapping, strong flavor.
+    IntMapS,
+    /// Plain edge-cut Jet (§5.4: unfit for mapping by construction).
+    Jet,
+    /// Edge-cut Jet, ultra flavor.
+    JetUltra,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::GpuHm => "gpu-hm",
+            Algorithm::GpuHmUltra => "gpu-hm-ultra",
+            Algorithm::GpuIm => "gpu-im",
+            Algorithm::SharedMapF => "sharedmap-f",
+            Algorithm::SharedMapS => "sharedmap-s",
+            Algorithm::IntMapF => "intmap-f",
+            Algorithm::IntMapS => "intmap-s",
+            Algorithm::Jet => "jet",
+            Algorithm::JetUltra => "jet-ultra",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "gpu-hm" => Algorithm::GpuHm,
+            "gpu-hm-ultra" => Algorithm::GpuHmUltra,
+            "gpu-im" => Algorithm::GpuIm,
+            "sharedmap-f" => Algorithm::SharedMapF,
+            "sharedmap-s" => Algorithm::SharedMapS,
+            "intmap-f" => Algorithm::IntMapF,
+            "intmap-s" => Algorithm::IntMapS,
+            "jet" => Algorithm::Jet,
+            "jet-ultra" => Algorithm::JetUltra,
+            _ => return None,
+        })
+    }
+
+    /// Device algorithms are costed with the GPU model; CPU baselines use
+    /// host wall-clock.
+    pub fn is_device(self) -> bool {
+        matches!(
+            self,
+            Algorithm::GpuHm | Algorithm::GpuHmUltra | Algorithm::GpuIm | Algorithm::Jet | Algorithm::JetUltra
+        )
+    }
+
+    /// All algorithms, in the paper's presentation order.
+    pub fn all() -> [Algorithm; 9] {
+        [
+            Algorithm::GpuHm,
+            Algorithm::GpuHmUltra,
+            Algorithm::GpuIm,
+            Algorithm::SharedMapF,
+            Algorithm::SharedMapS,
+            Algorithm::IntMapF,
+            Algorithm::IntMapS,
+            Algorithm::Jet,
+            Algorithm::JetUltra,
+        ]
+    }
+}
+
+/// Run one algorithm end to end and measure it.
+pub fn run_algorithm(
+    algo: Algorithm,
+    pool: &Pool,
+    g: &CsrGraph,
+    h: &Hierarchy,
+    eps: f64,
+    seed: u64,
+) -> MappingResult {
+    let mut phases = PhaseBreakdown::default();
+    let timer = DeviceTimer::start();
+    let mapping: Vec<Block> = match algo {
+        Algorithm::GpuHm => {
+            gpu_hm::gpu_hm(pool, g, h, eps, seed, &gpu_hm::GpuHmConfig::default_flavor(), Some(&mut phases))
+        }
+        Algorithm::GpuHmUltra => {
+            gpu_hm::gpu_hm(pool, g, h, eps, seed, &gpu_hm::GpuHmConfig::ultra(), Some(&mut phases))
+        }
+        Algorithm::GpuIm => {
+            gpu_im::gpu_im(pool, g, h, eps, seed, &gpu_im::GpuImConfig::default(), Some(&mut phases))
+        }
+        Algorithm::SharedMapF => sharedmap::sharedmap(g, h, eps, seed, &sharedmap::SharedMapConfig::fast()),
+        Algorithm::SharedMapS => sharedmap::sharedmap(g, h, eps, seed, &sharedmap::SharedMapConfig::strong()),
+        Algorithm::IntMapF => intmap::intmap(g, h, eps, seed, &intmap::IntMapConfig::fast()),
+        Algorithm::IntMapS => intmap::intmap(g, h, eps, seed, &intmap::IntMapConfig::strong()),
+        Algorithm::Jet => {
+            jet::jet_partition(pool, g, h.k(), eps, seed, &jet::JetPartConfig::default(), Some(&mut phases))
+        }
+        Algorithm::JetUltra => {
+            jet::jet_partition(pool, g, h.k(), eps, seed, &jet::JetPartConfig::ultra(), Some(&mut phases))
+        }
+    };
+    let m = timer.stop();
+    let device_ms = if algo.is_device() { phases.total_device_ms().max(m.device_ms) } else { m.host_ms };
+    MappingResult {
+        comm_cost: comm_cost(g, &mapping, h),
+        imbalance: imbalance(g, &mapping, h.k()),
+        mapping,
+        host_ms: m.host_ms,
+        device_ms,
+        phases: if algo.is_device() { Some(phases) } else { None },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Algorithm::all() {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::from_name("nope"), None);
+    }
+
+    #[test]
+    fn run_all_algorithms_small_instance() {
+        let g = gen::grid2d(20, 20, false);
+        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let pool = Pool::new(1);
+        for algo in Algorithm::all() {
+            let r = run_algorithm(algo, &pool, &g, &h, 0.03, 1);
+            crate::partition::validate_mapping(&r.mapping, g.n(), h.k())
+                .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+            assert!(r.comm_cost > 0.0, "{}", algo.name());
+            assert!(r.host_ms > 0.0);
+            assert_eq!(r.phases.is_some(), algo.is_device());
+        }
+    }
+
+    #[test]
+    fn mapping_quality_order_holds_roughly() {
+        // SharedMap-S should beat plain Jet (edge-cut) on J.
+        let g = gen::stencil9(28, 28, 1);
+        let h = Hierarchy::parse("4:4:2", "1:10:100").unwrap();
+        let pool = Pool::new(1);
+        let sm = run_algorithm(Algorithm::SharedMapS, &pool, &g, &h, 0.03, 2);
+        let jet = run_algorithm(Algorithm::Jet, &pool, &g, &h, 0.03, 2);
+        assert!(sm.comm_cost < jet.comm_cost, "sharedmap {} !< jet {}", sm.comm_cost, jet.comm_cost);
+    }
+}

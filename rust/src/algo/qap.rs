@@ -1,0 +1,199 @@
+//! One-to-one block → PE assignment (the QAP phase of two-phase mapping).
+//!
+//! * Greedy construction (Müller-Merbach): repeatedly place the unassigned
+//!   block with the strongest communication to already-placed blocks onto
+//!   the PE that minimizes the partial cost.
+//! * Pairwise-swap refinement (Heider; pruned as in Brandfass et al. /
+//!   Schulz–Träff): sweep all `O(k²)` swaps, apply improving ones, repeat
+//!   until a sweep finds nothing (bounded number of sweeps).
+
+use crate::topology::Hierarchy;
+use crate::Block;
+
+/// Greedy initial assignment `sigma : block → PE`.
+pub fn greedy_assignment(bmat: &[f64], k: usize, h: &Hierarchy) -> Vec<Block> {
+    assert_eq!(bmat.len(), k * k);
+    let mut sigma = vec![u32::MAX as Block; k];
+    let mut pe_used = vec![false; k];
+    let mut placed = vec![false; k];
+
+    // Start: block with the largest total communication volume.
+    let mut first = 0usize;
+    let mut best_vol = -1.0;
+    for b in 0..k {
+        let vol: f64 = (0..k).map(|o| bmat[b * k + o]).sum();
+        if vol > best_vol {
+            best_vol = vol;
+            first = b;
+        }
+    }
+    sigma[first] = 0;
+    pe_used[0] = true;
+    placed[first] = true;
+
+    for _ in 1..k {
+        // Unplaced block with max communication to placed blocks.
+        let mut next = usize::MAX;
+        let mut best_comm = -1.0;
+        for b in 0..k {
+            if placed[b] {
+                continue;
+            }
+            let comm: f64 = (0..k).filter(|&o| placed[o]).map(|o| bmat[b * k + o] + bmat[o * k + b]).sum();
+            if comm > best_comm {
+                best_comm = comm;
+                next = b;
+            }
+        }
+        // PE minimizing the partial cost of `next`.
+        let mut best_pe = usize::MAX;
+        let mut best_cost = f64::INFINITY;
+        for pe in 0..k {
+            if pe_used[pe] {
+                continue;
+            }
+            let mut cost = 0.0;
+            for o in 0..k {
+                if placed[o] {
+                    cost += (bmat[next * k + o] + bmat[o * k + next]) * h.distance(pe as Block, sigma[o]);
+                }
+            }
+            if cost < best_cost {
+                best_cost = cost;
+                best_pe = pe;
+            }
+        }
+        sigma[next] = best_pe as Block;
+        pe_used[best_pe] = true;
+        placed[next] = true;
+    }
+    sigma
+}
+
+/// Cost delta of swapping the PEs of blocks `x` and `y` (O(k)). Public so
+/// the offloaded search ([`crate::runtime::offload`]) can re-verify device
+/// candidates before applying them.
+pub fn swap_delta(bmat: &[f64], k: usize, sigma: &[Block], h: &Hierarchy, x: usize, y: usize) -> f64 {
+    let (px, py) = (sigma[x], sigma[y]);
+    let mut delta = 0.0;
+    for o in 0..k {
+        if o == x || o == y {
+            continue;
+        }
+        let po = sigma[o];
+        let wxo = bmat[x * k + o] + bmat[o * k + x];
+        let wyo = bmat[y * k + o] + bmat[o * k + y];
+        delta += wxo * (h.distance(py, po) - h.distance(px, po));
+        delta += wyo * (h.distance(px, po) - h.distance(py, po));
+    }
+    // x–y term is invariant under the swap (distance symmetric).
+    delta
+}
+
+/// Pairwise-swap local search; refines `sigma` in place. Returns total
+/// improvement (negative delta sum).
+pub fn swap_refine(bmat: &[f64], k: usize, sigma: &mut [Block], h: &Hierarchy, max_sweeps: usize) -> f64 {
+    let mut total = 0.0;
+    for _ in 0..max_sweeps {
+        let mut improved = false;
+        for x in 0..k {
+            // Prune: blocks with no communication never benefit from swaps
+            // with other silent blocks; their row sum is zero.
+            for y in x + 1..k {
+                let d = swap_delta(bmat, k, sigma, h, x, y);
+                if d < -1e-12 {
+                    sigma.swap(x, y);
+                    total -= d;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    total
+}
+
+/// Full one-to-one mapping: greedy + swap refinement.
+pub fn map_blocks_to_pes(bmat: &[f64], k: usize, h: &Hierarchy, sweeps: usize) -> Vec<Block> {
+    let mut sigma = greedy_assignment(bmat, k, h);
+    swap_refine(bmat, k, &mut sigma, h, sweeps);
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::comm_cost_blocks;
+    use crate::rng::Rng;
+
+    fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut b = vec![0.0; k * k];
+        for x in 0..k {
+            for y in x + 1..k {
+                let w = if rng.f64() < 0.4 { rng.below(50) as f64 } else { 0.0 };
+                b[x * k + y] = w;
+                b[y * k + x] = w;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn sigma_is_a_permutation() {
+        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, 1);
+        let sigma = map_blocks_to_pes(&bmat, k, &h, 10);
+        let mut seen = vec![false; k];
+        for &pe in &sigma {
+            assert!(!seen[pe as usize], "duplicate PE");
+            seen[pe as usize] = true;
+        }
+    }
+
+    #[test]
+    fn swap_refine_never_worsens() {
+        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, 2);
+        let mut sigma = greedy_assignment(&bmat, k, &h);
+        let before = comm_cost_blocks(&bmat, k, &sigma, &h);
+        let gain = swap_refine(&bmat, k, &mut sigma, &h, 10);
+        let after = comm_cost_blocks(&bmat, k, &sigma, &h);
+        assert!(after <= before + 1e-9);
+        assert!((before - after - gain).abs() < 1e-6 * before.max(1.0), "gain accounting");
+    }
+
+    #[test]
+    fn beats_identity_on_clustered_traffic() {
+        // Blocks 0/5 talk heavily; identity puts them on distant PEs.
+        let h = Hierarchy::parse("2:4", "1:100").unwrap();
+        let k = h.k();
+        let mut bmat = vec![0.0; k * k];
+        let hot = [(0usize, 5usize), (1, 6), (2, 7)];
+        for &(x, y) in &hot {
+            bmat[x * k + y] = 100.0;
+            bmat[y * k + x] = 100.0;
+        }
+        let identity: Vec<Block> = (0..k as Block).collect();
+        let j_id = comm_cost_blocks(&bmat, k, &identity, &h);
+        let sigma = map_blocks_to_pes(&bmat, k, &h, 10);
+        let j_opt = comm_cost_blocks(&bmat, k, &sigma, &h);
+        assert!(j_opt < j_id, "{j_opt} !< {j_id}");
+        // The three hot pairs can all be placed intra-processor: cost 2·100·1 each.
+        assert!((j_opt - 600.0).abs() < 1e-9, "expected optimal 600, got {j_opt}");
+    }
+
+    #[test]
+    fn greedy_handles_silent_blocks() {
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let bmat = vec![0.0; 16];
+        let sigma = greedy_assignment(&bmat, 4, &h);
+        let mut s = sigma.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,229 @@
+//! GPU-style contraction — paper Algorithm 3.
+//!
+//! Edge-parallel contraction over the extended CSR edge list `𝔼`: each
+//! coarse vertex gets a hash interval sized by the (overestimated) sum of
+//! its members' degrees; every directed fine edge `(u, v, w)` with
+//! `M(u) ≠ M(v)` inserts `(M(v), w)` into `M(u)`'s interval with a CAS on
+//! the vertex slot and an atomic f64 add on the weight slot. Extraction
+//! compacts the hash arrays into CSR form via prefix sums.
+
+use crate::graph::{CsrGraph, EdgeList};
+use crate::par::{atomic_f64_add, Pool};
+use crate::{EWeight, VWeight, Vertex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+const NULL: u32 = u32::MAX;
+
+/// Contract `g` along `map : V → [n_c]` using the CAS-hash scheme of
+/// Algorithm 3. Produces a sorted, validated CSR graph.
+pub fn contract_cas(pool: &Pool, g: &CsrGraph, el: &EdgeList, map: &[Vertex], nc: usize) -> CsrGraph {
+    let n = g.n();
+    let md = g.num_directed();
+
+    // Lines 1–3: per-coarse-vertex degree upper bounds (atomic adds).
+    let bounds: Vec<AtomicU32> = (0..nc).map(|_| AtomicU32::new(0)).collect();
+    pool.parallel_for(n, |v| {
+        bounds[map[v] as usize].fetch_add(g.degree(v as Vertex) as u32, Ordering::Relaxed);
+    });
+
+    // Line 6: offsets via prefix sum.
+    let offsets = pool.scan_exclusive(nc, |c| bounds[c].load(Ordering::Relaxed) as u64);
+    debug_assert_eq!(offsets[nc] as usize, md);
+
+    // Lines 4–5: hash arrays.
+    let hv: Vec<AtomicU32> = (0..md).map(|_| AtomicU32::new(NULL)).collect();
+    let hw: Vec<AtomicU64> = (0..md).map(|_| AtomicU64::new(0f64.to_bits())).collect();
+
+    // Lines 7–10: edge-parallel insertion.
+    pool.parallel_for(md, |i| {
+        let u = el.eu[i] as usize;
+        let v = g.adj[i] as usize;
+        let cu = map[u] as usize;
+        let cv = map[v];
+        if cu == cv as usize {
+            return; // self loop discarded
+        }
+        let w = g.ew[i];
+        let start = offsets[cu] as usize;
+        let len = (offsets[cu + 1] - offsets[cu]) as usize;
+        debug_assert!(len > 0);
+        // Hash the target then linear-probe the interval.
+        let mut slot = (crate::rng::hash_u64(cv as u64) % len as u64) as usize;
+        loop {
+            let idx = start + slot;
+            match hv[idx].compare_exchange(NULL, cv, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => {
+                    // We claimed this slot for cv.
+                    atomic_f64_add(&hw[idx], w);
+                    return;
+                }
+                Err(existing) if existing == cv => {
+                    // Edge already present: fuse weights.
+                    atomic_f64_add(&hw[idx], w);
+                    return;
+                }
+                Err(_) => {
+                    slot = (slot + 1) % len;
+                }
+            }
+        }
+    });
+
+    // Line 11: ExtractCSR — count true degrees, scan, compact.
+    // (§Perf opt 3: vertex-parallel interval scan instead of an
+    // edge-parallel loop with a binary search per slot.)
+    let true_deg: Vec<AtomicU32> = (0..nc).map(|_| AtomicU32::new(0)).collect();
+    pool.parallel_for(nc, |c| {
+        let mut d = 0u32;
+        for i in offsets[c] as usize..offsets[c + 1] as usize {
+            d += (hv[i].load(Ordering::Relaxed) != NULL) as u32;
+        }
+        true_deg[c].store(d, Ordering::Relaxed);
+    });
+    let xadj_scan = pool.scan_exclusive(nc, |c| true_deg[c].load(Ordering::Relaxed) as u64);
+    let m_out = xadj_scan[nc] as usize;
+
+    let mut adj = vec![0 as Vertex; m_out];
+    let mut ew = vec![0 as EWeight; m_out];
+    {
+        let adj_ptr = crate::par::SharedMut::new(&mut adj);
+        let ew_ptr = crate::par::SharedMut::new(&mut ew);
+        // Vertex-parallel compaction: each coarse vertex owns a disjoint
+        // output range, walks its hash interval, then sorts its slice.
+        pool.parallel_for(nc, |c| {
+            let mut out = xadj_scan[c] as usize;
+            let begin = xadj_scan[c] as usize;
+            for i in offsets[c] as usize..offsets[c + 1] as usize {
+                let t = hv[i].load(Ordering::Relaxed);
+                if t != NULL {
+                    unsafe {
+                        adj_ptr.write(out, t);
+                        ew_ptr.write(out, f64::from_bits(hw[i].load(Ordering::Relaxed)));
+                    }
+                    out += 1;
+                }
+            }
+            // Sort slice [begin, out) by target for CSR invariants.
+            // Allocation-free paired insertion sort (coarse adjacency
+            // lists are short) — §Perf opt 3.
+            unsafe {
+                let slice_adj = adj_ptr.slice(begin, out - begin);
+                let slice_ew = ew_ptr.slice(begin, out - begin);
+                for i in 1..slice_adj.len() {
+                    let (ka, kw) = (slice_adj[i], slice_ew[i]);
+                    let mut j = i;
+                    while j > 0 && slice_adj[j - 1] > ka {
+                        slice_adj[j] = slice_adj[j - 1];
+                        slice_ew[j] = slice_ew[j - 1];
+                        j -= 1;
+                    }
+                    slice_adj[j] = ka;
+                    slice_ew[j] = kw;
+                }
+            }
+        });
+    }
+
+    // Coarse vertex weights.
+    let vw_atomic: Vec<AtomicU64> = (0..nc).map(|_| AtomicU64::new(0)).collect();
+    pool.parallel_for(n, |v| {
+        vw_atomic[map[v] as usize].fetch_add(g.vw[v] as u64, Ordering::Relaxed);
+    });
+
+    let mut xadj = vec![0u32; nc + 1];
+    for c in 0..=nc {
+        xadj[c] = xadj_scan[c] as u32;
+    }
+    let vw: Vec<VWeight> = vw_atomic.iter().map(|a| a.load(Ordering::Relaxed) as VWeight).collect();
+    let out = CsrGraph { xadj, adj, ew, vw };
+    debug_assert!(out.validate().is_ok(), "contract_cas produced invalid CSR");
+    out
+}
+
+/// Which coarse vertex owns hash slot `i` (binary search on offsets).
+/// Kept for the edge-parallel extraction variant exercised in tests.
+#[inline]
+#[allow(dead_code)]
+fn owner_of(offsets: &[u64], i: usize) -> usize {
+    let i = i as u64;
+    // offsets is monotone with offsets[0] == 0; find c with
+    // offsets[c] <= i < offsets[c+1].
+    let mut lo = 0usize;
+    let mut hi = offsets.len() - 1;
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if offsets[mid] <= i {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coarsen::{contract_serial, matching_to_map, serial_hem};
+    use crate::graph::gen;
+
+    fn check_same_graph(a: &CsrGraph, b: &CsrGraph) {
+        assert_eq!(a.n(), b.n());
+        assert_eq!(a.xadj, b.xadj);
+        assert_eq!(a.adj, b.adj);
+        assert_eq!(a.vw, b.vw);
+        for (x, y) in a.ew.iter().zip(&b.ew) {
+            assert!((x - y).abs() < 1e-9 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn matches_serial_oracle_on_grid() {
+        let g = gen::grid2d(16, 16, false);
+        let mate = serial_hem(&g, i64::MAX, 1);
+        let (map, nc) = matching_to_map(&mate);
+        let el = EdgeList::build(&g);
+        for threads in [1, 4] {
+            let pool = Pool::new(threads);
+            let cas = contract_cas(&pool, &g, &el, &map, nc);
+            let ser = contract_serial(&g, &map, nc);
+            check_same_graph(&cas, &ser);
+        }
+    }
+
+    #[test]
+    fn matches_serial_oracle_on_weighted_rgg() {
+        let g = gen::stencil9(30, 30, 3);
+        let mate = serial_hem(&g, i64::MAX, 5);
+        let (map, nc) = matching_to_map(&mate);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let cas = contract_cas(&pool, &g, &el, &map, nc);
+        let ser = contract_serial(&g, &map, nc);
+        check_same_graph(&cas, &ser);
+    }
+
+    #[test]
+    fn arbitrary_cluster_map() {
+        // Contract a grid along a clustering (not a matching): 3 vertices
+        // per cluster.
+        let g = gen::grid2d(9, 9, false);
+        let nc = g.n().div_ceil(3);
+        let map: Vec<Vertex> = (0..g.n()).map(|v| (v / 3) as Vertex).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let cas = contract_cas(&pool, &g, &el, &map, nc);
+        let ser = contract_serial(&g, &map, nc);
+        check_same_graph(&cas, &ser);
+        assert_eq!(cas.total_vweight(), g.total_vweight());
+    }
+
+    #[test]
+    fn owner_of_binary_search() {
+        let offsets = vec![0u64, 3, 3, 10];
+        assert_eq!(owner_of(&offsets, 0), 0);
+        assert_eq!(owner_of(&offsets, 2), 0);
+        assert_eq!(owner_of(&offsets, 3), 2);
+        assert_eq!(owner_of(&offsets, 9), 2);
+    }
+}

@@ -1,0 +1,175 @@
+//! Device-style preference matching (paper §4.2 "Matching").
+//!
+//! Each round, every unmatched vertex `v` scans its unmatched neighbors in
+//! parallel and records the one with the best `expansion*²` rating
+//! (+ deterministic noise η to break ties) as its preference `p(v)`. A
+//! second kernel matches mutual preferences `p(p(v)) == v`. Rounds repeat
+//! until a round produces no matches or ≥75 % of vertices are matched
+//! (then the two-hop pass of [`super::twohop`] takes over).
+
+use super::{rating_exp2, Matching};
+use crate::graph::CsrGraph;
+use crate::par::Pool;
+use crate::rng::edge_noise;
+use crate::{VWeight, Vertex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+const UNMATCHED: u32 = u32::MAX;
+
+/// Parallel preference matching. Returns the matching in `mate[v]` form
+/// (`mate[v] == v` ⇔ unmatched).
+pub fn preference_matching(
+    g: &CsrGraph,
+    pool: &Pool,
+    max_pair_weight: VWeight,
+    seed: u64,
+    max_rounds: usize,
+) -> Matching {
+    let n = g.n();
+    let mate: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNMATCHED)).collect();
+    let pref: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNMATCHED)).collect();
+
+    for _round in 0..max_rounds {
+        // Kernel 1: compute preferences of unmatched vertices.
+        pool.parallel_for(n, |v| {
+            if mate[v].load(Ordering::Relaxed) != UNMATCHED {
+                return;
+            }
+            let (nbrs, ws) = g.neighbors_w(v as Vertex);
+            let mut best: Option<(f64, Vertex)> = None;
+            for (&u, &w) in nbrs.iter().zip(ws) {
+                if mate[u as usize].load(Ordering::Relaxed) != UNMATCHED {
+                    continue;
+                }
+                if g.vw[v] + g.vw[u as usize] > max_pair_weight {
+                    continue;
+                }
+                let r = rating_exp2(w, g.vw[v], g.vw[u as usize])
+                    + 1e-12 * edge_noise(v as Vertex, u, seed);
+                if best.map(|(br, bu)| r > br || (r == br && u < bu)).unwrap_or(true) {
+                    best = Some((r, u));
+                }
+            }
+            pref[v].store(best.map(|(_, u)| u).unwrap_or(UNMATCHED), Ordering::Relaxed);
+        });
+
+        // Kernel 2: match mutual preferences.
+        let matched_this_round = pool.reduce_sum_u64(n, |v| {
+            if mate[v].load(Ordering::Relaxed) != UNMATCHED {
+                return 0;
+            }
+            let u = pref[v].load(Ordering::Relaxed);
+            if u == UNMATCHED {
+                return 0;
+            }
+            if pref[u as usize].load(Ordering::Relaxed) == v as u32 {
+                // Mutual; the smaller endpoint writes both sides.
+                if (v as u32) < u {
+                    mate[v].store(u, Ordering::Relaxed);
+                    mate[u as usize].store(v as u32, Ordering::Relaxed);
+                    return 2;
+                }
+            }
+            0
+        });
+        if matched_this_round == 0 {
+            break;
+        }
+        let matched_total = pool.reduce_sum_u64(n, |v| {
+            (mate[v].load(Ordering::Relaxed) != UNMATCHED) as u64
+        });
+        if matched_total as f64 / n as f64 >= 0.75 {
+            break;
+        }
+    }
+
+    (0..n)
+        .map(|v| {
+            let m = mate[v].load(Ordering::Relaxed);
+            if m == UNMATCHED {
+                v as Vertex
+            } else {
+                m
+            }
+        })
+        .collect()
+}
+
+/// Atomic claim table used by the two-hop pass: claim(v) returns true for
+/// exactly one claimer of each vertex.
+#[allow(dead_code)] // exercised by tests; available for two-hop device variants
+pub(crate) struct ClaimTable {
+    slots: Vec<AtomicU64>,
+}
+
+impl ClaimTable {
+    pub fn new(n: usize) -> Self {
+        let mut slots = Vec::with_capacity(n);
+        slots.resize_with(n, || AtomicU64::new(u64::MAX));
+        ClaimTable { slots }
+    }
+
+    /// Try to claim `v` with tag `tag`; true iff this call won.
+    #[inline]
+    pub fn claim(&self, v: usize, tag: u64) -> bool {
+        self.slots[v]
+            .compare_exchange(u64::MAX, tag, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn check_valid_matching(g: &CsrGraph, mate: &Matching, cap: VWeight) {
+        for v in 0..g.n() {
+            let m = mate[v] as usize;
+            assert_eq!(mate[m] as usize, v, "not symmetric at {v}");
+            if m != v {
+                assert!(g.find_edge(v as u32, m as u32).is_some(), "matched non-edge {v}-{m}");
+                assert!(g.vw[v] + g.vw[m] <= cap);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_most_of_a_grid() {
+        let g = gen::grid2d(32, 32, false);
+        for threads in [1, 4] {
+            let pool = Pool::new(threads);
+            let mate = preference_matching(&g, &pool, i64::MAX, 7, 8);
+            check_valid_matching(&g, &mate, i64::MAX);
+            assert!(super::super::matched_fraction(&mate) > 0.6, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let g = gen::rgg(1_500, 0.06, 9);
+        let m1 = preference_matching(&g, &Pool::new(1), i64::MAX, 3, 8);
+        let m4 = preference_matching(&g, &Pool::new(4), i64::MAX, 3, 8);
+        // Preferences are deterministic, so matchings agree exactly.
+        assert_eq!(m1, m4);
+    }
+
+    #[test]
+    fn respects_weight_cap() {
+        let mut g = gen::grid2d(8, 8, false);
+        for v in 0..g.n() {
+            g.vw[v] = 1 + (v % 5) as i64;
+        }
+        let pool = Pool::new(1);
+        let mate = preference_matching(&g, &pool, 6, 1, 8);
+        check_valid_matching(&g, &mate, 6);
+    }
+
+    #[test]
+    fn claim_table_single_winner() {
+        let table = ClaimTable::new(100);
+        let pool = Pool::new(4);
+        let wins = pool.reduce_sum_u64(1_000, |i| table.claim(i % 100, i as u64) as u64);
+        assert_eq!(wins, 100);
+    }
+}

@@ -1,0 +1,244 @@
+//! Coarsening: edge ratings, matchings, and graph contraction.
+//!
+//! Serial variants feed the CPU baselines (SharedMap/IntMap-like solvers)
+//! and act as differential-testing oracles for the device kernels:
+//! the parallel preference matching + two-hop matching ([`match_par`],
+//! [`twohop`]) and the CAS-hash contraction of paper Alg. 3
+//! ([`contract_cas`]).
+
+pub mod contract_cas;
+pub mod match_par;
+pub mod twohop;
+
+use crate::graph::CsrGraph;
+use crate::rng::{edge_noise, Rng};
+use crate::{EWeight, VWeight, Vertex};
+
+/// The `expansion*²` edge rating of Holtgrewe et al. used by the paper:
+/// `ω({u,v})² / (c(u)·c(v))` — prefers heavy edges between light vertices.
+#[inline]
+pub fn rating_exp2(w: EWeight, cu: VWeight, cv: VWeight) -> f64 {
+    (w * w) / (cu as f64 * cv as f64)
+}
+
+/// The plain `expansion*` rating used by IntMap: `ω/(c(u)·c(v))`.
+#[inline]
+pub fn rating_exp(w: EWeight, cu: VWeight, cv: VWeight) -> f64 {
+    w / (cu as f64 * cv as f64)
+}
+
+/// A matching stored as `mate[v] == u` (and `mate[u] == v`); unmatched
+/// vertices have `mate[v] == v`.
+pub type Matching = Vec<Vertex>;
+
+/// Serial greedy heavy-edge matching with the `expansion*²` rating and
+/// deterministic noise (baseline / oracle for the parallel matcher).
+/// Pairs whose combined weight exceeds `max_pair_weight` are skipped.
+pub fn serial_hem(g: &CsrGraph, max_pair_weight: VWeight, seed: u64) -> Matching {
+    let n = g.n();
+    let mut mate: Matching = (0..n as Vertex).collect();
+    let mut order: Vec<Vertex> = (0..n as Vertex).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+    for &v in &order {
+        if mate[v as usize] != v {
+            continue;
+        }
+        let (nbrs, ws) = g.neighbors_w(v);
+        let mut best: Option<(f64, Vertex)> = None;
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            if mate[u as usize] != u || g.vw[v as usize] + g.vw[u as usize] > max_pair_weight {
+                continue;
+            }
+            let r = rating_exp2(w, g.vw[v as usize], g.vw[u as usize])
+                + 1e-12 * edge_noise(v, u, seed);
+            if best.map(|(br, _)| r > br).unwrap_or(true) {
+                best = Some((r, u));
+            }
+        }
+        if let Some((_, u)) = best {
+            mate[v as usize] = u;
+            mate[u as usize] = v;
+        }
+    }
+    mate
+}
+
+/// Fraction of matched vertices.
+pub fn matched_fraction(mate: &Matching) -> f64 {
+    if mate.is_empty() {
+        return 0.0;
+    }
+    let matched = mate.iter().enumerate().filter(|&(v, &m)| m as usize != v).count();
+    matched as f64 / mate.len() as f64
+}
+
+/// Turn a matching into a coarse-vertex map `M : V → [n_c]`
+/// (pair leader = smaller endpoint). Returns `(map, n_c)`.
+pub fn matching_to_map(mate: &Matching) -> (Vec<Vertex>, usize) {
+    let n = mate.len();
+    let mut map = vec![u32::MAX; n];
+    let mut nc = 0u32;
+    for v in 0..n {
+        let m = mate[v] as usize;
+        debug_assert_eq!(mate[m] as usize, v, "matching not symmetric at {v}");
+        if v <= m {
+            map[v] = nc;
+            map[m] = nc;
+            nc += 1;
+        }
+    }
+    (map, nc as usize)
+}
+
+/// Serial contraction oracle: contract along `map : V → [n_c]`, fusing
+/// parallel edges (weights summed) and dropping self loops. O(n + m) with
+/// an epoch-marker array.
+pub fn contract_serial(g: &CsrGraph, map: &[Vertex], nc: usize) -> CsrGraph {
+    let n = g.n();
+    // Inverse lists: coarse vertex → fine members (counting sort).
+    let mut count = vec![0u32; nc + 1];
+    for v in 0..n {
+        count[map[v] as usize + 1] += 1;
+    }
+    for c in 0..nc {
+        count[c + 1] += count[c];
+    }
+    let mut members = vec![0 as Vertex; n];
+    let mut pos = count.clone();
+    for v in 0..n {
+        members[pos[map[v] as usize] as usize] = v as Vertex;
+        pos[map[v] as usize] += 1;
+    }
+
+    let mut xadj = vec![0u32; nc + 1];
+    let mut adj: Vec<Vertex> = Vec::with_capacity(g.adj.len() / 2);
+    let mut ew: Vec<EWeight> = Vec::with_capacity(g.adj.len() / 2);
+    let mut vw = vec![0 as VWeight; nc];
+    let mut marker = vec![u32::MAX; nc];
+    let mut slot_of = vec![0u32; nc];
+    for c in 0..nc {
+        let start = adj.len();
+        for &v in &members[count[c] as usize..count[c + 1] as usize] {
+            vw[c] += g.vw[v as usize];
+            let (nbrs, ws) = g.neighbors_w(v);
+            for (&u, &w) in nbrs.iter().zip(ws) {
+                let cu = map[u as usize] as usize;
+                if cu == c {
+                    continue; // self loop discarded
+                }
+                if marker[cu] != c as u32 {
+                    marker[cu] = c as u32;
+                    slot_of[cu] = adj.len() as u32;
+                    adj.push(cu as Vertex);
+                    ew.push(w);
+                } else {
+                    ew[slot_of[cu] as usize] += w;
+                }
+            }
+        }
+        // Sort this vertex's slice for CSR invariants.
+        let slice: Vec<(Vertex, EWeight)> = adj[start..]
+            .iter()
+            .cloned()
+            .zip(ew[start..].iter().cloned())
+            .collect();
+        let mut slice = slice;
+        slice.sort_unstable_by_key(|&(t, _)| t);
+        for (i, (t, w)) in slice.into_iter().enumerate() {
+            adj[start + i] = t;
+            ew[start + i] = w;
+        }
+        xadj[c + 1] = adj.len() as u32;
+    }
+    let out = CsrGraph { xadj, adj, ew, vw };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+/// One serial coarsening step: HEM + contract. Returns `(coarse, map)`.
+pub fn coarsen_step_serial(g: &CsrGraph, max_pair_weight: VWeight, seed: u64) -> (CsrGraph, Vec<Vertex>) {
+    let mate = serial_hem(g, max_pair_weight, seed);
+    let (map, nc) = matching_to_map(&mate);
+    let coarse = contract_serial(g, &map, nc);
+    (coarse, map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn hem_is_a_matching() {
+        let g = gen::grid2d(10, 10, false);
+        let mate = serial_hem(&g, i64::MAX, 1);
+        for v in 0..g.n() {
+            let m = mate[v] as usize;
+            assert_eq!(mate[m] as usize, v);
+            if m != v {
+                assert!(g.find_edge(v as u32, m as u32).is_some(), "matched non-edge");
+            }
+        }
+        assert!(matched_fraction(&mate) > 0.5);
+    }
+
+    #[test]
+    fn hem_respects_weight_cap() {
+        let mut g = gen::grid2d(6, 1, false);
+        g.vw = vec![10, 10, 1, 1, 10, 10];
+        let mate = serial_hem(&g, 11, 2);
+        for v in 0..g.n() {
+            let m = mate[v] as usize;
+            if m != v {
+                assert!(g.vw[v] + g.vw[m] <= 11);
+            }
+        }
+    }
+
+    #[test]
+    fn contraction_preserves_totals() {
+        let g = gen::rgg(2_000, 0.06, 3);
+        let (coarse, map) = coarsen_step_serial(&g, i64::MAX, 4);
+        assert_eq!(coarse.total_vweight(), g.total_vweight());
+        // Total edge weight = original minus weights of intra-pair edges.
+        let mut intra = 0.0;
+        for v in 0..g.n() {
+            let (nbrs, ws) = g.neighbors_w(v as u32);
+            for (&u, &w) in nbrs.iter().zip(ws) {
+                if map[v] == map[u as usize] {
+                    intra += w;
+                }
+            }
+        }
+        let expect = g.total_eweight() - intra / 2.0;
+        assert!((coarse.total_eweight() - expect).abs() < 1e-6 * expect.max(1.0));
+        coarse.validate().unwrap();
+    }
+
+    #[test]
+    fn contraction_shrinks() {
+        let g = gen::grid2d(20, 20, false);
+        let (coarse, _) = coarsen_step_serial(&g, i64::MAX, 5);
+        assert!(coarse.n() < g.n());
+        assert!(coarse.n() >= g.n() / 2);
+    }
+
+    #[test]
+    fn map_is_surjective_onto_range() {
+        let g = gen::grid2d(8, 8, false);
+        let mate = serial_hem(&g, i64::MAX, 6);
+        let (map, nc) = matching_to_map(&mate);
+        let mut seen = vec![false; nc];
+        for &c in &map {
+            seen[c as usize] = true;
+        }
+        assert!(seen.into_iter().all(|s| s));
+    }
+
+    #[test]
+    fn rating_prefers_heavy_light() {
+        assert!(rating_exp2(4.0, 1, 1) > rating_exp2(2.0, 1, 1));
+        assert!(rating_exp2(2.0, 1, 1) > rating_exp2(2.0, 4, 1));
+    }
+}

@@ -1,0 +1,225 @@
+//! Two-hop matching (LaSalle et al., adopted by Jet and by the paper):
+//! if preference matching leaves too many vertices unmatched, match
+//! vertices that are two hops apart — *leaves* (degree-1 vertices sharing
+//! a neighbor), *twins* (identical neighborhoods, found by hashing), and
+//! *relatives* (sharing at least one neighbor, paired through small-degree
+//! "matchmaker" vertices).
+
+use super::Matching;
+use crate::graph::CsrGraph;
+use crate::rng::hash_u64;
+use crate::{VWeight, Vertex};
+
+/// Degree bound for matchmaker vertices in the relative pass (Jet uses
+/// small-degree vertices to bound the pairing work).
+const MATCHMAKER_MAX_DEGREE: usize = 32;
+
+/// Extend `mate` in place with leaf, twin, and relative two-hop matches.
+/// Returns the number of newly matched vertices.
+pub fn twohop_matching(g: &CsrGraph, mate: &mut Matching, max_pair_weight: VWeight) -> usize {
+    let before = matched_count(mate);
+    leaf_matching(g, mate, max_pair_weight);
+    twin_matching(g, mate, max_pair_weight);
+    relative_matching(g, mate, max_pair_weight);
+    matched_count(mate) - before
+}
+
+fn matched_count(mate: &Matching) -> usize {
+    mate.iter().enumerate().filter(|&(v, &m)| m as usize != v).count()
+}
+
+#[inline]
+fn unmatched(mate: &Matching, v: usize) -> bool {
+    mate[v] as usize == v
+}
+
+fn try_pair(g: &CsrGraph, mate: &mut Matching, a: Vertex, b: Vertex, cap: VWeight) -> bool {
+    let (a, b) = (a as usize, b as usize);
+    if a == b || !unmatched(mate, a) || !unmatched(mate, b) {
+        return false;
+    }
+    if g.vw[a] + g.vw[b] > cap {
+        return false;
+    }
+    mate[a] = b as Vertex;
+    mate[b] = a as Vertex;
+    true
+}
+
+/// Leaves: for each vertex, pair up its unmatched degree-1 neighbors.
+fn leaf_matching(g: &CsrGraph, mate: &mut Matching, cap: VWeight) {
+    for hub in 0..g.n() {
+        let mut pending: Option<Vertex> = None;
+        // Collect first to avoid borrowing issues with mate updates.
+        let leaves: Vec<Vertex> = g
+            .neighbors(hub as Vertex)
+            .iter()
+            .copied()
+            .filter(|&u| g.degree(u) == 1 && unmatched(mate, u as usize))
+            .collect();
+        for u in leaves {
+            match pending {
+                None => pending = Some(u),
+                Some(p) => {
+                    if try_pair(g, mate, p, u, cap) {
+                        pending = None;
+                    } else {
+                        pending = Some(u);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Twins: hash each unmatched vertex's (sorted) neighborhood; sort by
+/// hash; pair consecutive vertices with equal neighborhoods.
+fn twin_matching(g: &CsrGraph, mate: &mut Matching, cap: VWeight) {
+    let mut hashed: Vec<(u64, Vertex)> = (0..g.n())
+        .filter(|&v| unmatched(mate, v) && g.degree(v as Vertex) >= 2)
+        .map(|v| {
+            let mut h = 0xcbf29ce484222325u64 ^ (g.degree(v as Vertex) as u64);
+            for &u in g.neighbors(v as Vertex) {
+                // Order-independent combine is unnecessary: adjacency is
+                // sorted, so sequential mixing is canonical.
+                h = hash_u64(h ^ u as u64);
+            }
+            (h, v as Vertex)
+        })
+        .collect();
+    hashed.sort_unstable();
+    let mut i = 0;
+    while i + 1 < hashed.len() {
+        let (h, v) = hashed[i];
+        let (h2, u) = hashed[i + 1];
+        if h == h2
+            && g.neighbors(v) == g.neighbors(u)
+            && try_pair(g, mate, v, u, cap)
+        {
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Relatives: small-degree matchmaker vertices pair up their unmatched
+/// neighbors (which thereby share a common neighbor — two hops apart).
+fn relative_matching(g: &CsrGraph, mate: &mut Matching, cap: VWeight) {
+    for hub in 0..g.n() {
+        if g.degree(hub as Vertex) > MATCHMAKER_MAX_DEGREE {
+            continue;
+        }
+        let candidates: Vec<Vertex> = g
+            .neighbors(hub as Vertex)
+            .iter()
+            .copied()
+            .filter(|&u| unmatched(mate, u as usize))
+            .collect();
+        let mut pending: Option<Vertex> = None;
+        for u in candidates {
+            if !unmatched(mate, u as usize) {
+                continue;
+            }
+            match pending {
+                None => pending = Some(u),
+                Some(p) => {
+                    if try_pair(g, mate, p, u, cap) {
+                        pending = None;
+                    } else {
+                        pending = Some(u);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+
+    #[test]
+    fn star_leaves_get_matched() {
+        // Star: hub 0 with 6 leaves. Preference matching can match at most
+        // one leaf to the hub; two-hop pairs up the rest.
+        let mut b = GraphBuilder::new(7);
+        for leaf in 1..7 {
+            b.add_edge(0, leaf, 1.0);
+        }
+        let g = b.build();
+        let mut mate: Matching = (0..7).collect();
+        mate[0] = 1;
+        mate[1] = 0;
+        let newly = twohop_matching(&g, &mut mate, i64::MAX);
+        assert!(newly >= 4, "only matched {newly}");
+        for v in 0..7usize {
+            let m = mate[v] as usize;
+            assert_eq!(mate[m] as usize, v);
+        }
+    }
+
+    #[test]
+    fn twins_get_matched() {
+        // Vertices 2 and 3 both connect exactly to {0, 1}: twins.
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(2, 0, 1.0);
+        b.add_edge(2, 1, 1.0);
+        b.add_edge(3, 0, 1.0);
+        b.add_edge(3, 1, 1.0);
+        let g = b.build();
+        let mut mate: Matching = (0..4).collect();
+        twohop_matching(&g, &mut mate, i64::MAX);
+        assert_eq!(mate[2], 3);
+        assert_eq!(mate[3], 2);
+    }
+
+    #[test]
+    fn weight_cap_respected() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(2, 0, 1.0);
+        b.add_edge(2, 1, 1.0);
+        b.add_edge(3, 0, 1.0);
+        b.add_edge(3, 1, 1.0);
+        b.set_vweight(2, 10);
+        b.set_vweight(3, 10);
+        let g = b.build();
+        let mut mate: Matching = (0..4).collect();
+        twohop_matching(&g, &mut mate, 15);
+        assert_eq!(mate[2], 2, "cap should prevent twin match");
+    }
+
+    #[test]
+    fn improves_match_rate_on_star_forest() {
+        // Many stars: preference matching leaves most leaves unmatched.
+        let mut b = GraphBuilder::new(50);
+        for star in 0..5u32 {
+            let hub = star * 10;
+            for i in 1..10u32 {
+                b.add_edge(hub, hub + i, 1.0);
+            }
+        }
+        let g = b.build();
+        let pool = crate::par::Pool::new(1);
+        let mut mate = super::super::match_par::preference_matching(&g, &pool, i64::MAX, 1, 4);
+        let frac_before = super::super::matched_fraction(&mate);
+        twohop_matching(&g, &mut mate, i64::MAX);
+        let frac_after = super::super::matched_fraction(&mate);
+        assert!(frac_after > frac_before);
+        assert!(frac_after > 0.8, "frac_after={frac_after}");
+    }
+
+    #[test]
+    fn no_op_on_fully_matched_grid() {
+        let g = gen::grid2d(8, 8, false);
+        let pool = crate::par::Pool::new(1);
+        let mut mate = super::super::match_par::preference_matching(&g, &pool, i64::MAX, 2, 16);
+        let before = mate.clone();
+        if super::super::matched_fraction(&mate) == 1.0 {
+            twohop_matching(&g, &mut mate, i64::MAX);
+            assert_eq!(mate, before);
+        }
+    }
+}

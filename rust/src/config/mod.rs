@@ -1,0 +1,137 @@
+//! Run configuration: presets plus a tiny `key = value` config-file format
+//! (the offline crate set has no serde/toml, so the parser is hand-rolled).
+
+use crate::algo::Algorithm;
+use crate::topology::Hierarchy;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A full experiment/run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Machine hierarchy, e.g. `4:8:6`.
+    pub hierarchy: String,
+    /// Distance vector, e.g. `1:10:100`.
+    pub distance: String,
+    /// Imbalance ε.
+    pub eps: f64,
+    /// Algorithm to run.
+    pub algorithm: Algorithm,
+    /// Seeds (the paper averages over five).
+    pub seeds: Vec<u64>,
+    /// Device worker threads (0 = auto).
+    pub threads: usize,
+    /// Artifact directory for the PJRT offload kernels.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            hierarchy: "4:8:6".into(),
+            distance: "1:10:100".into(),
+            eps: 0.03,
+            algorithm: Algorithm::GpuIm,
+            seeds: vec![1, 2, 3, 4, 5],
+            threads: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn parse_hierarchy(&self) -> Result<Hierarchy> {
+        Hierarchy::parse(&self.hierarchy, &self.distance)
+    }
+
+    /// Load from a `key = value` file (`#` comments allowed).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Self::from_kv_text(&text)
+    }
+
+    /// Parse the `key = value` format.
+    pub fn from_kv_text(text: &str) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        let kv = parse_kv(text)?;
+        for (key, value) in kv {
+            match key.as_str() {
+                "hierarchy" => cfg.hierarchy = value,
+                "distance" => cfg.distance = value,
+                "eps" => cfg.eps = value.parse().context("eps")?,
+                "algorithm" => {
+                    cfg.algorithm = Algorithm::from_name(&value)
+                        .with_context(|| format!("unknown algorithm {value}"))?
+                }
+                "seeds" => {
+                    cfg.seeds = value
+                        .split(',')
+                        .map(|s| s.trim().parse::<u64>().map_err(Into::into))
+                        .collect::<Result<_>>()?
+                }
+                "threads" => cfg.threads = value.parse().context("threads")?,
+                "artifacts_dir" => cfg.artifacts_dir = value,
+                other => bail!("unknown config key `{other}`"),
+            }
+        }
+        cfg.parse_hierarchy()?; // validate
+        Ok(cfg)
+    }
+}
+
+/// Parse `key = value` lines into an ordered map.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got `{raw}`", lineno + 1);
+        };
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_setup() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.eps, 0.03);
+        assert_eq!(cfg.parse_hierarchy().unwrap().k(), 192);
+        assert_eq!(cfg.seeds.len(), 5);
+    }
+
+    #[test]
+    fn parses_kv_text() {
+        let cfg = RunConfig::from_kv_text(
+            "hierarchy = 4:8:2\n# comment\ndistance = 1:10:100\neps = 0.05\nalgorithm = gpu-hm\nseeds = 7,8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.parse_hierarchy().unwrap().k(), 64);
+        assert_eq!(cfg.eps, 0.05);
+        assert_eq!(cfg.algorithm, Algorithm::GpuHm);
+        assert_eq!(cfg.seeds, vec![7, 8]);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(RunConfig::from_kv_text("frobnicate = 3").is_err());
+        assert!(RunConfig::from_kv_text("eps = banana").is_err());
+        assert!(RunConfig::from_kv_text("algorithm = nope").is_err());
+        assert!(RunConfig::from_kv_text("hierarchy = 4:8\ndistance = 1:10:100").is_err());
+    }
+
+    #[test]
+    fn kv_parser_ignores_comments() {
+        let kv = parse_kv("a = 1 # trailing\n\n# full line\nb=2").unwrap();
+        assert_eq!(kv.get("a").unwrap(), "1");
+        assert_eq!(kv.get("b").unwrap(), "2");
+    }
+}

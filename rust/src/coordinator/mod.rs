@@ -1,0 +1,108 @@
+//! Process-mapping-as-a-service: the L3 coordinator.
+//!
+//! A deployment of this library is a long-running *mapping service*: HPC
+//! schedulers submit task graphs and machine hierarchies and receive
+//! vertex → PE mappings. The coordinator owns
+//!
+//! * a **router** that picks an algorithm per request (quality-optimal
+//!   GPU-HM-ultra for small graphs, throughput-optimal GPU-IM for large
+//!   ones) unless the client pins one,
+//! * a single-consumer **job queue** feeding a worker thread that owns the
+//!   device pool and the PJRT [`crate::runtime::Runtime`] (one client per
+//!   device, mirroring the paper's one-GPU setup),
+//! * an optional **QAP polish** stage that refines the block → PE
+//!   assignment with the offloaded all-pairs swap kernel, and
+//! * service **metrics** (requests, per-algorithm counts, device time).
+//!
+//! Front-ends: an in-process handle ([`service::Service::submit`]) and a
+//! line-oriented TCP protocol ([`protocol`], `heipa serve`).
+
+pub mod protocol;
+pub mod service;
+
+use crate::algo::Algorithm;
+
+/// A mapping request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MapRequest {
+    /// Instance registry name (`rgg15`, …) or a path to a METIS file.
+    pub instance: String,
+    /// Pinned algorithm, or `None` for router choice.
+    pub algorithm: Option<Algorithm>,
+    pub hierarchy: String,
+    pub distance: String,
+    pub eps: f64,
+    pub seed: u64,
+    /// Run the offloaded QAP polish stage after mapping.
+    pub polish: bool,
+    /// Return the full mapping vector in the response.
+    pub return_mapping: bool,
+}
+
+impl Default for MapRequest {
+    fn default() -> Self {
+        MapRequest {
+            instance: String::new(),
+            algorithm: None,
+            hierarchy: "4:8:6".into(),
+            distance: "1:10:100".into(),
+            eps: 0.03,
+            seed: 1,
+            polish: false,
+            return_mapping: false,
+        }
+    }
+}
+
+/// A mapping response.
+#[derive(Clone, Debug)]
+pub struct MapResponse {
+    pub id: u64,
+    pub algorithm: Algorithm,
+    pub n: usize,
+    pub k: usize,
+    pub comm_cost: f64,
+    pub imbalance: f64,
+    pub host_ms: f64,
+    pub device_ms: f64,
+    /// J improvement from the polish stage (0 when disabled).
+    pub polish_improvement: f64,
+    /// The mapping, when requested.
+    pub mapping: Option<Vec<crate::Block>>,
+}
+
+/// Router policy: which algorithm serves a request that did not pin one.
+/// Small graphs get the quality flavor, large ones the throughput flavor
+/// (threshold = the suite's size-class boundary).
+pub fn route(n: usize, pinned: Option<Algorithm>) -> Algorithm {
+    if let Some(a) = pinned {
+        return a;
+    }
+    if n <= 60_000 {
+        Algorithm::GpuHmUltra
+    } else {
+        Algorithm::GpuIm
+    }
+}
+
+/// Service metrics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceMetrics {
+    pub requests: u64,
+    pub failures: u64,
+    pub total_host_ms: f64,
+    pub total_device_ms: f64,
+    pub per_algorithm: std::collections::BTreeMap<&'static str, u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_prefers_quality_for_small() {
+        assert_eq!(route(10_000, None), Algorithm::GpuHmUltra);
+        assert_eq!(route(1_000_000, None), Algorithm::GpuIm);
+        assert_eq!(route(10, Some(Algorithm::IntMapS)), Algorithm::IntMapS);
+    }
+}

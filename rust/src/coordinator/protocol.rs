@@ -1,0 +1,188 @@
+//! Line protocol for the TCP front-end.
+//!
+//! Requests are single lines of space-separated `key=value` tokens:
+//!
+//! ```text
+//! map instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.03 seed=1 polish=1
+//! metrics
+//! ping
+//! ```
+//!
+//! Responses are single lines: `ok key=value …` or `err message=…`.
+
+use super::{MapRequest, MapResponse, ServiceMetrics};
+use crate::algo::Algorithm;
+use anyhow::{bail, Result};
+
+/// Parsed client command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Map(MapRequest),
+    Metrics,
+    Ping,
+}
+
+/// Parse one request line.
+pub fn parse_command(line: &str) -> Result<Command> {
+    let mut tokens = line.split_whitespace();
+    let verb = tokens.next().unwrap_or("");
+    match verb {
+        "ping" => Ok(Command::Ping),
+        "metrics" => Ok(Command::Metrics),
+        "map" => {
+            let mut req = MapRequest::default();
+            for tok in tokens {
+                let Some((k, v)) = tok.split_once('=') else {
+                    bail!("bad token `{tok}` (expected key=value)");
+                };
+                match k {
+                    "instance" => req.instance = v.to_string(),
+                    "algorithm" => {
+                        req.algorithm = if v == "auto" {
+                            None
+                        } else {
+                            Some(
+                                Algorithm::from_name(v)
+                                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm {v}"))?,
+                            )
+                        }
+                    }
+                    "hierarchy" => req.hierarchy = v.to_string(),
+                    "distance" => req.distance = v.to_string(),
+                    "eps" => req.eps = v.parse()?,
+                    "seed" => req.seed = v.parse()?,
+                    "polish" => req.polish = v == "1" || v == "true",
+                    "mapping" => req.return_mapping = v == "1" || v == "true",
+                    other => bail!("unknown key `{other}`"),
+                }
+            }
+            if req.instance.is_empty() {
+                bail!("map requires instance=…");
+            }
+            Ok(Command::Map(req))
+        }
+        "" => bail!("empty command"),
+        other => bail!("unknown verb `{other}`"),
+    }
+}
+
+/// Render a map response line.
+pub fn render_response(r: &MapResponse) -> String {
+    let mut s = format!(
+        "ok id={} algorithm={} n={} k={} j={:.3} imbalance={:.5} host_ms={:.3} device_ms={:.3} polish_dj={:.3}",
+        r.id, r.algorithm.name(), r.n, r.k, r.comm_cost, r.imbalance, r.host_ms, r.device_ms,
+        r.polish_improvement
+    );
+    if let Some(m) = &r.mapping {
+        s.push_str(" mapping=");
+        let parts: Vec<String> = m.iter().map(|b| b.to_string()).collect();
+        s.push_str(&parts.join(","));
+    }
+    s
+}
+
+/// Render a metrics line.
+pub fn render_metrics(m: &ServiceMetrics) -> String {
+    let per: Vec<String> = m.per_algorithm.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+    format!(
+        "ok requests={} failures={} host_ms={:.1} device_ms={:.1} per_algorithm={}",
+        m.requests,
+        m.failures,
+        m.total_host_ms,
+        m.total_device_ms,
+        per.join(";")
+    )
+}
+
+/// Render an error line.
+pub fn render_error(e: &anyhow::Error) -> String {
+    format!("err message={}", format!("{e}").replace(['\n', ' '], "_"))
+}
+
+/// Serve the protocol over TCP (one thread per connection) until the
+/// process exits. Binds `addr` and prints the bound address.
+pub fn serve_tcp(service: std::sync::Arc<super::service::Service>, addr: &str) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("heipa coordinator listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let svc = service.clone();
+        std::thread::spawn(move || {
+            let peer = stream.peer_addr().ok();
+            let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+            let mut writer = stream;
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                let reply = match parse_command(&line) {
+                    Ok(Command::Ping) => "ok pong=1".to_string(),
+                    Ok(Command::Metrics) => render_metrics(&svc.metrics()),
+                    Ok(Command::Map(req)) => match svc.submit(req) {
+                        Ok(resp) => render_response(&resp),
+                        Err(e) => render_error(&e),
+                    },
+                    Err(e) => render_error(&e),
+                };
+                if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
+                    break;
+                }
+            }
+            let _ = peer;
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_map_command() {
+        let cmd = parse_command(
+            "map instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.05 seed=7 polish=1",
+        )
+        .unwrap();
+        let Command::Map(req) = cmd else { panic!() };
+        assert_eq!(req.instance, "rgg15");
+        assert_eq!(req.algorithm, Some(Algorithm::GpuIm));
+        assert_eq!(req.eps, 0.05);
+        assert!(req.polish);
+    }
+
+    #[test]
+    fn auto_algorithm_unpins() {
+        let Command::Map(req) = parse_command("map instance=x algorithm=auto").unwrap() else {
+            panic!()
+        };
+        assert_eq!(req.algorithm, None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_command("").is_err());
+        assert!(parse_command("frob instance=x").is_err());
+        assert!(parse_command("map").is_err());
+        assert!(parse_command("map instance=x bad").is_err());
+        assert!(parse_command("map instance=x algorithm=nope").is_err());
+    }
+
+    #[test]
+    fn response_rendering_roundtrips_keys() {
+        let r = MapResponse {
+            id: 3,
+            algorithm: Algorithm::GpuHm,
+            n: 10,
+            k: 4,
+            comm_cost: 123.5,
+            imbalance: 0.01,
+            host_ms: 5.0,
+            device_ms: 0.2,
+            polish_improvement: 1.0,
+            mapping: Some(vec![0, 1, 2, 3]),
+        };
+        let line = render_response(&r);
+        assert!(line.starts_with("ok id=3 algorithm=gpu-hm"));
+        assert!(line.contains("mapping=0,1,2,3"));
+    }
+}

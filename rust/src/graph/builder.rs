@@ -1,0 +1,165 @@
+//! Incremental graph construction: collect undirected edges, then build a
+//! deduplicated, sorted, symmetric [`CsrGraph`]. Parallel edges are fused
+//! and their weights summed (the contraction semantics from §2.1).
+
+use super::CsrGraph;
+use crate::{EWeight, VWeight, Vertex};
+
+/// Builder for [`CsrGraph`]; add each undirected edge once.
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(Vertex, Vertex, EWeight)>,
+    vw: Vec<VWeight>,
+}
+
+impl GraphBuilder {
+    /// `n` vertices, all with weight 1 until changed via [`Self::set_vweight`].
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new(), vw: vec![1; n] }
+    }
+
+    pub fn with_edge_capacity(n: usize, m: usize) -> Self {
+        let mut b = Self::new(n);
+        b.edges.reserve(m);
+        b
+    }
+
+    /// Add undirected edge `{u, v}` with weight `w`. Self loops are
+    /// silently dropped (they carry no mapping cost: `D_xx` terms are
+    /// constant under any Π). Duplicate edges are summed at build time.
+    pub fn add_edge(&mut self, u: Vertex, v: Vertex, w: EWeight) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        if u == v {
+            return;
+        }
+        self.edges.push((u, v, w));
+    }
+
+    pub fn set_vweight(&mut self, v: Vertex, w: VWeight) {
+        self.vw[v as usize] = w;
+    }
+
+    pub fn set_all_vweights(&mut self, vw: Vec<VWeight>) {
+        assert_eq!(vw.len(), self.n);
+        self.vw = vw;
+    }
+
+    /// Build the CSR graph: symmetrize, sort, fuse duplicates.
+    pub fn build(self) -> CsrGraph {
+        let n = self.n;
+        // Count directed degrees (upper bound, before dedup).
+        let mut deg = vec![0u32; n];
+        for &(u, v, _) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut xadj = vec![0u32; n + 1];
+        for v in 0..n {
+            xadj[v + 1] = xadj[v] + deg[v];
+        }
+        let total = xadj[n] as usize;
+        let mut adj = vec![0 as Vertex; total];
+        let mut ew = vec![0.0; total];
+        let mut pos = xadj.clone();
+        for &(u, v, w) in &self.edges {
+            let pu = pos[u as usize] as usize;
+            adj[pu] = v;
+            ew[pu] = w;
+            pos[u as usize] += 1;
+            let pv = pos[v as usize] as usize;
+            adj[pv] = u;
+            ew[pv] = w;
+            pos[v as usize] += 1;
+        }
+        // Per-vertex sort + dedup (sum weights of parallel edges).
+        let mut nadj = Vec::with_capacity(total);
+        let mut new_ew = Vec::with_capacity(total);
+        let mut nxadj = vec![0u32; n + 1];
+        let mut scratch: Vec<(Vertex, EWeight)> = Vec::new();
+        for v in 0..n {
+            scratch.clear();
+            for i in xadj[v] as usize..xadj[v + 1] as usize {
+                scratch.push((adj[i], ew[i]));
+            }
+            scratch.sort_unstable_by_key(|&(t, _)| t);
+            let mut i = 0;
+            while i < scratch.len() {
+                let t = scratch[i].0;
+                let mut w = 0.0;
+                while i < scratch.len() && scratch[i].0 == t {
+                    w += scratch[i].1;
+                    i += 1;
+                }
+                nadj.push(t);
+                new_ew.push(w);
+            }
+            nxadj[v + 1] = nadj.len() as u32;
+        }
+        CsrGraph { xadj: nxadj, adj: nadj, ew: new_ew, vw: self.vw }
+    }
+}
+
+/// Build directly from a deduplicated undirected edge list.
+pub fn from_edges(n: usize, edges: &[(Vertex, Vertex, EWeight)], vw: Option<Vec<VWeight>>) -> CsrGraph {
+    let mut b = GraphBuilder::with_edge_capacity(n, edges.len());
+    if let Some(vw) = vw {
+        b.set_all_vweights(vw);
+    }
+    for &(u, v, w) in edges {
+        b.add_edge(u, v, w);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_edges_are_summed() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 0, 2.5);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.find_edge(0, 1), Some(3.5));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 0, 9.0);
+        b.add_edge(0, 1, 1.0);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn isolated_vertices_allowed() {
+        let b = GraphBuilder::new(5);
+        let g = b.build();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn vertex_weights_preserved() {
+        let mut b = GraphBuilder::new(3);
+        b.set_vweight(1, 7);
+        b.add_edge(0, 2, 1.0);
+        let g = b.build();
+        assert_eq!(g.vw, vec![1, 7, 1]);
+        assert_eq!(g.total_vweight(), 9);
+    }
+
+    #[test]
+    fn from_edges_roundtrip() {
+        let g = from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 1.0)], None);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,320 @@
+//! Synthetic task-graph generators.
+//!
+//! The paper's benchmark set (Table 1) mixes SuiteSparse FEM/circuit
+//! matrices, Walshaw archive meshes, DIMACS meshes, road networks, random
+//! geometric graphs (`rgg23/24`) and Delaunay triangulations (`del23/24`).
+//! Those archives are unavailable offline and the largest graphs do not
+//! fit this host, so we generate the same *families* at scaled sizes (see
+//! DESIGN.md §1). `rgg*` uses the paper's exact radius rule
+//! `0.55·sqrt(ln n / n)`.
+
+mod suite;
+pub use suite::{generate_by_name, instance_by_name, paper_suite, smoke_suite, InstanceSpec, SizeClass};
+
+use super::{builder::GraphBuilder, CsrGraph};
+use crate::rng::Rng;
+use crate::Vertex;
+
+/// 2D grid mesh `w × h`; `torus` wraps both dimensions. Walshaw-style FEM
+/// stand-in (unit weights, degree ≤ 4).
+pub fn grid2d(w: usize, h: usize, torus: bool) -> CsrGraph {
+    let n = w * h;
+    let mut b = GraphBuilder::with_edge_capacity(n, 2 * n);
+    let id = |x: usize, y: usize| (y * w + x) as Vertex;
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                b.add_edge(id(x, y), id(x + 1, y), 1.0);
+            } else if torus && w > 2 {
+                b.add_edge(id(x, y), id(0, y), 1.0);
+            }
+            if y + 1 < h {
+                b.add_edge(id(x, y), id(x, y + 1), 1.0);
+            } else if torus && h > 2 {
+                b.add_edge(id(x, y), id(x, 0), 1.0);
+            }
+        }
+    }
+    b.build()
+}
+
+/// 3D grid mesh `w × h × d` (DIMACS-style numerical mesh stand-in).
+pub fn grid3d(w: usize, h: usize, d: usize) -> CsrGraph {
+    let n = w * h * d;
+    let mut b = GraphBuilder::with_edge_capacity(n, 3 * n);
+    let id = |x: usize, y: usize, z: usize| (z * w * h + y * w + x) as Vertex;
+    for z in 0..d {
+        for y in 0..h {
+            for x in 0..w {
+                if x + 1 < w {
+                    b.add_edge(id(x, y, z), id(x + 1, y, z), 1.0);
+                }
+                if y + 1 < h {
+                    b.add_edge(id(x, y, z), id(x, y + 1, z), 1.0);
+                }
+                if z + 1 < d {
+                    b.add_edge(id(x, y, z), id(x, y, z + 1), 1.0);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// Random geometric graph: `n` uniform points in the unit square, edge if
+/// distance < `radius`. The paper's rgg instances use
+/// `radius = 0.55·sqrt(ln n / n)` — see [`rgg_paper_radius`].
+pub fn rgg(n: usize, radius: f64, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    // Uniform grid hashing for neighbor search.
+    let cell = radius.max(1e-9);
+    let cells = (1.0 / cell).ceil().max(1.0) as usize;
+    let cell_of = |p: (f64, f64)| {
+        let cx = ((p.0 / cell) as usize).min(cells - 1);
+        let cy = ((p.1 / cell) as usize).min(cells - 1);
+        cy * cells + cx
+    };
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); cells * cells];
+    for (i, &p) in pts.iter().enumerate() {
+        buckets[cell_of(p)].push(i as u32);
+    }
+    let r2 = radius * radius;
+    let mut b = GraphBuilder::new(n);
+    for (i, &p) in pts.iter().enumerate() {
+        let cx = ((p.0 / cell) as usize).min(cells - 1) as isize;
+        let cy = ((p.1 / cell) as usize).min(cells - 1) as isize;
+        for dy in -1..=1isize {
+            for dx in -1..=1isize {
+                let (nx, ny) = (cx + dx, cy + dy);
+                if nx < 0 || ny < 0 || nx >= cells as isize || ny >= cells as isize {
+                    continue;
+                }
+                for &j in &buckets[ny as usize * cells + nx as usize] {
+                    if (j as usize) <= i {
+                        continue;
+                    }
+                    let q = pts[j as usize];
+                    let (ddx, ddy) = (p.0 - q.0, p.1 - q.1);
+                    if ddx * ddx + ddy * ddy < r2 {
+                        b.add_edge(i as Vertex, j, 1.0);
+                    }
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// The paper's radius rule for rgg instances.
+pub fn rgg_paper_radius(n: usize) -> f64 {
+    0.55 * ((n as f64).ln() / n as f64).sqrt()
+}
+
+/// Delaunay-like triangulation: jittered `s × s` grid points, each cell
+/// split into two triangles (random diagonal). Planar, mesh-like,
+/// degree ≈ 6 — the structural profile of the paper's `del*` instances
+/// without implementing a full Delaunay kernel.
+pub fn delaunay_like(s: usize, seed: u64) -> CsrGraph {
+    let n = s * s;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(n, 3 * n);
+    let id = |x: usize, y: usize| (y * s + x) as Vertex;
+    for y in 0..s {
+        for x in 0..s {
+            if x + 1 < s {
+                b.add_edge(id(x, y), id(x + 1, y), 1.0);
+            }
+            if y + 1 < s {
+                b.add_edge(id(x, y), id(x, y + 1), 1.0);
+            }
+            if x + 1 < s && y + 1 < s {
+                // Random diagonal orientation per cell.
+                if rng.next_u64() & 1 == 0 {
+                    b.add_edge(id(x, y), id(x + 1, y + 1), 1.0);
+                } else {
+                    b.add_edge(id(x + 1, y), id(x, y + 1), 1.0);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// 9-point stencil matrix graph with varying communication volumes —
+/// SuiteSparse FEM-matrix stand-in (denser rows, weighted entries).
+pub fn stencil9(w: usize, h: usize, seed: u64) -> CsrGraph {
+    let n = w * h;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(n, 4 * n);
+    let id = |x: usize, y: usize| (y * w + x) as Vertex;
+    for y in 0..h {
+        for x in 0..w {
+            let deltas: [(isize, isize); 4] = [(1, 0), (0, 1), (1, 1), (1, -1)];
+            for (dx, dy) in deltas {
+                let (nx, ny) = (x as isize + dx, y as isize + dy);
+                if nx >= 0 && ny >= 0 && (nx as usize) < w && (ny as usize) < h {
+                    let wgt = 1.0 + rng.below(8) as f64;
+                    b.add_edge(id(x, y), id(nx as usize, ny as usize), wgt);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// Road-network-like graph: a sparse grid with random edge deletions and a
+/// few long-range "highway" shortcuts; low average degree (≈2.5), long
+/// diameter — the profile of `deu`/`europe_osm`.
+pub fn road_like(w: usize, h: usize, seed: u64) -> CsrGraph {
+    let n = w * h;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(n, 2 * n);
+    let id = |x: usize, y: usize| (y * w + x) as Vertex;
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w && rng.f64() < 0.72 {
+                b.add_edge(id(x, y), id(x + 1, y), 1.0);
+            }
+            if y + 1 < h && rng.f64() < 0.72 {
+                b.add_edge(id(x, y), id(x, y + 1), 1.0);
+            }
+        }
+    }
+    // Highways: connect random distant pairs along rows.
+    let highways = (n / 64).max(1);
+    for _ in 0..highways {
+        let y = rng.below_usize(h);
+        let x1 = rng.below_usize(w);
+        let x2 = rng.below_usize(w);
+        if x1 != x2 {
+            b.add_edge(id(x1, y), id(x2, y), 2.0);
+        }
+    }
+    b.build()
+}
+
+/// FEM-like 2D mesh with circular holes (Walshaw `fe_ocean`-style
+/// irregular boundary): grid2d with disks removed, remapped to compact ids.
+pub fn mesh_with_holes(w: usize, h: usize, holes: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut removed = vec![false; w * h];
+    for _ in 0..holes {
+        let cx = rng.below_usize(w) as f64;
+        let cy = rng.below_usize(h) as f64;
+        let r = (w.min(h) as f64) * (0.04 + 0.06 * rng.f64());
+        for y in 0..h {
+            for x in 0..w {
+                let (dx, dy) = (x as f64 - cx, y as f64 - cy);
+                if dx * dx + dy * dy < r * r {
+                    removed[y * w + x] = true;
+                }
+            }
+        }
+    }
+    let mut remap = vec![u32::MAX; w * h];
+    let mut n = 0u32;
+    for (i, &r) in removed.iter().enumerate() {
+        if !r {
+            remap[i] = n;
+            n += 1;
+        }
+    }
+    let mut b = GraphBuilder::new(n as usize);
+    for y in 0..h {
+        for x in 0..w {
+            let i = y * w + x;
+            if removed[i] {
+                continue;
+            }
+            if x + 1 < w && !removed[i + 1] {
+                b.add_edge(remap[i], remap[i + 1], 1.0);
+            }
+            if y + 1 < h && !removed[i + w] {
+                b.add_edge(remap[i], remap[i + w], 1.0);
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_counts() {
+        let g = grid2d(5, 4, false);
+        assert_eq!(g.n(), 20);
+        assert_eq!(g.m(), 4 * 4 + 5 * 3); // horizontal + vertical
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn torus_regular_degree() {
+        let g = grid2d(6, 6, true);
+        for v in 0..g.n() {
+            assert_eq!(g.degree(v as u32), 4);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn grid3d_counts() {
+        let g = grid3d(3, 3, 3);
+        assert_eq!(g.n(), 27);
+        assert_eq!(g.m(), 3 * (2 * 3 * 3)); // 2*3*3 edges per direction
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rgg_has_paper_degree_profile() {
+        let n = 4_096;
+        let g = rgg(n, rgg_paper_radius(n), 1);
+        g.validate().unwrap();
+        // Expected average degree ≈ n·π·r² ≈ 0.3025·π·ln n ≈ 7.9.
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!(avg > 4.0 && avg < 14.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn delaunay_like_is_planarish() {
+        let g = delaunay_like(32, 2);
+        g.validate().unwrap();
+        // Planar: m ≤ 3n − 6.
+        assert!(g.m() <= 3 * g.n() - 6);
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!(avg > 4.0 && avg < 6.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn stencil9_weighted() {
+        let g = stencil9(16, 16, 3);
+        g.validate().unwrap();
+        assert!(g.ew.iter().any(|&w| w > 1.0));
+    }
+
+    #[test]
+    fn road_like_sparse() {
+        let g = road_like(64, 64, 4);
+        g.validate().unwrap();
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!(avg < 3.5, "avg degree {avg}");
+    }
+
+    #[test]
+    fn mesh_with_holes_smaller_than_grid() {
+        let g = mesh_with_holes(40, 40, 3, 5);
+        g.validate().unwrap();
+        assert!(g.n() < 1_600);
+        assert!(g.n() > 800);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = rgg(500, 0.07, 9);
+        let b = rgg(500, 0.07, 9);
+        assert_eq!(a.adj, b.adj);
+        assert_eq!(a.xadj, b.xadj);
+    }
+}

@@ -1,0 +1,153 @@
+//! The benchmark-instance registry — Table 1 of the paper, scaled.
+//!
+//! Three groups mirror the paper's table: *SuiteSparse* (FEM/circuit
+//! matrices → weighted stencils & meshes), *Other* (DIMACS meshes, road
+//! networks, rgg/del random instances) and *Walshaw* (FEM meshes). Sizes
+//! are scaled ≈64× down (this host has one core; the paper used 16 384);
+//! the scaling factor is uniform so relative instance difficulty is kept.
+
+use super::*;
+
+/// Size class, used by Table 2 ("small" < 1 M vertices in the paper;
+/// scaled threshold here is 64 k).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeClass {
+    Small,
+    Large,
+}
+
+/// A named generator invocation.
+#[derive(Clone, Debug)]
+pub struct InstanceSpec {
+    pub name: &'static str,
+    /// Paper group: "suitesparse", "other", "walshaw".
+    pub group: &'static str,
+    /// Which paper instance this stands in for.
+    pub stand_in_for: &'static str,
+}
+
+impl InstanceSpec {
+    pub fn generate(&self) -> CsrGraph {
+        generate_by_name(self.name)
+    }
+
+    pub fn size_class(&self) -> SizeClass {
+        // Classify by vertex count threshold 60k (paper: 1M, scaled).
+        match self.name {
+            "rgg16" | "rgg17" | "del16" | "del17" | "road_deu" | "road_eu" | "grid3d_large"
+            | "wal_auto" => SizeClass::Large,
+            _ => SizeClass::Small,
+        }
+    }
+}
+
+/// Generate an instance by registry name.
+pub fn generate_by_name(name: &str) -> CsrGraph {
+    match name {
+        // --- SuiteSparse stand-ins (weighted matrix graphs, ~1.5–4k wide stencils) ---
+        "sten_cop20k" => stencil9(125, 125, 101),     // cop20k_A
+        "sten_cubes" => stencil9(126, 126, 102),      // 2cubes_sphere
+        "sten_thermo" => grid2d(160, 100, false),     // thermomech_TC (sparse)
+        "sten_cfd2" => stencil9(139, 139, 104),       // cfd2
+        "sten_bone" => stencil9(141, 141, 105),       // boneS01 (dense rows)
+        "sten_dubcova" => stencil9(151, 151, 106),    // Dubcova3
+        "sten_bmwcra" => stencil9(152, 152, 107),     // bmwcra_1
+        "sten_g2circ" => road_like(153, 153, 108),    // G2_circuit (very sparse)
+        "sten_shipsec" => stencil9(167, 167, 109),    // shipsec5
+        "sten_cont300" => grid2d(168, 168, false),    // cont-300
+        // --- Walshaw stand-ins (FEM meshes) ---
+        "wal_598a" => mesh_with_holes(145, 145, 4, 201), // 598a
+        "wal_feocean" => mesh_with_holes(165, 165, 8, 202), // fe_ocean
+        "wal_144" => grid3d(33, 33, 22),              // 144
+        "wal_wave" => grid3d(35, 35, 20),             // wave
+        "wal_m14b" => grid3d(38, 38, 26),             // m14b
+        "wal_auto" => grid3d(48, 48, 30),             // auto
+        // --- Other: DIMACS / road / synthetic ---
+        "afshell_s" => stencil9(177, 178, 301),       // afshell9
+        "thermal2_s" => delaunay_like(139, 302),      // thermal2
+        "nlr_s" => delaunay_like(160, 303),           // nlr
+        "road_deu" => road_like(300, 280, 304),       // deu
+        "road_eu" => road_like(540, 520, 305),        // europe_osm
+        "del15" => delaunay_like(181, 306),           // del23 (scaled)
+        "del16" => delaunay_like(256, 307),           // del24 (scaled)
+        "del17" => delaunay_like(362, 308),           // (extra density point)
+        "rgg15" => rgg(1 << 15, rgg_paper_radius(1 << 15), 309), // rgg23 (scaled)
+        "rgg16" => rgg(1 << 16, rgg_paper_radius(1 << 16), 310), // rgg24 (scaled)
+        "rgg17" => rgg(1 << 17, rgg_paper_radius(1 << 17), 311), // (extra)
+        "grid3d_large" => grid3d(64, 64, 32),         // large DIMACS mesh
+        other => panic!("unknown instance {other}"),
+    }
+}
+
+/// The full paper suite (28 instances; the paper uses 25 graphs × 6
+/// hierarchies = 150 instance pairs — we match the graph count closely).
+pub fn paper_suite() -> Vec<InstanceSpec> {
+    let mk = |name, group, stand_in_for| InstanceSpec { name, group, stand_in_for };
+    vec![
+        mk("sten_cop20k", "suitesparse", "cop20k_A"),
+        mk("sten_cubes", "suitesparse", "2cubes_sphere"),
+        mk("sten_thermo", "suitesparse", "thermomech_TC"),
+        mk("sten_cfd2", "suitesparse", "cfd2"),
+        mk("sten_bone", "suitesparse", "boneS01"),
+        mk("sten_dubcova", "suitesparse", "Dubcova3"),
+        mk("sten_bmwcra", "suitesparse", "bmwcra_1"),
+        mk("sten_g2circ", "suitesparse", "G2_circuit"),
+        mk("sten_shipsec", "suitesparse", "shipsec5"),
+        mk("sten_cont300", "suitesparse", "cont-300"),
+        mk("wal_598a", "walshaw", "598a"),
+        mk("wal_feocean", "walshaw", "fe_ocean"),
+        mk("wal_144", "walshaw", "144"),
+        mk("wal_wave", "walshaw", "wave"),
+        mk("wal_m14b", "walshaw", "m14b"),
+        mk("wal_auto", "walshaw", "auto"),
+        mk("afshell_s", "other", "afshell9"),
+        mk("thermal2_s", "other", "thermal2"),
+        mk("nlr_s", "other", "nlr"),
+        mk("road_deu", "other", "deu"),
+        mk("road_eu", "other", "europe_osm"),
+        mk("del15", "other", "del23"),
+        mk("del16", "other", "del24"),
+        mk("rgg15", "other", "rgg23"),
+        mk("rgg16", "other", "rgg24"),
+    ]
+}
+
+/// A quick sub-suite for smoke tests and CI-style runs.
+pub fn smoke_suite() -> Vec<InstanceSpec> {
+    paper_suite()
+        .into_iter()
+        .filter(|s| matches!(s.name, "sten_cop20k" | "wal_598a" | "del15" | "rgg15" | "road_deu"))
+        .collect()
+}
+
+/// Look up a spec by name.
+pub fn instance_by_name(name: &str) -> Option<InstanceSpec> {
+    paper_suite().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_suite_instances_generate_and_validate() {
+        for spec in paper_suite() {
+            let g = spec.generate();
+            assert!(g.n() > 1_000, "{} too small: {}", spec.name, g.n());
+            g.validate().unwrap_or_else(|e| panic!("{}: {}", spec.name, e));
+        }
+    }
+
+    #[test]
+    fn suite_has_both_size_classes() {
+        let suite = paper_suite();
+        assert!(suite.iter().any(|s| s.size_class() == SizeClass::Small));
+        assert!(suite.iter().any(|s| s.size_class() == SizeClass::Large));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(instance_by_name("rgg15").is_some());
+        assert!(instance_by_name("nope").is_none());
+    }
+}

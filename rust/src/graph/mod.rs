@@ -1,0 +1,245 @@
+//! Graphs: CSR storage, the extended CSR edge list, generators, IO,
+//! GPU-style subgraph extraction (paper Alg. 1), and validation.
+
+pub mod builder;
+pub mod gen;
+pub mod io;
+pub mod subgraph;
+
+use crate::{EWeight, VWeight, Vertex};
+
+/// An undirected graph in Compressed Sparse Row format (paper §3.4).
+///
+/// Every undirected edge `{u, v}` is stored twice (once per direction), so
+/// `adj.len() == 2 m`. Adjacency lists are sorted by target vertex.
+#[derive(Clone, Debug, Default)]
+pub struct CsrGraph {
+    /// Offset array `O` of size `n + 1`.
+    pub xadj: Vec<u32>,
+    /// Edge targets `E_v`, size `2m`.
+    pub adj: Vec<Vertex>,
+    /// Edge weights `E_w`, size `2m`.
+    pub ew: Vec<EWeight>,
+    /// Vertex weights `c(v)`, size `n`.
+    pub vw: Vec<VWeight>,
+}
+
+impl CsrGraph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.vw.len()
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Number of directed edge slots (`2m`).
+    #[inline]
+    pub fn num_directed(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
+    }
+
+    /// Neighbor targets of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        &self.adj[self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize]
+    }
+
+    /// Neighbor targets and edge weights of `v`.
+    #[inline]
+    pub fn neighbors_w(&self, v: Vertex) -> (&[Vertex], &[EWeight]) {
+        let r = self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize;
+        (&self.adj[r.clone()], &self.ew[r])
+    }
+
+    /// Total vertex weight `c(V)`.
+    pub fn total_vweight(&self) -> VWeight {
+        self.vw.iter().sum()
+    }
+
+    /// Total edge weight `ω(E)` (undirected; each edge counted once).
+    pub fn total_eweight(&self) -> EWeight {
+        self.ew.iter().sum::<EWeight>() / 2.0
+    }
+
+    /// Build the extended-CSR source array `E_u` (paper §4, "Extended CSR
+    /// Format"): `eu[i]` is the *source* endpoint of directed edge slot
+    /// `i`, enabling flat edge-parallel kernels without nested loops.
+    pub fn edge_sources(&self) -> Vec<Vertex> {
+        let mut eu = vec![0 as Vertex; self.adj.len()];
+        for v in 0..self.n() {
+            for i in self.xadj[v] as usize..self.xadj[v + 1] as usize {
+                eu[i] = v as Vertex;
+            }
+        }
+        eu
+    }
+
+    /// Maximum vertex degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|v| self.degree(v as Vertex)).max().unwrap_or(0)
+    }
+
+    /// Structural invariants: monotone offsets, in-range targets, no self
+    /// loops, sorted adjacency, symmetric with matching weights.
+    /// Used by tests and by `debug_assert!`s after coarsening/subgraphs.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.xadj.len() != n + 1 {
+            return Err(format!("xadj len {} != n+1 {}", self.xadj.len(), n + 1));
+        }
+        if *self.xadj.last().unwrap() as usize != self.adj.len() {
+            return Err("xadj[n] != adj.len()".into());
+        }
+        if self.ew.len() != self.adj.len() {
+            return Err("ew.len() != adj.len()".into());
+        }
+        for v in 0..n {
+            if self.xadj[v] > self.xadj[v + 1] {
+                return Err(format!("xadj not monotone at {v}"));
+            }
+            let nbrs = self.neighbors(v as Vertex);
+            for (i, &u) in nbrs.iter().enumerate() {
+                if u as usize >= n {
+                    return Err(format!("edge target {u} out of range at vertex {v}"));
+                }
+                if u as usize == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if i > 0 && nbrs[i - 1] >= u {
+                    return Err(format!("adjacency of {v} not strictly sorted"));
+                }
+            }
+        }
+        // Symmetry via binary search on the (sorted) reverse adjacency.
+        for v in 0..n {
+            let (nbrs, ws) = self.neighbors_w(v as Vertex);
+            for (&u, &w) in nbrs.iter().zip(ws) {
+                match self.find_edge(u, v as Vertex) {
+                    Some(wrev) if (wrev - w).abs() <= 1e-9 * w.abs().max(1.0) => {}
+                    Some(wrev) => {
+                        return Err(format!("asymmetric weight {v}-{u}: {w} vs {wrev}"));
+                    }
+                    None => return Err(format!("missing reverse edge {u}->{v}")),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight of edge `{u, v}` if present (binary search, adjacency sorted).
+    pub fn find_edge(&self, u: Vertex, v: Vertex) -> Option<EWeight> {
+        let nbrs = self.neighbors(u);
+        nbrs.binary_search(&v).ok().map(|i| self.ew[self.xadj[u as usize] as usize + i])
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} m={} maxdeg={} c(V)={} w(E)={:.0}",
+            self.n(),
+            self.m(),
+            self.max_degree(),
+            self.total_vweight(),
+            self.total_eweight()
+        )
+    }
+}
+
+/// Flat edge-list view (the paper's `𝔼`): directed edge `i` is
+/// `(eu[i], adj[i], ew[i])`. Constructed once per graph and reused by all
+/// edge-parallel kernels.
+pub struct EdgeList {
+    /// Source endpoint per directed edge slot.
+    pub eu: Vec<Vertex>,
+}
+
+impl EdgeList {
+    pub fn build(g: &CsrGraph) -> Self {
+        EdgeList { eu: g.edge_sources() }
+    }
+
+    /// Device-kernel flavor: vertex-parallel fill of the source array
+    /// (each vertex owns its disjoint CSR range).
+    pub fn build_par(pool: &crate::par::Pool, g: &CsrGraph) -> Self {
+        let mut eu = vec![0 as Vertex; g.adj.len()];
+        let ptr = crate::par::SharedMut::new(&mut eu);
+        pool.parallel_for(g.n(), |v| {
+            for i in g.xadj[v] as usize..g.xadj[v + 1] as usize {
+                // SAFETY: CSR ranges are disjoint per vertex.
+                unsafe { ptr.write(i, v as Vertex) };
+            }
+        });
+        EdgeList { eu }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.eu.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.eu.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder::GraphBuilder;
+    use super::*;
+
+    fn triangle() -> CsrGraph {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 2.0);
+        b.add_edge(0, 2, 3.0);
+        b.build()
+    }
+
+    #[test]
+    fn triangle_structure() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn find_edge_weights() {
+        let g = triangle();
+        assert_eq!(g.find_edge(0, 1), Some(1.0));
+        assert_eq!(g.find_edge(2, 1), Some(2.0));
+        assert_eq!(g.find_edge(0, 2), Some(3.0));
+        assert_eq!(g.find_edge(1, 1), None);
+    }
+
+    #[test]
+    fn edge_sources_align_with_csr() {
+        let g = triangle();
+        let el = EdgeList::build(&g);
+        assert_eq!(el.len(), 6);
+        for v in 0..g.n() as Vertex {
+            for i in g.xadj[v as usize] as usize..g.xadj[v as usize + 1] as usize {
+                assert_eq!(el.eu[i], v);
+            }
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let g = triangle();
+        assert_eq!(g.total_vweight(), 3);
+        assert!((g.total_eweight() - 6.0).abs() < 1e-12);
+    }
+}

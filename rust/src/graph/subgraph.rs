@@ -1,0 +1,252 @@
+//! Subgraph extraction on the device — paper Algorithm 1.
+//!
+//! Given a partition Π, build for each block the induced subgraph entirely
+//! with data-parallel primitives (three `parallel_reduce`s, one
+//! `parallel_scan` for the remap `M : [n] → [n']`, a degree pass + scan
+//! for the new offsets, then an edge-insertion pass). This mirrors the
+//! paper's GPU implementation; a serial all-blocks-at-once variant is
+//! provided for the CPU baselines and as a differential-testing oracle.
+
+use super::CsrGraph;
+use crate::par::Pool;
+use crate::{Block, Vertex};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// A subgraph plus the vertex correspondence to its parent.
+pub struct Subgraph {
+    pub graph: CsrGraph,
+    /// `local_to_parent[v'] = v`: parent vertex of each subgraph vertex.
+    pub local_to_parent: Vec<Vertex>,
+}
+
+/// Paper Algorithm 1: build the induced subgraph of block `k'` using
+/// bulk-parallel kernels.
+pub fn build_subgraph(pool: &Pool, g: &CsrGraph, part: &[Block], block: Block) -> Subgraph {
+    let n = g.n();
+    debug_assert_eq!(part.len(), n);
+
+    // Phase 1: n', m' (directed), w' via parallel_reduce.
+    let n_sub = pool.reduce_sum_u64(n, |v| (part[v] == block) as u64) as usize;
+    // (w' is not needed by the construction itself; the caller computes it.)
+
+    // Phase 2: remap M via parallel_scan over the indicator.
+    let map = pool.scan_exclusive(n, |v| (part[v] == block) as u64);
+
+    // Phase 3a: new degrees, then offsets by prefix sum.
+    let deg = {
+        let deg: Vec<AtomicU32> = (0..n_sub).map(|_| AtomicU32::new(0)).collect();
+        pool.parallel_for(n, |v| {
+            if part[v] == block {
+                let mut d = 0u32;
+                for &u in g.neighbors(v as Vertex) {
+                    d += (part[u as usize] == block) as u32;
+                }
+                deg[map[v] as usize].store(d, Ordering::Relaxed);
+            }
+        });
+        deg
+    };
+    let xadj_scan = pool.scan_exclusive(n_sub, |v| deg[v].load(Ordering::Relaxed) as u64);
+    let m_sub_dir = xadj_scan[n_sub] as usize;
+
+    // Phase 3b: insert edges. Each vertex owns a disjoint output range, so
+    // plain (unsynchronized) writes through a shared pointer are safe.
+    let mut adj = vec![0 as Vertex; m_sub_dir];
+    let mut ew = vec![0.0f64; m_sub_dir];
+    let mut local_to_parent = vec![0 as Vertex; n_sub];
+    {
+        let adj_ptr = crate::par::SharedMut::new(&mut adj);
+        let ew_ptr = crate::par::SharedMut::new(&mut ew);
+        let l2p_ptr = crate::par::SharedMut::new(&mut local_to_parent);
+        pool.parallel_for(n, |v| {
+            if part[v] != block {
+                return;
+            }
+            let lv = map[v] as usize;
+            // SAFETY: lv is unique per v; ranges are disjoint.
+            unsafe { l2p_ptr.write(lv, v as Vertex) };
+            let mut i = xadj_scan[lv] as usize;
+            let (nbrs, ws) = g.neighbors_w(v as Vertex);
+            for (&u, &w) in nbrs.iter().zip(ws) {
+                if part[u as usize] == block {
+                    unsafe {
+                        adj_ptr.write(i, map[u as usize] as Vertex);
+                        ew_ptr.write(i, w);
+                    }
+                    i += 1;
+                }
+            }
+        });
+    }
+
+    let mut xadj = vec![0u32; n_sub + 1];
+    for v in 0..=n_sub {
+        xadj[v] = xadj_scan[v] as u32;
+    }
+    let mut vw = vec![0i64; n_sub];
+    for v in 0..n_sub {
+        vw[v] = g.vw[local_to_parent[v] as usize];
+    }
+    let graph = CsrGraph { xadj, adj, ew, vw };
+    debug_assert!(graph.validate().is_ok());
+    Subgraph { graph, local_to_parent }
+}
+
+/// Build all `k` induced subgraphs. The paper loops Algorithm 1 over the
+/// blocks; we expose exactly that.
+pub fn build_all_subgraphs(pool: &Pool, g: &CsrGraph, part: &[Block], k: usize) -> Vec<Subgraph> {
+    (0..k as Block).map(|b| build_subgraph(pool, g, part, b)).collect()
+}
+
+/// Serial single-pass oracle: extract every block's subgraph in one sweep.
+/// Used by the CPU baselines and by differential tests against the
+/// parallel Algorithm 1.
+pub fn build_all_subgraphs_serial(g: &CsrGraph, part: &[Block], k: usize) -> Vec<Subgraph> {
+    let n = g.n();
+    let mut counts = vec![0u32; k];
+    let mut local = vec![0u32; n];
+    for v in 0..n {
+        let b = part[v] as usize;
+        local[v] = counts[b];
+        counts[b] += 1;
+    }
+    let mut out: Vec<Subgraph> = (0..k)
+        .map(|b| Subgraph {
+            graph: CsrGraph::default(),
+            local_to_parent: vec![0; counts[b] as usize],
+        })
+        .collect();
+    // Degrees.
+    let mut degs: Vec<Vec<u32>> = (0..k).map(|b| vec![0u32; counts[b] as usize]).collect();
+    for v in 0..n {
+        let b = part[v] as usize;
+        out[b].local_to_parent[local[v] as usize] = v as Vertex;
+        let mut d = 0;
+        for &u in g.neighbors(v as Vertex) {
+            d += (part[u as usize] == part[v]) as u32;
+        }
+        degs[b][local[v] as usize] = d;
+    }
+    for b in 0..k {
+        let nb = counts[b] as usize;
+        let mut xadj = vec![0u32; nb + 1];
+        for v in 0..nb {
+            xadj[v + 1] = xadj[v] + degs[b][v];
+        }
+        let md = xadj[nb] as usize;
+        out[b].graph = CsrGraph {
+            xadj,
+            adj: vec![0; md],
+            ew: vec![0.0; md],
+            vw: out[b].local_to_parent.iter().map(|&v| g.vw[v as usize]).collect(),
+        };
+    }
+    let mut pos: Vec<Vec<u32>> = (0..k).map(|b| out[b].graph.xadj[..counts[b] as usize].to_vec()).collect();
+    for v in 0..n {
+        let b = part[v] as usize;
+        let lv = local[v] as usize;
+        let (nbrs, ws) = g.neighbors_w(v as Vertex);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            if part[u as usize] == part[v] {
+                let p = pos[b][lv] as usize;
+                out[b].graph.adj[p] = local[u as usize];
+                out[b].graph.ew[p] = w;
+                pos[b][lv] += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::rng::Rng;
+
+    fn random_partition(n: usize, k: usize, seed: u64) -> Vec<Block> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(k as u64) as Block).collect()
+    }
+
+    #[test]
+    fn subgraph_of_grid_is_valid() {
+        let pool = Pool::new(1);
+        let g = gen::grid2d(10, 10, false);
+        let part = random_partition(g.n(), 4, 1);
+        for b in 0..4 {
+            let sub = build_subgraph(&pool, &g, &part, b);
+            sub.graph.validate().unwrap();
+            // Every subgraph vertex maps back to a vertex of block b.
+            for &pv in &sub.local_to_parent {
+                assert_eq!(part[pv as usize], b);
+            }
+        }
+    }
+
+    #[test]
+    fn vertex_and_weight_conservation() {
+        let pool = Pool::new(2);
+        let g = gen::rgg(1_000, 0.08, 7);
+        let part = random_partition(g.n(), 3, 2);
+        let subs = build_all_subgraphs(&pool, &g, &part, 3);
+        let total_n: usize = subs.iter().map(|s| s.graph.n()).sum();
+        assert_eq!(total_n, g.n());
+        let total_w: i64 = subs.iter().map(|s| s.graph.total_vweight()).sum();
+        assert_eq!(total_w, g.total_vweight());
+    }
+
+    #[test]
+    fn edges_match_induced_definition() {
+        let pool = Pool::new(1);
+        let g = gen::grid2d(8, 8, true);
+        let part = random_partition(g.n(), 2, 3);
+        let sub = build_subgraph(&pool, &g, &part, 0);
+        // Each subgraph edge corresponds to a parent edge within block 0.
+        for lv in 0..sub.graph.n() {
+            let pv = sub.local_to_parent[lv];
+            let (nbrs, ws) = sub.graph.neighbors_w(lv as Vertex);
+            for (&lu, &w) in nbrs.iter().zip(ws) {
+                let pu = sub.local_to_parent[lu as usize];
+                assert_eq!(g.find_edge(pv, pu), Some(w));
+            }
+        }
+        // Counting: directed internal edges of block 0 == subgraph directed.
+        let mut internal = 0usize;
+        for v in 0..g.n() {
+            if part[v] != 0 {
+                continue;
+            }
+            for &u in g.neighbors(v as Vertex) {
+                internal += (part[u as usize] == 0) as usize;
+            }
+        }
+        assert_eq!(internal, sub.graph.num_directed());
+    }
+
+    #[test]
+    fn parallel_matches_serial_oracle() {
+        let pool = Pool::new(4);
+        let g = gen::rgg(2_000, 0.06, 11);
+        let part = random_partition(g.n(), 5, 4);
+        let par = build_all_subgraphs(&pool, &g, &part, 5);
+        let ser = build_all_subgraphs_serial(&g, &part, 5);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.local_to_parent, b.local_to_parent);
+            assert_eq!(a.graph.xadj, b.graph.xadj);
+            assert_eq!(a.graph.adj, b.graph.adj);
+            assert_eq!(a.graph.ew, b.graph.ew);
+            assert_eq!(a.graph.vw, b.graph.vw);
+        }
+    }
+
+    #[test]
+    fn empty_block_yields_empty_subgraph() {
+        let pool = Pool::new(1);
+        let g = gen::grid2d(4, 4, false);
+        let part = vec![0 as Block; g.n()];
+        let sub = build_subgraph(&pool, &g, &part, 1);
+        assert_eq!(sub.graph.n(), 0);
+        assert_eq!(sub.graph.m(), 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Evaluation harness: performance profiles (Dolan–Moré), geometric-mean
+//! speedups, the experiment matrix runner, and markdown/CSV emitters for
+//! the paper's tables and figures.
+
+pub mod profiles;
+pub mod stats;
+
+use crate::algo::{run_algorithm, Algorithm};
+use crate::graph::gen::InstanceSpec;
+use crate::par::Pool;
+use crate::topology::Hierarchy;
+
+/// One (algorithm, instance, hierarchy) averaged over seeds.
+#[derive(Clone, Debug)]
+pub struct ExpRecord {
+    pub algorithm: Algorithm,
+    pub instance: String,
+    pub group: String,
+    pub large: bool,
+    pub hierarchy: String,
+    /// Mean communication cost over seeds.
+    pub comm_cost: f64,
+    /// Mean host wall time (ms).
+    pub host_ms: f64,
+    /// Mean modeled device time (ms) — wall time for CPU baselines.
+    pub device_ms: f64,
+    pub seeds: usize,
+}
+
+impl ExpRecord {
+    pub fn csv_header() -> &'static str {
+        "algorithm,instance,group,large,hierarchy,comm_cost,host_ms,device_ms,seeds"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.3},{:.3},{:.3},{}",
+            self.algorithm.name(),
+            self.instance,
+            self.group,
+            self.large,
+            self.hierarchy,
+            self.comm_cost,
+            self.host_ms,
+            self.device_ms,
+            self.seeds
+        )
+    }
+}
+
+/// Run the full experiment matrix: `algorithms × instances × hierarchies`,
+/// averaging over `seeds`. Progress is printed to stderr.
+pub fn run_matrix(
+    algorithms: &[Algorithm],
+    instances: &[InstanceSpec],
+    hierarchies: &[Hierarchy],
+    seeds: &[u64],
+    eps: f64,
+    pool: &Pool,
+) -> Vec<ExpRecord> {
+    let mut out = Vec::new();
+    for spec in instances {
+        let g = spec.generate();
+        for h in hierarchies {
+            for &algo in algorithms {
+                let mut cost = 0.0;
+                let mut host = 0.0;
+                let mut device = 0.0;
+                for &seed in seeds {
+                    let r = run_algorithm(algo, pool, &g, h, eps, seed);
+                    cost += r.comm_cost;
+                    host += r.host_ms;
+                    device += r.device_ms;
+                }
+                let ns = seeds.len() as f64;
+                let rec = ExpRecord {
+                    algorithm: algo,
+                    instance: spec.name.to_string(),
+                    group: spec.group.to_string(),
+                    large: spec.size_class() == crate::graph::gen::SizeClass::Large,
+                    hierarchy: h.label(),
+                    comm_cost: cost / ns,
+                    host_ms: host / ns,
+                    device_ms: device / ns,
+                    seeds: seeds.len(),
+                };
+                eprintln!(
+                    "  [{}] {} {} J={:.0} host={:.1}ms dev={:.2}ms",
+                    rec.algorithm.name(),
+                    rec.instance,
+                    rec.hierarchy,
+                    rec.comm_cost,
+                    rec.host_ms,
+                    rec.device_ms
+                );
+                out.push(rec);
+            }
+        }
+    }
+    out
+}
+
+/// Write records as CSV.
+pub fn write_csv(records: &[ExpRecord], path: &std::path::Path) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", ExpRecord::csv_header())?;
+    for r in records {
+        writeln!(f, "{}", r.to_csv())?;
+    }
+    Ok(())
+}
+
+/// Seeds/hierarchy subsetting from the environment, so the full paper
+/// matrix (5 seeds × 6 hierarchies) can be scaled to the host:
+/// `HEIPA_SEEDS=1,2 HEIPA_TOPS=2,6`.
+pub fn seeds_from_env(default: &[u64]) -> Vec<u64> {
+    match std::env::var("HEIPA_SEEDS") {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Hierarchies `4:8:t` for `t` from `HEIPA_TOPS` (default: the paper's 1..6).
+pub fn hierarchies_from_env() -> Vec<Hierarchy> {
+    let tops: Vec<u32> = match std::env::var("HEIPA_TOPS") {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        Err(_) => (1..=6).collect(),
+    };
+    tops.into_iter()
+        .map(|t| Hierarchy::new(vec![4, 8, t], vec![1.0, 10.0, 100.0]).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::smoke_suite;
+
+    #[test]
+    fn matrix_runs_and_emits_csv() {
+        let pool = Pool::new(1);
+        let specs: Vec<_> = smoke_suite().into_iter().take(1).collect();
+        let hs = vec![Hierarchy::parse("2:2", "1:10").unwrap()];
+        let recs = run_matrix(&[Algorithm::GpuIm, Algorithm::SharedMapF], &specs, &hs, &[1], 0.03, &pool);
+        assert_eq!(recs.len(), 2);
+        for r in &recs {
+            assert!(r.comm_cost > 0.0);
+            assert!(r.to_csv().split(',').count() == ExpRecord::csv_header().split(',').count());
+        }
+    }
+
+    #[test]
+    fn env_defaults() {
+        // (Do not set the env vars here: tests run in one process.)
+        let seeds = seeds_from_env(&[1, 2, 3]);
+        assert!(!seeds.is_empty());
+        let hs = hierarchies_from_env();
+        assert!(!hs.is_empty());
+        assert!(hs.iter().all(|h| h.k() % 32 == 0));
+    }
+}

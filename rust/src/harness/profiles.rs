@@ -1,0 +1,165 @@
+//! Performance profiles (Dolan & Moré 2002) — the quality plots of
+//! Figures 1 and 2.
+//!
+//! For algorithms `A` and instances `I` with qualities `q_A(I)` (lower is
+//! better), the profile of `A` maps `τ ≥ 1` to the fraction of instances
+//! with `q_A(I) ≤ τ · Best(I)`.
+
+use std::collections::BTreeMap;
+
+/// Quality matrix: `algorithms × instances` (lower is better).
+pub struct ProfileInput {
+    pub algorithm_names: Vec<String>,
+    /// `quality[a][i]` for algorithm `a` on instance `i`.
+    pub quality: Vec<Vec<f64>>,
+}
+
+/// A computed performance profile.
+pub struct PerformanceProfile {
+    pub algorithm_names: Vec<String>,
+    pub taus: Vec<f64>,
+    /// `fraction[a][t]`: share of instances solved within `taus[t] · best`.
+    pub fraction: Vec<Vec<f64>>,
+}
+
+impl ProfileInput {
+    /// Compute the profile over a log-spaced τ grid.
+    pub fn compute(&self, taus: &[f64]) -> PerformanceProfile {
+        let n_inst = self.quality.first().map(|q| q.len()).unwrap_or(0);
+        assert!(self.quality.iter().all(|q| q.len() == n_inst), "ragged quality matrix");
+        let mut best = vec![f64::INFINITY; n_inst];
+        for q in &self.quality {
+            for (i, &v) in q.iter().enumerate() {
+                best[i] = best[i].min(v);
+            }
+        }
+        let fraction = self
+            .quality
+            .iter()
+            .map(|q| {
+                taus.iter()
+                    .map(|&tau| {
+                        let ok = q
+                            .iter()
+                            .enumerate()
+                            .filter(|&(i, &v)| v <= tau * best[i] + 1e-12)
+                            .count();
+                        ok as f64 / n_inst.max(1) as f64
+                    })
+                    .collect()
+            })
+            .collect();
+        PerformanceProfile { algorithm_names: self.algorithm_names.clone(), taus: taus.to_vec(), fraction }
+    }
+
+    /// Fraction of instances on which each algorithm attains the best
+    /// quality (the paper quotes these at τ = 1).
+    pub fn best_fractions(&self) -> BTreeMap<String, f64> {
+        let p = self.compute(&[1.0]);
+        p.algorithm_names
+            .iter()
+            .cloned()
+            .zip(p.fraction.iter().map(|f| f[0]))
+            .collect()
+    }
+
+    /// Mean relative overhead above the best solution, in percent
+    /// (the paper's "average additional cost over the best solution").
+    pub fn mean_overhead_pct(&self) -> BTreeMap<String, f64> {
+        let n_inst = self.quality.first().map(|q| q.len()).unwrap_or(0);
+        let mut best = vec![f64::INFINITY; n_inst];
+        for q in &self.quality {
+            for (i, &v) in q.iter().enumerate() {
+                best[i] = best[i].min(v);
+            }
+        }
+        self.algorithm_names
+            .iter()
+            .cloned()
+            .zip(self.quality.iter().map(|q| {
+                let mean: f64 = q
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| v / best[i].max(1e-12) - 1.0)
+                    .sum::<f64>()
+                    / n_inst.max(1) as f64;
+                100.0 * mean
+            }))
+            .collect()
+    }
+}
+
+/// A log-spaced τ grid from 1 to `tau_max`.
+pub fn tau_grid(tau_max: f64, points: usize) -> Vec<f64> {
+    (0..points)
+        .map(|i| (tau_max.ln() * i as f64 / (points - 1).max(1) as f64).exp())
+        .collect()
+}
+
+/// Render a profile as a GitHub-markdown table (one row per τ).
+pub fn profile_markdown(p: &PerformanceProfile) -> String {
+    let mut s = String::new();
+    s.push_str("| tau |");
+    for name in &p.algorithm_names {
+        s.push_str(&format!(" {name} |"));
+    }
+    s.push_str("\n|---|");
+    for _ in &p.algorithm_names {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for (t, &tau) in p.taus.iter().enumerate() {
+        s.push_str(&format!("| {tau:.3} |"));
+        for f in &p.fraction {
+            s.push_str(&format!(" {:.3} |", f[t]));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> ProfileInput {
+        ProfileInput {
+            algorithm_names: vec!["good".into(), "bad".into()],
+            quality: vec![vec![1.0, 2.0, 3.0], vec![2.0, 2.0, 9.0]],
+        }
+    }
+
+    #[test]
+    fn profile_monotone_and_bounded() {
+        let p = example().compute(&tau_grid(4.0, 16));
+        for f in &p.fraction {
+            for w in f.windows(2) {
+                assert!(w[1] >= w[0] - 1e-12, "profile not monotone");
+            }
+            assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn best_fractions_sum_ge_one() {
+        let bf = example().best_fractions();
+        assert!((bf["good"] - 1.0).abs() < 1e-12);
+        assert!((bf["bad"] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_pct() {
+        let ov = example().mean_overhead_pct();
+        assert!(ov["good"].abs() < 1e-9);
+        // bad: (2/1-1 + 2/2-1 + 9/3-1)/3 = (1 + 0 + 2)/3 = 1 → 100%.
+        assert!((ov["bad"] - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let p = example().compute(&[1.0, 2.0]);
+        let md = profile_markdown(&p);
+        assert!(md.contains("| tau |"));
+        assert!(md.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,61 @@
+//! Statistics helpers: geometric means, speedups, aggregation.
+
+/// Geometric mean of strictly positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = xs.iter().map(|&x| x.max(1e-300).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Max of a slice.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Min of a slice.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// Speedup vector `base[i] / other[i]`.
+pub fn speedups(base: &[f64], other: &[f64]) -> Vec<f64> {
+    base.iter().zip(other).map(|(&b, &o)| b / o.max(1e-12)).collect()
+}
+
+/// Summary of a speedup distribution: (geomean, max, min).
+pub fn speedup_summary(base: &[f64], other: &[f64]) -> (f64, f64, f64) {
+    let s = speedups(base, other);
+    (geomean(&s), max(&s), min(&s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn speedup_summary_works() {
+        let base = vec![100.0, 100.0];
+        let fast = vec![10.0, 1.0];
+        let (g, mx, mn) = speedup_summary(&base, &fast);
+        assert!((mx - 100.0).abs() < 1e-9);
+        assert!((mn - 10.0).abs() < 1e-9);
+        assert!((g - (1000.0f64).sqrt()).abs() < 1e-6);
+    }
+}

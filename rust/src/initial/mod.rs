@@ -1,0 +1,315 @@
+//! Serial multilevel graph partitioning ("kaffpa-lite").
+//!
+//! The substrate every mapping algorithm builds on: SharedMap-like and
+//! IntMap-like baselines call it directly; GPU-HM and GPU-IM use it for
+//! the coarsest graphs (the paper keeps initial partitioning on the CPU —
+//! §4.2 "Initial Partitioning").
+//!
+//! Pipeline: serial heavy-edge coarsening → greedy graph growing (multiple
+//! tries) → FM refinement during uncoarsening; k-way via recursive
+//! bisection with proportional target weights.
+
+use crate::coarsen::coarsen_step_serial;
+use crate::graph::CsrGraph;
+use crate::refine::fm2::{fm2_refine, Fm2Config};
+use crate::rng::Rng;
+use crate::{Block, VWeight, Vertex};
+
+/// Multilevel bisection configuration.
+#[derive(Clone, Debug)]
+pub struct MlConfig {
+    /// Stop coarsening below this many vertices.
+    pub coarsest_size: usize,
+    /// Initial-partition attempts (keep the best).
+    pub tries: usize,
+    /// FM passes per level.
+    pub fm_passes: usize,
+    /// Stall limit within an FM pass.
+    pub fm_stall: usize,
+}
+
+impl Default for MlConfig {
+    fn default() -> Self {
+        MlConfig { coarsest_size: 160, tries: 4, fm_passes: 3, fm_stall: 400 }
+    }
+}
+
+impl MlConfig {
+    /// The "fast" flavor (fewer tries/passes) used by -F baselines.
+    pub fn fast() -> Self {
+        MlConfig { coarsest_size: 160, tries: 2, fm_passes: 1, fm_stall: 150 }
+    }
+
+    /// The "strong" flavor used by -S baselines. Mirrors Kaffpa-strong's
+    /// effort profile (many initial tries, deep FM) — the quality/runtime
+    /// anchor of the paper's comparison.
+    pub fn strong() -> Self {
+        MlConfig { coarsest_size: 100, tries: 16, fm_passes: 8, fm_stall: 1500 }
+    }
+}
+
+/// Multilevel bisection of `g` into blocks {0, 1} with target weight
+/// fraction `frac0` for block 0 and imbalance `eps` per side.
+pub fn bisect_multilevel(g: &CsrGraph, frac0: f64, eps: f64, seed: u64, cfg: &MlConfig) -> Vec<Block> {
+    let total = g.total_vweight();
+    let max0 = (((1.0 + eps) * total as f64) * frac0).ceil() as VWeight;
+    let max1 = (((1.0 + eps) * total as f64) * (1.0 - frac0)).ceil() as VWeight;
+
+    // Coarsening.
+    let mut graphs: Vec<CsrGraph> = vec![];
+    let mut maps: Vec<Vec<Vertex>> = vec![];
+    {
+        let mut cur = g.clone();
+        let mut level = 0u64;
+        while cur.n() > cfg.coarsest_size {
+            // Cap pair weight so the coarsest graph stays bisectable.
+            let cap = (total as f64 * frac0.min(1.0 - frac0) * (1.0 + eps)).ceil() as VWeight;
+            let (coarse, map) = coarsen_step_serial(&cur, cap.max(1), seed ^ (level << 32));
+            if coarse.n() as f64 > cur.n() as f64 * 0.96 {
+                break; // contraction stalled
+            }
+            graphs.push(cur);
+            maps.push(map);
+            cur = coarse;
+            level += 1;
+        }
+        graphs.push(cur);
+    }
+
+    // Initial bisection on the coarsest graph (best of `tries`).
+    let coarsest = graphs.last().unwrap();
+    let mut best_part: Option<(f64, Vec<Block>)> = None;
+    let mut rng = Rng::new(seed ^ 0x9e37);
+    for t in 0..cfg.tries.max(1) {
+        let mut part = greedy_growing(coarsest, max0, max1, &mut rng);
+        fm2_refine(
+            coarsest,
+            &mut part,
+            &Fm2Config { max0, max1, passes: cfg.fm_passes + 2, stall_limit: cfg.fm_stall },
+        );
+        let cut = crate::partition::edge_cut(coarsest, &part);
+        if best_part.as_ref().map(|(bc, _)| cut < *bc).unwrap_or(true) {
+            best_part = Some((cut, part));
+        }
+        let _ = t;
+    }
+    let mut part = best_part.unwrap().1;
+
+    // Uncoarsening with FM refinement.
+    for level in (0..maps.len()).rev() {
+        let fine = &graphs[level];
+        let map = &maps[level];
+        let mut fine_part = vec![0 as Block; fine.n()];
+        for v in 0..fine.n() {
+            fine_part[v] = part[map[v] as usize];
+        }
+        fm2_refine(
+            fine,
+            &mut fine_part,
+            &Fm2Config { max0, max1, passes: cfg.fm_passes, stall_limit: cfg.fm_stall },
+        );
+        part = fine_part;
+    }
+    part
+}
+
+/// Greedy graph growing: grow block 0 from a random seed vertex by max
+/// connectivity until it reaches its target weight. Handles disconnected
+/// graphs by reseeding.
+fn greedy_growing(g: &CsrGraph, max0: VWeight, _max1: VWeight, rng: &mut Rng) -> Vec<Block> {
+    use crate::refine::OrdF64;
+    use std::collections::BinaryHeap;
+    let n = g.n();
+    let total = g.total_vweight();
+    // Target: half of total (respecting max0).
+    let target = (total / 2).min(max0);
+    let mut part = vec![1 as Block; n];
+    if n == 0 {
+        return part;
+    }
+    let mut in0 = vec![false; n];
+    let mut conn = vec![0.0f64; n];
+    let mut heap: BinaryHeap<(OrdF64, Vertex)> = BinaryHeap::new();
+    let mut w0 = 0 as VWeight;
+    let mut seeded = vec![false; n];
+
+    while w0 < target {
+        let v = match heap.pop() {
+            Some((OrdF64(c), v)) if !in0[v as usize] && c == conn[v as usize] => v,
+            Some(_) => continue, // stale
+            None => {
+                // Reseed from an unreached vertex.
+                let mut v = rng.below_usize(n);
+                let mut guard = 0;
+                while (in0[v] || seeded[v]) && guard < 4 * n {
+                    v = (v + 1) % n;
+                    guard += 1;
+                }
+                if guard >= 4 * n {
+                    break;
+                }
+                seeded[v] = true;
+                v as Vertex
+            }
+        };
+        let vi = v as usize;
+        if w0 + g.vw[vi] > max0 {
+            // Skip too-heavy vertex; try others.
+            if heap.is_empty() {
+                break;
+            }
+            continue;
+        }
+        in0[vi] = true;
+        part[vi] = 0;
+        w0 += g.vw[vi];
+        let (nbrs, ws) = g.neighbors_w(v);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            let ui = u as usize;
+            if !in0[ui] {
+                conn[ui] += w;
+                heap.push((OrdF64(conn[ui]), u));
+            }
+        }
+    }
+    part
+}
+
+/// Recursive-bisection k-way partition with per-level imbalance adjustment
+/// `ε_cut = (1+ε)^(1/⌈log₂ k⌉) − 1` so the final k-way partition is
+/// ε-balanced.
+pub fn recursive_kway(g: &CsrGraph, k: usize, eps: f64, seed: u64, cfg: &MlConfig) -> Vec<Block> {
+    assert!(k >= 1);
+    let mut part = vec![0 as Block; g.n()];
+    if k == 1 || g.n() == 0 {
+        return part;
+    }
+    let depth = (k as f64).log2().ceil().max(1.0);
+    let eps_cut = (1.0 + eps).powf(1.0 / depth) - 1.0;
+    rb_rec(g, &(0..g.n() as Vertex).collect::<Vec<_>>(), k, eps_cut, seed, cfg, 0, &mut part);
+    part
+}
+
+fn rb_rec(
+    g: &CsrGraph,
+    vertices: &[Vertex],
+    k: usize,
+    eps: f64,
+    seed: u64,
+    cfg: &MlConfig,
+    block_off: Block,
+    out: &mut [Block],
+) {
+    if k == 1 {
+        for &v in vertices {
+            out[v as usize] = block_off;
+        }
+        return;
+    }
+    // Build the induced subgraph over `vertices`.
+    let sub = induce(g, vertices);
+    let k0 = k / 2;
+    let k1 = k - k0;
+    let frac0 = k0 as f64 / k as f64;
+    let part2 = bisect_multilevel(&sub, frac0, eps, seed, cfg);
+    let mut side0: Vec<Vertex> = Vec::new();
+    let mut side1: Vec<Vertex> = Vec::new();
+    for (i, &v) in vertices.iter().enumerate() {
+        if part2[i] == 0 {
+            side0.push(v);
+        } else {
+            side1.push(v);
+        }
+    }
+    rb_rec(g, &side0, k0, eps, seed.wrapping_add(1), cfg, block_off, out);
+    rb_rec(g, &side1, k1, eps, seed.wrapping_add(2), cfg, block_off + k0 as Block, out);
+}
+
+/// Induce the subgraph over an arbitrary vertex subset (serial; the
+/// device-side Algorithm 1 lives in [`crate::graph::subgraph`]).
+fn induce(g: &CsrGraph, vertices: &[Vertex]) -> CsrGraph {
+    let mut local = vec![u32::MAX; g.n()];
+    for (i, &v) in vertices.iter().enumerate() {
+        local[v as usize] = i as u32;
+    }
+    let mut xadj = vec![0u32; vertices.len() + 1];
+    let mut adj = Vec::new();
+    let mut ew = Vec::new();
+    let mut vw = Vec::with_capacity(vertices.len());
+    for (i, &v) in vertices.iter().enumerate() {
+        vw.push(g.vw[v as usize]);
+        let (nbrs, ws) = g.neighbors_w(v);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            let lu = local[u as usize];
+            if lu != u32::MAX {
+                adj.push(lu);
+                ew.push(w);
+            }
+        }
+        xadj[i + 1] = adj.len() as u32;
+    }
+    CsrGraph { xadj, adj, ew, vw }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{edge_cut, is_balanced};
+
+    #[test]
+    fn bisection_balanced_and_low_cut() {
+        let g = gen::grid2d(20, 20, false);
+        let part = bisect_multilevel(&g, 0.5, 0.03, 1, &MlConfig::default());
+        assert!(is_balanced(&g, &part, 2, 0.04));
+        // A 20x20 grid has optimal bisection cut 20; allow slack.
+        let cut = edge_cut(&g, &part);
+        assert!(cut <= 40.0, "cut {cut}");
+    }
+
+    #[test]
+    fn unbalanced_target_fraction() {
+        let g = gen::grid2d(16, 16, false);
+        let part = bisect_multilevel(&g, 0.25, 0.05, 2, &MlConfig::default());
+        let w0: i64 = (0..g.n()).filter(|&v| part[v] == 0).map(|v| g.vw[v]).sum();
+        let frac = w0 as f64 / g.total_vweight() as f64;
+        assert!(frac > 0.15 && frac < 0.35, "frac0={frac}");
+    }
+
+    #[test]
+    fn kway_covers_all_blocks_and_balances() {
+        let g = gen::rgg(3_000, 0.05, 4);
+        for k in [3, 4, 7] {
+            let part = recursive_kway(&g, k, 0.05, 5, &MlConfig::fast());
+            let mut seen = vec![false; k];
+            for &b in &part {
+                seen[b as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "k={k}: empty block");
+            assert!(is_balanced(&g, &part, k, 0.08), "k={k} imbalanced");
+        }
+    }
+
+    #[test]
+    fn k1_is_trivial() {
+        let g = gen::grid2d(5, 5, false);
+        let part = recursive_kway(&g, 1, 0.03, 1, &MlConfig::default());
+        assert!(part.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn handles_disconnected_graphs() {
+        // road_like can be disconnected.
+        let g = gen::road_like(40, 40, 9);
+        let part = recursive_kway(&g, 4, 0.10, 3, &MlConfig::fast());
+        assert!(is_balanced(&g, &part, 4, 0.15));
+    }
+
+    #[test]
+    fn strong_config_not_worse_than_fast() {
+        let g = gen::grid2d(24, 24, false);
+        let fast = recursive_kway(&g, 8, 0.03, 7, &MlConfig::fast());
+        let strong = recursive_kway(&g, 8, 0.03, 7, &MlConfig::strong());
+        assert!(edge_cut(&g, &strong) <= edge_cut(&g, &fast) * 1.15);
+    }
+}

@@ -1,0 +1,49 @@
+//! # HeiPa-RS — GPU-Accelerated Process Mapping, reproduced in Rust + JAX + Pallas
+//!
+//! Reproduction of *GPU-Accelerated Algorithms for Process Mapping*
+//! (Samoldekin, Schulz, Woydt; CS.DC 2025). The crate provides
+//!
+//! * the **hierarchical process mapping problem (HPMP)** model: task graphs,
+//!   machine hierarchies `H = a_1 : … : a_ℓ` with distances
+//!   `D = d_1 : … : d_ℓ`, and the communication-cost objective
+//!   `J(C, D, Π) = Σ_{ij} C_ij · D_{Π(i)Π(j)}`;
+//! * **GPU-HM** ([`algo::gpu_hm`]): hierarchical multisection driven by a
+//!   reimplementation of the Jet GPU partitioner (paper Alg. 1 + 2);
+//! * **GPU-IM** ([`algo::gpu_im`]): integrated mapping inside the multilevel
+//!   pipeline (paper Alg. 3–6);
+//! * the CPU baselines the paper compares against
+//!   ([`algo::sharedmap`], [`algo::intmap`], [`algo::jet`]);
+//! * a bulk-synchronous data-parallel execution substrate ([`par`]) standing
+//!   in for Kokkos/CUDA, with a calibrated GPU cost model;
+//! * a PJRT runtime ([`runtime`]) that executes AOT-compiled JAX/Pallas
+//!   kernels (dense gain tables, J evaluation) from the Rust hot path;
+//! * a mapping-as-a-service coordinator ([`coordinator`]) and the
+//!   benchmark harness ([`harness`]) regenerating every paper table/figure.
+//!
+//! See `DESIGN.md` for the hardware-substitution notes and the experiment
+//! index, and `examples/quickstart.rs` for a five-line end-to-end usage.
+
+pub mod algo;
+pub mod coarsen;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod harness;
+pub mod initial;
+pub mod metrics;
+pub mod par;
+pub mod partition;
+pub mod refine;
+pub mod rng;
+pub mod runtime;
+pub mod topology;
+
+/// Vertex index type. Graphs in this crate are bounded by `u32` vertices
+/// (the paper's largest instance, europe_osm, has 50.9 M < 2^32).
+pub type Vertex = u32;
+/// Block / PE index type.
+pub type Block = u32;
+/// Vertex weights are integral (exact balance arithmetic).
+pub type VWeight = i64;
+/// Edge weights / communication volumes are floating point.
+pub type EWeight = f64;

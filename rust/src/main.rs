@@ -1,0 +1,249 @@
+//! `heipa` — CLI for the HeiPa-RS process-mapping framework.
+//!
+//! Subcommands:
+//!
+//! * `gen`     — generate benchmark instances (Table 1 suite) to METIS files
+//! * `map`     — map one instance onto a hierarchy with any algorithm
+//! * `eval`    — evaluate J(C, D, Π) of an existing partition file
+//! * `phases`  — GPU-IM phase breakdown for one instance (Table 2 row)
+//! * `suite`   — run an experiment matrix and write CSV
+//! * `serve`   — start the mapping-as-a-service coordinator (TCP)
+//!
+//! Flags are `--key value`; run `heipa help` for details. (The offline
+//! crate set has no clap; parsing is hand-rolled in [`args`].)
+
+use anyhow::{bail, Context, Result};
+use heipa::algo::{run_algorithm, Algorithm};
+use heipa::coordinator::service::Service;
+use heipa::graph::{gen, io};
+use heipa::harness;
+use heipa::metrics::Phase;
+use heipa::par::Pool;
+use heipa::topology::Hierarchy;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--key value` argument parser.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument `{a}`");
+            };
+            let val = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn required(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required flag --{key}"))
+    }
+}
+
+fn load_graph(name_or_path: &str) -> Result<heipa::graph::CsrGraph> {
+    if gen::instance_by_name(name_or_path).is_some() {
+        Ok(gen::generate_by_name(name_or_path))
+    } else {
+        io::read_metis(Path::new(name_or_path))
+    }
+}
+
+fn hierarchy_of(args: &Args) -> Result<Hierarchy> {
+    Hierarchy::parse(&args.get_or("hier", "4:8:6"), &args.get_or("dist", "1:10:100"))
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "help" | "--help" | "-h" => print_help(),
+        "gen" => cmd_gen(&args)?,
+        "map" => cmd_map(&args)?,
+        "eval" => cmd_eval(&args)?,
+        "phases" => cmd_phases(&args)?,
+        "suite" => cmd_suite(&args)?,
+        "serve" => cmd_serve(&args)?,
+        other => bail!("unknown subcommand `{other}` (try `heipa help`)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "heipa — GPU-accelerated process mapping (paper reproduction)\n\
+         \n\
+         USAGE: heipa <subcommand> [--key value …]\n\
+         \n\
+         gen    --suite paper|smoke [--out-dir DIR] [--stats 1]\n\
+         map    --graph NAME|FILE [--algo gpu-im] [--hier 4:8:6] [--dist 1:10:100]\n\
+                [--eps 0.03] [--seed 1] [--out part.txt]\n\
+         eval   --graph NAME|FILE --part FILE [--hier …] [--dist …]\n\
+         phases --graph NAME|FILE [--hier …] [--dist …] [--seed 1]\n\
+         suite  --algos a,b,… [--instances x,y|smoke|paper] [--seeds 1,2]\n\
+                [--out results.csv] [--eps 0.03]\n\
+         serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0]\n\
+         \n\
+         Algorithms: {}",
+        Algorithm::all().map(|a| a.name()).join(", ")
+    );
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let suite = match args.get_or("suite", "paper").as_str() {
+        "paper" => gen::paper_suite(),
+        "smoke" => gen::smoke_suite(),
+        other => bail!("unknown suite `{other}`"),
+    };
+    let out_dir = args.get("out-dir").map(PathBuf::from);
+    let stats = args.get("stats").is_some();
+    if let Some(dir) = &out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    println!("| instance | group | stand-in for | n | m | class |");
+    println!("|---|---|---|---|---|---|");
+    for spec in suite {
+        let g = spec.generate();
+        if stats || out_dir.is_some() {
+            println!(
+                "| {} | {} | {} | {} | {} | {:?} |",
+                spec.name,
+                spec.group,
+                spec.stand_in_for,
+                g.n(),
+                g.m(),
+                spec.size_class()
+            );
+        }
+        if let Some(dir) = &out_dir {
+            io::write_metis(&g, &dir.join(format!("{}.graph", spec.name)))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let g = load_graph(args.required("graph")?)?;
+    let h = hierarchy_of(args)?;
+    let algo = Algorithm::from_name(&args.get_or("algo", "gpu-im"))
+        .context("unknown --algo (try `heipa help`)")?;
+    let eps: f64 = args.get_or("eps", "0.03").parse()?;
+    let seed: u64 = args.get_or("seed", "1").parse()?;
+    let pool = Pool::default();
+    let r = run_algorithm(algo, &pool, &g, &h, eps, seed);
+    println!(
+        "instance={} n={} m={} k={} algo={} J={:.3} imbalance={:.5} host_ms={:.2} device_ms={:.3}",
+        args.required("graph")?,
+        g.n(),
+        g.m(),
+        h.k(),
+        algo.name(),
+        r.comm_cost,
+        r.imbalance,
+        r.host_ms,
+        r.device_ms,
+    );
+    if let Some(out) = args.get("out") {
+        io::write_partition(&r.mapping, Path::new(out))?;
+        println!("wrote mapping to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let g = load_graph(args.required("graph")?)?;
+    let part = io::read_partition(Path::new(args.required("part")?))?;
+    let h = hierarchy_of(args)?;
+    heipa::partition::validate_mapping(&part, g.n(), h.k()).map_err(anyhow::Error::msg)?;
+    println!(
+        "J={:.3} edge_cut={:.3} imbalance={:.5}",
+        heipa::partition::comm_cost(&g, &part, &h),
+        heipa::partition::edge_cut(&g, &part),
+        heipa::partition::imbalance(&g, &part, h.k()),
+    );
+    Ok(())
+}
+
+fn cmd_phases(args: &Args) -> Result<()> {
+    let g = load_graph(args.required("graph")?)?;
+    let h = hierarchy_of(args)?;
+    let seed: u64 = args.get_or("seed", "1").parse()?;
+    let pool = Pool::default();
+    let r = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, 0.03, seed);
+    let phases = r.phases.expect("gpu-im reports phases");
+    println!("GPU-IM phase breakdown — n={} m={} k={} (modeled device time)", g.n(), g.m(), h.k());
+    println!("| phase | share | ms |");
+    println!("|---|---|---|");
+    for (label, share, ms) in phases.rows() {
+        println!("| {label} | {share:.2}% | {ms:.3} |");
+    }
+    println!("| Total | 100% | {:.3} |", phases.total_device_ms());
+    let _ = Phase::all();
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let algos: Vec<Algorithm> = args
+        .get_or("algos", "gpu-hm-ultra,gpu-im,sharedmap-f,intmap-f")
+        .split(',')
+        .map(|s| Algorithm::from_name(s.trim()).with_context(|| format!("unknown algorithm {s}")))
+        .collect::<Result<_>>()?;
+    let instances = match args.get_or("instances", "smoke").as_str() {
+        "paper" => gen::paper_suite(),
+        "smoke" => gen::smoke_suite(),
+        list => {
+            list.split(',')
+                .map(|name| {
+                    gen::instance_by_name(name.trim())
+                        .with_context(|| format!("unknown instance {name}"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let seeds: Vec<u64> = args
+        .get_or("seeds", "1")
+        .split(',')
+        .map(|s| s.trim().parse::<u64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+    let eps: f64 = args.get_or("eps", "0.03").parse()?;
+    let hierarchies = harness::hierarchies_from_env();
+    let pool = Pool::default();
+    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, eps, &pool);
+    let out = args.get_or("out", "results.csv");
+    harness::write_csv(&records, Path::new(&out))?;
+    println!("wrote {} records to {out}", records.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let threads: usize = args.get_or("threads", "0").parse()?;
+    let svc = std::sync::Arc::new(Service::start(artifacts, threads));
+    heipa::coordinator::protocol::serve_tcp(svc, &addr)
+}

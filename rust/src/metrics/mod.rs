@@ -1,0 +1,163 @@
+//! Phase timing and run accounting (feeds Table 2 and the speedup plots).
+
+use crate::par::cost::{DeviceTimer, Measurement};
+use std::collections::BTreeMap;
+
+/// The pipeline phases the paper reports in Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Matching (the paper's "Coarsening" row).
+    Coarsening,
+    Contraction,
+    InitialPartitioning,
+    Uncontraction,
+    RefineRebalance,
+    Misc,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Coarsening => "Coarsening",
+            Phase::Contraction => "Contraction",
+            Phase::InitialPartitioning => "Init. Part.",
+            Phase::Uncontraction => "Uncontr.",
+            Phase::RefineRebalance => "Refine + Reb.",
+            Phase::Misc => "Misc",
+        }
+    }
+
+    pub fn all() -> [Phase; 6] {
+        [
+            Phase::Coarsening,
+            Phase::Contraction,
+            Phase::InitialPartitioning,
+            Phase::Uncontraction,
+            Phase::RefineRebalance,
+            Phase::Misc,
+        ]
+    }
+}
+
+/// Accumulates per-phase host + modeled-device time.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseBreakdown {
+    device_ms: BTreeMap<Phase, f64>,
+    host_ms: BTreeMap<Phase, f64>,
+}
+
+impl PhaseBreakdown {
+    pub fn add(&mut self, phase: Phase, m: Measurement) {
+        *self.device_ms.entry(phase).or_insert(0.0) += m.device_ms;
+        *self.host_ms.entry(phase).or_insert(0.0) += m.host_ms;
+    }
+
+    /// Time a closure, attributing it to `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t = DeviceTimer::start();
+        let out = f();
+        self.add(phase, t.stop());
+        out
+    }
+
+    /// Time a *CPU-side* phase (e.g. initial partitioning, which the paper
+    /// deliberately runs on the host): wall-clock is charged as its device
+    /// time, since the device timeline waits for the host here.
+    pub fn time_cpu<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t = DeviceTimer::start();
+        let out = f();
+        let mut m = t.stop();
+        m.device_ms = m.host_ms;
+        self.add(phase, m);
+        out
+    }
+
+    pub fn device_ms(&self, phase: Phase) -> f64 {
+        self.device_ms.get(&phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn host_ms(&self, phase: Phase) -> f64 {
+        self.host_ms.get(&phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn total_device_ms(&self) -> f64 {
+        self.device_ms.values().sum()
+    }
+
+    pub fn total_host_ms(&self) -> f64 {
+        self.host_ms.values().sum()
+    }
+
+    /// Percentage share of a phase (modeled device time).
+    pub fn share(&self, phase: Phase) -> f64 {
+        let total = self.total_device_ms();
+        if total == 0.0 {
+            0.0
+        } else {
+            100.0 * self.device_ms(phase) / total
+        }
+    }
+
+    /// Merge another breakdown into this one.
+    pub fn merge(&mut self, other: &PhaseBreakdown) {
+        for (p, v) in &other.device_ms {
+            *self.device_ms.entry(*p).or_insert(0.0) += v;
+        }
+        for (p, v) in &other.host_ms {
+            *self.host_ms.entry(*p).or_insert(0.0) += v;
+        }
+    }
+
+    /// Table-2-style row dump: `(label, share %, device ms)`.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        Phase::all()
+            .into_iter()
+            .map(|p| (p.label(), self.share(p), self.device_ms(p)))
+            .collect()
+    }
+}
+
+/// Result of a full mapping run.
+#[derive(Clone, Debug)]
+pub struct MappingResult {
+    /// Vertex → PE assignment.
+    pub mapping: Vec<crate::Block>,
+    /// Communication cost `J(C, D, Π)`.
+    pub comm_cost: f64,
+    /// Achieved imbalance.
+    pub imbalance: f64,
+    /// Host wall time (ms).
+    pub host_ms: f64,
+    /// Modeled device time (ms); equals `host_ms` for CPU-only solvers.
+    pub device_ms: f64,
+    /// Per-phase breakdown (device algorithms only).
+    pub phases: Option<PhaseBreakdown>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_100() {
+        let mut pb = PhaseBreakdown::default();
+        let pool = crate::par::Pool::new(1);
+        pb.time(Phase::Coarsening, || pool.parallel_for(1_000, |_| {}));
+        pb.time(Phase::RefineRebalance, || pool.parallel_for(3_000, |_| {}));
+        let total: f64 = Phase::all().iter().map(|&p| pb.share(p)).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+        assert!(pb.share(Phase::RefineRebalance) > pb.share(Phase::Coarsening));
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PhaseBreakdown::default();
+        let mut b = PhaseBreakdown::default();
+        let pool = crate::par::Pool::new(1);
+        a.time(Phase::Misc, || pool.parallel_for(100, |_| {}));
+        b.time(Phase::Misc, || pool.parallel_for(100, |_| {}));
+        let before = a.device_ms(Phase::Misc);
+        a.merge(&b);
+        assert!(a.device_ms(Phase::Misc) > before);
+    }
+}

@@ -1,0 +1,125 @@
+//! GPU cost model — the hardware-substitution half of the reproduction.
+//!
+//! The paper measures wall-clock on an RTX 4090 (16 384 CUDA cores,
+//! 2.5 GHz boost). This host has one CPU core and no GPU, so absolute
+//! GPU times are *modeled* from the kernel-launch ledger:
+//!
+//! ```text
+//! t_device = launches · T_LAUNCH + work_items / THROUGHPUT
+//! ```
+//!
+//! The two constants are calibrated against the paper's published absolute
+//! phase times (Table 2: cop20k_A = 42.1 ms total, europe_osm = 320.6 ms
+//! total for GPU-IM on the 4:8:6 hierarchy):
+//!
+//! * `T_LAUNCH` = 6 µs — typical CUDA kernel launch + sync latency; the
+//!   paper's small-graph runtimes are launch-dominated (cop20k_A spends
+//!   42 ms over a pipeline of a few thousand kernels).
+//! * `THROUGHPUT` = 3 000 items/µs — effective irregular-workload
+//!   throughput; europe_osm (≈108 M directed edges, tens of edge-parallel
+//!   sweeps) lands at a few hundred ms.
+//!
+//! The model deliberately ignores per-item cost variation; the paper's
+//! claims we reproduce are *relative* (speedup ratios, phase shares), and
+//! those depend on launch counts and item counts, which we measure exactly.
+//! Host wall-clock is always reported alongside the modeled time.
+
+use super::ledger::Snapshot;
+
+/// Modeled CUDA kernel launch + synchronization latency (µs).
+pub const T_LAUNCH_US: f64 = 6.0;
+/// Modeled effective device throughput (work items / µs).
+pub const THROUGHPUT_ITEMS_PER_US: f64 = 3_000.0;
+
+/// Modeled serial-CPU throughput (items/µs) for the speedup denominator of
+/// CPU baselines when converting their measured work into modeled time on
+/// the paper's Xeon w5-3435X. Wall-clock is used for CPU baselines by
+/// default; this constant only feeds sanity checks.
+pub const CPU_THROUGHPUT_ITEMS_PER_US: f64 = 150.0;
+
+/// Modeled device time in microseconds for a ledger delta.
+pub fn device_time_us(delta: Snapshot) -> f64 {
+    delta.launches as f64 * T_LAUNCH_US + delta.work_items as f64 / THROUGHPUT_ITEMS_PER_US
+}
+
+/// Modeled device time in milliseconds.
+pub fn device_time_ms(delta: Snapshot) -> f64 {
+    device_time_us(delta) / 1_000.0
+}
+
+/// A scoped device timer: captures the ledger on construction and reports
+/// modeled device time + host wall time on [`DeviceTimer::stop`].
+pub struct DeviceTimer {
+    start_ledger: Snapshot,
+    start_wall: std::time::Instant,
+}
+
+/// What a [`DeviceTimer`] measured.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Modeled GPU time (ms) from the cost model.
+    pub device_ms: f64,
+    /// Wall-clock on this host (ms).
+    pub host_ms: f64,
+    /// Ledger delta (launches, work items).
+    pub ledger: Snapshot,
+}
+
+impl Default for DeviceTimer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl DeviceTimer {
+    pub fn start() -> Self {
+        DeviceTimer { start_ledger: super::ledger::snapshot(), start_wall: std::time::Instant::now() }
+    }
+
+    pub fn stop(&self) -> Measurement {
+        let delta = super::ledger::snapshot().since(self.start_ledger);
+        Measurement {
+            device_ms: device_time_ms(delta),
+            host_ms: self.start_wall.elapsed().as_secs_f64() * 1_000.0,
+            ledger: delta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_dominated_vs_throughput_dominated() {
+        // Many empty launches: launch term dominates.
+        let many_launches = Snapshot { launches: 1_000, work_items: 1_000 };
+        // One huge kernel: throughput term dominates.
+        let big_kernel = Snapshot { launches: 1, work_items: 100_000_000 };
+        let t1 = device_time_us(many_launches);
+        let t2 = device_time_us(big_kernel);
+        assert!(t1 > 0.9 * 1_000.0 * T_LAUNCH_US);
+        assert!(t2 > 0.9 * 100_000_000.0 / THROUGHPUT_ITEMS_PER_US);
+    }
+
+    #[test]
+    fn timer_measures_pool_work() {
+        let pool = crate::par::Pool::new(1);
+        let t = DeviceTimer::start();
+        pool.parallel_for(30_000, |_| {});
+        let m = t.stop();
+        assert_eq!(m.ledger.launches, 1);
+        assert_eq!(m.ledger.work_items, 30_000);
+        assert!(m.device_ms > 0.0);
+        assert!(m.host_ms >= 0.0);
+    }
+
+    #[test]
+    fn calibration_ballpark_table2() {
+        // europe_osm-scale GPU-IM: ~5k launches, ~1.5G items should land
+        // within the same order of magnitude as the paper's 320 ms.
+        let osm = Snapshot { launches: 5_000, work_items: 900_000_000 };
+        let ms = device_time_ms(osm);
+        assert!(ms > 100.0 && ms < 1_000.0, "modeled {ms} ms");
+    }
+}

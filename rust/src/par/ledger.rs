@@ -1,0 +1,85 @@
+//! Kernel-launch ledger.
+//!
+//! Every [`super::Pool`] primitive records one (or two, for scans) kernel
+//! launches and the number of flat work items. The ledger is the input to
+//! the GPU cost model ([`super::cost`]): the paper's algorithms are
+//! sequences of bulk-synchronous device kernels, so `(launches, items)`
+//! fully determines the modeled device time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static LAUNCHES: AtomicU64 = AtomicU64::new(0);
+static WORK_ITEMS: AtomicU64 = AtomicU64::new(0);
+
+/// A snapshot of the ledger counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub launches: u64,
+    pub work_items: u64,
+}
+
+impl Snapshot {
+    /// Counters accumulated since `earlier`.
+    pub fn since(self, earlier: Snapshot) -> Snapshot {
+        Snapshot {
+            launches: self.launches - earlier.launches,
+            work_items: self.work_items - earlier.work_items,
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn record_launch(items: u64) {
+    LAUNCHES.fetch_add(1, Ordering::Relaxed);
+    WORK_ITEMS.fetch_add(items, Ordering::Relaxed);
+}
+
+/// Charge device work that happens outside the pool primitives — e.g.
+/// modeled host↔device transfers (one "launch" = one copy, items = words
+/// moved). Used by the pipelines to account the paper's "Misc" phase.
+#[inline]
+pub fn charge(launches: u64, items: u64) {
+    LAUNCHES.fetch_add(launches, Ordering::Relaxed);
+    WORK_ITEMS.fetch_add(items, Ordering::Relaxed);
+}
+
+/// Read the current counters.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        launches: LAUNCHES.load(Ordering::Relaxed),
+        work_items: WORK_ITEMS.load(Ordering::Relaxed),
+    }
+}
+
+/// Reset both counters to zero (tests / per-experiment accounting).
+pub fn reset() {
+    LAUNCHES.store(0, Ordering::Relaxed);
+    WORK_ITEMS.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::Pool;
+
+    #[test]
+    fn records_launches_and_items() {
+        let pool = Pool::new(1);
+        let before = snapshot();
+        pool.parallel_for(100, |_| {});
+        pool.reduce_sum_u64(50, |_| 1);
+        let delta = snapshot().since(before);
+        assert_eq!(delta.launches, 2);
+        assert_eq!(delta.work_items, 150);
+    }
+
+    #[test]
+    fn scan_counts_two_launches() {
+        let pool = Pool::new(1);
+        let before = snapshot();
+        let _ = pool.scan_exclusive(10, |_| 1);
+        let delta = snapshot().since(before);
+        assert_eq!(delta.launches, 2);
+        assert_eq!(delta.work_items, 20);
+    }
+}

@@ -1,0 +1,409 @@
+//! Bulk-synchronous data-parallel execution substrate (the "device").
+//!
+//! The paper implements its kernels with Kokkos' three primitives —
+//! `parallel_for`, `parallel_reduce`, `parallel_scan` — on a CUDA GPU
+//! (§3.3). This environment has no GPU, so the same primitives are
+//! provided over a CPU worker pool (crossbeam scoped threads). Algorithms
+//! upstack are written *exactly* as the paper's kernels: flat loops over
+//! vertices or over the extended-CSR edge list, atomic CAS insertion,
+//! atomically-appended move lists, and prefix-sum based compaction.
+//!
+//! Every launch is recorded in a [`ledger`], from which the calibrated
+//! GPU cost model ([`cost`]) estimates what the kernel sequence would cost
+//! on the paper's RTX 4090 — see DESIGN.md §1 for the substitution
+//! rationale. Wall-clock on this host and modeled device time are reported
+//! side by side by the benchmark harness.
+
+pub mod cost;
+pub mod ledger;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// A worker pool executing bulk-synchronous parallel primitives.
+///
+/// `threads == 1` executes inline (no spawn overhead); this is the default
+/// on the single-core evaluation host. The execution *semantics* (one
+/// logical work unit per index, barriers between kernels) are identical
+/// for any thread count, and the test suite runs key kernels at 1, 2 and 4
+/// threads to check determinism-insensitivity.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Self::new(default_threads())
+    }
+}
+
+/// Thread count from `HEIPA_THREADS`, else available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("HEIPA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// `parallel_for`: execute `f(i)` for all `i in 0..n`.
+    ///
+    /// One kernel launch; `n` work items are charged to the ledger.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        ledger::record_launch(n as u64);
+        if self.threads == 1 || n < 2 * MIN_CHUNK {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let chunk = chunk_size(n, self.threads);
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..self.threads {
+                s.spawn(|_| loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
+                });
+            }
+        })
+        .expect("worker panicked in parallel_for");
+    }
+
+    /// `parallel_reduce` with an associative combiner:
+    /// `R = combine(f(0), f(1), …, f(n-1))` starting from `identity`.
+    pub fn parallel_reduce<T, F, C>(&self, n: usize, identity: T, f: F, combine: C) -> T
+    where
+        T: Send + Clone,
+        F: Fn(usize) -> T + Sync,
+        C: Fn(T, T) -> T + Sync + Send,
+    {
+        ledger::record_launch(n as u64);
+        if self.threads == 1 || n < 2 * MIN_CHUNK {
+            let mut acc = identity;
+            for i in 0..n {
+                acc = combine(acc, f(i));
+            }
+            return acc;
+        }
+        let next = AtomicUsize::new(0);
+        let chunk = chunk_size(n, self.threads);
+        let partials: Vec<T> = crossbeam_utils::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.threads)
+                .map(|_| {
+                    let identity = identity.clone();
+                    let next = &next;
+                    let f = &f;
+                    let combine = &combine;
+                    s.spawn(move |_| {
+                        let mut acc = identity;
+                        loop {
+                            let start = next.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let end = (start + chunk).min(n);
+                            for i in start..end {
+                                acc = combine(acc, f(i));
+                            }
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+        .expect("worker panicked in parallel_reduce");
+        partials.into_iter().fold(identity, |a, b| combine(a, b))
+    }
+
+    /// Convenience: `Σ f(i)` over `u64`.
+    pub fn reduce_sum_u64<F>(&self, n: usize, f: F) -> u64
+    where
+        F: Fn(usize) -> u64 + Sync,
+    {
+        self.parallel_reduce(n, 0u64, f, |a, b| a + b)
+    }
+
+    /// Convenience: `Σ f(i)` over `f64`.
+    pub fn reduce_sum_f64<F>(&self, n: usize, f: F) -> f64
+    where
+        F: Fn(usize) -> f64 + Sync,
+    {
+        self.parallel_reduce(n, 0f64, f, |a, b| a + b)
+    }
+
+    /// `parallel_scan`: exclusive prefix sum of `f(i)`; returns a vector of
+    /// length `n + 1` whose last element is the total (Kokkos semantics
+    /// plus the total, which every call site in the paper needs anyway).
+    pub fn scan_exclusive<F>(&self, n: usize, f: F) -> Vec<u64>
+    where
+        F: Fn(usize) -> u64 + Sync,
+    {
+        // Two-pass blocked scan: 2 launches, 2n work items.
+        ledger::record_launch(n as u64);
+        ledger::record_launch(n as u64);
+        let mut out = vec![0u64; n + 1];
+        if self.threads == 1 || n < 2 * MIN_CHUNK {
+            let mut acc = 0u64;
+            for i in 0..n {
+                out[i] = acc;
+                acc += f(i);
+            }
+            out[n] = acc;
+            return out;
+        }
+        let nblocks = self.threads * 4;
+        let block = n.div_ceil(nblocks);
+        let mut block_sums = vec![0u64; nblocks];
+        // Pass 1: per-block sums.
+        {
+            let bs = &mut block_sums;
+            crossbeam_utils::thread::scope(|s| {
+                for (b, slot) in bs.iter_mut().enumerate() {
+                    let f = &f;
+                    s.spawn(move |_| {
+                        let start = b * block;
+                        let end = ((b + 1) * block).min(n);
+                        let mut acc = 0u64;
+                        for i in start..end.max(start) {
+                            acc += f(i);
+                        }
+                        *slot = acc;
+                    });
+                }
+            })
+            .expect("worker panicked in scan pass 1");
+        }
+        // Serial scan of block sums.
+        let mut block_off = vec![0u64; nblocks + 1];
+        for b in 0..nblocks {
+            block_off[b + 1] = block_off[b] + block_sums[b];
+        }
+        // Pass 2: per-block exclusive scan into the output.
+        {
+            let out_ptr = SendPtr::new(&mut out);
+            let out_ref = &out_ptr;
+            crossbeam_utils::thread::scope(|s| {
+                for b in 0..nblocks {
+                    let f = &f;
+                    let off = block_off[b];
+                    s.spawn(move |_| {
+                        let start = b * block;
+                        let end = ((b + 1) * block).min(n);
+                        let mut acc = off;
+                        for i in start..end.max(start) {
+                            // SAFETY: disjoint index ranges per block.
+                            unsafe { out_ref.write(i, acc) };
+                            acc += f(i);
+                        }
+                    });
+                }
+            })
+            .expect("worker panicked in scan pass 2");
+        }
+        out[n] = block_off[nblocks];
+        out
+    }
+}
+
+const MIN_CHUNK: usize = 4096;
+
+fn chunk_size(n: usize, threads: usize) -> usize {
+    (n / (threads * 8)).clamp(MIN_CHUNK / 4, 1 << 16).max(1)
+}
+
+/// A shared mutable pointer for device-kernel-style *disjoint-index*
+/// writes: many work units write non-overlapping slots of one output
+/// array (the GPU programming model). The caller must guarantee
+/// disjointness; helpers are `unsafe` to keep that contract visible.
+pub struct SharedMut<T>(*mut T);
+unsafe impl<T> Send for SharedMut<T> {}
+unsafe impl<T> Sync for SharedMut<T> {}
+
+impl<T> SharedMut<T> {
+    pub fn new(data: &mut [T]) -> Self {
+        SharedMut(data.as_mut_ptr())
+    }
+
+    /// Write `val` to slot `i`.
+    ///
+    /// # Safety
+    /// No two concurrent work units may write the same `i`, and `i` must
+    /// be in bounds of the source slice.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, val: T) {
+        *self.0.add(i) = val;
+    }
+
+    /// Exclusive sub-slice `[start, start+len)`.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrent work units must be pairwise disjoint
+    /// and in bounds.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+type SendPtr<T> = SharedMut<T>;
+
+/// An atomically-appended list, as used for the move lists `X` and `M` in
+/// paper Alg. 4/5 ("inserted via an atomically incremented index").
+pub struct AtomicList {
+    data: Vec<AtomicU64>,
+    len: AtomicUsize,
+}
+
+impl AtomicList {
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut data = Vec::with_capacity(cap);
+        data.resize_with(cap, || AtomicU64::new(0));
+        AtomicList { data, len: AtomicUsize::new(0) }
+    }
+
+    /// Append `x`; returns its slot index.
+    #[inline]
+    pub fn push(&self, x: u64) -> usize {
+        let i = self.len.fetch_add(1, Ordering::Relaxed);
+        self.data[i].store(x, Ordering::Relaxed);
+        i
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed).min(self.data.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the contents into a `Vec` (barrier between kernels).
+    pub fn to_vec(&self) -> Vec<u64> {
+        (0..self.len()).map(|i| self.data[i].load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn reset(&self) {
+        self.len.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Atomic `f64` add via CAS on the bit pattern (device-style atomic_add).
+#[inline]
+pub fn atomic_f64_add(cell: &AtomicU64, add: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = f64::from_bits(cur) + add;
+        match cell.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pools() -> Vec<Pool> {
+        vec![Pool::new(1), Pool::new(2), Pool::new(4)]
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        for pool in pools() {
+            let n = 10_000;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={}", pool.threads());
+        }
+    }
+
+    #[test]
+    fn reduce_matches_serial() {
+        for pool in pools() {
+            let n = 50_000;
+            let total = pool.reduce_sum_u64(n, |i| i as u64);
+            assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+        }
+    }
+
+    #[test]
+    fn reduce_f64_close() {
+        for pool in pools() {
+            let n = 10_000;
+            let total = pool.reduce_sum_f64(n, |i| (i as f64).sqrt());
+            let serial: f64 = (0..n).map(|i| (i as f64).sqrt()).sum();
+            assert!((total - serial).abs() < 1e-6 * serial.abs());
+        }
+    }
+
+    #[test]
+    fn scan_matches_serial() {
+        for pool in pools() {
+            let n = 30_000;
+            let xs: Vec<u64> = (0..n).map(|i| (i % 7) as u64).collect();
+            let scan = pool.scan_exclusive(n, |i| xs[i]);
+            let mut acc = 0;
+            for i in 0..n {
+                assert_eq!(scan[i], acc, "i={} threads={}", i, pool.threads());
+                acc += xs[i];
+            }
+            assert_eq!(scan[n], acc);
+        }
+    }
+
+    #[test]
+    fn scan_empty_and_tiny() {
+        let pool = Pool::new(2);
+        assert_eq!(pool.scan_exclusive(0, |_| 1), vec![0]);
+        assert_eq!(pool.scan_exclusive(1, |_| 5), vec![0, 5]);
+    }
+
+    #[test]
+    fn atomic_list_collects_everything() {
+        for pool in pools() {
+            let list = AtomicList::with_capacity(10_000);
+            pool.parallel_for(10_000, |i| {
+                if i % 3 == 0 {
+                    list.push(i as u64);
+                }
+            });
+            let mut v = list.to_vec();
+            v.sort_unstable();
+            let expect: Vec<u64> = (0..10_000).filter(|i| i % 3 == 0).map(|i| i as u64).collect();
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn atomic_f64_add_accumulates() {
+        let pool = Pool::new(4);
+        let cell = AtomicU64::new(0f64.to_bits());
+        pool.parallel_for(10_000, |_| atomic_f64_add(&cell, 0.5));
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 5_000.0);
+    }
+}

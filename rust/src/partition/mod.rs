@@ -1,0 +1,201 @@
+//! Partitions/mappings and their quality metrics: balance, edge-cut, and
+//! the communication cost `J(C, D, Π) = Σ_{ij} C_ij · D_{Π(i)Π(j)}`.
+
+use crate::graph::CsrGraph;
+use crate::par::Pool;
+use crate::topology::Hierarchy;
+use crate::{Block, EWeight, VWeight, Vertex};
+
+/// Maximum allowed block weight `L_max = ⌈(1+ε)·c(V)/k⌉`.
+pub fn l_max(total_weight: VWeight, k: usize, eps: f64) -> VWeight {
+    ((1.0 + eps) * total_weight as f64 / k as f64).ceil() as VWeight
+}
+
+/// Per-block vertex weights `c(V_i)`.
+pub fn block_weights(g: &CsrGraph, part: &[Block], k: usize) -> Vec<VWeight> {
+    let mut w = vec![0 as VWeight; k];
+    for v in 0..g.n() {
+        w[part[v] as usize] += g.vw[v];
+    }
+    w
+}
+
+/// Heaviest block weight.
+pub fn max_block_weight(g: &CsrGraph, part: &[Block], k: usize) -> VWeight {
+    block_weights(g, part, k).into_iter().max().unwrap_or(0)
+}
+
+/// Achieved imbalance: `max_i c(V_i) · k / c(V) − 1`.
+pub fn imbalance(g: &CsrGraph, part: &[Block], k: usize) -> f64 {
+    let total = g.total_vweight();
+    if total == 0 {
+        return 0.0;
+    }
+    max_block_weight(g, part, k) as f64 * k as f64 / total as f64 - 1.0
+}
+
+/// Is the partition ε-balanced?
+pub fn is_balanced(g: &CsrGraph, part: &[Block], k: usize, eps: f64) -> bool {
+    max_block_weight(g, part, k) <= l_max(g.total_vweight(), k, eps)
+}
+
+/// Edge-cut `Σ_{i<j} ω(E_ij)` (each undirected cut edge counted once).
+pub fn edge_cut(g: &CsrGraph, part: &[Block]) -> EWeight {
+    let mut cut = 0.0;
+    for v in 0..g.n() {
+        let (nbrs, ws) = g.neighbors_w(v as Vertex);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            if part[v] != part[u as usize] {
+                cut += w;
+            }
+        }
+    }
+    cut / 2.0
+}
+
+/// Communication cost `J(C, D, Π)`. The task graph stores each
+/// communication pair as two directed slots; the paper's `Σ_{ij}` runs
+/// over the full matrix, so summing directed slots matches the definition.
+pub fn comm_cost(g: &CsrGraph, part: &[Block], h: &Hierarchy) -> f64 {
+    let mut j = 0.0;
+    for v in 0..g.n() {
+        let (nbrs, ws) = g.neighbors_w(v as Vertex);
+        let pv = part[v];
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            j += w * h.distance(pv, part[u as usize]);
+        }
+    }
+    j
+}
+
+/// Edge-parallel `J(C, D, Π)` over the extended CSR (device kernel shape).
+pub fn comm_cost_par(pool: &Pool, g: &CsrGraph, eu: &[Vertex], part: &[Block], h: &Hierarchy) -> f64 {
+    pool.reduce_sum_f64(g.num_directed(), |i| {
+        let u = eu[i] as usize;
+        let v = g.adj[i] as usize;
+        g.ew[i] * h.distance(part[u], part[v])
+    })
+}
+
+/// Block communication matrix `B[x][y] = Σ_{cut edges between x,y} w`
+/// (the "communication model graph" G_M of Kaffpa-Map; also the input to
+/// the one-to-one QAP mapping phase).
+pub fn block_comm_matrix(g: &CsrGraph, part: &[Block], k: usize) -> Vec<f64> {
+    let mut b = vec![0.0; k * k];
+    for v in 0..g.n() {
+        let (nbrs, ws) = g.neighbors_w(v as Vertex);
+        let pv = part[v] as usize;
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            let pu = part[u as usize] as usize;
+            if pu != pv {
+                b[pv * k + pu] += w;
+            }
+        }
+    }
+    b
+}
+
+/// `J` evaluated from a block communication matrix and a PE assignment
+/// `sigma : block → PE` (the two-phase decomposition: J = Σ B_xy · D_{σx σy}).
+pub fn comm_cost_blocks(bmat: &[f64], k: usize, sigma: &[Block], h: &Hierarchy) -> f64 {
+    let mut j = 0.0;
+    for x in 0..k {
+        for y in 0..k {
+            let w = bmat[x * k + y];
+            if w != 0.0 {
+                j += w * h.distance(sigma[x], sigma[y]);
+            }
+        }
+    }
+    j
+}
+
+/// Validate a mapping: right length, all PEs in range.
+pub fn validate_mapping(part: &[Block], n: usize, k: usize) -> Result<(), String> {
+    if part.len() != n {
+        return Err(format!("mapping length {} != n {}", part.len(), n));
+    }
+    if let Some(&b) = part.iter().find(|&&b| b as usize >= k) {
+        return Err(format!("PE id {b} out of range (k={k})"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::EdgeList;
+
+    fn h() -> Hierarchy {
+        Hierarchy::parse("2:2", "1:10").unwrap()
+    }
+
+    #[test]
+    fn l_max_formula() {
+        assert_eq!(l_max(100, 4, 0.03), 26);
+        assert_eq!(l_max(100, 3, 0.0), 34);
+    }
+
+    #[test]
+    fn edge_cut_path_graph() {
+        // Path 0-1-2-3 split [0,0,1,1]: one cut edge.
+        let g = gen::grid2d(4, 1, false);
+        let part = vec![0, 0, 1, 1];
+        assert_eq!(edge_cut(&g, &part), 1.0);
+    }
+
+    #[test]
+    fn comm_cost_respects_distance() {
+        let g = gen::grid2d(4, 1, false);
+        // PEs 0 and 1 share a processor (d=1); PEs 0 and 2 don't (d=10).
+        let near = vec![0, 0, 1, 1];
+        let far = vec![0, 0, 2, 2];
+        let hh = h();
+        // One cut edge, counted in both directions: J = 2·w·d.
+        assert_eq!(comm_cost(&g, &near, &hh), 2.0);
+        assert_eq!(comm_cost(&g, &far, &hh), 20.0);
+    }
+
+    #[test]
+    fn comm_cost_par_matches_serial() {
+        let pool = Pool::new(2);
+        let g = gen::rgg(800, 0.08, 5);
+        let el = EdgeList::build(&g);
+        let hh = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let part: Vec<Block> = (0..g.n()).map(|v| (v % hh.k()) as Block).collect();
+        let a = comm_cost(&g, &part, &hh);
+        let b = comm_cost_par(&pool, &g, &el.eu, &part, &hh);
+        assert!((a - b).abs() < 1e-6 * a.abs().max(1.0));
+    }
+
+    #[test]
+    fn block_matrix_consistent_with_j() {
+        let g = gen::stencil9(20, 20, 1);
+        let hh = Hierarchy::parse("2:2", "1:10").unwrap();
+        let k = hh.k();
+        let part: Vec<Block> = (0..g.n()).map(|v| (v % k) as Block).collect();
+        let bmat = block_comm_matrix(&g, &part, k);
+        let sigma: Vec<Block> = (0..k as Block).collect();
+        let j_blocks = comm_cost_blocks(&bmat, k, &sigma, &hh);
+        let j_direct = comm_cost(&g, &part, &hh);
+        assert!((j_blocks - j_direct).abs() < 1e-6 * j_direct.max(1.0));
+    }
+
+    #[test]
+    fn balance_checks() {
+        let g = gen::grid2d(10, 1, false);
+        let balanced = (0..10).map(|v| (v % 2) as Block).collect::<Vec<_>>();
+        let skewed = vec![0 as Block; 10];
+        assert!(is_balanced(&g, &balanced, 2, 0.0));
+        assert!(!is_balanced(&g, &skewed, 2, 0.5));
+        assert!(imbalance(&g, &skewed, 2) > 0.9);
+    }
+
+    #[test]
+    fn mapping_validation() {
+        assert!(validate_mapping(&[0, 1, 2], 3, 3).is_ok());
+        assert!(validate_mapping(&[0, 3], 2, 3).is_err());
+        assert!(validate_mapping(&[0], 2, 3).is_err());
+    }
+}

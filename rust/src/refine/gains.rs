@@ -1,0 +1,287 @@
+//! Per-vertex block-connectivity structure (paper §4.2, final paragraph).
+//!
+//! For every vertex a hash array of capacity `min(|N(v)|, k)` stores the
+//! neighboring blocks and the summed edge weight to each. It is built with
+//! one edge-parallel loop over the extended CSR (each thread CAS-claims a
+//! slot in its source vertex's interval), and updated after each move
+//! kernel by refilling the arrays of affected vertices from scratch — the
+//! first of the two update strategies the paper describes.
+
+use crate::graph::{CsrGraph, EdgeList};
+use crate::par::{atomic_f64_add, Pool};
+use crate::rng::hash_u64;
+use crate::{Block, Vertex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+const NULL: u32 = u32::MAX;
+
+/// Block-connectivity hash arrays for all vertices.
+pub struct ConnTable {
+    /// Slot interval per vertex (size n+1).
+    offsets: Vec<u64>,
+    keys: Vec<AtomicU32>,
+    vals: Vec<AtomicU64>,
+}
+
+impl ConnTable {
+    /// Build from scratch with an edge-parallel kernel.
+    pub fn build(pool: &Pool, g: &CsrGraph, el: &EdgeList, part: &[Block], k: usize) -> Self {
+        let n = g.n();
+        let offsets = pool.scan_exclusive(n, |v| (g.degree(v as Vertex).min(k)) as u64);
+        let slots = offsets[n] as usize;
+        let mut keys = Vec::with_capacity(slots);
+        keys.resize_with(slots, || AtomicU32::new(NULL));
+        let mut vals = Vec::with_capacity(slots);
+        vals.resize_with(slots, || AtomicU64::new(0f64.to_bits()));
+        let table = ConnTable { offsets, keys, vals };
+        // Edge-parallel fill.
+        pool.parallel_for(g.num_directed(), |i| {
+            let u = el.eu[i] as usize;
+            let b = part[g.adj[i] as usize];
+            table.insert_or_add_atomic(u, b, g.ew[i]);
+        });
+        table
+    }
+
+    /// Vertex-parallel build (the pre-ECSR baseline, ablation A3): one
+    /// thread per vertex walks its own adjacency — no atomics, but load
+    /// balance degrades with skewed degrees.
+    pub fn build_vertex_par(pool: &Pool, g: &CsrGraph, part: &[Block], k: usize) -> Self {
+        let n = g.n();
+        let offsets = pool.scan_exclusive(n, |v| (g.degree(v as Vertex).min(k)) as u64);
+        let slots = offsets[n] as usize;
+        let mut keys = Vec::with_capacity(slots);
+        keys.resize_with(slots, || AtomicU32::new(NULL));
+        let mut vals = Vec::with_capacity(slots);
+        vals.resize_with(slots, || AtomicU64::new(0f64.to_bits()));
+        let table = ConnTable { offsets, keys, vals };
+        let all: Vec<Vertex> = (0..n as Vertex).collect();
+        table.refill(pool, g, part, &all);
+        table
+    }
+
+    #[inline]
+    fn interval(&self, v: usize) -> (usize, usize) {
+        (self.offsets[v] as usize, self.offsets[v + 1] as usize)
+    }
+
+    /// CAS insert-or-accumulate into vertex `v`'s interval.
+    #[inline]
+    fn insert_or_add_atomic(&self, v: usize, b: Block, w: f64) {
+        let (start, end) = self.interval(v);
+        let len = end - start;
+        debug_assert!(len > 0);
+        let mut slot = (hash_u64(b as u64) % len as u64) as usize;
+        loop {
+            let idx = start + slot;
+            match self.keys[idx].compare_exchange(NULL, b, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => {
+                    atomic_f64_add(&self.vals[idx], w);
+                    return;
+                }
+                Err(existing) if existing == b => {
+                    atomic_f64_add(&self.vals[idx], w);
+                    return;
+                }
+                Err(_) => slot = (slot + 1) % len,
+            }
+        }
+    }
+
+    /// Connectivity of `v` to block `b` (`conn(v, b)` in the paper).
+    pub fn conn_to(&self, v: usize, b: Block) -> f64 {
+        let (start, end) = self.interval(v);
+        for idx in start..end {
+            if self.keys[idx].load(Ordering::Relaxed) == b {
+                return f64::from_bits(self.vals[idx].load(Ordering::Relaxed));
+            }
+        }
+        0.0
+    }
+
+    /// Iterate the non-empty `(block, weight)` entries of `v` into `buf`.
+    pub fn gather(&self, v: usize, buf: &mut Vec<(Block, f64)>) {
+        buf.clear();
+        let (start, end) = self.interval(v);
+        for idx in start..end {
+            let b = self.keys[idx].load(Ordering::Relaxed);
+            if b != NULL {
+                let w = f64::from_bits(self.vals[idx].load(Ordering::Relaxed));
+                if w != 0.0 {
+                    buf.push((b, w));
+                }
+            }
+        }
+    }
+
+    /// Allocation-free gather into a stack [`super::ConnBuf`] (hot path).
+    #[inline]
+    pub fn gather_buf(&self, v: usize, buf: &mut super::ConnBuf) {
+        buf.clear();
+        let (start, end) = self.interval(v);
+        for idx in start..end {
+            let b = self.keys[idx].load(Ordering::Relaxed);
+            if b != NULL {
+                let w = f64::from_bits(self.vals[idx].load(Ordering::Relaxed));
+                if w != 0.0 {
+                    buf.push(b, w);
+                }
+            }
+        }
+    }
+
+    /// Refill the arrays of every vertex in `affected` from scratch
+    /// (vertex-parallel; each thread owns its vertex's whole interval so
+    /// no atomics are needed).
+    pub fn refill(&self, pool: &Pool, g: &CsrGraph, part: &[Block], affected: &[Vertex]) {
+        pool.parallel_for(affected.len(), |i| {
+            let v = affected[i] as usize;
+            let (start, end) = self.interval(v);
+            for idx in start..end {
+                self.keys[idx].store(NULL, Ordering::Relaxed);
+                self.vals[idx].store(0f64.to_bits(), Ordering::Relaxed);
+            }
+            let len = end - start;
+            if len == 0 {
+                return;
+            }
+            let (nbrs, ws) = g.neighbors_w(v as Vertex);
+            'edges: for (&u, &w) in nbrs.iter().zip(ws) {
+                let b = part[u as usize];
+                let mut slot = (hash_u64(b as u64) % len as u64) as usize;
+                loop {
+                    let idx = start + slot;
+                    let cur = self.keys[idx].load(Ordering::Relaxed);
+                    if cur == NULL {
+                        self.keys[idx].store(b, Ordering::Relaxed);
+                        self.vals[idx].store(w.to_bits(), Ordering::Relaxed);
+                        continue 'edges;
+                    } else if cur == b {
+                        let old = f64::from_bits(self.vals[idx].load(Ordering::Relaxed));
+                        self.vals[idx].store((old + w).to_bits(), Ordering::Relaxed);
+                        continue 'edges;
+                    }
+                    slot = (slot + 1) % len;
+                }
+            }
+        });
+    }
+
+    /// The affected set of a move list: moved vertices and their neighbors,
+    /// deduplicated.
+    pub fn affected_set(g: &CsrGraph, moved: &[Vertex]) -> Vec<Vertex> {
+        let mut mark = vec![false; g.n()];
+        let mut out = Vec::with_capacity(moved.len() * 4);
+        for &v in moved {
+            if !mark[v as usize] {
+                mark[v as usize] = true;
+                out.push(v);
+            }
+            for &u in g.neighbors(v) {
+                if !mark[u as usize] {
+                    mark[u as usize] = true;
+                    out.push(u);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::rng::Rng;
+
+    fn conn_oracle(g: &CsrGraph, part: &[Block], v: usize) -> Vec<(Block, f64)> {
+        let mut m: std::collections::BTreeMap<Block, f64> = Default::default();
+        let (nbrs, ws) = g.neighbors_w(v as Vertex);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            *m.entry(part[u as usize]).or_insert(0.0) += w;
+        }
+        m.into_iter().collect()
+    }
+
+    #[test]
+    fn build_matches_oracle() {
+        let g = gen::stencil9(20, 20, 1);
+        let k = 8;
+        let mut rng = Rng::new(2);
+        let part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        for threads in [1, 4] {
+            let pool = Pool::new(threads);
+            let table = ConnTable::build(&pool, &g, &el, &part, k);
+            let mut buf = Vec::new();
+            for v in 0..g.n() {
+                table.gather(v, &mut buf);
+                buf.sort_unstable_by_key(|&(b, _)| b);
+                let oracle = conn_oracle(&g, &part, v);
+                assert_eq!(buf.len(), oracle.len(), "v={v}");
+                for (&(b, w), &(ob, ow)) in buf.iter().zip(&oracle) {
+                    assert_eq!(b, ob);
+                    assert!((w - ow).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conn_to_specific_block() {
+        let g = gen::grid2d(4, 4, false);
+        let part: Vec<Block> = (0..16).map(|v| (v % 2) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let table = ConnTable::build(&pool, &g, &el, &part, 2);
+        for v in 0..16 {
+            let oracle = conn_oracle(&g, &part, v);
+            for (b, w) in oracle {
+                assert!((table.conn_to(v, b) - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn refill_after_moves_matches_rebuild() {
+        let g = gen::rgg(800, 0.08, 3);
+        let k = 6;
+        let mut rng = Rng::new(4);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let table = ConnTable::build(&pool, &g, &el, &part, k);
+        // Move 50 random vertices.
+        let moved: Vec<Vertex> = (0..50).map(|_| rng.below(g.n() as u64) as Vertex).collect();
+        for &v in &moved {
+            part[v as usize] = rng.below(k as u64) as Block;
+        }
+        let affected = ConnTable::affected_set(&g, &moved);
+        table.refill(&pool, &g, &part, &affected);
+        // Fresh build must agree everywhere.
+        let fresh = ConnTable::build(&pool, &g, &el, &part, k);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for v in 0..g.n() {
+            table.gather(v, &mut a);
+            fresh.gather(v, &mut b);
+            a.sort_unstable_by_key(|&(x, _)| x);
+            b.sort_unstable_by_key(|&(x, _)| x);
+            assert_eq!(a.len(), b.len(), "v={v}");
+            for (&(ab, aw), &(bb, bw)) in a.iter().zip(&b) {
+                assert_eq!(ab, bb);
+                assert!((aw - bw).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn affected_set_contains_moved_and_neighbors() {
+        let g = gen::grid2d(5, 5, false);
+        let affected = ConnTable::affected_set(&g, &[12]);
+        assert!(affected.contains(&12));
+        for &u in g.neighbors(12) {
+            assert!(affected.contains(&u));
+        }
+    }
+}

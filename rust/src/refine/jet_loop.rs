@@ -1,0 +1,339 @@
+//! The refinement controller — paper Algorithm 6.
+//!
+//! Alternates unconstrained label propagation (balanced state) with weak /
+//! strong rebalancing (unbalanced state; at most two consecutive weak
+//! steps before a strong one), keeping the best feasible mapping found.
+//! The iteration counter resets whenever the objective improves by more
+//! than the factor `φ = 0.999` (or balance improves while infeasible), and
+//! the loop ends after `iter_limit` (12; 18 for the *ultra* flavor)
+//! iterations without significant progress.
+
+use super::gains::ConnTable;
+use super::jet_lp::{Filter, JetLp};
+use super::rebalance::{rebalance, Strength};
+use super::Objective;
+use crate::graph::{CsrGraph, EdgeList};
+use crate::par::Pool;
+use crate::partition::block_weights;
+use crate::{Block, VWeight, Vertex};
+
+/// Controller configuration (constants transferred from Jet).
+#[derive(Clone, Debug)]
+pub struct JetConfig {
+    /// Iterations without significant improvement before stopping (12).
+    pub iter_limit: usize,
+    /// Consecutive weak rebalances before a strong one (2).
+    pub weak_limit: usize,
+    /// Significant-improvement factor φ (0.999).
+    pub phi: f64,
+    /// First-filter flavor for LP.
+    pub filter: Filter,
+    /// Use the mapping objective `J` for the rebalancing loss too
+    /// (ablation A2; the paper ships with edge-cut loss: `false`).
+    pub rebalance_with_comm_obj: bool,
+    /// Seed for the deterministic random choices in rebalancing.
+    pub seed: u64,
+}
+
+impl Default for JetConfig {
+    fn default() -> Self {
+        JetConfig {
+            iter_limit: 12,
+            weak_limit: 2,
+            phi: 0.999,
+            filter: Filter::NonNegative,
+            rebalance_with_comm_obj: false,
+            seed: 0,
+        }
+    }
+}
+
+impl JetConfig {
+    /// The *ultra* flavor: 18 refinement iterations.
+    pub fn ultra(mut self) -> Self {
+        self.iter_limit = 18;
+        self
+    }
+}
+
+/// Statistics of one controller run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefineStats {
+    pub iterations: usize,
+    pub lp_steps: usize,
+    pub weak_steps: usize,
+    pub strong_steps: usize,
+    pub moves: usize,
+    /// Objective of the returned mapping.
+    pub final_objective: f64,
+}
+
+/// Evaluate the controller objective with an edge-parallel reduction.
+fn eval_objective(pool: &Pool, g: &CsrGraph, el: &EdgeList, part: &[Block], obj: &Objective) -> f64 {
+    match obj {
+        Objective::Cut => {
+            pool.reduce_sum_f64(g.num_directed(), |i| {
+                let u = el.eu[i] as usize;
+                let v = g.adj[i] as usize;
+                if part[u] != part[v] {
+                    g.ew[i]
+                } else {
+                    0.0
+                }
+            }) / 2.0
+        }
+        Objective::Comm(h) => crate::partition::comm_cost_par(pool, g, &el.eu, part, h),
+        Objective::CommMat(m) => pool.reduce_sum_f64(g.num_directed(), |i| {
+            let u = el.eu[i] as usize;
+            let v = g.adj[i] as usize;
+            g.ew[i] * m.get(part[u], part[v])
+        }),
+    }
+}
+
+/// Run Algorithm 6 on `part` in place. Returns run statistics.
+#[allow(clippy::too_many_arguments)]
+pub fn jet_refine(
+    pool: &Pool,
+    g: &CsrGraph,
+    el: &EdgeList,
+    part: &mut Vec<Block>,
+    k: usize,
+    l_max: VWeight,
+    obj: &Objective,
+    cfg: &JetConfig,
+) -> RefineStats {
+    let n = g.n();
+    let mut stats = RefineStats::default();
+    if n == 0 || k <= 1 {
+        stats.final_objective = eval_objective(pool, g, el, part, obj);
+        return stats;
+    }
+    // §Perf opt 1: materialize the distance matrix once per refine call —
+    // O(1) distance lookups in the gain kernels instead of the O(ℓ)
+    // division oracle.
+    let dmat = obj.materialize();
+    let obj: &Objective = &match &dmat {
+        Some(m) => Objective::CommMat(m),
+        None => *obj,
+    };
+
+    let mut cur = part.clone();
+    let mut bw = block_weights(g, &cur, k);
+    let conn = ConnTable::build(pool, g, el, &cur, k);
+    let mut lp = JetLp::new(n);
+
+    let max_bw = |bw: &[VWeight]| bw.iter().copied().max().unwrap_or(0);
+
+    // Best (returned) mapping state.
+    let mut best = part.clone();
+    let mut best_balanced = max_bw(&bw) <= l_max;
+    let mut best_j = eval_objective(pool, g, el, &best, obj);
+    let mut best_imb = max_bw(&bw);
+
+    let mut i = 0usize;
+    let mut i_w = 0usize;
+    let mut empty_rounds = 0usize;
+    let reb_obj_comm = cfg.rebalance_with_comm_obj;
+
+    while i < cfg.iter_limit {
+        i += 1;
+        stats.iterations += 1;
+
+        let (moves, dests): (Vec<Vertex>, Vec<Block>) = if max_bw(&bw) <= l_max {
+            stats.lp_steps += 1;
+            i_w = 0;
+            let moves = lp.run(pool, g, &conn, &cur, obj, cfg.filter);
+            let dests = moves.iter().map(|&v| lp.dest_of(v)).collect();
+            (moves, dests)
+        } else {
+            let strength = if i_w < cfg.weak_limit {
+                i_w += 1;
+                stats.weak_steps += 1;
+                Strength::Weak
+            } else {
+                i_w = 0;
+                stats.strong_steps += 1;
+                Strength::Strong
+            };
+            let reb_obj = if reb_obj_comm { *obj } else { Objective::Cut };
+            let (moves, dest_arr) = rebalance(
+                pool,
+                g,
+                &conn,
+                &cur,
+                &bw,
+                k,
+                l_max,
+                &reb_obj,
+                strength,
+                cfg.seed ^ (i as u64) << 8,
+            );
+            let dests = moves.iter().map(|&v| dest_arr[v as usize]).collect();
+            (moves, dests)
+        };
+
+        // Move(M, Π''): apply, update block weights and the conn table.
+        stats.moves += moves.len();
+        for (idx, &v) in moves.iter().enumerate() {
+            let vi = v as usize;
+            let to = dests[idx];
+            bw[cur[vi] as usize] -= g.vw[vi];
+            bw[to as usize] += g.vw[vi];
+            cur[vi] = to;
+        }
+        if !moves.is_empty() {
+            let affected = ConnTable::affected_set(g, &moves);
+            conn.refill(pool, g, &cur, &affected);
+        }
+
+        // Lines 16–21: best-solution tracking.
+        let cur_max = max_bw(&bw);
+        if cur_max <= l_max {
+            let j = eval_objective(pool, g, el, &cur, obj);
+            let prev_best_j = best_j;
+            if !best_balanced || j < best_j {
+                best.copy_from_slice(&cur);
+                best_j = j;
+                best_balanced = true;
+                best_imb = cur_max;
+            }
+            if j < cfg.phi * prev_best_j {
+                i = 0;
+            }
+        } else if !best_balanced && cur_max < best_imb {
+            best.copy_from_slice(&cur);
+            best_imb = cur_max;
+            best_j = eval_objective(pool, g, el, &cur, obj);
+            i = 0;
+        }
+        // Fixed-point detection: one empty LP round is not convergence —
+        // vertices locked in the previous round are unlocked for the next
+        // one. Two consecutive empty rounds on a balanced partition are.
+        if moves.is_empty() {
+            empty_rounds += 1;
+            if empty_rounds >= 2 && cur_max <= l_max {
+                break;
+            }
+        } else {
+            empty_rounds = 0;
+        }
+    }
+
+    stats.final_objective = best_j;
+    *part = best;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{comm_cost, edge_cut, is_balanced, l_max as lmax_of};
+    use crate::rng::Rng;
+    use crate::topology::Hierarchy;
+
+    #[test]
+    fn refines_random_mapping_to_balanced_low_cost() {
+        let g = gen::grid2d(24, 24, false);
+        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let k = h.k();
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let mut rng = Rng::new(1);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let before = comm_cost(&g, &part, &h);
+        let stats = jet_refine(
+            &pool, &g, &el, &mut part, k, lmax, &Objective::Comm(&h), &JetConfig::default(),
+        );
+        let after = comm_cost(&g, &part, &h);
+        assert!(is_balanced(&g, &part, k, 0.031), "not balanced");
+        assert!(after < before * 0.8, "{before} -> {after}");
+        assert!(stats.lp_steps > 0);
+        assert!((stats.final_objective - after).abs() < 1e-6 * after.max(1.0));
+    }
+
+    #[test]
+    fn recovers_balance_from_overloaded_start() {
+        let g = gen::rgg(1_500, 0.06, 3);
+        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let k = h.k();
+        let lmax = lmax_of(g.total_vweight(), k, 0.05);
+        // 80% in block 0.
+        let mut rng = Rng::new(5);
+        let mut part: Vec<Block> = (0..g.n())
+            .map(|_| if rng.f64() < 0.8 { 0 } else { rng.below(k as u64) as Block })
+            .collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let stats = jet_refine(
+            &pool, &g, &el, &mut part, k, lmax, &Objective::Comm(&h), &JetConfig::default(),
+        );
+        assert!(is_balanced(&g, &part, k, 0.051), "still imbalanced");
+        assert!(stats.weak_steps + stats.strong_steps > 0);
+    }
+
+    #[test]
+    fn works_with_edge_cut_objective() {
+        let g = gen::stencil9(20, 20, 7);
+        let k = 8;
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let mut rng = Rng::new(9);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let before = edge_cut(&g, &part);
+        jet_refine(
+            &pool,
+            &g,
+            &el,
+            &mut part,
+            k,
+            lmax,
+            &Objective::Cut,
+            &JetConfig { filter: Filter::JetNegative { c_factor: 0.25 }, ..Default::default() },
+        );
+        let after = edge_cut(&g, &part);
+        assert!(after < before * 0.7, "{before} -> {after}");
+        assert!(is_balanced(&g, &part, k, 0.031));
+    }
+
+    #[test]
+    fn ultra_at_least_as_good_on_average() {
+        let g = gen::grid2d(20, 20, false);
+        let h = Hierarchy::parse("2:4", "1:10").unwrap();
+        let k = h.k();
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut sum_def = 0.0;
+        let mut sum_ultra = 0.0;
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(seed);
+            let init: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+            let mut p1 = init.clone();
+            jet_refine(&pool, &g, &el, &mut p1, k, lmax, &Objective::Comm(&h), &JetConfig::default());
+            let mut p2 = init;
+            jet_refine(
+                &pool, &g, &el, &mut p2, k, lmax, &Objective::Comm(&h),
+                &JetConfig::default().ultra(),
+            );
+            sum_def += comm_cost(&g, &p1, &h);
+            sum_ultra += comm_cost(&g, &p2, &h);
+        }
+        assert!(sum_ultra <= sum_def * 1.05, "ultra much worse: {sum_ultra} vs {sum_def}");
+    }
+
+    #[test]
+    fn k1_graceful() {
+        let g = gen::grid2d(5, 5, false);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut part = vec![0 as Block; g.n()];
+        let stats = jet_refine(
+            &pool, &g, &el, &mut part, 1, g.total_vweight(), &Objective::Cut, &JetConfig::default(),
+        );
+        assert_eq!(stats.iterations, 0);
+    }
+}

@@ -1,0 +1,262 @@
+//! Unconstrained label propagation — paper Algorithm 4.
+//!
+//! Two device kernels. Kernel 1 (vertex-parallel): every unlocked vertex
+//! picks its best destination block by the mapping gain (Eq. 1, via the
+//! connectivity table); non-negative candidates enter the list `X` through
+//! an atomic index. For process mapping only non-negative moves pass this
+//! first filter (the paper found Jet's negative-move filter ineffective,
+//! since `G_b(v)` carries distance factors that dwarf `conn(v, Π(v))`; the
+//! original Jet filter is still available for the edge-cut objective used
+//! by our Jet reimplementation). Kernel 2 (list-parallel): each candidate's
+//! gain is re-evaluated under the approximate future state — neighbors
+//! earlier in the implicit ordering (gain desc, id asc) are assumed moved —
+//! and survivors enter the final move list `M`.
+
+use super::gains::ConnTable;
+use super::Objective;
+use crate::graph::CsrGraph;
+use crate::par::{AtomicList, Pool};
+use crate::{Block, Vertex};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+const NO_DEST: u32 = u32::MAX;
+
+/// Scratch state for Algorithm 4, reused across iterations.
+pub struct JetLp {
+    /// Destination `Π'(v)` of each candidate (NO_DEST otherwise).
+    pub dest: Vec<AtomicU32>,
+    /// First-filter gain `G_{Π'(v)}(v)` of each candidate.
+    pub gain: Vec<f64>,
+    /// Vertices locked for this iteration (moved in the previous one).
+    pub locked: Vec<bool>,
+}
+
+/// The negative-move filter of the first kernel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Filter {
+    /// Only `G ≥ 0` (the paper's choice for process mapping).
+    NonNegative,
+    /// Jet's original: `G ≥ 0 ∨ −G < ⌊c_f · conn(v, Π(v))⌋` (edge-cut).
+    JetNegative {
+        /// The constant `c ∈ [0,1]` controlling negative-move tolerance.
+        c_factor: f64,
+    },
+}
+
+impl JetLp {
+    pub fn new(n: usize) -> Self {
+        let mut dest = Vec::with_capacity(n);
+        dest.resize_with(n, || AtomicU32::new(NO_DEST));
+        JetLp { dest, gain: vec![0.0; n], locked: vec![false; n] }
+    }
+
+    /// Run one unconstrained LP step. Returns the final move list `M`
+    /// (destinations are in `self.dest`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        pool: &Pool,
+        g: &CsrGraph,
+        conn: &ConnTable,
+        part: &[Block],
+        obj: &Objective,
+        filter: Filter,
+    ) -> Vec<Vertex> {
+        let n = g.n();
+        let x = AtomicList::with_capacity(n);
+        // Reset candidate state.
+        pool.parallel_for(n, |v| {
+            self.dest[v].store(NO_DEST, Ordering::Relaxed);
+        });
+        let gain_ptr = crate::par::SharedMut::new(&mut self.gain);
+
+        // Kernel 1: best destination + first filter.
+        {
+            let locked = &self.locked;
+            let dest = &self.dest;
+            pool.parallel_for(n, |v| {
+                if locked[v] {
+                    return;
+                }
+                let from = part[v];
+                let mut buf = super::ConnBuf::new();
+                conn.gather_buf(v, &mut buf);
+                let mut best: Option<(f64, Block)> = None;
+                buf.for_each(|b, _| {
+                    if b == from {
+                        return;
+                    }
+                    let gn = obj.gain_buf(&buf, from, b);
+                    if best.map(|(bg, bb)| gn > bg || (gn == bg && b < bb)).unwrap_or(true) {
+                        best = Some((gn, b));
+                    }
+                });
+                let Some((gn, b)) = best else { return };
+                let pass = match filter {
+                    Filter::NonNegative => gn >= 0.0,
+                    Filter::JetNegative { c_factor } => {
+                        gn >= 0.0 || -gn < (c_factor * conn.conn_to(v, from)).floor()
+                    }
+                };
+                if pass {
+                    dest[v].store(b, Ordering::Relaxed);
+                    // SAFETY: each v is written by exactly one work unit.
+                    unsafe { gain_ptr.write(v, gn) };
+                    x.push(v as u64);
+                }
+            });
+        }
+
+        let candidates = x.to_vec();
+
+        // Kernel 2: re-evaluate under the approximate future state.
+        let moves = AtomicList::with_capacity(candidates.len());
+        {
+            let dest = &self.dest;
+            let gain = &self.gain;
+            pool.parallel_for(candidates.len(), |i| {
+                let v = candidates[i] as usize;
+                let from = part[v];
+                let to = dest[v].load(Ordering::Relaxed);
+                let my_gain = gain[v];
+                // Recompute the gain edge-by-edge with neighbors that are
+                // earlier in the ordering assumed moved.
+                let (nbrs, ws) = g.neighbors_w(v as Vertex);
+                let mut buf = super::ConnBuf::new();
+                for (&u, &w) in nbrs.iter().zip(ws) {
+                    let ui = u as usize;
+                    let udest = dest[ui].load(Ordering::Relaxed);
+                    let u_block = if udest != NO_DEST && earlier(gain[ui], u, my_gain, v as Vertex) {
+                        udest
+                    } else {
+                        part[ui]
+                    };
+                    buf.add(u_block, w);
+                }
+                let new_gain = obj.gain_buf(&buf, from, to);
+                if new_gain >= 0.0 {
+                    moves.push(v as u64);
+                }
+            });
+        }
+
+        let mut final_moves: Vec<Vertex> = moves.to_vec().into_iter().map(|v| v as Vertex).collect();
+        final_moves.sort_unstable(); // determinism for tests/benches
+
+        // Lock moved vertices for the next iteration (anti-oscillation).
+        for l in self.locked.iter_mut() {
+            *l = false;
+        }
+        for &v in &final_moves {
+            self.locked[v as usize] = true;
+        }
+        final_moves
+    }
+
+    /// Destination of `v` from the last run.
+    pub fn dest_of(&self, v: Vertex) -> Block {
+        self.dest[v as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// Implicit ordering: `u` earlier than `v` iff gain greater, ties by id.
+#[inline]
+fn earlier(gain_u: f64, u: Vertex, gain_v: f64, v: Vertex) -> bool {
+    gain_u > gain_v || (gain_u == gain_v && u < v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, EdgeList};
+    use crate::partition::{comm_cost, edge_cut};
+    use crate::rng::Rng;
+    use crate::topology::Hierarchy;
+
+    fn apply_moves(part: &mut [Block], lp: &JetLp, moves: &[Vertex]) {
+        for &v in moves {
+            part[v as usize] = lp.dest_of(v);
+        }
+    }
+
+    #[test]
+    fn lp_step_reduces_comm_cost() {
+        let g = gen::grid2d(16, 16, false);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let k = h.k();
+        let mut rng = Rng::new(1);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut lp = JetLp::new(g.n());
+        let before = comm_cost(&g, &part, &h);
+        let conn = ConnTable::build(&pool, &g, &el, &part, k);
+        let moves = lp.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative);
+        assert!(!moves.is_empty());
+        apply_moves(&mut part, &lp, &moves);
+        let after = comm_cost(&g, &part, &h);
+        assert!(after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn lp_step_reduces_edge_cut_with_jet_filter() {
+        let g = gen::rgg(1_000, 0.07, 2);
+        let k = 4;
+        let mut rng = Rng::new(3);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let mut lp = JetLp::new(g.n());
+        let before = edge_cut(&g, &part);
+        for _ in 0..4 {
+            let conn = ConnTable::build(&pool, &g, &el, &part, k);
+            let moves = lp.run(
+                &pool,
+                &g,
+                &conn,
+                &part,
+                &Objective::Cut,
+                Filter::JetNegative { c_factor: 0.25 },
+            );
+            apply_moves(&mut part, &lp, &moves);
+        }
+        let after = edge_cut(&g, &part);
+        assert!(after < before * 0.9, "{before} -> {after}");
+    }
+
+    #[test]
+    fn locked_vertices_do_not_move_next_round() {
+        let g = gen::grid2d(8, 8, false);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let mut rng = Rng::new(5);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(4) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut lp = JetLp::new(g.n());
+        let conn = ConnTable::build(&pool, &g, &el, &part, 4);
+        let moves1 = lp.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative);
+        apply_moves(&mut part, &lp, &moves1);
+        let conn2 = ConnTable::build(&pool, &g, &el, &part, 4);
+        let moves2 = lp.run(&pool, &g, &conn2, &part, &Objective::Comm(&h), Filter::NonNegative);
+        for v in &moves2 {
+            assert!(!moves1.contains(v), "vertex {v} oscillated");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let g = gen::stencil9(16, 16, 7);
+        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let k = h.k();
+        let mut rng = Rng::new(9);
+        let part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let el = EdgeList::build(&g);
+        let run = |threads: usize| {
+            let pool = Pool::new(threads);
+            let mut lp = JetLp::new(g.n());
+            let conn = ConnTable::build(&pool, &g, &el, &part, k);
+            lp.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative)
+        };
+        assert_eq!(run(1), run(4));
+    }
+}

@@ -1,0 +1,256 @@
+//! Serial k-way label propagation (Raghavan et al., as used for
+//! refinement by Kaffpa/IntMap): visit vertices in random order, move a
+//! vertex to the neighboring block with the best strictly-positive gain if
+//! the balance constraint stays satisfied. Works for both objectives
+//! (edge-cut and `J`), which is exactly how IntMap integrates mapping into
+//! the multilevel scheme.
+
+use super::Objective;
+use crate::graph::CsrGraph;
+use crate::partition::block_weights;
+use crate::rng::Rng;
+use crate::{Block, VWeight, Vertex};
+
+/// Run `rounds` of serial label propagation; returns the number of moves.
+pub fn lp_refine_serial(
+    g: &CsrGraph,
+    part: &mut [Block],
+    k: usize,
+    l_max: VWeight,
+    obj: &Objective,
+    rounds: usize,
+    seed: u64,
+) -> usize {
+    let n = g.n();
+    let mut bw = block_weights(g, part, k);
+    let mut rng = Rng::new(seed);
+    let mut order: Vec<Vertex> = (0..n as Vertex).collect();
+    let mut conn: Vec<(Block, f64)> = Vec::with_capacity(32);
+    let mut total_moves = 0usize;
+
+    for _round in 0..rounds {
+        rng.shuffle(&mut order);
+        let mut moves = 0usize;
+        for &v in &order {
+            let vi = v as usize;
+            let from = part[vi];
+            // Gather block connectivity of v.
+            conn.clear();
+            let (nbrs, ws) = g.neighbors_w(v);
+            'edges: for (&u, &w) in nbrs.iter().zip(ws) {
+                let b = part[u as usize];
+                for entry in conn.iter_mut() {
+                    if entry.0 == b {
+                        entry.1 += w;
+                        continue 'edges;
+                    }
+                }
+                conn.push((b, w));
+            }
+            // Best strictly-positive move respecting balance.
+            let mut best: Option<(f64, Block)> = None;
+            for &(b, _) in conn.iter() {
+                if b == from || bw[b as usize] + g.vw[vi] > l_max {
+                    continue;
+                }
+                let gain = obj.gain(&conn, from, b);
+                if gain > 1e-12 && best.map(|(bg, _)| gain > bg).unwrap_or(true) {
+                    best = Some((gain, b));
+                }
+            }
+            if let Some((_, to)) = best {
+                part[vi] = to;
+                bw[from as usize] -= g.vw[vi];
+                bw[to as usize] += g.vw[vi];
+                moves += 1;
+            }
+        }
+        total_moves += moves;
+        if moves == 0 {
+            break;
+        }
+    }
+    total_moves
+}
+
+/// Serial balance repair: move minimum-loss boundary vertices out of
+/// overloaded blocks until every block satisfies `L_max` (the serial
+/// counterpart of Alg. 5; used by the IntMap-like baseline whose LP can
+/// only preserve balance, not restore it). Returns the number of moves.
+pub fn force_balance_serial(
+    g: &CsrGraph,
+    part: &mut [Block],
+    k: usize,
+    l_max: VWeight,
+    obj: &Objective,
+    seed: u64,
+) -> usize {
+    let n = g.n();
+    let mut bw = block_weights(g, part, k);
+    let mut moves = 0usize;
+    let mut conn: Vec<(Block, f64)> = Vec::with_capacity(32);
+    let mut rng = Rng::new(seed);
+
+    for _round in 0..4 * k {
+        let Some(over) = (0..k).find(|&b| bw[b] > l_max) else { break };
+        // Collect candidate moves out of `over`, cheapest loss first.
+        let mut cands: Vec<(f64, Vertex, Block)> = Vec::new();
+        for v in 0..n {
+            if part[v] != over as Block {
+                continue;
+            }
+            conn.clear();
+            let (nbrs, ws) = g.neighbors_w(v as Vertex);
+            'edges: for (&u, &w) in nbrs.iter().zip(ws) {
+                let b = part[u as usize];
+                for e in conn.iter_mut() {
+                    if e.0 == b {
+                        e.1 += w;
+                        continue 'edges;
+                    }
+                }
+                conn.push((b, w));
+            }
+            let mut best: Option<(f64, Block)> = None;
+            for &(b, _) in conn.iter() {
+                if b as usize == over || bw[b as usize] + g.vw[v] > l_max {
+                    continue;
+                }
+                let gain = obj.gain(&conn, over as Block, b);
+                if best.map(|(bg, _)| gain > bg).unwrap_or(true) {
+                    best = Some((gain, b));
+                }
+            }
+            if best.is_none() {
+                // Any underloaded block (disconnected destination).
+                let start = rng.below_usize(k);
+                for i in 0..k {
+                    let b = ((start + i) % k) as Block;
+                    if b as usize != over && bw[b as usize] + g.vw[v] <= l_max {
+                        best = Some((obj.gain(&conn, over as Block, b), b));
+                        break;
+                    }
+                }
+            }
+            if let Some((gain, b)) = best {
+                cands.push((-gain, v as Vertex, b)); // sort by loss ascending
+            }
+        }
+        cands.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut progressed = false;
+        for (_, v, dest) in cands {
+            if bw[over] <= l_max {
+                break;
+            }
+            let vi = v as usize;
+            if bw[dest as usize] + g.vw[vi] > l_max {
+                continue;
+            }
+            part[vi] = dest;
+            bw[over] -= g.vw[vi];
+            bw[dest as usize] += g.vw[vi];
+            moves += 1;
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{comm_cost, edge_cut, is_balanced, l_max};
+    use crate::topology::Hierarchy;
+
+    fn random_part(n: usize, k: usize, seed: u64) -> Vec<Block> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(k as u64) as Block).collect()
+    }
+
+    #[test]
+    fn improves_edge_cut() {
+        let g = gen::grid2d(20, 20, false);
+        let k = 4;
+        let lmax = l_max(g.total_vweight(), k, 0.10);
+        let mut part = random_part(g.n(), k, 1);
+        let before = edge_cut(&g, &part);
+        lp_refine_serial(&g, &mut part, k, lmax, &Objective::Cut, 10, 2);
+        let after = edge_cut(&g, &part);
+        assert!(after < before * 0.8, "{before} -> {after}");
+        assert!(is_balanced(&g, &part, k, 0.10 + 1e-9) || before == after);
+    }
+
+    #[test]
+    fn improves_comm_cost() {
+        let g = gen::grid2d(16, 16, false);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let k = h.k();
+        let lmax = l_max(g.total_vweight(), k, 0.20);
+        let mut part = random_part(g.n(), k, 3);
+        let before = comm_cost(&g, &part, &h);
+        lp_refine_serial(&g, &mut part, k, lmax, &Objective::Comm(&h), 10, 4);
+        let after = comm_cost(&g, &part, &h);
+        assert!(after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn comm_objective_prefers_near_blocks() {
+        // LP under J should keep cut edges on cheap links when possible;
+        // compare against cut-objective result measured in J.
+        let g = gen::stencil9(16, 16, 5);
+        let h = Hierarchy::parse("4:4", "1:100").unwrap();
+        let k = h.k();
+        let lmax = l_max(g.total_vweight(), k, 0.25);
+        let seed_part = random_part(g.n(), k, 7);
+
+        let mut part_cut = seed_part.clone();
+        lp_refine_serial(&g, &mut part_cut, k, lmax, &Objective::Cut, 8, 8);
+        let mut part_comm = seed_part;
+        lp_refine_serial(&g, &mut part_comm, k, lmax, &Objective::Comm(&h), 8, 8);
+
+        let j_cut = comm_cost(&g, &part_cut, &h);
+        let j_comm = comm_cost(&g, &part_comm, &h);
+        assert!(j_comm <= j_cut * 1.05, "J-objective did much worse: {j_comm} vs {j_cut}");
+    }
+
+    #[test]
+    fn force_balance_repairs_overload() {
+        let g = gen::rgg(1_200, 0.07, 6);
+        let k = 8;
+        let mut rng = Rng::new(7);
+        let mut part: Vec<Block> = (0..g.n())
+            .map(|_| if rng.f64() < 0.6 { 0 } else { rng.below(k as u64) as Block })
+            .collect();
+        let lmax = l_max(g.total_vweight(), k, 0.05);
+        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let moves = force_balance_serial(&g, &mut part, k, lmax, &Objective::Comm(&h), 1);
+        assert!(moves > 0);
+        assert!(
+            crate::partition::max_block_weight(&g, &part, k) <= lmax,
+            "still overloaded after repair"
+        );
+    }
+
+    #[test]
+    fn force_balance_noop_when_balanced() {
+        let g = gen::grid2d(8, 8, false);
+        let mut part: Vec<Block> = (0..g.n()).map(|v| (v % 4) as Block).collect();
+        let lmax = l_max(g.total_vweight(), 4, 0.05);
+        let moves = force_balance_serial(&g, &mut part, 4, lmax, &Objective::Cut, 1);
+        assert_eq!(moves, 0);
+    }
+
+    #[test]
+    fn never_violates_balance_if_start_balanced() {
+        let g = gen::grid2d(12, 12, false);
+        let k = 3;
+        let lmax = l_max(g.total_vweight(), k, 0.05);
+        let mut part: Vec<Block> = (0..g.n()).map(|v| (v % k) as Block).collect();
+        lp_refine_serial(&g, &mut part, k, lmax, &Objective::Cut, 5, 1);
+        assert!(is_balanced(&g, &part, k, 0.05 + 1e-9));
+    }
+}

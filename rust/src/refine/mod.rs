@@ -1,0 +1,263 @@
+//! Refinement: local search minimizing edge-cut or the mapping objective
+//! `J(C, D, Π)`.
+//!
+//! Serial algorithms (2-way FM, k-way label propagation) power the CPU
+//! baselines and the initial-partitioning substrate. The device-style
+//! algorithms are the paper's contribution: unconstrained label
+//! propagation (Alg. 4, [`jet_lp`]), weak/strong rebalancing (Alg. 5,
+//! [`rebalance`]) and the refinement controller (Alg. 6, [`jet_loop`]),
+//! all built on the per-vertex block-connectivity structure ([`gains`]).
+
+pub mod fm2;
+pub mod gains;
+pub mod jet_loop;
+pub mod jet_lp;
+pub mod lp_serial;
+pub mod rebalance;
+
+use crate::topology::{DistanceMatrix, Hierarchy};
+use crate::Block;
+
+/// The objective a refinement pass minimizes.
+#[derive(Clone, Copy)]
+pub enum Objective<'a> {
+    /// Edge-cut (graph partitioning; distance vector `1:…:1`).
+    Cut,
+    /// Communication cost `J(C, D, Π)` under a hierarchy (process
+    /// mapping), using the implicit O(ℓ) distance oracle.
+    Comm(&'a Hierarchy),
+    /// Communication cost with the materialized `k × k` distance matrix —
+    /// the paper's O(k²)-space / O(1)-lookup representation, used on the
+    /// device refinement hot path (§Perf opt 1).
+    CommMat(&'a DistanceMatrix),
+}
+
+impl<'a> Objective<'a> {
+    /// Gain of moving a vertex from `from` to `to`, given its block
+    /// connectivities `conn = [(block, Σ edge weight to block)]`
+    /// (paper Eq. 1):
+    ///
+    /// * cut: `conn(to) − conn(from)`
+    /// * comm: `Σ_b conn(b)·(D[from,b] − D[to,b])`
+    pub fn gain(&self, conn: &[(Block, f64)], from: Block, to: Block) -> f64 {
+        match self {
+            Objective::Cut => {
+                let mut cf = 0.0;
+                let mut ct = 0.0;
+                for &(b, w) in conn {
+                    if b == from {
+                        cf = w;
+                    } else if b == to {
+                        ct = w;
+                    }
+                }
+                ct - cf
+            }
+            Objective::Comm(h) => {
+                let mut g = 0.0;
+                for &(b, w) in conn {
+                    g += w * (h.distance(from, b) - h.distance(to, b));
+                }
+                g
+            }
+            Objective::CommMat(m) => {
+                let rf = m.row(from);
+                let rt = m.row(to);
+                let mut g = 0.0;
+                for &(b, w) in conn {
+                    g += w * (rf[b as usize] - rt[b as usize]);
+                }
+                g
+            }
+        }
+    }
+
+    /// Materialize the hot-path form: `Comm` becomes `CommMat`.
+    pub fn materialize(&self) -> Option<DistanceMatrix> {
+        match self {
+            Objective::Comm(h) => Some(h.distance_matrix()),
+            _ => None,
+        }
+    }
+}
+
+/// Allocation-free block-connectivity buffer for the per-vertex gain
+/// kernels (§Perf opt 2): up to `STACK` entries live on the stack; the
+/// rare high-degree coarse vertex spills to the heap.
+pub struct ConnBuf {
+    stack: [(Block, f64); ConnBuf::STACK],
+    len: usize,
+    spill: Vec<(Block, f64)>,
+}
+
+impl Default for ConnBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConnBuf {
+    pub const STACK: usize = 96;
+
+    #[inline]
+    pub fn new() -> Self {
+        ConnBuf { stack: [(0, 0.0); Self::STACK], len: 0, spill: Vec::new() }
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.spill.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, b: Block, w: f64) {
+        if self.len < Self::STACK {
+            self.stack[self.len] = (b, w);
+            self.len += 1;
+        } else {
+            self.spill.push((b, w));
+        }
+    }
+
+    /// Insert-or-accumulate by linear scan (conn lists are short).
+    #[inline]
+    pub fn add(&mut self, b: Block, w: f64) {
+        for e in self.stack[..self.len].iter_mut() {
+            if e.0 == b {
+                e.1 += w;
+                return;
+            }
+        }
+        for e in self.spill.iter_mut() {
+            if e.0 == b {
+                e.1 += w;
+                return;
+            }
+        }
+        self.push(b, w);
+    }
+
+    /// Entries as a slice when no spill occurred; falls back to a unified
+    /// iteration otherwise.
+    #[inline]
+    pub fn for_each(&self, mut f: impl FnMut(Block, f64)) {
+        for &(b, w) in &self.stack[..self.len] {
+            f(b, w);
+        }
+        for &(b, w) in &self.spill {
+            f(b, w);
+        }
+    }
+
+    #[inline]
+    pub fn slice(&self) -> &[(Block, f64)] {
+        debug_assert!(self.spill.is_empty() || self.len < Self::STACK);
+        &self.stack[..self.len]
+    }
+
+    #[inline]
+    pub fn has_spill(&self) -> bool {
+        !self.spill.is_empty()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0 && self.spill.is_empty()
+    }
+}
+
+impl<'a> Objective<'a> {
+    /// [`Objective::gain`] over a [`ConnBuf`] (handles spill).
+    pub fn gain_buf(&self, conn: &ConnBuf, from: Block, to: Block) -> f64 {
+        if !conn.has_spill() {
+            return self.gain(conn.slice(), from, to);
+        }
+        match self {
+            Objective::Cut => {
+                let mut cf = 0.0;
+                let mut ct = 0.0;
+                conn.for_each(|b, w| {
+                    if b == from {
+                        cf = w;
+                    } else if b == to {
+                        ct = w;
+                    }
+                });
+                ct - cf
+            }
+            Objective::Comm(h) => {
+                let mut g = 0.0;
+                conn.for_each(|b, w| g += w * (h.distance(from, b) - h.distance(to, b)));
+                g
+            }
+            Objective::CommMat(m) => {
+                let rf = m.row(from);
+                let rt = m.row(to);
+                let mut g = 0.0;
+                conn.for_each(|b, w| g += w * (rf[b as usize] - rt[b as usize]));
+                g
+            }
+        }
+    }
+}
+
+/// Total-order wrapper for `f64` priorities in heaps.
+#[derive(Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cut_gain_from_conn() {
+        let conn = vec![(0u32, 3.0), (1u32, 5.0)];
+        assert_eq!(Objective::Cut.gain(&conn, 0, 1), 2.0);
+        assert_eq!(Objective::Cut.gain(&conn, 1, 0), -2.0);
+    }
+
+    #[test]
+    fn comm_gain_matches_eq1() {
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        // Vertex in PE 0, neighbors: 2.0 to PE 0, 1.0 to PE 2.
+        let conn = vec![(0u32, 2.0), (2u32, 1.0)];
+        // Move 0 → 1: Σ conn(b)·(D[0,b] − D[1,b])
+        //  = 2·(0 − 1) + 1·(10 − 10) = −2.
+        let g = Objective::Comm(&h).gain(&conn, 0, 1);
+        assert!((g - (-2.0)).abs() < 1e-12);
+        // Move 0 → 2: 2·(0 − 10) + 1·(10 − 0) = −10.
+        let g2 = Objective::Comm(&h).gain(&conn, 0, 2);
+        assert!((g2 - (-10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_gain_positive_when_moving_toward_neighbors() {
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        // Vertex on PE 3, all neighbors on PE 0.
+        let conn = vec![(0u32, 4.0)];
+        // Moving to PE 1 (same node as 0): 4·(D[3,0] − D[1,0]) = 4·(10−1) = 36.
+        let g = Objective::Comm(&h).gain(&conn, 3, 1);
+        assert!((g - 36.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordf64_total_order() {
+        let mut v = vec![OrdF64(2.0), OrdF64(-1.0), OrdF64(0.5)];
+        v.sort();
+        assert_eq!(v[0].0, -1.0);
+        assert_eq!(v[2].0, 2.0);
+    }
+}

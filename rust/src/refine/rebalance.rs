@@ -1,0 +1,331 @@
+//! Weak and strong rebalancing — paper Algorithm 5.
+//!
+//! After unconstrained label propagation the partition may violate the
+//! balance constraint. Every vertex in an overloaded block proposes its
+//! minimum-loss move to a neighboring block below the threshold
+//! `σ < L_max` (or a random such block if none neighbors it). Proposals
+//! are approximately sorted with a log₂-spaced bucket list; a per-vertex
+//! decision process (bucket-local atomic weight accumulation + a prefix
+//! sum over buckets) moves exactly the lightest-loss prefix needed to
+//! balance the source block. *Strong* rebalancing additionally reserves
+//! destination capacity atomically so destinations can never overload —
+//! vertices that would overload their target are diverted to any
+//! underloaded block (possibly disconnected, hence the greater loss).
+//!
+//! The objective used for the loss is configurable: the paper found that
+//! plain edge-cut loss performs as well as `J`-loss and is cheaper — both
+//! are implemented (ablation A2 in DESIGN.md).
+
+use super::gains::ConnTable;
+use super::Objective;
+use crate::graph::CsrGraph;
+use crate::par::Pool;
+use crate::rng::hash_u64;
+use crate::{Block, VWeight, Vertex};
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+const NO_DEST: u32 = u32::MAX;
+/// Number of log₂ loss buckets (plus the `+` and `0` buckets in front).
+const NEG_BUCKETS: usize = 48;
+const BUCKETS: usize = 2 + NEG_BUCKETS;
+
+/// Which rebalancing flavor to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strength {
+    Weak,
+    Strong,
+}
+
+/// One rebalancing step. Returns `(moves, dest)`: the vertices to move and
+/// the destination array (valid at the returned indices).
+#[allow(clippy::too_many_arguments)]
+pub fn rebalance(
+    pool: &Pool,
+    g: &CsrGraph,
+    conn: &ConnTable,
+    part: &[Block],
+    block_weights: &[VWeight],
+    k: usize,
+    l_max: VWeight,
+    obj: &Objective,
+    strength: Strength,
+    seed: u64,
+) -> (Vec<Vertex>, Vec<Block>) {
+    let n = g.n();
+    let total: VWeight = block_weights.iter().sum();
+    let avg = total / k as VWeight;
+    // Dead zone below L_max (paper: σ = L_max − 100 with unit weights;
+    // scaled to instance size so σ stays positive on small blocks).
+    let dead = ((l_max - avg).max(1) / 2).min(100);
+    let sigma = l_max - dead;
+
+    let dest: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(NO_DEST)).collect();
+    let mut loss = vec![0.0f64; n];
+    let loss_ptr = crate::par::SharedMut::new(&mut loss);
+
+    // Kernel 1: per-vertex best move out of overloaded blocks.
+    pool.parallel_for(n, |v| {
+        let from = part[v];
+        if block_weights[from as usize] <= l_max {
+            return;
+        }
+        // Heavy vertices may not move (paper: > 1.5·(c(Π(v)) − c(V)/k)).
+        let excess = block_weights[from as usize] - avg;
+        if g.vw[v] as f64 > 1.5 * excess as f64 {
+            return;
+        }
+        let mut buf = crate::refine::ConnBuf::new();
+        conn.gather_buf(v, &mut buf);
+        let mut best: Option<(f64, Block)> = None;
+        buf.for_each(|b, _| {
+            if b == from || block_weights[b as usize] > sigma {
+                return;
+            }
+            let gn = obj.gain_buf(&buf, from, b);
+            if best.map(|(bg, bb)| gn > bg || (gn == bg && b < bb)).unwrap_or(true) {
+                best = Some((gn, b));
+            }
+        });
+        if best.is_none() {
+            // Random block under the threshold (deterministic per vertex).
+            let start = hash_u64(seed ^ v as u64) as usize % k;
+            for i in 0..k {
+                let b = ((start + i) % k) as Block;
+                if b != from && block_weights[b as usize] <= sigma {
+                    best = Some((obj.gain_buf(&buf, from, b), b));
+                    break;
+                }
+            }
+        }
+        if let Some((gn, b)) = best {
+            dest[v].store(b, Ordering::Relaxed);
+            unsafe { loss_ptr.write(v, gn) };
+        }
+    });
+
+    // Kernel 2: bucket accumulation per overloaded block.
+    // bucket 0 = strictly positive gain, 1 = zero gain, 2+i = loss with
+    // i ≤ log2(−gain) < i+1.
+    let bucket_w: Vec<AtomicI64> = (0..k * BUCKETS).map(|_| AtomicI64::new(0)).collect();
+    let mut my_before = vec![0 as VWeight; n];
+    let before_ptr = crate::par::SharedMut::new(&mut my_before);
+    pool.parallel_for(n, |v| {
+        let d = dest[v].load(Ordering::Relaxed);
+        if d == NO_DEST {
+            return;
+        }
+        let b = bucket_of(loss[v]);
+        let prev = bucket_w[part[v] as usize * BUCKETS + b].fetch_add(g.vw[v], Ordering::Relaxed);
+        unsafe { before_ptr.write(v, prev) };
+    });
+
+    // Prefix sums over buckets per block (k·BUCKETS is tiny: serial).
+    let mut bucket_prefix = vec![0 as VWeight; k * BUCKETS];
+    for blk in 0..k {
+        let mut acc = 0;
+        for b in 0..BUCKETS {
+            bucket_prefix[blk * BUCKETS + b] = acc;
+            acc += bucket_w[blk * BUCKETS + b].load(Ordering::Relaxed);
+        }
+    }
+
+    // Kernel 3: per-vertex decision — move iff the weight moved before me
+    // (earlier buckets + earlier arrivals in my bucket) is below the
+    // block's excess.
+    let moves = crate::par::AtomicList::with_capacity(n);
+    // Strong: atomic destination reservations.
+    let reserved: Vec<AtomicI64> = (0..k).map(|b| AtomicI64::new(block_weights[b].min(l_max))).collect();
+    pool.parallel_for(n, |v| {
+        let d = dest[v].load(Ordering::Relaxed);
+        if d == NO_DEST {
+            return;
+        }
+        let from = part[v] as usize;
+        let excess = block_weights[from] - l_max;
+        let b = bucket_of(loss[v]);
+        let before = bucket_prefix[from * BUCKETS + b] + my_before[v];
+        if before >= excess {
+            return; // enough weight already scheduled to leave
+        }
+        match strength {
+            Strength::Weak => {
+                moves.push(v as u64);
+            }
+            Strength::Strong => {
+                // Reserve capacity at the destination; divert if full.
+                let mut target = d;
+                let got = reserved[target as usize].fetch_add(g.vw[v], Ordering::Relaxed);
+                if got + g.vw[v] > l_max {
+                    reserved[target as usize].fetch_sub(g.vw[v], Ordering::Relaxed);
+                    // Divert to any block with room (deterministic probe).
+                    let start = hash_u64(seed ^ (v as u64) << 1) as usize % k;
+                    let mut found = false;
+                    for i in 0..k {
+                        let cand = ((start + i) % k) as Block;
+                        if cand as usize == from {
+                            continue;
+                        }
+                        let r = reserved[cand as usize].fetch_add(g.vw[v], Ordering::Relaxed);
+                        if r + g.vw[v] <= l_max {
+                            target = cand;
+                            found = true;
+                            break;
+                        }
+                        reserved[cand as usize].fetch_sub(g.vw[v], Ordering::Relaxed);
+                    }
+                    if !found {
+                        return; // nowhere to go; stay
+                    }
+                    dest[v].store(target, Ordering::Relaxed);
+                }
+                moves.push(v as u64);
+            }
+        }
+    });
+
+    let mut move_list: Vec<Vertex> = moves.to_vec().into_iter().map(|x| x as Vertex).collect();
+    move_list.sort_unstable();
+    let dest_plain: Vec<Block> = dest.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+    (move_list, dest_plain)
+}
+
+/// Bucket index: 0 = positive, 1 = zero, 2+⌊log₂(−gain)⌋ for losses.
+#[inline]
+fn bucket_of(gain: f64) -> usize {
+    if gain > 0.0 {
+        0
+    } else if gain == 0.0 {
+        1
+    } else {
+        let l = (-gain).log2().floor();
+        2 + (l.max(0.0) as usize).min(NEG_BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, EdgeList};
+    use crate::partition::{block_weights as bw_of, l_max as lmax_of, max_block_weight};
+    use crate::rng::Rng;
+    use crate::topology::Hierarchy;
+
+    fn overload_partition(g: &CsrGraph, k: usize) -> Vec<Block> {
+        // 70% of vertices in block 0, rest spread.
+        let mut rng = Rng::new(11);
+        (0..g.n())
+            .map(|_| {
+                if rng.f64() < 0.7 {
+                    0
+                } else {
+                    rng.below(k as u64) as Block
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn weak_rebalance_reduces_overload() {
+        let g = gen::grid2d(24, 24, false);
+        let k = 8;
+        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let mut part = overload_partition(&g, k);
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let before_max = max_block_weight(&g, &part, k);
+        for _ in 0..6 {
+            let bw = bw_of(&g, &part, k);
+            if bw.iter().max().copied().unwrap() <= lmax {
+                break;
+            }
+            let conn = ConnTable::build(&pool, &g, &el, &part, k);
+            let (moves, dest) = rebalance(
+                &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Comm(&h), Strength::Weak, 3,
+            );
+            assert!(!moves.is_empty(), "weak rebalance made no progress");
+            for &v in &moves {
+                part[v as usize] = dest[v as usize];
+            }
+        }
+        let after_max = max_block_weight(&g, &part, k);
+        assert!(after_max < before_max, "{before_max} -> {after_max}");
+        assert!(after_max <= lmax + lmax / 4, "still badly overloaded: {after_max} vs {lmax}");
+    }
+
+    #[test]
+    fn strong_rebalance_balances_in_one_step() {
+        let g = gen::rgg(2_000, 0.05, 13);
+        let k = 16;
+        let mut part = overload_partition(&g, k);
+        let lmax = lmax_of(g.total_vweight(), k, 0.10);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let bw = bw_of(&g, &part, k);
+        let conn = ConnTable::build(&pool, &g, &el, &part, k);
+        let (moves, dest) = rebalance(
+            &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Cut, Strength::Strong, 5,
+        );
+        for &v in &moves {
+            part[v as usize] = dest[v as usize];
+        }
+        let after = bw_of(&g, &part, k);
+        // Strong rebalancing must not overload any *destination*: every
+        // block that was under L_max stays under L_max.
+        for b in 0..k {
+            if bw[b] <= lmax {
+                assert!(after[b] <= lmax, "block {b} overloaded by strong rebalance");
+            }
+        }
+        // And the overloaded block must have shed weight.
+        assert!(after[0] < bw[0]);
+    }
+
+    #[test]
+    fn bucket_of_spacing() {
+        assert_eq!(bucket_of(5.0), 0);
+        assert_eq!(bucket_of(0.0), 1);
+        assert_eq!(bucket_of(-1.0), 2);
+        assert_eq!(bucket_of(-2.0), 3);
+        assert_eq!(bucket_of(-3.9), 3);
+        assert_eq!(bucket_of(-4.0), 4);
+        assert!(bucket_of(-1e30) < BUCKETS);
+    }
+
+    #[test]
+    fn balanced_input_is_noop() {
+        let g = gen::grid2d(10, 10, false);
+        let k = 4;
+        let part: Vec<Block> = (0..g.n()).map(|v| (v % k) as Block).collect();
+        let lmax = lmax_of(g.total_vweight(), k, 0.10);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let bw = bw_of(&g, &part, k);
+        let conn = ConnTable::build(&pool, &g, &el, &part, k);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let (moves, _) = rebalance(
+            &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Comm(&h), Strength::Weak, 1,
+        );
+        assert!(moves.is_empty());
+    }
+
+    #[test]
+    fn heavy_vertices_stay() {
+        let mut g = gen::grid2d(8, 8, false);
+        // Vertex 0 carries most of its block's excess: the paper's rule
+        // `c(v) > 1.5·(c(Π(v)) − c(V)/k)` must exclude it from moving.
+        g.vw[0] = 30;
+        let k = 4;
+        let part: Vec<Block> =
+            (0..g.n()).map(|v| if v < 10 { 0 } else { (v % 3 + 1) as Block }).collect();
+        let lmax = lmax_of(g.total_vweight(), k, 0.05);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let bw = bw_of(&g, &part, k);
+        let conn = ConnTable::build(&pool, &g, &el, &part, k);
+        let (moves, _) = rebalance(
+            &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Cut, Strength::Weak, 2,
+        );
+        assert!(!moves.contains(&0), "heavy vertex moved");
+    }
+}

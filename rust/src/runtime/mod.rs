@@ -1,0 +1,122 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas kernels (HLO text produced
+//! by `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! *only* consumer of its output. Interchange is HLO **text** — jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see /opt/xla-example).
+
+pub mod offload;
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A PJRT client plus a compiled-executable cache keyed by artifact name.
+///
+/// Not `Sync`: the coordinator owns one `Runtime` per worker thread, which
+/// matches the one-client-per-device model of PJRT.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Does `name.hlo.txt` exist in the artifact directory?
+    pub fn available(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load (or fetch from cache) the executable for artifact `name`.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} not found — run `make artifacts` first", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {name}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the raw output
+    /// literal (callers unwrap the tuple arity they expect).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute artifact {name}"))?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+}
+
+/// Build an `f32` matrix literal from an `f64` slice (row-major `r × c`).
+pub fn literal_matrix_f32(data: &[f64], r: usize, c: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), r * c);
+    let f: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    Ok(xla::Literal::vec1(&f).reshape(&[r as i64, c as i64])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let err = match rt.load("definitely_not_an_artifact") {
+            Err(e) => e,
+            Ok(_) => panic!("expected load failure"),
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_matrix_f32(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        let v = l.to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Device offload of the QAP swap search (the dense hot spot of two-phase
+//! mapping, reformulated for matrix units — DESIGN.md §1).
+//!
+//! The L1 Pallas kernel `qap_step_k{K}` takes the block communication
+//! matrix `W (K×K)`, the distance matrix `D (K×K)` and the one-hot PE
+//! assignment `P (K×K)` and returns
+//!
+//! * `delta[x,y]` — the exact change of `J` if blocks `x` and `y` swap
+//!   PEs (all `K²` swap candidates from two matmuls), and
+//! * `j` — the current cost `Σ W ⊙ (P D Pᵀ)`.
+//!
+//! [`swap_refine_offload`] drives it: each sweep evaluates all swaps on
+//! the device, then greedily applies non-conflicting improving swaps on
+//! the host.
+
+use super::{literal_matrix_f32, Runtime};
+use crate::topology::Hierarchy;
+use crate::Block;
+use anyhow::{bail, Result};
+
+/// Padded kernel sizes compiled by `python/compile/aot.py`.
+pub const QAP_KERNEL_SIZES: [usize; 3] = [32, 64, 256];
+
+/// Pick the smallest compiled size ≥ k.
+pub fn qap_kernel_size(k: usize) -> Result<usize> {
+    QAP_KERNEL_SIZES
+        .iter()
+        .copied()
+        .find(|&s| s >= k)
+        .ok_or_else(|| anyhow::anyhow!("k={k} exceeds the largest compiled QAP kernel"))
+}
+
+/// One device evaluation: all-pairs swap deltas and the current cost.
+pub struct QapStepOutput {
+    /// `delta[x·k + y]` = J(after swapping x,y) − J(before); size k×k.
+    pub delta: Vec<f64>,
+    /// Current cost `J`.
+    pub j: f64,
+}
+
+/// Run the `qap_step` kernel for a concrete (unpadded) `k`.
+pub fn qap_step_device(
+    rt: &Runtime,
+    bmat: &[f64],
+    k: usize,
+    h: &Hierarchy,
+    sigma: &[Block],
+) -> Result<QapStepOutput> {
+    assert_eq!(bmat.len(), k * k);
+    assert_eq!(sigma.len(), k);
+    let kp = qap_kernel_size(k)?;
+    let name = format!("qap_step_k{kp}");
+    if !rt.available(&name) {
+        bail!("artifact {name} missing — run `make artifacts`");
+    }
+
+    // Zero-pad W and D; zero rows in P for the padding region.
+    let mut w = vec![0f64; kp * kp];
+    let mut d = vec![0f64; kp * kp];
+    let mut p = vec![0f64; kp * kp];
+    for x in 0..k {
+        for y in 0..k {
+            w[x * kp + y] = bmat[x * k + y];
+            d[x * kp + y] = h.distance(x as Block, y as Block);
+        }
+        p[x * kp + sigma[x] as usize] = 1.0;
+    }
+
+    let inputs = [
+        literal_matrix_f32(&w, kp, kp)?,
+        literal_matrix_f32(&d, kp, kp)?,
+        literal_matrix_f32(&p, kp, kp)?,
+    ];
+    let out = rt.execute(&name, &inputs)?;
+    let (delta_l, j_l) = out.to_tuple2()?;
+    let delta_f: Vec<f32> = delta_l.to_vec::<f32>()?;
+    let j = j_l.to_vec::<f32>()?[0] as f64;
+
+    let mut delta = vec![0f64; k * k];
+    for x in 0..k {
+        for y in 0..k {
+            delta[x * k + y] = delta_f[x * kp + y] as f64;
+        }
+    }
+    Ok(QapStepOutput { delta, j })
+}
+
+/// Device-accelerated pairwise-swap refinement, "device proposes, host
+/// verifies": each sweep the kernel scores all `K²` swap candidates (the
+/// O(K³) part); the host walks them best-first, re-verifying each delta
+/// exactly in O(K) against the *current* assignment before applying —
+/// swap deltas are not additive, so batch application without
+/// verification can regress. Refines `sigma` in place; returns the total
+/// improvement in `J`.
+pub fn swap_refine_offload(
+    rt: &Runtime,
+    bmat: &[f64],
+    k: usize,
+    h: &Hierarchy,
+    sigma: &mut [Block],
+    max_sweeps: usize,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for _ in 0..max_sweeps {
+        let step = qap_step_device(rt, bmat, k, h, sigma)?;
+        // Candidates with improving device scores, best first.
+        let mut cand: Vec<(f64, usize, usize)> = Vec::new();
+        for x in 0..k {
+            for y in x + 1..k {
+                let d = step.delta[x * k + y];
+                if d < -1e-6 {
+                    cand.push((d, x, y));
+                }
+            }
+        }
+        if cand.is_empty() {
+            break;
+        }
+        cand.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut applied = 0usize;
+        for (_, x, y) in cand {
+            // Exact delta under the current (possibly already-swapped)
+            // assignment.
+            let d = crate::algo::qap::swap_delta(bmat, k, sigma, h, x, y);
+            if d < -1e-9 {
+                sigma.swap(x, y);
+                total -= d;
+                applied += 1;
+            }
+        }
+        if applied == 0 {
+            break;
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::qap;
+    use crate::partition::comm_cost_blocks;
+    use crate::rng::Rng;
+
+    fn runtime() -> Option<Runtime> {
+        let rt = Runtime::new("artifacts").ok()?;
+        if rt.available("qap_step_k32") {
+            Some(rt)
+        } else {
+            eprintln!("skipping offload test: artifacts not built");
+            None
+        }
+    }
+
+    fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut b = vec![0.0; k * k];
+        for x in 0..k {
+            for y in x + 1..k {
+                let w = if rng.f64() < 0.5 { rng.below(20) as f64 } else { 0.0 };
+                b[x * k + y] = w;
+                b[y * k + x] = w;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn device_j_matches_host() {
+        let Some(rt) = runtime() else { return };
+        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, 1);
+        let sigma: Vec<Block> = (0..k as Block).collect();
+        let out = qap_step_device(&rt, &bmat, k, &h, &sigma).unwrap();
+        let host = comm_cost_blocks(&bmat, k, &sigma, &h);
+        assert!((out.j - host).abs() < 1e-3 * host.max(1.0), "device {} vs host {}", out.j, host);
+    }
+
+    #[test]
+    fn device_deltas_match_host_swaps() {
+        let Some(rt) = runtime() else { return };
+        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, 2);
+        let mut rng = Rng::new(3);
+        let mut sigma: Vec<Block> = (0..k as Block).collect();
+        rng.shuffle(&mut sigma);
+        let out = qap_step_device(&rt, &bmat, k, &h, &sigma).unwrap();
+        let j0 = comm_cost_blocks(&bmat, k, &sigma, &h);
+        for x in 0..k {
+            for y in x + 1..k {
+                let mut s2 = sigma.clone();
+                s2.swap(x, y);
+                let expect = comm_cost_blocks(&bmat, k, &s2, &h) - j0;
+                let got = out.delta[x * k + y];
+                assert!(
+                    (got - expect).abs() < 1e-3 * expect.abs().max(1.0),
+                    "swap ({x},{y}): device {got} vs host {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn offload_refine_matches_host_refine_quality() {
+        let Some(rt) = runtime() else { return };
+        let h = Hierarchy::parse("2:4:2", "1:10:100").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, 4);
+        let mut rng = Rng::new(5);
+        let mut sigma_dev: Vec<Block> = (0..k as Block).collect();
+        rng.shuffle(&mut sigma_dev);
+        let mut sigma_host = sigma_dev.clone();
+        let j_init = comm_cost_blocks(&bmat, k, &sigma_dev, &h);
+        swap_refine_offload(&rt, &bmat, k, &h, &mut sigma_dev, 30).unwrap();
+        qap::swap_refine(&bmat, k, &mut sigma_host, &h, 30);
+        let j_dev = comm_cost_blocks(&bmat, k, &sigma_dev, &h);
+        let j_host = comm_cost_blocks(&bmat, k, &sigma_host, &h);
+        assert!(j_dev <= j_init);
+        assert!(j_dev <= j_host * 1.15, "device {j_dev} vs host {j_host}");
+        // Still a permutation.
+        let mut seen = vec![false; k];
+        for &pe in &sigma_dev {
+            assert!(!seen[pe as usize]);
+            seen[pe as usize] = true;
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Machine topologies for the hierarchical process mapping problem.
+//!
+//! A supercomputer is described by a hierarchy `H = a_1 : … : a_ℓ`
+//! (each processor has `a_1` PEs, each node `a_2` processors, …) and a
+//! distance vector `D = d_1 : … : d_ℓ` (cost factor between PEs sharing
+//! only a level-`i` component). PE ids are mixed-radix with `a_1` fastest.
+
+use crate::Block;
+use anyhow::{bail, Result};
+
+/// A hierarchical machine topology (paper §2, HPMP definition).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hierarchy {
+    /// Fan-outs `a_1 … a_ℓ` (innermost first).
+    pub a: Vec<u32>,
+    /// Distances `d_1 … d_ℓ` (innermost first), `d_i` strictly increasing
+    /// in well-formed systems but not required.
+    pub d: Vec<f64>,
+}
+
+impl Hierarchy {
+    pub fn new(a: Vec<u32>, d: Vec<f64>) -> Result<Self> {
+        if a.is_empty() || a.len() != d.len() {
+            bail!("hierarchy and distance must be non-empty and equal length");
+        }
+        if a.iter().any(|&x| x == 0) {
+            bail!("hierarchy fan-outs must be positive");
+        }
+        Ok(Hierarchy { a, d })
+    }
+
+    /// Parse `"4:8:6"` + `"1:10:100"`.
+    pub fn parse(hier: &str, dist: &str) -> Result<Self> {
+        let a: Vec<u32> = hier
+            .split(':')
+            .map(|t| t.trim().parse::<u32>().map_err(Into::into))
+            .collect::<Result<_>>()?;
+        let d: Vec<f64> = dist
+            .split(':')
+            .map(|t| t.trim().parse::<f64>().map_err(Into::into))
+            .collect::<Result<_>>()?;
+        Self::new(a, d)
+    }
+
+    /// Number of levels ℓ.
+    pub fn levels(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Total number of PEs, `k = Π a_i`.
+    pub fn k(&self) -> usize {
+        self.a.iter().map(|&x| x as usize).product()
+    }
+
+    /// Distance factor `D_xy` between PEs `x` and `y` — implicit O(ℓ)
+    /// oracle: divide out fan-outs until the ids coincide.
+    #[inline]
+    pub fn distance(&self, x: Block, y: Block) -> f64 {
+        if x == y {
+            return 0.0;
+        }
+        let (mut x, mut y) = (x, y);
+        for i in 0..self.a.len() {
+            x /= self.a[i];
+            y /= self.a[i];
+            if x == y {
+                return self.d[i];
+            }
+        }
+        *self.d.last().unwrap()
+    }
+
+    /// Materialized `k × k` distance matrix (O(k²) space, O(1) lookup —
+    /// the paper's simplest distance representation, used by the offload
+    /// kernels and for small k).
+    pub fn distance_matrix(&self) -> DistanceMatrix {
+        let k = self.k();
+        let mut m = vec![0.0f64; k * k];
+        for x in 0..k as Block {
+            for y in 0..k as Block {
+                m[x as usize * k + y as usize] = self.distance(x, y);
+            }
+        }
+        DistanceMatrix { k, m }
+    }
+
+    /// The adaptive imbalance ε′ of SharedMap (paper Eq. 2):
+    ///
+    /// `ε′ = ((1+ε) · k′·c(V) / (k·c(V′)))^(1/depth) − 1`
+    ///
+    /// where `c(V)` is the total weight of the original graph, `c(V′)` of
+    /// the current subgraph, `k` the total PEs, `k′` the PEs the subgraph
+    /// will host, and `depth` the remaining hierarchy depth.
+    pub fn adaptive_imbalance(
+        eps: f64,
+        total_weight: i64,
+        sub_weight: i64,
+        k_total: usize,
+        k_sub: usize,
+        depth: usize,
+    ) -> f64 {
+        debug_assert!(depth >= 1 && sub_weight > 0);
+        let ratio = (1.0 + eps) * (k_sub as f64 * total_weight as f64)
+            / (k_total as f64 * sub_weight as f64);
+        ratio.powf(1.0 / depth as f64) - 1.0
+    }
+
+    /// Group count and per-group PE span at hierarchy level `i`
+    /// (1-based from the innermost). Partitioning at level `i` splits into
+    /// `a_i` blocks, each covering `prod_{j<i} a_j` PEs.
+    pub fn pes_per_block_at_level(&self, level: usize) -> usize {
+        self.a[..level - 1].iter().map(|&x| x as usize).product()
+    }
+
+    /// Display as `a1:a2:…/d1:d2:…`.
+    pub fn label(&self) -> String {
+        let a: Vec<String> = self.a.iter().map(|x| x.to_string()).collect();
+        let d: Vec<String> = self.d.iter().map(|x| format!("{x}")).collect();
+        format!("{}/{}", a.join(":"), d.join(":"))
+    }
+}
+
+/// Dense `k × k` distance matrix.
+#[derive(Clone, Debug)]
+pub struct DistanceMatrix {
+    pub k: usize,
+    m: Vec<f64>,
+}
+
+impl DistanceMatrix {
+    #[inline]
+    pub fn get(&self, x: Block, y: Block) -> f64 {
+        self.m[x as usize * self.k + y as usize]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.m
+    }
+
+    /// Row `x` (distances from PE `x` to all PEs).
+    #[inline]
+    pub fn row(&self, x: Block) -> &[f64] {
+        &self.m[x as usize * self.k..(x as usize + 1) * self.k]
+    }
+}
+
+/// The paper's experimental hierarchies: `H = 4:8:{1..6}`, `D = 1:10:100`.
+pub fn paper_hierarchies() -> Vec<Hierarchy> {
+    (1..=6)
+        .map(|top| Hierarchy::new(vec![4, 8, top], vec![1.0, 10.0, 100.0]).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h486() -> Hierarchy {
+        Hierarchy::parse("4:8:6", "1:10:100").unwrap()
+    }
+
+    #[test]
+    fn parse_and_k() {
+        let h = h486();
+        assert_eq!(h.k(), 192);
+        assert_eq!(h.levels(), 3);
+    }
+
+    #[test]
+    fn distance_levels() {
+        let h = h486();
+        // Same PE.
+        assert_eq!(h.distance(0, 0), 0.0);
+        // Same processor (ids 0..4).
+        assert_eq!(h.distance(0, 3), 1.0);
+        // Same node, different processor (ids 0..32).
+        assert_eq!(h.distance(0, 4), 10.0);
+        assert_eq!(h.distance(3, 31), 10.0);
+        // Different node.
+        assert_eq!(h.distance(0, 32), 100.0);
+        assert_eq!(h.distance(0, 191), 100.0);
+    }
+
+    #[test]
+    fn distance_symmetric() {
+        let h = h486();
+        for x in [0u32, 5, 37, 150] {
+            for y in [1u32, 9, 64, 191] {
+                assert_eq!(h.distance(x, y), h.distance(y, x));
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_matches_oracle() {
+        let h = Hierarchy::parse("2:3:2", "1:7:50").unwrap();
+        let m = h.distance_matrix();
+        for x in 0..h.k() as u32 {
+            for y in 0..h.k() as u32 {
+                assert_eq!(m.get(x, y), h.distance(x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_imbalance_identity_case() {
+        // Top-level call: subgraph == graph, k' == k, depth == 1 → ε' == ε.
+        let eps = Hierarchy::adaptive_imbalance(0.03, 1000, 1000, 192, 192, 1);
+        assert!((eps - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_imbalance_shrinks_with_depth() {
+        // Full graph at depth 3: ε' = (1.03)^(1/3) − 1 < ε.
+        let eps = Hierarchy::adaptive_imbalance(0.03, 1000, 1000, 192, 192, 3);
+        assert!(eps < 0.03 && eps > 0.0);
+        assert!((eps - (1.03f64.powf(1.0 / 3.0) - 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_imbalance_rewards_light_subgraphs() {
+        // A subgraph lighter than its PE share gets extra slack.
+        let light = Hierarchy::adaptive_imbalance(0.03, 1000, 100, 192, 24, 2);
+        let exact = Hierarchy::adaptive_imbalance(0.03, 1000, 125, 192, 24, 2);
+        assert!(light > exact);
+    }
+
+    #[test]
+    fn paper_hierarchies_count() {
+        let hs = paper_hierarchies();
+        assert_eq!(hs.len(), 6);
+        assert_eq!(hs[5].k(), 192);
+        assert_eq!(hs[0].k(), 32);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Hierarchy::parse("4:0:6", "1:10:100").is_err());
+        assert!(Hierarchy::parse("4:8", "1:10:100").is_err());
+    }
+
+    #[test]
+    fn pes_per_block() {
+        let h = h486();
+        assert_eq!(h.pes_per_block_at_level(3), 32); // top-level blocks host 4*8 PEs
+        assert_eq!(h.pes_per_block_at_level(2), 4);
+        assert_eq!(h.pes_per_block_at_level(1), 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! CLI black-box tests: run the `heipa` binary end to end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn heipa() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_heipa"))
+}
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("heipa_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = heipa().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["gen", "map", "eval", "phases", "suite", "serve"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_message() {
+    let out = heipa().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn map_then_eval_roundtrip() {
+    let dir = tmpdir();
+    let part = dir.join("mapping.txt");
+    let out = heipa()
+        .args([
+            "map", "--graph", "sten_cop20k", "--algo", "gpu-im", "--hier", "2:2:2",
+            "--dist", "1:10:100", "--eps", "0.03", "--seed", "1", "--out",
+            part.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("J="), "no J in output: {text}");
+    // Parse J from the map output.
+    let j_map: f64 = text
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("J=").and_then(|v| v.parse().ok()))
+        .expect("J field");
+
+    let out = heipa()
+        .args([
+            "eval", "--graph", "sten_cop20k", "--part", part.to_str().unwrap(), "--hier",
+            "2:2:2", "--dist", "1:10:100",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let j_eval: f64 = text
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("J=").and_then(|v| v.parse().ok()))
+        .expect("J field");
+    assert!((j_map - j_eval).abs() < 1e-3 * j_map.max(1.0), "{j_map} != {j_eval}");
+}
+
+#[test]
+fn gen_writes_metis_files() {
+    let dir = tmpdir().join("suite");
+    let out = heipa()
+        .args(["gen", "--suite", "smoke", "--out-dir", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert_eq!(files.len(), 5, "expected 5 smoke instances");
+    // And a generated file is loadable via map --graph <path>.
+    let one = dir.join("sten_cop20k.graph");
+    let out = heipa()
+        .args(["map", "--graph", one.to_str().unwrap(), "--algo", "sharedmap-f", "--hier", "2:2", "--dist", "1:10"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn phases_prints_table2_rows() {
+    let out = heipa().args(["phases", "--graph", "wal_598a", "--hier", "2:4", "--dist", "1:10"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for row in ["Coarsening", "Contraction", "Init. Part.", "Refine + Reb.", "Total"] {
+        assert!(text.contains(row), "missing row {row}: {text}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Integration tests: whole-pipeline invariants across modules, the
+//! paper's qualitative claims on real (scaled) instances, and
+//! property-style sweeps over seeds/hierarchies.
+
+use heipa::algo::{run_algorithm, Algorithm};
+use heipa::graph::gen;
+use heipa::par::Pool;
+use heipa::partition::{comm_cost, edge_cut, is_balanced, l_max, validate_mapping};
+use heipa::rng::Rng;
+use heipa::topology::Hierarchy;
+
+const EPS: f64 = 0.03;
+
+/// Feasibility: `max block weight <= L_max` (the paper's constraint; the
+/// ratio-based `imbalance()` can exceed ε by ceiling effects).
+fn feasible(g: &heipa::graph::CsrGraph, m: &[u32], k: usize) -> bool {
+    heipa::partition::max_block_weight(g, m, k) <= l_max(g.total_vweight(), k, EPS)
+}
+
+#[test]
+fn every_algorithm_is_feasible_on_every_smoke_instance() {
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    for spec in gen::smoke_suite() {
+        let g = spec.generate();
+        for algo in [
+            Algorithm::GpuHm,
+            Algorithm::GpuIm,
+            Algorithm::SharedMapF,
+            Algorithm::IntMapF,
+            Algorithm::Jet,
+        ] {
+            let r = run_algorithm(algo, &pool, &g, &h, EPS, 1);
+            validate_mapping(&r.mapping, g.n(), h.k())
+                .unwrap_or_else(|e| panic!("{} on {}: {e}", algo.name(), spec.name));
+            assert!(
+                feasible(&g, &r.mapping, h.k()),
+                "{} on {}: infeasible (imb {:.4})",
+                algo.name(),
+                spec.name,
+                r.imbalance
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_quality_ordering_on_mesh_family() {
+    // The paper's headline quality shape: SharedMap-S best; GPU-HM-ultra
+    // competitive (~+12%); Jet (edge-cut) clearly unfit (~+90%).
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let mut j_sms = 0.0;
+    let mut j_ultra = 0.0;
+    let mut j_jet = 0.0;
+    for name in ["sten_cop20k", "del15", "wal_598a"] {
+        let g = gen::generate_by_name(name);
+        j_sms += run_algorithm(Algorithm::SharedMapS, &pool, &g, &h, EPS, 1).comm_cost;
+        j_ultra += run_algorithm(Algorithm::GpuHmUltra, &pool, &g, &h, EPS, 1).comm_cost;
+        j_jet += run_algorithm(Algorithm::Jet, &pool, &g, &h, EPS, 1).comm_cost;
+    }
+    assert!(j_ultra <= j_sms * 1.35, "ultra {j_ultra} vs sharedmap-s {j_sms}");
+    assert!(j_jet > j_ultra * 1.15, "jet should be clearly worse: {j_jet} vs {j_ultra}");
+}
+
+#[test]
+fn modeled_speed_ordering_holds() {
+    // GPU-IM must be the fastest device algorithm; SharedMap-S the
+    // slowest solver overall (paper Fig. 2 left).
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let g = gen::generate_by_name("rgg15");
+    let im = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, 1);
+    let hm_u = run_algorithm(Algorithm::GpuHmUltra, &pool, &g, &h, EPS, 1);
+    let sms = run_algorithm(Algorithm::SharedMapS, &pool, &g, &h, EPS, 1);
+    assert!(im.device_ms < hm_u.device_ms, "gpu-im {} !< gpu-hm-ultra {}", im.device_ms, hm_u.device_ms);
+    assert!(im.device_ms < sms.device_ms / 20.0, "gpu-im {} not ≫ sharedmap-s {}", im.device_ms, sms.device_ms);
+}
+
+#[test]
+fn seed_sweep_stability() {
+    // Across seeds, quality varies but feasibility and rough quality hold.
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("2:4:4", "1:10:100").unwrap();
+    let g = gen::generate_by_name("wal_598a");
+    let mut costs = Vec::new();
+    for seed in 1..=5 {
+        let r = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, seed);
+        assert!(feasible(&g, &r.mapping, h.k()), "seed {seed} infeasible");
+        costs.push(r.comm_cost);
+    }
+    let max = costs.iter().cloned().fold(f64::MIN, f64::max);
+    let min = costs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 1.6, "seed variance too high: {min}..{max}");
+}
+
+#[test]
+fn hierarchy_sweep_cost_grows_with_machine_size() {
+    // More islands with expensive links → higher total cost, and every
+    // hierarchy stays feasible (exercises Eq. 2 across depths).
+    let pool = Pool::new(1);
+    let g = gen::generate_by_name("sten_cop20k");
+    let mut last = 0.0;
+    for top in [1u32, 2, 4, 6] {
+        let h = Hierarchy::new(vec![4, 8, top], vec![1.0, 10.0, 100.0]).unwrap();
+        let r = run_algorithm(Algorithm::GpuHm, &pool, &g, &h, EPS, 1);
+        assert!(feasible(&g, &r.mapping, h.k()), "top={top} infeasible");
+        if top > 1 {
+            assert!(r.comm_cost > last * 0.9, "cost did not grow: {last} -> {}", r.comm_cost);
+        }
+        last = r.comm_cost;
+    }
+}
+
+#[test]
+fn mapping_objective_beats_cut_objective_under_heterogeneous_distances() {
+    // The point of the whole paper: with D = 1:10:100, minimizing J
+    // directly (GPU-IM) beats minimizing edge-cut (Jet) on J — even
+    // though Jet's edge-cut is lower or comparable.
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let mut im_wins = 0;
+    let names = ["sten_cop20k", "del15", "rgg15", "wal_598a"];
+    for name in names {
+        let g = gen::generate_by_name(name);
+        let im = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, 1);
+        let jet = run_algorithm(Algorithm::Jet, &pool, &g, &h, EPS, 1);
+        if im.comm_cost < jet.comm_cost {
+            im_wins += 1;
+        }
+        // Sanity: Jet genuinely optimizes the cut.
+        let cut_im = edge_cut(&g, &im.mapping);
+        let cut_jet = edge_cut(&g, &jet.mapping);
+        assert!(cut_jet < cut_im * 1.5, "{name}: jet's cut should be competitive");
+    }
+    assert!(im_wins >= 3, "gpu-im won on only {im_wins}/{} instances", names.len());
+}
+
+#[test]
+fn two_phase_composition_matches_direct_evaluation() {
+    // block_comm_matrix + comm_cost_blocks must equal comm_cost for any
+    // mapping (ties partition/, topology/, algo::qap together).
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("4:4", "1:10").unwrap();
+    let g = gen::generate_by_name("wal_598a");
+    let r = run_algorithm(Algorithm::GpuHm, &pool, &g, &h, EPS, 3);
+    let k = h.k();
+    let bmat = heipa::partition::block_comm_matrix(&g, &r.mapping, k);
+    let identity: Vec<u32> = (0..k as u32).collect();
+    let j_blocks = heipa::partition::comm_cost_blocks(&bmat, k, &identity, &h);
+    assert!((j_blocks - r.comm_cost).abs() < 1e-6 * r.comm_cost.max(1.0));
+}
+
+#[test]
+fn qap_polish_composes_with_any_algorithm() {
+    // Re-mapping blocks to PEs never hurts J (host path; device path is
+    // covered in runtime::offload tests).
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("2:4:2", "1:10:100").unwrap();
+    let k = h.k();
+    let g = gen::generate_by_name("sten_cont300");
+    for algo in [Algorithm::Jet, Algorithm::GpuIm] {
+        let r = run_algorithm(algo, &pool, &g, &h, EPS, 1);
+        let bmat = heipa::partition::block_comm_matrix(&g, &r.mapping, k);
+        let mut sigma: Vec<u32> = (0..k as u32).collect();
+        heipa::algo::qap::swap_refine(&bmat, k, &mut sigma, &h, 10);
+        let remapped: Vec<u32> = r.mapping.iter().map(|&b| sigma[b as usize]).collect();
+        let j_new = comm_cost(&g, &remapped, &h);
+        assert!(j_new <= r.comm_cost + 1e-9, "{}: polish worsened J", algo.name());
+        assert!(is_balanced(&g, &remapped, k, EPS + 0.002) == is_balanced(&g, &r.mapping, k, EPS + 0.002));
+    }
+}
+
+#[test]
+fn metis_roundtrip_preserves_mapping_results() {
+    // gen → write METIS → read → identical mapping for the same seed.
+    let g = gen::generate_by_name("sten_cop20k");
+    let dir = std::env::temp_dir().join("heipa_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.graph");
+    heipa::graph::io::write_metis(&g, &path).unwrap();
+    let g2 = heipa::graph::io::read_metis(&path).unwrap();
+    assert_eq!(g.n(), g2.n());
+    assert_eq!(g.m(), g2.m());
+    let pool = Pool::new(1);
+    let h = Hierarchy::parse("2:2", "1:10").unwrap();
+    let a = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, 7);
+    let b = run_algorithm(Algorithm::GpuIm, &pool, &g2, &h, EPS, 7);
+    assert_eq!(a.mapping, b.mapping);
+}
+
+#[test]
+fn random_graph_fuzz_many_shapes() {
+    // Property-style: random small graphs, random hierarchies — always
+    // valid, feasible mappings.
+    let pool = Pool::new(1);
+    let mut rng = Rng::new(99);
+    for trial in 0..8 {
+        let n = 200 + rng.below_usize(800);
+        let g = gen::rgg(n, 0.55 * ((n as f64).ln() / n as f64).sqrt() * 1.3, trial);
+        let a1 = 1 + rng.below(3) as u32;
+        let a2 = 1 + rng.below(4) as u32;
+        let h = Hierarchy::new(vec![a1 + 1, a2 + 1], vec![1.0, 10.0]).unwrap();
+        let r = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, 0.10, trial);
+        validate_mapping(&r.mapping, g.n(), h.k()).unwrap();
+        assert!(
+            heipa::partition::max_block_weight(&g, &r.mapping, h.k())
+                <= l_max(g.total_vweight(), h.k(), 0.10),
+            "trial {trial} infeasible"
+        );
+    }
+}

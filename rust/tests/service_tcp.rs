@@ -1,0 +1,94 @@
+//! TCP front-end integration: drive the coordinator over a real socket.
+
+use heipa::coordinator::protocol;
+use heipa::coordinator::service::Service;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+fn spawn(svc: Arc<Service>) -> std::net::SocketAddr {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    let reply = match protocol::parse_command(&line) {
+                        Ok(protocol::Command::Ping) => "ok pong=1".to_string(),
+                        Ok(protocol::Command::Metrics) => protocol::render_metrics(&svc.metrics()),
+                        Ok(protocol::Command::Map(req)) => match svc.submit(req) {
+                            Ok(resp) => protocol::render_response(&resp),
+                            Err(e) => protocol::render_error(&e),
+                        },
+                        Err(e) => protocol::render_error(&e),
+                    };
+                    if writeln!(writer, "{reply}").is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+fn roundtrip(addr: std::net::SocketAddr, lines_in: &[&str]) -> Vec<String> {
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    for l in lines_in {
+        writeln!(conn, "{l}").unwrap();
+    }
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+    BufReader::new(conn).lines().map(|l| l.unwrap()).collect()
+}
+
+#[test]
+fn ping_map_metrics_over_tcp() {
+    let svc = Arc::new(Service::start("artifacts".into(), 1));
+    let addr = spawn(svc);
+    let replies = roundtrip(
+        addr,
+        &[
+            "ping",
+            "map instance=sten_cop20k algorithm=gpu-im hierarchy=2:2:2 distance=1:10:100 eps=0.03 seed=1",
+            "metrics",
+        ],
+    );
+    assert_eq!(replies.len(), 3, "replies: {replies:?}");
+    assert!(replies[0].contains("pong"));
+    assert!(replies[1].starts_with("ok "), "{}", replies[1]);
+    assert!(replies[1].contains("algorithm=gpu-im"));
+    assert!(replies[1].contains(" j="));
+    assert!(replies[2].contains("requests=1"));
+}
+
+#[test]
+fn protocol_errors_do_not_kill_connection() {
+    let svc = Arc::new(Service::start("artifacts".into(), 1));
+    let addr = spawn(svc);
+    let replies = roundtrip(addr, &["bogus", "map instance=missing_instance", "ping"]);
+    assert_eq!(replies.len(), 3);
+    assert!(replies[0].starts_with("err "));
+    assert!(replies[1].starts_with("err "));
+    assert!(replies[2].contains("pong"));
+}
+
+#[test]
+fn mapping_payload_roundtrips() {
+    let svc = Arc::new(Service::start("artifacts".into(), 1));
+    let addr = spawn(svc);
+    let replies = roundtrip(
+        addr,
+        &["map instance=sten_cop20k algorithm=jet hierarchy=2:2 distance=1:10 eps=0.05 seed=2 mapping=1"],
+    );
+    let line = &replies[0];
+    assert!(line.starts_with("ok "));
+    let mapping_part = line.split("mapping=").nth(1).expect("mapping field");
+    let ids: Vec<u32> = mapping_part.split(',').map(|t| t.parse().unwrap()).collect();
+    let g = heipa::graph::gen::generate_by_name("sten_cop20k");
+    assert_eq!(ids.len(), g.n());
+    assert!(ids.iter().all(|&b| b < 4));
+}
