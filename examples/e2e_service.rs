@@ -4,12 +4,14 @@
 //! of mapping requests for the paper's workload families (rgg/del/mesh
 //! task graphs) across machine hierarchies, exercising every layer:
 //!
-//!   TCP protocol → router → GPU-IM / GPU-HM-ultra (device pipelines)
-//!   → PJRT-offloaded QAP polish (AOT JAX/Pallas kernel) → metrics.
+//!   TCP protocol → MapRequest → MapSpec → engine (router, GPU-IM /
+//!   GPU-HM-ultra device pipelines) → PJRT-offloaded QAP polish
+//!   (AOT JAX/Pallas kernel) → MapOutcome → metrics.
 //!
 //! Reports the paper's headline metric (communication cost J) per request
-//! plus speedup vs the serial SharedMap-S baseline, and verifies the
-//! returned mappings are valid and ε-balanced. Recorded in EXPERIMENTS.md.
+//! plus speedup vs the serial SharedMap-S baseline — the baseline runs
+//! through the *library* front-end of the same engine API, demonstrating
+//! that both paths share one code path. Recorded in EXPERIMENTS.md.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_service
@@ -17,14 +19,16 @@
 
 use heipa::algo::Algorithm;
 use heipa::coordinator::service::Service;
-use heipa::coordinator::{MapRequest, MapResponse};
+use heipa::coordinator::{MapReply, MapRequest};
+use heipa::engine::{Engine, MapSpec};
 use heipa::graph::gen;
 use heipa::partition;
 use heipa::topology::Hierarchy;
 use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let svc = std::sync::Arc::new(Service::start("artifacts".into(), 0));
+    let svc = Arc::new(Service::start("artifacts".into(), 0));
 
     // --- 1. TCP smoke: drive one request through the wire protocol. ----
     let addr = spawn_tcp(svc.clone());
@@ -63,6 +67,7 @@ fn main() -> anyhow::Result<()> {
             seed: 1,
             polish: true,
             return_mapping: true,
+            ..MapRequest::default()
         })
         .collect();
 
@@ -71,43 +76,44 @@ fn main() -> anyhow::Result<()> {
     );
     println!("|---|---|---|---|---|---|---|---|---|");
     let responses = svc.submit_batch(requests);
+    // Library-path baseline: the same engine API, in process.
+    let engine = Engine::with_defaults();
     let mut speedups: Vec<f64> = Vec::new();
     for (&(inst, hier, _), resp) in workload.iter().zip(responses) {
-        let resp: MapResponse = resp?;
+        let reply: MapReply = resp?;
+        let out = &reply.outcome;
         // Validate the mapping end-to-end.
         let g = gen::generate_by_name(inst);
         let h = Hierarchy::parse(hier, "1:10:100")?;
-        let mapping = resp.mapping.as_ref().expect("requested mapping");
-        partition::validate_mapping(mapping, g.n(), h.k()).map_err(anyhow::Error::msg)?;
+        assert_eq!(out.mapping.len(), g.n(), "requested mapping");
+        partition::validate_mapping(&out.mapping, g.n(), h.k()).map_err(anyhow::Error::msg)?;
         assert!(
-            partition::is_balanced(&g, mapping, h.k(), 0.034),
+            partition::is_balanced(&g, &out.mapping, h.k(), 0.034),
             "{inst}: imbalance {:.4}",
-            partition::imbalance(&g, mapping, h.k())
+            partition::imbalance(&g, &out.mapping, h.k())
         );
-        let j_check = partition::comm_cost(&g, mapping, &h);
-        assert!((j_check - resp.comm_cost).abs() < 1e-6 * j_check.max(1.0));
+        let j_check = partition::comm_cost(&g, &out.mapping, &h);
+        assert!((j_check - out.comm_cost).abs() < 1e-6 * j_check.max(1.0));
 
         // Serial baseline for the headline speedup.
-        let baseline = heipa::algo::run_algorithm(
-            Algorithm::SharedMapS,
-            &heipa::par::Pool::default(),
-            &g,
-            &h,
-            0.03,
-            1,
-        );
-        let speedup = baseline.host_ms / resp.device_ms.max(1e-9);
+        let baseline = engine.map(
+            &MapSpec::named(inst)
+                .hierarchy(hier)
+                .distance("1:10:100")
+                .algo(Some(Algorithm::SharedMapS)),
+        )?;
+        let speedup = baseline.host_ms / out.device_ms.max(1e-9);
         speedups.push(speedup);
         println!(
             "| {} | {} | {} | {:.0} | {:.4} | {:.1} | {:.2} | {:.0} | {:.0}x |",
             inst,
             hier,
-            resp.algorithm.name(),
-            resp.comm_cost,
-            resp.imbalance,
-            resp.host_ms,
-            resp.device_ms,
-            resp.polish_improvement,
+            out.algorithm.name(),
+            out.comm_cost,
+            out.imbalance,
+            out.host_ms,
+            out.device_ms,
+            out.polish_improvement,
             speedup
         );
     }
@@ -126,7 +132,7 @@ fn main() -> anyhow::Result<()> {
 }
 
 /// Bind an ephemeral port and serve the coordinator protocol on it.
-fn spawn_tcp(svc: std::sync::Arc<Service>) -> std::net::SocketAddr {
+fn spawn_tcp(svc: Arc<Service>) -> std::net::SocketAddr {
     use heipa::coordinator::protocol;
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();

@@ -7,12 +7,12 @@
 //! ```
 
 use heipa::algo::Algorithm;
+use heipa::engine::Engine;
 use heipa::graph::gen;
 use heipa::harness::{self, profiles::ProfileInput, stats};
-use heipa::par::Pool;
 
 fn main() -> anyhow::Result<()> {
-    let pool = Pool::default();
+    let engine = Engine::with_defaults();
     let seeds = harness::seeds_from_env(&[1]);
     let hierarchies = if std::env::var("HEIPA_TOPS").is_ok() {
         harness::hierarchies_from_env()
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         hierarchies.len(),
         seeds.len()
     );
-    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+    let records = harness::run_matrix(&engine, &algos, &instances, &hierarchies, &seeds, 0.03);
     harness::write_csv(&records, std::path::Path::new("paper_experiments.csv"))?;
 
     // Quality profile (Fig. 2 right).

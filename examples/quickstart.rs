@@ -1,34 +1,34 @@
 //! Quickstart: map a task graph onto a hierarchical machine in a few
-//! lines — the library's front door.
+//! lines — the library's front door is one `Engine` and one `MapSpec`.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use heipa::algo::{run_algorithm, Algorithm};
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, MapSpec};
 use heipa::graph::gen;
-use heipa::par::Pool;
-use heipa::topology::Hierarchy;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // A task graph: 2^15-point random geometric graph (the paper's rgg
     // family, scaled), standing in for a scientific-simulation workload.
-    let g = gen::rgg(1 << 15, gen::rgg_paper_radius(1 << 15), 42);
+    let g = Arc::new(gen::rgg(1 << 15, gen::rgg_paper_radius(1 << 15), 42));
     println!("task graph: {}", g.summary());
 
     // A supercomputer: 4 PEs/processor, 8 processors/node, 2 nodes;
     // intra-processor traffic costs 1, intra-node 10, inter-node 100.
-    let h = Hierarchy::parse("4:8:2", "1:10:100")?;
-    println!("machine: k={} PEs, hierarchy {}", h.k(), h.label());
-
-    let pool = Pool::default();
+    // The spec carries the whole problem; the engine owns pool + runtime.
+    let engine = Engine::with_defaults();
+    let spec = MapSpec::in_memory(g).hierarchy("4:8:2").distance("1:10:100");
+    println!("machine: k={} PEs", spec.parse_hierarchy()?.k());
 
     // The paper's two GPU algorithms plus the strongest CPU baseline.
     for algo in [Algorithm::GpuIm, Algorithm::GpuHmUltra, Algorithm::SharedMapF] {
-        let r = run_algorithm(algo, &pool, &g, &h, 0.03, 1);
+        let r = engine.map(&spec.clone().algo(Some(algo)))?;
         println!(
             "{:>14}: J = {:>12.0}  imbalance = {:.4}  host = {:>8.1} ms  modeled-GPU = {:>7.2} ms",
-            algo.name(),
+            r.algorithm.name(),
             r.comm_cost,
             r.imbalance,
             r.host_ms,

@@ -2,56 +2,52 @@
 //! as the machine grows (the paper's hierarchy family `4:8:{1..6}`,
 //! `D = 1:10:100`).
 //!
-//! Also demonstrates the Eq. 2 ablation: with the adaptive ε′ disabled,
-//! hierarchical multisection can violate the global balance constraint.
+//! Also demonstrates the Eq. 2 ablation through the engine's solver
+//! options: with `adaptive = 0`, hierarchical multisection can violate
+//! the global balance constraint.
 //!
 //! ```bash
 //! cargo run --release --example topology_sweep
 //! ```
 
-use heipa::algo::gpu_hm::{gpu_hm, GpuHmConfig};
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, MapSpec};
 use heipa::graph::gen;
-use heipa::par::Pool;
-use heipa::partition::{comm_cost, imbalance};
 use heipa::topology::{paper_hierarchies, Hierarchy};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let g = gen::delaunay_like(128, 7); // del-family mesh, 16k vertices
+    let g = Arc::new(gen::delaunay_like(128, 7)); // del-family mesh, 16k vertices
     println!("task graph: {}", g.summary());
-    let pool = Pool::default();
-    let eps = 0.03;
+    let engine = Engine::with_defaults();
+    let base = MapSpec::in_memory(g).algo(Some(Algorithm::GpuHm)).eps(0.03);
 
     println!("\n| hierarchy | k | J (GPU-HM) | imbalance | J/k (norm.) |");
     println!("|---|---|---|---|---|");
     for h in paper_hierarchies() {
-        let m = gpu_hm(&pool, &g, &h, eps, 1, &GpuHmConfig::default_flavor(), None);
-        let j = comm_cost(&g, &m, &h);
+        let r = engine.map(&base.clone().topology(&h))?;
         println!(
             "| {} | {} | {:.0} | {:.4} | {:.1} |",
             h.label(),
-            h.k(),
-            j,
-            imbalance(&g, &m, h.k()),
-            j / h.k() as f64
+            r.k,
+            r.comm_cost,
+            r.imbalance,
+            r.comm_cost / r.k as f64
         );
     }
 
     // Eq. 2 ablation on the largest machine.
     let h = Hierarchy::parse("4:8:6", "1:10:100")?;
-    let adaptive = GpuHmConfig::default_flavor();
-    let fixed = GpuHmConfig { adaptive: false, ..GpuHmConfig::default_flavor() };
-    let m_a = gpu_hm(&pool, &g, &h, eps, 1, &adaptive, None);
-    let m_f = gpu_hm(&pool, &g, &h, eps, 1, &fixed, None);
+    let r_adaptive = engine.map(&base.clone().topology(&h))?;
+    let r_fixed = engine.map(&base.clone().topology(&h).option("adaptive", "0"))?;
     println!("\nEq. 2 adaptive imbalance ablation (k = {}):", h.k());
     println!(
-        "  adaptive ε': J = {:.0}, imbalance = {:.4} (guaranteed ≤ ε = {eps})",
-        comm_cost(&g, &m_a, &h),
-        imbalance(&g, &m_a, h.k())
+        "  adaptive ε': J = {:.0}, imbalance = {:.4} (guaranteed ≤ ε = 0.03)",
+        r_adaptive.comm_cost, r_adaptive.imbalance
     );
     println!(
         "  fixed ε   : J = {:.0}, imbalance = {:.4} (can exceed ε)",
-        comm_cost(&g, &m_f, &h),
-        imbalance(&g, &m_f, h.k())
+        r_fixed.comm_cost, r_fixed.imbalance
     );
     Ok(())
 }

@@ -3,37 +3,45 @@
 //! the final k-way mapping is ε-balanced; the fixed variant lets
 //! per-level imbalances compound (Schulz & Woydt report both worse
 //! balance and worse mapping quality without it).
+//!
+//! Both variants run through the engine: the fixed one is just the spec
+//! option `adaptive = 0`.
 
-use heipa::algo::gpu_hm::{gpu_hm, GpuHmConfig};
-use heipa::graph::gen;
-use heipa::par::Pool;
-use heipa::partition::{comm_cost, imbalance};
-use heipa::topology::Hierarchy;
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, MapSpec};
 
 fn main() {
-    let pool = Pool::default();
-    let h = Hierarchy::parse("4:8:4", "1:10:100").unwrap();
+    let engine = Engine::with_defaults();
     let eps = 0.03;
     let instances = ["sten_cop20k", "wal_598a", "del15", "rgg15", "road_deu"];
 
-    println!("== Ablation A1: Eq. 2 adaptive imbalance (GPU-HM, k = {}, ε = {eps}) ==", h.k());
+    println!("== Ablation A1: Eq. 2 adaptive imbalance (GPU-HM, k = 128, ε = {eps}) ==");
     println!("| instance | J adaptive | J fixed | imb adaptive | imb fixed | fixed violates ε? |");
     println!("|---|---|---|---|---|---|");
     let mut violations = 0;
     for name in instances {
-        let g = gen::generate_by_name(name);
-        let adaptive = gpu_hm(&pool, &g, &h, eps, 1, &GpuHmConfig::default_flavor(), None);
-        let fixed_cfg = GpuHmConfig { adaptive: false, ..GpuHmConfig::default_flavor() };
-        let fixed = gpu_hm(&pool, &g, &h, eps, 1, &fixed_cfg, None);
-        let (ja, jf) = (comm_cost(&g, &adaptive, &h), comm_cost(&g, &fixed, &h));
-        let (ia, iff) = (imbalance(&g, &adaptive, h.k()), imbalance(&g, &fixed, h.k()));
-        let violates = iff > eps + 1e-6;
+        let base = MapSpec::named(name)
+            .hierarchy("4:8:4")
+            .distance("1:10:100")
+            .eps(eps)
+            .algo(Some(Algorithm::GpuHm));
+        let adaptive = engine.map(&base.clone()).unwrap();
+        let fixed = engine.map(&base.option("adaptive", "0")).unwrap();
+        let violates = fixed.imbalance > eps + 1e-6;
         violations += violates as u32;
         println!(
-            "| {name} | {ja:.0} | {jf:.0} | {ia:.4} | {iff:.4} | {} |",
+            "| {name} | {:.0} | {:.0} | {:.4} | {:.4} | {} |",
+            adaptive.comm_cost,
+            fixed.comm_cost,
+            adaptive.imbalance,
+            fixed.imbalance,
             if violates { "YES" } else { "no" }
         );
-        assert!(ia <= eps + 0.005, "adaptive variant must stay ε-balanced on {name}: {ia}");
+        assert!(
+            adaptive.imbalance <= eps + 0.005,
+            "adaptive variant must stay ε-balanced on {name}: {}",
+            adaptive.imbalance
+        );
     }
     println!("\nfixed-ε violated the global balance constraint on {violations}/{} instances;", instances.len());
     println!("the adaptive variant never did (its guarantee, paper §4.1).");

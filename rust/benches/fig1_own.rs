@@ -9,17 +9,17 @@
 use heipa::algo::Algorithm;
 use heipa::graph::gen;
 use heipa::harness::{self, profiles, stats};
-use heipa::par::Pool;
+use heipa::engine::Engine;
 
 fn main() {
-    let pool = Pool::default();
+    let engine = Engine::with_defaults();
     let seeds = harness::seeds_from_env(&[1]);
     let hierarchies = harness::hierarchies_from_env();
     let instances = gen::smoke_suite();
     let algos = [Algorithm::GpuHm, Algorithm::GpuHmUltra, Algorithm::GpuIm];
 
     eprintln!("fig1_own: {} instances x {} hierarchies x {} seeds", instances.len(), hierarchies.len(), seeds.len());
-    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+    let records = harness::run_matrix(&engine, &algos, &instances, &hierarchies, &seeds, 0.03);
 
     let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
     let quality: Vec<Vec<f64>> = algos

@@ -14,10 +14,10 @@
 use heipa::algo::Algorithm;
 use heipa::graph::gen;
 use heipa::harness::{self, profiles, stats};
-use heipa::par::Pool;
+use heipa::engine::Engine;
 
 fn main() {
-    let pool = Pool::default();
+    let engine = Engine::with_defaults();
     let seeds = harness::seeds_from_env(&[1]);
     let hierarchies = harness::hierarchies_from_env();
     let instances = gen::smoke_suite();
@@ -36,7 +36,7 @@ fn main() {
         hierarchies.len(),
         seeds.len()
     );
-    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+    let records = harness::run_matrix(&engine, &algos, &instances, &hierarchies, &seeds, 0.03);
 
     println!("== Figure 2 (right): quality ==");
     let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();

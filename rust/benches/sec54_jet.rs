@@ -9,16 +9,16 @@
 use heipa::algo::Algorithm;
 use heipa::graph::gen;
 use heipa::harness::{self, stats};
-use heipa::par::Pool;
+use heipa::engine::Engine;
 
 fn main() {
-    let pool = Pool::default();
+    let engine = Engine::with_defaults();
     let seeds = harness::seeds_from_env(&[1]);
     let hierarchies = harness::hierarchies_from_env();
     let instances = gen::smoke_suite();
     let algos = [Algorithm::Jet, Algorithm::JetUltra, Algorithm::GpuIm, Algorithm::SharedMapS];
 
-    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, 0.03, &pool);
+    let records = harness::run_matrix(&engine, &algos, &instances, &hierarchies, &seeds, 0.03);
 
     let grab = |a: Algorithm, f: fn(&harness::ExpRecord) -> f64| -> Vec<f64> {
         records.iter().filter(|r| r.algorithm == a).map(f).collect()

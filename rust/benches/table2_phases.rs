@@ -6,15 +6,12 @@
 //! Init 13.9%, Uncontr. 0.1%, Refine+Reb 65.2%, Misc 4.3%;
 //! large — 11.6 / 11.2 / 4.2 / 0.2 / 45.5 / 27.2.
 
-use heipa::algo::gpu_im::{gpu_im, GpuImConfig};
-use heipa::graph::gen;
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, MapSpec};
 use heipa::metrics::{Phase, PhaseBreakdown};
-use heipa::par::Pool;
-use heipa::topology::Hierarchy;
 
 fn main() {
-    let pool = Pool::default();
-    let h = Hierarchy::parse("4:8:6", "1:10:100").unwrap();
+    let engine = Engine::with_defaults();
 
     let small = ["sten_cop20k", "sten_cubes", "wal_598a"];
     let large = ["rgg16", "road_eu"];
@@ -27,13 +24,17 @@ fn main() {
         [("small", &small[..], &mut small_agg), ("large", &large[..], &mut large_agg)]
     {
         for name in names {
-            let g = gen::generate_by_name(name);
-            eprintln!("table2: {group} {name} ({})", g.summary());
-            let mut phases = PhaseBreakdown::default();
-            let _ = gpu_im(&pool, &g, &h, 0.03, 1, &GpuImConfig::default(), Some(&mut phases));
+            let spec = MapSpec::named(*name)
+                .hierarchy("4:8:6")
+                .distance("1:10:100")
+                .algo(Some(Algorithm::GpuIm))
+                .return_mapping(false);
+            let out = engine.map(&spec).unwrap();
+            eprintln!("table2: {group} {name} (n={})", out.n);
+            let phases = out.phases.expect("gpu-im reports phases");
             agg.merge(&phases);
             if *name == "sten_cop20k" || *name == "road_eu" {
-                named.push((name, phases.clone()));
+                named.push((*name, phases));
             }
         }
     }

@@ -8,13 +8,10 @@ pub mod jet;
 pub mod qap;
 pub mod sharedmap;
 
+use crate::engine::{EngineCtx, MapOutcome, MapSpec};
 use crate::graph::CsrGraph;
-use crate::metrics::{MappingResult, PhaseBreakdown};
-use crate::par::cost::DeviceTimer;
 use crate::par::Pool;
-use crate::partition::{comm_cost, imbalance};
 use crate::topology::Hierarchy;
-use crate::Block;
 
 /// Every algorithm in the paper's evaluation (§5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -95,6 +92,11 @@ impl Algorithm {
 }
 
 /// Run one algorithm end to end and measure it.
+///
+/// Thin shim over the engine's solver registry, kept for source
+/// compatibility: no graph cache, no device runtime, no polish. New code
+/// should build a [`MapSpec`] and call [`crate::engine::Engine::map`].
+#[deprecated(note = "use engine::Engine::map with a MapSpec")]
 pub fn run_algorithm(
     algo: Algorithm,
     pool: &Pool,
@@ -102,43 +104,15 @@ pub fn run_algorithm(
     h: &Hierarchy,
     eps: f64,
     seed: u64,
-) -> MappingResult {
-    let mut phases = PhaseBreakdown::default();
-    let timer = DeviceTimer::start();
-    let mapping: Vec<Block> = match algo {
-        Algorithm::GpuHm => {
-            gpu_hm::gpu_hm(pool, g, h, eps, seed, &gpu_hm::GpuHmConfig::default_flavor(), Some(&mut phases))
-        }
-        Algorithm::GpuHmUltra => {
-            gpu_hm::gpu_hm(pool, g, h, eps, seed, &gpu_hm::GpuHmConfig::ultra(), Some(&mut phases))
-        }
-        Algorithm::GpuIm => {
-            gpu_im::gpu_im(pool, g, h, eps, seed, &gpu_im::GpuImConfig::default(), Some(&mut phases))
-        }
-        Algorithm::SharedMapF => sharedmap::sharedmap(g, h, eps, seed, &sharedmap::SharedMapConfig::fast()),
-        Algorithm::SharedMapS => sharedmap::sharedmap(g, h, eps, seed, &sharedmap::SharedMapConfig::strong()),
-        Algorithm::IntMapF => intmap::intmap(g, h, eps, seed, &intmap::IntMapConfig::fast()),
-        Algorithm::IntMapS => intmap::intmap(g, h, eps, seed, &intmap::IntMapConfig::strong()),
-        Algorithm::Jet => {
-            jet::jet_partition(pool, g, h.k(), eps, seed, &jet::JetPartConfig::default(), Some(&mut phases))
-        }
-        Algorithm::JetUltra => {
-            jet::jet_partition(pool, g, h.k(), eps, seed, &jet::JetPartConfig::ultra(), Some(&mut phases))
-        }
-    };
-    let m = timer.stop();
-    let device_ms = if algo.is_device() { phases.total_device_ms().max(m.device_ms) } else { m.host_ms };
-    MappingResult {
-        comm_cost: comm_cost(g, &mapping, h),
-        imbalance: imbalance(g, &mapping, h.k()),
-        mapping,
-        host_ms: m.host_ms,
-        device_ms,
-        phases: if algo.is_device() { Some(phases) } else { None },
-    }
+) -> MapOutcome {
+    let ctx = EngineCtx::host_only(pool.clone());
+    // Solvers never touch spec.graph; the caller already resolved `g`.
+    let spec = MapSpec::named("<caller-resolved>").eps(eps).seed(seed);
+    crate::engine::solver(algo).solve(&ctx, g, h, &spec)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::gen;
@@ -152,7 +126,7 @@ mod tests {
     }
 
     #[test]
-    fn run_all_algorithms_small_instance() {
+    fn deprecated_shim_still_runs_every_algorithm() {
         let g = gen::grid2d(20, 20, false);
         let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
@@ -160,6 +134,7 @@ mod tests {
             let r = run_algorithm(algo, &pool, &g, &h, 0.03, 1);
             crate::partition::validate_mapping(&r.mapping, g.n(), h.k())
                 .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+            assert_eq!(r.algorithm, algo);
             assert!(r.comm_cost > 0.0, "{}", algo.name());
             assert!(r.host_ms > 0.0);
             assert_eq!(r.phases.is_some(), algo.is_device());

@@ -1,7 +1,13 @@
 //! Run configuration: presets plus a tiny `key = value` config-file format
 //! (the offline crate set has no serde/toml, so the parser is hand-rolled).
+//!
+//! A [`RunConfig`] lowers into the engine API: [`RunConfig::to_spec`]
+//! produces the [`MapSpec`] and [`RunConfig::engine_config`] the
+//! [`EngineConfig`], so `heipa map --config FILE` and library callers go
+//! through exactly the same path as hand-built specs.
 
 use crate::algo::Algorithm;
+use crate::engine::{EngineConfig, MapSpec, Refinement};
 use crate::topology::Hierarchy;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -10,32 +16,45 @@ use std::path::Path;
 /// A full experiment/run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Task graph: instance registry name or METIS path (`graph = rgg15`).
+    /// Optional because the CLI may supply it via `--graph`.
+    pub graph: Option<String>,
     /// Machine hierarchy, e.g. `4:8:6`.
     pub hierarchy: String,
     /// Distance vector, e.g. `1:10:100`.
     pub distance: String,
     /// Imbalance ε.
     pub eps: f64,
-    /// Algorithm to run.
-    pub algorithm: Algorithm,
+    /// Algorithm to run; `None` = auto-route (`algorithm = auto`).
+    pub algorithm: Option<Algorithm>,
+    /// Refinement flavor (`refinement = standard|strong`).
+    pub refinement: Refinement,
+    /// Run the QAP polish stage (`polish = 1`).
+    pub polish: bool,
     /// Seeds (the paper averages over five).
     pub seeds: Vec<u64>,
     /// Device worker threads (0 = auto).
     pub threads: usize,
     /// Artifact directory for the PJRT offload kernels.
     pub artifacts_dir: String,
+    /// Solver-specific options (`opt.NAME = value`).
+    pub options: BTreeMap<String, String>,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            graph: None,
             hierarchy: "4:8:6".into(),
             distance: "1:10:100".into(),
             eps: 0.03,
-            algorithm: Algorithm::GpuIm,
+            algorithm: Some(Algorithm::GpuIm),
+            refinement: Refinement::Standard,
+            polish: false,
             seeds: vec![1, 2, 3, 4, 5],
             threads: 0,
             artifacts_dir: "artifacts".into(),
+            options: BTreeMap::new(),
         }
     }
 }
@@ -43,6 +62,29 @@ impl Default for RunConfig {
 impl RunConfig {
     pub fn parse_hierarchy(&self) -> Result<Hierarchy> {
         Hierarchy::parse(&self.hierarchy, &self.distance)
+    }
+
+    /// Lower into a [`MapSpec`] for `graph` (a registry name or METIS
+    /// path — typically `self.graph` or a CLI override).
+    pub fn to_spec(&self, graph: &str) -> MapSpec {
+        MapSpec::named(graph)
+            .hierarchy(self.hierarchy.clone())
+            .distance(self.distance.clone())
+            .eps(self.eps)
+            .seeds(self.seeds.clone())
+            .algo(self.algorithm)
+            .refinement(self.refinement)
+            .polish(self.polish)
+            .options(self.options.clone())
+    }
+
+    /// Engine construction parameters carried by this config.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            threads: self.threads,
+            artifacts_dir: self.artifacts_dir.clone(),
+            ..EngineConfig::default()
+        }
     }
 
     /// Load from a `key = value` file (`#` comments allowed).
@@ -57,13 +99,22 @@ impl RunConfig {
         let kv = parse_kv(text)?;
         for (key, value) in kv {
             match key.as_str() {
+                "graph" => cfg.graph = Some(value),
                 "hierarchy" => cfg.hierarchy = value,
                 "distance" => cfg.distance = value,
                 "eps" => cfg.eps = value.parse().context("eps")?,
                 "algorithm" => {
-                    cfg.algorithm = Algorithm::from_name(&value)
-                        .with_context(|| format!("unknown algorithm {value}"))?
+                    cfg.algorithm = if value == "auto" {
+                        None
+                    } else {
+                        Some(
+                            Algorithm::from_name(&value)
+                                .with_context(|| format!("unknown algorithm {value}"))?,
+                        )
+                    }
                 }
+                "refinement" => cfg.refinement = Refinement::from_name(&value)?,
+                "polish" => cfg.polish = parse_bool(&value).context("polish")?,
                 "seeds" => {
                     cfg.seeds = value
                         .split(',')
@@ -72,11 +123,30 @@ impl RunConfig {
                 }
                 "threads" => cfg.threads = value.parse().context("threads")?,
                 "artifacts_dir" => cfg.artifacts_dir = value,
-                other => bail!("unknown config key `{other}`"),
+                other => {
+                    if let Some(opt) = other.strip_prefix("opt.") {
+                        cfg.options.insert(opt.to_string(), value);
+                    } else {
+                        bail!("unknown config key `{other}`");
+                    }
+                }
             }
+        }
+        if cfg.seeds.is_empty() {
+            bail!("seeds must not be empty");
         }
         cfg.parse_hierarchy()?; // validate
         Ok(cfg)
+    }
+}
+
+/// Strict boolean: only `0/1/true/false` are accepted — this parser
+/// rejects typos instead of coercing them.
+fn parse_bool(value: &str) -> Result<bool> {
+    match value {
+        "1" | "true" => Ok(true),
+        "0" | "false" => Ok(false),
+        other => bail!("expected 0/1/true/false, got `{other}`"),
     }
 }
 
@@ -106,6 +176,7 @@ mod tests {
         assert_eq!(cfg.eps, 0.03);
         assert_eq!(cfg.parse_hierarchy().unwrap().k(), 192);
         assert_eq!(cfg.seeds.len(), 5);
+        assert_eq!(cfg.algorithm, Some(Algorithm::GpuIm));
     }
 
     #[test]
@@ -116,8 +187,26 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.parse_hierarchy().unwrap().k(), 64);
         assert_eq!(cfg.eps, 0.05);
-        assert_eq!(cfg.algorithm, Algorithm::GpuHm);
+        assert_eq!(cfg.algorithm, Some(Algorithm::GpuHm));
         assert_eq!(cfg.seeds, vec![7, 8]);
+    }
+
+    #[test]
+    fn parses_engine_keys_and_lowers_to_spec() {
+        let cfg = RunConfig::from_kv_text(
+            "graph = rgg15\nhierarchy = 4:8:2\ndistance = 1:10:100\nalgorithm = auto\n\
+             refinement = strong\npolish = 1\nopt.adaptive = 0\nseeds = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.graph.as_deref(), Some("rgg15"));
+        assert_eq!(cfg.algorithm, None);
+        assert_eq!(cfg.refinement, Refinement::Strong);
+        assert!(cfg.polish);
+        let spec = cfg.to_spec(cfg.graph.as_deref().unwrap());
+        assert_eq!(spec.primary_seed(), 3);
+        assert_eq!(spec.opt_bool("adaptive"), Some(false));
+        assert!(spec.polish);
+        assert_eq!(spec.algorithm, None);
     }
 
     #[test]
@@ -126,6 +215,8 @@ mod tests {
         assert!(RunConfig::from_kv_text("eps = banana").is_err());
         assert!(RunConfig::from_kv_text("algorithm = nope").is_err());
         assert!(RunConfig::from_kv_text("hierarchy = 4:8\ndistance = 1:10:100").is_err());
+        assert!(RunConfig::from_kv_text("seeds = ").is_err());
+        assert!(RunConfig::from_kv_text("polish = yes").is_err(), "polish must be strict");
     }
 
     #[test]

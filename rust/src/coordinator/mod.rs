@@ -2,16 +2,16 @@
 //!
 //! A deployment of this library is a long-running *mapping service*: HPC
 //! schedulers submit task graphs and machine hierarchies and receive
-//! vertex → PE mappings. The coordinator owns
+//! vertex → PE mappings. The coordinator is a thin shell around one
+//! [`crate::engine::Engine`]:
 //!
-//! * a **router** that picks an algorithm per request (quality-optimal
-//!   GPU-HM-ultra for small graphs, throughput-optimal GPU-IM for large
-//!   ones) unless the client pins one,
 //! * a single-consumer **job queue** feeding a worker thread that owns the
-//!   device pool and the PJRT [`crate::runtime::Runtime`] (one client per
-//!   device, mirroring the paper's one-GPU setup),
-//! * an optional **QAP polish** stage that refines the block → PE
-//!   assignment with the offloaded all-pairs swap kernel, and
+//!   engine — and with it the device pool, the PJRT runtime and the
+//!   bounded graph cache (one client per device, mirroring the paper's
+//!   one-GPU setup),
+//! * the wire-level [`MapRequest`], which lowers into the engine's
+//!   [`MapSpec`] (routing, refinement upgrade and the QAP polish stage all
+//!   happen inside the engine, identically to every other front-end), and
 //! * service **metrics** (requests, per-algorithm counts, device time).
 //!
 //! Front-ends: an in-process handle ([`service::Service::submit`]) and a
@@ -21,8 +21,13 @@ pub mod protocol;
 pub mod service;
 
 use crate::algo::Algorithm;
+use crate::engine::{GraphSource, MapOutcome, MapSpec, Refinement};
+use anyhow::{bail, Result};
 
-/// A mapping request.
+pub use crate::engine::route;
+
+/// A mapping request — the wire-level form of a [`MapSpec`]. One seed per
+/// request; clients fan seeds out as separate requests.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MapRequest {
     /// Instance registry name (`rgg15`, …) or a path to a METIS file.
@@ -33,10 +38,13 @@ pub struct MapRequest {
     pub distance: String,
     pub eps: f64,
     pub seed: u64,
-    /// Run the offloaded QAP polish stage after mapping.
+    pub refinement: Refinement,
+    /// Run the QAP polish stage after mapping.
     pub polish: bool,
-    /// Return the full mapping vector in the response.
+    /// Return the full mapping vector in the reply.
     pub return_mapping: bool,
+    /// Solver-specific options (`opt.NAME=value` on the wire).
+    pub options: std::collections::BTreeMap<String, String>,
 }
 
 impl Default for MapRequest {
@@ -48,41 +56,57 @@ impl Default for MapRequest {
             distance: "1:10:100".into(),
             eps: 0.03,
             seed: 1,
+            refinement: Refinement::Standard,
             polish: false,
             return_mapping: false,
+            options: std::collections::BTreeMap::new(),
         }
     }
 }
 
-/// A mapping response.
-#[derive(Clone, Debug)]
-pub struct MapResponse {
-    pub id: u64,
-    pub algorithm: Algorithm,
-    pub n: usize,
-    pub k: usize,
-    pub comm_cost: f64,
-    pub imbalance: f64,
-    pub host_ms: f64,
-    pub device_ms: f64,
-    /// J improvement from the polish stage (0 when disabled).
-    pub polish_improvement: f64,
-    /// The mapping, when requested.
-    pub mapping: Option<Vec<crate::Block>>,
+impl MapRequest {
+    /// Lower into the engine's spec.
+    pub fn to_spec(&self) -> MapSpec {
+        MapSpec::named(self.instance.clone())
+            .hierarchy(self.hierarchy.clone())
+            .distance(self.distance.clone())
+            .eps(self.eps)
+            .seed(self.seed)
+            .algo(self.algorithm)
+            .refinement(self.refinement)
+            .polish(self.polish)
+            .return_mapping(self.return_mapping)
+            .options(self.options.clone())
+    }
+
+    /// Lift a spec onto the wire. Fails for in-memory graphs (the line
+    /// protocol cannot carry them); multi-seed specs lower to their
+    /// primary seed.
+    pub fn from_spec(spec: &MapSpec) -> Result<MapRequest> {
+        let GraphSource::Named(instance) = &spec.graph else {
+            bail!("in-memory graphs cannot be sent over the wire");
+        };
+        Ok(MapRequest {
+            instance: instance.clone(),
+            algorithm: spec.algorithm,
+            hierarchy: spec.hierarchy.clone(),
+            distance: spec.distance.clone(),
+            eps: spec.eps,
+            seed: spec.primary_seed(),
+            refinement: spec.refinement,
+            polish: spec.polish,
+            return_mapping: spec.return_mapping,
+            options: spec.options.clone(),
+        })
+    }
 }
 
-/// Router policy: which algorithm serves a request that did not pin one.
-/// Small graphs get the quality flavor, large ones the throughput flavor
-/// (threshold = the suite's size-class boundary).
-pub fn route(n: usize, pinned: Option<Algorithm>) -> Algorithm {
-    if let Some(a) = pinned {
-        return a;
-    }
-    if n <= 60_000 {
-        Algorithm::GpuHmUltra
-    } else {
-        Algorithm::GpuIm
-    }
+/// A service reply: the request id plus the engine's unified outcome.
+/// `outcome.mapping` is empty unless the request set `return_mapping`.
+#[derive(Clone, Debug)]
+pub struct MapReply {
+    pub id: u64,
+    pub outcome: MapOutcome,
 }
 
 /// Service metrics snapshot.
@@ -104,5 +128,31 @@ mod tests {
         assert_eq!(route(10_000, None), Algorithm::GpuHmUltra);
         assert_eq!(route(1_000_000, None), Algorithm::GpuIm);
         assert_eq!(route(10, Some(Algorithm::IntMapS)), Algorithm::IntMapS);
+    }
+
+    #[test]
+    fn request_spec_roundtrip() {
+        let mut req = MapRequest {
+            instance: "rgg15".into(),
+            algorithm: Some(Algorithm::GpuIm),
+            hierarchy: "4:8:2".into(),
+            distance: "1:10:100".into(),
+            eps: 0.05,
+            seed: 9,
+            refinement: Refinement::Strong,
+            polish: true,
+            return_mapping: true,
+            options: std::collections::BTreeMap::new(),
+        };
+        req.options.insert("adaptive".into(), "0".into());
+        let spec = req.to_spec();
+        assert_eq!(spec.primary_seed(), 9);
+        assert_eq!(MapRequest::from_spec(&spec).unwrap(), req);
+    }
+
+    #[test]
+    fn in_memory_specs_do_not_lower() {
+        let g = std::sync::Arc::new(crate::graph::gen::grid2d(4, 4, false));
+        assert!(MapRequest::from_spec(&MapSpec::in_memory(g)).is_err());
     }
 }

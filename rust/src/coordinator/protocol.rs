@@ -4,14 +4,16 @@
 //!
 //! ```text
 //! map instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.03 seed=1 polish=1
+//! map instance=del15 algorithm=auto refinement=strong opt.adaptive=0 mapping=1
 //! metrics
 //! ping
 //! ```
 //!
 //! Responses are single lines: `ok key=value …` or `err message=…`.
 
-use super::{MapRequest, MapResponse, ServiceMetrics};
+use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::algo::Algorithm;
+use crate::engine::Refinement;
 use anyhow::{bail, Result};
 
 /// Parsed client command.
@@ -51,9 +53,16 @@ pub fn parse_command(line: &str) -> Result<Command> {
                     "distance" => req.distance = v.to_string(),
                     "eps" => req.eps = v.parse()?,
                     "seed" => req.seed = v.parse()?,
+                    "refinement" => req.refinement = Refinement::from_name(v)?,
                     "polish" => req.polish = v == "1" || v == "true",
                     "mapping" => req.return_mapping = v == "1" || v == "true",
-                    other => bail!("unknown key `{other}`"),
+                    other => {
+                        if let Some(opt) = other.strip_prefix("opt.") {
+                            req.options.insert(opt.to_string(), v.to_string());
+                        } else {
+                            bail!("unknown key `{other}`");
+                        }
+                    }
                 }
             }
             if req.instance.is_empty() {
@@ -66,16 +75,17 @@ pub fn parse_command(line: &str) -> Result<Command> {
     }
 }
 
-/// Render a map response line.
-pub fn render_response(r: &MapResponse) -> String {
+/// Render a map reply line.
+pub fn render_response(r: &MapReply) -> String {
+    let o = &r.outcome;
     let mut s = format!(
         "ok id={} algorithm={} n={} k={} j={:.3} imbalance={:.5} host_ms={:.3} device_ms={:.3} polish_dj={:.3}",
-        r.id, r.algorithm.name(), r.n, r.k, r.comm_cost, r.imbalance, r.host_ms, r.device_ms,
-        r.polish_improvement
+        r.id, o.algorithm.name(), o.n, o.k, o.comm_cost, o.imbalance, o.host_ms, o.device_ms,
+        o.polish_improvement
     );
-    if let Some(m) = &r.mapping {
+    if !o.mapping.is_empty() {
         s.push_str(" mapping=");
-        let parts: Vec<String> = m.iter().map(|b| b.to_string()).collect();
+        let parts: Vec<String> = o.mapping.iter().map(|b| b.to_string()).collect();
         s.push_str(&parts.join(","));
     }
     s
@@ -165,21 +175,37 @@ mod tests {
         assert!(parse_command("map").is_err());
         assert!(parse_command("map instance=x bad").is_err());
         assert!(parse_command("map instance=x algorithm=nope").is_err());
+        assert!(parse_command("map instance=x refinement=nope").is_err());
+    }
+
+    #[test]
+    fn parses_refinement_and_solver_options() {
+        let Command::Map(req) =
+            parse_command("map instance=x refinement=strong opt.adaptive=0").unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(req.refinement, Refinement::Strong);
+        assert_eq!(req.options.get("adaptive").map(String::as_str), Some("0"));
     }
 
     #[test]
     fn response_rendering_roundtrips_keys() {
-        let r = MapResponse {
+        let r = MapReply {
             id: 3,
-            algorithm: Algorithm::GpuHm,
-            n: 10,
-            k: 4,
-            comm_cost: 123.5,
-            imbalance: 0.01,
-            host_ms: 5.0,
-            device_ms: 0.2,
-            polish_improvement: 1.0,
-            mapping: Some(vec![0, 1, 2, 3]),
+            outcome: crate::engine::MapOutcome {
+                algorithm: Algorithm::GpuHm,
+                n: 10,
+                k: 4,
+                seed: 1,
+                mapping: vec![0, 1, 2, 3],
+                comm_cost: 123.5,
+                imbalance: 0.01,
+                host_ms: 5.0,
+                device_ms: 0.2,
+                phases: None,
+                polish_improvement: 1.0,
+            },
         };
         let line = render_response(&r);
         assert!(line.starts_with("ok id=3 algorithm=gpu-hm"));

@@ -1,19 +1,33 @@
-//! The coordinator worker: job queue, graph cache, algorithm execution,
-//! optional device-offloaded QAP polish.
+//! The coordinator worker: a job queue in front of one
+//! [`crate::engine::Engine`]. Graph caching (bounded LRU), algorithm
+//! routing and the optional device-offloaded QAP polish all happen inside
+//! the engine — the worker only assigns ids and keeps metrics.
 
-use super::{route, MapRequest, MapResponse, ServiceMetrics};
-use crate::algo::{qap, run_algorithm};
-use crate::graph::{gen, io, CsrGraph};
-use crate::par::Pool;
-use crate::partition::{block_comm_matrix, comm_cost_blocks};
-use crate::runtime::{offload, Runtime};
-use crate::topology::Hierarchy;
+use super::{MapReply, MapRequest, ServiceMetrics};
+use crate::engine::{Engine, EngineConfig};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+
+/// Service construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Artifact directory for the PJRT offload kernels; the service still
+    /// maps (host polish only) when the runtime cannot come up.
+    pub artifacts_dir: String,
+    /// Device worker threads (0 = auto).
+    pub threads: usize,
+    /// Graph cache entry cap — bounds worker memory for long-lived
+    /// `serve` processes.
+    pub graph_cache_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { artifacts_dir: "artifacts".into(), threads: 0, graph_cache_cap: 64 }
+    }
+}
 
 /// Handle to a running coordinator worker.
 pub struct Service {
@@ -25,30 +39,38 @@ pub struct Service {
 struct Job {
     id: u64,
     request: MapRequest,
-    reply: mpsc::Sender<Result<MapResponse>>,
+    reply: mpsc::Sender<Result<MapReply>>,
 }
 
 impl Service {
-    /// Spawn the worker thread. `artifacts_dir` enables the polish stage;
-    /// if the runtime cannot come up the service still maps (no polish).
+    /// Convenience: spawn with default cache cap.
     pub fn start(artifacts_dir: String, threads: usize) -> Service {
+        Service::with_config(ServiceConfig { artifacts_dir, threads, ..ServiceConfig::default() })
+    }
+
+    /// Spawn the worker thread owning the engine.
+    pub fn with_config(cfg: ServiceConfig) -> Service {
         let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Mutex::new(ServiceMetrics::default()));
         let metrics_worker = metrics.clone();
         std::thread::spawn(move || {
-            let pool = if threads == 0 { Pool::default() } else { Pool::new(threads) };
-            let runtime = Runtime::new(&artifacts_dir).ok();
-            let mut graph_cache: HashMap<String, Arc<CsrGraph>> = HashMap::new();
+            let engine = Engine::new(EngineConfig {
+                threads: cfg.threads,
+                artifacts_dir: cfg.artifacts_dir,
+                graph_cache_cap: cfg.graph_cache_cap,
+            });
             while let Ok(job) = rx.recv() {
-                let out = handle(&pool, runtime.as_ref(), &mut graph_cache, job.id, &job.request);
+                let out = engine
+                    .map(&job.request.to_spec())
+                    .map(|outcome| MapReply { id: job.id, outcome });
                 {
                     let mut m = metrics_worker.lock().unwrap();
                     m.requests += 1;
                     match &out {
                         Ok(r) => {
-                            m.total_host_ms += r.host_ms;
-                            m.total_device_ms += r.device_ms;
-                            *m.per_algorithm.entry(r.algorithm.name()).or_insert(0) += 1;
+                            m.total_host_ms += r.outcome.host_ms;
+                            m.total_device_ms += r.outcome.device_ms;
+                            *m.per_algorithm.entry(r.outcome.algorithm.name()).or_insert(0) += 1;
                         }
                         Err(_) => m.failures += 1,
                     }
@@ -59,8 +81,8 @@ impl Service {
         Service { tx, next_id: AtomicU64::new(1), metrics }
     }
 
-    /// Submit a request and wait for the response.
-    pub fn submit(&self, request: MapRequest) -> Result<MapResponse> {
+    /// Submit a request and wait for the reply.
+    pub fn submit(&self, request: MapRequest) -> Result<MapReply> {
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -69,8 +91,8 @@ impl Service {
         rx.recv().context("service worker dropped the reply")?
     }
 
-    /// Submit a batch; responses come back in request order.
-    pub fn submit_batch(&self, requests: Vec<MapRequest>) -> Vec<Result<MapResponse>> {
+    /// Submit a batch; replies come back in request order.
+    pub fn submit_batch(&self, requests: Vec<MapRequest>) -> Vec<Result<MapReply>> {
         let channels: Vec<_> = requests
             .into_iter()
             .map(|request| {
@@ -94,74 +116,6 @@ impl Service {
     }
 }
 
-/// Resolve an instance: registry name first, then METIS path.
-fn resolve_graph(cache: &mut HashMap<String, Arc<CsrGraph>>, instance: &str) -> Result<Arc<CsrGraph>> {
-    if let Some(g) = cache.get(instance) {
-        return Ok(g.clone());
-    }
-    let g = if gen::instance_by_name(instance).is_some() {
-        gen::generate_by_name(instance)
-    } else {
-        io::read_metis(Path::new(instance))
-            .with_context(|| format!("instance `{instance}` is neither a registry name nor a readable METIS file"))?
-    };
-    let g = Arc::new(g);
-    cache.insert(instance.to_string(), g.clone());
-    Ok(g)
-}
-
-fn handle(
-    pool: &Pool,
-    runtime: Option<&Runtime>,
-    cache: &mut HashMap<String, Arc<CsrGraph>>,
-    id: u64,
-    req: &MapRequest,
-) -> Result<MapResponse> {
-    let g = resolve_graph(cache, &req.instance)?;
-    let h = Hierarchy::parse(&req.hierarchy, &req.distance)?;
-    let algo = route(g.n(), req.algorithm);
-    let mut result = run_algorithm(algo, pool, &g, &h, req.eps, req.seed);
-
-    // Optional QAP polish: re-map blocks to PEs with the offloaded
-    // all-pairs swap kernel (falls back to the host kernel without PJRT).
-    let mut polish_improvement = 0.0;
-    if req.polish {
-        let k = h.k();
-        let bmat = block_comm_matrix(&g, &result.mapping, k);
-        let mut sigma: Vec<crate::Block> = (0..k as crate::Block).collect();
-        let before = comm_cost_blocks(&bmat, k, &sigma, &h);
-        match runtime {
-            Some(rt) if rt.available(&format!("qap_step_k{}", offload::qap_kernel_size(k)?)) => {
-                offload::swap_refine_offload(rt, &bmat, k, &h, &mut sigma, 20)?;
-            }
-            _ => {
-                qap::swap_refine(&bmat, k, &mut sigma, &h, 20);
-            }
-        }
-        let after = comm_cost_blocks(&bmat, k, &sigma, &h);
-        if after < before {
-            polish_improvement = before - after;
-            for pe in result.mapping.iter_mut() {
-                *pe = sigma[*pe as usize];
-            }
-            result.comm_cost -= polish_improvement;
-        }
-    }
-
-    Ok(MapResponse {
-        id,
-        algorithm: algo,
-        n: g.n(),
-        k: h.k(),
-        comm_cost: result.comm_cost,
-        imbalance: result.imbalance,
-        host_ms: result.host_ms,
-        device_ms: result.device_ms,
-        polish_improvement,
-        mapping: if req.return_mapping { Some(result.mapping) } else { None },
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,8 +129,7 @@ mod tests {
             distance: "1:10:100".into(),
             eps: 0.03,
             seed: 1,
-            polish: false,
-            return_mapping: false,
+            ..MapRequest::default()
         }
     }
 
@@ -184,9 +137,10 @@ mod tests {
     fn submits_and_maps() {
         let svc = Service::start("artifacts".into(), 1);
         let resp = svc.submit(small_request("sten_cop20k")).unwrap();
-        assert_eq!(resp.k, 8);
-        assert!(resp.comm_cost > 0.0);
-        assert!(resp.imbalance <= 0.032);
+        assert_eq!(resp.outcome.k, 8);
+        assert!(resp.outcome.comm_cost > 0.0);
+        assert!(resp.outcome.imbalance <= 0.032);
+        assert!(resp.outcome.mapping.is_empty(), "mapping withheld unless requested");
         let m = svc.metrics();
         assert_eq!(m.requests, 1);
         assert_eq!(m.failures, 0);
@@ -198,10 +152,10 @@ mod tests {
         let reqs = vec![small_request("wal_598a"), small_request("wal_598a")];
         let out = svc.submit_batch(reqs);
         assert!(out.iter().all(|r| r.is_ok()));
-        // Second run hits the graph cache → not slower by graph gen; just
-        // check both returned consistent sizes.
+        // Second run hits the engine's graph cache → not slower by graph
+        // gen; just check both returned consistent sizes.
         let (a, b) = (out[0].as_ref().unwrap(), out[1].as_ref().unwrap());
-        assert_eq!(a.n, b.n);
+        assert_eq!(a.outcome.n, b.outcome.n);
     }
 
     #[test]
@@ -213,8 +167,8 @@ mod tests {
         let resp = svc.submit(req.clone()).unwrap();
         req.polish = false;
         let base = svc.submit(req).unwrap();
-        assert!(resp.comm_cost <= base.comm_cost + 1e-6);
-        assert!(resp.polish_improvement >= 0.0);
+        assert!(resp.outcome.comm_cost <= base.outcome.comm_cost + 1e-6);
+        assert!(resp.outcome.polish_improvement >= 0.0);
     }
 
     #[test]
@@ -231,8 +185,24 @@ mod tests {
         let mut req = small_request("sten_cop20k");
         req.return_mapping = true;
         let resp = svc.submit(req).unwrap();
-        let m = resp.mapping.unwrap();
-        assert_eq!(m.len(), resp.n);
-        assert!(m.iter().all(|&pe| (pe as usize) < resp.k));
+        let out = &resp.outcome;
+        assert_eq!(out.mapping.len(), out.n);
+        assert!(out.mapping.iter().all(|&pe| (pe as usize) < out.k));
+    }
+
+    #[test]
+    fn worker_cache_stays_bounded() {
+        let svc = Service::with_config(ServiceConfig {
+            threads: 1,
+            graph_cache_cap: 1,
+            ..ServiceConfig::default()
+        });
+        for name in ["sten_cop20k", "wal_598a", "sten_cont300"] {
+            svc.submit(small_request(name)).unwrap();
+        }
+        // No way to observe the worker's cache directly; the bound is
+        // enforced by engine::cache (unit-tested there). This just proves
+        // a cap-1 service keeps serving correctly.
+        assert_eq!(svc.metrics().failures, 0);
     }
 }

@@ -1,0 +1,108 @@
+//! Bounded LRU cache for resolved graphs, so a long-lived engine (the
+//! `heipa serve` coordinator in particular) cannot grow memory without
+//! limit when clients cycle through many instances.
+
+use crate::graph::CsrGraph;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Name → graph cache with least-recently-used eviction. Recency is a
+/// monotonic stamp bumped on every hit; eviction is O(len), which is
+/// irrelevant next to the cost of generating or parsing a graph.
+#[derive(Debug)]
+pub struct GraphCache {
+    cap: usize,
+    stamp: u64,
+    map: HashMap<String, (u64, Arc<CsrGraph>)>,
+}
+
+impl GraphCache {
+    /// `cap` is the maximum number of cached graphs (min 1).
+    pub fn new(cap: usize) -> Self {
+        GraphCache { cap: cap.max(1), stamp: 0, map: HashMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<Arc<CsrGraph>> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        self.map.get_mut(key).map(|slot| {
+            slot.0 = stamp;
+            slot.1.clone()
+        })
+    }
+
+    /// Insert `key`, evicting the least-recently-used entry when full.
+    pub fn insert(&mut self, key: String, g: Arc<CsrGraph>) {
+        if !self.map.contains_key(&key) && self.map.len() >= self.cap {
+            if let Some(oldest) = self.map.iter().min_by_key(|(_, (s, _))| *s).map(|(k, _)| k.clone()) {
+                self.map.remove(&oldest);
+            }
+        }
+        self.stamp += 1;
+        self.map.insert(key, (self.stamp, g));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g() -> Arc<CsrGraph> {
+        Arc::new(crate::graph::gen::grid2d(4, 4, false))
+    }
+
+    #[test]
+    fn bounded_at_capacity() {
+        let mut c = GraphCache::new(2);
+        c.insert("a".into(), g());
+        c.insert("b".into(), g());
+        c.insert("c".into(), g());
+        assert_eq!(c.len(), 2);
+        assert!(c.get("a").is_none(), "oldest entry evicted");
+        assert!(c.get("b").is_some());
+        assert!(c.get("c").is_some());
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let mut c = GraphCache::new(2);
+        c.insert("a".into(), g());
+        c.insert("b".into(), g());
+        assert!(c.get("a").is_some()); // a is now newer than b
+        c.insert("c".into(), g());
+        assert!(c.get("b").is_none(), "b was the LRU entry");
+        assert!(c.get("a").is_some());
+    }
+
+    #[test]
+    fn reinsert_does_not_evict() {
+        let mut c = GraphCache::new(2);
+        c.insert("a".into(), g());
+        c.insert("b".into(), g());
+        c.insert("a".into(), g()); // same key: no eviction needed
+        assert_eq!(c.len(), 2);
+        assert!(c.get("b").is_some());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut c = GraphCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert("a".into(), g());
+        c.insert("b".into(), g());
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,332 @@
+//! The crate's single front door: one spec, one solver trait, one context.
+//!
+//! Every caller — the `heipa` CLI, the TCP coordinator, the benchmark
+//! harness and library users — builds a [`MapSpec`] and hands it to an
+//! [`Engine`]. The engine resolves the graph (through a bounded LRU
+//! cache), parses the hierarchy, routes to a [`Solver`] from the
+//! name-indexed [`registry`], and optionally runs the QAP polish stage
+//! with the device-offloaded kernel when PJRT artifacts are available.
+//! The result is always a [`MapOutcome`].
+//!
+//! ```no_run
+//! use heipa::engine::{Engine, MapSpec};
+//!
+//! let engine = Engine::with_defaults();
+//! let outcome = engine.map(&MapSpec::named("rgg15").hierarchy("4:8:2").polish(true))?;
+//! println!("J = {:.0} on {} PEs", outcome.comm_cost, outcome.k);
+//! # anyhow::Ok(())
+//! ```
+
+pub mod cache;
+pub mod registry;
+pub mod spec;
+
+pub use registry::{solver, solver_by_name, solver_names, solvers};
+pub use spec::{GraphSource, MapSpec, Refinement};
+
+use crate::algo::{qap, Algorithm};
+use crate::graph::{gen, io, CsrGraph};
+use crate::metrics::PhaseBreakdown;
+use crate::par::Pool;
+use crate::partition::{block_comm_matrix, comm_cost_blocks};
+use crate::runtime::{offload, Runtime};
+use crate::topology::Hierarchy;
+use crate::Block;
+use anyhow::{Context, Result};
+use std::cell::{OnceCell, RefCell};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Unified result of one mapping run — replaces the old
+/// `MappingResult`/`MapResponse` split.
+#[derive(Clone, Debug)]
+pub struct MapOutcome {
+    /// The solver that actually ran (after routing + refinement upgrade).
+    pub algorithm: Algorithm,
+    pub n: usize,
+    pub k: usize,
+    /// The seed this outcome was solved with.
+    pub seed: u64,
+    /// Vertex → PE assignment. Empty when the spec set
+    /// `return_mapping = false`.
+    pub mapping: Vec<Block>,
+    /// Communication cost `J(C, D, Π)` (after polish, if enabled).
+    pub comm_cost: f64,
+    /// Achieved imbalance.
+    pub imbalance: f64,
+    /// Host wall time (ms).
+    pub host_ms: f64,
+    /// Modeled device time (ms); equals `host_ms` for CPU-only solvers.
+    pub device_ms: f64,
+    /// Per-phase breakdown (device solvers only).
+    pub phases: Option<PhaseBreakdown>,
+    /// `J` improvement from the polish stage (0 when disabled).
+    pub polish_improvement: f64,
+}
+
+/// One solver in the registry. `solve` runs the algorithm end to end and
+/// measures it; routing, graph resolution and polish belong to the
+/// [`Engine`], not the solver.
+pub trait Solver: Sync {
+    fn algorithm(&self) -> Algorithm;
+
+    fn name(&self) -> &'static str {
+        self.algorithm().name()
+    }
+
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome;
+}
+
+/// Router policy for specs that did not pin an algorithm: small graphs get
+/// the quality flavor, large ones the throughput flavor (threshold = the
+/// suite's size-class boundary).
+pub fn route(n: usize, pinned: Option<Algorithm>) -> Algorithm {
+    if let Some(a) = pinned {
+        return a;
+    }
+    if n <= 60_000 {
+        Algorithm::GpuHmUltra
+    } else {
+        Algorithm::GpuIm
+    }
+}
+
+/// Engine construction parameters.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Device worker threads (0 = auto).
+    pub threads: usize,
+    /// Artifact directory for the PJRT offload kernels. The engine still
+    /// maps (host polish only) when the runtime cannot come up.
+    pub artifacts_dir: String,
+    /// Graph cache entry cap (LRU).
+    pub graph_cache_cap: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threads: 0, artifacts_dir: "artifacts".into(), graph_cache_cap: 64 }
+    }
+}
+
+/// Shared execution state: the worker [`Pool`], the PJRT [`Runtime`] and
+/// the graph cache, owned once per engine. Not `Sync` (the runtime holds a
+/// single PJRT client); long-lived services keep the engine on one worker
+/// thread, matching the paper's one-client-per-device model.
+pub struct EngineCtx {
+    pool: Pool,
+    artifacts_dir: String,
+    /// Lazily-initialized PJRT client: front-ends that never polish (or
+    /// offload) must not pay XLA client startup.
+    runtime: OnceCell<Option<Runtime>>,
+    cache: RefCell<cache::GraphCache>,
+}
+
+impl EngineCtx {
+    /// Context without a device runtime or meaningful cache — for shims and
+    /// tests that drive a solver directly.
+    pub fn host_only(pool: Pool) -> Self {
+        EngineCtx {
+            pool,
+            artifacts_dir: String::new(),
+            runtime: OnceCell::from(None),
+            cache: RefCell::new(cache::GraphCache::new(1)),
+        }
+    }
+
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The PJRT runtime, brought up on first use; `None` when the client
+    /// cannot start (the engine still maps, host polish only).
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.runtime.get_or_init(|| Runtime::new(&self.artifacts_dir).ok()).as_ref()
+    }
+
+    /// Number of graphs currently cached.
+    pub fn cached_graphs(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// The mapping engine. See the module docs for the one-spec/one-context
+/// contract.
+pub struct Engine {
+    ctx: EngineCtx,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        let pool = if cfg.threads == 0 { Pool::default() } else { Pool::new(cfg.threads) };
+        Engine {
+            ctx: EngineCtx {
+                pool,
+                artifacts_dir: cfg.artifacts_dir,
+                runtime: OnceCell::new(),
+                cache: RefCell::new(cache::GraphCache::new(cfg.graph_cache_cap)),
+            },
+        }
+    }
+
+    pub fn with_defaults() -> Engine {
+        Engine::new(EngineConfig::default())
+    }
+
+    pub fn ctx(&self) -> &EngineCtx {
+        &self.ctx
+    }
+
+    /// Resolve a [`GraphSource`]: in-memory graphs pass through; named ones
+    /// hit the LRU cache, then the instance registry, then METIS I/O.
+    pub fn resolve_graph(&self, src: &GraphSource) -> Result<Arc<CsrGraph>> {
+        match src {
+            GraphSource::InMemory(g) => Ok(g.clone()),
+            GraphSource::Named(name) => {
+                if let Some(g) = self.ctx.cache.borrow_mut().get(name) {
+                    return Ok(g);
+                }
+                let g = if gen::instance_by_name(name).is_some() {
+                    gen::generate_by_name(name)
+                } else {
+                    io::read_metis(Path::new(name)).with_context(|| {
+                        format!("instance `{name}` is neither a registry name nor a readable METIS file")
+                    })?
+                };
+                let g = Arc::new(g);
+                self.ctx.cache.borrow_mut().insert(name.clone(), g.clone());
+                Ok(g)
+            }
+        }
+    }
+
+    /// Map with the spec's primary seed.
+    pub fn map(&self, spec: &MapSpec) -> Result<MapOutcome> {
+        let g = self.resolve_graph(&spec.graph)?;
+        let h = spec.parse_hierarchy()?;
+        let algo = spec.resolve_algorithm(g.n());
+        let mut out = registry::solver(algo).solve(&self.ctx, &g, &h, spec);
+        if spec.polish {
+            out.polish_improvement = polish_mapping(&self.ctx, &g, &h, &mut out.mapping)?;
+            out.comm_cost -= out.polish_improvement;
+        }
+        if !spec.return_mapping {
+            out.mapping = Vec::new();
+        }
+        Ok(out)
+    }
+
+    /// Map once per seed in the spec, in order.
+    pub fn map_all_seeds(&self, spec: &MapSpec) -> Result<Vec<MapOutcome>> {
+        spec.seeds.iter().map(|&s| self.map(&spec.with_seed(s))).collect()
+    }
+}
+
+/// The QAP polish stage: re-map blocks to PEs with the pairwise-swap
+/// search — the device-offloaded kernel when the runtime has a fitting
+/// `qap_step_k*` artifact, the host kernel otherwise. Rewrites `mapping`
+/// in place and returns the `J` improvement (≥ 0). Every front-end goes
+/// through this one function, so polish is identical from the library,
+/// `heipa map --polish`, and the TCP service.
+pub fn polish_mapping(ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, mapping: &mut [Block]) -> Result<f64> {
+    let k = h.k();
+    let bmat = block_comm_matrix(g, mapping, k);
+    let mut sigma: Vec<Block> = (0..k as Block).collect();
+    let before = comm_cost_blocks(&bmat, k, &sigma, h);
+    let offloaded = match (ctx.runtime(), offload::qap_kernel_size(k)) {
+        (Some(rt), Ok(kp)) if rt.available(&format!("qap_step_k{kp}")) => {
+            offload::swap_refine_offload(rt, &bmat, k, h, &mut sigma, 20)?;
+            true
+        }
+        _ => false,
+    };
+    if !offloaded {
+        qap::swap_refine(&bmat, k, &mut sigma, h, 20);
+    }
+    let after = comm_cost_blocks(&bmat, k, &sigma, h);
+    if after < before {
+        for pe in mapping.iter_mut() {
+            *pe = sigma[*pe as usize];
+        }
+        Ok(before - after)
+    } else {
+        Ok(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::validate_mapping;
+
+    fn engine() -> Engine {
+        Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() })
+    }
+
+    #[test]
+    fn maps_a_named_instance() {
+        let e = engine();
+        let spec = MapSpec::named("sten_cop20k").hierarchy("2:2:2").distance("1:10:100");
+        let out = e.map(&spec).unwrap();
+        assert_eq!(out.k, 8);
+        assert!(out.comm_cost > 0.0);
+        validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        assert_eq!(e.ctx().cached_graphs(), 1);
+    }
+
+    #[test]
+    fn maps_an_in_memory_graph_without_caching() {
+        let e = engine();
+        let g = Arc::new(gen::grid2d(20, 20, false));
+        let out = e
+            .map(&MapSpec::in_memory(g.clone()).hierarchy("2:2").distance("1:10").algo(Some(Algorithm::GpuIm)))
+            .unwrap();
+        assert_eq!(out.n, g.n());
+        assert_eq!(out.algorithm, Algorithm::GpuIm);
+        assert_eq!(e.ctx().cached_graphs(), 0);
+    }
+
+    #[test]
+    fn graph_cache_is_bounded() {
+        let e = Engine::new(EngineConfig { threads: 1, graph_cache_cap: 2, ..EngineConfig::default() });
+        for name in ["sten_cop20k", "wal_598a", "sten_cont300"] {
+            e.map(&MapSpec::named(name).hierarchy("2:2").distance("1:10")).unwrap();
+        }
+        assert_eq!(e.ctx().cached_graphs(), 2);
+    }
+
+    #[test]
+    fn seeds_fan_out() {
+        let e = engine();
+        let spec = MapSpec::named("wal_598a").hierarchy("2:2").distance("1:10").seeds(vec![1, 2, 3]);
+        let outs = e.map_all_seeds(&spec).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs.iter().map(|o| o.seed).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn polish_never_worsens_and_drops_mapping_on_request() {
+        let e = engine();
+        let base = MapSpec::named("sten_cont300").hierarchy("2:2:2").distance("1:10:100").algo(Some(Algorithm::Jet));
+        let plain = e.map(&base.clone()).unwrap();
+        let polished = e.map(&base.clone().polish(true)).unwrap();
+        assert!(polished.comm_cost <= plain.comm_cost + 1e-6);
+        assert!(polished.polish_improvement >= 0.0);
+        let silent = e.map(&base.return_mapping(false)).unwrap();
+        assert!(silent.mapping.is_empty());
+        assert!(silent.comm_cost > 0.0);
+    }
+
+    #[test]
+    fn unknown_instance_is_a_clean_error() {
+        let e = engine();
+        assert!(e.map(&MapSpec::named("no_such_instance")).is_err());
+    }
+
+    #[test]
+    fn router_prefers_quality_for_small() {
+        assert_eq!(route(10_000, None), Algorithm::GpuHmUltra);
+        assert_eq!(route(1_000_000, None), Algorithm::GpuIm);
+        assert_eq!(route(10, Some(Algorithm::IntMapS)), Algorithm::IntMapS);
+    }
+}

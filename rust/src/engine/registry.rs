@@ -1,0 +1,248 @@
+//! Name-indexed solver registry: all nine algorithms of the paper's
+//! evaluation behind the one [`Solver`] trait — no dispatch `match`
+//! anywhere else in the crate.
+
+use super::{EngineCtx, MapOutcome, MapSpec, Solver};
+use crate::algo::{gpu_hm, gpu_im, intmap, jet, sharedmap, Algorithm};
+use crate::graph::CsrGraph;
+use crate::metrics::PhaseBreakdown;
+use crate::par::cost::DeviceTimer;
+use crate::partition::{comm_cost, imbalance};
+use crate::topology::Hierarchy;
+use crate::Block;
+
+/// Time a solver run and assemble the [`MapOutcome`]: device solvers get
+/// the modeled device timeline (phase sum vs ledger, whichever is larger),
+/// CPU baselines their wall time.
+fn measured(
+    algo: Algorithm,
+    g: &CsrGraph,
+    h: &Hierarchy,
+    seed: u64,
+    run: impl FnOnce(&mut PhaseBreakdown) -> Vec<Block>,
+) -> MapOutcome {
+    let mut phases = PhaseBreakdown::default();
+    let timer = DeviceTimer::start();
+    let mapping = run(&mut phases);
+    let m = timer.stop();
+    let device_ms = if algo.is_device() { phases.total_device_ms().max(m.device_ms) } else { m.host_ms };
+    MapOutcome {
+        algorithm: algo,
+        n: g.n(),
+        k: h.k(),
+        seed,
+        comm_cost: comm_cost(g, &mapping, h),
+        imbalance: imbalance(g, &mapping, h.k()),
+        mapping,
+        host_ms: m.host_ms,
+        device_ms,
+        phases: if algo.is_device() { Some(phases) } else { None },
+        polish_improvement: 0.0,
+    }
+}
+
+/// GPU hierarchical multisection (paper Alg. 2 with Jet). Honors the
+/// `adaptive` option (Eq. 2 ablation).
+pub struct GpuHmSolver {
+    ultra: bool,
+}
+
+impl Solver for GpuHmSolver {
+    fn algorithm(&self) -> Algorithm {
+        if self.ultra {
+            Algorithm::GpuHmUltra
+        } else {
+            Algorithm::GpuHm
+        }
+    }
+
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+        let mut cfg = if self.ultra { gpu_hm::GpuHmConfig::ultra() } else { gpu_hm::GpuHmConfig::default_flavor() };
+        if let Some(adaptive) = spec.opt_bool("adaptive") {
+            cfg.adaptive = adaptive;
+        }
+        let seed = spec.primary_seed();
+        measured(self.algorithm(), g, h, seed, |ph| {
+            gpu_hm::gpu_hm(ctx.pool(), g, h, spec.eps, seed, &cfg, Some(ph))
+        })
+    }
+}
+
+/// GPU integrated mapping (paper Alg. 3–6). Honors the
+/// `rebalance_comm_obj` option (ablation A2: rebalance with the J loss
+/// instead of the edge-cut loss).
+pub struct GpuImSolver;
+
+impl Solver for GpuImSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::GpuIm
+    }
+
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+        let mut cfg = gpu_im::GpuImConfig::default();
+        if let Some(v) = spec.opt_bool("rebalance_comm_obj") {
+            cfg.rebalance_with_comm_obj = v;
+        }
+        let seed = spec.primary_seed();
+        measured(self.algorithm(), g, h, seed, |ph| {
+            gpu_im::gpu_im(ctx.pool(), g, h, spec.eps, seed, &cfg, Some(ph))
+        })
+    }
+}
+
+/// SharedMap-like serial multisection baseline.
+pub struct SharedMapSolver {
+    strong: bool,
+}
+
+impl Solver for SharedMapSolver {
+    fn algorithm(&self) -> Algorithm {
+        if self.strong {
+            Algorithm::SharedMapS
+        } else {
+            Algorithm::SharedMapF
+        }
+    }
+
+    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+        let cfg = if self.strong { sharedmap::SharedMapConfig::strong() } else { sharedmap::SharedMapConfig::fast() };
+        let seed = spec.primary_seed();
+        measured(self.algorithm(), g, h, seed, |_ph| sharedmap::sharedmap(g, h, spec.eps, seed, &cfg))
+    }
+}
+
+/// IntMap-like serial integrated mapping baseline.
+pub struct IntMapSolver {
+    strong: bool,
+}
+
+impl Solver for IntMapSolver {
+    fn algorithm(&self) -> Algorithm {
+        if self.strong {
+            Algorithm::IntMapS
+        } else {
+            Algorithm::IntMapF
+        }
+    }
+
+    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+        let cfg = if self.strong { intmap::IntMapConfig::strong() } else { intmap::IntMapConfig::fast() };
+        let seed = spec.primary_seed();
+        measured(self.algorithm(), g, h, seed, |_ph| intmap::intmap(g, h, spec.eps, seed, &cfg))
+    }
+}
+
+/// Plain edge-cut Jet (§5.4: unfit for mapping by construction; kept as
+/// the paper's ablation).
+pub struct JetSolver {
+    ultra: bool,
+}
+
+impl Solver for JetSolver {
+    fn algorithm(&self) -> Algorithm {
+        if self.ultra {
+            Algorithm::JetUltra
+        } else {
+            Algorithm::Jet
+        }
+    }
+
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+        let cfg = if self.ultra { jet::JetPartConfig::ultra() } else { jet::JetPartConfig::default() };
+        let seed = spec.primary_seed();
+        measured(self.algorithm(), g, h, seed, |ph| {
+            jet::jet_partition(ctx.pool(), g, h.k(), spec.eps, seed, &cfg, Some(ph))
+        })
+    }
+}
+
+static GPU_HM: GpuHmSolver = GpuHmSolver { ultra: false };
+static GPU_HM_ULTRA: GpuHmSolver = GpuHmSolver { ultra: true };
+static GPU_IM: GpuImSolver = GpuImSolver;
+static SHAREDMAP_F: SharedMapSolver = SharedMapSolver { strong: false };
+static SHAREDMAP_S: SharedMapSolver = SharedMapSolver { strong: true };
+static INTMAP_F: IntMapSolver = IntMapSolver { strong: false };
+static INTMAP_S: IntMapSolver = IntMapSolver { strong: true };
+static JET: JetSolver = JetSolver { ultra: false };
+static JET_ULTRA: JetSolver = JetSolver { ultra: true };
+
+static REGISTRY: [&(dyn Solver); 9] = [
+    &GPU_HM,
+    &GPU_HM_ULTRA,
+    &GPU_IM,
+    &SHAREDMAP_F,
+    &SHAREDMAP_S,
+    &INTMAP_F,
+    &INTMAP_S,
+    &JET,
+    &JET_ULTRA,
+];
+
+/// Every registered solver, in the paper's presentation order.
+pub fn solvers() -> &'static [&'static dyn Solver] {
+    &REGISTRY
+}
+
+/// The solver for an [`Algorithm`] id. The registry covers the whole enum.
+pub fn solver(algo: Algorithm) -> &'static dyn Solver {
+    REGISTRY
+        .iter()
+        .copied()
+        .find(|s| s.algorithm() == algo)
+        .expect("registry covers every Algorithm")
+}
+
+/// Name-indexed lookup (`gpu-im`, `sharedmap-s`, …).
+pub fn solver_by_name(name: &str) -> Option<&'static dyn Solver> {
+    REGISTRY.iter().copied().find(|s| s.name() == name)
+}
+
+/// All registered solver names.
+pub fn solver_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_algorithm_and_name() {
+        for a in Algorithm::all() {
+            assert_eq!(solver(a).algorithm(), a);
+            let by_name = solver_by_name(a.name()).expect("name resolves");
+            assert_eq!(by_name.algorithm(), a);
+        }
+        assert!(solver_by_name("nope").is_none());
+        assert_eq!(solver_names().len(), Algorithm::all().len());
+    }
+
+    #[test]
+    fn every_solver_solves_a_smoke_instance() {
+        let g = crate::graph::gen::grid2d(20, 20, false);
+        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
+        let spec = MapSpec::named("unused");
+        for s in solvers() {
+            let out = s.solve(&ctx, &g, &h, &spec);
+            crate::partition::validate_mapping(&out.mapping, g.n(), h.k())
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name()));
+            assert!(out.comm_cost > 0.0, "{}", s.name());
+            assert!(out.host_ms > 0.0, "{}", s.name());
+            assert_eq!(out.phases.is_some(), out.algorithm.is_device(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn gpu_hm_honors_adaptive_option() {
+        // Just behavioral smoke: both settings produce valid mappings.
+        let g = crate::graph::gen::grid2d(24, 24, false);
+        let h = Hierarchy::parse("4:4:2", "1:10:100").unwrap();
+        let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
+        for v in ["1", "0"] {
+            let spec = MapSpec::named("unused").option("adaptive", v);
+            let out = solver(Algorithm::GpuHm).solve(&ctx, &g, &h, &spec);
+            crate::partition::validate_mapping(&out.mapping, g.n(), h.k()).unwrap();
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! The unified problem specification every front-end lowers into.
+//!
+//! A [`MapSpec`] describes one mapping job — *what* to map ([`GraphSource`]),
+//! *onto what* (hierarchy + distance strings), and *how* (ε, seeds,
+//! algorithm or auto-route, refinement flavor, polish, solver options).
+//! `config::RunConfig` files, the CLI flags and the wire-protocol
+//! `MapRequest` all produce a `MapSpec`; the [`crate::engine::Engine`]
+//! consumes nothing else.
+
+use crate::algo::Algorithm;
+use crate::graph::CsrGraph;
+use crate::topology::Hierarchy;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Where the task graph comes from.
+#[derive(Clone, Debug)]
+pub enum GraphSource {
+    /// Instance registry name (`rgg15`, …) or a path to a METIS file;
+    /// resolved — and cached — by the engine.
+    Named(String),
+    /// An already-built graph owned by the caller (library / harness path;
+    /// bypasses the engine's graph cache).
+    InMemory(Arc<CsrGraph>),
+}
+
+impl PartialEq for GraphSource {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (GraphSource::Named(a), GraphSource::Named(b)) => a == b,
+            (GraphSource::InMemory(a), GraphSource::InMemory(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+/// Refinement flavor: `Strong` upgrades a solver to its quality variant
+/// (gpu-hm → gpu-hm-ultra, jet → jet-ultra, sharedmap-f → sharedmap-s,
+/// intmap-f → intmap-s); solvers without a stronger variant are unchanged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Refinement {
+    #[default]
+    Standard,
+    Strong,
+}
+
+impl Refinement {
+    pub fn name(self) -> &'static str {
+        match self {
+            Refinement::Standard => "standard",
+            Refinement::Strong => "strong",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "standard" | "default" => Ok(Refinement::Standard),
+            "strong" | "ultra" => Ok(Refinement::Strong),
+            other => bail!("unknown refinement `{other}` (standard|strong)"),
+        }
+    }
+
+    fn upgrade(self, algo: Algorithm) -> Algorithm {
+        if self == Refinement::Standard {
+            return algo;
+        }
+        match algo {
+            Algorithm::GpuHm => Algorithm::GpuHmUltra,
+            Algorithm::Jet => Algorithm::JetUltra,
+            Algorithm::SharedMapF => Algorithm::SharedMapS,
+            Algorithm::IntMapF => Algorithm::IntMapS,
+            other => other,
+        }
+    }
+}
+
+/// One mapping job, front-end agnostic. Build with [`MapSpec::named`] /
+/// [`MapSpec::in_memory`] and the chainable setters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MapSpec {
+    pub graph: GraphSource,
+    /// Machine hierarchy `a_1:…:a_ℓ`, e.g. `4:8:6`.
+    pub hierarchy: String,
+    /// Distance vector `d_1:…:d_ℓ`, e.g. `1:10:100`.
+    pub distance: String,
+    /// Imbalance ε.
+    pub eps: f64,
+    /// Seeds. [`crate::engine::Engine::map`] uses the first; `map_all_seeds`
+    /// runs every one.
+    pub seeds: Vec<u64>,
+    /// Pinned algorithm, or `None` for router choice.
+    pub algorithm: Option<Algorithm>,
+    pub refinement: Refinement,
+    /// Run the QAP polish stage (device-offloaded when artifacts exist).
+    pub polish: bool,
+    /// Keep the full mapping vector in the outcome (cleared when false).
+    pub return_mapping: bool,
+    /// Solver-specific knobs, e.g. `adaptive = 0` for the GPU-HM Eq. 2
+    /// ablation. Unknown keys are ignored by solvers.
+    pub options: BTreeMap<String, String>,
+}
+
+impl MapSpec {
+    fn with_graph(graph: GraphSource) -> Self {
+        MapSpec {
+            graph,
+            hierarchy: "4:8:6".into(),
+            distance: "1:10:100".into(),
+            eps: 0.03,
+            seeds: vec![1],
+            algorithm: None,
+            refinement: Refinement::Standard,
+            polish: false,
+            return_mapping: true,
+            options: BTreeMap::new(),
+        }
+    }
+
+    /// Spec for a registry instance name or METIS file path.
+    pub fn named(name: impl Into<String>) -> Self {
+        Self::with_graph(GraphSource::Named(name.into()))
+    }
+
+    /// Spec for a caller-owned graph.
+    pub fn in_memory(g: Arc<CsrGraph>) -> Self {
+        Self::with_graph(GraphSource::InMemory(g))
+    }
+
+    pub fn hierarchy(mut self, hier: impl Into<String>) -> Self {
+        self.hierarchy = hier.into();
+        self
+    }
+
+    pub fn distance(mut self, dist: impl Into<String>) -> Self {
+        self.distance = dist.into();
+        self
+    }
+
+    /// Set hierarchy + distance from a parsed [`Hierarchy`].
+    pub fn topology(mut self, h: &Hierarchy) -> Self {
+        self.hierarchy = h.a.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(":");
+        self.distance = h.d.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(":");
+        self
+    }
+
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    /// Single-seed shorthand.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seeds = vec![seed];
+        self
+    }
+
+    pub fn seeds(mut self, seeds: Vec<u64>) -> Self {
+        assert!(!seeds.is_empty(), "MapSpec needs at least one seed");
+        self.seeds = seeds;
+        self
+    }
+
+    /// Pin an algorithm (`None` restores auto-routing).
+    pub fn algo(mut self, algorithm: Option<Algorithm>) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    pub fn refinement(mut self, refinement: Refinement) -> Self {
+        self.refinement = refinement;
+        self
+    }
+
+    pub fn polish(mut self, polish: bool) -> Self {
+        self.polish = polish;
+        self
+    }
+
+    pub fn return_mapping(mut self, yes: bool) -> Self {
+        self.return_mapping = yes;
+        self
+    }
+
+    /// Set one solver option (`adaptive = 0`, …).
+    pub fn option(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.options.insert(key.into(), value.into());
+        self
+    }
+
+    pub fn options(mut self, options: BTreeMap<String, String>) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// The seed [`crate::engine::Engine::map`] solves with.
+    pub fn primary_seed(&self) -> u64 {
+        self.seeds.first().copied().unwrap_or(1)
+    }
+
+    /// Clone with a single seed (the engine's per-seed fan-out).
+    pub fn with_seed(&self, seed: u64) -> Self {
+        let mut s = self.clone();
+        s.seeds = vec![seed];
+        s
+    }
+
+    /// Parse and validate the machine description.
+    pub fn parse_hierarchy(&self) -> Result<Hierarchy> {
+        Hierarchy::parse(&self.hierarchy, &self.distance)
+    }
+
+    /// The concrete solver for a graph of `n` vertices: pinned algorithm or
+    /// router choice, upgraded by the refinement flavor.
+    pub fn resolve_algorithm(&self, n: usize) -> Algorithm {
+        self.refinement.upgrade(super::route(n, self.algorithm))
+    }
+
+    /// Boolean option lookup (`1`/`true` → true, `0`/`false` → false).
+    pub fn opt_bool(&self, key: &str) -> Option<bool> {
+        match self.options.get(key).map(|s| s.as_str()) {
+            Some("1") | Some("true") => Some(true),
+            Some("0") | Some("false") => Some(false),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let spec = MapSpec::named("rgg15")
+            .hierarchy("4:8:2")
+            .distance("1:10:100")
+            .eps(0.05)
+            .seed(7)
+            .algo(Some(Algorithm::GpuIm))
+            .polish(true)
+            .option("adaptive", "0");
+        assert_eq!(spec.graph, GraphSource::Named("rgg15".into()));
+        assert_eq!(spec.primary_seed(), 7);
+        assert_eq!(spec.parse_hierarchy().unwrap().k(), 64);
+        assert_eq!(spec.opt_bool("adaptive"), Some(false));
+        assert!(spec.polish);
+    }
+
+    #[test]
+    fn topology_setter_roundtrips() {
+        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let spec = MapSpec::named("x").topology(&h);
+        assert_eq!(spec.hierarchy, "4:8:2");
+        assert_eq!(spec.distance, "1:10:100");
+        assert_eq!(spec.parse_hierarchy().unwrap(), h);
+    }
+
+    #[test]
+    fn refinement_upgrades_flavors() {
+        let spec = MapSpec::named("x").algo(Some(Algorithm::GpuHm)).refinement(Refinement::Strong);
+        assert_eq!(spec.resolve_algorithm(1000), Algorithm::GpuHmUltra);
+        let spec = spec.algo(Some(Algorithm::GpuIm));
+        assert_eq!(spec.resolve_algorithm(1000), Algorithm::GpuIm);
+        assert_eq!(Refinement::from_name("strong").unwrap(), Refinement::Strong);
+        assert!(Refinement::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn auto_route_by_size() {
+        let spec = MapSpec::named("x");
+        assert_eq!(spec.resolve_algorithm(10_000), Algorithm::GpuHmUltra);
+        assert_eq!(spec.resolve_algorithm(1_000_000), Algorithm::GpuIm);
+    }
+}

@@ -5,10 +5,11 @@
 pub mod profiles;
 pub mod stats;
 
-use crate::algo::{run_algorithm, Algorithm};
+use crate::algo::Algorithm;
+use crate::engine::{Engine, MapSpec};
 use crate::graph::gen::InstanceSpec;
-use crate::par::Pool;
 use crate::topology::Hierarchy;
+use std::sync::Arc;
 
 /// One (algorithm, instance, hierarchy) averaged over seeds.
 #[derive(Clone, Debug)]
@@ -49,25 +50,33 @@ impl ExpRecord {
 }
 
 /// Run the full experiment matrix: `algorithms × instances × hierarchies`,
-/// averaging over `seeds`. Progress is printed to stderr.
+/// averaging over `seeds`. Each instance is generated once and fed to the
+/// engine in memory; every cell goes through [`Engine::map`], so matrix
+/// numbers are produced by exactly the code path the CLI and the service
+/// use. Progress is printed to stderr.
 pub fn run_matrix(
+    engine: &Engine,
     algorithms: &[Algorithm],
     instances: &[InstanceSpec],
     hierarchies: &[Hierarchy],
     seeds: &[u64],
     eps: f64,
-    pool: &Pool,
 ) -> Vec<ExpRecord> {
     let mut out = Vec::new();
     for spec in instances {
-        let g = spec.generate();
+        let g = Arc::new(spec.generate());
         for h in hierarchies {
             for &algo in algorithms {
+                let base = MapSpec::in_memory(g.clone())
+                    .topology(h)
+                    .eps(eps)
+                    .algo(Some(algo))
+                    .return_mapping(false)
+                    .seeds(seeds.to_vec());
                 let mut cost = 0.0;
                 let mut host = 0.0;
                 let mut device = 0.0;
-                for &seed in seeds {
-                    let r = run_algorithm(algo, pool, &g, h, eps, seed);
+                for r in engine.map_all_seeds(&base).expect("in-memory matrix cell") {
                     cost += r.comm_cost;
                     host += r.host_ms;
                     device += r.device_ms;
@@ -139,10 +148,10 @@ mod tests {
 
     #[test]
     fn matrix_runs_and_emits_csv() {
-        let pool = Pool::new(1);
+        let engine = Engine::new(crate::engine::EngineConfig { threads: 1, ..Default::default() });
         let specs: Vec<_> = smoke_suite().into_iter().take(1).collect();
         let hs = vec![Hierarchy::parse("2:2", "1:10").unwrap()];
-        let recs = run_matrix(&[Algorithm::GpuIm, Algorithm::SharedMapF], &specs, &hs, &[1], 0.03, &pool);
+        let recs = run_matrix(&engine, &[Algorithm::GpuIm, Algorithm::SharedMapF], &specs, &hs, &[1], 0.03);
         assert_eq!(recs.len(), 2);
         for r in &recs {
             assert!(r.comm_cost > 0.0);

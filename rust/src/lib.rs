@@ -1,7 +1,31 @@
 //! # HeiPa-RS — GPU-Accelerated Process Mapping, reproduced in Rust + JAX + Pallas
 //!
 //! Reproduction of *GPU-Accelerated Algorithms for Process Mapping*
-//! (Samoldekin, Schulz, Woydt; CS.DC 2025). The crate provides
+//! (Samoldekin, Schulz, Woydt; CS.DC 2025).
+//!
+//! ## The front door: [`engine`]
+//!
+//! Every way of running a mapping — library call, `heipa` CLI, the TCP
+//! coordinator, the benchmark harness — is one [`engine::MapSpec`] handed
+//! to one [`engine::Engine`]:
+//!
+//! ```no_run
+//! use heipa::engine::{Engine, MapSpec};
+//!
+//! let engine = Engine::with_defaults();
+//! let spec = MapSpec::named("rgg15").hierarchy("4:8:2").distance("1:10:100").polish(true);
+//! let outcome = engine.map(&spec)?;
+//! println!("J = {:.0}, imbalance = {:.4}", outcome.comm_cost, outcome.imbalance);
+//! # anyhow::Ok(())
+//! ```
+//!
+//! The engine owns the worker pool, the PJRT runtime and a bounded graph
+//! cache once; solvers are looked up in a name-indexed registry
+//! ([`engine::solver_by_name`]), and every run returns the same
+//! [`engine::MapOutcome`] (mapping, `J`, imbalance, host/device time,
+//! phase breakdown, polish improvement).
+//!
+//! ## What's underneath
 //!
 //! * the **hierarchical process mapping problem (HPMP)** model: task graphs,
 //!   machine hierarchies `H = a_1 : … : a_ℓ` with distances
@@ -16,17 +40,19 @@
 //! * a bulk-synchronous data-parallel execution substrate ([`par`]) standing
 //!   in for Kokkos/CUDA, with a calibrated GPU cost model;
 //! * a PJRT runtime ([`runtime`]) that executes AOT-compiled JAX/Pallas
-//!   kernels (dense gain tables, J evaluation) from the Rust hot path;
-//! * a mapping-as-a-service coordinator ([`coordinator`]) and the
+//!   kernels (QAP swap scoring, J evaluation) from the Rust hot path;
+//! * a mapping-as-a-service coordinator ([`coordinator`]) — the engine
+//!   behind a job queue and a line-oriented TCP protocol — and the
 //!   benchmark harness ([`harness`]) regenerating every paper table/figure.
 //!
 //! See `DESIGN.md` for the hardware-substitution notes and the experiment
-//! index, and `examples/quickstart.rs` for a five-line end-to-end usage.
+//! index, and `examples/quickstart.rs` for the five-line end-to-end usage.
 
 pub mod algo;
 pub mod coarsen;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod harness;
 pub mod initial;

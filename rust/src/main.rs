@@ -3,22 +3,27 @@
 //! Subcommands:
 //!
 //! * `gen`     — generate benchmark instances (Table 1 suite) to METIS files
-//! * `map`     — map one instance onto a hierarchy with any algorithm
+//! * `map`     — map one instance onto a hierarchy with any solver
 //! * `eval`    — evaluate J(C, D, Π) of an existing partition file
 //! * `phases`  — GPU-IM phase breakdown for one instance (Table 2 row)
 //! * `suite`   — run an experiment matrix and write CSV
 //! * `serve`   — start the mapping-as-a-service coordinator (TCP)
 //!
-//! Flags are `--key value`; run `heipa help` for details. (The offline
-//! crate set has no clap; parsing is hand-rolled in [`args`].)
+//! Every mapping subcommand builds an [`heipa::engine::MapSpec`] — from a
+//! `--config FILE` (`key = value`, see [`heipa::config::RunConfig`]) when
+//! given, with CLI flags overriding file keys — and hands it to one
+//! [`heipa::engine::Engine`]. Flags are `--key value`; boolean flags
+//! (`--polish`, `--stats`) may omit the value. Run `heipa help` for
+//! details. (The offline crate set has no clap; parsing is hand-rolled in
+//! [`Args`].)
 
 use anyhow::{bail, Context, Result};
-use heipa::algo::{run_algorithm, Algorithm};
-use heipa::coordinator::service::Service;
+use heipa::algo::Algorithm;
+use heipa::config::RunConfig;
+use heipa::coordinator::service::{Service, ServiceConfig};
+use heipa::engine::{solver_names, Engine, EngineConfig, MapOutcome, MapSpec, Refinement};
 use heipa::graph::{gen, io};
 use heipa::harness;
-use heipa::metrics::Phase;
-use heipa::par::Pool;
 use heipa::topology::Hierarchy;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -30,7 +35,10 @@ fn main() {
     }
 }
 
-/// Minimal `--key value` argument parser.
+/// Flags that may appear without a value (`--polish` ≡ `--polish 1`).
+const BOOL_FLAGS: &[&str] = &["stats", "polish"];
+
+/// Minimal `--key value` argument parser with valueless boolean flags.
 struct Args {
     flags: BTreeMap<String, String>,
 }
@@ -38,13 +46,22 @@ struct Args {
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
         let mut flags = BTreeMap::new();
-        let mut it = argv.iter();
+        let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
                 bail!("unexpected positional argument `{a}`");
             };
-            let val = it.next().with_context(|| format!("--{key} needs a value"))?;
-            flags.insert(key.to_string(), val.clone());
+            let val = if BOOL_FLAGS.contains(&key) {
+                // Consume an explicit 0/1/true/false if present, otherwise
+                // the bare flag means true — never swallow the next flag.
+                match it.peek().map(|s| s.as_str()) {
+                    Some("0") | Some("1") | Some("true") | Some("false") => it.next().unwrap().clone(),
+                    _ => "1".to_string(),
+                }
+            } else {
+                it.next().with_context(|| format!("--{key} needs a value"))?.clone()
+            };
+            flags.insert(key.to_string(), val);
         }
         Ok(Args { flags })
     }
@@ -57,21 +74,95 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("1") | Some("true"))
+    }
+
     fn required(&self, key: &str) -> Result<&str> {
         self.get(key).with_context(|| format!("missing required flag --{key}"))
     }
 }
 
-fn load_graph(name_or_path: &str) -> Result<heipa::graph::CsrGraph> {
-    if gen::instance_by_name(name_or_path).is_some() {
-        Ok(gen::generate_by_name(name_or_path))
-    } else {
-        io::read_metis(Path::new(name_or_path))
-    }
-}
-
 fn hierarchy_of(args: &Args) -> Result<Hierarchy> {
     Hierarchy::parse(&args.get_or("hier", "4:8:6"), &args.get_or("dist", "1:10:100"))
+}
+
+/// The layered spec construction every mapping subcommand shares:
+/// `RunConfig` defaults → `--config FILE` keys → CLI flag overrides.
+/// Returns the spec plus the engine parameters the config carries.
+fn spec_from_args(args: &Args) -> Result<(MapSpec, EngineConfig)> {
+    let from_file = args.get("config").is_some();
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if !from_file {
+        // The multi-seed default is a config-file/paper convention; the
+        // bare CLI maps one seed like it always did.
+        cfg.seeds = vec![1];
+    }
+    let graph = args
+        .get("graph")
+        .map(str::to_string)
+        .or_else(|| cfg.graph.clone())
+        .context("missing --graph (flag or `graph =` config key)")?;
+    let mut spec = cfg.to_spec(&graph);
+    if let Some(v) = args.get("hier") {
+        spec.hierarchy = v.to_string();
+    }
+    if let Some(v) = args.get("dist") {
+        spec.distance = v.to_string();
+    }
+    if let Some(v) = args.get("eps") {
+        spec.eps = v.parse().context("--eps")?;
+    }
+    if let Some(v) = args.get("seed") {
+        spec.seeds = parse_seeds(v)?;
+    }
+    if let Some(v) = args.get("algo") {
+        spec.algorithm = parse_algo(v)?;
+    }
+    if let Some(v) = args.get("refine") {
+        spec.refinement = Refinement::from_name(v)?;
+    }
+    if args.get("polish").is_some() {
+        spec.polish = args.get_bool("polish");
+    }
+    if let Some(list) = args.get("opts") {
+        for kv in list.split(',').filter(|s| !s.trim().is_empty()) {
+            let (k, v) = kv.split_once('=').with_context(|| format!("--opts entry `{kv}` (want k=v)"))?;
+            spec.options.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    let mut ecfg = cfg.engine_config();
+    if let Some(v) = args.get("threads") {
+        ecfg.threads = v.parse().context("--threads")?;
+    }
+    if let Some(v) = args.get("artifacts") {
+        ecfg.artifacts_dir = v.to_string();
+    }
+    Ok((spec, ecfg))
+}
+
+fn parse_seeds(v: &str) -> Result<Vec<u64>> {
+    let seeds: Vec<u64> = v
+        .split(',')
+        .map(|s| s.trim().parse::<u64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+    if seeds.is_empty() {
+        bail!("--seed needs at least one seed");
+    }
+    Ok(seeds)
+}
+
+/// `auto` unpins; anything else must be a registry solver name.
+fn parse_algo(v: &str) -> Result<Option<Algorithm>> {
+    if v == "auto" {
+        return Ok(None);
+    }
+    heipa::engine::solver_by_name(v)
+        .map(|s| Some(s.algorithm()))
+        .with_context(|| format!("unknown --algo `{v}` (try `heipa help`)"))
 }
 
 fn run() -> Result<()> {
@@ -100,17 +191,21 @@ fn print_help() {
          \n\
          USAGE: heipa <subcommand> [--key value …]\n\
          \n\
-         gen    --suite paper|smoke [--out-dir DIR] [--stats 1]\n\
-         map    --graph NAME|FILE [--algo gpu-im] [--hier 4:8:6] [--dist 1:10:100]\n\
-                [--eps 0.03] [--seed 1] [--out part.txt]\n\
+         gen    --suite paper|smoke [--out-dir DIR] [--stats]\n\
+         map    --graph NAME|FILE [--config FILE] [--algo gpu-im|auto] [--hier 4:8:6]\n\
+                [--dist 1:10:100] [--eps 0.03] [--seed 1,2,…] [--refine standard|strong]\n\
+                [--polish] [--opts k=v,…] [--artifacts DIR] [--threads N] [--out part.txt]\n\
          eval   --graph NAME|FILE --part FILE [--hier …] [--dist …]\n\
          phases --graph NAME|FILE [--hier …] [--dist …] [--seed 1]\n\
-         suite  --algos a,b,… [--instances x,y|smoke|paper] [--seeds 1,2]\n\
+         suite  --algos a,b,… [--config FILE] [--instances x,y|smoke|paper] [--seeds 1,2]\n\
                 [--out results.csv] [--eps 0.03]\n\
-         serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0]\n\
+         serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0] [--cache-cap 64]\n\
          \n\
-         Algorithms: {}",
-        Algorithm::all().map(|a| a.name()).join(", ")
+         `--config FILE` reads `key = value` defaults (see config::RunConfig);\n\
+         explicit flags always win. Boolean flags (--polish, --stats) take no value.\n\
+         \n\
+         Solvers: {}",
+        solver_names().join(", ")
     );
 }
 
@@ -121,7 +216,7 @@ fn cmd_gen(args: &Args) -> Result<()> {
         other => bail!("unknown suite `{other}`"),
     };
     let out_dir = args.get("out-dir").map(PathBuf::from);
-    let stats = args.get("stats").is_some();
+    let stats = args.get_bool("stats");
     if let Some(dir) = &out_dir {
         std::fs::create_dir_all(dir)?;
     }
@@ -147,36 +242,50 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_map(args: &Args) -> Result<()> {
-    let g = load_graph(args.required("graph")?)?;
-    let h = hierarchy_of(args)?;
-    let algo = Algorithm::from_name(&args.get_or("algo", "gpu-im"))
-        .context("unknown --algo (try `heipa help`)")?;
-    let eps: f64 = args.get_or("eps", "0.03").parse()?;
-    let seed: u64 = args.get_or("seed", "1").parse()?;
-    let pool = Pool::default();
-    let r = run_algorithm(algo, &pool, &g, &h, eps, seed);
+fn print_outcome(graph: &str, r: &MapOutcome) {
     println!(
-        "instance={} n={} m={} k={} algo={} J={:.3} imbalance={:.5} host_ms={:.2} device_ms={:.3}",
-        args.required("graph")?,
-        g.n(),
-        g.m(),
-        h.k(),
-        algo.name(),
+        "instance={} n={} k={} algo={} seed={} J={:.3} imbalance={:.5} host_ms={:.2} device_ms={:.3} polish_dj={:.3}",
+        graph,
+        r.n,
+        r.k,
+        r.algorithm.name(),
+        r.seed,
         r.comm_cost,
         r.imbalance,
         r.host_ms,
         r.device_ms,
+        r.polish_improvement,
     );
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let (spec, ecfg) = spec_from_args(args)?;
+    let graph_label = match &spec.graph {
+        heipa::engine::GraphSource::Named(n) => n.clone(),
+        heipa::engine::GraphSource::InMemory(_) => "<in-memory>".into(),
+    };
+    let engine = Engine::new(ecfg);
+    let outcomes = engine.map_all_seeds(&spec)?;
+    for r in &outcomes {
+        print_outcome(&graph_label, r);
+    }
+    let best = outcomes
+        .iter()
+        .min_by(|a, b| a.comm_cost.total_cmp(&b.comm_cost))
+        .context("no seeds ran")?;
+    if outcomes.len() > 1 {
+        println!("best: seed={} J={:.3}", best.seed, best.comm_cost);
+    }
     if let Some(out) = args.get("out") {
-        io::write_partition(&r.mapping, Path::new(out))?;
+        io::write_partition(&best.mapping, Path::new(out))?;
         println!("wrote mapping to {out}");
     }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let g = load_graph(args.required("graph")?)?;
+    let engine = Engine::with_defaults();
+    let g = engine.resolve_graph(&heipa::engine::GraphSource::Named(args.required("graph")?.to_string()))?;
     let part = io::read_partition(Path::new(args.required("part")?))?;
     let h = hierarchy_of(args)?;
     heipa::partition::validate_mapping(&part, g.n(), h.k()).map_err(anyhow::Error::msg)?;
@@ -190,28 +299,38 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_phases(args: &Args) -> Result<()> {
-    let g = load_graph(args.required("graph")?)?;
-    let h = hierarchy_of(args)?;
-    let seed: u64 = args.get_or("seed", "1").parse()?;
-    let pool = Pool::default();
-    let r = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, 0.03, seed);
+    let graph = args.required("graph")?.to_string();
+    let spec = MapSpec::named(graph)
+        .hierarchy(args.get_or("hier", "4:8:6"))
+        .distance(args.get_or("dist", "1:10:100"))
+        .seed(args.get_or("seed", "1").parse()?)
+        .algo(Some(Algorithm::GpuIm));
+    let engine = Engine::with_defaults();
+    let r = engine.map(&spec)?;
     let phases = r.phases.expect("gpu-im reports phases");
-    println!("GPU-IM phase breakdown — n={} m={} k={} (modeled device time)", g.n(), g.m(), h.k());
+    println!("GPU-IM phase breakdown — n={} k={} (modeled device time)", r.n, r.k);
     println!("| phase | share | ms |");
     println!("|---|---|---|");
     for (label, share, ms) in phases.rows() {
         println!("| {label} | {share:.2}% | {ms:.3} |");
     }
     println!("| Total | 100% | {:.3} |", phases.total_device_ms());
-    let _ = Phase::all();
     Ok(())
 }
 
 fn cmd_suite(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
     let algos: Vec<Algorithm> = args
         .get_or("algos", "gpu-hm-ultra,gpu-im,sharedmap-f,intmap-f")
         .split(',')
-        .map(|s| Algorithm::from_name(s.trim()).with_context(|| format!("unknown algorithm {s}")))
+        .map(|s| {
+            heipa::engine::solver_by_name(s.trim())
+                .map(|sv| sv.algorithm())
+                .with_context(|| format!("unknown algorithm {s}"))
+        })
         .collect::<Result<_>>()?;
     let instances = match args.get_or("instances", "smoke").as_str() {
         "paper" => gen::paper_suite(),
@@ -225,15 +344,35 @@ fn cmd_suite(args: &Args) -> Result<()> {
                 .collect::<Result<Vec<_>>>()?
         }
     };
-    let seeds: Vec<u64> = args
-        .get_or("seeds", "1")
-        .split(',')
-        .map(|s| s.trim().parse::<u64>().map_err(Into::into))
-        .collect::<Result<_>>()?;
-    let eps: f64 = args.get_or("eps", "0.03").parse()?;
-    let hierarchies = harness::hierarchies_from_env();
-    let pool = Pool::default();
-    let records = harness::run_matrix(&algos, &instances, &hierarchies, &seeds, eps, &pool);
+    let seeds: Vec<u64> = match args.get("seeds") {
+        Some(v) => parse_seeds(v)?,
+        None if args.get("config").is_some() => cfg.seeds.clone(),
+        None => vec![1],
+    };
+    let eps: f64 = match args.get("eps") {
+        Some(v) => v.parse().context("--eps")?,
+        None => cfg.eps,
+    };
+    // Topology: a config file pins one hierarchy; HEIPA_TOPS (or no
+    // config) sweeps the paper family.
+    let hierarchies = if args.get("config").is_some() && std::env::var("HEIPA_TOPS").is_err() {
+        vec![cfg.parse_hierarchy()?]
+    } else {
+        harness::hierarchies_from_env()
+    };
+    // The matrix pins algorithms and never polishes; refuse to silently
+    // drop config keys the suite cannot honor.
+    if cfg.polish || cfg.refinement != Refinement::Standard || !cfg.options.is_empty() {
+        eprintln!(
+            "warning: `suite` ignores the config keys polish/refinement/opt.* (the matrix pins solver flavors explicitly)"
+        );
+    }
+    let mut ecfg = cfg.engine_config();
+    if let Some(v) = args.get("threads") {
+        ecfg.threads = v.parse().context("--threads")?;
+    }
+    let engine = Engine::new(ecfg);
+    let records = harness::run_matrix(&engine, &algos, &instances, &hierarchies, &seeds, eps);
     let out = args.get_or("out", "results.csv");
     harness::write_csv(&records, Path::new(&out))?;
     println!("wrote {} records to {out}", records.len());
@@ -242,8 +381,10 @@ fn cmd_suite(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7171");
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let threads: usize = args.get_or("threads", "0").parse()?;
-    let svc = std::sync::Arc::new(Service::start(artifacts, threads));
+    let svc = std::sync::Arc::new(Service::with_config(ServiceConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts"),
+        threads: args.get_or("threads", "0").parse()?,
+        graph_cache_cap: args.get_or("cache-cap", "64").parse().context("--cache-cap")?,
+    }));
     heipa::coordinator::protocol::serve_tcp(svc, &addr)
 }

@@ -117,23 +117,6 @@ impl PhaseBreakdown {
     }
 }
 
-/// Result of a full mapping run.
-#[derive(Clone, Debug)]
-pub struct MappingResult {
-    /// Vertex → PE assignment.
-    pub mapping: Vec<crate::Block>,
-    /// Communication cost `J(C, D, Π)`.
-    pub comm_cost: f64,
-    /// Achieved imbalance.
-    pub imbalance: f64,
-    /// Host wall time (ms).
-    pub host_ms: f64,
-    /// Modeled device time (ms); equals `host_ms` for CPU-only solvers.
-    pub device_ms: f64,
-    /// Per-phase breakdown (device algorithms only).
-    pub phases: Option<PhaseBreakdown>,
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

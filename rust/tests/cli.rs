@@ -87,6 +87,73 @@ fn gen_writes_metis_files() {
 }
 
 #[test]
+fn valueless_boolean_flags_do_not_swallow_the_next_flag() {
+    // `--polish` directly before another flag must parse as `polish=1`,
+    // not consume `--out` as its value.
+    let dir = tmpdir();
+    let part = dir.join("polished.txt");
+    let out = heipa()
+        .args([
+            "map", "--graph", "sten_cont300", "--algo", "jet", "--hier", "2:2:2",
+            "--dist", "1:10:100", "--polish", "--out", part.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("polish_dj="), "no polish field: {text}");
+    assert!(part.exists(), "--out not honored after a bare --polish");
+    // Explicit values still work.
+    let out = heipa()
+        .args(["map", "--graph", "sten_cont300", "--algo", "jet", "--hier", "2:2", "--dist", "1:10", "--polish", "1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn config_file_reaches_the_engine_and_flags_override_it() {
+    let dir = tmpdir();
+    let cfg = dir.join("run.conf");
+    std::fs::write(
+        &cfg,
+        "graph = sten_cop20k\nhierarchy = 2:2:2\ndistance = 1:10:100\n\
+         algorithm = sharedmap-f\neps = 0.05\nseeds = 3\n",
+    )
+    .unwrap();
+    // Config alone supplies graph, algorithm, hierarchy and seed.
+    let out = heipa().args(["map", "--config", cfg.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("algo=sharedmap-f"), "config algorithm ignored: {text}");
+    assert!(text.contains("seed=3"), "config seed ignored: {text}");
+    assert!(text.contains("k=8"), "config hierarchy ignored: {text}");
+    // A CLI flag beats the file key.
+    let out = heipa()
+        .args(["map", "--config", cfg.to_str().unwrap(), "--algo", "gpu-im", "--seed", "4"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("algo=gpu-im"), "--algo did not override config: {text}");
+    assert!(text.contains("seed=4"), "--seed did not override config: {text}");
+}
+
+#[test]
+fn map_supports_auto_routing_and_multi_seed() {
+    let out = heipa()
+        .args(["map", "--graph", "wal_598a", "--algo", "auto", "--hier", "2:2", "--dist", "1:10", "--seed", "1,2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // Small instance routes to the quality flavor; both seeds print.
+    assert!(text.contains("algo=gpu-hm-ultra"), "router did not engage: {text}");
+    assert!(text.contains("seed=1") && text.contains("seed=2"), "missing per-seed lines: {text}");
+    assert!(text.contains("best: seed="), "missing best line: {text}");
+}
+
+#[test]
 fn phases_prints_table2_rows() {
     let out = heipa().args(["phases", "--graph", "wal_598a", "--hier", "2:4", "--dist", "1:10"]).output().unwrap();
     assert!(out.status.success());

@@ -1,0 +1,122 @@
+//! Engine-level integration tests: the one-spec/one-context contract.
+//!
+//! * spec round-trips: kv config file → `MapSpec` → wire `MapRequest` →
+//!   `MapSpec` without loss;
+//! * polish parity: the library engine and the service produce the same
+//!   polished `comm_cost` for the same spec (the CLI drives the very same
+//!   `Engine::map`, covered by `tests/cli.rs`);
+//! * registry: every solver name resolves and solves a smoke instance
+//!   through the engine.
+
+use heipa::algo::Algorithm;
+use heipa::config::RunConfig;
+use heipa::coordinator::service::Service;
+use heipa::coordinator::MapRequest;
+use heipa::engine::{solver_by_name, solver_names, Engine, EngineConfig, MapSpec, Refinement};
+use heipa::partition::validate_mapping;
+
+fn engine() -> Engine {
+    Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() })
+}
+
+#[test]
+fn kv_file_to_spec_to_wire_roundtrip() {
+    let text = "graph = rgg15\nhierarchy = 4:8:2\ndistance = 1:10:100\neps = 0.05\n\
+                algorithm = gpu-hm\nrefinement = strong\npolish = 1\nseeds = 9\nopt.adaptive = 0\n";
+    let cfg = RunConfig::from_kv_text(text).unwrap();
+    let spec = cfg.to_spec(cfg.graph.as_deref().unwrap());
+
+    // Spec carries everything the file said.
+    assert_eq!(spec.eps, 0.05);
+    assert_eq!(spec.algorithm, Some(Algorithm::GpuHm));
+    assert_eq!(spec.refinement, Refinement::Strong);
+    assert!(spec.polish);
+    assert_eq!(spec.primary_seed(), 9);
+    assert_eq!(spec.opt_bool("adaptive"), Some(false));
+
+    // Lower onto the wire and back: nothing is lost.
+    let req = MapRequest::from_spec(&spec).unwrap();
+    assert_eq!(req.instance, "rgg15");
+    let spec2 = req.to_spec();
+    assert_eq!(spec2, spec);
+
+    // And the wire protocol parses to the same request.
+    let line = "map instance=rgg15 algorithm=gpu-hm hierarchy=4:8:2 distance=1:10:100 \
+                eps=0.05 seed=9 refinement=strong polish=1 mapping=1 opt.adaptive=0";
+    let heipa::coordinator::protocol::Command::Map(parsed) =
+        heipa::coordinator::protocol::parse_command(line).unwrap()
+    else {
+        panic!("expected map command");
+    };
+    assert_eq!(parsed, req);
+}
+
+#[test]
+fn library_and_service_polish_paths_agree() {
+    // `heipa map --polish`, the library API and the TCP service all call
+    // Engine::map on the same spec; assert the two in-process front-ends
+    // produce the identical polished cost.
+    let spec = MapSpec::named("sten_cont300")
+        .hierarchy("2:2:2")
+        .distance("1:10:100")
+        .algo(Some(Algorithm::Jet))
+        .seed(1)
+        .polish(true)
+        .return_mapping(true);
+
+    let lib = engine().map(&spec).unwrap();
+
+    let svc = Service::start("artifacts".into(), 1);
+    let wire = svc.submit(MapRequest::from_spec(&spec).unwrap()).unwrap();
+
+    assert_eq!(lib.algorithm, wire.outcome.algorithm);
+    assert!(
+        (lib.comm_cost - wire.outcome.comm_cost).abs() < 1e-9 * lib.comm_cost.max(1.0),
+        "library J {} != service J {}",
+        lib.comm_cost,
+        wire.outcome.comm_cost
+    );
+    assert!(
+        (lib.polish_improvement - wire.outcome.polish_improvement).abs() < 1e-9,
+        "polish ΔJ diverged: {} vs {}",
+        lib.polish_improvement,
+        wire.outcome.polish_improvement
+    );
+    assert_eq!(lib.mapping, wire.outcome.mapping);
+}
+
+#[test]
+fn every_registered_solver_name_solves_through_the_engine() {
+    let e = engine();
+    assert_eq!(solver_names().len(), Algorithm::all().len());
+    for name in solver_names() {
+        let algo = solver_by_name(name).expect("name resolves").algorithm();
+        let spec = MapSpec::named("sten_cop20k")
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(algo));
+        let out = e.map(&spec).unwrap_or_else(|err| panic!("{name}: {err}"));
+        assert_eq!(out.algorithm.name(), name);
+        validate_mapping(&out.mapping, out.n, out.k).unwrap_or_else(|err| panic!("{name}: {err}"));
+        assert!(out.comm_cost > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn auto_routing_picks_by_size_and_refinement_upgrades() {
+    let e = engine();
+    // Small instance → quality flavor.
+    let small = e.map(&MapSpec::named("wal_598a").hierarchy("2:2").distance("1:10")).unwrap();
+    assert_eq!(small.algorithm, Algorithm::GpuHmUltra);
+    // Strong refinement upgrades a pinned fast flavor.
+    let strong = e
+        .map(
+            &MapSpec::named("wal_598a")
+                .hierarchy("2:2")
+                .distance("1:10")
+                .algo(Some(Algorithm::SharedMapF))
+                .refinement(Refinement::Strong),
+        )
+        .unwrap();
+    assert_eq!(strong.algorithm, Algorithm::SharedMapS);
+}

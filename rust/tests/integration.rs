@@ -1,28 +1,40 @@
 //! Integration tests: whole-pipeline invariants across modules, the
 //! paper's qualitative claims on real (scaled) instances, and
-//! property-style sweeps over seeds/hierarchies.
+//! property-style sweeps over seeds/hierarchies — all driven through the
+//! engine front door.
 
-use heipa::algo::{run_algorithm, Algorithm};
-use heipa::graph::gen;
-use heipa::par::Pool;
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, EngineConfig, MapOutcome, MapSpec};
+use heipa::graph::{gen, CsrGraph};
 use heipa::partition::{comm_cost, edge_cut, is_balanced, l_max, validate_mapping};
 use heipa::rng::Rng;
 use heipa::topology::Hierarchy;
+use std::sync::Arc;
 
 const EPS: f64 = 0.03;
 
+fn engine() -> Engine {
+    Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() })
+}
+
+/// One engine run with a pinned algorithm on an in-memory graph.
+fn solve(e: &Engine, g: &Arc<CsrGraph>, algo: Algorithm, h: &Hierarchy, eps: f64, seed: u64) -> MapOutcome {
+    e.map(&MapSpec::in_memory(g.clone()).topology(h).algo(Some(algo)).eps(eps).seed(seed))
+        .expect("engine map")
+}
+
 /// Feasibility: `max block weight <= L_max` (the paper's constraint; the
 /// ratio-based `imbalance()` can exceed ε by ceiling effects).
-fn feasible(g: &heipa::graph::CsrGraph, m: &[u32], k: usize) -> bool {
+fn feasible(g: &CsrGraph, m: &[u32], k: usize) -> bool {
     heipa::partition::max_block_weight(g, m, k) <= l_max(g.total_vweight(), k, EPS)
 }
 
 #[test]
 fn every_algorithm_is_feasible_on_every_smoke_instance() {
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
     for spec in gen::smoke_suite() {
-        let g = spec.generate();
+        let g = Arc::new(spec.generate());
         for algo in [
             Algorithm::GpuHm,
             Algorithm::GpuIm,
@@ -30,9 +42,9 @@ fn every_algorithm_is_feasible_on_every_smoke_instance() {
             Algorithm::IntMapF,
             Algorithm::Jet,
         ] {
-            let r = run_algorithm(algo, &pool, &g, &h, EPS, 1);
+            let r = solve(&e, &g, algo, &h, EPS, 1);
             validate_mapping(&r.mapping, g.n(), h.k())
-                .unwrap_or_else(|e| panic!("{} on {}: {e}", algo.name(), spec.name));
+                .unwrap_or_else(|err| panic!("{} on {}: {err}", algo.name(), spec.name));
             assert!(
                 feasible(&g, &r.mapping, h.k()),
                 "{} on {}: infeasible (imb {:.4})",
@@ -48,16 +60,16 @@ fn every_algorithm_is_feasible_on_every_smoke_instance() {
 fn paper_quality_ordering_on_mesh_family() {
     // The paper's headline quality shape: SharedMap-S best; GPU-HM-ultra
     // competitive (~+12%); Jet (edge-cut) clearly unfit (~+90%).
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
     let mut j_sms = 0.0;
     let mut j_ultra = 0.0;
     let mut j_jet = 0.0;
     for name in ["sten_cop20k", "del15", "wal_598a"] {
-        let g = gen::generate_by_name(name);
-        j_sms += run_algorithm(Algorithm::SharedMapS, &pool, &g, &h, EPS, 1).comm_cost;
-        j_ultra += run_algorithm(Algorithm::GpuHmUltra, &pool, &g, &h, EPS, 1).comm_cost;
-        j_jet += run_algorithm(Algorithm::Jet, &pool, &g, &h, EPS, 1).comm_cost;
+        let g = Arc::new(gen::generate_by_name(name));
+        j_sms += solve(&e, &g, Algorithm::SharedMapS, &h, EPS, 1).comm_cost;
+        j_ultra += solve(&e, &g, Algorithm::GpuHmUltra, &h, EPS, 1).comm_cost;
+        j_jet += solve(&e, &g, Algorithm::Jet, &h, EPS, 1).comm_cost;
     }
     assert!(j_ultra <= j_sms * 1.35, "ultra {j_ultra} vs sharedmap-s {j_sms}");
     assert!(j_jet > j_ultra * 1.15, "jet should be clearly worse: {j_jet} vs {j_ultra}");
@@ -67,12 +79,12 @@ fn paper_quality_ordering_on_mesh_family() {
 fn modeled_speed_ordering_holds() {
     // GPU-IM must be the fastest device algorithm; SharedMap-S the
     // slowest solver overall (paper Fig. 2 left).
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
-    let g = gen::generate_by_name("rgg15");
-    let im = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, 1);
-    let hm_u = run_algorithm(Algorithm::GpuHmUltra, &pool, &g, &h, EPS, 1);
-    let sms = run_algorithm(Algorithm::SharedMapS, &pool, &g, &h, EPS, 1);
+    let g = Arc::new(gen::generate_by_name("rgg15"));
+    let im = solve(&e, &g, Algorithm::GpuIm, &h, EPS, 1);
+    let hm_u = solve(&e, &g, Algorithm::GpuHmUltra, &h, EPS, 1);
+    let sms = solve(&e, &g, Algorithm::SharedMapS, &h, EPS, 1);
     assert!(im.device_ms < hm_u.device_ms, "gpu-im {} !< gpu-hm-ultra {}", im.device_ms, hm_u.device_ms);
     assert!(im.device_ms < sms.device_ms / 20.0, "gpu-im {} not ≫ sharedmap-s {}", im.device_ms, sms.device_ms);
 }
@@ -80,13 +92,18 @@ fn modeled_speed_ordering_holds() {
 #[test]
 fn seed_sweep_stability() {
     // Across seeds, quality varies but feasibility and rough quality hold.
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("2:4:4", "1:10:100").unwrap();
-    let g = gen::generate_by_name("wal_598a");
+    let g = Arc::new(gen::generate_by_name("wal_598a"));
+    let spec = MapSpec::in_memory(g.clone())
+        .topology(&h)
+        .algo(Some(Algorithm::GpuIm))
+        .eps(EPS)
+        .seeds(vec![1, 2, 3, 4, 5]);
+    let outcomes = e.map_all_seeds(&spec).unwrap();
     let mut costs = Vec::new();
-    for seed in 1..=5 {
-        let r = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, seed);
-        assert!(feasible(&g, &r.mapping, h.k()), "seed {seed} infeasible");
+    for r in outcomes {
+        assert!(feasible(&g, &r.mapping, h.k()), "seed {} infeasible", r.seed);
         costs.push(r.comm_cost);
     }
     let max = costs.iter().cloned().fold(f64::MIN, f64::max);
@@ -98,12 +115,12 @@ fn seed_sweep_stability() {
 fn hierarchy_sweep_cost_grows_with_machine_size() {
     // More islands with expensive links → higher total cost, and every
     // hierarchy stays feasible (exercises Eq. 2 across depths).
-    let pool = Pool::new(1);
-    let g = gen::generate_by_name("sten_cop20k");
+    let e = engine();
+    let g = Arc::new(gen::generate_by_name("sten_cop20k"));
     let mut last = 0.0;
     for top in [1u32, 2, 4, 6] {
         let h = Hierarchy::new(vec![4, 8, top], vec![1.0, 10.0, 100.0]).unwrap();
-        let r = run_algorithm(Algorithm::GpuHm, &pool, &g, &h, EPS, 1);
+        let r = solve(&e, &g, Algorithm::GpuHm, &h, EPS, 1);
         assert!(feasible(&g, &r.mapping, h.k()), "top={top} infeasible");
         if top > 1 {
             assert!(r.comm_cost > last * 0.9, "cost did not grow: {last} -> {}", r.comm_cost);
@@ -117,14 +134,14 @@ fn mapping_objective_beats_cut_objective_under_heterogeneous_distances() {
     // The point of the whole paper: with D = 1:10:100, minimizing J
     // directly (GPU-IM) beats minimizing edge-cut (Jet) on J — even
     // though Jet's edge-cut is lower or comparable.
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
     let mut im_wins = 0;
     let names = ["sten_cop20k", "del15", "rgg15", "wal_598a"];
     for name in names {
-        let g = gen::generate_by_name(name);
-        let im = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, 1);
-        let jet = run_algorithm(Algorithm::Jet, &pool, &g, &h, EPS, 1);
+        let g = Arc::new(gen::generate_by_name(name));
+        let im = solve(&e, &g, Algorithm::GpuIm, &h, EPS, 1);
+        let jet = solve(&e, &g, Algorithm::Jet, &h, EPS, 1);
         if im.comm_cost < jet.comm_cost {
             im_wins += 1;
         }
@@ -140,10 +157,10 @@ fn mapping_objective_beats_cut_objective_under_heterogeneous_distances() {
 fn two_phase_composition_matches_direct_evaluation() {
     // block_comm_matrix + comm_cost_blocks must equal comm_cost for any
     // mapping (ties partition/, topology/, algo::qap together).
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("4:4", "1:10").unwrap();
-    let g = gen::generate_by_name("wal_598a");
-    let r = run_algorithm(Algorithm::GpuHm, &pool, &g, &h, EPS, 3);
+    let g = Arc::new(gen::generate_by_name("wal_598a"));
+    let r = solve(&e, &g, Algorithm::GpuHm, &h, EPS, 3);
     let k = h.k();
     let bmat = heipa::partition::block_comm_matrix(&g, &r.mapping, k);
     let identity: Vec<u32> = (0..k as u32).collect();
@@ -153,21 +170,30 @@ fn two_phase_composition_matches_direct_evaluation() {
 
 #[test]
 fn qap_polish_composes_with_any_algorithm() {
-    // Re-mapping blocks to PEs never hurts J (host path; device path is
-    // covered in runtime::offload tests).
-    let pool = Pool::new(1);
+    // The engine's polish stage never hurts J and preserves balance
+    // (host path; the device path is covered in runtime::offload tests).
+    let e = engine();
     let h = Hierarchy::parse("2:4:2", "1:10:100").unwrap();
     let k = h.k();
-    let g = gen::generate_by_name("sten_cont300");
+    let g = Arc::new(gen::generate_by_name("sten_cont300"));
     for algo in [Algorithm::Jet, Algorithm::GpuIm] {
-        let r = run_algorithm(algo, &pool, &g, &h, EPS, 1);
-        let bmat = heipa::partition::block_comm_matrix(&g, &r.mapping, k);
-        let mut sigma: Vec<u32> = (0..k as u32).collect();
-        heipa::algo::qap::swap_refine(&bmat, k, &mut sigma, &h, 10);
-        let remapped: Vec<u32> = r.mapping.iter().map(|&b| sigma[b as usize]).collect();
-        let j_new = comm_cost(&g, &remapped, &h);
-        assert!(j_new <= r.comm_cost + 1e-9, "{}: polish worsened J", algo.name());
-        assert!(is_balanced(&g, &remapped, k, EPS + 0.002) == is_balanced(&g, &r.mapping, k, EPS + 0.002));
+        let base = MapSpec::in_memory(g.clone()).topology(&h).algo(Some(algo)).eps(EPS);
+        let plain = e.map(&base.clone()).unwrap();
+        let polished = e.map(&base.polish(true)).unwrap();
+        assert!(
+            polished.comm_cost <= plain.comm_cost + 1e-9,
+            "{}: polish worsened J",
+            algo.name()
+        );
+        assert!(polished.polish_improvement >= 0.0);
+        let j_check = comm_cost(&g, &polished.mapping, &h);
+        assert!((j_check - polished.comm_cost).abs() < 1e-6 * j_check.max(1.0));
+        assert!(
+            is_balanced(&g, &polished.mapping, k, EPS + 0.002)
+                == is_balanced(&g, &plain.mapping, k, EPS + 0.002),
+            "{}: polish changed balance",
+            algo.name()
+        );
     }
 }
 
@@ -182,26 +208,44 @@ fn metis_roundtrip_preserves_mapping_results() {
     let g2 = heipa::graph::io::read_metis(&path).unwrap();
     assert_eq!(g.n(), g2.n());
     assert_eq!(g.m(), g2.m());
-    let pool = Pool::new(1);
+    let e = engine();
     let h = Hierarchy::parse("2:2", "1:10").unwrap();
-    let a = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, EPS, 7);
-    let b = run_algorithm(Algorithm::GpuIm, &pool, &g2, &h, EPS, 7);
+    let a = solve(&e, &Arc::new(g), Algorithm::GpuIm, &h, EPS, 7);
+    let b = solve(&e, &Arc::new(g2), Algorithm::GpuIm, &h, EPS, 7);
     assert_eq!(a.mapping, b.mapping);
+}
+
+#[test]
+fn named_and_path_sources_agree() {
+    // The engine resolves registry names and METIS paths to the same
+    // graph, so identical specs produce identical mappings.
+    let e = engine();
+    let dir = std::env::temp_dir().join("heipa_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("named_vs_path.graph");
+    heipa::graph::io::write_metis(&gen::generate_by_name("wal_598a"), &path).unwrap();
+    let base = MapSpec::named("wal_598a").hierarchy("2:2").distance("1:10").seed(4);
+    let by_name = e.map(&base.clone()).unwrap();
+    let mut by_path = base;
+    by_path.graph = heipa::engine::GraphSource::Named(path.to_str().unwrap().to_string());
+    let by_path = e.map(&by_path).unwrap();
+    assert_eq!(by_name.mapping, by_path.mapping);
+    assert_eq!(by_name.comm_cost, by_path.comm_cost);
 }
 
 #[test]
 fn random_graph_fuzz_many_shapes() {
     // Property-style: random small graphs, random hierarchies — always
     // valid, feasible mappings.
-    let pool = Pool::new(1);
+    let e = engine();
     let mut rng = Rng::new(99);
     for trial in 0..8 {
         let n = 200 + rng.below_usize(800);
-        let g = gen::rgg(n, 0.55 * ((n as f64).ln() / n as f64).sqrt() * 1.3, trial);
+        let g = Arc::new(gen::rgg(n, 0.55 * ((n as f64).ln() / n as f64).sqrt() * 1.3, trial));
         let a1 = 1 + rng.below(3) as u32;
         let a2 = 1 + rng.below(4) as u32;
         let h = Hierarchy::new(vec![a1 + 1, a2 + 1], vec![1.0, 10.0]).unwrap();
-        let r = run_algorithm(Algorithm::GpuIm, &pool, &g, &h, 0.10, trial);
+        let r = solve(&e, &g, Algorithm::GpuIm, &h, 0.10, trial);
         validate_mapping(&r.mapping, g.n(), h.k()).unwrap();
         assert!(
             heipa::partition::max_block_weight(&g, &r.mapping, h.k())
