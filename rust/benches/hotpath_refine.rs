@@ -1,0 +1,175 @@
+//! Hot-path perf harness: gpu_im end-to-end plus refine-only timings on
+//! rgg / stencil graphs at 1, 2 and 4 threads, comparing the two
+//! conn-table update strategies (paper §4.2). Seeds the perf trajectory:
+//! wall-clock *and* modeled device ms land in `BENCH_hotpath.json`
+//! (override the path with `HEIPA_BENCH_OUT`; set `HEIPA_BENCH_SMOKE=1`
+//! for a seconds-scale CI run on tiny graphs).
+
+use heipa::algo::gpu_im::{gpu_im, GpuImConfig};
+use heipa::graph::{gen, CsrGraph, EdgeList};
+use heipa::par::cost::DeviceTimer;
+use heipa::par::Pool;
+use heipa::partition::l_max;
+use heipa::refine::jet_loop::{jet_refine_with, JetConfig};
+use heipa::refine::{ConnUpdate, Objective, RefineWorkspace};
+use heipa::rng::Rng;
+use heipa::topology::Hierarchy;
+
+struct Record {
+    bench: &'static str,
+    graph: String,
+    threads: usize,
+    conn: &'static str,
+    wall_ms: f64,
+    device_ms: f64,
+    objective: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(records: &[Record], path: &str) {
+    let mut out = String::from("{\n  \"bench\": \"hotpath_refine\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"bench\": \"{}\", \"graph\": \"{}\", \"threads\": {}, \"conn\": \"{}\", \
+             \"wall_ms\": {:.3}, \"device_ms\": {:.3}, \"objective\": {:.3}}}{}\n",
+            json_escape(r.bench),
+            json_escape(&r.graph),
+            r.threads,
+            json_escape(r.conn),
+            r.wall_ms,
+            r.device_ms,
+            r.objective,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).expect("write bench json");
+}
+
+/// Best-of-`reps` measurement of `f` (wall ms, modeled device ms, result).
+fn measure<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, f64, T) {
+    let mut best_wall = f64::INFINITY;
+    let mut best_dev = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..reps {
+        let t = DeviceTimer::start();
+        let r = f();
+        let m = t.stop();
+        best_wall = best_wall.min(m.host_ms);
+        best_dev = best_dev.min(m.device_ms);
+        last = Some(r);
+    }
+    (best_wall, best_dev, last.unwrap())
+}
+
+fn refine_only(
+    pool: &Pool,
+    g: &CsrGraph,
+    el: &EdgeList,
+    h: &Hierarchy,
+    conn: ConnUpdate,
+    reps: usize,
+) -> (f64, f64, f64) {
+    let k = h.k();
+    let lmax = l_max(g.total_vweight(), k, 0.03);
+    let mut rng = Rng::new(42);
+    let init: Vec<u32> = (0..g.n()).map(|_| rng.below(k as u64) as u32).collect();
+    let cfg = JetConfig { conn_update: conn, ..Default::default() };
+    let mut ws = RefineWorkspace::with_capacity(g.n(), k);
+    let (wall, dev, stats) = measure(reps, || {
+        let mut part = init.clone();
+        jet_refine_with(pool, g, el, &mut part, k, lmax, &Objective::Comm(h), &cfg, &mut ws)
+    });
+    (wall, dev, stats.final_objective)
+}
+
+fn main() {
+    let smoke = std::env::var("HEIPA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("HEIPA_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let reps = if smoke { 1 } else { 3 };
+
+    let graphs: Vec<(String, CsrGraph)> = if smoke {
+        vec![
+            ("rgg10".into(), gen::rgg(1 << 10, gen::rgg_paper_radius(1 << 10), 3)),
+            ("stencil24".into(), gen::stencil9(24, 24, 7)),
+        ]
+    } else {
+        vec![
+            ("rgg15".into(), gen::rgg(1 << 15, gen::rgg_paper_radius(1 << 15), 3)),
+            ("stencil128".into(), gen::stencil9(128, 128, 7)),
+        ]
+    };
+    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+
+    let mut records = Vec::new();
+    println!("| bench | graph | threads | conn | wall ms | device ms |");
+    println!("|---|---|---|---|---|---|");
+    for (name, g) in &graphs {
+        let el = EdgeList::build(g);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+
+            // End-to-end gpu_im.
+            let (wall, dev, mapping) = measure(reps, || {
+                gpu_im(&pool, g, &h, 0.03, 1, &GpuImConfig::default(), None)
+            });
+            let j = heipa::partition::comm_cost(g, &mapping, &h);
+            println!("| gpu_im | {name} | {threads} | - | {wall:.2} | {dev:.2} |");
+            records.push(Record {
+                bench: "gpu_im",
+                graph: name.clone(),
+                threads,
+                conn: "auto",
+                wall_ms: wall,
+                device_ms: dev,
+                objective: j,
+            });
+
+            // Refine-only, per conn-update strategy.
+            for (label, conn) in [
+                ("refill", ConnUpdate::Refill),
+                ("delta", ConnUpdate::Delta),
+                ("auto", ConnUpdate::Auto),
+            ] {
+                let (wall, dev, j) = refine_only(&pool, g, &el, &h, conn, reps);
+                println!("| refine | {name} | {threads} | {label} | {wall:.2} | {dev:.2} |");
+                records.push(Record {
+                    bench: "refine",
+                    graph: name.clone(),
+                    threads,
+                    conn: label,
+                    wall_ms: wall,
+                    device_ms: dev,
+                    objective: j,
+                });
+            }
+        }
+    }
+
+    write_json(&records, &out_path);
+    println!("\nwrote {} records to {out_path}", records.len());
+
+    // Headline: multi-threaded refine, delta vs refill.
+    let grab = |threads: usize, conn: &str| -> Vec<f64> {
+        records
+            .iter()
+            .filter(|r| r.bench == "refine" && r.threads == threads && r.conn == conn)
+            .map(|r| r.wall_ms)
+            .collect()
+    };
+    for threads in [2usize, 4] {
+        let refill: f64 = grab(threads, "refill").iter().sum();
+        let delta: f64 = grab(threads, "delta").iter().sum();
+        if delta > 0.0 {
+            println!(
+                "refine @{threads} threads: refill {refill:.2} ms vs delta {delta:.2} ms \
+                 ({:.2}x)",
+                refill / delta
+            );
+        }
+    }
+}

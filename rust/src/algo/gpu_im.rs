@@ -14,9 +14,9 @@ use crate::graph::{CsrGraph, EdgeList};
 use crate::metrics::{Phase, PhaseBreakdown};
 use crate::par::Pool;
 use crate::partition::l_max;
-use crate::refine::jet_loop::{jet_refine, JetConfig};
+use crate::refine::jet_loop::{jet_refine_with, JetConfig};
 use crate::refine::jet_lp::Filter;
-use crate::refine::Objective;
+use crate::refine::{Objective, RefineWorkspace};
 use crate::topology::Hierarchy;
 use crate::{Block, Vertex};
 
@@ -138,11 +138,16 @@ pub fn gpu_im(
         ..Default::default()
     };
 
+    // One workspace for the whole uncoarsening chain, sized at the finest
+    // level so coarser levels never reallocate.
+    let mut ws = RefineWorkspace::with_capacity(g.n(), k);
+
     // Refine the coarsest level.
-    timed!(
-        Phase::RefineRebalance,
-        jet_refine(pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(h), &jet_cfg)
-    );
+    timed!(Phase::RefineRebalance, {
+        jet_refine_with(
+            pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(h), &jet_cfg, &mut ws,
+        )
+    });
 
     // Uncoarsening.
     for lev in (0..maps.len()).rev() {
@@ -156,10 +161,12 @@ pub fn gpu_im(
                 fp.write(v, mapping[map[v] as usize]);
             });
         });
-        timed!(
-            Phase::RefineRebalance,
-            jet_refine(pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(h), &jet_cfg)
-        );
+        timed!(Phase::RefineRebalance, {
+            jet_refine_with(
+                pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(h), &jet_cfg,
+                &mut ws,
+            )
+        });
         mapping = fine_mapping;
     }
     // Modeled D2H download of the final mapping.

@@ -15,9 +15,9 @@ use crate::initial::{recursive_kway, MlConfig};
 use crate::metrics::{Phase, PhaseBreakdown};
 use crate::par::Pool;
 use crate::partition::l_max;
-use crate::refine::jet_loop::{jet_refine, JetConfig};
+use crate::refine::jet_loop::{jet_refine_with, JetConfig};
 use crate::refine::jet_lp::Filter;
-use crate::refine::Objective;
+use crate::refine::{Objective, RefineWorkspace};
 use crate::{Block, Vertex};
 
 /// Jet partitioner configuration.
@@ -125,10 +125,13 @@ pub fn jet_partition(
         seed,
         ..Default::default()
     };
-    timed!(
-        Phase::RefineRebalance,
-        jet_refine(pool, &cur, &cur_el, &mut part, k, lmax, &Objective::Cut, &jet_cfg)
-    );
+    // One workspace reused across every level of the uncoarsening chain.
+    let mut ws = RefineWorkspace::with_capacity(g.n(), k);
+    timed!(Phase::RefineRebalance, {
+        jet_refine_with(
+            pool, &cur, &cur_el, &mut part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
+        )
+    });
 
     // Uncoarsening.
     for lev in (0..maps.len()).rev() {
@@ -142,10 +145,11 @@ pub fn jet_partition(
                 fp.write(v, part[map[v] as usize]);
             });
         });
-        timed!(
-            Phase::RefineRebalance,
-            jet_refine(pool, fine, el, &mut fine_part, k, lmax, &Objective::Cut, &jet_cfg)
-        );
+        timed!(Phase::RefineRebalance, {
+            jet_refine_with(
+                pool, fine, el, &mut fine_part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
+            )
+        });
         part = fine_part;
     }
     // Modeled D2H download of the final partition.

@@ -29,6 +29,9 @@ pub fn preference_matching(
     let mate: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNMATCHED)).collect();
     let pref: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNMATCHED)).collect();
 
+    // Vertices never unmatch, so the matched total is the running sum of
+    // per-round counts — no extra full reduction kernel per round.
+    let mut matched_total = 0u64;
     for _round in 0..max_rounds {
         // Kernel 1: compute preferences of unmatched vertices.
         pool.parallel_for(n, |v| {
@@ -75,9 +78,7 @@ pub fn preference_matching(
         if matched_this_round == 0 {
             break;
         }
-        let matched_total = pool.reduce_sum_u64(n, |v| {
-            (mate[v].load(Ordering::Relaxed) != UNMATCHED) as u64
-        });
+        matched_total += matched_this_round;
         if matched_total as f64 / n as f64 >= 0.75 {
             break;
         }

@@ -113,6 +113,11 @@ impl Default for EngineConfig {
 /// the graph cache, owned once per engine. Not `Sync` (the runtime holds a
 /// single PJRT client); long-lived services keep the engine on one worker
 /// thread, matching the paper's one-client-per-device model.
+///
+/// The pool's workers are persistent (spawned once, parked between
+/// kernels), so an engine that serves many requests pays thread spawn cost
+/// exactly once for the process lifetime — every solver run reuses the
+/// same warm workers.
 pub struct EngineCtx {
     pool: Pool,
     artifacts_dir: String,

@@ -3,10 +3,18 @@
 //! The paper implements its kernels with Kokkos' three primitives —
 //! `parallel_for`, `parallel_reduce`, `parallel_scan` — on a CUDA GPU
 //! (§3.3). This environment has no GPU, so the same primitives are
-//! provided over a CPU worker pool (crossbeam scoped threads). Algorithms
-//! upstack are written *exactly* as the paper's kernels: flat loops over
-//! vertices or over the extended-CSR edge list, atomic CAS insertion,
-//! atomically-appended move lists, and prefix-sum based compaction.
+//! provided over a CPU worker pool. Algorithms upstack are written
+//! *exactly* as the paper's kernels: flat loops over vertices or over the
+//! extended-CSR edge list, atomic CAS insertion, atomically-appended move
+//! lists, and prefix-sum based compaction.
+//!
+//! The pool is **persistent**: workers are spawned once when the [`Pool`]
+//! is created and parked on a condvar between kernels, so a launch costs
+//! one wake + one barrier instead of an OS `clone`/`join` pair. A mapping
+//! run issues thousands of kernels, so steady-state launch overhead is the
+//! CPU analogue of the paper's CUDA launch latency — see [`cost`]. The
+//! execution semantics are unchanged: one logical work unit per index and
+//! a full barrier between kernels (BSP).
 //!
 //! Every launch is recorded in a [`ledger`], from which the calibrated
 //! GPU cost model ([`cost`]) estimates what the kernel sequence would cost
@@ -17,18 +25,33 @@
 pub mod cost;
 pub mod ledger;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A worker pool executing bulk-synchronous parallel primitives.
 ///
-/// `threads == 1` executes inline (no spawn overhead); this is the default
-/// on the single-core evaluation host. The execution *semantics* (one
+/// `threads == 1` executes inline (no workers are spawned); this is the
+/// default on the single-core evaluation host. For `threads > 1`,
+/// `threads - 1` long-lived workers are spawned once and woken per kernel;
+/// the submitting thread acts as worker 0. The execution *semantics* (one
 /// logical work unit per index, barriers between kernels) are identical
 /// for any thread count, and the test suite runs key kernels at 1, 2 and 4
 /// threads to check determinism-insensitivity.
-#[derive(Clone, Debug)]
+///
+/// `Pool` is cheap to clone (clones share the same workers) and the
+/// workers are joined when the last clone is dropped. [`crate::engine::Engine`]
+/// owns one pool for the process lifetime, so every solver run reuses the
+/// same warm workers.
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
+    workers: Option<Arc<WorkerSet>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
 }
 
 impl Default for Pool {
@@ -47,13 +70,39 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+thread_local! {
+    /// Set for the lifetime of pool worker threads (and while a submitter
+    /// executes its inline share of a kernel): nested launches from inside
+    /// a kernel body run serially instead of deadlocking on the barrier.
+    static IN_KERNEL: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+#[inline]
+fn in_kernel() -> bool {
+    IN_KERNEL.with(|c| c.get())
+}
+
 impl Pool {
     pub fn new(threads: usize) -> Self {
-        Pool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let workers =
+            if threads > 1 { Some(Arc::new(WorkerSet::spawn(threads - 1))) } else { None };
+        Pool { threads, workers }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The worker set, when this launch should fan out (`None` ⇒ run the
+    /// kernel inline: single-threaded pool, tiny `n`, or a nested launch
+    /// from inside another kernel).
+    #[inline]
+    fn dispatchable(&self, n: usize) -> Option<&WorkerSet> {
+        if n < 2 * MIN_CHUNK || in_kernel() {
+            return None;
+        }
+        self.workers.as_deref()
     }
 
     /// `parallel_for`: execute `f(i)` for all `i in 0..n`.
@@ -64,29 +113,24 @@ impl Pool {
         F: Fn(usize) + Sync,
     {
         ledger::record_launch(n as u64);
-        if self.threads == 1 || n < 2 * MIN_CHUNK {
+        let Some(ws) = self.dispatchable(n) else {
             for i in 0..n {
                 f(i);
             }
             return;
-        }
+        };
         let next = AtomicUsize::new(0);
         let chunk = chunk_size(n, self.threads);
-        crossbeam_utils::thread::scope(|s| {
-            for _ in 0..self.threads {
-                s.spawn(|_| loop {
-                    let start = next.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + chunk).min(n);
-                    for i in start..end {
-                        f(i);
-                    }
-                });
+        ws.run(&|_w| loop {
+            let start = next.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
             }
-        })
-        .expect("worker panicked in parallel_for");
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                f(i);
+            }
+        });
     }
 
     /// `parallel_reduce` with an associative combiner:
@@ -98,42 +142,41 @@ impl Pool {
         C: Fn(T, T) -> T + Sync + Send,
     {
         ledger::record_launch(n as u64);
-        if self.threads == 1 || n < 2 * MIN_CHUNK {
+        let Some(ws) = self.dispatchable(n) else {
             let mut acc = identity;
             for i in 0..n {
                 acc = combine(acc, f(i));
             }
             return acc;
-        }
+        };
         let next = AtomicUsize::new(0);
         let chunk = chunk_size(n, self.threads);
-        let partials: Vec<T> = crossbeam_utils::thread::scope(|s| {
-            let handles: Vec<_> = (0..self.threads)
-                .map(|_| {
-                    let identity = identity.clone();
-                    let next = &next;
-                    let f = &f;
-                    let combine = &combine;
-                    s.spawn(move |_| {
-                        let mut acc = identity;
-                        loop {
-                            let start = next.fetch_add(chunk, Ordering::Relaxed);
-                            if start >= n {
-                                break;
-                            }
-                            let end = (start + chunk).min(n);
-                            for i in start..end {
-                                acc = combine(acc, f(i));
-                            }
-                        }
-                        acc
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        })
-        .expect("worker panicked in parallel_reduce");
-        partials.into_iter().fold(identity, |a, b| combine(a, b))
+        // Per-worker accumulators, seeded on the submitting thread so `T`
+        // only needs `Send` (each worker exclusively owns its slot).
+        let mut partials: Vec<Option<T>> =
+            (0..self.threads).map(|_| Some(identity.clone())).collect();
+        {
+            let pp = SharedMut::new(&mut partials);
+            let f = &f;
+            let combine = &combine;
+            ws.run(&move |w| {
+                // SAFETY: worker ids are distinct, so slots are disjoint.
+                let slot = unsafe { pp.slice(w, 1) };
+                let mut acc = slot[0].take().expect("partial seeded");
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        acc = combine(acc, f(i));
+                    }
+                }
+                slot[0] = Some(acc);
+            });
+        }
+        partials.into_iter().flatten().fold(identity, |a, b| combine(a, b))
     }
 
     /// Convenience: `Σ f(i)` over `u64`.
@@ -163,63 +206,66 @@ impl Pool {
         ledger::record_launch(n as u64);
         ledger::record_launch(n as u64);
         let mut out = vec![0u64; n + 1];
-        if self.threads == 1 || n < 2 * MIN_CHUNK {
-            let mut acc = 0u64;
-            for i in 0..n {
-                out[i] = acc;
-                acc += f(i);
+        let ws = match self.dispatchable(n) {
+            Some(ws) => ws,
+            None => {
+                let mut acc = 0u64;
+                for i in 0..n {
+                    out[i] = acc;
+                    acc += f(i);
+                }
+                out[n] = acc;
+                return out;
             }
-            out[n] = acc;
-            return out;
-        }
+        };
         let nblocks = self.threads * 4;
         let block = n.div_ceil(nblocks);
         let mut block_sums = vec![0u64; nblocks];
-        // Pass 1: per-block sums.
+        // Pass 1: per-block sums (blocks claimed via an atomic counter).
         {
-            let bs = &mut block_sums;
-            crossbeam_utils::thread::scope(|s| {
-                for (b, slot) in bs.iter_mut().enumerate() {
-                    let f = &f;
-                    s.spawn(move |_| {
-                        let start = b * block;
-                        let end = ((b + 1) * block).min(n);
-                        let mut acc = 0u64;
-                        for i in start..end.max(start) {
-                            acc += f(i);
-                        }
-                        *slot = acc;
-                    });
+            let bs = SharedMut::new(&mut block_sums);
+            let next = AtomicUsize::new(0);
+            let f = &f;
+            ws.run(&move |_w| loop {
+                let b = next.fetch_add(1, Ordering::Relaxed);
+                if b >= nblocks {
+                    break;
                 }
-            })
-            .expect("worker panicked in scan pass 1");
+                let start = b * block;
+                let end = ((b + 1) * block).min(n);
+                let mut acc = 0u64;
+                for i in start..end {
+                    acc += f(i);
+                }
+                // SAFETY: one work unit per block index.
+                unsafe { bs.write(b, acc) };
+            });
         }
-        // Serial scan of block sums.
+        // Serial scan of the block sums.
         let mut block_off = vec![0u64; nblocks + 1];
         for b in 0..nblocks {
             block_off[b + 1] = block_off[b] + block_sums[b];
         }
         // Pass 2: per-block exclusive scan into the output.
         {
-            let out_ptr = SendPtr::new(&mut out);
-            let out_ref = &out_ptr;
-            crossbeam_utils::thread::scope(|s| {
-                for b in 0..nblocks {
-                    let f = &f;
-                    let off = block_off[b];
-                    s.spawn(move |_| {
-                        let start = b * block;
-                        let end = ((b + 1) * block).min(n);
-                        let mut acc = off;
-                        for i in start..end.max(start) {
-                            // SAFETY: disjoint index ranges per block.
-                            unsafe { out_ref.write(i, acc) };
-                            acc += f(i);
-                        }
-                    });
+            let op = SharedMut::new(&mut out);
+            let next = AtomicUsize::new(0);
+            let f = &f;
+            let off = &block_off;
+            ws.run(&move |_w| loop {
+                let b = next.fetch_add(1, Ordering::Relaxed);
+                if b >= nblocks {
+                    break;
                 }
-            })
-            .expect("worker panicked in scan pass 2");
+                let start = b * block;
+                let end = ((b + 1) * block).min(n);
+                let mut acc = off[b];
+                for i in start..end {
+                    // SAFETY: disjoint index ranges per block.
+                    unsafe { op.write(i, acc) };
+                    acc += f(i);
+                }
+            });
         }
         out[n] = block_off[nblocks];
         out
@@ -230,6 +276,178 @@ const MIN_CHUNK: usize = 4096;
 
 fn chunk_size(n: usize, threads: usize) -> usize {
     (n / (threads * 8)).clamp(MIN_CHUNK / 4, 1 << 16).max(1)
+}
+
+/// The long-lived workers behind a multi-threaded [`Pool`].
+///
+/// A kernel launch publishes a type-erased job under the state mutex,
+/// bumps the epoch and wakes every worker; each worker runs the job
+/// exactly once (the job body loops over an atomic work counter), then
+/// decrements `active`. The submitter executes the job inline as worker 0
+/// and blocks on `done_cv` until `active` returns to zero — that barrier
+/// is what makes the lifetime erasure of the borrowed closure sound.
+struct WorkerSet {
+    shared: Arc<Shared>,
+    spawned: usize,
+    /// Serializes kernel launches from different host threads.
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+struct JobState {
+    epoch: u64,
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Spawned workers still running the current epoch's job.
+    active: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+/// Lock ignoring poisoning: the pool's mutexes only guard launch
+/// serialization and barrier counters maintained by straight-line code, so
+/// a panic that unwound through [`WorkerSet::run`] leaves them in a valid
+/// state — treating poison as fatal would permanently brick the
+/// process-lifetime pool after one caught kernel panic.
+fn lock_pool<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_pool<'a, T>(
+    cv: &Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+impl WorkerSet {
+    fn spawn(spawned: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..=spawned)
+            .map(|id| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("heipa-worker-{id}"))
+                    .spawn(move || worker_loop(sh, id))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerSet { shared, spawned, submit: Mutex::new(()), handles }
+    }
+
+    /// Execute `per_worker(w)` once for every worker id `w in 0..threads`
+    /// (0 runs inline on the calling thread) and barrier until all are done.
+    fn run(&self, per_worker: &(dyn Fn(usize) + Sync)) {
+        let _serial = lock_pool(&self.submit);
+        // SAFETY: the completion guard below blocks this frame until every
+        // worker has finished running `per_worker`, so the erased lifetime
+        // is never outlived.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                per_worker,
+            )
+        };
+        {
+            let mut st = lock_pool(&self.shared.state);
+            st.job = Some(job);
+            st.active = self.spawned;
+            st.panicked = false;
+            st.epoch = st.epoch.wrapping_add(1);
+        }
+        self.shared.work_cv.notify_all();
+        let guard = CompletionGuard { shared: &self.shared };
+        // The submitter is worker 0; nested launches inside `per_worker`
+        // fall back to inline execution via the thread-local flag.
+        IN_KERNEL.with(|c| c.set(true));
+        let inline = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| per_worker(0)));
+        IN_KERNEL.with(|c| c.set(false));
+        drop(guard); // barrier: wait for the spawned workers
+        let mut st = lock_pool(&self.shared.state);
+        st.job = None;
+        let worker_panicked = std::mem::replace(&mut st.panicked, false);
+        drop(st);
+        if let Err(payload) = inline {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("worker panicked in pool kernel");
+        }
+    }
+}
+
+/// Waits for all spawned workers to finish the current job — also on the
+/// unwind path, so a panicking submitter cannot free state the workers
+/// still reference.
+struct CompletionGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_pool(&self.shared.state);
+        while st.active != 0 {
+            st = wait_pool(&self.shared.done_cv, st);
+        }
+    }
+}
+
+impl Drop for WorkerSet {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_pool(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    IN_KERNEL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_pool(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = wait_pool(&shared.work_cv, st);
+            }
+            seen = st.epoch;
+            st.job.expect("epoch bumped without a job")
+        };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id))).is_ok();
+        let mut st = lock_pool(&shared.state);
+        if !ok {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            drop(st);
+            shared.done_cv.notify_all();
+        }
+    }
 }
 
 /// A shared mutable pointer for device-kernel-style *disjoint-index*
@@ -255,6 +473,19 @@ impl<T> SharedMut<T> {
         *self.0.add(i) = val;
     }
 
+    /// Read slot `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds and no other work unit may be writing slot
+    /// `i` concurrently.
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        *self.0.add(i)
+    }
+
     /// Exclusive sub-slice `[start, start+len)`.
     ///
     /// # Safety
@@ -267,36 +498,61 @@ impl<T> SharedMut<T> {
     }
 }
 
-type SendPtr<T> = SharedMut<T>;
-
 /// An atomically-appended list, as used for the move lists `X` and `M` in
 /// paper Alg. 4/5 ("inserted via an atomically incremented index").
+///
+/// Appends beyond capacity are *saturating*: the element is dropped and
+/// the [`AtomicList::overflowed`] flag is raised instead of indexing out
+/// of bounds. Fallible callers (e.g. the delta conn-table update) check
+/// the flag after the kernel barrier and fall back to an exact rebuild.
 pub struct AtomicList {
     data: Vec<AtomicU64>,
     len: AtomicUsize,
+    overflow: AtomicBool,
 }
 
 impl AtomicList {
     pub fn with_capacity(cap: usize) -> Self {
         let mut data = Vec::with_capacity(cap);
         data.resize_with(cap, || AtomicU64::new(0));
-        AtomicList { data, len: AtomicUsize::new(0) }
+        AtomicList { data, len: AtomicUsize::new(0), overflow: AtomicBool::new(false) }
     }
 
-    /// Append `x`; returns its slot index.
+    /// Append `x`; returns its claimed slot index. Past-capacity appends
+    /// are dropped and raise [`AtomicList::overflowed`].
     #[inline]
     pub fn push(&self, x: u64) -> usize {
         let i = self.len.fetch_add(1, Ordering::Relaxed);
-        self.data[i].store(x, Ordering::Relaxed);
+        if let Some(slot) = self.data.get(i) {
+            slot.store(x, Ordering::Relaxed);
+        } else {
+            self.overflow.store(true, Ordering::Relaxed);
+        }
         i
     }
 
+    /// Number of retained elements (≤ capacity).
     pub fn len(&self) -> usize {
         self.len.load(Ordering::Relaxed).min(self.data.len())
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Did any append get dropped since the last [`AtomicList::reset`]?
+    pub fn overflowed(&self) -> bool {
+        self.overflow.load(Ordering::Relaxed)
+    }
+
+    /// Element `i` (must be `< len()`; call between kernels only).
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        self.data[i].load(Ordering::Relaxed)
     }
 
     /// Snapshot the contents into a `Vec` (barrier between kernels).
@@ -306,6 +562,7 @@ impl AtomicList {
 
     pub fn reset(&self) {
         self.len.store(0, Ordering::Relaxed);
+        self.overflow.store(false, Ordering::Relaxed);
     }
 }
 
@@ -392,10 +649,29 @@ mod tests {
                     list.push(i as u64);
                 }
             });
+            assert!(!list.overflowed());
             let mut v = list.to_vec();
             v.sort_unstable();
             let expect: Vec<u64> = (0..10_000).filter(|i| i % 3 == 0).map(|i| i as u64).collect();
             assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn atomic_list_saturates_instead_of_panicking() {
+        // Regression: appends past capacity used to index out of bounds.
+        for pool in pools() {
+            let list = AtomicList::with_capacity(64);
+            pool.parallel_for(10_000, |i| {
+                list.push(i as u64);
+            });
+            assert_eq!(list.len(), 64);
+            assert!(list.overflowed(), "threads={}", pool.threads());
+            assert_eq!(list.to_vec().len(), 64);
+            list.reset();
+            assert!(!list.overflowed());
+            list.push(7);
+            assert_eq!(list.to_vec(), vec![7]);
         }
     }
 
@@ -405,5 +681,69 @@ mod tests {
         let cell = AtomicU64::new(0f64.to_bits());
         pool.parallel_for(10_000, |_| atomic_f64_add(&cell, 0.5));
         assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 5_000.0);
+    }
+
+    #[test]
+    fn persistent_pool_reuse_many_kernels() {
+        // One pool, many sequential kernels of every primitive: the
+        // workers park and wake without being respawned, and results stay
+        // deterministic throughout.
+        let pool = Pool::new(4);
+        let n = 20_000;
+        for round in 0..60u64 {
+            let s = pool.reduce_sum_u64(n, |i| i as u64 + round);
+            assert_eq!(s, (n as u64 - 1) * n as u64 / 2 + round * n as u64);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            let scan = pool.scan_exclusive(n, |_| 1);
+            assert_eq!(scan[n], n as u64);
+        }
+    }
+
+    #[test]
+    fn nested_launch_runs_inline() {
+        // A kernel body that launches another kernel must not deadlock on
+        // the barrier; the inner launch degrades to inline execution.
+        let pool = Pool::new(2);
+        let pool2 = pool.clone();
+        let total = pool.reduce_sum_u64(20_000, |i| {
+            if i == 0 {
+                // Nested launch from inside a kernel: degrades to serial.
+                assert_eq!(pool2.reduce_sum_u64(20_000, |j| j as u64), 19_999 * 20_000 / 2);
+            }
+            1
+        });
+        assert_eq!(total, 20_000);
+    }
+
+    #[test]
+    fn worker_panic_propagates_without_deadlock() {
+        // The panic may surface either as the wrapped "worker panicked in
+        // pool kernel" (a spawned worker hit it) or as the original payload
+        // (the submitting thread hit it inline); either way the launch must
+        // unwind rather than deadlock, and the pool must stay usable.
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(50_000, |i| {
+                if i == 49_999 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.reduce_sum_u64(30_000, |_| 1), 30_000);
+    }
+
+    #[test]
+    fn clones_share_workers() {
+        let pool = Pool::new(3);
+        let clone = pool.clone();
+        assert_eq!(pool.reduce_sum_u64(30_000, |_| 1), 30_000);
+        assert_eq!(clone.reduce_sum_u64(30_000, |_| 1), 30_000);
+        drop(clone);
+        assert_eq!(pool.reduce_sum_u64(30_000, |_| 1), 30_000);
     }
 }

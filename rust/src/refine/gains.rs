@@ -3,17 +3,46 @@
 //! For every vertex a hash array of capacity `min(|N(v)|, k)` stores the
 //! neighboring blocks and the summed edge weight to each. It is built with
 //! one edge-parallel loop over the extended CSR (each thread CAS-claims a
-//! slot in its source vertex's interval), and updated after each move
-//! kernel by refilling the arrays of affected vertices from scratch — the
-//! first of the two update strategies the paper describes.
+//! slot in its source vertex's interval). After each move kernel the table
+//! is brought back in sync with one of the paper's two update strategies:
+//!
+//! 1. **Refill** ([`ConnTable::refill`]): rebuild the arrays of every
+//!    affected vertex (moved ∪ neighbors) from scratch — vertex-parallel,
+//!    no atomics, `Σ_{v ∈ affected} deg(v)` work.
+//! 2. **Delta** ([`ConnTable::update_delta`]): one edge-parallel kernel
+//!    over only the *moved* vertices' incident edges, applying `−w` to the
+//!    source's old block and `+w` to its new block in each neighbor's
+//!    array — `Σ_{v ∈ moved} deg(v)` work, atomic. Entries whose weight
+//!    reaches zero stay as *tombstones* (key kept, weight 0) so the probe
+//!    invariant is preserved; [`ConnTable::gather`] already skips them. A
+//!    vertex whose interval fills up with tombstoned keys overflows its
+//!    bounded probe and is compacted by refilling just that vertex.
+//!
+//! [`ConnUpdate`] selects between them; `Auto` picks delta while the moved
+//! incident edges are a small fraction of the graph (the common steady
+//! state) and refill for avalanche rounds.
 
 use crate::graph::{CsrGraph, EdgeList};
-use crate::par::{atomic_f64_add, Pool};
+use crate::par::{atomic_f64_add, AtomicList, Pool};
 use crate::rng::hash_u64;
 use crate::{Block, Vertex};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 const NULL: u32 = u32::MAX;
+
+/// Conn-table update strategy after a move kernel (paper §4.2 describes
+/// both; the benchmark `hotpath_refine` compares them head to head).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ConnUpdate {
+    /// Strategy 1: rebuild affected vertices' arrays from scratch.
+    Refill,
+    /// Strategy 2: edge-parallel `−w`/`+w` deltas over moved edges.
+    Delta,
+    /// `Delta` when the moved vertices' incident edges are < 50% of the
+    /// graph's directed edges, `Refill` otherwise.
+    #[default]
+    Auto,
+}
 
 /// Block-connectivity hash arrays for all vertices.
 pub struct ConnTable {
@@ -65,27 +94,43 @@ impl ConnTable {
         (self.offsets[v] as usize, self.offsets[v + 1] as usize)
     }
 
-    /// CAS insert-or-accumulate into vertex `v`'s interval.
+    /// CAS insert-or-accumulate into vertex `v`'s interval (fresh build /
+    /// refill path, where the interval can always absorb its ≤ `len`
+    /// distinct keys — the bounded probe cannot fail).
     #[inline]
     fn insert_or_add_atomic(&self, v: usize, b: Block, w: f64) {
+        let ok = self.delta_add(v, b, w);
+        debug_assert!(ok, "fresh build cannot saturate an interval");
+    }
+
+    /// Bounded-probe CAS insert-or-accumulate: gives up after `len` probes
+    /// (interval saturated with other keys, e.g. tombstones left by delta
+    /// updates) and returns `false` so the caller can fall back to a
+    /// refill. During a fresh build the distinct key count is ≤ `len`, so
+    /// the probe always succeeds there.
+    #[inline]
+    fn delta_add(&self, v: usize, b: Block, w: f64) -> bool {
         let (start, end) = self.interval(v);
         let len = end - start;
-        debug_assert!(len > 0);
+        if len == 0 {
+            return true;
+        }
         let mut slot = (hash_u64(b as u64) % len as u64) as usize;
-        loop {
+        for _ in 0..len {
             let idx = start + slot;
             match self.keys[idx].compare_exchange(NULL, b, Ordering::Relaxed, Ordering::Relaxed) {
                 Ok(_) => {
                     atomic_f64_add(&self.vals[idx], w);
-                    return;
+                    return true;
                 }
                 Err(existing) if existing == b => {
                     atomic_f64_add(&self.vals[idx], w);
-                    return;
+                    return true;
                 }
                 Err(_) => slot = (slot + 1) % len,
             }
         }
+        false
     }
 
     /// Connectivity of `v` to block `b` (`conn(v, b)` in the paper).
@@ -132,7 +177,7 @@ impl ConnTable {
 
     /// Refill the arrays of every vertex in `affected` from scratch
     /// (vertex-parallel; each thread owns its vertex's whole interval so
-    /// no atomics are needed).
+    /// no atomics are needed). Strategy 1 of paper §4.2.
     pub fn refill(&self, pool: &Pool, g: &CsrGraph, part: &[Block], affected: &[Vertex]) {
         pool.parallel_for(affected.len(), |i| {
             let v = affected[i] as usize;
@@ -167,8 +212,88 @@ impl ConnTable {
         });
     }
 
+    /// Strategy 2 of paper §4.2: apply the moves as edge-parallel deltas.
+    ///
+    /// For every incident edge `(v, u, w)` of a moved vertex `v`, subtract
+    /// `w` from `old_of[v]` and add `w` to `part[v]` in `u`'s array (both
+    /// atomic; `v`'s own array only depends on its *neighbors'* blocks, so
+    /// symmetric edges of co-moved neighbors handle it). `part` is the
+    /// partition *after* the moves; `old_of` is indexed by vertex id and
+    /// must hold the pre-move block of every moved vertex. Vertices whose
+    /// bounded probe overflows (interval saturated by tombstones) are
+    /// compacted afterwards by an exact per-vertex refill.
+    ///
+    /// With integer-valued edge weights the result is bit-identical to a
+    /// fresh [`ConnTable::build`]; with arbitrary floats, residues of
+    /// cancelled entries are O(ε) and removed by the next refill.
+    pub fn update_delta(
+        &self,
+        pool: &Pool,
+        g: &CsrGraph,
+        part: &[Block],
+        moved: &[Vertex],
+        old_of: &[Block],
+    ) {
+        let off = pool.scan_exclusive(moved.len(), |i| g.degree(moved[i]) as u64);
+        self.update_delta_with_offsets(pool, g, part, moved, old_of, &off);
+    }
+
+    /// [`ConnTable::update_delta`] with a precomputed exclusive scan of
+    /// `deg(moved[i])` (callers on the hot path share it with the
+    /// incremental-objective kernel).
+    pub fn update_delta_with_offsets(
+        &self,
+        pool: &Pool,
+        g: &CsrGraph,
+        part: &[Block],
+        moved: &[Vertex],
+        old_of: &[Block],
+        off: &[u64],
+    ) {
+        debug_assert_eq!(off.len(), moved.len() + 1);
+        if moved.is_empty() {
+            return;
+        }
+        let tot = off[moved.len()] as usize;
+        // Vertices whose interval could not absorb a delta; refilled below.
+        // Saturation of this list is itself handled: the overflow flag
+        // widens the fallback to the full affected set.
+        let overflow = AtomicList::with_capacity(1024);
+        pool.parallel_for(tot, |e| {
+            // Owner of directed-edge slot `e` in the concatenated moved
+            // adjacency: off[i] <= e < off[i+1].
+            let i = off.partition_point(|&x| x <= e as u64) - 1;
+            let v = moved[i] as usize;
+            let from = old_of[v];
+            let to = part[v];
+            if from == to {
+                return;
+            }
+            let j = g.xadj[v] as usize + (e - off[i] as usize);
+            let u = g.adj[j] as usize;
+            let w = g.ew[j];
+            if !self.delta_add(u, from, -w) || !self.delta_add(u, to, w) {
+                overflow.push(u as u64);
+            }
+        });
+        if overflow.is_empty() && !overflow.overflowed() {
+            return;
+        }
+        if overflow.overflowed() {
+            // Rare avalanche: compact the whole affected neighborhood.
+            let affected = ConnTable::affected_set(g, moved);
+            self.refill(pool, g, part, &affected);
+        } else {
+            let mut ov: Vec<Vertex> = overflow.to_vec().into_iter().map(|x| x as Vertex).collect();
+            ov.sort_unstable();
+            ov.dedup();
+            self.refill(pool, g, part, &ov);
+        }
+    }
+
     /// The affected set of a move list: moved vertices and their neighbors,
-    /// deduplicated.
+    /// deduplicated. Serial reference version; the hot path uses the
+    /// parallel [`super::workspace::RefineWorkspace::affected_set_into`].
     pub fn affected_set(g: &CsrGraph, moved: &[Vertex]) -> Vec<Vertex> {
         let mut mark = vec![false; g.n()];
         let mut out = Vec::with_capacity(moved.len() * 4);
@@ -201,6 +326,22 @@ mod tests {
             *m.entry(part[u as usize]).or_insert(0.0) += w;
         }
         m.into_iter().collect()
+    }
+
+    fn assert_tables_agree(g: &CsrGraph, a: &ConnTable, b: &ConnTable) {
+        let mut ga = Vec::new();
+        let mut gb = Vec::new();
+        for v in 0..g.n() {
+            a.gather(v, &mut ga);
+            b.gather(v, &mut gb);
+            ga.sort_unstable_by_key(|&(x, _)| x);
+            gb.sort_unstable_by_key(|&(x, _)| x);
+            assert_eq!(ga.len(), gb.len(), "v={v}");
+            for (&(ab, aw), &(bb, bw)) in ga.iter().zip(&gb) {
+                assert_eq!(ab, bb, "v={v}");
+                assert!((aw - bw).abs() < 1e-9, "v={v}: {aw} vs {bw}");
+            }
+        }
     }
 
     #[test]
@@ -260,19 +401,73 @@ mod tests {
         table.refill(&pool, &g, &part, &affected);
         // Fresh build must agree everywhere.
         let fresh = ConnTable::build(&pool, &g, &el, &part, k);
-        let mut a = Vec::new();
-        let mut b = Vec::new();
-        for v in 0..g.n() {
-            table.gather(v, &mut a);
-            fresh.gather(v, &mut b);
-            a.sort_unstable_by_key(|&(x, _)| x);
-            b.sort_unstable_by_key(|&(x, _)| x);
-            assert_eq!(a.len(), b.len(), "v={v}");
-            for (&(ab, aw), &(bb, bw)) in a.iter().zip(&b) {
-                assert_eq!(ab, bb);
-                assert!((aw - bw).abs() < 1e-9);
+        assert_tables_agree(&g, &table, &fresh);
+    }
+
+    #[test]
+    fn delta_update_matches_rebuild_at_all_thread_counts() {
+        let g = gen::stencil9(24, 24, 7); // integer weights 1..8 ⇒ exact fp
+        let k = 6;
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            let mut rng = Rng::new(11);
+            let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+            let el = EdgeList::build(&g);
+            let table = ConnTable::build(&pool, &g, &el, &part, k);
+            let mut old_of = vec![0 as Block; g.n()];
+            // Several successive move rounds on the same table: tombstones
+            // must accumulate harmlessly.
+            for _round in 0..4 {
+                let mut moved: Vec<Vertex> =
+                    (0..60).map(|_| rng.below(g.n() as u64) as Vertex).collect();
+                moved.sort_unstable();
+                moved.dedup();
+                for &v in &moved {
+                    old_of[v as usize] = part[v as usize];
+                    let mut b = rng.below(k as u64) as Block;
+                    if b == part[v as usize] {
+                        b = (b + 1) % k as Block;
+                    }
+                    part[v as usize] = b;
+                }
+                table.update_delta(&pool, &g, &part, &moved, &old_of);
+                let fresh = ConnTable::build(&pool, &g, &el, &part, k);
+                assert_tables_agree(&g, &table, &fresh);
             }
         }
+    }
+
+    #[test]
+    fn delta_update_overflow_falls_back_to_refill() {
+        // Path a–u–b: u's interval has min(deg, k) = 2 slots. Moving its
+        // two neighbors through fresh blocks leaves both slots tombstoned,
+        // so the next insert overflows the bounded probe and u must be
+        // compacted by the per-vertex refill fallback.
+        let g = gen::grid2d(3, 1, false); // path 0-1-2
+        let k = 8;
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut part: Vec<Block> = vec![0, 7, 1];
+        let table = ConnTable::build(&pool, &g, &el, &part, k);
+        let mut old_of = vec![0 as Block; g.n()];
+        // Round 1: both endpoints jump to blocks 2 and 3 — vertex 1's two
+        // slots now hold tombstones for 0 and 1 plus live keys... which
+        // cannot fit: the probe overflows and refill compacts.
+        old_of[0] = part[0];
+        old_of[2] = part[2];
+        part[0] = 2;
+        part[2] = 3;
+        table.update_delta(&pool, &g, &part, &[0, 2], &old_of);
+        let fresh = ConnTable::build(&pool, &g, &el, &part, k);
+        assert_tables_agree(&g, &table, &fresh);
+        // Round 2: move them again to yet other blocks.
+        old_of[0] = part[0];
+        old_of[2] = part[2];
+        part[0] = 4;
+        part[2] = 5;
+        table.update_delta(&pool, &g, &part, &[0, 2], &old_of);
+        let fresh2 = ConnTable::build(&pool, &g, &el, &part, k);
+        assert_tables_agree(&g, &table, &fresh2);
     }
 
     #[test]

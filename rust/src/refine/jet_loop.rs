@@ -7,15 +7,28 @@
 //! than the factor `φ = 0.999` (or balance improves while infeasible), and
 //! the loop ends after `iter_limit` (12; 18 for the *ultra* flavor)
 //! iterations without significant progress.
+//!
+//! **Hot-path structure** (§Perf): the controller objective is maintained
+//! *incrementally* — every move round adds an edge-parallel ΔJ reduction
+//! over just the moved vertices' incident edges instead of re-reducing all
+//! `2m` edges, with a periodic exact re-reduction
+//! ([`JetConfig::resync_every`]) bounding FP drift. Moves are applied by a
+//! parallel kernel (old-block recording, block-weight atomics), and the
+//! connectivity table is updated with either of the paper's two §4.2
+//! strategies ([`ConnUpdate`]). All scratch lives in a caller-provided
+//! [`RefineWorkspace`] ([`jet_refine_with`]), which multilevel pipelines
+//! allocate once and reuse across levels.
 
-use super::gains::ConnTable;
-use super::jet_lp::{Filter, JetLp};
+use super::gains::{ConnTable, ConnUpdate};
+use super::jet_lp::Filter;
 use super::rebalance::{rebalance, Strength};
+use super::workspace::RefineWorkspace;
 use super::Objective;
 use crate::graph::{CsrGraph, EdgeList};
-use crate::par::Pool;
+use crate::par::{Pool, SharedMut};
 use crate::partition::block_weights;
 use crate::{Block, VWeight, Vertex};
+use std::sync::atomic::{AtomicI64, Ordering};
 
 /// Controller configuration (constants transferred from Jet).
 #[derive(Clone, Debug)]
@@ -33,6 +46,12 @@ pub struct JetConfig {
     pub rebalance_with_comm_obj: bool,
     /// Seed for the deterministic random choices in rebalancing.
     pub seed: u64,
+    /// Conn-table update strategy after each move kernel (paper §4.2).
+    pub conn_update: ConnUpdate,
+    /// Exact objective re-reduction every this many move rounds, bounding
+    /// FP drift of the incremental tracker (1 = re-reduce every round,
+    /// i.e. the pre-incremental behavior).
+    pub resync_every: usize,
 }
 
 impl Default for JetConfig {
@@ -44,6 +63,8 @@ impl Default for JetConfig {
             filter: Filter::NonNegative,
             rebalance_with_comm_obj: false,
             seed: 0,
+            conn_update: ConnUpdate::Auto,
+            resync_every: 32,
         }
     }
 }
@@ -64,7 +85,13 @@ pub struct RefineStats {
     pub weak_steps: usize,
     pub strong_steps: usize,
     pub moves: usize,
-    /// Objective of the returned mapping.
+    /// Move rounds whose conn table was updated with the delta strategy.
+    pub conn_delta_rounds: usize,
+    /// Move rounds whose conn table was updated with the refill strategy.
+    pub conn_refill_rounds: usize,
+    /// Exact objective re-reductions triggered by `resync_every`.
+    pub objective_resyncs: usize,
+    /// Objective of the returned mapping (always an exact reduction).
     pub final_objective: f64,
 }
 
@@ -91,7 +118,41 @@ fn eval_objective(pool: &Pool, g: &CsrGraph, el: &EdgeList, part: &[Block], obj:
     }
 }
 
-/// Run Algorithm 6 on `part` in place. Returns run statistics.
+/// Cost contribution of one directed edge slot between blocks `a` and `b`
+/// (before multiplying by the edge weight).
+#[inline]
+fn pair_cost(obj: &Objective, a: Block, b: Block) -> f64 {
+    match obj {
+        Objective::Cut => {
+            if a == b {
+                0.0
+            } else {
+                1.0
+            }
+        }
+        Objective::Comm(h) => h.distance(a, b),
+        Objective::CommMat(m) => m.get(a, b),
+    }
+}
+
+/// [`eval_objective`] halves the directed edge-cut sum; the communication
+/// objectives count every directed slot.
+#[inline]
+fn directed_scale(obj: &Objective) -> f64 {
+    match obj {
+        Objective::Cut => 0.5,
+        _ => 1.0,
+    }
+}
+
+#[inline]
+fn max_bw(bw: &[AtomicI64], k: usize) -> VWeight {
+    bw[..k].iter().map(|w| w.load(Ordering::Relaxed)).max().unwrap_or(0)
+}
+
+/// Run Algorithm 6 on `part` in place with a fresh workspace. Returns run
+/// statistics. Multilevel callers should prefer [`jet_refine_with`] and
+/// reuse one [`RefineWorkspace`] across levels.
 #[allow(clippy::too_many_arguments)]
 pub fn jet_refine(
     pool: &Pool,
@@ -102,6 +163,24 @@ pub fn jet_refine(
     l_max: VWeight,
     obj: &Objective,
     cfg: &JetConfig,
+) -> RefineStats {
+    let mut ws = RefineWorkspace::new();
+    jet_refine_with(pool, g, el, part, k, l_max, obj, cfg, &mut ws)
+}
+
+/// Run Algorithm 6 on `part` in place, using (and growing) the caller's
+/// workspace. Returns run statistics.
+#[allow(clippy::too_many_arguments)]
+pub fn jet_refine_with(
+    pool: &Pool,
+    g: &CsrGraph,
+    el: &EdgeList,
+    part: &mut Vec<Block>,
+    k: usize,
+    l_max: VWeight,
+    obj: &Objective,
+    cfg: &JetConfig,
+    ws: &mut RefineWorkspace,
 ) -> RefineStats {
     let n = g.n();
     let mut stats = RefineStats::default();
@@ -118,34 +197,48 @@ pub fn jet_refine(
         None => *obj,
     };
 
-    let mut cur = part.clone();
-    let mut bw = block_weights(g, &cur, k);
-    let conn = ConnTable::build(pool, g, el, &cur, k);
-    let mut lp = JetLp::new(n);
+    ws.ensure(n, k);
+    ws.lp.new_pass();
 
-    let max_bw = |bw: &[VWeight]| bw.iter().copied().max().unwrap_or(0);
+    let mut cur = part.clone();
+    for (b, w) in block_weights(g, &cur, k).into_iter().enumerate() {
+        ws.bw[b].store(w, Ordering::Relaxed);
+    }
+    let conn = ConnTable::build(pool, g, el, &cur, k);
+
+    // §Perf opt: the controller objective is tracked incrementally from
+    // per-move ΔJ reductions; exact reductions run once here, every
+    // `resync_every` move rounds, and once at the end.
+    let mut j_cur = eval_objective(pool, g, el, &cur, obj);
+    let mut rounds_since_sync = 0usize;
 
     // Best (returned) mapping state.
-    let mut best = part.clone();
-    let mut best_balanced = max_bw(&bw) <= l_max;
-    let mut best_j = eval_objective(pool, g, el, &best, obj);
-    let mut best_imb = max_bw(&bw);
+    let mut best = cur.clone();
+    let mut best_balanced = max_bw(&ws.bw, k) <= l_max;
+    let mut best_j = j_cur;
+    let mut best_imb = max_bw(&ws.bw, k);
 
     let mut i = 0usize;
     let mut i_w = 0usize;
     let mut empty_rounds = 0usize;
     let reb_obj_comm = cfg.rebalance_with_comm_obj;
 
+    // Per-iteration buffers, reused across rounds.
+    let mut dests: Vec<Block> = Vec::new();
+    let mut affected: Vec<Vertex> = Vec::new();
+    let mut bw_snapshot: Vec<VWeight> = Vec::new();
+
     while i < cfg.iter_limit {
         i += 1;
         stats.iterations += 1;
 
-        let (moves, dests): (Vec<Vertex>, Vec<Block>) = if max_bw(&bw) <= l_max {
+        let moves: Vec<Vertex> = if max_bw(&ws.bw, k) <= l_max {
             stats.lp_steps += 1;
             i_w = 0;
-            let moves = lp.run(pool, g, &conn, &cur, obj, cfg.filter);
-            let dests = moves.iter().map(|&v| lp.dest_of(v)).collect();
-            (moves, dests)
+            let m = ws.lp.run(pool, g, &conn, &cur, obj, cfg.filter);
+            dests.clear();
+            dests.extend(m.iter().map(|&v| ws.lp.dest_of(v)));
+            m
         } else {
             let strength = if i_w < cfg.weak_limit {
                 i_w += 1;
@@ -157,40 +250,118 @@ pub fn jet_refine(
                 Strength::Strong
             };
             let reb_obj = if reb_obj_comm { *obj } else { Objective::Cut };
-            let (moves, dest_arr) = rebalance(
+            ws.bw_snapshot(k, &mut bw_snapshot);
+            rebalance(
                 pool,
                 g,
                 &conn,
                 &cur,
-                &bw,
+                &bw_snapshot,
                 k,
                 l_max,
                 &reb_obj,
                 strength,
                 cfg.seed ^ (i as u64) << 8,
-            );
-            let dests = moves.iter().map(|&v| dest_arr[v as usize]).collect();
-            (moves, dests)
+                &mut ws.reb,
+                &mut dests,
+            )
         };
 
-        // Move(M, Π''): apply, update block weights and the conn table.
         stats.moves += moves.len();
-        for (idx, &v) in moves.iter().enumerate() {
-            let vi = v as usize;
-            let to = dests[idx];
-            bw[cur[vi] as usize] -= g.vw[vi];
-            bw[to as usize] += g.vw[vi];
-            cur[vi] = to;
-        }
         if !moves.is_empty() {
-            let affected = ConnTable::affected_set(g, &moves);
-            conn.refill(pool, g, &cur, &affected);
+            // Move(M, Π''): the former serial apply loop as a parallel
+            // kernel — records old blocks, flips assignments, and updates
+            // block weights atomically.
+            let epoch = ws.moved_marks.begin(n);
+            {
+                let marks = &ws.moved_marks;
+                let bw = &ws.bw;
+                let cur_ptr = SharedMut::new(&mut cur);
+                let old_ptr = SharedMut::new(&mut ws.old_block);
+                let moves_r = &moves;
+                let dests_r = &dests;
+                pool.parallel_for(moves_r.len(), |idx| {
+                    let v = moves_r[idx] as usize;
+                    let to = dests_r[idx];
+                    // SAFETY: a move list names each vertex at most once,
+                    // so slot v is owned by exactly this work unit.
+                    let from = unsafe { cur_ptr.read(v) };
+                    unsafe { old_ptr.write(v, from) };
+                    unsafe { cur_ptr.write(v, to) };
+                    marks.mark(v, epoch);
+                    bw[from as usize].fetch_sub(g.vw[v], Ordering::Relaxed);
+                    bw[to as usize].fetch_add(g.vw[v], Ordering::Relaxed);
+                });
+            }
+
+            // Moved-edge offsets, shared by the ΔJ reduction and the delta
+            // conn-table update.
+            let off = pool.scan_exclusive(moves.len(), |idx| g.degree(moves[idx]) as u64);
+            let moved_edges = off[moves.len()];
+
+            // ΔJ: edge-parallel reduction over the moved incident edges
+            // only, instead of a full 2m-edge re-reduction per iteration.
+            let delta = {
+                let marks = &ws.moved_marks;
+                let old = &ws.old_block;
+                let cur_r = &cur;
+                let off_r = &off;
+                let moves_r = &moves;
+                pool.parallel_reduce(
+                    moved_edges as usize,
+                    0f64,
+                    |e| {
+                        // Owner of slot e: off[i] <= e < off[i+1].
+                        let i = off_r.partition_point(|&x| x <= e as u64) - 1;
+                        let v = moves_r[i] as usize;
+                        let j = g.xadj[v] as usize + (e - off_r[i] as usize);
+                        let u = g.adj[j] as usize;
+                        let w = g.ew[j];
+                        let v_new = cur_r[v];
+                        let v_old = old[v];
+                        // An edge between two moved endpoints is enumerated
+                        // from both sides (factor 1 each); an edge to an
+                        // unmoved neighbor only from this side, but its
+                        // reverse slot contributes the same (factor 2).
+                        let (u_old, u_new, fac) = if marks.is_marked(u, epoch) {
+                            (old[u], cur_r[u], 1.0)
+                        } else {
+                            (cur_r[u], cur_r[u], 2.0)
+                        };
+                        fac * w * (pair_cost(obj, v_new, u_new) - pair_cost(obj, v_old, u_old))
+                    },
+                    |a, b| a + b,
+                )
+            };
+            j_cur += delta * directed_scale(obj);
+
+            // Conn-table update: the paper's two §4.2 strategies.
+            let use_delta = match cfg.conn_update {
+                ConnUpdate::Refill => false,
+                ConnUpdate::Delta => true,
+                ConnUpdate::Auto => (moved_edges as usize) * 2 < g.num_directed(),
+            };
+            if use_delta {
+                stats.conn_delta_rounds += 1;
+                conn.update_delta_with_offsets(pool, g, &cur, &moves, &ws.old_block, &off);
+            } else {
+                stats.conn_refill_rounds += 1;
+                ws.affected_set_into(pool, g, &moves, &mut affected);
+                conn.refill(pool, g, &cur, &affected);
+            }
+
+            rounds_since_sync += 1;
+            if rounds_since_sync >= cfg.resync_every.max(1) {
+                j_cur = eval_objective(pool, g, el, &cur, obj);
+                rounds_since_sync = 0;
+                stats.objective_resyncs += 1;
+            }
         }
 
-        // Lines 16–21: best-solution tracking.
-        let cur_max = max_bw(&bw);
+        // Lines 16–21: best-solution tracking (on the tracked objective).
+        let cur_max = max_bw(&ws.bw, k);
         if cur_max <= l_max {
-            let j = eval_objective(pool, g, el, &cur, obj);
+            let j = j_cur;
             let prev_best_j = best_j;
             if !best_balanced || j < best_j {
                 best.copy_from_slice(&cur);
@@ -204,7 +375,7 @@ pub fn jet_refine(
         } else if !best_balanced && cur_max < best_imb {
             best.copy_from_slice(&cur);
             best_imb = cur_max;
-            best_j = eval_objective(pool, g, el, &cur, obj);
+            best_j = j_cur;
             i = 0;
         }
         // Fixed-point detection: one empty LP round is not convergence —
@@ -220,7 +391,9 @@ pub fn jet_refine(
         }
     }
 
-    stats.final_objective = best_j;
+    // One exact reduction for the reported objective: bounds any leftover
+    // incremental drift in what callers observe.
+    stats.final_objective = eval_objective(pool, g, el, &best, obj);
     *part = best;
     stats
 }
@@ -323,6 +496,90 @@ mod tests {
             sum_ultra += comm_cost(&g, &p2, &h);
         }
         assert!(sum_ultra <= sum_def * 1.05, "ultra much worse: {sum_ultra} vs {sum_def}");
+    }
+
+    #[test]
+    fn conn_strategies_agree_on_final_mapping() {
+        // Integer edge weights ⇒ the delta updates and the incremental
+        // objective are exact, so the full controller trajectory must be
+        // identical under every conn-update strategy.
+        let g = gen::stencil9(22, 22, 3);
+        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let k = h.k();
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut rng = Rng::new(17);
+        let init: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let mut results = Vec::new();
+        for strat in [ConnUpdate::Refill, ConnUpdate::Delta, ConnUpdate::Auto] {
+            let mut p = init.clone();
+            let cfg = JetConfig { conn_update: strat, ..Default::default() };
+            let stats = jet_refine(&pool, &g, &el, &mut p, k, lmax, &Objective::Comm(&h), &cfg);
+            match strat {
+                ConnUpdate::Refill => assert_eq!(stats.conn_delta_rounds, 0),
+                ConnUpdate::Delta => assert_eq!(stats.conn_refill_rounds, 0),
+                ConnUpdate::Auto => {}
+            }
+            results.push(p);
+        }
+        assert_eq!(results[0], results[1], "refill vs delta");
+        assert_eq!(results[0], results[2], "refill vs auto");
+    }
+
+    #[test]
+    fn incremental_objective_matches_per_round_resync() {
+        // resync_every = 1 re-reduces exactly every round (the old
+        // behavior); with integer weights the incremental tracker must
+        // produce the same trajectory and the same final mapping.
+        let g = gen::stencil9(20, 20, 5);
+        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let k = h.k();
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut rng = Rng::new(23);
+        let init: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let mut p_exact = init.clone();
+        let exact_cfg = JetConfig { resync_every: 1, ..Default::default() };
+        let s_exact =
+            jet_refine(&pool, &g, &el, &mut p_exact, k, lmax, &Objective::Comm(&h), &exact_cfg);
+        assert!(s_exact.objective_resyncs > 0);
+        let mut p_incr = init;
+        let incr_cfg = JetConfig { resync_every: 1_000_000, ..Default::default() };
+        let s_incr =
+            jet_refine(&pool, &g, &el, &mut p_incr, k, lmax, &Objective::Comm(&h), &incr_cfg);
+        assert_eq!(p_exact, p_incr);
+        assert!(
+            (s_exact.final_objective - s_incr.final_objective).abs()
+                < 1e-9 * s_exact.final_objective.max(1.0)
+        );
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_workspace() {
+        let g = gen::grid2d(20, 20, false);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let k = h.k();
+        let lmax = lmax_of(g.total_vweight(), k, 0.03);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut ws = RefineWorkspace::with_capacity(g.n(), k);
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(seed);
+            let init: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+            let mut p_shared = init.clone();
+            jet_refine_with(
+                &pool, &g, &el, &mut p_shared, k, lmax, &Objective::Comm(&h),
+                &JetConfig::default(), &mut ws,
+            );
+            let mut p_fresh = init;
+            jet_refine(
+                &pool, &g, &el, &mut p_fresh, k, lmax, &Objective::Comm(&h),
+                &JetConfig::default(),
+            );
+            assert_eq!(p_shared, p_fresh, "seed={seed}");
+        }
     }
 
     #[test]

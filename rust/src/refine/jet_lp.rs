@@ -11,24 +11,38 @@
 //! gain is re-evaluated under the approximate future state — neighbors
 //! earlier in the implicit ordering (gain desc, id asc) are assumed moved —
 //! and survivors enter the final move list `M`.
+//!
+//! All state (destinations, gains, round-stamped locks, both move lists)
+//! lives in [`JetLp`] and is reused across iterations *and* multilevel
+//! levels: locks and candidacy are round-stamped, so "resetting" them is a
+//! counter bump rather than an `O(n)` clear per iteration.
 
 use super::gains::ConnTable;
 use super::Objective;
 use crate::graph::CsrGraph;
 use crate::par::{AtomicList, Pool};
 use crate::{Block, Vertex};
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 const NO_DEST: u32 = u32::MAX;
 
-/// Scratch state for Algorithm 4, reused across iterations.
+/// Scratch state for Algorithm 4, reused across iterations and levels.
 pub struct JetLp {
-    /// Destination `Π'(v)` of each candidate (NO_DEST otherwise).
-    pub dest: Vec<AtomicU32>,
+    /// Destination `Π'(v)` of each candidate.
+    dest: Vec<AtomicU32>,
     /// First-filter gain `G_{Π'(v)}(v)` of each candidate.
-    pub gain: Vec<f64>,
-    /// Vertices locked for this iteration (moved in the previous one).
-    pub locked: Vec<bool>,
+    gain: Vec<f64>,
+    /// Candidacy stamp: `dest[v]`/`gain[v]` are valid iff
+    /// `stamp[v] == round`.
+    stamp: Vec<AtomicU64>,
+    /// Lock stamp: `v` may not move in round `r` iff `locked[v] == r`
+    /// (it moved in the previous LP round).
+    locked: Vec<u64>,
+    round: u64,
+    /// Candidate list `X` (kernel 1 output).
+    cand: AtomicList,
+    /// Final move list `M` (kernel 2 output).
+    moves: AtomicList,
 }
 
 /// The negative-move filter of the first kernel.
@@ -45,13 +59,51 @@ pub enum Filter {
 
 impl JetLp {
     pub fn new(n: usize) -> Self {
-        let mut dest = Vec::with_capacity(n);
-        dest.resize_with(n, || AtomicU32::new(NO_DEST));
-        JetLp { dest, gain: vec![0.0; n], locked: vec![false; n] }
+        let mut lp = JetLp {
+            dest: Vec::new(),
+            gain: Vec::new(),
+            stamp: Vec::new(),
+            locked: Vec::new(),
+            round: 0,
+            cand: AtomicList::with_capacity(0),
+            moves: AtomicList::with_capacity(0),
+        };
+        lp.ensure(n);
+        lp
+    }
+
+    /// Grow the state to cover `n` vertices (contents only ever grow; the
+    /// round stamps make stale values from smaller levels harmless after
+    /// [`JetLp::new_pass`]).
+    pub fn ensure(&mut self, n: usize) {
+        if self.dest.len() < n {
+            self.dest.resize_with(n, || AtomicU32::new(NO_DEST));
+        }
+        if self.gain.len() < n {
+            self.gain.resize(n, 0.0);
+        }
+        if self.stamp.len() < n {
+            self.stamp.resize_with(n, || AtomicU64::new(0));
+        }
+        if self.locked.len() < n {
+            self.locked.resize(n, 0);
+        }
+        if self.cand.capacity() < n {
+            self.cand = AtomicList::with_capacity(n);
+        }
+        if self.moves.capacity() < n {
+            self.moves = AtomicList::with_capacity(n);
+        }
+    }
+
+    /// Invalidate every lock (start of a new refinement pass or multilevel
+    /// level — vertex ids change meaning between levels).
+    pub fn new_pass(&mut self) {
+        self.round = self.round.wrapping_add(1);
     }
 
     /// Run one unconstrained LP step. Returns the final move list `M`
-    /// (destinations are in `self.dest`).
+    /// (destinations are in `self.dest`, see [`JetLp::dest_of`]).
     #[allow(clippy::too_many_arguments)]
     pub fn run(
         &mut self,
@@ -63,19 +115,21 @@ impl JetLp {
         filter: Filter,
     ) -> Vec<Vertex> {
         let n = g.n();
-        let x = AtomicList::with_capacity(n);
-        // Reset candidate state.
-        pool.parallel_for(n, |v| {
-            self.dest[v].store(NO_DEST, Ordering::Relaxed);
-        });
+        self.ensure(n);
+        self.round = self.round.wrapping_add(1);
+        let round = self.round;
+        self.cand.reset();
+        self.moves.reset();
         let gain_ptr = crate::par::SharedMut::new(&mut self.gain);
 
         // Kernel 1: best destination + first filter.
         {
             let locked = &self.locked;
             let dest = &self.dest;
+            let stamp = &self.stamp;
+            let x = &self.cand;
             pool.parallel_for(n, |v| {
-                if locked[v] {
+                if locked[v] == round {
                     return;
                 }
                 let from = part[v];
@@ -102,20 +156,21 @@ impl JetLp {
                     dest[v].store(b, Ordering::Relaxed);
                     // SAFETY: each v is written by exactly one work unit.
                     unsafe { gain_ptr.write(v, gn) };
+                    stamp[v].store(round, Ordering::Relaxed);
                     x.push(v as u64);
                 }
             });
         }
 
-        let candidates = x.to_vec();
-
         // Kernel 2: re-evaluate under the approximate future state.
-        let moves = AtomicList::with_capacity(candidates.len());
         {
             let dest = &self.dest;
             let gain = &self.gain;
-            pool.parallel_for(candidates.len(), |i| {
-                let v = candidates[i] as usize;
+            let stamp = &self.stamp;
+            let cand = &self.cand;
+            let moves = &self.moves;
+            pool.parallel_for(cand.len(), |i| {
+                let v = cand.get(i) as usize;
                 let from = part[v];
                 let to = dest[v].load(Ordering::Relaxed);
                 let my_gain = gain[v];
@@ -125,9 +180,9 @@ impl JetLp {
                 let mut buf = super::ConnBuf::new();
                 for (&u, &w) in nbrs.iter().zip(ws) {
                     let ui = u as usize;
-                    let udest = dest[ui].load(Ordering::Relaxed);
-                    let u_block = if udest != NO_DEST && earlier(gain[ui], u, my_gain, v as Vertex) {
-                        udest
+                    let u_is_cand = stamp[ui].load(Ordering::Relaxed) == round;
+                    let u_block = if u_is_cand && earlier(gain[ui], u, my_gain, v as Vertex) {
+                        dest[ui].load(Ordering::Relaxed)
                     } else {
                         part[ui]
                     };
@@ -140,15 +195,14 @@ impl JetLp {
             });
         }
 
-        let mut final_moves: Vec<Vertex> = moves.to_vec().into_iter().map(|v| v as Vertex).collect();
+        let mut final_moves: Vec<Vertex> =
+            (0..self.moves.len()).map(|i| self.moves.get(i) as Vertex).collect();
         final_moves.sort_unstable(); // determinism for tests/benches
 
-        // Lock moved vertices for the next iteration (anti-oscillation).
-        for l in self.locked.iter_mut() {
-            *l = false;
-        }
+        // Lock moved vertices for the next LP round (anti-oscillation);
+        // sparse stamping replaces the former O(n) clear-and-set pass.
         for &v in &final_moves {
-            self.locked[v as usize] = true;
+            self.locked[v as usize] = round + 1;
         }
         final_moves
     }
@@ -241,6 +295,25 @@ mod tests {
         for v in &moves2 {
             assert!(!moves1.contains(v), "vertex {v} oscillated");
         }
+    }
+
+    #[test]
+    fn new_pass_unlocks_everything() {
+        let g = gen::grid2d(8, 8, false);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let mut rng = Rng::new(5);
+        let part: Vec<Block> = (0..g.n()).map(|_| rng.below(4) as Block).collect();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(1);
+        let mut lp = JetLp::new(g.n());
+        let conn = ConnTable::build(&pool, &g, &el, &part, 4);
+        let moves1 = lp.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative);
+        assert!(!moves1.is_empty());
+        // Without new_pass the same vertices would be locked; with it the
+        // identical input yields the identical move list again.
+        lp.new_pass();
+        let moves2 = lp.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative);
+        assert_eq!(moves1, moves2);
     }
 
     #[test]

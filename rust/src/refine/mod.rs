@@ -14,6 +14,10 @@ pub mod jet_loop;
 pub mod jet_lp;
 pub mod lp_serial;
 pub mod rebalance;
+pub mod workspace;
+
+pub use gains::ConnUpdate;
+pub use workspace::RefineWorkspace;
 
 use crate::topology::{DistanceMatrix, Hierarchy};
 use crate::Block;

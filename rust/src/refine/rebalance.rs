@@ -15,11 +15,15 @@
 //! The objective used for the loss is configurable: the paper found that
 //! plain edge-cut loss performs as well as `J`-loss and is cheaper — both
 //! are implemented (ablation A2 in DESIGN.md).
+//!
+//! The `n`-sized proposal arrays live in a [`RebalanceScratch`] owned by
+//! the caller's [`super::workspace::RefineWorkspace`], so repeated
+//! rebalancing rounds reuse one allocation.
 
 use super::gains::ConnTable;
 use super::Objective;
 use crate::graph::CsrGraph;
-use crate::par::Pool;
+use crate::par::{AtomicList, Pool};
 use crate::rng::hash_u64;
 use crate::{Block, VWeight, Vertex};
 use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
@@ -36,8 +40,50 @@ pub enum Strength {
     Strong,
 }
 
-/// One rebalancing step. Returns `(moves, dest)`: the vertices to move and
-/// the destination array (valid at the returned indices).
+/// Reusable `n`-sized scratch for [`rebalance`] (proposal destinations,
+/// losses, bucket arrival weights, move list).
+pub struct RebalanceScratch {
+    dest: Vec<AtomicU32>,
+    loss: Vec<f64>,
+    my_before: Vec<VWeight>,
+    moves: AtomicList,
+}
+
+impl Default for RebalanceScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RebalanceScratch {
+    pub fn new() -> Self {
+        RebalanceScratch {
+            dest: Vec::new(),
+            loss: Vec::new(),
+            my_before: Vec::new(),
+            moves: AtomicList::with_capacity(0),
+        }
+    }
+
+    /// Grow the buffers to cover `n` vertices.
+    pub fn ensure(&mut self, n: usize) {
+        if self.dest.len() < n {
+            self.dest.resize_with(n, || AtomicU32::new(NO_DEST));
+        }
+        if self.loss.len() < n {
+            self.loss.resize(n, 0.0);
+        }
+        if self.my_before.len() < n {
+            self.my_before.resize(n, 0);
+        }
+        if self.moves.capacity() < n {
+            self.moves = AtomicList::with_capacity(n);
+        }
+    }
+}
+
+/// One rebalancing step. Returns the sorted vertices to move and fills
+/// `dests_out` with their destinations (aligned with the returned list).
 #[allow(clippy::too_many_arguments)]
 pub fn rebalance(
     pool: &Pool,
@@ -50,8 +96,12 @@ pub fn rebalance(
     obj: &Objective,
     strength: Strength,
     seed: u64,
-) -> (Vec<Vertex>, Vec<Block>) {
+    scratch: &mut RebalanceScratch,
+    dests_out: &mut Vec<Block>,
+) -> Vec<Vertex> {
     let n = g.n();
+    scratch.ensure(n);
+    scratch.moves.reset();
     let total: VWeight = block_weights.iter().sum();
     let avg = total / k as VWeight;
     // Dead zone below L_max (paper: σ = L_max − 100 with unit weights;
@@ -59,12 +109,13 @@ pub fn rebalance(
     let dead = ((l_max - avg).max(1) / 2).min(100);
     let sigma = l_max - dead;
 
-    let dest: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(NO_DEST)).collect();
-    let mut loss = vec![0.0f64; n];
-    let loss_ptr = crate::par::SharedMut::new(&mut loss);
+    let dest = &scratch.dest;
+    let loss_ptr = crate::par::SharedMut::new(&mut scratch.loss);
 
-    // Kernel 1: per-vertex best move out of overloaded blocks.
+    // Kernel 1: per-vertex best move out of overloaded blocks (also
+    // re-initializes this round's proposal slots — no separate clear pass).
     pool.parallel_for(n, |v| {
+        dest[v].store(NO_DEST, Ordering::Relaxed);
         let from = part[v];
         if block_weights[from as usize] <= l_max {
             return;
@@ -99,16 +150,18 @@ pub fn rebalance(
         }
         if let Some((gn, b)) = best {
             dest[v].store(b, Ordering::Relaxed);
+            // SAFETY: each v is written by exactly one work unit.
             unsafe { loss_ptr.write(v, gn) };
         }
     });
+
+    let loss = &scratch.loss;
 
     // Kernel 2: bucket accumulation per overloaded block.
     // bucket 0 = strictly positive gain, 1 = zero gain, 2+i = loss with
     // i ≤ log2(−gain) < i+1.
     let bucket_w: Vec<AtomicI64> = (0..k * BUCKETS).map(|_| AtomicI64::new(0)).collect();
-    let mut my_before = vec![0 as VWeight; n];
-    let before_ptr = crate::par::SharedMut::new(&mut my_before);
+    let before_ptr = crate::par::SharedMut::new(&mut scratch.my_before);
     pool.parallel_for(n, |v| {
         let d = dest[v].load(Ordering::Relaxed);
         if d == NO_DEST {
@@ -116,8 +169,11 @@ pub fn rebalance(
         }
         let b = bucket_of(loss[v]);
         let prev = bucket_w[part[v] as usize * BUCKETS + b].fetch_add(g.vw[v], Ordering::Relaxed);
+        // SAFETY: each v is written by exactly one work unit.
         unsafe { before_ptr.write(v, prev) };
     });
+
+    let my_before = &scratch.my_before;
 
     // Prefix sums over buckets per block (k·BUCKETS is tiny: serial).
     let mut bucket_prefix = vec![0 as VWeight; k * BUCKETS];
@@ -132,9 +188,10 @@ pub fn rebalance(
     // Kernel 3: per-vertex decision — move iff the weight moved before me
     // (earlier buckets + earlier arrivals in my bucket) is below the
     // block's excess.
-    let moves = crate::par::AtomicList::with_capacity(n);
+    let moves = &scratch.moves;
     // Strong: atomic destination reservations.
-    let reserved: Vec<AtomicI64> = (0..k).map(|b| AtomicI64::new(block_weights[b].min(l_max))).collect();
+    let reserved: Vec<AtomicI64> =
+        (0..k).map(|b| AtomicI64::new(block_weights[b].min(l_max))).collect();
     pool.parallel_for(n, |v| {
         let d = dest[v].load(Ordering::Relaxed);
         if d == NO_DEST {
@@ -183,10 +240,12 @@ pub fn rebalance(
         }
     });
 
-    let mut move_list: Vec<Vertex> = moves.to_vec().into_iter().map(|x| x as Vertex).collect();
+    let mut move_list: Vec<Vertex> =
+        (0..moves.len()).map(|i| moves.get(i) as Vertex).collect();
     move_list.sort_unstable();
-    let dest_plain: Vec<Block> = dest.iter().map(|d| d.load(Ordering::Relaxed)).collect();
-    (move_list, dest_plain)
+    dests_out.clear();
+    dests_out.extend(move_list.iter().map(|&v| dest[v as usize].load(Ordering::Relaxed)));
+    move_list
 }
 
 /// Bucket index: 0 = positive, 1 = zero, 2+⌊log₂(−gain)⌋ for losses.
@@ -233,6 +292,8 @@ mod tests {
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let el = EdgeList::build(&g);
         let pool = Pool::new(1);
+        let mut scratch = RebalanceScratch::new();
+        let mut dests = Vec::new();
         let before_max = max_block_weight(&g, &part, k);
         for _ in 0..6 {
             let bw = bw_of(&g, &part, k);
@@ -240,12 +301,13 @@ mod tests {
                 break;
             }
             let conn = ConnTable::build(&pool, &g, &el, &part, k);
-            let (moves, dest) = rebalance(
+            let moves = rebalance(
                 &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Comm(&h), Strength::Weak, 3,
+                &mut scratch, &mut dests,
             );
             assert!(!moves.is_empty(), "weak rebalance made no progress");
-            for &v in &moves {
-                part[v as usize] = dest[v as usize];
+            for (i, &v) in moves.iter().enumerate() {
+                part[v as usize] = dests[i];
             }
         }
         let after_max = max_block_weight(&g, &part, k);
@@ -263,11 +325,14 @@ mod tests {
         let pool = Pool::new(2);
         let bw = bw_of(&g, &part, k);
         let conn = ConnTable::build(&pool, &g, &el, &part, k);
-        let (moves, dest) = rebalance(
+        let mut scratch = RebalanceScratch::new();
+        let mut dests = Vec::new();
+        let moves = rebalance(
             &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Cut, Strength::Strong, 5,
+            &mut scratch, &mut dests,
         );
-        for &v in &moves {
-            part[v as usize] = dest[v as usize];
+        for (i, &v) in moves.iter().enumerate() {
+            part[v as usize] = dests[i];
         }
         let after = bw_of(&g, &part, k);
         // Strong rebalancing must not overload any *destination*: every
@@ -303,10 +368,14 @@ mod tests {
         let bw = bw_of(&g, &part, k);
         let conn = ConnTable::build(&pool, &g, &el, &part, k);
         let h = Hierarchy::parse("2:2", "1:10").unwrap();
-        let (moves, _) = rebalance(
+        let mut scratch = RebalanceScratch::new();
+        let mut dests = Vec::new();
+        let moves = rebalance(
             &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Comm(&h), Strength::Weak, 1,
+            &mut scratch, &mut dests,
         );
         assert!(moves.is_empty());
+        assert!(dests.is_empty());
     }
 
     #[test]
@@ -323,9 +392,45 @@ mod tests {
         let pool = Pool::new(1);
         let bw = bw_of(&g, &part, k);
         let conn = ConnTable::build(&pool, &g, &el, &part, k);
-        let (moves, _) = rebalance(
+        let mut scratch = RebalanceScratch::new();
+        let mut dests = Vec::new();
+        let moves = rebalance(
             &pool, &g, &conn, &part, &bw, k, lmax, &Objective::Cut, Strength::Weak, 2,
+            &mut scratch, &mut dests,
         );
         assert!(!moves.contains(&0), "heavy vertex moved");
+    }
+
+    #[test]
+    fn scratch_reuse_across_rounds_is_clean() {
+        // Two different overload patterns through the same scratch: stale
+        // proposals from round 1 must not leak into round 2.
+        let g = gen::grid2d(16, 16, false);
+        let k = 4;
+        let lmax = lmax_of(g.total_vweight(), k, 0.05);
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let mut scratch = RebalanceScratch::new();
+        let mut dests = Vec::new();
+        // Round 1: overloaded.
+        let part1 = overload_partition(&g, k);
+        let bw1 = bw_of(&g, &part1, k);
+        let conn1 = ConnTable::build(&pool, &g, &el, &part1, k);
+        let moves1 = rebalance(
+            &pool, &g, &conn1, &part1, &bw1, k, lmax, &Objective::Comm(&h), Strength::Weak, 7,
+            &mut scratch, &mut dests,
+        );
+        assert!(!moves1.is_empty());
+        // Round 2: perfectly balanced — must be a no-op despite the dirty
+        // scratch.
+        let part2: Vec<Block> = (0..g.n()).map(|v| (v % k) as Block).collect();
+        let bw2 = bw_of(&g, &part2, k);
+        let conn2 = ConnTable::build(&pool, &g, &el, &part2, k);
+        let moves2 = rebalance(
+            &pool, &g, &conn2, &part2, &bw2, k, lmax, &Objective::Comm(&h), Strength::Weak, 7,
+            &mut scratch, &mut dests,
+        );
+        assert!(moves2.is_empty());
     }
 }

@@ -1,0 +1,235 @@
+//! Reusable refinement scratch space (§Perf: allocation-free hot path).
+//!
+//! `jet_refine` used to allocate per *iteration* (`vec![false; n]` for the
+//! affected set, fresh move lists, fresh LP state per call) — thousands of
+//! `n`-sized allocations per mapping. A [`RefineWorkspace`] owns all of
+//! that scratch once: [`crate::algo::gpu_im::gpu_im`] allocates it at the
+//! finest level and reuses it across every multilevel level and every Jet
+//! iteration; epoch-stamped mark arrays make "clear" an O(1) counter bump.
+
+use crate::graph::CsrGraph;
+use crate::par::{AtomicList, Pool};
+use crate::refine::jet_lp::JetLp;
+use crate::refine::rebalance::RebalanceScratch;
+use crate::{Block, Vertex};
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+/// Epoch-stamped mark array: a slot is "marked" iff it carries the current
+/// epoch tag, so resetting all marks is one counter increment instead of an
+/// `O(n)` clear (the rare `u32` wrap-around does pay the full clear).
+pub struct EpochMarks {
+    marks: Vec<AtomicU32>,
+    epoch: u32,
+}
+
+impl Default for EpochMarks {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochMarks {
+    pub fn new() -> Self {
+        EpochMarks { marks: Vec::new(), epoch: 0 }
+    }
+
+    /// Start a new generation covering `n` slots; returns its epoch tag.
+    pub fn begin(&mut self, n: usize) -> u32 {
+        if self.marks.len() < n {
+            self.marks.resize_with(n, || AtomicU32::new(0));
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            for m in &self.marks {
+                m.store(0, Ordering::Relaxed);
+            }
+            self.epoch = 1;
+        }
+        self.epoch
+    }
+
+    /// Mark `v`; true iff this call was the first to mark it this epoch
+    /// (atomic claim — exactly one winner under concurrency).
+    #[inline]
+    pub fn try_mark(&self, v: usize, epoch: u32) -> bool {
+        self.marks[v].swap(epoch, Ordering::Relaxed) != epoch
+    }
+
+    /// Unconditional mark.
+    #[inline]
+    pub fn mark(&self, v: usize, epoch: u32) {
+        self.marks[v].store(epoch, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn is_marked(&self, v: usize, epoch: u32) -> bool {
+        self.marks[v].load(Ordering::Relaxed) == epoch
+    }
+}
+
+/// All scratch state of the Jet refinement hot path, allocated once per
+/// call chain and reused across multilevel levels (buffers only ever grow).
+pub struct RefineWorkspace {
+    /// Affected-set marks (moved vertices ∪ their neighbors).
+    affected_marks: EpochMarks,
+    /// Per-round moved-vertex marks for the incremental objective.
+    pub(crate) moved_marks: EpochMarks,
+    /// Affected-set collector (capacity ≥ n; each vertex pushed ≤ once).
+    affected_list: AtomicList,
+    /// Previous block of each vertex moved in the current round
+    /// (indexed by vertex id, valid where `moved_marks` carries the
+    /// round's epoch).
+    pub(crate) old_block: Vec<Block>,
+    /// Atomic block weights, updated by the parallel move-apply kernel.
+    pub(crate) bw: Vec<AtomicI64>,
+    /// Label-propagation state (destinations, gains, locks, move lists).
+    pub(crate) lp: JetLp,
+    /// Rebalancing scratch (proposal arrays, move list).
+    pub(crate) reb: RebalanceScratch,
+}
+
+impl Default for RefineWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RefineWorkspace {
+    /// An empty workspace; buffers are grown on first use.
+    pub fn new() -> Self {
+        RefineWorkspace {
+            affected_marks: EpochMarks::new(),
+            moved_marks: EpochMarks::new(),
+            affected_list: AtomicList::with_capacity(0),
+            old_block: Vec::new(),
+            bw: Vec::new(),
+            lp: JetLp::new(0),
+            reb: RebalanceScratch::new(),
+        }
+    }
+
+    /// Pre-size every buffer for `n` vertices and `k` blocks (call with the
+    /// finest level's `n` to avoid growth during uncoarsening).
+    pub fn with_capacity(n: usize, k: usize) -> Self {
+        let mut ws = Self::new();
+        ws.ensure(n, k);
+        ws
+    }
+
+    /// Grow every buffer to cover `n` vertices and `k` blocks.
+    pub fn ensure(&mut self, n: usize, k: usize) {
+        if self.old_block.len() < n {
+            self.old_block.resize(n, 0);
+        }
+        if self.affected_list.capacity() < n {
+            self.affected_list = AtomicList::with_capacity(n);
+        }
+        if self.bw.len() < k {
+            self.bw.resize_with(k, || AtomicI64::new(0));
+        }
+        self.lp.ensure(n);
+        self.reb.ensure(n);
+    }
+
+    /// Current block weights as a plain vector copy (for callers that need
+    /// a `&[VWeight]` snapshot between kernels).
+    pub(crate) fn bw_snapshot(&self, k: usize, out: &mut Vec<i64>) {
+        out.clear();
+        out.extend(self.bw[..k].iter().map(|w| w.load(Ordering::Relaxed)));
+    }
+
+    /// The affected set of a move list — moved vertices and their
+    /// neighbors, deduplicated — computed with a vertex-parallel kernel
+    /// over the epoch-mark array instead of the former serial pass with a
+    /// fresh `vec![false; n]`. The result is sorted for determinism.
+    pub fn affected_set_into(
+        &mut self,
+        pool: &Pool,
+        g: &CsrGraph,
+        moved: &[Vertex],
+        out: &mut Vec<Vertex>,
+    ) {
+        if self.affected_list.capacity() < g.n() {
+            self.affected_list = AtomicList::with_capacity(g.n());
+        }
+        let epoch = self.affected_marks.begin(g.n());
+        let marks = &self.affected_marks;
+        let list = &self.affected_list;
+        list.reset();
+        pool.parallel_for(moved.len(), |i| {
+            let v = moved[i];
+            if marks.try_mark(v as usize, epoch) {
+                list.push(v as u64);
+            }
+            for &u in g.neighbors(v) {
+                if marks.try_mark(u as usize, epoch) {
+                    list.push(u as u64);
+                }
+            }
+        });
+        debug_assert!(!list.overflowed(), "affected list sized below n");
+        out.clear();
+        out.reserve(list.len());
+        for i in 0..list.len() {
+            out.push(list.get(i) as Vertex);
+        }
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::refine::gains::ConnTable;
+    use crate::rng::Rng;
+
+    #[test]
+    fn epoch_marks_claim_exactly_once() {
+        let mut m = EpochMarks::new();
+        let e1 = m.begin(100);
+        assert!(m.try_mark(5, e1));
+        assert!(!m.try_mark(5, e1));
+        assert!(m.is_marked(5, e1));
+        assert!(!m.is_marked(6, e1));
+        let e2 = m.begin(100);
+        assert_ne!(e1, e2);
+        assert!(!m.is_marked(5, e2), "new epoch clears marks");
+        assert!(m.try_mark(5, e2));
+    }
+
+    #[test]
+    fn epoch_marks_grow() {
+        let mut m = EpochMarks::new();
+        let e = m.begin(10);
+        m.mark(9, e);
+        let e2 = m.begin(50);
+        m.mark(49, e2);
+        assert!(m.is_marked(49, e2));
+        assert!(!m.is_marked(9, e2));
+    }
+
+    #[test]
+    fn parallel_affected_set_matches_serial() {
+        let g = gen::rgg(1_200, 0.07, 5);
+        let mut rng = Rng::new(3);
+        let moved: Vec<Vertex> = (0..80).map(|_| rng.below(g.n() as u64) as Vertex).collect();
+        let moved2: Vec<Vertex> = (0..40).map(|_| rng.below(g.n() as u64) as Vertex).collect();
+        let sorted_serial = |m: &[Vertex]| {
+            let mut s = ConnTable::affected_set(&g, m);
+            s.sort_unstable();
+            s
+        };
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            let mut ws = RefineWorkspace::with_capacity(g.n(), 4);
+            let mut par = Vec::new();
+            ws.affected_set_into(&pool, &g, &moved, &mut par);
+            assert_eq!(par, sorted_serial(&moved), "threads={threads}");
+            // Reuse: a different move list on the same workspace must not
+            // see stale marks from the previous epoch.
+            ws.affected_set_into(&pool, &g, &moved2, &mut par);
+            assert_eq!(par, sorted_serial(&moved2), "threads={threads} (reuse)");
+        }
+    }
+}

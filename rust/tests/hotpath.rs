@@ -1,0 +1,171 @@
+//! Integration coverage for the hot-path overhaul: persistent-pool reuse,
+//! delta conn-table parity across thread counts, and incremental-objective
+//! agreement with exact re-reductions.
+
+use heipa::graph::{gen, EdgeList};
+use heipa::par::Pool;
+use heipa::partition::{comm_cost, is_balanced, l_max, validate_mapping};
+use heipa::refine::gains::ConnTable;
+use heipa::refine::jet_loop::{jet_refine, jet_refine_with, JetConfig};
+use heipa::refine::{ConnUpdate, Objective, RefineWorkspace};
+use heipa::rng::Rng;
+use heipa::topology::Hierarchy;
+use heipa::{Block, Vertex};
+
+/// Thread count of this process from /proc (Linux); None elsewhere.
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn persistent_pool_survives_100_plus_kernels_without_thread_growth() {
+    let pool = Pool::new(4);
+    let n = 30_000;
+    let expect = (n as u64 - 1) * n as u64 / 2;
+    // Warm up, then sample the thread count early and late in a long
+    // sequence of kernels: a pool that respawned workers per launch (or
+    // leaked them) would drift; persistent workers keep it flat. Other
+    // tests in this binary may run concurrently, hence the slack.
+    for _ in 0..10 {
+        assert_eq!(pool.reduce_sum_u64(n, |i| i as u64), expect);
+    }
+    let early = os_thread_count();
+    for round in 0..140u64 {
+        let s = pool.reduce_sum_u64(n, |i| i as u64 + round);
+        assert_eq!(s, expect + round * n as u64, "round {round}");
+        let scan = pool.scan_exclusive(n, |_| 2);
+        assert_eq!(scan[n], 2 * n as u64);
+    }
+    let late = os_thread_count();
+    if let (Some(a), Some(b)) = (early, late) {
+        assert!(
+            b <= a + 16,
+            "thread count grew from {a} to {b} across 140 kernels — worker leak"
+        );
+    }
+}
+
+#[test]
+fn delta_conn_table_parity_at_1_2_4_threads() {
+    // Unit-weight rgg: all fp arithmetic is exact, so the delta-updated
+    // table must be *identical* (in gathered (block, weight) sets) to a
+    // fresh edge-parallel build — per the paper's strategy-2 contract.
+    let g = gen::rgg(3_000, 0.045, 9);
+    let k = 12;
+    let el = EdgeList::build(&g);
+    for threads in [1, 2, 4] {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(31);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let table = ConnTable::build(&pool, &g, &el, &part, k);
+        let mut old_of = vec![0 as Block; g.n()];
+        for _round in 0..5 {
+            let mut moved: Vec<Vertex> =
+                (0..200).map(|_| rng.below(g.n() as u64) as Vertex).collect();
+            moved.sort_unstable();
+            moved.dedup();
+            for &v in &moved {
+                old_of[v as usize] = part[v as usize];
+                let mut b = rng.below(k as u64) as Block;
+                if b == part[v as usize] {
+                    b = (b + 1) % k as Block;
+                }
+                part[v as usize] = b;
+            }
+            table.update_delta(&pool, &g, &part, &moved, &old_of);
+        }
+        let fresh = ConnTable::build(&pool, &g, &el, &part, k);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for v in 0..g.n() {
+            table.gather(v, &mut a);
+            fresh.gather(v, &mut b);
+            a.sort_unstable_by_key(|&(x, _)| x);
+            b.sort_unstable_by_key(|&(x, _)| x);
+            assert_eq!(a, b, "v={v} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn incremental_objective_agrees_with_exact_after_resync() {
+    let g = gen::stencil9(26, 26, 13);
+    let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+    let k = h.k();
+    let lmax = l_max(g.total_vweight(), k, 0.03);
+    let el = EdgeList::build(&g);
+    for threads in [1, 2, 4] {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(7);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        // Force several resyncs along the way; the reported objective is
+        // always an exact reduction and must match an independent serial
+        // evaluation of the returned mapping.
+        let cfg = JetConfig { resync_every: 2, ..Default::default() };
+        let stats = jet_refine(&pool, &g, &el, &mut part, k, lmax, &Objective::Comm(&h), &cfg);
+        let exact = comm_cost(&g, &part, &h);
+        assert!(
+            (stats.final_objective - exact).abs() < 1e-6 * exact.max(1.0),
+            "threads={threads}: tracked {} vs exact {exact}",
+            stats.final_objective
+        );
+        assert!(is_balanced(&g, &part, k, 0.031), "threads={threads}");
+    }
+}
+
+#[test]
+fn refine_with_shared_workspace_across_graph_sizes() {
+    // The multilevel pattern: one workspace, multiple graphs of different
+    // sizes through the same buffers (coarse → fine order like gpu_im's
+    // uncoarsening chain, then a *larger* graph to exercise growth).
+    let h = Hierarchy::parse("2:2", "1:10").unwrap();
+    let k = h.k();
+    let pool = Pool::new(2);
+    let mut ws = RefineWorkspace::with_capacity(1_000, k);
+    for (w, ht) in [(12, 12), (20, 20), (40, 40)] {
+        let g = gen::grid2d(w, ht, false);
+        let lmax = l_max(g.total_vweight(), k, 0.05);
+        let el = EdgeList::build(&g);
+        let mut rng = Rng::new(3);
+        let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+        let before = comm_cost(&g, &part, &h);
+        jet_refine_with(
+            &pool,
+            &g,
+            &el,
+            &mut part,
+            k,
+            lmax,
+            &Objective::Comm(&h),
+            &JetConfig::default(),
+            &mut ws,
+        );
+        validate_mapping(&part, g.n(), k).unwrap();
+        assert!(is_balanced(&g, &part, k, 0.051), "{w}x{ht}");
+        assert!(comm_cost(&g, &part, &h) < before, "{w}x{ht} did not improve");
+    }
+}
+
+#[test]
+fn forced_delta_strategy_runs_and_stays_correct_multithreaded() {
+    let g = gen::rgg(4_000, 0.04, 21);
+    let h = Hierarchy::parse("4:2", "1:10").unwrap();
+    let k = h.k();
+    let lmax = l_max(g.total_vweight(), k, 0.05);
+    let el = EdgeList::build(&g);
+    let pool = Pool::new(4);
+    let mut rng = Rng::new(2);
+    let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
+    let before = comm_cost(&g, &part, &h);
+    let cfg = JetConfig { conn_update: ConnUpdate::Delta, ..Default::default() };
+    let stats = jet_refine(&pool, &g, &el, &mut part, k, lmax, &Objective::Comm(&h), &cfg);
+    assert!(stats.conn_delta_rounds > 0, "delta strategy never ran");
+    assert_eq!(stats.conn_refill_rounds, 0);
+    assert!(is_balanced(&g, &part, k, 0.051));
+    assert!(comm_cost(&g, &part, &h) < before);
+}
