@@ -23,7 +23,7 @@ use heipa::coordinator::{MapReply, MapRequest};
 use heipa::engine::{Engine, MapSpec};
 use heipa::graph::gen;
 use heipa::partition;
-use heipa::topology::Hierarchy;
+use heipa::topology::Machine;
 use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
 
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         let out = &reply.outcome;
         // Validate the mapping end-to-end.
         let g = gen::generate_by_name(inst);
-        let h = Hierarchy::parse(hier, "1:10:100")?;
+        let h = Machine::hier(hier, "1:10:100")?;
         assert_eq!(out.mapping.len(), g.n(), "requested mapping");
         partition::validate_mapping(&out.mapping, g.n(), h.k()).map_err(anyhow::Error::msg)?;
         assert!(

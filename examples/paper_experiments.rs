@@ -15,11 +15,11 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::with_defaults();
     let seeds = harness::seeds_from_env(&[1]);
     let hierarchies = if std::env::var("HEIPA_TOPS").is_ok() {
-        harness::hierarchies_from_env()
+        harness::machines_from_env()
     } else {
         vec![
-            heipa::topology::Hierarchy::new(vec![4, 8, 2], vec![1.0, 10.0, 100.0])?,
-            heipa::topology::Hierarchy::new(vec![4, 8, 6], vec![1.0, 10.0, 100.0])?,
+            heipa::topology::Machine::hier("4:8:2", "1:10:100")?,
+            heipa::topology::Machine::hier("4:8:6", "1:10:100")?,
         ]
     };
     let instances = gen::smoke_suite();

@@ -13,7 +13,7 @@
 use heipa::algo::Algorithm;
 use heipa::engine::{Engine, MapSpec};
 use heipa::graph::gen;
-use heipa::topology::{paper_hierarchies, Hierarchy};
+use heipa::topology::{paper_hierarchies, Machine};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n| hierarchy | k | J (GPU-HM) | imbalance | J/k (norm.) |");
     println!("|---|---|---|---|---|");
     for h in paper_hierarchies() {
+        let h = Machine::from(h);
         let r = engine.map(&base.clone().topology(&h))?;
         println!(
             "| {} | {} | {:.0} | {:.4} | {:.1} |",
@@ -37,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Eq. 2 ablation on the largest machine.
-    let h = Hierarchy::parse("4:8:6", "1:10:100")?;
+    let h = Machine::hier("4:8:6", "1:10:100")?;
     let r_adaptive = engine.map(&base.clone().topology(&h))?;
     let r_fixed = engine.map(&base.clone().topology(&h).option("adaptive", "0"))?;
     println!("\nEq. 2 adaptive imbalance ablation (k = {}):", h.k());

@@ -14,7 +14,7 @@ use heipa::engine::Engine;
 fn main() {
     let engine = Engine::with_defaults();
     let seeds = harness::seeds_from_env(&[1]);
-    let hierarchies = harness::hierarchies_from_env();
+    let hierarchies = harness::machines_from_env();
     let instances = gen::smoke_suite();
     let algos = [Algorithm::GpuHm, Algorithm::GpuHmUltra, Algorithm::GpuIm];
 

@@ -13,7 +13,7 @@ use heipa::partition::l_max;
 use heipa::refine::jet_loop::{jet_refine_with, JetConfig};
 use heipa::refine::{ConnUpdate, Objective, RefineWorkspace};
 use heipa::rng::Rng;
-use heipa::topology::Hierarchy;
+use heipa::topology::Machine;
 
 struct Record {
     bench: &'static str,
@@ -69,7 +69,7 @@ fn refine_only(
     pool: &Pool,
     g: &CsrGraph,
     el: &EdgeList,
-    h: &Hierarchy,
+    h: &Machine,
     conn: ConnUpdate,
     reps: usize,
 ) -> (f64, f64, f64) {
@@ -103,7 +103,7 @@ fn main() {
             ("stencil128".into(), gen::stencil9(128, 128, 7)),
         ]
     };
-    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let h = Machine::hier("4:8:2", "1:10:100").unwrap();
 
     let mut records = Vec::new();
     println!("| bench | graph | threads | conn | wall ms | device ms |");

@@ -13,7 +13,7 @@ use heipa::refine::gains::ConnTable;
 use heipa::refine::jet_lp::{Filter, JetLp};
 use heipa::refine::Objective;
 use heipa::rng::Rng;
-use heipa::topology::Hierarchy;
+use heipa::topology::{DistanceOracle, Machine};
 
 fn time_ms(f: impl FnOnce()) -> f64 {
     let t = std::time::Instant::now();
@@ -82,7 +82,7 @@ fn main() {
     println!("| subgraph build (k=4) | {t_sub:.3} | {:.0} |", md as f64 / t_sub / 1e3);
 
     // Conn table + one LP step.
-    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let h = Machine::hier("4:8:2", "1:10:100").unwrap();
     let k = h.k();
     let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
     let mut conn_opt = None;
@@ -92,12 +92,12 @@ fn main() {
     println!("| conn table build | {t_conn:.3} | {:.0} |", md as f64 / t_conn / 1e3);
     let conn = conn_opt.unwrap();
     let mut lp = JetLp::new(n);
-    // Hot path uses the materialized distance matrix (as jet_refine does).
-    let dm = h.distance_matrix();
+    // Hot path uses the dense-row oracle (as jet_refine does for small k).
+    let oracle = DistanceOracle::dense(&h);
     let t_lp = time_ms(|| {
-        let _ = lp.run(&pool, &g, &conn, &part, &Objective::CommMat(&dm), Filter::NonNegative);
+        let _ = lp.run(&pool, &g, &conn, &part, &Objective::Oracle(&oracle), Filter::NonNegative);
     });
-    println!("| jet LP step (k={k}, matrix) | {t_lp:.3} | {:.0} |", md as f64 / t_lp / 1e3);
+    println!("| jet LP step (k={k}, dense oracle) | {t_lp:.3} | {:.0} |", md as f64 / t_lp / 1e3);
     let mut lp2 = JetLp::new(n);
     let t_lp_o = time_ms(|| {
         let _ = lp2.run(&pool, &g, &conn, &part, &Objective::Comm(&h), Filter::NonNegative);

@@ -1,0 +1,74 @@
+//! Machine-model scenarios: torus / fat-tree / dragonfly machines driven
+//! end to end through the engine (CLI-equivalent path), so the
+//! non-hierarchical models stay exercised by CI.
+//!
+//! `HEIPA_BENCH_SMOKE=1` shrinks the graphs to CI size. Writes
+//! `BENCH_models.json` (`HEIPA_BENCH_OUT` overrides).
+
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, EngineConfig, MapSpec};
+use heipa::graph::gen;
+use heipa::harness::scenario_presets;
+use heipa::partition::validate_mapping;
+use std::sync::Arc;
+
+fn main() {
+    let smoke = std::env::var("HEIPA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("HEIPA_BENCH_OUT").unwrap_or_else(|_| "BENCH_models.json".to_string());
+    let engine = Engine::new(EngineConfig { threads: if smoke { 1 } else { 0 }, ..Default::default() });
+
+    let mut rows = Vec::new();
+    println!("| scenario | machine | k | algo | n | J | imb | host ms | device ms |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for sc in scenario_presets() {
+        let machine = sc.machine();
+        let g = Arc::new(if smoke {
+            // CI-sized stand-ins with the same shapes.
+            match sc.name {
+                "torus-halo" => gen::torus3d(8, 8, 4),
+                "fattree-stencil" => gen::stencil9(24, 24, 1),
+                _ => gen::rgg(1_200, gen::rgg_paper_radius(1_200) * 1.2, 9),
+            }
+        } else {
+            sc.graph()
+        });
+        for algo in [Algorithm::GpuHm, Algorithm::GpuIm] {
+            let spec = MapSpec::in_memory(g.clone())
+                .topology(&machine)
+                .algo(Some(algo))
+                .eps(0.03)
+                .seed(1);
+            let r = engine.map(&spec).expect("scenario maps");
+            validate_mapping(&r.mapping, r.n, r.k).expect("valid mapping");
+            assert!(r.comm_cost > 0.0);
+            println!(
+                "| {} | {} | {} | {} | {} | {:.0} | {:.4} | {:.1} | {:.2} |",
+                sc.name,
+                machine.label(),
+                r.k,
+                r.algorithm.name(),
+                r.n,
+                r.comm_cost,
+                r.imbalance,
+                r.host_ms,
+                r.device_ms
+            );
+            rows.push(format!(
+                "{{\"scenario\":\"{}\",\"machine\":\"{}\",\"algo\":\"{}\",\"n\":{},\"k\":{},\"j\":{:.3},\"imbalance\":{:.5},\"host_ms\":{:.3},\"device_ms\":{:.3}}}",
+                sc.name,
+                machine.label(),
+                r.algorithm.name(),
+                r.n,
+                r.k,
+                r.comm_cost,
+                r.imbalance,
+                r.host_ms,
+                r.device_ms
+            ));
+        }
+    }
+    let json = format!("[\n  {}\n]\n", rows.join(",\n  "));
+    std::fs::write(&out_path, json).expect("write bench output");
+    println!("\nwrote {out_path}");
+}

@@ -8,7 +8,7 @@ use heipa::algo::qap;
 use heipa::partition::comm_cost_blocks;
 use heipa::rng::Rng;
 use heipa::runtime::{offload, Runtime};
-use heipa::topology::Hierarchy;
+use heipa::topology::Machine;
 
 fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
@@ -38,25 +38,26 @@ fn main() {
     println!("\n| k | pad | J init | J host | J device | host ms | device ms | device sweeps ms/sweep |");
     println!("|---|---|---|---|---|---|---|---|");
     for (hier, seed) in cases {
-        let h = Hierarchy::parse(hier, "1:10:100").unwrap();
+        let h = Machine::hier(hier, "1:10:100").unwrap();
         let k = h.k();
+        let d = h.oracle();
         let bmat = random_bmat(k, seed);
         let mut rng = Rng::new(seed ^ 0xff);
         let mut sigma0: Vec<u32> = (0..k as u32).collect();
         rng.shuffle(&mut sigma0);
-        let j0 = comm_cost_blocks(&bmat, k, &sigma0, &h);
+        let j0 = comm_cost_blocks(&bmat, k, &sigma0, &d);
 
         let mut s_host = sigma0.clone();
         let t0 = std::time::Instant::now();
-        qap::swap_refine(&bmat, k, &mut s_host, &h, 30);
+        qap::swap_refine(&bmat, k, &mut s_host, &d, 30);
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let j_host = comm_cost_blocks(&bmat, k, &s_host, &h);
+        let j_host = comm_cost_blocks(&bmat, k, &s_host, &d);
 
         let mut s_dev = sigma0.clone();
         let t1 = std::time::Instant::now();
         offload::swap_refine_offload(&rt, &bmat, k, &h, &mut s_dev, 30).unwrap();
         let dev_ms = t1.elapsed().as_secs_f64() * 1e3;
-        let j_dev = comm_cost_blocks(&bmat, k, &s_dev, &h);
+        let j_dev = comm_cost_blocks(&bmat, k, &s_dev, &d);
 
         // Per-sweep kernel cost (after warm-up compile).
         let warm = std::time::Instant::now();

@@ -1,18 +1,20 @@
 //! GPU-HM — hierarchical multisection on the device (paper §4.1,
 //! Algorithms 1 + 2).
 //!
-//! Recursively partitions the task graph along the machine hierarchy with
-//! the Jet partitioner ([`super::jet`]), computing the adaptive imbalance
-//! ε′ (Eq. 2) for every call and building the induced subgraphs entirely
-//! with device kernels (Alg. 1, [`crate::graph::subgraph`]). The PE ids of
-//! the final mapping fall out of the recursion structure.
+//! Recursively partitions the task graph along the machine model's
+//! section schedule with the Jet partitioner ([`super::jet`]), computing
+//! the adaptive imbalance ε′ (Eq. 2) for every call and building the
+//! induced subgraphs entirely with device kernels (Alg. 1,
+//! [`crate::graph::subgraph`]). The PE ids of the final mapping fall out
+//! of the recursion structure. Irregular models (flat schedule `[k]`)
+//! degenerate to a single k-way partition.
 
 use super::jet::{jet_partition, JetPartConfig};
 use crate::graph::subgraph::build_all_subgraphs;
 use crate::graph::CsrGraph;
 use crate::metrics::{Phase, PhaseBreakdown};
 use crate::par::Pool;
-use crate::topology::Hierarchy;
+use crate::topology::{Hierarchy, Machine};
 use crate::{Block, Vertex};
 
 /// GPU-HM configuration: the Jet flavor used for every multisection step.
@@ -41,15 +43,16 @@ impl GpuHmConfig {
 pub fn gpu_hm(
     pool: &Pool,
     g: &CsrGraph,
-    h: &Hierarchy,
+    m: &Machine,
     eps: f64,
     seed: u64,
     cfg: &GpuHmConfig,
     mut phases: Option<&mut PhaseBreakdown>,
 ) -> Vec<Block> {
-    let k = h.k();
+    let k = m.k();
     let total = g.total_vweight();
-    let ell = h.levels();
+    let sched = m.schedule();
+    let ell = sched.len();
     let mut mapping = vec![0 as Block; g.n()];
 
     // Explicit recursion stack: (subgraph, original ids, level, PE offset).
@@ -60,8 +63,8 @@ pub fn gpu_hm(
         if sub.n() == 0 {
             continue;
         }
-        let a_i = h.a[level - 1] as usize;
-        let k_sub: usize = h.a[..level].iter().map(|&x| x as usize).product();
+        let a_i = sched[level - 1] as usize;
+        let k_sub: usize = sched[..level].iter().map(|&x| x as usize).product();
         // Line 2: adaptive imbalance (Eq. 2).
         let eps_prime = if cfg.adaptive {
             Hierarchy::adaptive_imbalance(eps, total, sub.total_vweight().max(1), k, k_sub, level)
@@ -86,7 +89,7 @@ pub fn gpu_hm(
             }
         } else {
             // Lines 7–8: build subgraphs on the device and recurse.
-            let span = h.pes_per_block_at_level(level) as Block;
+            let span = m.pes_per_block_at_level(level) as Block;
             let subs = match phases.as_deref_mut() {
                 Some(p) => p.time(Phase::Misc, || build_all_subgraphs(pool, &sub, &part, a_i)),
                 None => build_all_subgraphs(pool, &sub, &part, a_i),
@@ -110,7 +113,7 @@ mod tests {
     #[test]
     fn balanced_valid_mapping_paper_hierarchy() {
         let g = gen::grid2d(32, 32, false);
-        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:8:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
         let m = gpu_hm(&pool, &g, &h, 0.03, 1, &GpuHmConfig::default_flavor(), None);
         validate_mapping(&m, g.n(), h.k()).unwrap();
@@ -124,7 +127,7 @@ mod tests {
     #[test]
     fn competitive_with_serial_sharedmap() {
         let g = gen::stencil9(35, 35, 2);
-        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let h = Machine::hier("4:4", "1:10").unwrap();
         let pool = Pool::new(1);
         let m_gpu = gpu_hm(&pool, &g, &h, 0.03, 3, &GpuHmConfig::ultra(), None);
         let m_cpu = super::super::sharedmap::sharedmap(
@@ -138,7 +141,7 @@ mod tests {
     #[test]
     fn ultra_not_worse_than_default() {
         let g = gen::delaunay_like(45, 4);
-        let h = Hierarchy::parse("4:8", "1:10").unwrap();
+        let h = Machine::hier("4:8", "1:10").unwrap();
         let pool = Pool::new(1);
         let jd = comm_cost(&g, &gpu_hm(&pool, &g, &h, 0.03, 5, &GpuHmConfig::default_flavor(), None), &h);
         let ju = comm_cost(&g, &gpu_hm(&pool, &g, &h, 0.03, 5, &GpuHmConfig::ultra(), None), &h);
@@ -149,7 +152,7 @@ mod tests {
     fn partitioning_dominates_runtime() {
         // Paper: subgraph construction < 5% of GPU-HM runtime.
         let g = gen::rgg(6_000, 0.04, 6);
-        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:8:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
         let mut phases = PhaseBreakdown::default();
         let _ = gpu_hm(&pool, &g, &h, 0.03, 1, &GpuHmConfig::default_flavor(), Some(&mut phases));

@@ -17,7 +17,7 @@ use crate::partition::l_max;
 use crate::refine::jet_loop::{jet_refine_with, JetConfig};
 use crate::refine::jet_lp::Filter;
 use crate::refine::{Objective, RefineWorkspace};
-use crate::topology::Hierarchy;
+use crate::topology::Machine;
 use crate::{Block, Vertex};
 
 /// GPU-IM configuration.
@@ -58,13 +58,13 @@ impl Default for GpuImConfig {
 pub fn gpu_im(
     pool: &Pool,
     g: &CsrGraph,
-    h: &Hierarchy,
+    m: &Machine,
     eps: f64,
     seed: u64,
     cfg: &GpuImConfig,
     mut phases: Option<&mut PhaseBreakdown>,
 ) -> Vec<Block> {
-    let k = h.k();
+    let k = m.k();
     let total = g.total_vweight();
     let lmax = l_max(total, k, eps);
     let coarsest = (cfg.coarsest_factor * k).max(64);
@@ -127,7 +127,7 @@ pub fn gpu_im(
     // offers no advantage at this size).
     let mut mapping = timed_cpu!(
         Phase::InitialPartitioning,
-        sharedmap(&cur, h, eps, seed ^ 0xabcd, &cfg.init)
+        sharedmap(&cur, m, eps, seed ^ 0xabcd, &cfg.init)
     );
 
     let jet_cfg = JetConfig {
@@ -145,7 +145,7 @@ pub fn gpu_im(
     // Refine the coarsest level.
     timed!(Phase::RefineRebalance, {
         jet_refine_with(
-            pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(h), &jet_cfg, &mut ws,
+            pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(m), &jet_cfg, &mut ws,
         )
     });
 
@@ -163,7 +163,7 @@ pub fn gpu_im(
         });
         timed!(Phase::RefineRebalance, {
             jet_refine_with(
-                pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(h), &jet_cfg,
+                pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(m), &jet_cfg,
                 &mut ws,
             )
         });
@@ -183,7 +183,7 @@ mod tests {
     #[test]
     fn balanced_valid_mapping() {
         let g = gen::grid2d(40, 40, false);
-        let h = Hierarchy::parse("4:8", "1:10").unwrap();
+        let h = Machine::hier("4:8", "1:10").unwrap();
         let pool = Pool::new(1);
         let m = gpu_im(&pool, &g, &h, 0.03, 1, &GpuImConfig::default(), None);
         validate_mapping(&m, g.n(), h.k()).unwrap();
@@ -197,7 +197,7 @@ mod tests {
     #[test]
     fn quality_between_random_and_sharedmap() {
         let g = gen::delaunay_like(60, 3);
-        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:8:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
         let m = gpu_im(&pool, &g, &h, 0.03, 2, &GpuImConfig::default(), None);
         let j_im = comm_cost(&g, &m, &h);
@@ -214,7 +214,7 @@ mod tests {
     #[test]
     fn table2_phases_all_present() {
         let g = gen::rgg(8_000, 0.04, 5);
-        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:8:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
         let mut phases = PhaseBreakdown::default();
         let _ = gpu_im(&pool, &g, &h, 0.03, 1, &GpuImConfig::default(), Some(&mut phases));
@@ -228,7 +228,7 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let g = gen::stencil9(25, 25, 7);
-        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let h = Machine::hier("4:4", "1:10").unwrap();
         let pool = Pool::new(1);
         let a = gpu_im(&pool, &g, &h, 0.03, 9, &GpuImConfig::default(), None);
         let b = gpu_im(&pool, &g, &h, 0.03, 9, &GpuImConfig::default(), None);

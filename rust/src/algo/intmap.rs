@@ -14,7 +14,7 @@ use crate::refine::{
     lp_serial::{force_balance_serial, lp_refine_serial},
     Objective,
 };
-use crate::topology::Hierarchy;
+use crate::topology::Machine;
 use crate::{Block, Vertex};
 
 /// Configuration of the serial integrated mapper.
@@ -54,8 +54,8 @@ impl IntMapConfig {
 }
 
 /// Serial integrated mapping. Returns the vertex → PE mapping.
-pub fn intmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &IntMapConfig) -> Vec<Block> {
-    let k = h.k();
+pub fn intmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &IntMapConfig) -> Vec<Block> {
+    let k = m.k();
     let total = g.total_vweight();
     let lmax = l_max(total, k, eps);
     let coarsest = (cfg.coarsest_factor * k).max(cfg.coarsest_min);
@@ -79,9 +79,9 @@ pub fn intmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &IntMapConf
     // Initial mapping: hierarchical multisection on the coarsest graph.
     // Coarse vertex weights are chunky relative to L_max, so repair the
     // balance explicitly before refining.
-    let mut mapping = sharedmap(&cur, h, eps, seed ^ 0xabcd, &cfg.init);
-    force_balance_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(h), seed ^ 2);
-    lp_refine_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(h), cfg.lp_rounds, seed ^ 1);
+    let mut mapping = sharedmap(&cur, m, eps, seed ^ 0xabcd, &cfg.init);
+    force_balance_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), seed ^ 2);
+    lp_refine_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), cfg.lp_rounds, seed ^ 1);
 
     // Uncoarsening with J-objective label propagation.
     for lev in (0..maps.len()).rev() {
@@ -92,8 +92,8 @@ pub fn intmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &IntMapConf
             fine_mapping[v] = mapping[map[v] as usize];
         }
         let rounds = if lev == 0 { cfg.lp_rounds + cfg.finest_extra_rounds } else { cfg.lp_rounds };
-        force_balance_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(h), seed ^ 3);
-        lp_refine_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(h), rounds, seed ^ (lev as u64) << 16);
+        force_balance_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), seed ^ 3);
+        lp_refine_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), rounds, seed ^ (lev as u64) << 16);
         mapping = fine_mapping;
     }
     mapping
@@ -108,7 +108,7 @@ mod tests {
     #[test]
     fn balanced_valid_mapping() {
         let g = gen::grid2d(30, 30, false);
-        let h = Hierarchy::parse("4:8", "1:10").unwrap();
+        let h = Machine::hier("4:8", "1:10").unwrap();
         let m = intmap(&g, &h, 0.03, 1, &IntMapConfig::fast());
         validate_mapping(&m, g.n(), h.k()).unwrap();
         assert!(is_balanced(&g, &m, h.k(), 0.035));
@@ -119,7 +119,7 @@ mod tests {
         // The paper orders quality SharedMap-S < IntMap-S (worse) — IntMap
         // should land within ~1.4× of SharedMap-S on mesh graphs.
         let g = gen::delaunay_like(40, 2);
-        let h = Hierarchy::parse("4:4:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:4:2", "1:10:100").unwrap();
         let j_im = comm_cost(&g, &intmap(&g, &h, 0.03, 3, &IntMapConfig::strong()), &h);
         let j_sm = comm_cost(
             &g,
@@ -132,7 +132,7 @@ mod tests {
     #[test]
     fn strong_not_worse_than_fast() {
         let g = gen::stencil9(25, 25, 4);
-        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let h = Machine::hier("4:4", "1:10").unwrap();
         let jf = comm_cost(&g, &intmap(&g, &h, 0.03, 5, &IntMapConfig::fast()), &h);
         let js = comm_cost(&g, &intmap(&g, &h, 0.03, 5, &IntMapConfig::strong()), &h);
         assert!(js <= jf * 1.10, "strong {js} vs fast {jf}");
@@ -141,7 +141,7 @@ mod tests {
     #[test]
     fn works_when_graph_smaller_than_coarsest_bound() {
         let g = gen::grid2d(10, 10, false);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let m = intmap(&g, &h, 0.10, 2, &IntMapConfig::fast());
         validate_mapping(&m, g.n(), 4).unwrap();
     }

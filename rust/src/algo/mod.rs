@@ -11,7 +11,7 @@ pub mod sharedmap;
 use crate::engine::{EngineCtx, MapOutcome, MapSpec};
 use crate::graph::CsrGraph;
 use crate::par::Pool;
-use crate::topology::Hierarchy;
+use crate::topology::Machine;
 
 /// Every algorithm in the paper's evaluation (§5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -101,14 +101,14 @@ pub fn run_algorithm(
     algo: Algorithm,
     pool: &Pool,
     g: &CsrGraph,
-    h: &Hierarchy,
+    m: &Machine,
     eps: f64,
     seed: u64,
 ) -> MapOutcome {
     let ctx = EngineCtx::host_only(pool.clone());
     // Solvers never touch spec.graph; the caller already resolved `g`.
     let spec = MapSpec::named("<caller-resolved>").eps(eps).seed(seed);
-    crate::engine::solver(algo).solve(&ctx, g, h, &spec)
+    crate::engine::solver(algo).solve(&ctx, g, m, &spec)
 }
 
 #[cfg(test)]
@@ -128,7 +128,7 @@ mod tests {
     #[test]
     fn deprecated_shim_still_runs_every_algorithm() {
         let g = gen::grid2d(20, 20, false);
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
         for algo in Algorithm::all() {
             let r = run_algorithm(algo, &pool, &g, &h, 0.03, 1);
@@ -145,7 +145,7 @@ mod tests {
     fn mapping_quality_order_holds_roughly() {
         // SharedMap-S should beat plain Jet (edge-cut) on J.
         let g = gen::stencil9(28, 28, 1);
-        let h = Hierarchy::parse("4:4:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:4:2", "1:10:100").unwrap();
         let pool = Pool::new(1);
         let sm = run_algorithm(Algorithm::SharedMapS, &pool, &g, &h, 0.03, 2);
         let jet = run_algorithm(Algorithm::Jet, &pool, &g, &h, 0.03, 2);

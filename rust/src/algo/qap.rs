@@ -7,11 +7,13 @@
 //!   Schulz–Träff): sweep all `O(k²)` swaps, apply improving ones, repeat
 //!   until a sweep finds nothing (bounded number of sweeps).
 
-use crate::topology::Hierarchy;
+use crate::topology::DistanceOracle;
 use crate::Block;
 
-/// Greedy initial assignment `sigma : block → PE`.
-pub fn greedy_assignment(bmat: &[f64], k: usize, h: &Hierarchy) -> Vec<Block> {
+/// Greedy initial assignment `sigma : block → PE`. Distances come from
+/// the machine's [`DistanceOracle`] — candidate-PE rows are fetched once
+/// per placement, so large machines never materialize `k × k`.
+pub fn greedy_assignment(bmat: &[f64], k: usize, d: &DistanceOracle) -> Vec<Block> {
     assert_eq!(bmat.len(), k * k);
     let mut sigma = vec![u32::MAX as Block; k];
     let mut pe_used = vec![false; k];
@@ -52,10 +54,11 @@ pub fn greedy_assignment(bmat: &[f64], k: usize, h: &Hierarchy) -> Vec<Block> {
             if pe_used[pe] {
                 continue;
             }
+            let row = d.row(pe as Block);
             let mut cost = 0.0;
             for o in 0..k {
                 if placed[o] {
-                    cost += (bmat[next * k + o] + bmat[o * k + next]) * h.distance(pe as Block, sigma[o]);
+                    cost += (bmat[next * k + o] + bmat[o * k + next]) * row.get(sigma[o]);
                 }
             }
             if cost < best_cost {
@@ -70,11 +73,15 @@ pub fn greedy_assignment(bmat: &[f64], k: usize, h: &Hierarchy) -> Vec<Block> {
     sigma
 }
 
-/// Cost delta of swapping the PEs of blocks `x` and `y` (O(k)). Public so
-/// the offloaded search ([`crate::runtime::offload`]) can re-verify device
-/// candidates before applying them.
-pub fn swap_delta(bmat: &[f64], k: usize, sigma: &[Block], h: &Hierarchy, x: usize, y: usize) -> f64 {
+/// Cost delta of swapping the PEs of blocks `x` and `y` (O(k)). The two
+/// rows `D[σx, ·]` and `D[σy, ·]` are fetched once from the oracle and
+/// scanned — the access pattern the blocked row cache is built for.
+/// Public so the offloaded search ([`crate::runtime::offload`]) can
+/// re-verify device candidates before applying them.
+pub fn swap_delta(bmat: &[f64], k: usize, sigma: &[Block], d: &DistanceOracle, x: usize, y: usize) -> f64 {
     let (px, py) = (sigma[x], sigma[y]);
+    let rx = d.row(px);
+    let ry = d.row(py);
     let mut delta = 0.0;
     for o in 0..k {
         if o == x || o == y {
@@ -83,8 +90,8 @@ pub fn swap_delta(bmat: &[f64], k: usize, sigma: &[Block], h: &Hierarchy, x: usi
         let po = sigma[o];
         let wxo = bmat[x * k + o] + bmat[o * k + x];
         let wyo = bmat[y * k + o] + bmat[o * k + y];
-        delta += wxo * (h.distance(py, po) - h.distance(px, po));
-        delta += wyo * (h.distance(px, po) - h.distance(py, po));
+        delta += wxo * (ry.get(po) - rx.get(po));
+        delta += wyo * (rx.get(po) - ry.get(po));
     }
     // x–y term is invariant under the swap (distance symmetric).
     delta
@@ -92,7 +99,13 @@ pub fn swap_delta(bmat: &[f64], k: usize, sigma: &[Block], h: &Hierarchy, x: usi
 
 /// Pairwise-swap local search; refines `sigma` in place. Returns total
 /// improvement (negative delta sum).
-pub fn swap_refine(bmat: &[f64], k: usize, sigma: &mut [Block], h: &Hierarchy, max_sweeps: usize) -> f64 {
+pub fn swap_refine(
+    bmat: &[f64],
+    k: usize,
+    sigma: &mut [Block],
+    d: &DistanceOracle,
+    max_sweeps: usize,
+) -> f64 {
     let mut total = 0.0;
     for _ in 0..max_sweeps {
         let mut improved = false;
@@ -100,10 +113,10 @@ pub fn swap_refine(bmat: &[f64], k: usize, sigma: &mut [Block], h: &Hierarchy, m
             // Prune: blocks with no communication never benefit from swaps
             // with other silent blocks; their row sum is zero.
             for y in x + 1..k {
-                let d = swap_delta(bmat, k, sigma, h, x, y);
-                if d < -1e-12 {
+                let delta = swap_delta(bmat, k, sigma, d, x, y);
+                if delta < -1e-12 {
                     sigma.swap(x, y);
-                    total -= d;
+                    total -= delta;
                     improved = true;
                 }
             }
@@ -116,9 +129,9 @@ pub fn swap_refine(bmat: &[f64], k: usize, sigma: &mut [Block], h: &Hierarchy, m
 }
 
 /// Full one-to-one mapping: greedy + swap refinement.
-pub fn map_blocks_to_pes(bmat: &[f64], k: usize, h: &Hierarchy, sweeps: usize) -> Vec<Block> {
-    let mut sigma = greedy_assignment(bmat, k, h);
-    swap_refine(bmat, k, &mut sigma, h, sweeps);
+pub fn map_blocks_to_pes(bmat: &[f64], k: usize, d: &DistanceOracle, sweeps: usize) -> Vec<Block> {
+    let mut sigma = greedy_assignment(bmat, k, d);
+    swap_refine(bmat, k, &mut sigma, d, sweeps);
     sigma
 }
 
@@ -127,6 +140,7 @@ mod tests {
     use super::*;
     use crate::partition::comm_cost_blocks;
     use crate::rng::Rng;
+    use crate::topology::Machine;
 
     fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
         let mut rng = Rng::new(seed);
@@ -143,10 +157,11 @@ mod tests {
 
     #[test]
     fn sigma_is_a_permutation() {
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let k = h.k();
+        let d = h.oracle();
         let bmat = random_bmat(k, 1);
-        let sigma = map_blocks_to_pes(&bmat, k, &h, 10);
+        let sigma = map_blocks_to_pes(&bmat, k, &d, 10);
         let mut seen = vec![false; k];
         for &pe in &sigma {
             assert!(!seen[pe as usize], "duplicate PE");
@@ -156,13 +171,14 @@ mod tests {
 
     #[test]
     fn swap_refine_never_worsens() {
-        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let h = Machine::hier("4:4", "1:10").unwrap();
         let k = h.k();
+        let d = h.oracle();
         let bmat = random_bmat(k, 2);
-        let mut sigma = greedy_assignment(&bmat, k, &h);
-        let before = comm_cost_blocks(&bmat, k, &sigma, &h);
-        let gain = swap_refine(&bmat, k, &mut sigma, &h, 10);
-        let after = comm_cost_blocks(&bmat, k, &sigma, &h);
+        let mut sigma = greedy_assignment(&bmat, k, &d);
+        let before = comm_cost_blocks(&bmat, k, &sigma, &d);
+        let gain = swap_refine(&bmat, k, &mut sigma, &d, 10);
+        let after = comm_cost_blocks(&bmat, k, &sigma, &d);
         assert!(after <= before + 1e-9);
         assert!((before - after - gain).abs() < 1e-6 * before.max(1.0), "gain accounting");
     }
@@ -170,8 +186,9 @@ mod tests {
     #[test]
     fn beats_identity_on_clustered_traffic() {
         // Blocks 0/5 talk heavily; identity puts them on distant PEs.
-        let h = Hierarchy::parse("2:4", "1:100").unwrap();
+        let h = Machine::hier("2:4", "1:100").unwrap();
         let k = h.k();
+        let d = h.oracle();
         let mut bmat = vec![0.0; k * k];
         let hot = [(0usize, 5usize), (1, 6), (2, 7)];
         for &(x, y) in &hot {
@@ -179,9 +196,9 @@ mod tests {
             bmat[y * k + x] = 100.0;
         }
         let identity: Vec<Block> = (0..k as Block).collect();
-        let j_id = comm_cost_blocks(&bmat, k, &identity, &h);
-        let sigma = map_blocks_to_pes(&bmat, k, &h, 10);
-        let j_opt = comm_cost_blocks(&bmat, k, &sigma, &h);
+        let j_id = comm_cost_blocks(&bmat, k, &identity, &d);
+        let sigma = map_blocks_to_pes(&bmat, k, &d, 10);
+        let j_opt = comm_cost_blocks(&bmat, k, &sigma, &d);
         assert!(j_opt < j_id, "{j_opt} !< {j_id}");
         // The three hot pairs can all be placed intra-processor: cost 2·100·1 each.
         assert!((j_opt - 600.0).abs() < 1e-9, "expected optimal 600, got {j_opt}");
@@ -189,11 +206,27 @@ mod tests {
 
     #[test]
     fn greedy_handles_silent_blocks() {
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let bmat = vec![0.0; 16];
-        let sigma = greedy_assignment(&bmat, 4, &h);
+        let sigma = greedy_assignment(&bmat, 4, &h.oracle());
         let mut s = sigma.clone();
         s.sort_unstable();
         assert_eq!(s, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn oracle_backends_agree_on_swap_refine() {
+        // The blocked row cache must drive the search to the same result
+        // as the dense matrix (same deltas → same greedy trajectory).
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
+        let k = h.k();
+        let bmat = random_bmat(k, 7);
+        let dense = crate::topology::DistanceOracle::dense(&h);
+        let blocked = crate::topology::DistanceOracle::blocked(&h, 1);
+        let mut s_dense: Vec<Block> = (0..k as Block).collect();
+        let mut s_blocked = s_dense.clone();
+        swap_refine(&bmat, k, &mut s_dense, &dense, 10);
+        swap_refine(&bmat, k, &mut s_blocked, &blocked, 10);
+        assert_eq!(s_dense, s_blocked);
     }
 }

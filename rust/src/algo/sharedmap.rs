@@ -1,8 +1,9 @@
 //! SharedMap-like serial hierarchical multisection (Schulz & Woydt 2025) —
 //! the state-of-the-art CPU baseline of the paper's evaluation.
 //!
-//! Recursively partitions the task graph along the machine hierarchy
-//! (islands → racks → … → PEs) with the **adaptive imbalance** ε′ of
+//! Recursively partitions the task graph along the machine model's
+//! section schedule (islands → racks → … → PEs) with the **adaptive
+//! imbalance** ε′ of
 //! Eq. 2, which guarantees the final k-way mapping is ε-balanced. The
 //! Fast/Strong configurations trade multilevel effort (tries, FM passes)
 //! and final refinement for speed, mirroring SharedMap's `-F`/`-S`.
@@ -11,7 +12,7 @@ use crate::graph::subgraph::build_all_subgraphs_serial;
 use crate::graph::CsrGraph;
 use crate::initial::{recursive_kway, MlConfig};
 use crate::refine::{lp_serial::lp_refine_serial, Objective};
-use crate::topology::Hierarchy;
+use crate::topology::{Hierarchy, Machine};
 use crate::{Block, Vertex};
 
 /// Configuration for the serial multisection solver.
@@ -37,12 +38,13 @@ impl SharedMapConfig {
 
 /// Serial hierarchical multisection with adaptive imbalance.
 /// Returns the vertex → PE mapping.
-pub fn sharedmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &SharedMapConfig) -> Vec<Block> {
-    let k = h.k();
+pub fn sharedmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &SharedMapConfig) -> Vec<Block> {
+    let k = m.k();
     let total = g.total_vweight();
     let mut mapping = vec![0 as Block; g.n()];
     // Work stack: (subgraph, original vertex ids, level, PE offset).
-    let ell = h.levels();
+    let sched = m.schedule();
+    let ell = sched.len();
     let mut stack: Vec<(CsrGraph, Vec<Vertex>, usize, Block)> = vec![(
         g.clone(),
         (0..g.n() as Vertex).collect(),
@@ -54,8 +56,8 @@ pub fn sharedmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &SharedM
         if sub.n() == 0 {
             continue;
         }
-        let a_i = h.a[level - 1] as usize;
-        let k_sub: usize = h.a[..level].iter().map(|&x| x as usize).product();
+        let a_i = sched[level - 1] as usize;
+        let k_sub: usize = sched[..level].iter().map(|&x| x as usize).product();
         let eps_prime = if cfg.adaptive {
             Hierarchy::adaptive_imbalance(eps, total, sub.total_vweight().max(1), k, k_sub, level)
                 .max(0.001)
@@ -69,7 +71,7 @@ pub fn sharedmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &SharedM
                 mapping[v as usize] = pe_off + part[i];
             }
         } else {
-            let span = h.pes_per_block_at_level(level) as Block;
+            let span = m.pes_per_block_at_level(level) as Block;
             let subs = build_all_subgraphs_serial(&sub, &part, a_i);
             for (b, s) in subs.into_iter().enumerate() {
                 let sub_orig: Vec<Vertex> =
@@ -87,7 +89,7 @@ pub fn sharedmap(g: &CsrGraph, h: &Hierarchy, eps: f64, seed: u64, cfg: &SharedM
             &mut mapping,
             k,
             lmax,
-            &Objective::Comm(h),
+            &Objective::Comm(m),
             cfg.final_refine_rounds,
             seed ^ 0xfeed,
         );
@@ -104,7 +106,7 @@ mod tests {
     #[test]
     fn produces_balanced_mapping() {
         let g = gen::grid2d(24, 24, false);
-        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:8:2", "1:10:100").unwrap();
         let m = sharedmap(&g, &h, 0.03, 1, &SharedMapConfig::fast());
         validate_mapping(&m, g.n(), h.k()).unwrap();
         assert!(is_balanced(&g, &m, h.k(), 0.035), "imbalance {}", crate::partition::imbalance(&g, &m, h.k()));
@@ -113,7 +115,7 @@ mod tests {
     #[test]
     fn beats_random_mapping_substantially() {
         let g = gen::stencil9(30, 30, 3);
-        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let h = Machine::hier("4:4", "1:10").unwrap();
         let m = sharedmap(&g, &h, 0.03, 2, &SharedMapConfig::fast());
         let mut rng = crate::rng::Rng::new(3);
         let random: Vec<Block> = (0..g.n()).map(|_| rng.below(h.k() as u64) as Block).collect();
@@ -125,7 +127,7 @@ mod tests {
     #[test]
     fn strong_at_least_as_good_as_fast() {
         let g = gen::grid2d(20, 20, false);
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let jf = comm_cost(&g, &sharedmap(&g, &h, 0.03, 5, &SharedMapConfig::fast()), &h);
         let js = comm_cost(&g, &sharedmap(&g, &h, 0.03, 5, &SharedMapConfig::strong()), &h);
         assert!(js <= jf * 1.10, "strong {js} much worse than fast {jf}");
@@ -134,7 +136,7 @@ mod tests {
     #[test]
     fn single_level_hierarchy_is_plain_partitioning() {
         let g = gen::grid2d(12, 12, false);
-        let h = Hierarchy::parse("4", "1").unwrap();
+        let h = Machine::hier("4", "1").unwrap();
         let m = sharedmap(&g, &h, 0.05, 7, &SharedMapConfig::fast());
         validate_mapping(&m, g.n(), 4).unwrap();
         assert!(is_balanced(&g, &m, 4, 0.06));
@@ -143,7 +145,7 @@ mod tests {
     #[test]
     fn all_pes_used_on_big_enough_graph() {
         let g = gen::rgg(4_000, 0.04, 9);
-        let h = Hierarchy::parse("4:8", "1:10").unwrap();
+        let h = Machine::hier("4:8", "1:10").unwrap();
         let m = sharedmap(&g, &h, 0.03, 4, &SharedMapConfig::fast());
         let mut used = vec![false; h.k()];
         for &pe in &m {

@@ -8,7 +8,7 @@
 
 use crate::algo::Algorithm;
 use crate::engine::{EngineConfig, MapSpec, Refinement};
-use crate::topology::Hierarchy;
+use crate::topology::{Hierarchy, Machine};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -23,6 +23,9 @@ pub struct RunConfig {
     pub hierarchy: String,
     /// Distance vector, e.g. `1:10:100`.
     pub distance: String,
+    /// Machine-model spec (`topology = torus:4x4x4`); overrides
+    /// `hierarchy`/`distance` when set.
+    pub topology: Option<String>,
     /// Imbalance ε.
     pub eps: f64,
     /// Algorithm to run; `None` = auto-route (`algorithm = auto`).
@@ -47,6 +50,7 @@ impl Default for RunConfig {
             graph: None,
             hierarchy: "4:8:6".into(),
             distance: "1:10:100".into(),
+            topology: None,
             eps: 0.03,
             algorithm: Some(Algorithm::GpuIm),
             refinement: Refinement::Standard,
@@ -64,10 +68,16 @@ impl RunConfig {
         Hierarchy::parse(&self.hierarchy, &self.distance)
     }
 
+    /// Resolve the machine model: the `topology` key when present, the
+    /// `hierarchy`/`distance` pair otherwise.
+    pub fn machine(&self) -> Result<Machine> {
+        Machine::resolve(self.topology.as_deref(), &self.hierarchy, &self.distance)
+    }
+
     /// Lower into a [`MapSpec`] for `graph` (a registry name or METIS
     /// path — typically `self.graph` or a CLI override).
     pub fn to_spec(&self, graph: &str) -> MapSpec {
-        MapSpec::named(graph)
+        let mut spec = MapSpec::named(graph)
             .hierarchy(self.hierarchy.clone())
             .distance(self.distance.clone())
             .eps(self.eps)
@@ -75,7 +85,9 @@ impl RunConfig {
             .algo(self.algorithm)
             .refinement(self.refinement)
             .polish(self.polish)
-            .options(self.options.clone())
+            .options(self.options.clone());
+        spec.topology = self.topology.clone();
+        spec
     }
 
     /// Engine construction parameters carried by this config.
@@ -102,6 +114,7 @@ impl RunConfig {
                 "graph" => cfg.graph = Some(value),
                 "hierarchy" => cfg.hierarchy = value,
                 "distance" => cfg.distance = value,
+                "topology" => cfg.topology = Some(value),
                 "eps" => cfg.eps = value.parse().context("eps")?,
                 "algorithm" => {
                     cfg.algorithm = if value == "auto" {
@@ -135,7 +148,10 @@ impl RunConfig {
         if cfg.seeds.is_empty() {
             bail!("seeds must not be empty");
         }
-        cfg.parse_hierarchy()?; // validate
+        // Validate the machine description; hierarchy/distance stay
+        // individually well-formed even when topology overrides them.
+        cfg.parse_hierarchy()?;
+        cfg.machine()?;
         Ok(cfg)
     }
 }
@@ -207,6 +223,18 @@ mod tests {
         assert_eq!(spec.opt_bool("adaptive"), Some(false));
         assert!(spec.polish);
         assert_eq!(spec.algorithm, None);
+    }
+
+    #[test]
+    fn topology_key_lowers_to_spec() {
+        let cfg = RunConfig::from_kv_text("graph = rgg15\ntopology = torus:4x4x4\n").unwrap();
+        assert_eq!(cfg.machine().unwrap().k(), 64);
+        let spec = cfg.to_spec("rgg15");
+        assert_eq!(spec.topology.as_deref(), Some("torus:4x4x4"));
+        assert_eq!(spec.machine().unwrap().k(), 64);
+        // Bad specs are rejected at config load.
+        assert!(RunConfig::from_kv_text("topology = torus:0x4").is_err());
+        assert!(RunConfig::from_kv_text("topology = bogus").is_err());
     }
 
     #[test]

@@ -36,6 +36,9 @@ pub struct MapRequest {
     pub algorithm: Option<Algorithm>,
     pub hierarchy: String,
     pub distance: String,
+    /// Machine-model spec (`topology=torus:4x4x4` on the wire); overrides
+    /// `hierarchy`/`distance` when set.
+    pub topology: Option<String>,
     pub eps: f64,
     pub seed: u64,
     pub refinement: Refinement,
@@ -54,6 +57,7 @@ impl Default for MapRequest {
             algorithm: None,
             hierarchy: "4:8:6".into(),
             distance: "1:10:100".into(),
+            topology: None,
             eps: 0.03,
             seed: 1,
             refinement: Refinement::Standard,
@@ -67,7 +71,7 @@ impl Default for MapRequest {
 impl MapRequest {
     /// Lower into the engine's spec.
     pub fn to_spec(&self) -> MapSpec {
-        MapSpec::named(self.instance.clone())
+        let mut spec = MapSpec::named(self.instance.clone())
             .hierarchy(self.hierarchy.clone())
             .distance(self.distance.clone())
             .eps(self.eps)
@@ -76,21 +80,34 @@ impl MapRequest {
             .refinement(self.refinement)
             .polish(self.polish)
             .return_mapping(self.return_mapping)
-            .options(self.options.clone())
+            .options(self.options.clone());
+        spec.topology = self.topology.clone();
+        spec
     }
 
-    /// Lift a spec onto the wire. Fails for in-memory graphs (the line
-    /// protocol cannot carry them); multi-seed specs lower to their
-    /// primary seed.
+    /// Lift a spec onto the wire. Fails for in-memory graphs and for
+    /// machines whose spec string does not round-trip on another host
+    /// (e.g. an in-memory `MatrixModel` — the line protocol cannot carry
+    /// either); multi-seed specs lower to their primary seed.
     pub fn from_spec(spec: &MapSpec) -> Result<MapRequest> {
         let GraphSource::Named(instance) = &spec.graph else {
             bail!("in-memory graphs cannot be sent over the wire");
         };
+        if let Some(m) = spec.cached_machine() {
+            if !m.spec_round_trips() {
+                bail!(
+                    "machine `{}` cannot be sent over the wire (its spec string does not \
+                     round-trip on another host; write it to a file and use file:PATH)",
+                    m.label()
+                );
+            }
+        }
         Ok(MapRequest {
             instance: instance.clone(),
             algorithm: spec.algorithm,
             hierarchy: spec.hierarchy.clone(),
             distance: spec.distance.clone(),
+            topology: spec.topology.clone(),
             eps: spec.eps,
             seed: spec.primary_seed(),
             refinement: spec.refinement,
@@ -137,6 +154,7 @@ mod tests {
             algorithm: Some(Algorithm::GpuIm),
             hierarchy: "4:8:2".into(),
             distance: "1:10:100".into(),
+            topology: Some("torus:4x4".into()),
             eps: 0.05,
             seed: 9,
             refinement: Refinement::Strong,
@@ -154,5 +172,19 @@ mod tests {
     fn in_memory_specs_do_not_lower() {
         let g = std::sync::Arc::new(crate::graph::gen::grid2d(4, 4, false));
         assert!(MapRequest::from_spec(&MapSpec::in_memory(g)).is_err());
+    }
+
+    #[test]
+    fn non_round_trippable_machines_do_not_lower() {
+        // An in-memory matrix model's `file:inline` spec would resolve to
+        // a different (or missing) machine on the server — reject it.
+        let model = crate::topology::MatrixModel::from_text("2\n0 1\n1 0", "inline").unwrap();
+        let m = crate::topology::Machine::from_model(model).unwrap();
+        let spec = MapSpec::named("rgg15").topology(&m);
+        let err = MapRequest::from_spec(&spec).unwrap_err();
+        assert!(err.to_string().contains("round-trip"), "{err}");
+        // Parse-able specs still lower fine.
+        let t = crate::topology::Machine::parse_spec("torus:4x4").unwrap();
+        assert!(MapRequest::from_spec(&MapSpec::named("rgg15").topology(&t)).is_ok());
     }
 }

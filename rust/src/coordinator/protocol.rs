@@ -5,6 +5,7 @@
 //! ```text
 //! map instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.03 seed=1 polish=1
 //! map instance=del15 algorithm=auto refinement=strong opt.adaptive=0 mapping=1
+//! map instance=rgg15 topology=torus:4x4x4 seed=2
 //! metrics
 //! ping
 //! ```
@@ -51,6 +52,7 @@ pub fn parse_command(line: &str) -> Result<Command> {
                     }
                     "hierarchy" => req.hierarchy = v.to_string(),
                     "distance" => req.distance = v.to_string(),
+                    "topology" => req.topology = Some(v.to_string()),
                     "eps" => req.eps = v.parse()?,
                     "seed" => req.seed = v.parse()?,
                     "refinement" => req.refinement = Refinement::from_name(v)?,
@@ -176,6 +178,16 @@ mod tests {
         assert!(parse_command("map instance=x bad").is_err());
         assert!(parse_command("map instance=x algorithm=nope").is_err());
         assert!(parse_command("map instance=x refinement=nope").is_err());
+    }
+
+    #[test]
+    fn parses_topology_key() {
+        let Command::Map(req) = parse_command("map instance=x topology=torus:4x4x4").unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(req.topology.as_deref(), Some("torus:4x4x4"));
+        assert_eq!(req.to_spec().machine().unwrap().k(), 64);
     }
 
     #[test]

@@ -172,6 +172,21 @@ mod tests {
     }
 
     #[test]
+    fn maps_onto_a_topology_spec_machine() {
+        let svc = Service::start("artifacts".into(), 1);
+        let mut req = small_request("sten_cop20k");
+        req.topology = Some("torus:2x2x2".into());
+        let resp = svc.submit(req).unwrap();
+        assert_eq!(resp.outcome.k, 8);
+        assert!(resp.outcome.comm_cost > 0.0);
+        // A bad spec fails the request, not the worker.
+        let mut bad = small_request("sten_cop20k");
+        bad.topology = Some("torus:0x2".into());
+        assert!(svc.submit(bad).is_err());
+        assert_eq!(svc.metrics().failures, 1);
+    }
+
+    #[test]
     fn unknown_instance_fails_cleanly() {
         let svc = Service::start("artifacts".into(), 1);
         let out = svc.submit(small_request("no_such_instance"));

@@ -30,7 +30,7 @@ use crate::metrics::PhaseBreakdown;
 use crate::par::Pool;
 use crate::partition::{block_comm_matrix, comm_cost_blocks};
 use crate::runtime::{offload, Runtime};
-use crate::topology::Hierarchy;
+use crate::topology::{DistanceOracle, Machine};
 use crate::Block;
 use anyhow::{Context, Result};
 use std::cell::{OnceCell, RefCell};
@@ -74,7 +74,7 @@ pub trait Solver: Sync {
         self.algorithm().name()
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome;
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome;
 }
 
 /// Router policy for specs that did not pin an algorithm: small graphs get
@@ -125,6 +125,31 @@ pub struct EngineCtx {
     /// offload) must not pay XLA client startup.
     runtime: OnceCell<Option<Runtime>>,
     cache: RefCell<cache::GraphCache>,
+    /// Parsed machines keyed by `topology=` spec string (bounded FIFO):
+    /// `file:PATH` models re-read and re-validate an O(k²) table on every
+    /// parse, which a long-lived `serve` worker must not pay per request.
+    machines: RefCell<Vec<(String, Machine)>>,
+}
+
+/// Entry cap of the per-engine machine cache.
+const MACHINE_CACHE_CAP: usize = 16;
+
+/// Cache key for a `topology=` spec: `file:` specs fold in the file's
+/// length and mtime so an edited distance table invalidates the entry
+/// (an unreadable file keys on the bare spec and fails in the parser).
+fn machine_cache_key(topology: &str) -> String {
+    if let Some(path) = topology.trim().strip_prefix("file:") {
+        if let Ok(md) = std::fs::metadata(path) {
+            let mtime = md
+                .modified()
+                .ok()
+                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                .map(|d| d.as_nanos())
+                .unwrap_or(0);
+            return format!("{topology}@{}:{mtime}", md.len());
+        }
+    }
+    topology.to_string()
 }
 
 impl EngineCtx {
@@ -136,6 +161,7 @@ impl EngineCtx {
             artifacts_dir: String::new(),
             runtime: OnceCell::from(None),
             cache: RefCell::new(cache::GraphCache::new(1)),
+            machines: RefCell::new(Vec::new()),
         }
     }
 
@@ -170,6 +196,7 @@ impl Engine {
                 artifacts_dir: cfg.artifacts_dir,
                 runtime: OnceCell::new(),
                 cache: RefCell::new(cache::GraphCache::new(cfg.graph_cache_cap)),
+                machines: RefCell::new(Vec::new()),
             },
         }
     }
@@ -205,14 +232,39 @@ impl Engine {
         }
     }
 
+    /// Resolve the spec's machine: the machine carried by the spec when
+    /// present, otherwise parse — through the bounded per-engine cache
+    /// for `topology=` strings (so `file:PATH` tables are read once, not
+    /// per request). `file:` entries key on the file's length + mtime, so
+    /// a regenerated table is picked up instead of served stale.
+    pub fn resolve_machine(&self, spec: &MapSpec) -> Result<Machine> {
+        if let Some(m) = spec.cached_machine() {
+            return Ok(m.clone());
+        }
+        let Some(topology) = &spec.topology else {
+            return spec.machine(); // plain hierarchy strings parse in O(ℓ)
+        };
+        let key = machine_cache_key(topology);
+        if let Some((_, m)) = self.ctx.machines.borrow().iter().find(|(k, _)| *k == key) {
+            return Ok(m.clone());
+        }
+        let m = spec.machine()?;
+        let mut cache = self.ctx.machines.borrow_mut();
+        cache.push((key, m.clone()));
+        if cache.len() > MACHINE_CACHE_CAP {
+            cache.remove(0);
+        }
+        Ok(m)
+    }
+
     /// Map with the spec's primary seed.
     pub fn map(&self, spec: &MapSpec) -> Result<MapOutcome> {
         let g = self.resolve_graph(&spec.graph)?;
-        let h = spec.parse_hierarchy()?;
+        let m = self.resolve_machine(spec)?;
         let algo = spec.resolve_algorithm(g.n());
-        let mut out = registry::solver(algo).solve(&self.ctx, &g, &h, spec);
+        let mut out = registry::solver(algo).solve(&self.ctx, &g, &m, spec);
         if spec.polish {
-            out.polish_improvement = polish_mapping(&self.ctx, &g, &h, &mut out.mapping)?;
+            out.polish_improvement = polish_mapping(&self.ctx, &g, &m, &mut out.mapping)?;
             out.comm_cost -= out.polish_improvement;
         }
         if !spec.return_mapping {
@@ -227,28 +279,41 @@ impl Engine {
     }
 }
 
+/// Largest machine the QAP polish stage will touch: the block
+/// communication matrix it searches over is inherently O(k²).
+pub const QAP_POLISH_K_MAX: usize = crate::topology::DENSE_K_MAX;
+
 /// The QAP polish stage: re-map blocks to PEs with the pairwise-swap
 /// search — the device-offloaded kernel when the runtime has a fitting
-/// `qap_step_k*` artifact, the host kernel otherwise. Rewrites `mapping`
-/// in place and returns the `J` improvement (≥ 0). Every front-end goes
-/// through this one function, so polish is identical from the library,
-/// `heipa map --polish`, and the TCP service.
-pub fn polish_mapping(ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, mapping: &mut [Block]) -> Result<f64> {
-    let k = h.k();
+/// `qap_step_k*` artifact, the host kernel otherwise. Distances come
+/// from the machine's [`DistanceOracle`] (dense rows for small `k`,
+/// blocked row cache above), and machines past [`QAP_POLISH_K_MAX`] skip
+/// the stage entirely (returning 0.0) rather than materialize O(k²).
+/// Rewrites `mapping` in place and returns the `J` improvement (≥ 0).
+/// Every front-end goes through this one function, so polish is
+/// identical from the library, `heipa map --polish`, and the TCP
+/// service.
+pub fn polish_mapping(ctx: &EngineCtx, g: &CsrGraph, m: &Machine, mapping: &mut [Block]) -> Result<f64> {
+    let k = m.k();
+    if k > QAP_POLISH_K_MAX {
+        eprintln!("polish: skipped for k={k} > {QAP_POLISH_K_MAX} (O(k²) block matrix)");
+        return Ok(0.0);
+    }
     let bmat = block_comm_matrix(g, mapping, k);
+    let oracle = DistanceOracle::auto(m);
     let mut sigma: Vec<Block> = (0..k as Block).collect();
-    let before = comm_cost_blocks(&bmat, k, &sigma, h);
+    let before = comm_cost_blocks(&bmat, k, &sigma, &oracle);
     let offloaded = match (ctx.runtime(), offload::qap_kernel_size(k)) {
         (Some(rt), Ok(kp)) if rt.available(&format!("qap_step_k{kp}")) => {
-            offload::swap_refine_offload(rt, &bmat, k, h, &mut sigma, 20)?;
+            offload::swap_refine_offload(rt, &bmat, k, m, &mut sigma, 20)?;
             true
         }
         _ => false,
     };
     if !offloaded {
-        qap::swap_refine(&bmat, k, &mut sigma, h, 20);
+        qap::swap_refine(&bmat, k, &mut sigma, &oracle, 20);
     }
-    let after = comm_cost_blocks(&bmat, k, &sigma, h);
+    let after = comm_cost_blocks(&bmat, k, &sigma, &oracle);
     if after < before {
         for pe in mapping.iter_mut() {
             *pe = sigma[*pe as usize];
@@ -329,9 +394,43 @@ mod tests {
     }
 
     #[test]
+    fn maps_onto_non_hierarchical_machines() {
+        // topology= spec → engine → solver → metrics, end to end.
+        let e = engine();
+        for spec_str in ["torus:2x2x2", "fattree:2,4/1,5", "dragonfly:2:2:2", "hetero:3+5/1,10"] {
+            let spec = MapSpec::named("sten_cop20k").topology_spec(spec_str);
+            let out = e.map(&spec).unwrap_or_else(|err| panic!("{spec_str}: {err}"));
+            assert_eq!(out.k, 8, "{spec_str}");
+            assert!(out.comm_cost > 0.0, "{spec_str}");
+            validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        }
+        // Bad topology specs fail cleanly, before any solver runs.
+        assert!(e.map(&MapSpec::named("sten_cop20k").topology_spec("torus:0x2")).is_err());
+    }
+
+    #[test]
     fn router_prefers_quality_for_small() {
         assert_eq!(route(10_000, None), Algorithm::GpuHmUltra);
         assert_eq!(route(1_000_000, None), Algorithm::GpuIm);
         assert_eq!(route(10, Some(Algorithm::IntMapS)), Algorithm::IntMapS);
+    }
+
+    #[test]
+    fn machine_cache_does_not_serve_stale_file_tables() {
+        // Same spec string, regenerated file: the cache key folds in
+        // len+mtime, so the second map sees the new table (here k
+        // changes, which a stale entry could not produce).
+        let e = engine();
+        let path = std::env::temp_dir().join(format!("heipa_engine_{}.mat", std::process::id()));
+        std::fs::write(&path, "4\n0 1 10 10\n1 0 10 10\n10 10 0 1\n10 10 1 0\n").unwrap();
+        let spec = MapSpec::named("sten_cop20k")
+            .topology_spec(format!("file:{}", path.display()))
+            .algo(Some(Algorithm::GpuIm));
+        assert_eq!(e.map(&spec).unwrap().k, 4);
+        // Warm cache hit: same machine again.
+        assert_eq!(e.map(&spec).unwrap().k, 4);
+        std::fs::write(&path, "2\n0 1\n1 0\n").unwrap();
+        assert_eq!(e.map(&spec).unwrap().k, 2, "stale machine served from cache");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -8,7 +8,7 @@ use crate::graph::CsrGraph;
 use crate::metrics::PhaseBreakdown;
 use crate::par::cost::DeviceTimer;
 use crate::partition::{comm_cost, imbalance};
-use crate::topology::Hierarchy;
+use crate::topology::Machine;
 use crate::Block;
 
 /// Time a solver run and assemble the [`MapOutcome`]: device solvers get
@@ -17,24 +17,25 @@ use crate::Block;
 fn measured(
     algo: Algorithm,
     g: &CsrGraph,
-    h: &Hierarchy,
+    m: &Machine,
     seed: u64,
     run: impl FnOnce(&mut PhaseBreakdown) -> Vec<Block>,
 ) -> MapOutcome {
     let mut phases = PhaseBreakdown::default();
     let timer = DeviceTimer::start();
     let mapping = run(&mut phases);
-    let m = timer.stop();
-    let device_ms = if algo.is_device() { phases.total_device_ms().max(m.device_ms) } else { m.host_ms };
+    let meas = timer.stop();
+    let device_ms =
+        if algo.is_device() { phases.total_device_ms().max(meas.device_ms) } else { meas.host_ms };
     MapOutcome {
         algorithm: algo,
         n: g.n(),
-        k: h.k(),
+        k: m.k(),
         seed,
-        comm_cost: comm_cost(g, &mapping, h),
-        imbalance: imbalance(g, &mapping, h.k()),
+        comm_cost: comm_cost(g, &mapping, m),
+        imbalance: imbalance(g, &mapping, m.k()),
         mapping,
-        host_ms: m.host_ms,
+        host_ms: meas.host_ms,
         device_ms,
         phases: if algo.is_device() { Some(phases) } else { None },
         polish_improvement: 0.0,
@@ -56,14 +57,14 @@ impl Solver for GpuHmSolver {
         }
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
         let mut cfg = if self.ultra { gpu_hm::GpuHmConfig::ultra() } else { gpu_hm::GpuHmConfig::default_flavor() };
         if let Some(adaptive) = spec.opt_bool("adaptive") {
             cfg.adaptive = adaptive;
         }
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, h, seed, |ph| {
-            gpu_hm::gpu_hm(ctx.pool(), g, h, spec.eps, seed, &cfg, Some(ph))
+        measured(self.algorithm(), g, m, seed, |ph| {
+            gpu_hm::gpu_hm(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph))
         })
     }
 }
@@ -78,14 +79,14 @@ impl Solver for GpuImSolver {
         Algorithm::GpuIm
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
         let mut cfg = gpu_im::GpuImConfig::default();
         if let Some(v) = spec.opt_bool("rebalance_comm_obj") {
             cfg.rebalance_with_comm_obj = v;
         }
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, h, seed, |ph| {
-            gpu_im::gpu_im(ctx.pool(), g, h, spec.eps, seed, &cfg, Some(ph))
+        measured(self.algorithm(), g, m, seed, |ph| {
+            gpu_im::gpu_im(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph))
         })
     }
 }
@@ -104,10 +105,10 @@ impl Solver for SharedMapSolver {
         }
     }
 
-    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
         let cfg = if self.strong { sharedmap::SharedMapConfig::strong() } else { sharedmap::SharedMapConfig::fast() };
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, h, seed, |_ph| sharedmap::sharedmap(g, h, spec.eps, seed, &cfg))
+        measured(self.algorithm(), g, m, seed, |_ph| sharedmap::sharedmap(g, m, spec.eps, seed, &cfg))
     }
 }
 
@@ -125,10 +126,10 @@ impl Solver for IntMapSolver {
         }
     }
 
-    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
         let cfg = if self.strong { intmap::IntMapConfig::strong() } else { intmap::IntMapConfig::fast() };
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, h, seed, |_ph| intmap::intmap(g, h, spec.eps, seed, &cfg))
+        measured(self.algorithm(), g, m, seed, |_ph| intmap::intmap(g, m, spec.eps, seed, &cfg))
     }
 }
 
@@ -147,11 +148,11 @@ impl Solver for JetSolver {
         }
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, h: &Hierarchy, spec: &MapSpec) -> MapOutcome {
+    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
         let cfg = if self.ultra { jet::JetPartConfig::ultra() } else { jet::JetPartConfig::default() };
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, h, seed, |ph| {
-            jet::jet_partition(ctx.pool(), g, h.k(), spec.eps, seed, &cfg, Some(ph))
+        measured(self.algorithm(), g, m, seed, |ph| {
+            jet::jet_partition(ctx.pool(), g, m.k(), spec.eps, seed, &cfg, Some(ph))
         })
     }
 }
@@ -220,7 +221,7 @@ mod tests {
     #[test]
     fn every_solver_solves_a_smoke_instance() {
         let g = crate::graph::gen::grid2d(20, 20, false);
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
         let spec = MapSpec::named("unused");
         for s in solvers() {
@@ -237,7 +238,7 @@ mod tests {
     fn gpu_hm_honors_adaptive_option() {
         // Just behavioral smoke: both settings produce valid mappings.
         let g = crate::graph::gen::grid2d(24, 24, false);
-        let h = Hierarchy::parse("4:4:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:4:2", "1:10:100").unwrap();
         let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
         for v in ["1", "0"] {
             let spec = MapSpec::named("unused").option("adaptive", v);

@@ -9,7 +9,7 @@
 
 use crate::algo::Algorithm;
 use crate::graph::CsrGraph;
-use crate::topology::Hierarchy;
+use crate::topology::{Hierarchy, Machine};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -77,13 +77,24 @@ impl Refinement {
 
 /// One mapping job, front-end agnostic. Build with [`MapSpec::named`] /
 /// [`MapSpec::in_memory`] and the chainable setters.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct MapSpec {
     pub graph: GraphSource,
-    /// Machine hierarchy `a_1:…:a_ℓ`, e.g. `4:8:6`.
+    /// Machine hierarchy `a_1:…:a_ℓ`, e.g. `4:8:6`. Ignored when
+    /// `topology` is set.
     pub hierarchy: String,
-    /// Distance vector `d_1:…:d_ℓ`, e.g. `1:10:100`.
+    /// Distance vector `d_1:…:d_ℓ`, e.g. `1:10:100`. Ignored when
+    /// `topology` is set.
     pub distance: String,
+    /// Machine-model spec string (`torus:4x4x4`, `fattree:…`, `file:…`;
+    /// see [`crate::topology::parse_topology`]). When set, it overrides
+    /// `hierarchy`/`distance`.
+    pub topology: Option<String>,
+    /// Already-validated machine cached by [`MapSpec::topology`], so
+    /// library callers with programmatic models (and the matrix runner)
+    /// skip the per-map re-parse/re-read. Excluded from equality — the
+    /// wire-visible fields define the spec.
+    machine: Option<Machine>,
     /// Imbalance ε.
     pub eps: f64,
     /// Seeds. [`crate::engine::Engine::map`] uses the first; `map_all_seeds`
@@ -101,12 +112,32 @@ pub struct MapSpec {
     pub options: BTreeMap<String, String>,
 }
 
+/// Equality over the wire-visible fields only — the cached machine is a
+/// derived convenience, not part of the spec's identity.
+impl PartialEq for MapSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.graph == other.graph
+            && self.hierarchy == other.hierarchy
+            && self.distance == other.distance
+            && self.topology == other.topology
+            && self.eps == other.eps
+            && self.seeds == other.seeds
+            && self.algorithm == other.algorithm
+            && self.refinement == other.refinement
+            && self.polish == other.polish
+            && self.return_mapping == other.return_mapping
+            && self.options == other.options
+    }
+}
+
 impl MapSpec {
     fn with_graph(graph: GraphSource) -> Self {
         MapSpec {
             graph,
             hierarchy: "4:8:6".into(),
             distance: "1:10:100".into(),
+            topology: None,
+            machine: None,
             eps: 0.03,
             seeds: vec![1],
             algorithm: None,
@@ -127,20 +158,42 @@ impl MapSpec {
         Self::with_graph(GraphSource::InMemory(g))
     }
 
+    /// Set the hierarchy string. Last machine setter wins: this clears a
+    /// previously set `topology`, mirroring how the CLI treats explicit
+    /// `--hier`/`--dist` flags.
     pub fn hierarchy(mut self, hier: impl Into<String>) -> Self {
         self.hierarchy = hier.into();
+        self.topology = None;
+        self.machine = None;
         self
     }
 
+    /// Set the distance string. Last machine setter wins (see
+    /// [`MapSpec::hierarchy`]).
     pub fn distance(mut self, dist: impl Into<String>) -> Self {
         self.distance = dist.into();
+        self.topology = None;
+        self.machine = None;
         self
     }
 
-    /// Set hierarchy + distance from a parsed [`Hierarchy`].
-    pub fn topology(mut self, h: &Hierarchy) -> Self {
-        self.hierarchy = h.a.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(":");
-        self.distance = h.d.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(":");
+    /// Pin the machine model from a parsed [`Machine`]. The machine is
+    /// carried in the spec (no re-parse per map, and models without a
+    /// re-parsable source — e.g. an in-memory `MatrixModel` — work);
+    /// its canonical spec string is stored alongside so wire/config
+    /// round trips stay lossless.
+    pub fn topology(mut self, m: &Machine) -> Self {
+        self.topology = Some(m.spec_string());
+        self.machine = Some(m.clone());
+        self
+    }
+
+    /// Pin the machine model from a raw `topology=` spec string
+    /// (`torus:4x4x4`, …); validated when the engine parses the spec.
+    /// Clears any machine cached by [`MapSpec::topology`].
+    pub fn topology_spec(mut self, spec: impl Into<String>) -> Self {
+        self.topology = Some(spec.into());
+        self.machine = None;
         self
     }
 
@@ -205,7 +258,27 @@ impl MapSpec {
         s
     }
 
-    /// Parse and validate the machine description.
+    /// Resolve the machine model this spec maps onto: the machine cached
+    /// by [`MapSpec::topology`] when present, else the `topology` spec
+    /// string, else the `hierarchy`/`distance` pair.
+    pub fn machine(&self) -> Result<Machine> {
+        if let Some(m) = self.cached_machine() {
+            return Ok(m.clone());
+        }
+        Machine::resolve(self.topology.as_deref(), &self.hierarchy, &self.distance)
+    }
+
+    /// The machine cached by [`MapSpec::topology`] — only while it still
+    /// agrees with the (publicly writable) `topology` field, so a direct
+    /// field write can never make `machine()` return a model the spec no
+    /// longer names.
+    pub fn cached_machine(&self) -> Option<&Machine> {
+        let m = self.machine.as_ref()?;
+        (self.topology.as_deref() == Some(m.spec_string().as_str())).then_some(m)
+    }
+
+    /// Parse and validate the homogeneous hierarchy fields. Ignores
+    /// `topology`; prefer [`MapSpec::machine`].
     pub fn parse_hierarchy(&self) -> Result<Hierarchy> {
         Hierarchy::parse(&self.hierarchy, &self.distance)
     }
@@ -249,11 +322,30 @@ mod tests {
 
     #[test]
     fn topology_setter_roundtrips() {
-        let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let h = Machine::hier("4:8:2", "1:10:100").unwrap();
         let spec = MapSpec::named("x").topology(&h);
-        assert_eq!(spec.hierarchy, "4:8:2");
-        assert_eq!(spec.distance, "1:10:100");
-        assert_eq!(spec.parse_hierarchy().unwrap(), h);
+        assert_eq!(spec.topology.as_deref(), Some("hier:4:8:2/1:10:100"));
+        assert_eq!(spec.machine().unwrap(), h);
+    }
+
+    #[test]
+    fn machine_resolves_topology_over_hierarchy() {
+        // Default hier fields are present, but topology wins.
+        let spec = MapSpec::named("x").topology_spec("torus:4x4x4");
+        let m = spec.machine().unwrap();
+        assert_eq!(m.k(), 64);
+        assert_eq!(m.spec_string(), "torus:4x4x4");
+        // Without topology, the hier/dist pair resolves as before.
+        let spec = MapSpec::named("x").hierarchy("4:8:2").distance("1:10:100");
+        assert_eq!(spec.machine().unwrap().k(), 64);
+        // Bad specs surface as clean errors.
+        assert!(MapSpec::named("x").topology_spec("bogus:1").machine().is_err());
+        // Last machine setter wins: hierarchy()/distance() after
+        // topology() clear it (builder semantics match the CLI).
+        let t = Machine::parse_spec("torus:4x4x4").unwrap();
+        let spec = MapSpec::named("x").topology(&t).hierarchy("2:2:2").distance("1:10:100");
+        assert_eq!(spec.machine().unwrap().k(), 8);
+        assert!(spec.topology.is_none());
     }
 
     #[test]

@@ -61,6 +61,37 @@ pub fn grid3d(w: usize, h: usize, d: usize) -> CsrGraph {
     b.build()
 }
 
+/// 3D torus mesh `w × h × d` — [`grid3d`] with all three dimensions
+/// wrapped. The halo-exchange communication pattern of periodic stencil
+/// codes, and the natural workload for `topology=torus:…` machines.
+pub fn torus3d(w: usize, h: usize, d: usize) -> CsrGraph {
+    let n = w * h * d;
+    let mut b = GraphBuilder::with_edge_capacity(n, 3 * n);
+    let id = |x: usize, y: usize, z: usize| (z * w * h + y * w + x) as Vertex;
+    for z in 0..d {
+        for y in 0..h {
+            for x in 0..w {
+                if x + 1 < w {
+                    b.add_edge(id(x, y, z), id(x + 1, y, z), 1.0);
+                } else if w > 2 {
+                    b.add_edge(id(x, y, z), id(0, y, z), 1.0);
+                }
+                if y + 1 < h {
+                    b.add_edge(id(x, y, z), id(x, y + 1, z), 1.0);
+                } else if h > 2 {
+                    b.add_edge(id(x, y, z), id(x, 0, z), 1.0);
+                }
+                if z + 1 < d {
+                    b.add_edge(id(x, y, z), id(x, y, z + 1), 1.0);
+                } else if d > 2 {
+                    b.add_edge(id(x, y, z), id(x, y, 0), 1.0);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
 /// Random geometric graph: `n` uniform points in the unit square, edge if
 /// distance < `radius`. The paper's rgg instances use
 /// `radius = 0.55·sqrt(ln n / n)` — see [`rgg_paper_radius`].
@@ -255,6 +286,16 @@ mod tests {
         let g = grid2d(6, 6, true);
         for v in 0..g.n() {
             assert_eq!(g.degree(v as u32), 4);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn torus3d_regular_degree() {
+        let g = torus3d(4, 4, 4);
+        assert_eq!(g.n(), 64);
+        for v in 0..g.n() {
+            assert_eq!(g.degree(v as u32), 6);
         }
         g.validate().unwrap();
     }

@@ -8,7 +8,8 @@ pub mod stats;
 use crate::algo::Algorithm;
 use crate::engine::{Engine, MapSpec};
 use crate::graph::gen::InstanceSpec;
-use crate::topology::Hierarchy;
+use crate::graph::{gen, CsrGraph};
+use crate::topology::{Hierarchy, Machine};
 use std::sync::Arc;
 
 /// One (algorithm, instance, hierarchy) averaged over seeds.
@@ -58,14 +59,14 @@ pub fn run_matrix(
     engine: &Engine,
     algorithms: &[Algorithm],
     instances: &[InstanceSpec],
-    hierarchies: &[Hierarchy],
+    machines: &[Machine],
     seeds: &[u64],
     eps: f64,
 ) -> Vec<ExpRecord> {
     let mut out = Vec::new();
     for spec in instances {
         let g = Arc::new(spec.generate());
-        for h in hierarchies {
+        for h in machines {
             for &algo in algorithms {
                 let base = MapSpec::in_memory(g.clone())
                     .topology(h)
@@ -87,7 +88,9 @@ pub fn run_matrix(
                     instance: spec.name.to_string(),
                     group: spec.group.to_string(),
                     large: spec.size_class() == crate::graph::gen::SizeClass::Large,
-                    hierarchy: h.label(),
+                    // Model labels may contain commas (fat-tree arity
+                    // lists); keep the CSV column count stable.
+                    hierarchy: h.label().replace(',', ";"),
                     comm_cost: cost / ns,
                     host_ms: host / ns,
                     device_ms: device / ns,
@@ -120,7 +123,7 @@ pub fn write_csv(records: &[ExpRecord], path: &std::path::Path) -> anyhow::Resul
     Ok(())
 }
 
-/// Seeds/hierarchy subsetting from the environment, so the full paper
+/// Seeds/machine subsetting from the environment, so the full paper
 /// matrix (5 seeds × 6 hierarchies) can be scaled to the host:
 /// `HEIPA_SEEDS=1,2 HEIPA_TOPS=2,6`.
 pub fn seeds_from_env(default: &[u64]) -> Vec<u64> {
@@ -130,15 +133,84 @@ pub fn seeds_from_env(default: &[u64]) -> Vec<u64> {
     }
 }
 
-/// Hierarchies `4:8:t` for `t` from `HEIPA_TOPS` (default: the paper's 1..6).
-pub fn hierarchies_from_env() -> Vec<Hierarchy> {
-    let tops: Vec<u32> = match std::env::var("HEIPA_TOPS") {
-        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
-        Err(_) => (1..=6).collect(),
+/// Machines from `HEIPA_TOPS` (default: the paper's `4:8:{1..6}`
+/// family). The value splits into chunks on `;`; a chunk containing `:`
+/// is one full `topology=` spec string (`torus:4x4x4`, `fattree:…`, …
+/// — specs may contain commas), any other chunk is a comma-separated
+/// list of bare integers `t` (→ hierarchy `4:8:t / 1:10:100`). So both
+/// the classic `HEIPA_TOPS=2,6` and
+/// `HEIPA_TOPS='2,6;fattree:3:2,4,4/1,5,20'` work. Misconfigured
+/// entries abort loudly.
+pub fn machines_from_env() -> Vec<Machine> {
+    let paper = |t: u32| {
+        Machine::from(Hierarchy::new(vec![4, 8, t], vec![1.0, 10.0, 100.0]).unwrap())
     };
-    tops.into_iter()
-        .map(|t| Hierarchy::new(vec![4, 8, t], vec![1.0, 10.0, 100.0]).unwrap())
-        .collect()
+    match std::env::var("HEIPA_TOPS") {
+        Ok(v) => v
+            .split(';')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .flat_map(|chunk| -> Vec<Machine> {
+                if chunk.contains(':') {
+                    vec![Machine::parse_spec(chunk)
+                        .unwrap_or_else(|e| panic!("HEIPA_TOPS entry `{chunk}`: {e}"))]
+                } else {
+                    chunk
+                        .split(',')
+                        .map(|s| s.trim())
+                        .filter(|s| !s.is_empty())
+                        .map(|t| {
+                            paper(t.parse::<u32>().unwrap_or_else(|_| {
+                                panic!("HEIPA_TOPS entry `{t}`: not an integer top (specs need a `scheme:` prefix)")
+                            }))
+                        })
+                        .collect()
+                }
+            })
+            .collect(),
+        Err(_) => (1..=6).map(paper).collect(),
+    }
+}
+
+/// A benchmark scenario: a task graph paired with a machine model — the
+/// non-hierarchical presets the bench smoke runs so torus/fat-tree/
+/// dragonfly code paths stay exercised.
+pub struct Scenario {
+    pub name: &'static str,
+    pub topology: &'static str,
+    graph: fn() -> CsrGraph,
+}
+
+impl Scenario {
+    pub fn graph(&self) -> CsrGraph {
+        (self.graph)()
+    }
+
+    pub fn machine(&self) -> Machine {
+        Machine::parse_spec(self.topology).expect("preset topology spec parses")
+    }
+}
+
+/// Torus / fat-tree / dragonfly scenario presets: halo-exchange-style
+/// task graphs onto the matching machine shapes.
+pub fn scenario_presets() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "torus-halo",
+            topology: "torus:4x4x4",
+            graph: || gen::torus3d(16, 16, 8),
+        },
+        Scenario {
+            name: "fattree-stencil",
+            topology: "fattree:3:2,4,4/1,5,20",
+            graph: || gen::stencil9(48, 48, 1),
+        },
+        Scenario {
+            name: "dragonfly-rgg",
+            topology: "dragonfly:4:4:2/1,2,5",
+            graph: || gen::rgg(4_000, gen::rgg_paper_radius(4_000) * 1.2, 9),
+        },
+    ]
 }
 
 #[cfg(test)]
@@ -150,7 +222,7 @@ mod tests {
     fn matrix_runs_and_emits_csv() {
         let engine = Engine::new(crate::engine::EngineConfig { threads: 1, ..Default::default() });
         let specs: Vec<_> = smoke_suite().into_iter().take(1).collect();
-        let hs = vec![Hierarchy::parse("2:2", "1:10").unwrap()];
+        let hs = vec![Machine::hier("2:2", "1:10").unwrap()];
         let recs = run_matrix(&engine, &[Algorithm::GpuIm, Algorithm::SharedMapF], &specs, &hs, &[1], 0.03);
         assert_eq!(recs.len(), 2);
         for r in &recs {
@@ -164,8 +236,18 @@ mod tests {
         // (Do not set the env vars here: tests run in one process.)
         let seeds = seeds_from_env(&[1, 2, 3]);
         assert!(!seeds.is_empty());
-        let hs = hierarchies_from_env();
+        let hs = machines_from_env();
         assert!(!hs.is_empty());
         assert!(hs.iter().all(|h| h.k() % 32 == 0));
+    }
+
+    #[test]
+    fn scenario_presets_are_well_formed() {
+        for sc in scenario_presets() {
+            let m = sc.machine();
+            let g = sc.graph();
+            assert!(m.k() > 1, "{}", sc.name);
+            assert!(g.n() > m.k() * 8, "{}: graph too small for its machine", sc.name);
+        }
     }
 }

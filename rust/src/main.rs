@@ -24,7 +24,7 @@ use heipa::coordinator::service::{Service, ServiceConfig};
 use heipa::engine::{solver_names, Engine, EngineConfig, MapOutcome, MapSpec, Refinement};
 use heipa::graph::{gen, io};
 use heipa::harness;
-use heipa::topology::Hierarchy;
+use heipa::topology::Machine;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -83,8 +83,14 @@ impl Args {
     }
 }
 
-fn hierarchy_of(args: &Args) -> Result<Hierarchy> {
-    Hierarchy::parse(&args.get_or("hier", "4:8:6"), &args.get_or("dist", "1:10:100"))
+/// The machine model named by the flags: `--topology SPEC` wins, the
+/// `--hier`/`--dist` pair otherwise.
+fn machine_of(args: &Args) -> Result<Machine> {
+    Machine::resolve(
+        args.get("topology"),
+        &args.get_or("hier", "4:8:6"),
+        &args.get_or("dist", "1:10:100"),
+    )
 }
 
 /// The layered spec construction every mapping subcommand shares:
@@ -112,6 +118,13 @@ fn spec_from_args(args: &Args) -> Result<(MapSpec, EngineConfig)> {
     }
     if let Some(v) = args.get("dist") {
         spec.distance = v.to_string();
+    }
+    if let Some(v) = args.get("topology") {
+        spec.topology = Some(v.to_string());
+    } else if args.get("hier").is_some() || args.get("dist").is_some() {
+        // Explicit flags always win: an explicit --hier/--dist must not
+        // be silently shadowed by a `topology =` key from the config.
+        spec.topology = None;
     }
     if let Some(v) = args.get("eps") {
         spec.eps = v.parse().context("--eps")?;
@@ -193,16 +206,20 @@ fn print_help() {
          \n\
          gen    --suite paper|smoke [--out-dir DIR] [--stats]\n\
          map    --graph NAME|FILE [--config FILE] [--algo gpu-im|auto] [--hier 4:8:6]\n\
-                [--dist 1:10:100] [--eps 0.03] [--seed 1,2,…] [--refine standard|strong]\n\
-                [--polish] [--opts k=v,…] [--artifacts DIR] [--threads N] [--out part.txt]\n\
-         eval   --graph NAME|FILE --part FILE [--hier …] [--dist …]\n\
-         phases --graph NAME|FILE [--hier …] [--dist …] [--seed 1]\n\
+                [--dist 1:10:100] [--topology SPEC] [--eps 0.03] [--seed 1,2,…]\n\
+                [--refine standard|strong] [--polish] [--opts k=v,…] [--artifacts DIR]\n\
+                [--threads N] [--out part.txt]\n\
+         eval   --graph NAME|FILE --part FILE [--hier …] [--dist …] [--topology SPEC]\n\
+         phases --graph NAME|FILE [--hier …] [--dist …] [--topology SPEC] [--seed 1]\n\
          suite  --algos a,b,… [--config FILE] [--instances x,y|smoke|paper] [--seeds 1,2]\n\
                 [--out results.csv] [--eps 0.03]\n\
          serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0] [--cache-cap 64]\n\
          \n\
          `--config FILE` reads `key = value` defaults (see config::RunConfig);\n\
          explicit flags always win. Boolean flags (--polish, --stats) take no value.\n\
+         --topology SPEC picks a machine model and overrides --hier/--dist:\n\
+         hier:4:8:6/1:10:100, torus:4x4x4, mesh:16x16, fattree:3:2,16,48/1,5,20,\n\
+         dragonfly:8:4:4/1,2,5, hetero:4+8+4/1,10, file:PATH (see README).\n\
          \n\
          Solvers: {}",
         solver_names().join(", ")
@@ -287,24 +304,29 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let engine = Engine::with_defaults();
     let g = engine.resolve_graph(&heipa::engine::GraphSource::Named(args.required("graph")?.to_string()))?;
     let part = io::read_partition(Path::new(args.required("part")?))?;
-    let h = hierarchy_of(args)?;
-    heipa::partition::validate_mapping(&part, g.n(), h.k()).map_err(anyhow::Error::msg)?;
+    let m = machine_of(args)?;
+    heipa::partition::validate_mapping(&part, g.n(), m.k()).map_err(anyhow::Error::msg)?;
+    let q = heipa::metrics::mapping_quality(&g, &part, &m);
     println!(
-        "J={:.3} edge_cut={:.3} imbalance={:.5}",
-        heipa::partition::comm_cost(&g, &part, &h),
-        heipa::partition::edge_cut(&g, &part),
-        heipa::partition::imbalance(&g, &part, h.k()),
+        "J={:.3} edge_cut={:.3} imbalance={:.5} machine={}",
+        q.comm_cost,
+        q.edge_cut,
+        q.imbalance,
+        m.label(),
     );
     Ok(())
 }
 
 fn cmd_phases(args: &Args) -> Result<()> {
     let graph = args.required("graph")?.to_string();
-    let spec = MapSpec::named(graph)
+    let mut spec = MapSpec::named(graph)
         .hierarchy(args.get_or("hier", "4:8:6"))
         .distance(args.get_or("dist", "1:10:100"))
         .seed(args.get_or("seed", "1").parse()?)
         .algo(Some(Algorithm::GpuIm));
+    if let Some(v) = args.get("topology") {
+        spec.topology = Some(v.to_string());
+    }
     let engine = Engine::with_defaults();
     let r = engine.map(&spec)?;
     let phases = r.phases.expect("gpu-im reports phases");
@@ -353,12 +375,12 @@ fn cmd_suite(args: &Args) -> Result<()> {
         Some(v) => v.parse().context("--eps")?,
         None => cfg.eps,
     };
-    // Topology: a config file pins one hierarchy; HEIPA_TOPS (or no
-    // config) sweeps the paper family.
-    let hierarchies = if args.get("config").is_some() && std::env::var("HEIPA_TOPS").is_err() {
-        vec![cfg.parse_hierarchy()?]
+    // Machines: a config file pins one model; HEIPA_TOPS (or no config)
+    // sweeps the paper family and/or explicit topology specs.
+    let machines = if args.get("config").is_some() && std::env::var("HEIPA_TOPS").is_err() {
+        vec![cfg.machine()?]
     } else {
-        harness::hierarchies_from_env()
+        harness::machines_from_env()
     };
     // The matrix pins algorithms and never polishes; refuse to silently
     // drop config keys the suite cannot honor.
@@ -372,7 +394,7 @@ fn cmd_suite(args: &Args) -> Result<()> {
         ecfg.threads = v.parse().context("--threads")?;
     }
     let engine = Engine::new(ecfg);
-    let records = harness::run_matrix(&engine, &algos, &instances, &hierarchies, &seeds, eps);
+    let records = harness::run_matrix(&engine, &algos, &instances, &machines, &seeds, eps);
     let out = args.get_or("out", "results.csv");
     harness::write_csv(&records, Path::new(&out))?;
     println!("wrote {} records to {out}", records.len());

@@ -1,7 +1,33 @@
-//! Phase timing and run accounting (feeds Table 2 and the speedup plots).
+//! Phase timing, run accounting (feeds Table 2 and the speedup plots),
+//! and model-aware mapping quality.
 
+use crate::graph::CsrGraph;
 use crate::par::cost::{DeviceTimer, Measurement};
+use crate::topology::Machine;
+use crate::Block;
 use std::collections::BTreeMap;
+
+/// Quality of one mapping under a machine model.
+#[derive(Clone, Copy, Debug)]
+pub struct MappingQuality {
+    /// `J(C, D, Π)`, distances answered by the model's oracle — valid for
+    /// any [`Machine`], never materializes `k × k`.
+    pub comm_cost: f64,
+    /// Edge-cut `Σ_{i<j} ω(E_ij)` (model-independent).
+    pub edge_cut: f64,
+    /// Achieved imbalance `max_i c(V_i)·k / c(V) − 1`.
+    pub imbalance: f64,
+}
+
+/// Evaluate a mapping against a machine model (the `heipa eval` path and
+/// any caller that wants all three headline numbers at once).
+pub fn mapping_quality(g: &CsrGraph, part: &[Block], m: &Machine) -> MappingQuality {
+    MappingQuality {
+        comm_cost: crate::partition::comm_cost(g, part, m),
+        edge_cut: crate::partition::edge_cut(g, part),
+        imbalance: crate::partition::imbalance(g, part, m.k()),
+    }
+}
 
 /// The pipeline phases the paper reports in Table 2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -130,6 +156,17 @@ mod tests {
         let total: f64 = Phase::all().iter().map(|&p| pb.share(p)).sum();
         assert!((total - 100.0).abs() < 1e-9);
         assert!(pb.share(Phase::RefineRebalance) > pb.share(Phase::Coarsening));
+    }
+
+    #[test]
+    fn mapping_quality_agrees_with_partition_metrics() {
+        let g = crate::graph::gen::grid2d(8, 8, false);
+        let m = Machine::parse_spec("torus:2x2").unwrap();
+        let part: Vec<Block> = (0..g.n()).map(|v| (v % 4) as Block).collect();
+        let q = mapping_quality(&g, &part, &m);
+        assert_eq!(q.comm_cost, crate::partition::comm_cost(&g, &part, &m));
+        assert_eq!(q.edge_cut, crate::partition::edge_cut(&g, &part));
+        assert_eq!(q.imbalance, crate::partition::imbalance(&g, &part, 4));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use crate::graph::CsrGraph;
 use crate::par::Pool;
-use crate::topology::Hierarchy;
+use crate::topology::{DistanceOracle, Machine};
 use crate::{Block, EWeight, VWeight, Vertex};
 
 /// Maximum allowed block weight `L_max = ⌈(1+ε)·c(V)/k⌉`.
@@ -53,27 +53,29 @@ pub fn edge_cut(g: &CsrGraph, part: &[Block]) -> EWeight {
     cut / 2.0
 }
 
-/// Communication cost `J(C, D, Π)`. The task graph stores each
-/// communication pair as two directed slots; the paper's `Σ_{ij}` runs
-/// over the full matrix, so summing directed slots matches the definition.
-pub fn comm_cost(g: &CsrGraph, part: &[Block], h: &Hierarchy) -> f64 {
+/// Communication cost `J(C, D, Π)` under any machine model (distances
+/// via the model's implicit oracle — nothing is materialized). The task
+/// graph stores each communication pair as two directed slots; the
+/// paper's `Σ_{ij}` runs over the full matrix, so summing directed slots
+/// matches the definition.
+pub fn comm_cost(g: &CsrGraph, part: &[Block], m: &Machine) -> f64 {
     let mut j = 0.0;
     for v in 0..g.n() {
         let (nbrs, ws) = g.neighbors_w(v as Vertex);
         let pv = part[v];
         for (&u, &w) in nbrs.iter().zip(ws) {
-            j += w * h.distance(pv, part[u as usize]);
+            j += w * m.distance(pv, part[u as usize]);
         }
     }
     j
 }
 
 /// Edge-parallel `J(C, D, Π)` over the extended CSR (device kernel shape).
-pub fn comm_cost_par(pool: &Pool, g: &CsrGraph, eu: &[Vertex], part: &[Block], h: &Hierarchy) -> f64 {
+pub fn comm_cost_par(pool: &Pool, g: &CsrGraph, eu: &[Vertex], part: &[Block], m: &Machine) -> f64 {
     pool.reduce_sum_f64(g.num_directed(), |i| {
         let u = eu[i] as usize;
         let v = g.adj[i] as usize;
-        g.ew[i] * h.distance(part[u], part[v])
+        g.ew[i] * m.distance(part[u], part[v])
     })
 }
 
@@ -97,13 +99,15 @@ pub fn block_comm_matrix(g: &CsrGraph, part: &[Block], k: usize) -> Vec<f64> {
 
 /// `J` evaluated from a block communication matrix and a PE assignment
 /// `sigma : block → PE` (the two-phase decomposition: J = Σ B_xy · D_{σx σy}).
-pub fn comm_cost_blocks(bmat: &[f64], k: usize, sigma: &[Block], h: &Hierarchy) -> f64 {
+/// Consumes oracle rows — one `D[σx, ·]` fetch per outer block.
+pub fn comm_cost_blocks(bmat: &[f64], k: usize, sigma: &[Block], d: &DistanceOracle) -> f64 {
     let mut j = 0.0;
     for x in 0..k {
+        let row = d.row(sigma[x]);
         for y in 0..k {
             let w = bmat[x * k + y];
             if w != 0.0 {
-                j += w * h.distance(sigma[x], sigma[y]);
+                j += w * row.get(sigma[y]);
             }
         }
     }
@@ -127,8 +131,8 @@ mod tests {
     use crate::graph::gen;
     use crate::graph::EdgeList;
 
-    fn h() -> Hierarchy {
-        Hierarchy::parse("2:2", "1:10").unwrap()
+    fn h() -> Machine {
+        Machine::hier("2:2", "1:10").unwrap()
     }
 
     #[test]
@@ -162,7 +166,7 @@ mod tests {
         let pool = Pool::new(2);
         let g = gen::rgg(800, 0.08, 5);
         let el = EdgeList::build(&g);
-        let hh = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+        let hh = Machine::hier("4:8:2", "1:10:100").unwrap();
         let part: Vec<Block> = (0..g.n()).map(|v| (v % hh.k()) as Block).collect();
         let a = comm_cost(&g, &part, &hh);
         let b = comm_cost_par(&pool, &g, &el.eu, &part, &hh);
@@ -172,14 +176,32 @@ mod tests {
     #[test]
     fn block_matrix_consistent_with_j() {
         let g = gen::stencil9(20, 20, 1);
-        let hh = Hierarchy::parse("2:2", "1:10").unwrap();
+        let hh = Machine::hier("2:2", "1:10").unwrap();
         let k = hh.k();
         let part: Vec<Block> = (0..g.n()).map(|v| (v % k) as Block).collect();
         let bmat = block_comm_matrix(&g, &part, k);
         let sigma: Vec<Block> = (0..k as Block).collect();
-        let j_blocks = comm_cost_blocks(&bmat, k, &sigma, &hh);
+        let j_blocks = comm_cost_blocks(&bmat, k, &sigma, &hh.oracle());
         let j_direct = comm_cost(&g, &part, &hh);
         assert!((j_blocks - j_direct).abs() < 1e-6 * j_direct.max(1.0));
+    }
+
+    #[test]
+    fn comm_cost_agrees_across_machine_models() {
+        // A torus and the equivalent file matrix must score any mapping
+        // identically (partition/ is fully model-agnostic).
+        let g = gen::stencil9(12, 12, 2);
+        let torus = Machine::parse_spec("torus:2x2").unwrap();
+        let filem = crate::topology::MatrixModel::from_text(
+            "4\n0 1 1 2\n1 0 2 1\n1 2 0 1\n2 1 1 0\n",
+            "inline",
+        )
+        .unwrap();
+        let filem = Machine::from_model(filem).unwrap();
+        let part: Vec<Block> = (0..g.n()).map(|v| (v % 4) as Block).collect();
+        let a = comm_cost(&g, &part, &torus);
+        let b = comm_cost(&g, &part, &filem);
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
     }
 
     #[test]

@@ -109,11 +109,11 @@ fn eval_objective(pool: &Pool, g: &CsrGraph, el: &EdgeList, part: &[Block], obj:
                 }
             }) / 2.0
         }
-        Objective::Comm(h) => crate::partition::comm_cost_par(pool, g, &el.eu, part, h),
-        Objective::CommMat(m) => pool.reduce_sum_f64(g.num_directed(), |i| {
+        Objective::Comm(m) => crate::partition::comm_cost_par(pool, g, &el.eu, part, m),
+        Objective::Oracle(o) => pool.reduce_sum_f64(g.num_directed(), |i| {
             let u = el.eu[i] as usize;
             let v = g.adj[i] as usize;
-            g.ew[i] * m.get(part[u], part[v])
+            g.ew[i] * o.get(part[u], part[v])
         }),
     }
 }
@@ -130,8 +130,8 @@ fn pair_cost(obj: &Objective, a: Block, b: Block) -> f64 {
                 1.0
             }
         }
-        Objective::Comm(h) => h.distance(a, b),
-        Objective::CommMat(m) => m.get(a, b),
+        Objective::Comm(m) => m.distance(a, b),
+        Objective::Oracle(o) => o.get(a, b),
     }
 }
 
@@ -188,12 +188,13 @@ pub fn jet_refine_with(
         stats.final_objective = eval_objective(pool, g, el, part, obj);
         return stats;
     }
-    // §Perf opt 1: materialize the distance matrix once per refine call —
-    // O(1) distance lookups in the gain kernels instead of the O(ℓ)
-    // division oracle.
-    let dmat = obj.materialize();
-    let obj: &Objective = &match &dmat {
-        Some(m) => Objective::CommMat(m),
+    // §Perf opt 1: build the refinement-flavor distance oracle once per
+    // call — dense rows (O(1) lookups) for machines up to DENSE_K_MAX,
+    // the implicit model oracle beyond that, so big machines never pay
+    // an O(k²) materialization.
+    let oracle = obj.upgraded();
+    let obj: &Objective = &match &oracle {
+        Some(o) => Objective::Oracle(o),
         None => *obj,
     };
 
@@ -404,12 +405,12 @@ mod tests {
     use crate::graph::gen;
     use crate::partition::{comm_cost, edge_cut, is_balanced, l_max as lmax_of};
     use crate::rng::Rng;
-    use crate::topology::Hierarchy;
+    use crate::topology::Machine;
 
     #[test]
     fn refines_random_mapping_to_balanced_low_cost() {
         let g = gen::grid2d(24, 24, false);
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let k = h.k();
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let mut rng = Rng::new(1);
@@ -430,7 +431,7 @@ mod tests {
     #[test]
     fn recovers_balance_from_overloaded_start() {
         let g = gen::rgg(1_500, 0.06, 3);
-        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let h = Machine::hier("4:2", "1:10").unwrap();
         let k = h.k();
         let lmax = lmax_of(g.total_vweight(), k, 0.05);
         // 80% in block 0.
@@ -475,7 +476,7 @@ mod tests {
     #[test]
     fn ultra_at_least_as_good_on_average() {
         let g = gen::grid2d(20, 20, false);
-        let h = Hierarchy::parse("2:4", "1:10").unwrap();
+        let h = Machine::hier("2:4", "1:10").unwrap();
         let k = h.k();
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let el = EdgeList::build(&g);
@@ -504,7 +505,7 @@ mod tests {
         // objective are exact, so the full controller trajectory must be
         // identical under every conn-update strategy.
         let g = gen::stencil9(22, 22, 3);
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let k = h.k();
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let el = EdgeList::build(&g);
@@ -533,7 +534,7 @@ mod tests {
         // behavior); with integer weights the incremental tracker must
         // produce the same trajectory and the same final mapping.
         let g = gen::stencil9(20, 20, 5);
-        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let h = Machine::hier("4:2", "1:10").unwrap();
         let k = h.k();
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let el = EdgeList::build(&g);
@@ -559,7 +560,7 @@ mod tests {
     #[test]
     fn workspace_reuse_matches_fresh_workspace() {
         let g = gen::grid2d(20, 20, false);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let k = h.k();
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let el = EdgeList::build(&g);

@@ -225,7 +225,7 @@ mod tests {
     use crate::graph::{gen, EdgeList};
     use crate::partition::{comm_cost, edge_cut};
     use crate::rng::Rng;
-    use crate::topology::Hierarchy;
+    use crate::topology::Machine;
 
     fn apply_moves(part: &mut [Block], lp: &JetLp, moves: &[Vertex]) {
         for &v in moves {
@@ -236,7 +236,7 @@ mod tests {
     #[test]
     fn lp_step_reduces_comm_cost() {
         let g = gen::grid2d(16, 16, false);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let k = h.k();
         let mut rng = Rng::new(1);
         let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();
@@ -281,7 +281,7 @@ mod tests {
     #[test]
     fn locked_vertices_do_not_move_next_round() {
         let g = gen::grid2d(8, 8, false);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let mut rng = Rng::new(5);
         let mut part: Vec<Block> = (0..g.n()).map(|_| rng.below(4) as Block).collect();
         let el = EdgeList::build(&g);
@@ -300,7 +300,7 @@ mod tests {
     #[test]
     fn new_pass_unlocks_everything() {
         let g = gen::grid2d(8, 8, false);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let mut rng = Rng::new(5);
         let part: Vec<Block> = (0..g.n()).map(|_| rng.below(4) as Block).collect();
         let el = EdgeList::build(&g);
@@ -319,7 +319,7 @@ mod tests {
     #[test]
     fn deterministic_across_threads() {
         let g = gen::stencil9(16, 16, 7);
-        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let h = Machine::hier("4:2", "1:10").unwrap();
         let k = h.k();
         let mut rng = Rng::new(9);
         let part: Vec<Block> = (0..g.n()).map(|_| rng.below(k as u64) as Block).collect();

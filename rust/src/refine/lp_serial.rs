@@ -164,7 +164,7 @@ mod tests {
     use super::*;
     use crate::graph::gen;
     use crate::partition::{comm_cost, edge_cut, is_balanced, l_max};
-    use crate::topology::Hierarchy;
+    use crate::topology::Machine;
 
     fn random_part(n: usize, k: usize, seed: u64) -> Vec<Block> {
         let mut rng = Rng::new(seed);
@@ -187,7 +187,7 @@ mod tests {
     #[test]
     fn improves_comm_cost() {
         let g = gen::grid2d(16, 16, false);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let k = h.k();
         let lmax = l_max(g.total_vweight(), k, 0.20);
         let mut part = random_part(g.n(), k, 3);
@@ -202,7 +202,7 @@ mod tests {
         // LP under J should keep cut edges on cheap links when possible;
         // compare against cut-objective result measured in J.
         let g = gen::stencil9(16, 16, 5);
-        let h = Hierarchy::parse("4:4", "1:100").unwrap();
+        let h = Machine::hier("4:4", "1:100").unwrap();
         let k = h.k();
         let lmax = l_max(g.total_vweight(), k, 0.25);
         let seed_part = random_part(g.n(), k, 7);
@@ -226,7 +226,7 @@ mod tests {
             .map(|_| if rng.f64() < 0.6 { 0 } else { rng.below(k as u64) as Block })
             .collect();
         let lmax = l_max(g.total_vweight(), k, 0.05);
-        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let h = Machine::hier("4:2", "1:10").unwrap();
         let moves = force_balance_serial(&g, &mut part, k, lmax, &Objective::Comm(&h), 1);
         assert!(moves > 0);
         assert!(

@@ -19,7 +19,7 @@ pub mod workspace;
 pub use gains::ConnUpdate;
 pub use workspace::RefineWorkspace;
 
-use crate::topology::{DistanceMatrix, Hierarchy};
+use crate::topology::{DistanceOracle, Machine};
 use crate::Block;
 
 /// The objective a refinement pass minimizes.
@@ -27,13 +27,14 @@ use crate::Block;
 pub enum Objective<'a> {
     /// Edge-cut (graph partitioning; distance vector `1:…:1`).
     Cut,
-    /// Communication cost `J(C, D, Π)` under a hierarchy (process
-    /// mapping), using the implicit O(ℓ) distance oracle.
-    Comm(&'a Hierarchy),
-    /// Communication cost with the materialized `k × k` distance matrix —
-    /// the paper's O(k²)-space / O(1)-lookup representation, used on the
-    /// device refinement hot path (§Perf opt 1).
-    CommMat(&'a DistanceMatrix),
+    /// Communication cost `J(C, D, Π)` under a machine model (process
+    /// mapping), every distance answered by the model's implicit oracle.
+    Comm(&'a Machine),
+    /// Communication cost through a prebuilt [`DistanceOracle`] — dense
+    /// rows (O(1) lookups) for `k ≤ DENSE_K_MAX`, the implicit model
+    /// beyond that, so the hot path never materializes O(k²) on big
+    /// machines (§Perf opt 1).
+    Oracle(&'a DistanceOracle),
 }
 
 impl<'a> Objective<'a> {
@@ -57,29 +58,23 @@ impl<'a> Objective<'a> {
                 }
                 ct - cf
             }
-            Objective::Comm(h) => {
+            Objective::Comm(m) => {
                 let mut g = 0.0;
                 for &(b, w) in conn {
-                    g += w * (h.distance(from, b) - h.distance(to, b));
+                    g += w * (m.distance(from, b) - m.distance(to, b));
                 }
                 g
             }
-            Objective::CommMat(m) => {
-                let rf = m.row(from);
-                let rt = m.row(to);
-                let mut g = 0.0;
-                for &(b, w) in conn {
-                    g += w * (rf[b as usize] - rt[b as usize]);
-                }
-                g
-            }
+            Objective::Oracle(o) => o.gain(conn, from, to),
         }
     }
 
-    /// Materialize the hot-path form: `Comm` becomes `CommMat`.
-    pub fn materialize(&self) -> Option<DistanceMatrix> {
+    /// The hot-path form: `Comm` becomes `Oracle` with the
+    /// refinement-flavor backend ([`DistanceOracle::for_refine`] — dense
+    /// for small machines, implicit beyond `DENSE_K_MAX`).
+    pub fn upgraded(&self) -> Option<DistanceOracle> {
         match self {
-            Objective::Comm(h) => Some(h.distance_matrix()),
+            Objective::Comm(m) => Some(DistanceOracle::for_refine(m)),
             _ => None,
         }
     }
@@ -190,17 +185,23 @@ impl<'a> Objective<'a> {
                 });
                 ct - cf
             }
-            Objective::Comm(h) => {
+            Objective::Comm(m) => {
                 let mut g = 0.0;
-                conn.for_each(|b, w| g += w * (h.distance(from, b) - h.distance(to, b)));
+                conn.for_each(|b, w| g += w * (m.distance(from, b) - m.distance(to, b)));
                 g
             }
-            Objective::CommMat(m) => {
-                let rf = m.row(from);
-                let rt = m.row(to);
-                let mut g = 0.0;
-                conn.for_each(|b, w| g += w * (rf[b as usize] - rt[b as usize]));
-                g
+            Objective::Oracle(o) => {
+                if let Some((rf, rt)) = o.dense_rows(from, to) {
+                    let mut g = 0.0;
+                    conn.for_each(|b, w| g += w * (rf[b as usize] - rt[b as usize]));
+                    g
+                } else {
+                    let rf = o.row(from);
+                    let rt = o.row(to);
+                    let mut g = 0.0;
+                    conn.for_each(|b, w| g += w * (rf.get(b) - rt.get(b)));
+                    g
+                }
             }
         }
     }
@@ -235,7 +236,7 @@ mod tests {
 
     #[test]
     fn comm_gain_matches_eq1() {
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         // Vertex in PE 0, neighbors: 2.0 to PE 0, 1.0 to PE 2.
         let conn = vec![(0u32, 2.0), (2u32, 1.0)];
         // Move 0 → 1: Σ conn(b)·(D[0,b] − D[1,b])
@@ -249,12 +250,31 @@ mod tests {
 
     #[test]
     fn comm_gain_positive_when_moving_toward_neighbors() {
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         // Vertex on PE 3, all neighbors on PE 0.
         let conn = vec![(0u32, 4.0)];
         // Moving to PE 1 (same node as 0): 4·(D[3,0] − D[1,0]) = 4·(10−1) = 36.
         let g = Objective::Comm(&h).gain(&conn, 3, 1);
         assert!((g - 36.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oracle_objective_matches_implicit_for_every_backend() {
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
+        let conn = vec![(0u32, 2.0), (3u32, 1.0), (6u32, 0.5)];
+        let want = Objective::Comm(&h).gain(&conn, 1, 4);
+        for oracle in [
+            DistanceOracle::implicit(&h),
+            DistanceOracle::dense(&h),
+            DistanceOracle::blocked(&h, 2),
+        ] {
+            let got = Objective::Oracle(&oracle).gain(&conn, 1, 4);
+            assert!((got - want).abs() < 1e-12, "{}", oracle.backend_name());
+        }
+        // upgraded(): small machine → dense rows.
+        let up = Objective::Comm(&h).upgraded().unwrap();
+        assert_eq!(up.backend_name(), "dense");
+        assert!(Objective::Cut.upgraded().is_none());
     }
 
     #[test]

@@ -267,7 +267,7 @@ mod tests {
     use crate::graph::{gen, EdgeList};
     use crate::partition::{block_weights as bw_of, l_max as lmax_of, max_block_weight};
     use crate::rng::Rng;
-    use crate::topology::Hierarchy;
+    use crate::topology::Machine;
 
     fn overload_partition(g: &CsrGraph, k: usize) -> Vec<Block> {
         // 70% of vertices in block 0, rest spread.
@@ -287,7 +287,7 @@ mod tests {
     fn weak_rebalance_reduces_overload() {
         let g = gen::grid2d(24, 24, false);
         let k = 8;
-        let h = Hierarchy::parse("4:2", "1:10").unwrap();
+        let h = Machine::hier("4:2", "1:10").unwrap();
         let mut part = overload_partition(&g, k);
         let lmax = lmax_of(g.total_vweight(), k, 0.03);
         let el = EdgeList::build(&g);
@@ -367,7 +367,7 @@ mod tests {
         let pool = Pool::new(1);
         let bw = bw_of(&g, &part, k);
         let conn = ConnTable::build(&pool, &g, &el, &part, k);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let mut scratch = RebalanceScratch::new();
         let mut dests = Vec::new();
         let moves = rebalance(
@@ -410,7 +410,7 @@ mod tests {
         let lmax = lmax_of(g.total_vweight(), k, 0.05);
         let el = EdgeList::build(&g);
         let pool = Pool::new(2);
-        let h = Hierarchy::parse("2:2", "1:10").unwrap();
+        let h = Machine::hier("2:2", "1:10").unwrap();
         let mut scratch = RebalanceScratch::new();
         let mut dests = Vec::new();
         // Round 1: overloaded.

@@ -14,7 +14,7 @@
 //! the host.
 
 use super::{literal_matrix_f32, Runtime};
-use crate::topology::Hierarchy;
+use crate::topology::{DistanceOracle, Machine};
 use crate::Block;
 use anyhow::{bail, Result};
 
@@ -43,7 +43,7 @@ pub fn qap_step_device(
     rt: &Runtime,
     bmat: &[f64],
     k: usize,
-    h: &Hierarchy,
+    m: &Machine,
     sigma: &[Block],
 ) -> Result<QapStepOutput> {
     assert_eq!(bmat.len(), k * k);
@@ -61,7 +61,7 @@ pub fn qap_step_device(
     for x in 0..k {
         for y in 0..k {
             w[x * kp + y] = bmat[x * k + y];
-            d[x * kp + y] = h.distance(x as Block, y as Block);
+            d[x * kp + y] = m.distance(x as Block, y as Block);
         }
         p[x * kp + sigma[x] as usize] = 1.0;
     }
@@ -96,13 +96,15 @@ pub fn swap_refine_offload(
     rt: &Runtime,
     bmat: &[f64],
     k: usize,
-    h: &Hierarchy,
+    m: &Machine,
     sigma: &mut [Block],
     max_sweeps: usize,
 ) -> Result<f64> {
+    // Host-side re-verification scans two oracle rows per candidate.
+    let oracle = DistanceOracle::auto(m);
     let mut total = 0.0;
     for _ in 0..max_sweeps {
-        let step = qap_step_device(rt, bmat, k, h, sigma)?;
+        let step = qap_step_device(rt, bmat, k, m, sigma)?;
         // Candidates with improving device scores, best first.
         let mut cand: Vec<(f64, usize, usize)> = Vec::new();
         for x in 0..k {
@@ -121,7 +123,7 @@ pub fn swap_refine_offload(
         for (_, x, y) in cand {
             // Exact delta under the current (possibly already-swapped)
             // assignment.
-            let d = crate::algo::qap::swap_delta(bmat, k, sigma, h, x, y);
+            let d = crate::algo::qap::swap_delta(bmat, k, sigma, &oracle, x, y);
             if d < -1e-9 {
                 sigma.swap(x, y);
                 total -= d;
@@ -141,6 +143,7 @@ mod tests {
     use crate::algo::qap;
     use crate::partition::comm_cost_blocks;
     use crate::rng::Rng;
+    use crate::topology::Machine;
 
     fn runtime() -> Option<Runtime> {
         let rt = Runtime::new("artifacts").ok()?;
@@ -168,31 +171,31 @@ mod tests {
     #[test]
     fn device_j_matches_host() {
         let Some(rt) = runtime() else { return };
-        let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
         let k = h.k();
         let bmat = random_bmat(k, 1);
         let sigma: Vec<Block> = (0..k as Block).collect();
         let out = qap_step_device(&rt, &bmat, k, &h, &sigma).unwrap();
-        let host = comm_cost_blocks(&bmat, k, &sigma, &h);
+        let host = comm_cost_blocks(&bmat, k, &sigma, &h.oracle());
         assert!((out.j - host).abs() < 1e-3 * host.max(1.0), "device {} vs host {}", out.j, host);
     }
 
     #[test]
     fn device_deltas_match_host_swaps() {
         let Some(rt) = runtime() else { return };
-        let h = Hierarchy::parse("4:4", "1:10").unwrap();
+        let h = Machine::hier("4:4", "1:10").unwrap();
         let k = h.k();
         let bmat = random_bmat(k, 2);
         let mut rng = Rng::new(3);
         let mut sigma: Vec<Block> = (0..k as Block).collect();
         rng.shuffle(&mut sigma);
         let out = qap_step_device(&rt, &bmat, k, &h, &sigma).unwrap();
-        let j0 = comm_cost_blocks(&bmat, k, &sigma, &h);
+        let j0 = comm_cost_blocks(&bmat, k, &sigma, &h.oracle());
         for x in 0..k {
             for y in x + 1..k {
                 let mut s2 = sigma.clone();
                 s2.swap(x, y);
-                let expect = comm_cost_blocks(&bmat, k, &s2, &h) - j0;
+                let expect = comm_cost_blocks(&bmat, k, &s2, &h.oracle()) - j0;
                 let got = out.delta[x * k + y];
                 assert!(
                     (got - expect).abs() < 1e-3 * expect.abs().max(1.0),
@@ -205,18 +208,18 @@ mod tests {
     #[test]
     fn offload_refine_matches_host_refine_quality() {
         let Some(rt) = runtime() else { return };
-        let h = Hierarchy::parse("2:4:2", "1:10:100").unwrap();
+        let h = Machine::hier("2:4:2", "1:10:100").unwrap();
         let k = h.k();
         let bmat = random_bmat(k, 4);
         let mut rng = Rng::new(5);
         let mut sigma_dev: Vec<Block> = (0..k as Block).collect();
         rng.shuffle(&mut sigma_dev);
         let mut sigma_host = sigma_dev.clone();
-        let j_init = comm_cost_blocks(&bmat, k, &sigma_dev, &h);
+        let j_init = comm_cost_blocks(&bmat, k, &sigma_dev, &h.oracle());
         swap_refine_offload(&rt, &bmat, k, &h, &mut sigma_dev, 30).unwrap();
-        qap::swap_refine(&bmat, k, &mut sigma_host, &h, 30);
-        let j_dev = comm_cost_blocks(&bmat, k, &sigma_dev, &h);
-        let j_host = comm_cost_blocks(&bmat, k, &sigma_host, &h);
+        qap::swap_refine(&bmat, k, &mut sigma_host, &h.oracle(), 30);
+        let j_dev = comm_cost_blocks(&bmat, k, &sigma_dev, &h.oracle());
+        let j_host = comm_cost_blocks(&bmat, k, &sigma_host, &h.oracle());
         assert!(j_dev <= j_init);
         assert!(j_dev <= j_host * 1.15, "device {j_dev} vs host {j_host}");
         // Still a permutation.

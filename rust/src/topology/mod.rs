@@ -4,6 +4,19 @@
 //! (each processor has `a_1` PEs, each node `a_2` processors, …) and a
 //! distance vector `D = d_1 : … : d_ℓ` (cost factor between PEs sharing
 //! only a level-`i` component). PE ids are mixed-radix with `a_1` fastest.
+//!
+//! The homogeneous [`Hierarchy`] is one machine model among several: the
+//! [`model`] subsystem defines the [`model::MachineModel`] trait
+//! (tori, fat-trees, dragonflies, heterogeneous node lists, explicit
+//! distance-matrix files) plus the [`model::DistanceOracle`] that every
+//! hot loop consults instead of materializing `k × k` matrices.
+
+pub mod model;
+
+pub use model::{
+    parse_topology, DistanceOracle, Dragonfly, FatTree, HeteroNodes, Machine, MachineModel,
+    MatrixModel, OracleRow, Torus, DENSE_K_MAX,
+};
 
 use crate::Block;
 use anyhow::{bail, Result};
@@ -25,6 +38,11 @@ impl Hierarchy {
         }
         if a.iter().any(|&x| x == 0) {
             bail!("hierarchy fan-outs must be positive");
+        }
+        // NaN or negative distances would silently poison every downstream
+        // objective (J sums, gain tables, QAP deltas) — reject them here.
+        if d.iter().any(|x| !x.is_finite() || *x < 0.0) {
+            bail!("hierarchy distances must be finite and non-negative, got {d:?}");
         }
         Ok(Hierarchy { a, d })
     }
@@ -56,6 +74,11 @@ impl Hierarchy {
     /// oracle: divide out fan-outs until the ids coincide.
     #[inline]
     pub fn distance(&self, x: Block, y: Block) -> f64 {
+        debug_assert!(
+            (x as usize) < self.k() && (y as usize) < self.k(),
+            "PE id out of range: distance({x}, {y}) on a k={} hierarchy",
+            self.k()
+        );
         if x == y {
             return 0.0;
         }
@@ -74,14 +97,7 @@ impl Hierarchy {
     /// the paper's simplest distance representation, used by the offload
     /// kernels and for small k).
     pub fn distance_matrix(&self) -> DistanceMatrix {
-        let k = self.k();
-        let mut m = vec![0.0f64; k * k];
-        for x in 0..k as Block {
-            for y in 0..k as Block {
-                m[x as usize * k + y as usize] = self.distance(x, y);
-            }
-        }
-        DistanceMatrix { k, m }
+        DistanceMatrix::from_fn(self.k(), |x, y| self.distance(x, y))
     }
 
     /// The adaptive imbalance ε′ of SharedMap (paper Eq. 2):
@@ -108,7 +124,17 @@ impl Hierarchy {
     /// Group count and per-group PE span at hierarchy level `i`
     /// (1-based from the innermost). Partitioning at level `i` splits into
     /// `a_i` blocks, each covering `prod_{j<i} a_j` PEs.
+    ///
+    /// # Panics
+    /// `level` is 1-based: level 0 has no meaning (it used to fall out as
+    /// an implicit empty product) and levels past `ℓ` name no hierarchy
+    /// component — both are hard errors.
     pub fn pes_per_block_at_level(&self, level: usize) -> usize {
+        assert!(
+            (1..=self.a.len()).contains(&level),
+            "pes_per_block_at_level: level {level} out of range 1..={} (levels are 1-based)",
+            self.a.len()
+        );
         self.a[..level - 1].iter().map(|&x| x as usize).product()
     }
 
@@ -128,6 +154,17 @@ pub struct DistanceMatrix {
 }
 
 impl DistanceMatrix {
+    /// Materialize from a pairwise distance function (any machine model).
+    pub fn from_fn(k: usize, f: impl Fn(Block, Block) -> f64) -> DistanceMatrix {
+        let mut m = vec![0.0f64; k * k];
+        for x in 0..k as Block {
+            for y in 0..k as Block {
+                m[x as usize * k + y as usize] = f(x, y);
+            }
+        }
+        DistanceMatrix { k, m }
+    }
+
     #[inline]
     pub fn get(&self, x: Block, y: Block) -> f64 {
         self.m[x as usize * self.k + y as usize]
@@ -240,10 +277,34 @@ mod tests {
     }
 
     #[test]
+    fn rejects_nan_and_negative_distances() {
+        assert!(Hierarchy::parse("4:8:6", "1:nan:100").is_err());
+        assert!(Hierarchy::parse("4:8:6", "1:NaN:100").is_err());
+        assert!(Hierarchy::parse("4:8:6", "1:-10:100").is_err());
+        assert!(Hierarchy::parse("4:8:6", "1:10:inf").is_err());
+        assert!(Hierarchy::new(vec![2, 2], vec![1.0, f64::NAN]).is_err());
+        assert!(Hierarchy::new(vec![2, 2], vec![-1.0, 10.0]).is_err());
+        // Zero stays legal (edge-cut-style distance vectors).
+        assert!(Hierarchy::new(vec![2, 2], vec![0.0, 1.0]).is_ok());
+    }
+
+    #[test]
     fn pes_per_block() {
         let h = h486();
         assert_eq!(h.pes_per_block_at_level(3), 32); // top-level blocks host 4*8 PEs
         assert_eq!(h.pes_per_block_at_level(2), 4);
         assert_eq!(h.pes_per_block_at_level(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pes_per_block_level_zero_is_a_hard_error() {
+        h486().pes_per_block_at_level(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pes_per_block_level_past_ell_is_a_hard_error() {
+        h486().pes_per_block_at_level(4);
     }
 }

@@ -1,0 +1,144 @@
+//! Dragonfly machine model — groups of routers of nodes.
+
+use super::MachineModel;
+use crate::Block;
+use anyhow::{bail, Context, Result};
+
+/// A dragonfly: `groups` all-to-all-connected groups, each with `routers`
+/// all-to-all-connected routers hosting `nodes` PEs. PE ids are
+/// mixed-radix `node + nodes·(router + routers·group)` — nodes fastest,
+/// matching the section schedule `[nodes, routers, groups]`.
+///
+/// Distances are the classic three-tier costs: `d_node` between PEs on
+/// the same router, `d_local` within a group (one local link), `d_global`
+/// across groups (local–global–local path). Defaults are hop counts
+/// `1 / 2 / 5`.
+#[derive(Clone, Debug)]
+pub struct Dragonfly {
+    groups: u32,
+    routers: u32,
+    nodes: u32,
+    d_node: f64,
+    d_local: f64,
+    d_global: f64,
+}
+
+impl Dragonfly {
+    pub fn new(
+        groups: u32,
+        routers: u32,
+        nodes: u32,
+        d_node: f64,
+        d_local: f64,
+        d_global: f64,
+    ) -> Result<Dragonfly> {
+        if groups == 0 || routers == 0 || nodes == 0 {
+            bail!("dragonfly dimensions must be positive, got {groups}:{routers}:{nodes}");
+        }
+        for d in [d_node, d_local, d_global] {
+            if !d.is_finite() || d < 0.0 {
+                bail!("dragonfly distances must be finite and non-negative, got {d}");
+            }
+        }
+        Ok(Dragonfly { groups, routers, nodes, d_node, d_local, d_global })
+    }
+
+    /// Parse the spec body `G:R:N` or `G:R:N/d_node,d_local,d_global`
+    /// (e.g. `8:4:4/1,2,5`).
+    pub fn parse(rest: &str) -> Result<Dragonfly> {
+        let (dims_s, d_s) = match rest.split_once('/') {
+            Some((a, b)) => (a, Some(b)),
+            None => (rest, None),
+        };
+        let dims: Vec<u32> = dims_s
+            .split(':')
+            .map(|t| t.trim().parse::<u32>().map_err(Into::into))
+            .collect::<Result<_>>()
+            .with_context(|| format!("dragonfly dims `{dims_s}` (want G:R:N)"))?;
+        let [groups, routers, nodes] = dims[..] else {
+            bail!("dragonfly dims `{dims_s}` want exactly G:R:N");
+        };
+        let (d_node, d_local, d_global) = match d_s {
+            Some(d) => {
+                let ds: Vec<f64> = d
+                    .split(',')
+                    .map(|t| t.trim().parse::<f64>().map_err(Into::into))
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("dragonfly distances `{d}`"))?;
+                let [dn, dl, dg] = ds[..] else {
+                    bail!("dragonfly distances `{d}` want exactly d_node,d_local,d_global");
+                };
+                (dn, dl, dg)
+            }
+            None => (1.0, 2.0, 5.0),
+        };
+        Dragonfly::new(groups, routers, nodes, d_node, d_local, d_global)
+    }
+}
+
+impl MachineModel for Dragonfly {
+    fn k(&self) -> usize {
+        self.groups as usize * self.routers as usize * self.nodes as usize
+    }
+
+    fn distance(&self, x: Block, y: Block) -> f64 {
+        if x == y {
+            return 0.0;
+        }
+        if x / self.nodes == y / self.nodes {
+            return self.d_node;
+        }
+        let per_group = self.nodes * self.routers;
+        if x / per_group == y / per_group {
+            self.d_local
+        } else {
+            self.d_global
+        }
+    }
+
+    fn section_schedule(&self) -> Vec<u32> {
+        vec![self.nodes, self.routers, self.groups]
+    }
+
+    fn label(&self) -> String {
+        format!("dragonfly:{}:{}:{}", self.groups, self.routers, self.nodes)
+    }
+
+    fn spec_string(&self) -> String {
+        format!("{}/{},{},{}", self.label(), self.d_node, self.d_local, self.d_global)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_tier_distances() {
+        let d = Dragonfly::parse("4:4:2/1,2,5").unwrap();
+        assert_eq!(d.k(), 32);
+        assert_eq!(d.distance(0, 0), 0.0);
+        assert_eq!(d.distance(0, 1), 1.0); // same router
+        assert_eq!(d.distance(0, 2), 2.0); // same group, other router
+        assert_eq!(d.distance(0, 8), 5.0); // other group
+        assert_eq!(d.section_schedule(), vec![2, 4, 4]);
+    }
+
+    #[test]
+    fn defaults_are_hop_counts() {
+        let d = Dragonfly::parse("2:2:2").unwrap();
+        assert_eq!(d.distance(0, 1), 1.0);
+        assert_eq!(d.distance(0, 2), 2.0);
+        assert_eq!(d.distance(0, 4), 5.0);
+        assert_eq!(d.spec_string(), "dragonfly:2:2:2/1,2,5");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(Dragonfly::parse("4:4").is_err());
+        assert!(Dragonfly::parse("4:0:2").is_err());
+        assert!(Dragonfly::parse("4:4:2/1,2").is_err());
+        assert!(Dragonfly::parse("4:4:2/1,2,nan").is_err());
+        assert!(Dragonfly::parse("4:4:2/1,-2,5").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Fat-tree machine model — per-level link weights, up-and-down cost.
+
+use super::MachineModel;
+use crate::Block;
+use anyhow::{bail, Context, Result};
+
+/// A fat-tree with `L` switch levels: `arity[0]` PEs per edge switch,
+/// `arity[1]` edge switches per level-2 switch, … PE ids are mixed-radix
+/// with `arity[0]` fastest (the multisection numbering).
+///
+/// A message between PEs whose lowest common switch sits at level `i`
+/// climbs the links of levels `1..=i` on the way up and again on the way
+/// down: `distance = 2 · Σ_{j=1..i} link_w[j−1]`. Unlike the flat
+/// per-level `d_i` of a [`crate::topology::Hierarchy`], the cost
+/// *accumulates* along the path, which is how fat-tree latency behaves.
+#[derive(Clone, Debug)]
+pub struct FatTree {
+    arity: Vec<u32>,
+    link_w: Vec<f64>,
+}
+
+impl FatTree {
+    pub fn new(arity: Vec<u32>, link_w: Vec<f64>) -> Result<FatTree> {
+        if arity.is_empty() || arity.len() != link_w.len() {
+            bail!("fat-tree arities and link weights must be non-empty and equal length");
+        }
+        if arity.iter().any(|&a| a == 0) {
+            bail!("fat-tree arities must be positive, got {arity:?}");
+        }
+        if link_w.iter().any(|w| !w.is_finite() || *w < 0.0) {
+            bail!("fat-tree link weights must be finite and non-negative, got {link_w:?}");
+        }
+        Ok(FatTree { arity, link_w })
+    }
+
+    /// Parse the spec body `A1,…,AL/W1,…,WL`, optionally prefixed with a
+    /// redundant level count: `L:A1,…,AL/W1,…,WL` (e.g.
+    /// `3:2,16,48/1,5,20`). A declared `L` must match the list length.
+    pub fn parse(rest: &str) -> Result<FatTree> {
+        let (declared, body) = match rest.split_once(':') {
+            Some((head, tail)) => (
+                Some(
+                    head.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("fat-tree level count `{head}`"))?,
+                ),
+                tail,
+            ),
+            None => (None, rest),
+        };
+        let (a_s, w_s) = body
+            .split_once('/')
+            .with_context(|| format!("fat-tree spec `{body}` wants A1,…,AL/W1,…,WL"))?;
+        let arity: Vec<u32> = a_s
+            .split(',')
+            .map(|t| t.trim().parse::<u32>().map_err(Into::into))
+            .collect::<Result<_>>()
+            .with_context(|| format!("fat-tree arities `{a_s}`"))?;
+        let link_w: Vec<f64> = w_s
+            .split(',')
+            .map(|t| t.trim().parse::<f64>().map_err(Into::into))
+            .collect::<Result<_>>()
+            .with_context(|| format!("fat-tree link weights `{w_s}`"))?;
+        if let Some(l) = declared {
+            if l != arity.len() {
+                bail!("fat-tree declares {l} levels but lists {} arities", arity.len());
+            }
+        }
+        FatTree::new(arity, link_w)
+    }
+}
+
+impl MachineModel for FatTree {
+    fn k(&self) -> usize {
+        self.arity.iter().map(|&a| a as usize).product()
+    }
+
+    fn distance(&self, x: Block, y: Block) -> f64 {
+        if x == y {
+            return 0.0;
+        }
+        let (mut x, mut y) = (x, y);
+        let mut cost = 0.0;
+        for (i, &a) in self.arity.iter().enumerate() {
+            // Climb one level on both sides.
+            cost += 2.0 * self.link_w[i];
+            x /= a;
+            y /= a;
+            if x == y {
+                break;
+            }
+        }
+        cost
+    }
+
+    fn section_schedule(&self) -> Vec<u32> {
+        self.arity.clone()
+    }
+
+    fn label(&self) -> String {
+        self.spec_string()
+    }
+
+    fn spec_string(&self) -> String {
+        let a: Vec<String> = self.arity.iter().map(|x| x.to_string()).collect();
+        let w: Vec<String> = self.link_w.iter().map(|x| x.to_string()).collect();
+        format!("fattree:{}/{}", a.join(","), w.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ft() -> FatTree {
+        FatTree::parse("2,4,4/1,5,20").unwrap()
+    }
+
+    #[test]
+    fn k_and_schedule() {
+        let f = ft();
+        assert_eq!(f.k(), 32);
+        assert_eq!(f.section_schedule(), vec![2, 4, 4]);
+    }
+
+    #[test]
+    fn path_cost_accumulates_up_and_down() {
+        let f = ft();
+        // Same edge switch (ids 0,1): 2·1.
+        assert_eq!(f.distance(0, 1), 2.0);
+        // Through the level-2 switch: 2·(1+5).
+        assert_eq!(f.distance(0, 2), 12.0);
+        // Through the core: 2·(1+5+20).
+        assert_eq!(f.distance(0, 8), 52.0);
+        assert_eq!(f.distance(0, 0), 0.0);
+    }
+
+    #[test]
+    fn declared_level_count_is_checked() {
+        assert!(FatTree::parse("3:2,4,4/1,5,20").is_ok());
+        assert!(FatTree::parse("2:2,4,4/1,5,20").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FatTree::parse("2,4/1").is_err()); // length mismatch
+        assert!(FatTree::parse("2,0/1,5").is_err());
+        assert!(FatTree::parse("2,4/1,nan").is_err());
+        assert!(FatTree::parse("2,4/1,-5").is_err());
+        assert!(FatTree::parse("2,4").is_err()); // missing weights
+    }
+}

@@ -1,0 +1,199 @@
+//! Explicit distance-matrix machine model (`file:PATH`).
+
+use super::MachineModel;
+use crate::Block;
+use anyhow::{bail, Context, Result};
+
+/// Largest `k` a matrix file may declare — the model stores the full
+/// `k × k` table, so this caps memory at ~0.5 GiB.
+pub const FILE_K_MAX: usize = 8192;
+
+/// A machine described by an explicit `k × k` distance table.
+///
+/// File format (whitespace tolerant, `#` comments):
+///
+/// ```text
+/// # k
+/// 4
+/// 0 1 10 10
+/// 1 0 10 10
+/// 10 10 0 1
+/// 10 10 1 0
+/// ```
+///
+/// The table must be finite, non-negative, symmetric and zero on the
+/// diagonal. The schedule is the flat `[k]` (an arbitrary matrix carries
+/// no hierarchy), so solvers do one `k`-way partition and let the
+/// distances steer refinement.
+#[derive(Clone, Debug)]
+pub struct MatrixModel {
+    k: usize,
+    m: Vec<f64>,
+    /// Where the matrix came from (`file:SOURCE` round trip).
+    source: String,
+    /// FNV-1a over `k` and the table bits — two models with the same
+    /// source label but different tables must not compare equal.
+    digest: u64,
+    /// True when loaded from a real path (`from_path`), so the spec
+    /// string round-trips on any host that has the file.
+    from_disk: bool,
+}
+
+impl MatrixModel {
+    /// Parse the file format from a string; `source` names it for labels
+    /// and the spec round trip.
+    pub fn from_text(text: &str, source: impl Into<String>) -> Result<MatrixModel> {
+        let mut tokens = text
+            .lines()
+            .map(|l| l.split('#').next().unwrap_or(""))
+            .flat_map(|l| l.split_whitespace());
+        let k: usize = tokens
+            .next()
+            .context("distance-matrix file is empty (want k, then k×k values)")?
+            .parse()
+            .context("first value must be k")?;
+        if k == 0 {
+            bail!("distance-matrix file declares k = 0");
+        }
+        if k > FILE_K_MAX {
+            bail!("distance-matrix file declares k = {k} > {FILE_K_MAX} (dense storage cap)");
+        }
+        let mut m = Vec::with_capacity(k * k);
+        for tok in tokens.by_ref().take(k * k) {
+            m.push(tok.parse::<f64>().with_context(|| format!("bad distance value `{tok}`"))?);
+        }
+        if m.len() != k * k {
+            bail!("distance-matrix file has {} values, want k² = {}", m.len(), k * k);
+        }
+        if tokens.next().is_some() {
+            bail!("distance-matrix file has trailing values after k² entries");
+        }
+        for x in 0..k {
+            for y in 0..k {
+                let v = m[x * k + y];
+                if !v.is_finite() || v < 0.0 {
+                    bail!("distance[{x},{y}] = {v} must be finite and non-negative");
+                }
+                if x == y && v != 0.0 {
+                    bail!("distance[{x},{x}] = {v} must be zero on the diagonal");
+                }
+                if (v - m[y * k + x]).abs() > 1e-9 * v.abs().max(1.0) {
+                    bail!("distance matrix is not symmetric at ({x},{y})");
+                }
+            }
+        }
+        let mut digest = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+        let mut mix = |bytes: &[u8]| {
+            for &b in bytes {
+                digest ^= b as u64;
+                digest = digest.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        mix(&(k as u64).to_le_bytes());
+        for v in &m {
+            mix(&v.to_bits().to_le_bytes());
+        }
+        Ok(MatrixModel { k, m, source: source.into(), digest, from_disk: false })
+    }
+
+    /// Load `file:PATH` from disk.
+    pub fn from_path(path: &str) -> Result<MatrixModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read distance-matrix file {path}"))?;
+        let mut model = Self::from_text(&text, path)?;
+        model.from_disk = true;
+        Ok(model)
+    }
+}
+
+impl MachineModel for MatrixModel {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn distance(&self, x: Block, y: Block) -> f64 {
+        self.m[x as usize * self.k + y as usize]
+    }
+
+    fn section_schedule(&self) -> Vec<u32> {
+        vec![self.k as u32]
+    }
+
+    fn label(&self) -> String {
+        format!("file:{}(k={})", self.source, self.k)
+    }
+
+    fn spec_string(&self) -> String {
+        format!("file:{}", self.source)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.digest
+    }
+
+    fn spec_round_trips(&self) -> bool {
+        // An in-memory table has no path another host could re-read.
+        self.from_disk
+    }
+
+    fn lookup_is_table(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "# two nodes of two PEs\n4\n0 1 10 10\n1 0 10 10\n10 10 0 1\n10 10 1 0\n";
+
+    #[test]
+    fn parses_and_looks_up() {
+        let m = MatrixModel::from_text(GOOD, "test").unwrap();
+        assert_eq!(m.k(), 4);
+        assert_eq!(m.distance(0, 1), 1.0);
+        assert_eq!(m.distance(0, 2), 10.0);
+        assert_eq!(m.distance(3, 3), 0.0);
+        assert_eq!(m.section_schedule(), vec![4]);
+    }
+
+    #[test]
+    fn round_trips_through_a_real_file() {
+        let path = std::env::temp_dir().join(format!("heipa_dist_{}.mat", std::process::id()));
+        std::fs::write(&path, GOOD).unwrap();
+        let m = MatrixModel::from_path(path.to_str().unwrap()).unwrap();
+        assert_eq!(m.k(), 4);
+        assert_eq!(m.spec_string(), format!("file:{}", path.display()));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn same_label_different_tables_have_different_fingerprints() {
+        let a = MatrixModel::from_text("2\n0 1\n1 0", "inline").unwrap();
+        let b = MatrixModel::from_text("2\n0 5\n5 0", "inline").unwrap();
+        assert_eq!(a.spec_string(), b.spec_string());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let ma = crate::topology::Machine::from_model(a).unwrap();
+        let mb = crate::topology::Machine::from_model(b).unwrap();
+        assert_ne!(ma, mb, "distinct tables must not compare equal");
+        let a2 = MatrixModel::from_text("2\n0 1\n1 0", "inline").unwrap();
+        assert_eq!(crate::topology::Machine::from_model(a2).unwrap(), ma);
+    }
+
+    #[test]
+    fn rejects_malformed_tables() {
+        // Wrong count.
+        assert!(MatrixModel::from_text("2\n0 1 1", "t").is_err());
+        // Trailing junk.
+        assert!(MatrixModel::from_text("1\n0\n7", "t").is_err());
+        // Asymmetric.
+        assert!(MatrixModel::from_text("2\n0 1\n2 0", "t").is_err());
+        // Nonzero diagonal.
+        assert!(MatrixModel::from_text("2\n1 1\n1 0", "t").is_err());
+        // NaN / negative.
+        assert!(MatrixModel::from_text("2\n0 nan\nnan 0", "t").is_err());
+        assert!(MatrixModel::from_text("2\n0 -1\n-1 0", "t").is_err());
+        // Empty.
+        assert!(MatrixModel::from_text("# nothing\n", "t").is_err());
+    }
+}

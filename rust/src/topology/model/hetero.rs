@@ -1,0 +1,136 @@
+//! Heterogeneous machine model — uneven node sizes (hostfile-style).
+
+use super::MachineModel;
+use crate::Block;
+use anyhow::{bail, Context, Result};
+
+/// A cluster of nodes with *uneven* PE counts — the shape a hostfile
+/// (`node0 slots=4`, `node1 slots=8`, …) describes. PE ids are assigned
+/// consecutively per node; `distance` is `d_intra` within a node and
+/// `d_inter` across nodes.
+///
+/// Uneven fan-outs cannot feed a uniform multisection schedule, so
+/// [`section_schedule`](MachineModel::section_schedule) is the flat
+/// `[k]`: the hierarchical solvers do a single `k`-way partition and the
+/// model's distances steer refinement toward co-locating traffic on the
+/// big nodes.
+#[derive(Clone, Debug)]
+pub struct HeteroNodes {
+    sizes: Vec<u32>,
+    d_intra: f64,
+    d_inter: f64,
+    /// PE → node index (O(1) distance lookups).
+    node_of: Vec<u32>,
+}
+
+impl HeteroNodes {
+    pub fn new(sizes: Vec<u32>, d_intra: f64, d_inter: f64) -> Result<HeteroNodes> {
+        if sizes.is_empty() {
+            bail!("hetero machine needs at least one node");
+        }
+        if sizes.iter().any(|&s| s == 0) {
+            bail!("hetero node sizes must be positive, got {sizes:?}");
+        }
+        for d in [d_intra, d_inter] {
+            if !d.is_finite() || d < 0.0 {
+                bail!("hetero distances must be finite and non-negative, got {d}");
+            }
+        }
+        let mut node_of = Vec::with_capacity(sizes.iter().map(|&s| s as usize).sum());
+        for (i, &s) in sizes.iter().enumerate() {
+            node_of.resize(node_of.len() + s as usize, i as u32);
+        }
+        Ok(HeteroNodes { sizes, d_intra, d_inter, node_of })
+    }
+
+    /// Parse the spec body `S1+S2+…` or `S1+S2+…/d_intra,d_inter`
+    /// (e.g. `4+8+4/1,10`). Defaults: `d_intra = 1`, `d_inter = 10`.
+    pub fn parse(rest: &str) -> Result<HeteroNodes> {
+        let (sizes_s, d_s) = match rest.split_once('/') {
+            Some((a, b)) => (a, Some(b)),
+            None => (rest, None),
+        };
+        let sizes: Vec<u32> = sizes_s
+            .split('+')
+            .map(|t| t.trim().parse::<u32>().map_err(Into::into))
+            .collect::<Result<_>>()
+            .with_context(|| format!("hetero node sizes `{sizes_s}` (want e.g. 4+8+4)"))?;
+        let (d_intra, d_inter) = match d_s {
+            Some(d) => {
+                let ds: Vec<f64> = d
+                    .split(',')
+                    .map(|t| t.trim().parse::<f64>().map_err(Into::into))
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("hetero distances `{d}`"))?;
+                let [di, dx] = ds[..] else {
+                    bail!("hetero distances `{d}` want exactly d_intra,d_inter");
+                };
+                (di, dx)
+            }
+            None => (1.0, 10.0),
+        };
+        HeteroNodes::new(sizes, d_intra, d_inter)
+    }
+}
+
+impl MachineModel for HeteroNodes {
+    fn k(&self) -> usize {
+        self.node_of.len()
+    }
+
+    fn distance(&self, x: Block, y: Block) -> f64 {
+        if x == y {
+            return 0.0;
+        }
+        if self.node_of[x as usize] == self.node_of[y as usize] {
+            self.d_intra
+        } else {
+            self.d_inter
+        }
+    }
+
+    fn section_schedule(&self) -> Vec<u32> {
+        vec![self.node_of.len() as u32]
+    }
+
+    fn label(&self) -> String {
+        let s: Vec<String> = self.sizes.iter().map(|x| x.to_string()).collect();
+        format!("hetero:{}", s.join("+"))
+    }
+
+    fn spec_string(&self) -> String {
+        format!("{}/{},{}", self.label(), self.d_intra, self.d_inter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uneven_nodes_two_tier_distance() {
+        let h = HeteroNodes::parse("4+8+4/1,10").unwrap();
+        assert_eq!(h.k(), 16);
+        assert_eq!(h.distance(0, 3), 1.0); // both on node 0
+        assert_eq!(h.distance(0, 4), 10.0); // node 0 vs node 1
+        assert_eq!(h.distance(4, 11), 1.0); // both on the big node
+        assert_eq!(h.distance(11, 12), 10.0);
+        assert_eq!(h.distance(5, 5), 0.0);
+    }
+
+    #[test]
+    fn flat_schedule() {
+        let h = HeteroNodes::parse("4+8+4").unwrap();
+        assert_eq!(h.section_schedule(), vec![16]);
+        assert_eq!(h.spec_string(), "hetero:4+8+4/1,10");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(HeteroNodes::parse("").is_err());
+        assert!(HeteroNodes::parse("4+0").is_err());
+        assert!(HeteroNodes::parse("4+4/1").is_err());
+        assert!(HeteroNodes::parse("4+4/1,nan").is_err());
+        assert!(HeteroNodes::parse("4+4/-1,10").is_err());
+    }
+}

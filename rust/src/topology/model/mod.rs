@@ -1,0 +1,412 @@
+//! Pluggable machine models — the subsystem behind the `topology=` spec
+//! key.
+//!
+//! The paper defines process mapping against a homogeneous hierarchy
+//! `a_1:…:a_ℓ / d_1:…:d_ℓ`, but real targets are tori, fat-trees,
+//! dragonflies and heterogeneous node mixes. Every one of them is a
+//! [`MachineModel`]; the cheap-to-clone [`Machine`] handle is what the
+//! engine, the solvers and the refinement hot loops consume.
+//!
+//! Spec strings (see [`parse_topology`]):
+//!
+//! | scheme | example | model |
+//! |---|---|---|
+//! | `hier` | `hier:4:8:6/1:10:100` | homogeneous [`Hierarchy`] |
+//! | `torus` | `torus:4x4x4` / `torus:8x8/2.5` | wrap-around grid, hop distance |
+//! | `mesh` | `mesh:16x16` | grid without wrap-around |
+//! | `fattree` | `fattree:3:2,16,48/1,5,20` | fat-tree, per-level link weights |
+//! | `dragonfly` | `dragonfly:8:4:4/1,2,5` | group/router/node |
+//! | `hetero` | `hetero:4+8+4/1,10` | uneven node sizes (hostfile-style) |
+//! | `file` | `file:dist.mat` | explicit distance matrix |
+
+pub mod dragonfly;
+pub mod fattree;
+pub mod filemat;
+pub mod hetero;
+pub mod oracle;
+pub mod torus;
+
+pub use dragonfly::Dragonfly;
+pub use fattree::FatTree;
+pub use filemat::MatrixModel;
+pub use hetero::HeteroNodes;
+pub use oracle::{DistanceOracle, OracleRow, DENSE_K_MAX};
+pub use torus::Torus;
+
+use super::Hierarchy;
+use crate::Block;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// A machine model: `k` PEs, a pairwise distance function, and a
+/// hierarchy-section schedule for multisection.
+///
+/// ## How multisection consumes the level schedule
+///
+/// [`section_schedule`](MachineModel::section_schedule) returns fan-outs
+/// `a_1 … a_ℓ` **innermost-first** with `Π a_i = k`. The hierarchical
+/// multisection solvers (`gpu_hm`, `sharedmap`) recurse outermost-first:
+/// at level `i = ℓ, ℓ−1, …, 1` they partition the current subgraph into
+/// `a_i` blocks and assign each block the contiguous PE range
+/// `[off + b·span, off + (b+1)·span)` with `span = Π_{j<i} a_j` — i.e.
+/// PE ids are mixed-radix in the schedule with `a_1` fastest, and
+/// [`distance`](MachineModel::distance) must agree with that numbering.
+/// Models whose structure is irregular (uneven node sizes, arbitrary
+/// matrix files) return the flat schedule `[k]`: multisection then
+/// degenerates to a single `k`-way partition and the model's distances
+/// steer refinement instead.
+///
+/// Distances must be finite, non-negative, symmetric, and zero on the
+/// diagonal; implementations validate this at construction (tested by
+/// the oracle-parity suite in `tests/models.rs`).
+pub trait MachineModel: fmt::Debug + Send + Sync {
+    /// Total number of PEs.
+    fn k(&self) -> usize;
+
+    /// Distance factor `D_xy` between PEs `x` and `y` — the implicit
+    /// oracle: O(ℓ) for hierarchical models, O(dim) for tori, O(1) for
+    /// table-backed models. Never materializes anything.
+    fn distance(&self, x: Block, y: Block) -> f64;
+
+    /// Innermost-first fan-outs for hierarchical multisection (see the
+    /// trait docs). Must multiply to `k`.
+    fn section_schedule(&self) -> Vec<u32>;
+
+    /// Human-readable label (CSV rows, progress lines).
+    fn label(&self) -> String;
+
+    /// Canonical `topology=` spec string; `parse_topology(spec_string())`
+    /// reconstructs an equivalent model (wire-protocol round trip).
+    fn spec_string(&self) -> String;
+
+    /// The underlying homogeneous hierarchy, when this model is one.
+    fn as_hierarchy(&self) -> Option<&Hierarchy> {
+        None
+    }
+
+    /// Structural fingerprint for [`Machine`] equality. Models fully
+    /// determined by their spec string keep the default `0`; models with
+    /// out-of-band content (e.g. a distance table loaded from a file or
+    /// built in memory) must hash that content here, so two machines
+    /// with the same label but different tables never compare equal.
+    fn fingerprint(&self) -> u64 {
+        0
+    }
+
+    /// Does `parse_topology(spec_string())` reconstruct an equivalent
+    /// model on *any* host? `false` for models whose content lives only
+    /// in this process (e.g. a [`MatrixModel`] built from an in-memory
+    /// string) — such machines must not be lifted onto the wire.
+    fn spec_round_trips(&self) -> bool {
+        true
+    }
+
+    /// Is [`distance`](MachineModel::distance) already an O(1) table
+    /// lookup? Oracles then skip dense materialization and row caching —
+    /// both would only duplicate the model's own table.
+    fn lookup_is_table(&self) -> bool {
+        false
+    }
+}
+
+impl MachineModel for Hierarchy {
+    fn k(&self) -> usize {
+        Hierarchy::k(self)
+    }
+
+    fn distance(&self, x: Block, y: Block) -> f64 {
+        Hierarchy::distance(self, x, y)
+    }
+
+    fn section_schedule(&self) -> Vec<u32> {
+        self.a.clone()
+    }
+
+    fn label(&self) -> String {
+        Hierarchy::label(self)
+    }
+
+    fn spec_string(&self) -> String {
+        format!("hier:{}", Hierarchy::label(self))
+    }
+
+    fn as_hierarchy(&self) -> Option<&Hierarchy> {
+        Some(self)
+    }
+}
+
+/// Shared, cheap-to-clone handle to a validated [`MachineModel`] — the
+/// machine-side argument of every solver, metric and refinement pass.
+/// Construction validates the section schedule once and caches it.
+#[derive(Clone)]
+pub struct Machine {
+    model: Arc<dyn MachineModel>,
+    schedule: Arc<[u32]>,
+    k: usize,
+}
+
+impl fmt::Debug for Machine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Machine({})", self.model.spec_string())
+    }
+}
+
+impl PartialEq for Machine {
+    fn eq(&self, other: &Self) -> bool {
+        self.model.spec_string() == other.model.spec_string()
+            && self.model.fingerprint() == other.model.fingerprint()
+    }
+}
+
+impl From<Hierarchy> for Machine {
+    fn from(h: Hierarchy) -> Machine {
+        // A constructed Hierarchy always has a consistent schedule.
+        Machine::new(Arc::new(h)).expect("hierarchy is a valid machine model")
+    }
+}
+
+impl Machine {
+    /// Wrap and validate a model: `k ≥ 1` and a positive schedule whose
+    /// product equals `k`.
+    pub fn new(model: Arc<dyn MachineModel>) -> Result<Machine> {
+        let k = model.k();
+        if k == 0 {
+            bail!("machine model `{}` has zero PEs", model.label());
+        }
+        let schedule = model.section_schedule();
+        if schedule.is_empty() || schedule.iter().any(|&a| a == 0) {
+            bail!("machine model `{}` has an empty or zero section schedule", model.label());
+        }
+        let prod: usize = schedule.iter().map(|&a| a as usize).product();
+        if prod != k {
+            bail!(
+                "machine model `{}`: section schedule {:?} multiplies to {prod}, but k = {k}",
+                model.label(),
+                schedule
+            );
+        }
+        Ok(Machine { k, schedule: schedule.into(), model })
+    }
+
+    /// [`Machine::new`] for an owned model value.
+    pub fn from_model<M: MachineModel + 'static>(model: M) -> Result<Machine> {
+        Machine::new(Arc::new(model))
+    }
+
+    /// Homogeneous hierarchy from the classic two-string form
+    /// (`"4:8:6"`, `"1:10:100"`).
+    pub fn hier(hier: &str, dist: &str) -> Result<Machine> {
+        Machine::new(Arc::new(Hierarchy::parse(hier, dist)?))
+    }
+
+    /// Parse a `topology=` spec string (see [`parse_topology`]).
+    pub fn parse_spec(spec: &str) -> Result<Machine> {
+        parse_topology(spec)
+    }
+
+    /// The one resolution rule every front-end shares: a `topology` spec
+    /// string wins when present, the `hierarchy`/`distance` pair
+    /// otherwise. (`MapSpec::machine`, `RunConfig::machine` and the CLI
+    /// all call this, so precedence can never diverge between them.)
+    pub fn resolve(topology: Option<&str>, hier: &str, dist: &str) -> Result<Machine> {
+        match topology {
+            Some(spec) => Machine::parse_spec(spec),
+            None => Machine::hier(hier, dist),
+        }
+    }
+
+    /// See [`MachineModel::spec_round_trips`].
+    pub fn spec_round_trips(&self) -> bool {
+        self.model.spec_round_trips()
+    }
+
+    /// See [`MachineModel::lookup_is_table`].
+    pub fn lookup_is_table(&self) -> bool {
+        self.model.lookup_is_table()
+    }
+
+    /// Total number of PEs.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of multisection levels (length of the schedule).
+    pub fn levels(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Innermost-first section schedule (see [`MachineModel`] docs).
+    pub fn schedule(&self) -> &[u32] {
+        &self.schedule
+    }
+
+    /// PE span of one block when sectioning at `level` (1-based from the
+    /// innermost): `Π_{j<level} a_j`. Panics on level 0 or past `ℓ`.
+    pub fn pes_per_block_at_level(&self, level: usize) -> usize {
+        assert!(
+            (1..=self.schedule.len()).contains(&level),
+            "pes_per_block_at_level: level {level} out of range 1..={} (levels are 1-based)",
+            self.schedule.len()
+        );
+        self.schedule[..level - 1].iter().map(|&x| x as usize).product()
+    }
+
+    /// Distance factor `D_xy` via the model's implicit oracle.
+    #[inline]
+    pub fn distance(&self, x: Block, y: Block) -> f64 {
+        debug_assert!(
+            (x as usize) < self.k && (y as usize) < self.k,
+            "PE id out of range: distance({x}, {y}) on a k={} machine",
+            self.k
+        );
+        self.model.distance(x, y)
+    }
+
+    pub fn label(&self) -> String {
+        self.model.label()
+    }
+
+    /// Canonical `topology=` spec string (wire round trip).
+    pub fn spec_string(&self) -> String {
+        self.model.spec_string()
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &dyn MachineModel {
+        &*self.model
+    }
+
+    /// The underlying homogeneous hierarchy, when this machine is one.
+    pub fn as_hierarchy(&self) -> Option<&Hierarchy> {
+        self.model.as_hierarchy()
+    }
+
+    /// General-purpose oracle: dense rows for small machines, the blocked
+    /// row cache beyond [`DENSE_K_MAX`] (serial QAP-style scans).
+    pub fn oracle(&self) -> DistanceOracle {
+        DistanceOracle::auto(self)
+    }
+
+    /// Refinement-flavor oracle: dense rows for small machines, the
+    /// lock-free implicit oracle beyond [`DENSE_K_MAX`] (parallel gain
+    /// kernels must not contend on a row-cache lock).
+    pub fn oracle_for_refine(&self) -> DistanceOracle {
+        DistanceOracle::for_refine(self)
+    }
+
+    /// Materialized `k × k` matrix (device uploads, small `k` only).
+    pub fn dense_matrix(&self) -> super::DistanceMatrix {
+        super::DistanceMatrix::from_fn(self.k, |x, y| self.model.distance(x, y))
+    }
+}
+
+/// The spec schemes [`parse_topology`] understands.
+pub fn known_schemes() -> [&'static str; 7] {
+    ["hier", "torus", "mesh", "fattree", "dragonfly", "hetero", "file"]
+}
+
+/// Parse a `topology=` spec string into a [`Machine`].
+///
+/// * `hier:4:8:6/1:10:100` — homogeneous hierarchy
+/// * `torus:4x4x4[/W]` — k-dim torus, hop distance × link weight `W`
+/// * `mesh:16x16[/W]` — k-dim mesh (no wrap-around)
+/// * `fattree:[L:]A1,…,AL/W1,…,WL` — fat-tree arities + per-level link
+///   weights (cost = 2·Σ of the climbed links)
+/// * `dragonfly:G:R:N[/d_node,d_local,d_global]` — groups × routers ×
+///   nodes
+/// * `hetero:S1+S2+…[/d_intra,d_inter]` — heterogeneous node sizes
+/// * `file:PATH` — explicit distance matrix file
+pub fn parse_topology(spec: &str) -> Result<Machine> {
+    let spec = spec.trim();
+    let Some((scheme, rest)) = spec.split_once(':') else {
+        bail!(
+            "topology spec `{spec}` needs a `scheme:` prefix (known schemes: {})",
+            known_schemes().join(", ")
+        );
+    };
+    match scheme {
+        "hier" => {
+            let (a, d) = rest
+                .split_once('/')
+                .with_context(|| format!("hier spec `{rest}` wants A1:…:AL/D1:…:DL"))?;
+            Machine::hier(a, d)
+        }
+        "torus" => Machine::from_model(Torus::parse(rest, true)?),
+        "mesh" => Machine::from_model(Torus::parse(rest, false)?),
+        "fattree" => Machine::from_model(FatTree::parse(rest)?),
+        "dragonfly" => Machine::from_model(Dragonfly::parse(rest)?),
+        "hetero" => Machine::from_model(HeteroNodes::parse(rest)?),
+        "file" => Machine::from_model(MatrixModel::from_path(rest)?),
+        other => bail!(
+            "unknown topology scheme `{other}` (known schemes: {})",
+            known_schemes().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_is_a_machine_model() {
+        let m = Machine::hier("4:8:6", "1:10:100").unwrap();
+        assert_eq!(m.k(), 192);
+        assert_eq!(m.levels(), 3);
+        assert_eq!(m.schedule(), &[4, 8, 6]);
+        assert_eq!(m.distance(0, 3), 1.0);
+        assert_eq!(m.distance(0, 4), 10.0);
+        assert_eq!(m.distance(0, 191), 100.0);
+        assert!(m.as_hierarchy().is_some());
+        assert_eq!(m.pes_per_block_at_level(3), 32);
+    }
+
+    #[test]
+    fn parse_registry_covers_every_scheme() {
+        for spec in [
+            "hier:4:8:2/1:10:100",
+            "torus:4x4x4",
+            "mesh:8x8",
+            "fattree:3:2,4,4/1,5,20",
+            "dragonfly:4:4:2/1,2,5",
+            "hetero:4+8+4/1,10",
+        ] {
+            let m = parse_topology(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(m.k() > 0, "{spec}");
+            // Round trip: the canonical spec string parses to an equal machine.
+            let m2 = parse_topology(&m.spec_string()).unwrap();
+            assert_eq!(m, m2, "{spec} round trip");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_topology("nope:1:2").is_err());
+        assert!(parse_topology("justastring").is_err());
+        assert!(parse_topology("hier:4:8:2").is_err()); // missing /distances
+        assert!(parse_topology("torus:0x4").is_err());
+        assert!(parse_topology("file:/no/such/heipa/file").is_err());
+    }
+
+    #[test]
+    fn schedule_product_matches_k_for_all_models() {
+        for spec in
+            ["hier:4:8:2/1:10:100", "torus:3x5", "fattree:2,4/1,5", "dragonfly:2:3:4", "hetero:3+5"]
+        {
+            let m = parse_topology(spec).unwrap();
+            let prod: usize = m.schedule().iter().map(|&a| a as usize).product();
+            assert_eq!(prod, m.k(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn machine_equality_is_by_spec() {
+        let a = Machine::hier("4:8:2", "1:10:100").unwrap();
+        let b = parse_topology("hier:4:8:2/1:10:100").unwrap();
+        let c = parse_topology("torus:4x4x4").unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,311 @@
+//! Distance oracles — three ways to answer `D[x, y]` queries.
+//!
+//! * **Implicit** — delegate every pair to the model (O(ℓ)/O(dim) per
+//!   query, zero memory). The only backend that scales to arbitrary `k`
+//!   inside parallel kernels.
+//! * **Dense** — the materialized `k × k` matrix (O(1) queries, O(k²)
+//!   memory). Only ever built for `k ≤` [`DENSE_K_MAX`].
+//! * **Blocked row cache** — slabs of [`SLAB_ROWS`] consecutive rows,
+//!   computed on demand and kept in a bounded FIFO behind a mutex. Built
+//!   for the QAP/polish hot loops, which repeatedly scan `D[x, ·]` for a
+//!   few hot `x` but never need the whole matrix.
+
+use super::Machine;
+use crate::topology::DistanceMatrix;
+use crate::Block;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Largest machine for which a dense `k × k` matrix may be materialized
+/// (4096² f64 = 128 MiB). Beyond this, oracles stay implicit or blocked —
+/// the acceptance bar for supercomputer-scale machines.
+pub const DENSE_K_MAX: usize = 4096;
+
+/// Rows per cache slab (one distance computation fills a whole slab).
+pub const SLAB_ROWS: usize = 8;
+
+/// Default slab capacity of the blocked cache (`128 · 8 · k` doubles).
+const DEFAULT_SLAB_CAP: usize = 128;
+
+/// A distance oracle over one [`Machine`] — see the module docs for the
+/// three backends. `Send + Sync`; share it by reference across kernels.
+#[derive(Debug)]
+pub struct DistanceOracle {
+    machine: Machine,
+    backend: Backend,
+}
+
+#[derive(Debug)]
+enum Backend {
+    Implicit,
+    Dense(DistanceMatrix),
+    Blocked(RowCache),
+}
+
+impl DistanceOracle {
+    /// Pure pass-through to the model (no memory, no locks).
+    pub fn implicit(machine: &Machine) -> DistanceOracle {
+        DistanceOracle { machine: machine.clone(), backend: Backend::Implicit }
+    }
+
+    /// Materialized matrix. Caller asserts `k` is small enough; prefer
+    /// [`DistanceOracle::auto`].
+    pub fn dense(machine: &Machine) -> DistanceOracle {
+        DistanceOracle { machine: machine.clone(), backend: Backend::Dense(machine.dense_matrix()) }
+    }
+
+    /// Blocked row cache holding at most `slab_cap` slabs of
+    /// [`SLAB_ROWS`] rows.
+    pub fn blocked(machine: &Machine, slab_cap: usize) -> DistanceOracle {
+        DistanceOracle {
+            machine: machine.clone(),
+            backend: Backend::Blocked(RowCache::new(slab_cap.max(1))),
+        }
+    }
+
+    /// General-purpose pick: implicit for models whose lookups already
+    /// are O(1) table reads, dense up to [`DENSE_K_MAX`], blocked row
+    /// cache beyond (serial row-scanning loops like the QAP polish).
+    pub fn auto(machine: &Machine) -> DistanceOracle {
+        if machine.lookup_is_table() {
+            Self::implicit(machine)
+        } else if machine.k() <= DENSE_K_MAX {
+            Self::dense(machine)
+        } else {
+            Self::blocked(machine, DEFAULT_SLAB_CAP)
+        }
+    }
+
+    /// Refinement-flavor pick: implicit for table-backed models, dense
+    /// up to [`DENSE_K_MAX`], implicit beyond — parallel gain kernels
+    /// must not serialize on a cache lock, never materialize O(k²), and
+    /// never duplicate a table the model already holds.
+    pub fn for_refine(machine: &Machine) -> DistanceOracle {
+        if machine.lookup_is_table() || machine.k() > DENSE_K_MAX {
+            Self::implicit(machine)
+        } else {
+            Self::dense(machine)
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.machine.k()
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// Backend name, for tests and diagnostics.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Implicit => "implicit",
+            Backend::Dense(_) => "dense",
+            Backend::Blocked(_) => "blocked",
+        }
+    }
+
+    /// One pairwise distance.
+    #[inline]
+    pub fn get(&self, x: Block, y: Block) -> f64 {
+        match &self.backend {
+            Backend::Implicit => self.machine.distance(x, y),
+            Backend::Dense(m) => m.get(x, y),
+            Backend::Blocked(c) => {
+                let (slab, off) = c.slab_for(&self.machine, x);
+                slab[off + y as usize]
+            }
+        }
+    }
+
+    /// The row `D[x, ·]` in whatever form the backend holds it — the unit
+    /// the QAP loops and the gain tables consume.
+    #[inline]
+    pub fn row(&self, x: Block) -> OracleRow<'_> {
+        match &self.backend {
+            Backend::Implicit => OracleRow::Virtual { machine: &self.machine, x },
+            Backend::Dense(m) => OracleRow::Slice(m.row(x)),
+            Backend::Blocked(c) => {
+                let (slab, off) = c.slab_for(&self.machine, x);
+                OracleRow::Slab { slab, off }
+            }
+        }
+    }
+
+    /// Both rows as plain slices when the backend is dense — the gain
+    /// kernels' fast path.
+    #[inline]
+    pub fn dense_rows(&self, x: Block, y: Block) -> Option<(&[f64], &[f64])> {
+        match &self.backend {
+            Backend::Dense(m) => Some((m.row(x), m.row(y))),
+            _ => None,
+        }
+    }
+
+    /// Mapping gain of moving a vertex with block connectivities `conn`
+    /// from `from` to `to` (paper Eq. 1): `Σ_b conn(b)·(D[from,b] − D[to,b])`.
+    pub fn gain(&self, conn: &[(Block, f64)], from: Block, to: Block) -> f64 {
+        if let Some((rf, rt)) = self.dense_rows(from, to) {
+            return conn.iter().map(|&(b, w)| w * (rf[b as usize] - rt[b as usize])).sum();
+        }
+        let rf = self.row(from);
+        let rt = self.row(to);
+        conn.iter().map(|&(b, w)| w * (rf.get(b) - rt.get(b))).sum()
+    }
+}
+
+/// A borrowed view of one oracle row; `get(y)` answers `D[x, y]`.
+pub enum OracleRow<'a> {
+    /// Dense backend: a real slice.
+    Slice(&'a [f64]),
+    /// Blocked backend: a shared slab with this row at `off`.
+    Slab { slab: Arc<Vec<f64>>, off: usize },
+    /// Implicit backend: computed per element.
+    Virtual { machine: &'a Machine, x: Block },
+}
+
+impl OracleRow<'_> {
+    #[inline]
+    pub fn get(&self, y: Block) -> f64 {
+        match self {
+            OracleRow::Slice(s) => s[y as usize],
+            OracleRow::Slab { slab, off } => slab[off + y as usize],
+            OracleRow::Virtual { machine, x } => machine.distance(*x, y),
+        }
+    }
+}
+
+/// Bounded FIFO of row slabs behind a mutex (correct under parallel use;
+/// intended for serial hot loops).
+#[derive(Debug)]
+struct RowCache {
+    slab_cap: usize,
+    state: Mutex<CacheState>,
+}
+
+#[derive(Debug, Default)]
+struct CacheState {
+    slabs: HashMap<usize, Arc<Vec<f64>>>,
+    order: VecDeque<usize>,
+}
+
+impl RowCache {
+    fn new(slab_cap: usize) -> RowCache {
+        RowCache { slab_cap, state: Mutex::new(CacheState::default()) }
+    }
+
+    /// The slab holding row `x`, plus the row's offset inside it.
+    fn slab_for(&self, machine: &Machine, x: Block) -> (Arc<Vec<f64>>, usize) {
+        let k = machine.k();
+        let slab_id = x as usize / SLAB_ROWS;
+        let off = (x as usize % SLAB_ROWS) * k;
+        let mut st = self.state.lock().unwrap();
+        if let Some(s) = st.slabs.get(&slab_id) {
+            return (s.clone(), off);
+        }
+        let first = slab_id * SLAB_ROWS;
+        let rows = SLAB_ROWS.min(k - first);
+        let mut v = vec![0.0f64; rows * k];
+        for r in 0..rows {
+            let row_pe = (first + r) as Block;
+            for y in 0..k {
+                v[r * k + y] = machine.distance(row_pe, y as Block);
+            }
+        }
+        let s = Arc::new(v);
+        st.slabs.insert(slab_id, s.clone());
+        st.order.push_back(slab_id);
+        while st.order.len() > self.slab_cap {
+            if let Some(old) = st.order.pop_front() {
+                st.slabs.remove(&old);
+            }
+        }
+        (s, off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> Machine {
+        Machine::hier("4:8:2", "1:10:100").unwrap()
+    }
+
+    #[test]
+    fn backends_agree_on_all_pairs() {
+        let m = machine();
+        let k = m.k();
+        let implicit = DistanceOracle::implicit(&m);
+        let dense = DistanceOracle::dense(&m);
+        let blocked = DistanceOracle::blocked(&m, 2); // tiny cap → evictions
+        for x in 0..k as Block {
+            for y in 0..k as Block {
+                let d = m.distance(x, y);
+                assert_eq!(implicit.get(x, y), d, "implicit ({x},{y})");
+                assert_eq!(dense.get(x, y), d, "dense ({x},{y})");
+                assert_eq!(blocked.get(x, y), d, "blocked ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_match_gets() {
+        let m = machine();
+        for oracle in
+            [DistanceOracle::implicit(&m), DistanceOracle::dense(&m), DistanceOracle::blocked(&m, 4)]
+        {
+            for x in [0u32, 5, 31, 63] {
+                let row = oracle.row(x);
+                for y in 0..m.k() as Block {
+                    assert_eq!(row.get(y), m.distance(x, y), "{} ({x},{y})", oracle.backend_name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_and_refine_pick_by_size_and_backing() {
+        let small = machine();
+        assert_eq!(DistanceOracle::auto(&small).backend_name(), "dense");
+        assert_eq!(DistanceOracle::for_refine(&small).backend_name(), "dense");
+        // 8192 PEs > DENSE_K_MAX.
+        let big = Machine::parse_spec("torus:32x16x16").unwrap();
+        assert_eq!(big.k(), 8192);
+        assert_eq!(DistanceOracle::auto(&big).backend_name(), "blocked");
+        assert_eq!(DistanceOracle::for_refine(&big).backend_name(), "implicit");
+        // Table-backed models stay implicit: dense/blocked would only
+        // duplicate the table the model already holds.
+        let table = crate::topology::MatrixModel::from_text("2\n0 1\n1 0", "t").unwrap();
+        let table = Machine::from_model(table).unwrap();
+        assert_eq!(DistanceOracle::auto(&table).backend_name(), "implicit");
+        assert_eq!(DistanceOracle::for_refine(&table).backend_name(), "implicit");
+    }
+
+    #[test]
+    fn blocked_cache_stays_bounded_and_correct_past_eviction() {
+        let m = Machine::parse_spec("torus:16x16").unwrap(); // k = 256 → 32 slabs
+        let oracle = DistanceOracle::blocked(&m, 2);
+        // Sweep every row twice: the second sweep re-fetches evicted slabs.
+        for _ in 0..2 {
+            for x in 0..m.k() as Block {
+                assert_eq!(oracle.row(x).get(x), 0.0);
+                assert_eq!(oracle.get(x, (x + 1) % m.k() as Block), m.distance(x, (x + 1) % 256));
+            }
+        }
+    }
+
+    #[test]
+    fn gain_matches_manual_sum() {
+        let m = machine();
+        let conn = [(0u32, 2.0), (33u32, 1.5)];
+        for oracle in [DistanceOracle::dense(&m), DistanceOracle::implicit(&m)] {
+            let g = oracle.gain(&conn, 3, 40);
+            let want: f64 = conn
+                .iter()
+                .map(|&(b, w)| w * (m.distance(3, b) - m.distance(40, b)))
+                .sum();
+            assert!((g - want).abs() < 1e-12, "{}", oracle.backend_name());
+        }
+    }
+}

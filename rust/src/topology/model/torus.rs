@@ -1,0 +1,154 @@
+//! k-dimensional torus / mesh machine model — hop (Manhattan) distance.
+
+use super::MachineModel;
+use crate::Block;
+use anyhow::{bail, Context, Result};
+
+/// A `d_1 × d_2 × … × d_n` grid of PEs. `wrap = true` is a torus (each
+/// dimension wraps around), `wrap = false` a mesh. PE ids are mixed-radix
+/// with the **first** dimension fastest — exactly the numbering the
+/// multisection schedule implies, so sectioning at the outermost level
+/// splits the machine into contiguous hyperplanes of the last dimension.
+///
+/// `distance(x, y) = link_w · Σ_i hop(x_i, y_i)` with
+/// `hop(a, b) = min(|a−b|, d_i − |a−b|)` on a torus and `|a−b|` on a mesh.
+#[derive(Clone, Debug)]
+pub struct Torus {
+    dims: Vec<u32>,
+    wrap: bool,
+    link_w: f64,
+}
+
+impl Torus {
+    pub fn new(dims: Vec<u32>, wrap: bool, link_w: f64) -> Result<Torus> {
+        if dims.is_empty() {
+            bail!("torus/mesh needs at least one dimension");
+        }
+        if dims.iter().any(|&d| d == 0) {
+            bail!("torus/mesh dimensions must be positive, got {dims:?}");
+        }
+        if !link_w.is_finite() || link_w <= 0.0 {
+            bail!("torus/mesh link weight must be positive and finite, got {link_w}");
+        }
+        Ok(Torus { dims, wrap, link_w })
+    }
+
+    /// Parse the spec body `4x4x4` or `4x4x4/2.5` (per-hop link weight).
+    pub fn parse(rest: &str, wrap: bool) -> Result<Torus> {
+        let (dims_s, w_s) = match rest.split_once('/') {
+            Some((a, b)) => (a, Some(b)),
+            None => (rest, None),
+        };
+        let dims: Vec<u32> = dims_s
+            .split('x')
+            .map(|t| t.trim().parse::<u32>().map_err(Into::into))
+            .collect::<Result<_>>()
+            .with_context(|| format!("torus/mesh dims `{dims_s}` (want e.g. 4x4x4)"))?;
+        let link_w = match w_s {
+            Some(w) => w.trim().parse::<f64>().with_context(|| format!("link weight `{w}`"))?,
+            None => 1.0,
+        };
+        Torus::new(dims, wrap, link_w)
+    }
+
+    fn scheme(&self) -> &'static str {
+        if self.wrap {
+            "torus"
+        } else {
+            "mesh"
+        }
+    }
+
+    fn dims_string(&self) -> String {
+        self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+    }
+}
+
+impl MachineModel for Torus {
+    fn k(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+
+    fn distance(&self, x: Block, y: Block) -> f64 {
+        if x == y {
+            return 0.0;
+        }
+        let (mut x, mut y) = (x as usize, y as usize);
+        let mut hops = 0usize;
+        for &d in &self.dims {
+            let d = d as usize;
+            let diff = (x % d).abs_diff(y % d);
+            hops += if self.wrap { diff.min(d - diff) } else { diff };
+            x /= d;
+            y /= d;
+        }
+        self.link_w * hops as f64
+    }
+
+    fn section_schedule(&self) -> Vec<u32> {
+        self.dims.clone()
+    }
+
+    fn label(&self) -> String {
+        format!("{}:{}", self.scheme(), self.dims_string())
+    }
+
+    fn spec_string(&self) -> String {
+        if self.link_w == 1.0 {
+            self.label()
+        } else {
+            format!("{}/{}", self.label(), self.link_w)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_distances_wrap() {
+        let t = Torus::parse("8", true).unwrap();
+        assert_eq!(t.k(), 8);
+        assert_eq!(t.distance(0, 1), 1.0);
+        assert_eq!(t.distance(0, 4), 4.0);
+        assert_eq!(t.distance(0, 7), 1.0); // wraps
+        assert_eq!(t.distance(0, 0), 0.0);
+    }
+
+    #[test]
+    fn mesh_does_not_wrap() {
+        let m = Torus::parse("8", false).unwrap();
+        assert_eq!(m.distance(0, 7), 7.0);
+    }
+
+    #[test]
+    fn torus3d_manhattan_hops() {
+        let t = Torus::parse("4x4x4", true).unwrap();
+        assert_eq!(t.k(), 64);
+        // Neighbors along each axis: id = x + 4y + 16z.
+        assert_eq!(t.distance(0, 1), 1.0);
+        assert_eq!(t.distance(0, 4), 1.0);
+        assert_eq!(t.distance(0, 16), 1.0);
+        // Opposite corner: 2 hops per axis (wrap).
+        assert_eq!(t.distance(0, 63), 6.0);
+        // Wrap along x: 3 → 0 is one hop.
+        assert_eq!(t.distance(3, 0), 1.0);
+    }
+
+    #[test]
+    fn link_weight_scales() {
+        let t = Torus::parse("4x4/2.5", true).unwrap();
+        assert_eq!(t.distance(0, 1), 2.5);
+        assert_eq!(t.spec_string(), "torus:4x4/2.5");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(Torus::parse("", true).is_err());
+        assert!(Torus::parse("4x0", true).is_err());
+        assert!(Torus::parse("4x4/-1", true).is_err());
+        assert!(Torus::parse("4x4/nan", true).is_err());
+        assert!(Torus::parse("4xbanana", true).is_err());
+    }
+}

@@ -162,3 +162,80 @@ fn phases_prints_table2_rows() {
         assert!(text.contains(row), "missing row {row}: {text}");
     }
 }
+
+#[test]
+fn map_and_eval_accept_topology_specs() {
+    // The acceptance path: `heipa map --topology torus:4x4x4` and a
+    // fat-tree spec produce valid mappings end to end, and `eval` scores
+    // the written mapping under the same machine model.
+    let dir = tmpdir();
+    for (tag, spec, k) in
+        [("torus", "torus:4x4x4", 64), ("fattree", "fattree:3:2,4,4/1,5,20", 32)]
+    {
+        let part = dir.join(format!("{tag}.txt"));
+        let out = heipa()
+            .args([
+                "map", "--graph", "sten_cop20k", "--algo", "gpu-im", "--topology", spec,
+                "--seed", "1", "--out", part.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{spec} stderr: {}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(&format!("k={k}")), "{spec}: wrong k: {text}");
+        let j_map: f64 = text
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("J=").and_then(|v| v.parse().ok()))
+            .expect("J field");
+
+        let out = heipa()
+            .args([
+                "eval", "--graph", "sten_cop20k", "--part", part.to_str().unwrap(),
+                "--topology", spec,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{spec} eval stderr: {}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        let j_eval: f64 = text
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("J=").and_then(|v| v.parse().ok()))
+            .expect("J field");
+        assert!((j_map - j_eval).abs() < 1e-3 * j_map.max(1.0), "{spec}: {j_map} != {j_eval}");
+    }
+    // Bad specs are a clean CLI error.
+    let out = heipa()
+        .args(["map", "--graph", "sten_cop20k", "--topology", "torus:0x4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn explicit_hier_flags_override_a_config_topology_key() {
+    // `explicit flags always win`: a config `topology =` key must not
+    // shadow an explicit --hier/--dist pair.
+    let dir = tmpdir();
+    let cfg = dir.join("topo.conf");
+    std::fs::write(&cfg, "graph = sten_cop20k\ntopology = torus:4x4x4\nalgorithm = gpu-im\nseeds = 1\n")
+        .unwrap();
+    // Config alone: the torus (k=64).
+    let out = heipa().args(["map", "--config", cfg.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("k=64"));
+    // Explicit --hier/--dist: the 8-PE hierarchy wins over the config topology.
+    let out = heipa()
+        .args(["map", "--config", cfg.to_str().unwrap(), "--hier", "2:2:2", "--dist", "1:10:100"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("k=8"), "config topology shadowed explicit --hier: {text}");
+    // Explicit --topology still wins over everything.
+    let out = heipa()
+        .args(["map", "--config", cfg.to_str().unwrap(), "--hier", "2:2:2", "--dist", "1:10:100", "--topology", "torus:2x2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("k=4"));
+}

@@ -120,3 +120,45 @@ fn auto_routing_picks_by_size_and_refinement_upgrades() {
         .unwrap();
     assert_eq!(strong.algorithm, Algorithm::SharedMapS);
 }
+
+#[test]
+fn topology_spec_round_trips_through_config_and_wire() {
+    // topology= key: kv config → spec → wire request → spec, lossless.
+    let cfg = RunConfig::from_kv_text("graph = rgg15\ntopology = torus:4x4x4\nseeds = 3\n").unwrap();
+    let spec = cfg.to_spec(cfg.graph.as_deref().unwrap());
+    assert_eq!(spec.topology.as_deref(), Some("torus:4x4x4"));
+    assert_eq!(spec.machine().unwrap().k(), 64);
+
+    let req = MapRequest::from_spec(&spec).unwrap();
+    assert_eq!(req.topology.as_deref(), Some("torus:4x4x4"));
+    assert_eq!(req.to_spec(), spec);
+
+    let line = "map instance=rgg15 topology=torus:4x4x4 seed=3 mapping=1";
+    let heipa::coordinator::protocol::Command::Map(parsed) =
+        heipa::coordinator::protocol::parse_command(line).unwrap()
+    else {
+        panic!("expected map command");
+    };
+    assert_eq!(parsed.topology, req.topology);
+}
+
+#[test]
+fn engine_maps_a_torus_machine_end_to_end() {
+    // The acceptance path: topology spec → engine → gpu_hm/gpu_im →
+    // metrics, all distances via the machine-model oracle.
+    let e = engine();
+    for algo in [Algorithm::GpuHm, Algorithm::GpuIm] {
+        let spec = MapSpec::named("sten_cop20k")
+            .topology_spec("torus:2x2x2")
+            .algo(Some(algo))
+            .seed(1);
+        let out = e.map(&spec).unwrap();
+        assert_eq!(out.k, 8);
+        validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        // Re-evaluate independently through the model.
+        let g = e.resolve_graph(&heipa::engine::GraphSource::Named("sten_cop20k".into())).unwrap();
+        let m = heipa::topology::Machine::parse_spec("torus:2x2x2").unwrap();
+        let j = heipa::partition::comm_cost(&g, &out.mapping, &m);
+        assert!((j - out.comm_cost).abs() < 1e-6 * j.max(1.0));
+    }
+}

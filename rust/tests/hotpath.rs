@@ -9,7 +9,7 @@ use heipa::refine::gains::ConnTable;
 use heipa::refine::jet_loop::{jet_refine, jet_refine_with, JetConfig};
 use heipa::refine::{ConnUpdate, Objective, RefineWorkspace};
 use heipa::rng::Rng;
-use heipa::topology::Hierarchy;
+use heipa::topology::Machine;
 use heipa::{Block, Vertex};
 
 /// Thread count of this process from /proc (Linux); None elsewhere.
@@ -95,7 +95,7 @@ fn delta_conn_table_parity_at_1_2_4_threads() {
 #[test]
 fn incremental_objective_agrees_with_exact_after_resync() {
     let g = gen::stencil9(26, 26, 13);
-    let h = Hierarchy::parse("2:2:2", "1:10:100").unwrap();
+    let h = Machine::hier("2:2:2", "1:10:100").unwrap();
     let k = h.k();
     let lmax = l_max(g.total_vweight(), k, 0.03);
     let el = EdgeList::build(&g);
@@ -123,7 +123,7 @@ fn refine_with_shared_workspace_across_graph_sizes() {
     // The multilevel pattern: one workspace, multiple graphs of different
     // sizes through the same buffers (coarse → fine order like gpu_im's
     // uncoarsening chain, then a *larger* graph to exercise growth).
-    let h = Hierarchy::parse("2:2", "1:10").unwrap();
+    let h = Machine::hier("2:2", "1:10").unwrap();
     let k = h.k();
     let pool = Pool::new(2);
     let mut ws = RefineWorkspace::with_capacity(1_000, k);
@@ -154,7 +154,7 @@ fn refine_with_shared_workspace_across_graph_sizes() {
 #[test]
 fn forced_delta_strategy_runs_and_stays_correct_multithreaded() {
     let g = gen::rgg(4_000, 0.04, 21);
-    let h = Hierarchy::parse("4:2", "1:10").unwrap();
+    let h = Machine::hier("4:2", "1:10").unwrap();
     let k = h.k();
     let lmax = l_max(g.total_vweight(), k, 0.05);
     let el = EdgeList::build(&g);

@@ -8,7 +8,7 @@ use heipa::engine::{Engine, EngineConfig, MapOutcome, MapSpec};
 use heipa::graph::{gen, CsrGraph};
 use heipa::partition::{comm_cost, edge_cut, is_balanced, l_max, validate_mapping};
 use heipa::rng::Rng;
-use heipa::topology::Hierarchy;
+use heipa::topology::{Hierarchy, Machine};
 use std::sync::Arc;
 
 const EPS: f64 = 0.03;
@@ -18,7 +18,7 @@ fn engine() -> Engine {
 }
 
 /// One engine run with a pinned algorithm on an in-memory graph.
-fn solve(e: &Engine, g: &Arc<CsrGraph>, algo: Algorithm, h: &Hierarchy, eps: f64, seed: u64) -> MapOutcome {
+fn solve(e: &Engine, g: &Arc<CsrGraph>, algo: Algorithm, h: &Machine, eps: f64, seed: u64) -> MapOutcome {
     e.map(&MapSpec::in_memory(g.clone()).topology(h).algo(Some(algo)).eps(eps).seed(seed))
         .expect("engine map")
 }
@@ -32,7 +32,7 @@ fn feasible(g: &CsrGraph, m: &[u32], k: usize) -> bool {
 #[test]
 fn every_algorithm_is_feasible_on_every_smoke_instance() {
     let e = engine();
-    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let h = Machine::hier("4:8:2", "1:10:100").unwrap();
     for spec in gen::smoke_suite() {
         let g = Arc::new(spec.generate());
         for algo in [
@@ -61,7 +61,7 @@ fn paper_quality_ordering_on_mesh_family() {
     // The paper's headline quality shape: SharedMap-S best; GPU-HM-ultra
     // competitive (~+12%); Jet (edge-cut) clearly unfit (~+90%).
     let e = engine();
-    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let h = Machine::hier("4:8:2", "1:10:100").unwrap();
     let mut j_sms = 0.0;
     let mut j_ultra = 0.0;
     let mut j_jet = 0.0;
@@ -80,7 +80,7 @@ fn modeled_speed_ordering_holds() {
     // GPU-IM must be the fastest device algorithm; SharedMap-S the
     // slowest solver overall (paper Fig. 2 left).
     let e = engine();
-    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let h = Machine::hier("4:8:2", "1:10:100").unwrap();
     let g = Arc::new(gen::generate_by_name("rgg15"));
     let im = solve(&e, &g, Algorithm::GpuIm, &h, EPS, 1);
     let hm_u = solve(&e, &g, Algorithm::GpuHmUltra, &h, EPS, 1);
@@ -93,7 +93,7 @@ fn modeled_speed_ordering_holds() {
 fn seed_sweep_stability() {
     // Across seeds, quality varies but feasibility and rough quality hold.
     let e = engine();
-    let h = Hierarchy::parse("2:4:4", "1:10:100").unwrap();
+    let h = Machine::hier("2:4:4", "1:10:100").unwrap();
     let g = Arc::new(gen::generate_by_name("wal_598a"));
     let spec = MapSpec::in_memory(g.clone())
         .topology(&h)
@@ -119,7 +119,7 @@ fn hierarchy_sweep_cost_grows_with_machine_size() {
     let g = Arc::new(gen::generate_by_name("sten_cop20k"));
     let mut last = 0.0;
     for top in [1u32, 2, 4, 6] {
-        let h = Hierarchy::new(vec![4, 8, top], vec![1.0, 10.0, 100.0]).unwrap();
+        let h = Machine::from(Hierarchy::new(vec![4, 8, top], vec![1.0, 10.0, 100.0]).unwrap());
         let r = solve(&e, &g, Algorithm::GpuHm, &h, EPS, 1);
         assert!(feasible(&g, &r.mapping, h.k()), "top={top} infeasible");
         if top > 1 {
@@ -135,7 +135,7 @@ fn mapping_objective_beats_cut_objective_under_heterogeneous_distances() {
     // directly (GPU-IM) beats minimizing edge-cut (Jet) on J — even
     // though Jet's edge-cut is lower or comparable.
     let e = engine();
-    let h = Hierarchy::parse("4:8:2", "1:10:100").unwrap();
+    let h = Machine::hier("4:8:2", "1:10:100").unwrap();
     let mut im_wins = 0;
     let names = ["sten_cop20k", "del15", "rgg15", "wal_598a"];
     for name in names {
@@ -158,13 +158,13 @@ fn two_phase_composition_matches_direct_evaluation() {
     // block_comm_matrix + comm_cost_blocks must equal comm_cost for any
     // mapping (ties partition/, topology/, algo::qap together).
     let e = engine();
-    let h = Hierarchy::parse("4:4", "1:10").unwrap();
+    let h = Machine::hier("4:4", "1:10").unwrap();
     let g = Arc::new(gen::generate_by_name("wal_598a"));
     let r = solve(&e, &g, Algorithm::GpuHm, &h, EPS, 3);
     let k = h.k();
     let bmat = heipa::partition::block_comm_matrix(&g, &r.mapping, k);
     let identity: Vec<u32> = (0..k as u32).collect();
-    let j_blocks = heipa::partition::comm_cost_blocks(&bmat, k, &identity, &h);
+    let j_blocks = heipa::partition::comm_cost_blocks(&bmat, k, &identity, &h.oracle());
     assert!((j_blocks - r.comm_cost).abs() < 1e-6 * r.comm_cost.max(1.0));
 }
 
@@ -173,7 +173,7 @@ fn qap_polish_composes_with_any_algorithm() {
     // The engine's polish stage never hurts J and preserves balance
     // (host path; the device path is covered in runtime::offload tests).
     let e = engine();
-    let h = Hierarchy::parse("2:4:2", "1:10:100").unwrap();
+    let h = Machine::hier("2:4:2", "1:10:100").unwrap();
     let k = h.k();
     let g = Arc::new(gen::generate_by_name("sten_cont300"));
     for algo in [Algorithm::Jet, Algorithm::GpuIm] {
@@ -209,7 +209,7 @@ fn metis_roundtrip_preserves_mapping_results() {
     assert_eq!(g.n(), g2.n());
     assert_eq!(g.m(), g2.m());
     let e = engine();
-    let h = Hierarchy::parse("2:2", "1:10").unwrap();
+    let h = Machine::hier("2:2", "1:10").unwrap();
     let a = solve(&e, &Arc::new(g), Algorithm::GpuIm, &h, EPS, 7);
     let b = solve(&e, &Arc::new(g2), Algorithm::GpuIm, &h, EPS, 7);
     assert_eq!(a.mapping, b.mapping);
@@ -244,7 +244,7 @@ fn random_graph_fuzz_many_shapes() {
         let g = Arc::new(gen::rgg(n, 0.55 * ((n as f64).ln() / n as f64).sqrt() * 1.3, trial));
         let a1 = 1 + rng.below(3) as u32;
         let a2 = 1 + rng.below(4) as u32;
-        let h = Hierarchy::new(vec![a1 + 1, a2 + 1], vec![1.0, 10.0]).unwrap();
+        let h = Machine::from(Hierarchy::new(vec![a1 + 1, a2 + 1], vec![1.0, 10.0]).unwrap());
         let r = solve(&e, &g, Algorithm::GpuIm, &h, 0.10, trial);
         validate_mapping(&r.mapping, g.n(), h.k()).unwrap();
         assert!(

@@ -1,0 +1,164 @@
+//! Machine-model subsystem tests: oracle/matrix parity across every
+//! model, distance-function properties (symmetry, zero diagonal,
+//! finiteness), schedule validity, and end-to-end mapping through the
+//! engine for every spec scheme.
+
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, EngineConfig, MapSpec};
+use heipa::partition::validate_mapping;
+use heipa::topology::{DistanceOracle, Machine, MatrixModel};
+
+/// One small machine per model family (k ≤ 64 so all-pairs sweeps are
+/// cheap).
+fn all_models() -> Vec<Machine> {
+    let mut ms = vec![
+        Machine::parse_spec("hier:4:4:2/1:10:100").unwrap(),
+        Machine::parse_spec("torus:4x4x2").unwrap(),
+        Machine::parse_spec("torus:8/2.5").unwrap(),
+        Machine::parse_spec("mesh:6x5").unwrap(),
+        Machine::parse_spec("fattree:3:2,4,4/1,5,20").unwrap(),
+        Machine::parse_spec("dragonfly:4:2:3/1,2,5").unwrap(),
+        Machine::parse_spec("hetero:4+8+4+1/1,10").unwrap(),
+    ];
+    ms.push(
+        Machine::from_model(
+            MatrixModel::from_text("4\n0 1 10 10\n1 0 10 10\n10 10 0 1\n10 10 1 0\n", "inline")
+                .unwrap(),
+        )
+        .unwrap(),
+    );
+    ms
+}
+
+#[test]
+fn oracle_backends_agree_on_all_pairs_for_every_model() {
+    for m in all_models() {
+        let k = m.k();
+        let implicit = DistanceOracle::implicit(&m);
+        let dense = DistanceOracle::dense(&m);
+        let blocked = DistanceOracle::blocked(&m, 2); // tiny cap forces evictions
+        for x in 0..k as u32 {
+            for y in 0..k as u32 {
+                let d = m.distance(x, y);
+                assert_eq!(implicit.get(x, y), d, "{}: implicit ({x},{y})", m.label());
+                assert_eq!(dense.get(x, y), d, "{}: dense ({x},{y})", m.label());
+                assert_eq!(blocked.get(x, y), d, "{}: blocked ({x},{y})", m.label());
+                assert_eq!(dense.row(x).get(y), d, "{}: dense row ({x},{y})", m.label());
+                assert_eq!(blocked.row(x).get(y), d, "{}: blocked row ({x},{y})", m.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn distances_are_symmetric_finite_and_zero_on_the_diagonal() {
+    for m in all_models() {
+        let k = m.k();
+        for x in 0..k as u32 {
+            assert_eq!(m.distance(x, x), 0.0, "{}: diag({x})", m.label());
+            for y in 0..k as u32 {
+                let d = m.distance(x, y);
+                assert!(d.is_finite() && d >= 0.0, "{}: D[{x},{y}] = {d}", m.label());
+                assert_eq!(d, m.distance(y, x), "{}: asymmetric at ({x},{y})", m.label());
+                if x != y {
+                    assert!(d > 0.0, "{}: distinct PEs at zero distance ({x},{y})", m.label());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn schedules_are_consistent_with_k() {
+    for m in all_models() {
+        let prod: usize = m.schedule().iter().map(|&a| a as usize).product();
+        assert_eq!(prod, m.k(), "{}", m.label());
+        assert!(m.schedule().iter().all(|&a| a >= 1), "{}", m.label());
+        // Span bookkeeping matches the schedule prefix products.
+        let mut span = 1usize;
+        for level in 1..=m.levels() {
+            assert_eq!(m.pes_per_block_at_level(level), span, "{} level {level}", m.label());
+            span *= m.schedule()[level - 1] as usize;
+        }
+    }
+}
+
+#[test]
+fn spec_strings_round_trip() {
+    for m in all_models() {
+        if m.spec_string().starts_with("file:") {
+            continue; // inline matrix has no on-disk path to re-parse
+        }
+        let m2 = Machine::parse_spec(&m.spec_string())
+            .unwrap_or_else(|e| panic!("{}: {e}", m.spec_string()));
+        assert_eq!(m, m2);
+        assert_eq!(m.k(), m2.k());
+    }
+}
+
+#[test]
+fn every_model_maps_end_to_end_through_the_engine() {
+    let e = Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() });
+    for m in all_models() {
+        // Note the inline MatrixModel has no on-disk path to re-parse:
+        // it works here because MapSpec::topology carries the validated
+        // Machine itself (the tempfile test below covers `file:PATH`).
+        for algo in [Algorithm::GpuHm, Algorithm::GpuIm, Algorithm::SharedMapF] {
+            let spec = MapSpec::named("sten_cop20k").topology(&m).algo(Some(algo)).seed(1);
+            let out =
+                e.map(&spec).unwrap_or_else(|err| panic!("{} / {}: {err}", m.label(), algo.name()));
+            assert_eq!(out.k, m.k(), "{} / {}", m.label(), algo.name());
+            validate_mapping(&out.mapping, out.n, out.k)
+                .unwrap_or_else(|err| panic!("{} / {}: {err}", m.label(), algo.name()));
+            assert!(out.comm_cost > 0.0, "{} / {}", m.label(), algo.name());
+            // Engine-reported J equals an independent oracle evaluation.
+            let g = e
+                .resolve_graph(&heipa::engine::GraphSource::Named("sten_cop20k".into()))
+                .unwrap();
+            let j = heipa::partition::comm_cost(&g, &out.mapping, &m);
+            assert!(
+                (j - out.comm_cost).abs() < 1e-6 * j.max(1.0),
+                "{} / {}: {j} vs {}",
+                m.label(),
+                algo.name(),
+                out.comm_cost
+            );
+        }
+    }
+}
+
+#[test]
+fn file_model_via_a_real_tempfile_maps_end_to_end() {
+    let path = std::env::temp_dir().join(format!("heipa_models_{}.mat", std::process::id()));
+    std::fs::write(&path, "4\n0 1 10 10\n1 0 10 10\n10 10 0 1\n10 10 1 0\n").unwrap();
+    let e = Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() });
+    let spec = MapSpec::named("sten_cop20k")
+        .topology_spec(format!("file:{}", path.display()))
+        .algo(Some(Algorithm::GpuIm))
+        .seed(1);
+    let out = e.map(&spec).unwrap();
+    assert_eq!(out.k, 4);
+    validate_mapping(&out.mapping, out.n, out.k).unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mapping_prefers_cheap_links_on_a_torus() {
+    // On a 2x2x2 torus, a good mapping of a torus-shaped task graph must
+    // beat a random one substantially — i.e. the torus distances really
+    // reach the solvers.
+    let e = Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() });
+    let g = std::sync::Arc::new(heipa::graph::gen::torus3d(16, 16, 4));
+    let m = Machine::parse_spec("torus:2x2x2").unwrap();
+    let out = e
+        .map(&MapSpec::in_memory(g.clone()).topology(&m).algo(Some(Algorithm::GpuIm)).seed(1))
+        .unwrap();
+    let mut rng = heipa::rng::Rng::new(7);
+    let random: Vec<u32> = (0..g.n()).map(|_| rng.below(m.k() as u64) as u32).collect();
+    let j_rand = heipa::partition::comm_cost(&g, &random, &m);
+    assert!(
+        out.comm_cost < j_rand * 0.6,
+        "torus mapping not better than random: {} vs {j_rand}",
+        out.comm_cost
+    );
+}
