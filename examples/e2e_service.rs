@@ -1,12 +1,13 @@
 //! End-to-end driver: the full system on a real small workload.
 //!
-//! Starts the mapping-as-a-service coordinator, submits a batched stream
-//! of mapping requests for the paper's workload families (rgg/del/mesh
-//! task graphs) across machine hierarchies, exercising every layer:
+//! Starts the mapping-as-a-service coordinator and exercises every layer
+//! of the **asynchronous job API**:
 //!
-//!   TCP protocol → MapRequest → MapSpec → engine (router, GPU-IM /
-//!   GPU-HM-ultra device pipelines) → PJRT-offloaded QAP polish
-//!   (AOT JAX/Pallas kernel) → MapOutcome → metrics.
+//!   TCP protocol (submit → job id → wait → result, graph-as-resource
+//!   sessions, cancel) → MapRequest → MapSpec → engine job queue +
+//!   worker pool → (router, GPU-IM / GPU-HM-ultra device pipelines) →
+//!   PJRT-offloaded QAP polish (AOT JAX/Pallas kernel) → MapOutcome →
+//!   metrics.
 //!
 //! Reports the paper's headline metric (communication cost J) per request
 //! plus speedup vs the serial SharedMap-S baseline — the baseline runs
@@ -18,7 +19,8 @@
 //! ```
 
 use heipa::algo::Algorithm;
-use heipa::coordinator::service::Service;
+use heipa::coordinator::protocol::{self, ServeOptions};
+use heipa::coordinator::service::{Service, ServiceConfig};
 use heipa::coordinator::{MapReply, MapRequest};
 use heipa::engine::{Engine, MapSpec};
 use heipa::graph::gen;
@@ -28,23 +30,43 @@ use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let svc = Arc::new(Service::start("artifacts".into(), 0));
+    // Two engine workers: jobs submitted together overlap.
+    let svc = Arc::new(Service::with_config(ServiceConfig {
+        artifacts_dir: "artifacts".into(),
+        workers: 2,
+        ..ServiceConfig::default()
+    }));
 
-    // --- 1. TCP smoke: drive one request through the wire protocol. ----
+    // --- 1. TCP smoke: the async job lifecycle over the wire. ----------
     let addr = spawn_tcp(svc.clone());
     {
         let mut conn = std::net::TcpStream::connect(addr)?;
-        writeln!(conn, "ping")?;
-        writeln!(
-            conn,
-            "map instance=sten_cop20k algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.03 seed=1"
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let mut send = |conn: &mut std::net::TcpStream, line: &str| -> anyhow::Result<String> {
+            writeln!(conn, "{line}")?;
+            let mut reply = String::new();
+            reader.read_line(&mut reply)?;
+            Ok(reply.trim_end().to_string())
+        };
+        assert!(send(&mut conn, "ping")?.contains("pong"));
+        // Upload-once/map-many: pin a task graph server-side…
+        let put = send(&mut conn, "graph put name=halo csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6")?;
+        assert!(put.starts_with("ok graph=halo"), "bad graph put reply: {put}");
+        // …then submit against it: the reply arrives before the solve.
+        let submitted = send(
+            &mut conn,
+            "submit graph=halo algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3",
         )?;
-        let mut lines = BufReader::new(conn).lines();
-        let pong = lines.next().unwrap()?;
-        assert!(pong.contains("pong"), "bad ping reply: {pong}");
-        let reply = lines.next().unwrap()?;
-        assert!(reply.starts_with("ok "), "bad map reply: {reply}");
-        println!("TCP protocol OK: {reply}\n");
+        assert!(submitted.starts_with("ok job="), "bad submit reply: {submitted}");
+        let job: u64 = submitted
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("job=").and_then(|v| v.parse().ok()))
+            .expect("job id");
+        let waited = send(&mut conn, &format!("wait job={job}"))?;
+        assert!(waited.contains("state=done"), "bad wait reply: {waited}");
+        let result = send(&mut conn, &format!("result job={job}"))?;
+        assert!(result.starts_with("ok id="), "bad result reply: {result}");
+        println!("TCP job API OK: {submitted} → {result}\n");
     }
 
     // --- 2. Batched workload over the full stack. -----------------------
@@ -75,6 +97,8 @@ fn main() -> anyhow::Result<()> {
         "| instance | hierarchy | routed to | J | imb | host ms | GPU ms (modeled) | polish ΔJ | speedup vs sharedmap-s |"
     );
     println!("|---|---|---|---|---|---|---|---|---|");
+    // submit_batch enqueues the whole batch before the first wait, so
+    // both engine workers stay busy; replies come back in request order.
     let responses = svc.submit_batch(requests);
     // Library-path baseline: the same engine API, in process.
     let engine = Engine::with_defaults();
@@ -125,41 +149,19 @@ fn main() -> anyhow::Result<()> {
          (paper: GPU-IM 1454x, GPU-HM-ultra 22x on the full testbed)"
     );
     println!(
-        "service metrics: {} requests, {} failures, per-algorithm {:?}",
-        m.requests, m.failures, m.per_algorithm
+        "service metrics: {} requests, {} completed, {} failures, {} cancelled, per-algorithm {:?}",
+        m.requests, m.completed, m.failures, m.cancelled, m.per_algorithm
     );
     Ok(())
 }
 
-/// Bind an ephemeral port and serve the coordinator protocol on it.
+/// Bind an ephemeral port and serve the coordinator protocol on it — the
+/// very accept loop `heipa serve` runs.
 fn spawn_tcp(svc: Arc<Service>) -> std::net::SocketAddr {
-    use heipa::coordinator::protocol;
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { break };
-            let svc = svc.clone();
-            std::thread::spawn(move || {
-                let reader = BufReader::new(stream.try_clone().unwrap());
-                let mut writer = stream;
-                for line in reader.lines() {
-                    let Ok(line) = line else { break };
-                    let reply = match protocol::parse_command(&line) {
-                        Ok(protocol::Command::Ping) => "ok pong=1".to_string(),
-                        Ok(protocol::Command::Metrics) => protocol::render_metrics(&svc.metrics()),
-                        Ok(protocol::Command::Map(req)) => match svc.submit(req) {
-                            Ok(resp) => protocol::render_response(&resp),
-                            Err(e) => protocol::render_error(&e),
-                        },
-                        Err(e) => protocol::render_error(&e),
-                    };
-                    if writeln!(writer, "{reply}").is_err() {
-                        break;
-                    }
-                }
-            });
-        }
+        let _ = protocol::serve_listener(svc, listener, ServeOptions::default());
     });
     addr
 }

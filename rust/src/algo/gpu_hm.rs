@@ -23,17 +23,29 @@ pub struct GpuHmConfig {
     pub jet: JetPartConfig,
     /// Use the adaptive imbalance ε′ of Eq. 2 (ablation A1 disables it).
     pub adaptive: bool,
+    /// Cooperative cancellation, polled before every multisection node
+    /// (callers should also set `jet.cancel` so the inner partitioner
+    /// stops at its own coarsening/round boundaries).
+    pub cancel: crate::cancel::CancelToken,
 }
 
 impl GpuHmConfig {
     /// Default flavor (Jet with 12 refinement iterations).
     pub fn default_flavor() -> Self {
-        GpuHmConfig { jet: JetPartConfig::default(), adaptive: true }
+        GpuHmConfig {
+            jet: JetPartConfig::default(),
+            adaptive: true,
+            cancel: crate::cancel::CancelToken::default(),
+        }
     }
 
     /// The *ultra* flavor (18 iterations; paper's GPU-HM-ultra).
     pub fn ultra() -> Self {
-        GpuHmConfig { jet: JetPartConfig::ultra(), adaptive: true }
+        GpuHmConfig {
+            jet: JetPartConfig::ultra(),
+            adaptive: true,
+            cancel: crate::cancel::CancelToken::default(),
+        }
     }
 }
 
@@ -60,6 +72,11 @@ pub fn gpu_hm(
         vec![(g.clone(), (0..g.n() as Vertex).collect(), ell, 0)];
 
     while let Some((sub, orig, level, pe_off)) = stack.pop() {
+        // Multisection-node cancellation boundary (every node runs one
+        // full partition call, i.e. at least one coarsening level).
+        if cfg.cancel.is_cancelled() {
+            return mapping;
+        }
         if sub.n() == 0 {
             continue;
         }

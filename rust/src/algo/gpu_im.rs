@@ -33,6 +33,9 @@ pub struct GpuImConfig {
     pub init: SharedMapConfig,
     /// Ablation A2: use `J` for the rebalance loss instead of edge-cut.
     pub rebalance_with_comm_obj: bool,
+    /// Cooperative cancellation, polled at every coarsening-level
+    /// boundary and inside each Jet refinement round.
+    pub cancel: crate::cancel::CancelToken,
 }
 
 impl Default for GpuImConfig {
@@ -47,8 +50,10 @@ impl Default for GpuImConfig {
                 ml: crate::initial::MlConfig::default(),
                 final_refine_rounds: 2,
                 adaptive: true,
+                cancel: crate::cancel::CancelToken::default(),
             },
             rebalance_with_comm_obj: false,
+            cancel: crate::cancel::CancelToken::default(),
         }
     }
 }
@@ -100,6 +105,11 @@ pub fn gpu_im(
     });
     let mut level = 0u64;
     while cur.n() > coarsest {
+        // Coarsening-level cancellation boundary: the engine discards the
+        // result of a cancelled run, so bail with a valid assignment.
+        if cfg.cancel.is_cancelled() {
+            return vec![0 as Block; g.n()];
+        }
         let mut mate = timed!(
             Phase::Coarsening,
             preference_matching(&cur, pool, lmax, seed ^ (level << 32), cfg.match_rounds)
@@ -124,7 +134,8 @@ pub fn gpu_im(
     }
 
     // Initial mapping on the CPU (paper: hierarchical multisection; GPU
-    // offers no advantage at this size).
+    // offers no advantage at this size). `cfg.init` carries the same
+    // cancel token, so the multisection bails at its own boundaries.
     let mut mapping = timed_cpu!(
         Phase::InitialPartitioning,
         sharedmap(&cur, m, eps, seed ^ 0xabcd, &cfg.init)
@@ -135,6 +146,7 @@ pub fn gpu_im(
         filter: Filter::NonNegative,
         rebalance_with_comm_obj: cfg.rebalance_with_comm_obj,
         seed,
+        cancel: cfg.cancel.clone(),
         ..Default::default()
     };
 
@@ -143,13 +155,17 @@ pub fn gpu_im(
     let mut ws = RefineWorkspace::with_capacity(g.n(), k);
 
     // Refine the coarsest level.
-    timed!(Phase::RefineRebalance, {
-        jet_refine_with(
-            pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(m), &jet_cfg, &mut ws,
-        )
-    });
+    if !cfg.cancel.is_cancelled() {
+        timed!(Phase::RefineRebalance, {
+            jet_refine_with(
+                pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(m), &jet_cfg, &mut ws,
+            )
+        });
+    }
 
-    // Uncoarsening.
+    // Uncoarsening. A cancelled run still projects down to the finest
+    // level (the mapping must stay structurally valid) but skips the
+    // per-level refinement.
     for lev in (0..maps.len()).rev() {
         let fine = &graphs[lev];
         let el = &edge_lists[lev];
@@ -161,12 +177,14 @@ pub fn gpu_im(
                 fp.write(v, mapping[map[v] as usize]);
             });
         });
-        timed!(Phase::RefineRebalance, {
-            jet_refine_with(
-                pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(m), &jet_cfg,
-                &mut ws,
-            )
-        });
+        if !cfg.cancel.is_cancelled() {
+            timed!(Phase::RefineRebalance, {
+                jet_refine_with(
+                    pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(m), &jet_cfg,
+                    &mut ws,
+                )
+            });
+        }
         mapping = fine_mapping;
     }
     // Modeled D2H download of the final mapping.

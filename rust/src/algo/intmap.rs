@@ -29,6 +29,9 @@ pub struct IntMapConfig {
     pub finest_extra_rounds: usize,
     /// Multisection flavor for the initial mapping.
     pub init: SharedMapConfig,
+    /// Cooperative cancellation, polled at every coarsening and
+    /// uncoarsening level boundary.
+    pub cancel: crate::cancel::CancelToken,
 }
 
 impl IntMapConfig {
@@ -39,6 +42,7 @@ impl IntMapConfig {
             lp_rounds: 2,
             finest_extra_rounds: 0,
             init: SharedMapConfig::fast(),
+            cancel: crate::cancel::CancelToken::default(),
         }
     }
 
@@ -49,6 +53,7 @@ impl IntMapConfig {
             lp_rounds: 6,
             finest_extra_rounds: 6,
             init: SharedMapConfig::strong(),
+            cancel: crate::cancel::CancelToken::default(),
         }
     }
 }
@@ -66,6 +71,10 @@ pub fn intmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &IntMapConfig
     let mut cur = g.clone();
     let mut level = 0u64;
     while cur.n() > coarsest {
+        // Coarsening-level cancellation boundary.
+        if cfg.cancel.is_cancelled() {
+            return vec![0 as Block; g.n()];
+        }
         let (coarse, map) = coarsen_step_serial(&cur, lmax, seed ^ (level << 24));
         if coarse.n() as f64 > cur.n() as f64 * 0.96 {
             break;
@@ -80,10 +89,13 @@ pub fn intmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &IntMapConfig
     // Coarse vertex weights are chunky relative to L_max, so repair the
     // balance explicitly before refining.
     let mut mapping = sharedmap(&cur, m, eps, seed ^ 0xabcd, &cfg.init);
-    force_balance_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), seed ^ 2);
-    lp_refine_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), cfg.lp_rounds, seed ^ 1);
+    if !cfg.cancel.is_cancelled() {
+        force_balance_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), seed ^ 2);
+        lp_refine_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), cfg.lp_rounds, seed ^ 1);
+    }
 
-    // Uncoarsening with J-objective label propagation.
+    // Uncoarsening with J-objective label propagation. A cancelled run
+    // still projects to the finest level but skips the refinement.
     for lev in (0..maps.len()).rev() {
         let fine = &graphs[lev];
         let map = &maps[lev];
@@ -91,9 +103,11 @@ pub fn intmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &IntMapConfig
         for v in 0..fine.n() {
             fine_mapping[v] = mapping[map[v] as usize];
         }
-        let rounds = if lev == 0 { cfg.lp_rounds + cfg.finest_extra_rounds } else { cfg.lp_rounds };
-        force_balance_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), seed ^ 3);
-        lp_refine_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), rounds, seed ^ (lev as u64) << 16);
+        if !cfg.cancel.is_cancelled() {
+            let rounds = if lev == 0 { cfg.lp_rounds + cfg.finest_extra_rounds } else { cfg.lp_rounds };
+            force_balance_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), seed ^ 3);
+            lp_refine_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), rounds, seed ^ (lev as u64) << 16);
+        }
         mapping = fine_mapping;
     }
     mapping

@@ -31,11 +31,20 @@ pub struct JetPartConfig {
     pub coarsest_factor: usize,
     /// Matching rounds per level.
     pub match_rounds: usize,
+    /// Cooperative cancellation, polled at every coarsening-level
+    /// boundary (and inside each Jet refinement round via [`JetConfig`]).
+    pub cancel: crate::cancel::CancelToken,
 }
 
 impl Default for JetPartConfig {
     fn default() -> Self {
-        JetPartConfig { iter_limit: 12, c_factor: 0.25, coarsest_factor: 8, match_rounds: 8 }
+        JetPartConfig {
+            iter_limit: 12,
+            c_factor: 0.25,
+            coarsest_factor: 8,
+            match_rounds: 8,
+            cancel: crate::cancel::CancelToken::default(),
+        }
     }
 }
 
@@ -89,6 +98,11 @@ pub fn jet_partition(
     });
     let mut level = 0u64;
     while cur.n() > coarsest {
+        // Coarsening-level cancellation boundary: the result is discarded
+        // by the engine, so any structurally valid assignment will do.
+        if cfg.cancel.is_cancelled() {
+            return vec![0 as Block; g.n()];
+        }
         let mut mate = timed!(
             Phase::Coarsening,
             preference_matching(&cur, pool, lmax, seed ^ (level << 32), cfg.match_rounds)
@@ -123,17 +137,22 @@ pub fn jet_partition(
         iter_limit: cfg.iter_limit,
         filter: Filter::JetNegative { c_factor: cfg.c_factor },
         seed,
+        cancel: cfg.cancel.clone(),
         ..Default::default()
     };
     // One workspace reused across every level of the uncoarsening chain.
     let mut ws = RefineWorkspace::with_capacity(g.n(), k);
-    timed!(Phase::RefineRebalance, {
-        jet_refine_with(
-            pool, &cur, &cur_el, &mut part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
-        )
-    });
+    if !cfg.cancel.is_cancelled() {
+        timed!(Phase::RefineRebalance, {
+            jet_refine_with(
+                pool, &cur, &cur_el, &mut part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
+            )
+        });
+    }
 
-    // Uncoarsening.
+    // Uncoarsening. A cancelled run still projects down to the finest
+    // level (the mapping must stay structurally valid) but skips the
+    // per-level refinement.
     for lev in (0..maps.len()).rev() {
         let fine = &graphs[lev];
         let el = &edge_lists[lev];
@@ -145,11 +164,13 @@ pub fn jet_partition(
                 fp.write(v, part[map[v] as usize]);
             });
         });
-        timed!(Phase::RefineRebalance, {
-            jet_refine_with(
-                pool, fine, el, &mut fine_part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
-            )
-        });
+        if !cfg.cancel.is_cancelled() {
+            timed!(Phase::RefineRebalance, {
+                jet_refine_with(
+                    pool, fine, el, &mut fine_part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
+                )
+            });
+        }
         part = fine_part;
     }
     // Modeled D2H download of the final partition.

@@ -24,15 +24,27 @@ pub struct SharedMapConfig {
     /// Use the adaptive imbalance ε′ of Eq. 2 (ablation A1 disables it
     /// and partitions every level with the raw ε).
     pub adaptive: bool,
+    /// Cooperative cancellation, polled before every multisection node.
+    pub cancel: crate::cancel::CancelToken,
 }
 
 impl SharedMapConfig {
     pub fn fast() -> Self {
-        SharedMapConfig { ml: MlConfig::fast(), final_refine_rounds: 0, adaptive: true }
+        SharedMapConfig {
+            ml: MlConfig::fast(),
+            final_refine_rounds: 0,
+            adaptive: true,
+            cancel: crate::cancel::CancelToken::default(),
+        }
     }
 
     pub fn strong() -> Self {
-        SharedMapConfig { ml: MlConfig::strong(), final_refine_rounds: 12, adaptive: true }
+        SharedMapConfig {
+            ml: MlConfig::strong(),
+            final_refine_rounds: 12,
+            adaptive: true,
+            cancel: crate::cancel::CancelToken::default(),
+        }
     }
 }
 
@@ -53,6 +65,12 @@ pub fn sharedmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &SharedMap
     )];
 
     while let Some((sub, orig, level, pe_off)) = stack.pop() {
+        // Multisection-node cancellation boundary: the zero-initialized
+        // remainder of `mapping` is structurally valid; the engine
+        // discards cancelled results anyway.
+        if cfg.cancel.is_cancelled() {
+            return mapping;
+        }
         if sub.n() == 0 {
             continue;
         }
@@ -82,7 +100,7 @@ pub fn sharedmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &SharedMap
     }
 
     // Final mapping-aware refinement (Strong flavor).
-    if cfg.final_refine_rounds > 0 {
+    if cfg.final_refine_rounds > 0 && !cfg.cancel.is_cancelled() {
         let lmax = crate::partition::l_max(total, k, eps);
         lp_refine_serial(
             g,

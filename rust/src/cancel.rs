@@ -1,0 +1,100 @@
+//! Cooperative cancellation for long-running solves.
+//!
+//! A [`CancelToken`] is a cheaply-clonable flag (plus an optional
+//! deadline) handed to every solver through
+//! [`crate::engine::Solver::solve`]. Solvers are required to poll it at
+//! **coarsening-level boundaries** and **Jet refinement round
+//! boundaries** — the two places a multilevel pipeline can stop without
+//! leaving a partially-written mapping — so a cancelled job returns
+//! within one level / one round rather than running to completion.
+//!
+//! Cancellation is cooperative and lossy by design: a cancelled solver
+//! returns *some* structurally valid assignment (often all-zeros or the
+//! best mapping found so far) and the engine discards it, marking the
+//! job `Cancelled` (or `Expired` when the deadline tripped) instead of
+//! `Done`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared cancellation flag + optional deadline.
+///
+/// Clones share the flag: cancelling any clone cancels them all. The
+/// deadline is carried by value, so tokens derived from the same submit
+/// observe the same cutoff instant.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that is not cancelled and never expires.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A fresh token that expires `after` from now.
+    pub fn with_deadline(after: Duration) -> CancelToken {
+        CancelToken { flag: Arc::new(AtomicBool::new(false)), deadline: Some(Instant::now() + after) }
+    }
+
+    /// Request cancellation (idempotent; visible to every clone).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// True once [`CancelToken::cancel`] was called on any clone.
+    pub fn cancel_requested(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+
+    /// True once the deadline (if any) has passed.
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Time left until the deadline (`None` when no deadline is set;
+    /// zero once it has passed). Lets waiters bound their sleeps so a
+    /// queued job expires on time even when no worker touches it.
+    pub fn deadline_remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// The poll solvers call at coarsening-level and Jet-round
+    /// boundaries: explicit cancellation *or* an expired deadline.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel_requested() || self.deadline_exceeded()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_flag() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled());
+        assert!(a.cancel_requested());
+        assert!(!a.deadline_exceeded());
+    }
+
+    #[test]
+    fn deadline_trips_without_explicit_cancel() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.is_cancelled());
+        assert!(t.deadline_exceeded());
+        assert!(!t.cancel_requested());
+        let far = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!far.is_cancelled());
+        assert!(far.deadline_remaining().unwrap() > Duration::from_secs(3500));
+        assert_eq!(t.deadline_remaining(), Some(Duration::ZERO));
+        assert_eq!(CancelToken::new().deadline_remaining(), None);
+    }
+}

@@ -38,6 +38,10 @@ pub struct RunConfig {
     pub seeds: Vec<u64>,
     /// Device worker threads (0 = auto).
     pub threads: usize,
+    /// Engine workers draining the job queue (`workers = 2`).
+    pub workers: usize,
+    /// Bounded job-queue capacity (`queue_cap = 256`).
+    pub queue_cap: usize,
     /// Artifact directory for the PJRT offload kernels.
     pub artifacts_dir: String,
     /// Solver-specific options (`opt.NAME = value`).
@@ -57,6 +61,8 @@ impl Default for RunConfig {
             polish: false,
             seeds: vec![1, 2, 3, 4, 5],
             threads: 0,
+            workers: 1,
+            queue_cap: 256,
             artifacts_dir: "artifacts".into(),
             options: BTreeMap::new(),
         }
@@ -95,6 +101,8 @@ impl RunConfig {
         EngineConfig {
             threads: self.threads,
             artifacts_dir: self.artifacts_dir.clone(),
+            workers: self.workers,
+            queue_cap: self.queue_cap,
             ..EngineConfig::default()
         }
     }
@@ -135,6 +143,8 @@ impl RunConfig {
                         .collect::<Result<_>>()?
                 }
                 "threads" => cfg.threads = value.parse().context("threads")?,
+                "workers" => cfg.workers = value.parse().context("workers")?,
+                "queue_cap" => cfg.queue_cap = value.parse().context("queue_cap")?,
                 "artifacts_dir" => cfg.artifacts_dir = value,
                 other => {
                     if let Some(opt) = other.strip_prefix("opt.") {
@@ -235,6 +245,16 @@ mod tests {
         // Bad specs are rejected at config load.
         assert!(RunConfig::from_kv_text("topology = torus:0x4").is_err());
         assert!(RunConfig::from_kv_text("topology = bogus").is_err());
+    }
+
+    #[test]
+    fn engine_worker_keys_reach_the_engine_config() {
+        let cfg = RunConfig::from_kv_text("workers = 4\nqueue_cap = 32\nthreads = 2\n").unwrap();
+        let ecfg = cfg.engine_config();
+        assert_eq!(ecfg.workers, 4);
+        assert_eq!(ecfg.queue_cap, 32);
+        assert_eq!(ecfg.threads, 2);
+        assert!(RunConfig::from_kv_text("workers = lots").is_err());
     }
 
     #[test]

@@ -3,19 +3,24 @@
 //! A deployment of this library is a long-running *mapping service*: HPC
 //! schedulers submit task graphs and machine hierarchies and receive
 //! vertex → PE mappings. The coordinator is a thin shell around one
-//! [`crate::engine::Engine`]:
+//! asynchronous [`crate::engine::Engine`]:
 //!
-//! * a single-consumer **job queue** feeding a worker thread that owns the
-//!   engine — and with it the device pool, the PJRT runtime and the
-//!   bounded graph cache (one client per device, mirroring the paper's
-//!   one-GPU setup),
+//! * the engine's **job API** — `submit` returns a job id immediately,
+//!   jobs run on the engine's worker pool behind a bounded priority
+//!   queue, and clients `status`/`wait`/`result`/`cancel` by id,
+//! * **graph-as-resource sessions** — `graph put` pins a task graph
+//!   server-side (`Arc<CsrGraph>` shared across jobs, workers and
+//!   connections) for the upload-once/map-many pattern,
 //! * the wire-level [`MapRequest`], which lowers into the engine's
 //!   [`MapSpec`] (routing, refinement upgrade and the QAP polish stage all
 //!   happen inside the engine, identically to every other front-end), and
-//! * service **metrics** (requests, per-algorithm counts, device time).
+//! * service **metrics** (requests, per-algorithm counts, queue depth,
+//!   in-flight/cancelled/deadline-missed counters, device time) kept in
+//!   atomics — a panicked job cannot poison them.
 //!
-//! Front-ends: an in-process handle ([`service::Service::submit`]) and a
-//! line-oriented TCP protocol ([`protocol`], `heipa serve`).
+//! Front-ends: an in-process handle ([`service::Service`]) and a
+//! line-oriented TCP protocol ([`protocol`], `heipa serve` / `heipa
+//! client`) with a bounded connection pool.
 
 pub mod protocol;
 pub mod service;
@@ -126,11 +131,26 @@ pub struct MapReply {
     pub outcome: MapOutcome,
 }
 
-/// Service metrics snapshot.
+/// Service metrics snapshot. Counters are cumulative since service
+/// start; `queue_depth` and `in_flight` are point-in-time gauges.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceMetrics {
+    /// Jobs accepted (blocking `map` and async `submit` alike).
     pub requests: u64,
+    /// Jobs that reached `Failed` (bad spec, solver error or panic).
     pub failures: u64,
+    /// Jobs that reached `Done`.
+    pub completed: u64,
+    /// Jobs that reached `Cancelled`.
+    pub cancelled: u64,
+    /// Jobs that reached `Expired` (per-job deadline missed).
+    pub deadline_missed: u64,
+    /// Submits rejected because the bounded job queue was full.
+    pub busy_rejections: u64,
+    /// Jobs currently waiting in the queue (gauge).
+    pub queue_depth: usize,
+    /// Jobs currently being solved (gauge).
+    pub in_flight: usize,
     pub total_host_ms: f64,
     pub total_device_ms: f64,
     pub per_algorithm: std::collections::BTreeMap<&'static str, u64>,

@@ -1,28 +1,137 @@
-//! Line protocol for the TCP front-end.
+//! Line protocol for the TCP front-end — the asynchronous job API.
 //!
 //! Requests are single lines of space-separated `key=value` tokens:
 //!
 //! ```text
-//! map instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.03 seed=1 polish=1
-//! map instance=del15 algorithm=auto refinement=strong opt.adaptive=0 mapping=1
-//! map instance=rgg15 topology=torus:4x4x4 seed=2
+//! submit instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 seed=1
+//! submit graph=mesh topology=torus:4x4x4 priority=5 deadline_ms=60000
+//! status job=3
+//! wait job=3 timeout_ms=5000
+//! result job=3
+//! cancel job=3
+//! jobs
+//! graph put name=mesh path=/data/mesh.graph
+//! graph put name=tri csr=0,2,4,6/1,2,0,2,0,1
+//! graph list
+//! graph del name=mesh
+//! map instance=rgg15 polish=1          # legacy blocking path (submit+wait+result)
 //! metrics
 //! ping
 //! ```
 //!
-//! Responses are single lines: `ok key=value …` or `err message=…`.
+//! Responses are single lines. `submit` replies `ok job=<id> state=queued`
+//! **before the solve runs**; `map`/`result` reply the full outcome
+//! (`ok id=… algorithm=… j=…`); errors are `err code=<code> message=…`
+//! with the message percent-escaped ([`escape_value`]) so clients can
+//! recover the real text — including its spaces — via
+//! [`unescape_value`]. Error codes: `bad_request`, `busy` (bounded job
+//! queue or connection limit), `unknown_job`, `unknown_graph`,
+//! `not_done`, `timeout`, `failed`, `cancelled`, `expired`,
+//! `unavailable`.
 
+use super::service::{JobOptions, Service};
 use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::algo::Algorithm;
-use crate::engine::Refinement;
-use anyhow::{bail, Result};
+use crate::engine::{JobState, JobStatus, Refinement, SubmitError};
+use crate::graph::CsrGraph;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Per-submit wire options (`priority=`, `deadline_ms=`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireSubmitOpts {
+    pub priority: i32,
+    pub deadline_ms: Option<u64>,
+}
 
 /// Parsed client command.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
-    Map(MapRequest),
+    /// Legacy blocking path: submit + wait + result in one round trip.
+    Map { req: MapRequest, opts: WireSubmitOpts },
+    /// Async submit: replies `ok job=<id>` immediately.
+    Submit { req: MapRequest, opts: WireSubmitOpts },
+    Status { job: u64 },
+    Wait { job: u64, timeout_ms: Option<u64> },
+    JobResult { job: u64 },
+    Cancel { job: u64 },
+    Jobs,
+    GraphPut { name: String, path: Option<String>, csr: Option<String> },
+    GraphList,
+    GraphDrop { name: String },
     Metrics,
     Ping,
+}
+
+/// Parse the shared `key=value` body of `map`/`submit`.
+fn parse_job_body<'a>(
+    tokens: impl Iterator<Item = &'a str>,
+) -> Result<(MapRequest, WireSubmitOpts)> {
+    let mut req = MapRequest::default();
+    let mut opts = WireSubmitOpts::default();
+    for tok in tokens {
+        let Some((k, v)) = tok.split_once('=') else {
+            bail!("bad token `{tok}` (expected key=value)");
+        };
+        match k {
+            // `graph=` is the session-graph alias of `instance=`: both
+            // resolve through the engine's graph store (pinned tier
+            // first), so `graph put name=X …; submit graph=X …` works.
+            "instance" | "graph" => req.instance = v.to_string(),
+            "algorithm" => {
+                req.algorithm = if v == "auto" {
+                    None
+                } else {
+                    Some(
+                        Algorithm::from_name(v)
+                            .ok_or_else(|| anyhow::anyhow!("unknown algorithm {v}"))?,
+                    )
+                }
+            }
+            "hierarchy" => req.hierarchy = v.to_string(),
+            "distance" => req.distance = v.to_string(),
+            "topology" => req.topology = Some(v.to_string()),
+            "eps" => req.eps = v.parse()?,
+            "seed" => req.seed = v.parse()?,
+            "refinement" => req.refinement = Refinement::from_name(v)?,
+            "polish" => req.polish = v == "1" || v == "true",
+            "mapping" => req.return_mapping = v == "1" || v == "true",
+            "priority" => opts.priority = v.parse().context("priority")?,
+            "deadline_ms" => opts.deadline_ms = Some(v.parse().context("deadline_ms")?),
+            other => {
+                if let Some(opt) = other.strip_prefix("opt.") {
+                    req.options.insert(opt.to_string(), v.to_string());
+                } else {
+                    bail!("unknown key `{other}`");
+                }
+            }
+        }
+    }
+    if req.instance.is_empty() {
+        bail!("missing instance=… (or graph=…)");
+    }
+    Ok((req, opts))
+}
+
+/// Parse a `job=<id>` argument list (plus optional extra keys handled by
+/// the caller via the returned map).
+fn parse_kv_args<'a>(
+    tokens: impl Iterator<Item = &'a str>,
+) -> Result<std::collections::BTreeMap<&'a str, &'a str>> {
+    let mut out = std::collections::BTreeMap::new();
+    for tok in tokens {
+        let Some((k, v)) = tok.split_once('=') else {
+            bail!("bad token `{tok}` (expected key=value)");
+        };
+        out.insert(k, v);
+    }
+    Ok(out)
+}
+
+fn require_job(kv: &std::collections::BTreeMap<&str, &str>) -> Result<u64> {
+    kv.get("job").context("missing job=<id>")?.parse().context("job id")
 }
 
 /// Parse one request line.
@@ -32,52 +141,139 @@ pub fn parse_command(line: &str) -> Result<Command> {
     match verb {
         "ping" => Ok(Command::Ping),
         "metrics" => Ok(Command::Metrics),
+        "jobs" => Ok(Command::Jobs),
         "map" => {
-            let mut req = MapRequest::default();
-            for tok in tokens {
-                let Some((k, v)) = tok.split_once('=') else {
-                    bail!("bad token `{tok}` (expected key=value)");
-                };
-                match k {
-                    "instance" => req.instance = v.to_string(),
-                    "algorithm" => {
-                        req.algorithm = if v == "auto" {
-                            None
-                        } else {
-                            Some(
-                                Algorithm::from_name(v)
-                                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm {v}"))?,
-                            )
-                        }
+            let (req, opts) = parse_job_body(tokens)?;
+            Ok(Command::Map { req, opts })
+        }
+        "submit" => {
+            let (req, opts) = parse_job_body(tokens)?;
+            Ok(Command::Submit { req, opts })
+        }
+        "status" => Ok(Command::Status { job: require_job(&parse_kv_args(tokens)?)? }),
+        "wait" => {
+            let kv = parse_kv_args(tokens)?;
+            let timeout_ms = match kv.get("timeout_ms") {
+                Some(v) => Some(v.parse().context("timeout_ms")?),
+                None => None,
+            };
+            Ok(Command::Wait { job: require_job(&kv)?, timeout_ms })
+        }
+        "result" => Ok(Command::JobResult { job: require_job(&parse_kv_args(tokens)?)? }),
+        "cancel" => Ok(Command::Cancel { job: require_job(&parse_kv_args(tokens)?)? }),
+        "graph" => {
+            let sub = tokens.next().unwrap_or("");
+            match sub {
+                "put" => {
+                    let kv = parse_kv_args(tokens)?;
+                    let name = kv.get("name").context("graph put needs name=…")?.to_string();
+                    let path = kv.get("path").map(|s| s.to_string());
+                    let csr = kv.get("csr").map(|s| s.to_string());
+                    if path.is_some() == csr.is_some() {
+                        bail!("graph put needs exactly one of path=… or csr=…");
                     }
-                    "hierarchy" => req.hierarchy = v.to_string(),
-                    "distance" => req.distance = v.to_string(),
-                    "topology" => req.topology = Some(v.to_string()),
-                    "eps" => req.eps = v.parse()?,
-                    "seed" => req.seed = v.parse()?,
-                    "refinement" => req.refinement = Refinement::from_name(v)?,
-                    "polish" => req.polish = v == "1" || v == "true",
-                    "mapping" => req.return_mapping = v == "1" || v == "true",
-                    other => {
-                        if let Some(opt) = other.strip_prefix("opt.") {
-                            req.options.insert(opt.to_string(), v.to_string());
-                        } else {
-                            bail!("unknown key `{other}`");
-                        }
-                    }
+                    Ok(Command::GraphPut { name, path, csr })
                 }
+                "list" => Ok(Command::GraphList),
+                "del" | "drop" => {
+                    let kv = parse_kv_args(tokens)?;
+                    let name = kv.get("name").context("graph del needs name=…")?.to_string();
+                    Ok(Command::GraphDrop { name })
+                }
+                other => bail!("unknown graph subcommand `{other}` (put|list|del)"),
             }
-            if req.instance.is_empty() {
-                bail!("map requires instance=…");
-            }
-            Ok(Command::Map(req))
         }
         "" => bail!("empty command"),
         other => bail!("unknown verb `{other}`"),
     }
 }
 
-/// Render a map reply line.
+/// Parse an inline CSR upload: `<xadj>/<adjncy>[/<eweights>[/<vweights>]]`,
+/// each a comma-separated list. The adjacency must already be symmetric
+/// (validated before the graph is pinned).
+pub fn parse_inline_csr(text: &str) -> Result<CsrGraph> {
+    fn list<T: std::str::FromStr>(part: &str, what: &str) -> Result<Vec<T>> {
+        if part.is_empty() {
+            return Ok(Vec::new());
+        }
+        part.split(',')
+            .map(|t| t.parse::<T>().map_err(|_| anyhow::anyhow!("bad {what} entry `{t}`")))
+            .collect()
+    }
+    let parts: Vec<&str> = text.split('/').collect();
+    if !(2..=4).contains(&parts.len()) {
+        bail!("csr wants xadj/adjncy[/eweights[/vweights]], got {} part(s)", parts.len());
+    }
+    let xadj: Vec<u32> = list(parts[0], "xadj")?;
+    let adj: Vec<crate::Vertex> = list(parts[1], "adjncy")?;
+    if xadj.is_empty() {
+        bail!("xadj must have n+1 entries");
+    }
+    let n = xadj.len() - 1;
+    let ew: Vec<crate::EWeight> = match parts.get(2) {
+        Some(p) if !p.is_empty() => list(p, "eweight")?,
+        _ => vec![1.0; adj.len()],
+    };
+    let vw: Vec<crate::VWeight> = match parts.get(3) {
+        Some(p) if !p.is_empty() => list(p, "vweight")?,
+        _ => vec![1; n],
+    };
+    if ew.len() != adj.len() {
+        bail!("eweights length {} != adjncy length {}", ew.len(), adj.len());
+    }
+    if vw.len() != n {
+        bail!("vweights length {} != n {}", vw.len(), n);
+    }
+    let g = CsrGraph { xadj, adj, ew, vw };
+    g.validate().map_err(anyhow::Error::msg)?;
+    Ok(g)
+}
+
+/// Percent-escape a wire value: space, newline, CR and `%` itself, so
+/// error messages survive the space-separated key=value framing intact.
+pub fn escape_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '%' => out.push_str("%25"),
+            ' ' => out.push_str("%20"),
+            '\n' => out.push_str("%0A"),
+            '\r' => out.push_str("%0D"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Reverse [`escape_value`]. Unrecognized `%` sequences pass through
+/// unchanged, so unescaping is total.
+pub fn unescape_value(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' && i + 3 <= bytes.len() {
+            let replaced = match (bytes[i + 1], bytes[i + 2]) {
+                (b'2', b'5') => Some('%'),
+                (b'2', b'0') => Some(' '),
+                (b'0', b'A') => Some('\n'),
+                (b'0', b'D') => Some('\r'),
+                _ => None,
+            };
+            if let Some(c) = replaced {
+                out.push(c);
+                i += 3;
+                continue;
+            }
+        }
+        let c = s[i..].chars().next().expect("in-bounds char");
+        out.push(c);
+        i += c.len_utf8();
+    }
+    out
+}
+
+/// Render a map/result reply line.
 pub fn render_response(r: &MapReply) -> String {
     let o = &r.outcome;
     let mut s = format!(
@@ -97,57 +293,254 @@ pub fn render_response(r: &MapReply) -> String {
 pub fn render_metrics(m: &ServiceMetrics) -> String {
     let per: Vec<String> = m.per_algorithm.iter().map(|(k, v)| format!("{k}:{v}")).collect();
     format!(
-        "ok requests={} failures={} host_ms={:.1} device_ms={:.1} per_algorithm={}",
+        "ok requests={} failures={} completed={} cancelled={} deadline_missed={} \
+         busy_rejections={} queue_depth={} in_flight={} host_ms={:.1} device_ms={:.1} per_algorithm={}",
         m.requests,
         m.failures,
+        m.completed,
+        m.cancelled,
+        m.deadline_missed,
+        m.busy_rejections,
+        m.queue_depth,
+        m.in_flight,
         m.total_host_ms,
         m.total_device_ms,
         per.join(";")
     )
 }
 
-/// Render an error line.
-pub fn render_error(e: &anyhow::Error) -> String {
-    format!("err message={}", format!("{e}").replace(['\n', ' '], "_"))
+/// Render an error with an explicit machine-readable code.
+pub fn render_err(code: &str, msg: &str) -> String {
+    format!("err code={code} message={}", escape_value(msg))
 }
 
-/// Serve the protocol over TCP (one thread per connection) until the
-/// process exits. Binds `addr` and prints the bound address.
-pub fn serve_tcp(service: std::sync::Arc<super::service::Service>, addr: &str) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-    let listener = std::net::TcpListener::bind(addr)?;
-    println!("heipa coordinator listening on {}", listener.local_addr()?);
+/// Render a request-level error line (`code=bad_request`).
+pub fn render_error(e: &anyhow::Error) -> String {
+    render_err("bad_request", &format!("{e:#}"))
+}
+
+/// Render a job status line: `ok job=<id> state=<state> [error=…]`.
+pub fn render_job_status(st: &JobStatus) -> String {
+    let mut s = format!("ok job={} state={}", st.id, st.state.name());
+    if let Some(e) = &st.error {
+        s.push_str(" error=");
+        s.push_str(&escape_value(e));
+    }
+    s
+}
+
+fn unknown_job(job: u64) -> String {
+    render_err("unknown_job", &format!("no job with id {job}"))
+}
+
+/// The terminal-but-not-done states render as coded errors.
+fn render_job_error(st: &JobStatus) -> String {
+    let code = match st.state {
+        JobState::Failed => "failed",
+        JobState::Cancelled => "cancelled",
+        JobState::Expired => "expired",
+        _ => "failed",
+    };
+    render_err(code, st.error.as_deref().unwrap_or("job did not complete"))
+}
+
+/// Execute one parsed command against the service. Every front-end — the
+/// TCP accept loop, tests and the e2e example — goes through this one
+/// dispatcher, so the wire semantics cannot drift between them.
+pub fn dispatch(svc: &Service, cmd: Command) -> String {
+    match cmd {
+        Command::Ping => "ok pong=1".to_string(),
+        Command::Metrics => render_metrics(&svc.metrics()),
+        Command::Map { req, opts } => {
+            // The wire never blocks on queue admission — a full queue is
+            // `err code=busy` for `map` exactly as for `submit` (only
+            // in-process callers opt into blocking submits). The
+            // connection then blocks on the *solve*, which is the legacy
+            // `map` contract.
+            let jopts = JobOptions {
+                priority: opts.priority,
+                deadline_ms: opts.deadline_ms,
+                block_when_full: false,
+            };
+            match svc.submit_async(&req, jopts) {
+                Err(e @ SubmitError::Busy { .. }) => render_err("busy", &e.to_string()),
+                Err(e) => render_err("unavailable", &e.to_string()),
+                Ok(h) => match h.wait() {
+                    Ok(outcome) => render_response(&MapReply { id: h.id().0, outcome }),
+                    Err(_) => render_job_error(&h.status()),
+                },
+            }
+        }
+        Command::Submit { req, opts } => {
+            let jopts = JobOptions {
+                priority: opts.priority,
+                deadline_ms: opts.deadline_ms,
+                block_when_full: false,
+            };
+            match svc.submit_async(&req, jopts) {
+                Ok(h) => format!("ok job={} state=queued", h.id()),
+                Err(e @ SubmitError::Busy { .. }) => render_err("busy", &e.to_string()),
+                Err(e) => render_err("unavailable", &e.to_string()),
+            }
+        }
+        Command::Status { job } => match svc.job(job) {
+            Some(h) => render_job_status(&h.status()),
+            None => unknown_job(job),
+        },
+        Command::Wait { job, timeout_ms } => match svc.job(job) {
+            None => unknown_job(job),
+            Some(h) => match timeout_ms {
+                None => {
+                    let _ = h.wait();
+                    render_job_status(&h.status())
+                }
+                Some(ms) => match h.wait_timeout(std::time::Duration::from_millis(ms)) {
+                    Some(_) => render_job_status(&h.status()),
+                    None => render_err("timeout", &format!("job {job} still pending after {ms}ms")),
+                },
+            },
+        },
+        Command::JobResult { job } => match svc.job(job) {
+            None => unknown_job(job),
+            Some(h) => match h.try_result() {
+                None => render_err(
+                    "not_done",
+                    &format!("job {job} is {}", h.status().state.name()),
+                ),
+                Some(Ok(outcome)) => render_response(&MapReply { id: job, outcome }),
+                Some(Err(_)) => render_job_error(&h.status()),
+            },
+        },
+        Command::Cancel { job } => match svc.cancel(job) {
+            Some(st) => format!("ok job={job} cancelled=1 state={}", st.state.name()),
+            None => unknown_job(job),
+        },
+        Command::Jobs => {
+            let js = svc.jobs();
+            if js.is_empty() {
+                "ok count=0".to_string()
+            } else {
+                let list: Vec<String> =
+                    js.iter().map(|s| format!("{}:{}", s.id, s.state.name())).collect();
+                format!("ok count={} jobs={}", js.len(), list.join(","))
+            }
+        }
+        Command::GraphPut { name, path, csr } => {
+            let built: Result<CsrGraph> = match (&path, &csr) {
+                (Some(p), _) => crate::graph::io::read_metis(std::path::Path::new(p))
+                    .with_context(|| format!("read {p}")),
+                (_, Some(c)) => parse_inline_csr(c),
+                _ => Err(anyhow::anyhow!("graph put needs path=… or csr=…")),
+            };
+            match built {
+                Ok(g) => {
+                    let (n, m) = svc.put_graph(&name, Arc::new(g));
+                    format!("ok graph={name} n={n} m={m}")
+                }
+                Err(e) => render_error(&e),
+            }
+        }
+        Command::GraphList => {
+            let names = svc.graph_names();
+            if names.is_empty() {
+                "ok count=0".to_string()
+            } else {
+                format!("ok count={} graphs={}", names.len(), names.join(","))
+            }
+        }
+        Command::GraphDrop { name } => {
+            if svc.drop_graph(&name) {
+                format!("ok dropped={name}")
+            } else {
+                render_err("unknown_graph", &format!("no pinned graph named {name}"))
+            }
+        }
+    }
+}
+
+/// Parse + dispatch one request line, always producing one reply line.
+pub fn handle_command(svc: &Service, line: &str) -> String {
+    match parse_command(line) {
+        Ok(cmd) => dispatch(svc, cmd),
+        Err(e) => render_error(&e),
+    }
+}
+
+/// TCP accept-loop options.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Concurrent connection cap; connections past it receive one
+    /// `err code=busy` line and are closed instead of spawning a thread.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_conns: 64 }
+    }
+}
+
+/// Decrements the live-connection gauge even when the handler panics.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve the protocol on an already-bound listener until the process
+/// exits. Connections are thin command shells — one named thread each,
+/// bounded by [`ServeOptions::max_conns`] — and every line goes through
+/// [`handle_command`].
+pub fn serve_listener(
+    service: Arc<Service>,
+    listener: std::net::TcpListener,
+    opts: ServeOptions,
+) -> Result<()> {
+    use std::io::{BufRead, BufReader};
+    let cap = opts.max_conns.max(1);
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut conn_seq = 0u64;
     for stream in listener.incoming() {
-        let stream = stream?;
+        let mut stream = stream?;
+        if active.load(Ordering::SeqCst) >= cap {
+            let _ = writeln!(stream, "{}", render_err("busy", &format!("connection limit {cap} reached")));
+            continue; // dropping the stream closes it
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        let guard = ConnGuard(active.clone());
         let svc = service.clone();
-        std::thread::spawn(move || {
-            let peer = stream.peer_addr().ok();
-            let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        conn_seq += 1;
+        let _ = std::thread::Builder::new().name(format!("heipa-conn-{conn_seq}")).spawn(move || {
+            let _guard = guard;
+            let Ok(read_half) = stream.try_clone() else { return };
+            let reader = BufReader::new(read_half);
             let mut writer = stream;
             for line in reader.lines() {
                 let Ok(line) = line else { break };
-                let reply = match parse_command(&line) {
-                    Ok(Command::Ping) => "ok pong=1".to_string(),
-                    Ok(Command::Metrics) => render_metrics(&svc.metrics()),
-                    Ok(Command::Map(req)) => match svc.submit(req) {
-                        Ok(resp) => render_response(&resp),
-                        Err(e) => render_error(&e),
-                    },
-                    Err(e) => render_error(&e),
-                };
-                if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
+                let reply = handle_command(&svc, &line);
+                if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err()
+                {
                     break;
                 }
             }
-            let _ = peer;
         });
     }
     Ok(())
 }
 
+/// Bind `addr`, print the bound address, and serve forever.
+pub fn serve_tcp(service: Arc<Service>, addr: &str, opts: ServeOptions) -> Result<()> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("heipa coordinator listening on {}", listener.local_addr()?);
+    serve_listener(service, listener, opts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::ServiceConfig;
 
     #[test]
     fn parses_map_command() {
@@ -155,16 +548,65 @@ mod tests {
             "map instance=rgg15 algorithm=gpu-im hierarchy=4:8:2 distance=1:10:100 eps=0.05 seed=7 polish=1",
         )
         .unwrap();
-        let Command::Map(req) = cmd else { panic!() };
+        let Command::Map { req, opts } = cmd else { panic!() };
         assert_eq!(req.instance, "rgg15");
         assert_eq!(req.algorithm, Some(Algorithm::GpuIm));
         assert_eq!(req.eps, 0.05);
         assert!(req.polish);
+        assert_eq!(opts, WireSubmitOpts::default());
+    }
+
+    #[test]
+    fn parses_submit_with_job_options_and_graph_alias() {
+        let Command::Submit { req, opts } = parse_command(
+            "submit graph=mesh topology=torus:4x4 priority=5 deadline_ms=2500 opt.adaptive=0",
+        )
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(req.instance, "mesh");
+        assert_eq!(req.topology.as_deref(), Some("torus:4x4"));
+        assert_eq!(opts.priority, 5);
+        assert_eq!(opts.deadline_ms, Some(2500));
+        assert_eq!(req.options.get("adaptive").map(String::as_str), Some("0"));
+    }
+
+    #[test]
+    fn parses_job_commands() {
+        assert_eq!(parse_command("status job=3").unwrap(), Command::Status { job: 3 });
+        assert_eq!(
+            parse_command("wait job=4 timeout_ms=100").unwrap(),
+            Command::Wait { job: 4, timeout_ms: Some(100) }
+        );
+        assert_eq!(parse_command("wait job=4").unwrap(), Command::Wait { job: 4, timeout_ms: None });
+        assert_eq!(parse_command("result job=5").unwrap(), Command::JobResult { job: 5 });
+        assert_eq!(parse_command("cancel job=6").unwrap(), Command::Cancel { job: 6 });
+        assert_eq!(parse_command("jobs").unwrap(), Command::Jobs);
+        assert!(parse_command("status").is_err(), "job= is required");
+        assert!(parse_command("wait job=x").is_err());
+    }
+
+    #[test]
+    fn parses_graph_session_commands() {
+        assert_eq!(
+            parse_command("graph put name=m path=/tmp/m.graph").unwrap(),
+            Command::GraphPut { name: "m".into(), path: Some("/tmp/m.graph".into()), csr: None }
+        );
+        assert_eq!(
+            parse_command("graph put name=t csr=0,1/0").unwrap(),
+            Command::GraphPut { name: "t".into(), path: None, csr: Some("0,1/0".into()) }
+        );
+        assert_eq!(parse_command("graph list").unwrap(), Command::GraphList);
+        assert_eq!(parse_command("graph del name=m").unwrap(), Command::GraphDrop { name: "m".into() });
+        assert!(parse_command("graph put name=m").is_err(), "path xor csr required");
+        assert!(parse_command("graph put name=m path=a csr=b").is_err());
+        assert!(parse_command("graph frob").is_err());
     }
 
     #[test]
     fn auto_algorithm_unpins() {
-        let Command::Map(req) = parse_command("map instance=x algorithm=auto").unwrap() else {
+        let Command::Map { req, .. } = parse_command("map instance=x algorithm=auto").unwrap()
+        else {
             panic!()
         };
         assert_eq!(req.algorithm, None);
@@ -175,14 +617,16 @@ mod tests {
         assert!(parse_command("").is_err());
         assert!(parse_command("frob instance=x").is_err());
         assert!(parse_command("map").is_err());
+        assert!(parse_command("submit").is_err());
         assert!(parse_command("map instance=x bad").is_err());
         assert!(parse_command("map instance=x algorithm=nope").is_err());
         assert!(parse_command("map instance=x refinement=nope").is_err());
+        assert!(parse_command("submit instance=x priority=high").is_err());
     }
 
     #[test]
     fn parses_topology_key() {
-        let Command::Map(req) = parse_command("map instance=x topology=torus:4x4x4").unwrap()
+        let Command::Map { req, .. } = parse_command("map instance=x topology=torus:4x4x4").unwrap()
         else {
             panic!()
         };
@@ -192,13 +636,46 @@ mod tests {
 
     #[test]
     fn parses_refinement_and_solver_options() {
-        let Command::Map(req) =
+        let Command::Map { req, .. } =
             parse_command("map instance=x refinement=strong opt.adaptive=0").unwrap()
         else {
             panic!()
         };
         assert_eq!(req.refinement, Refinement::Strong);
         assert_eq!(req.options.get("adaptive").map(String::as_str), Some("0"));
+    }
+
+    #[test]
+    fn error_messages_round_trip_through_escaping() {
+        // Regression: render_error used to replace every space with `_`,
+        // mangling messages beyond recovery.
+        let original = "instance `no such thing` is neither\na registry name (100% sure)";
+        let line = render_err("bad_request", original);
+        assert!(line.starts_with("err code=bad_request message="), "{line}");
+        let value = line.split_once("message=").unwrap().1;
+        assert!(!value.contains(' ') && !value.contains('\n'), "raw separators leaked: {line}");
+        assert_eq!(unescape_value(value), original);
+        // Escaping is idempotent through one round trip, including `%`.
+        assert_eq!(unescape_value(&escape_value("a%20b c")), "a%20b c");
+        // Unknown escapes pass through.
+        assert_eq!(unescape_value("x%zz"), "x%zz");
+    }
+
+    #[test]
+    fn inline_csr_parses_and_validates() {
+        // Triangle: 3 vertices, each adjacent to the other two.
+        let g = parse_inline_csr("0,2,4,6/1,2,0,2,0,1").unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        // Weighted variant.
+        let g = parse_inline_csr("0,1,2/1,0/2.5,2.5/3,4").unwrap();
+        assert_eq!(g.vw, vec![3, 4]);
+        assert_eq!(g.ew, vec![2.5, 2.5]);
+        // Asymmetric adjacency is rejected by validation.
+        assert!(parse_inline_csr("0,1,1/1").is_err());
+        // Length mismatches are rejected.
+        assert!(parse_inline_csr("0,2,4,6/1,2,0,2,0,1/1.0").is_err());
+        assert!(parse_inline_csr("").is_err());
     }
 
     #[test]
@@ -222,5 +699,115 @@ mod tests {
         let line = render_response(&r);
         assert!(line.starts_with("ok id=3 algorithm=gpu-hm"));
         assert!(line.contains("mapping=0,1,2,3"));
+    }
+
+    fn quick_service() -> Service {
+        Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() })
+    }
+
+    #[test]
+    fn dispatcher_drives_the_full_job_lifecycle() {
+        let svc = quick_service();
+        let reply = handle_command(
+            &svc,
+            "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 seed=1",
+        );
+        assert!(reply.starts_with("ok job="), "{reply}");
+        let job: u64 = reply
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("job=").and_then(|v| v.parse().ok()))
+            .expect("job id");
+        let wait = handle_command(&svc, &format!("wait job={job}"));
+        assert!(wait.contains("state=done"), "{wait}");
+        let result = handle_command(&svc, &format!("result job={job}"));
+        assert!(result.starts_with("ok id="), "{result}");
+        assert!(result.contains(" j="), "{result}");
+        let jobs = handle_command(&svc, "jobs");
+        assert!(jobs.contains(&format!("{job}:done")), "{jobs}");
+        // Unknown ids are coded errors.
+        assert!(handle_command(&svc, "status job=999").starts_with("err code=unknown_job"));
+        assert!(handle_command(&svc, "result job=999").starts_with("err code=unknown_job"));
+        assert!(handle_command(&svc, "cancel job=999").starts_with("err code=unknown_job"));
+    }
+
+    #[test]
+    fn dispatcher_submit_returns_before_the_solve_and_cancel_works() {
+        let svc = quick_service();
+        let reply = handle_command(
+            &svc,
+            "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 opt.__sleep_ms=60000",
+        );
+        let job: u64 = reply
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("job=").and_then(|v| v.parse().ok()))
+            .unwrap_or_else(|| panic!("no job id in {reply}"));
+        let status = handle_command(&svc, &format!("status job={job}"));
+        assert!(
+            status.contains("state=queued") || status.contains("state=running"),
+            "submit blocked until completion: {status}"
+        );
+        // result before completion → not_done.
+        let early = handle_command(&svc, &format!("result job={job}"));
+        assert!(early.starts_with("err code=not_done"), "{early}");
+        // A bounded wait times out while the job sleeps.
+        let t = handle_command(&svc, &format!("wait job={job} timeout_ms=50"));
+        assert!(t.starts_with("err code=timeout"), "{t}");
+        let c = handle_command(&svc, &format!("cancel job={job}"));
+        assert!(c.starts_with("ok job="), "{c}");
+        let w = handle_command(&svc, &format!("wait job={job}"));
+        assert!(w.contains("state=cancelled"), "{w}");
+        let r = handle_command(&svc, &format!("result job={job}"));
+        assert!(r.starts_with("err code=cancelled"), "{r}");
+    }
+
+    #[test]
+    fn dispatcher_reports_busy_with_a_distinct_code() {
+        let svc = Service::with_config(ServiceConfig {
+            threads: 1,
+            workers: 1,
+            queue_cap: 1,
+            ..Default::default()
+        });
+        let slow = "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 opt.__sleep_ms=3000";
+        let first = handle_command(&svc, slow);
+        assert!(first.starts_with("ok job="), "{first}");
+        // Wait for the worker to pick the first job up, then fill the queue.
+        while svc.engine().queue_depth() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let second = handle_command(&svc, slow);
+        assert!(second.starts_with("ok job="), "{second}");
+        let third = handle_command(&svc, slow);
+        assert!(third.starts_with("err code=busy"), "{third}");
+        assert!(svc.metrics().busy_rejections >= 1);
+        // Cancel the backlog so the test exits promptly.
+        for id in 1..=2u64 {
+            handle_command(&svc, &format!("cancel job={id}"));
+            handle_command(&svc, &format!("wait job={id}"));
+        }
+    }
+
+    #[test]
+    fn dispatcher_graph_sessions_upload_once_map_many() {
+        let svc = quick_service();
+        // An 8-cycle uploaded inline.
+        let put = handle_command(
+            &svc,
+            "graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6",
+        );
+        assert_eq!(put, "ok graph=ring n=8 m=8");
+        assert_eq!(handle_command(&svc, "graph list"), "ok count=1 graphs=ring");
+        // Two jobs over the same pinned graph, different machines.
+        for (hier, dist, k) in [("2:2", "1:10", 4), ("4", "1", 4)] {
+            let reply = handle_command(
+                &svc,
+                &format!("map graph=ring algorithm=sharedmap-f hierarchy={hier} distance={dist} eps=0.3"),
+            );
+            assert!(reply.starts_with("ok id="), "{hier}: {reply}");
+            assert!(reply.contains(&format!("k={k}")), "{hier}: {reply}");
+        }
+        assert_eq!(handle_command(&svc, "graph del name=ring"), "ok dropped=ring");
+        assert!(handle_command(&svc, "graph del name=ring").starts_with("err code=unknown_graph"));
+        assert_eq!(handle_command(&svc, "graph list"), "ok count=0");
     }
 }

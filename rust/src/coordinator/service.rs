@@ -1,14 +1,25 @@
-//! The coordinator worker: a job queue in front of one
-//! [`crate::engine::Engine`]. Graph caching (bounded LRU), algorithm
-//! routing and the optional device-offloaded QAP polish all happen inside
-//! the engine — the worker only assigns ids and keeps metrics.
+//! The coordinator service: wire-level job bookkeeping around one
+//! asynchronous [`crate::engine::Engine`]. Graph caching (pinned session
+//! tier + bounded LRU), algorithm routing, the worker pool and the
+//! optional device-offloaded QAP polish all happen inside the engine —
+//! the service tracks job handles for the wire protocol and keeps
+//! metrics.
+//!
+//! Metrics live in atomics (plus one poison-recovering mutex for the
+//! per-algorithm map), so a panicking job can never take the whole
+//! service down with a poisoned lock — regression-tested with the
+//! `__panic` solver hook.
 
 use super::{MapReply, MapRequest, ServiceMetrics};
-use crate::engine::{Engine, EngineConfig};
-use anyhow::{Context, Result};
+use crate::engine::{
+    Engine, EngineConfig, JobHandle, JobState, JobStatus, MapOutcome, SubmitError, SubmitOpts,
+};
+use crate::graph::CsrGraph;
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
 
 /// Service construction parameters.
 #[derive(Clone, Debug)]
@@ -16,103 +27,275 @@ pub struct ServiceConfig {
     /// Artifact directory for the PJRT offload kernels; the service still
     /// maps (host polish only) when the runtime cannot come up.
     pub artifacts_dir: String,
-    /// Device worker threads (0 = auto).
+    /// Device worker threads per engine worker (0 = auto).
     pub threads: usize,
     /// Graph cache entry cap — bounds worker memory for long-lived
     /// `serve` processes.
     pub graph_cache_cap: usize,
+    /// Engine workers draining the job queue (jobs on different workers
+    /// overlap).
+    pub workers: usize,
+    /// Bounded job-queue capacity; non-blocking submits past it are
+    /// rejected with `err code=busy`.
+    pub queue_cap: usize,
+    /// Finished jobs retained for `status`/`result` lookups; the oldest
+    /// finished jobs are evicted beyond this.
+    pub job_retention: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { artifacts_dir: "artifacts".into(), threads: 0, graph_cache_cap: 64 }
+        ServiceConfig {
+            artifacts_dir: "artifacts".into(),
+            threads: 0,
+            graph_cache_cap: 64,
+            workers: 1,
+            queue_cap: 256,
+            job_retention: 1024,
+        }
     }
 }
 
-/// Handle to a running coordinator worker.
-pub struct Service {
-    tx: mpsc::Sender<Job>,
-    next_id: AtomicU64,
-    metrics: Arc<Mutex<ServiceMetrics>>,
+/// Per-submit options on the wire (`priority=`, `deadline_ms=`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobOptions {
+    /// Higher runs first; FIFO within a class.
+    pub priority: i32,
+    /// Reject or abort the job this many ms after submit.
+    pub deadline_ms: Option<u64>,
+    /// Block on a full queue instead of failing with `Busy` (in-process
+    /// callers only; the wire front-end never blocks).
+    pub block_when_full: bool,
 }
 
-struct Job {
-    id: u64,
-    request: MapRequest,
-    reply: mpsc::Sender<Result<MapReply>>,
+/// Lock-free counters + one poison-recovering map. `f64` totals are
+/// stored as bit patterns and updated with a CAS loop.
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    failures: AtomicU64,
+    completed: AtomicU64,
+    cancelled: AtomicU64,
+    deadline_missed: AtomicU64,
+    busy_rejections: AtomicU64,
+    host_ms_bits: AtomicU64,
+    device_ms_bits: AtomicU64,
+    per_algorithm: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// The completion hook run by whichever engine worker retires a job.
+fn completion_hook(counters: &Arc<Counters>) -> crate::engine::job::CompletionHook {
+    let c = counters.clone();
+    Arc::new(move |st: &JobStatus, out: Option<&MapOutcome>| {
+        match st.state {
+            JobState::Done => {
+                c.completed.fetch_add(1, Ordering::Relaxed);
+                if let Some(o) = out {
+                    add_f64(&c.host_ms_bits, o.host_ms);
+                    add_f64(&c.device_ms_bits, o.device_ms);
+                    let mut per = c.per_algorithm.lock().unwrap_or_else(PoisonError::into_inner);
+                    *per.entry(o.algorithm.name()).or_insert(0) += 1;
+                }
+            }
+            JobState::Failed => {
+                c.failures.fetch_add(1, Ordering::Relaxed);
+            }
+            JobState::Cancelled => {
+                c.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            JobState::Expired => {
+                c.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            }
+            JobState::Queued | JobState::Running => {}
+        }
+    })
+}
+
+/// Handles of every live (and recently finished) job, in submit order.
+#[derive(Default)]
+struct JobRegistry {
+    order: VecDeque<u64>,
+    map: HashMap<u64, JobHandle>,
+}
+
+/// Handle to a running coordinator service.
+pub struct Service {
+    engine: Engine,
+    jobs: Mutex<JobRegistry>,
+    counters: Arc<Counters>,
+    retention: usize,
 }
 
 impl Service {
-    /// Convenience: spawn with default cache cap.
+    /// Convenience: one engine worker, default caps.
     pub fn start(artifacts_dir: String, threads: usize) -> Service {
         Service::with_config(ServiceConfig { artifacts_dir, threads, ..ServiceConfig::default() })
     }
 
-    /// Spawn the worker thread owning the engine.
+    /// Start the engine worker pool behind the job queue.
     pub fn with_config(cfg: ServiceConfig) -> Service {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let metrics = Arc::new(Mutex::new(ServiceMetrics::default()));
-        let metrics_worker = metrics.clone();
-        std::thread::spawn(move || {
-            let engine = Engine::new(EngineConfig {
-                threads: cfg.threads,
-                artifacts_dir: cfg.artifacts_dir,
-                graph_cache_cap: cfg.graph_cache_cap,
-            });
-            while let Ok(job) = rx.recv() {
-                let out = engine
-                    .map(&job.request.to_spec())
-                    .map(|outcome| MapReply { id: job.id, outcome });
-                {
-                    let mut m = metrics_worker.lock().unwrap();
-                    m.requests += 1;
-                    match &out {
-                        Ok(r) => {
-                            m.total_host_ms += r.outcome.host_ms;
-                            m.total_device_ms += r.outcome.device_ms;
-                            *m.per_algorithm.entry(r.outcome.algorithm.name()).or_insert(0) += 1;
-                        }
-                        Err(_) => m.failures += 1,
-                    }
-                }
-                let _ = job.reply.send(out);
-            }
+        let engine = Engine::new(EngineConfig {
+            threads: cfg.threads,
+            artifacts_dir: cfg.artifacts_dir,
+            graph_cache_cap: cfg.graph_cache_cap,
+            workers: cfg.workers,
+            queue_cap: cfg.queue_cap,
         });
-        Service { tx, next_id: AtomicU64::new(1), metrics }
+        Service {
+            engine,
+            jobs: Mutex::new(JobRegistry::default()),
+            counters: Arc::new(Counters::default()),
+            retention: cfg.job_retention.max(1),
+        }
     }
 
-    /// Submit a request and wait for the reply.
+    /// The engine behind this service (graph sessions, gauges).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn registry(&self) -> std::sync::MutexGuard<'_, JobRegistry> {
+        self.jobs.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn register(&self, h: JobHandle) {
+        let mut r = self.registry();
+        r.order.push_back(h.id().0);
+        r.map.insert(h.id().0, h);
+        while r.map.len() > self.retention {
+            // Evict the oldest *finished* job; never drop a live handle.
+            let Some(pos) =
+                r.order.iter().position(|id| r.map.get(id).is_none_or(|h| h.is_finished()))
+            else {
+                break;
+            };
+            if let Some(id) = r.order.remove(pos) {
+                r.map.remove(&id);
+            }
+        }
+    }
+
+    /// Submit asynchronously: returns the job handle as soon as the job
+    /// is queued. `Err(Busy)` when the bounded queue is full (and
+    /// `opts.block_when_full` is off).
+    pub fn submit_async(
+        &self,
+        request: &MapRequest,
+        opts: JobOptions,
+    ) -> std::result::Result<JobHandle, SubmitError> {
+        let submit = SubmitOpts {
+            priority: opts.priority,
+            deadline: opts.deadline_ms.map(Duration::from_millis),
+            block_when_full: opts.block_when_full,
+            on_complete: Some(completion_hook(&self.counters)),
+        };
+        match self.engine.submit_opts(&request.to_spec(), submit) {
+            Ok(h) => {
+                self.counters.requests.fetch_add(1, Ordering::Relaxed);
+                self.register(h.clone());
+                Ok(h)
+            }
+            Err(e) => {
+                if matches!(e, SubmitError::Busy { .. }) {
+                    self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit a request and wait for the reply — the pre-job-API blocking
+    /// path, now `submit_async` + `wait` (blocking on queue space, never
+    /// on `Busy`).
     pub fn submit(&self, request: MapRequest) -> Result<MapReply> {
-        let (reply, rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Job { id, request, reply })
-            .map_err(|_| anyhow::anyhow!("service worker terminated"))?;
-        rx.recv().context("service worker dropped the reply")?
+        let h = self
+            .submit_async(&request, JobOptions { block_when_full: true, ..JobOptions::default() })
+            .map_err(anyhow::Error::from)?;
+        let outcome = h.wait()?;
+        Ok(MapReply { id: h.id().0, outcome })
     }
 
-    /// Submit a batch; replies come back in request order.
+    /// Submit a batch; every job is enqueued before the first wait, so
+    /// with multiple engine workers the batch overlaps. Replies come back
+    /// in request order even when jobs finish out of order, and one
+    /// failing request does not fail the rest.
     pub fn submit_batch(&self, requests: Vec<MapRequest>) -> Vec<Result<MapReply>> {
-        let channels: Vec<_> = requests
-            .into_iter()
-            .map(|request| {
-                let (reply, rx) = mpsc::channel();
-                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                let sent = self.tx.send(Job { id, request, reply });
-                (rx, sent)
+        let handles: Vec<std::result::Result<JobHandle, SubmitError>> = requests
+            .iter()
+            .map(|r| {
+                self.submit_async(r, JobOptions { block_when_full: true, ..JobOptions::default() })
             })
             .collect();
-        channels
+        handles
             .into_iter()
-            .map(|(rx, sent)| {
-                sent.map_err(|_| anyhow::anyhow!("service worker terminated"))?;
-                rx.recv().context("service worker dropped the reply")?
+            .map(|h| {
+                let h = h.map_err(anyhow::Error::from)?;
+                Ok(MapReply { id: h.id().0, outcome: h.wait()? })
             })
             .collect()
     }
 
+    /// Look up a job by wire id.
+    pub fn job(&self, id: u64) -> Option<JobHandle> {
+        self.registry().map.get(&id).cloned()
+    }
+
+    /// Cancel by wire id; `None` for unknown jobs.
+    pub fn cancel(&self, id: u64) -> Option<JobStatus> {
+        let h = self.job(id)?;
+        h.cancel();
+        Some(h.status())
+    }
+
+    /// Status of every tracked job, in submit order.
+    pub fn jobs(&self) -> Vec<JobStatus> {
+        let r = self.registry();
+        r.order.iter().filter_map(|id| r.map.get(id).map(|h| h.status())).collect()
+    }
+
+    /// Pin a session graph (`graph put`); returns (n, m).
+    pub fn put_graph(&self, name: &str, g: Arc<CsrGraph>) -> (usize, usize) {
+        let nm = (g.n(), g.m());
+        self.engine.put_graph(name, g);
+        nm
+    }
+
+    /// Names of the pinned session graphs, sorted.
+    pub fn graph_names(&self) -> Vec<String> {
+        self.engine.graph_names()
+    }
+
+    /// Drop a pinned session graph; false when unknown.
+    pub fn drop_graph(&self, name: &str) -> bool {
+        self.engine.drop_graph(name)
+    }
+
     pub fn metrics(&self) -> ServiceMetrics {
-        self.metrics.lock().unwrap().clone()
+        let c = &self.counters;
+        ServiceMetrics {
+            requests: c.requests.load(Ordering::Relaxed),
+            failures: c.failures.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
+            deadline_missed: c.deadline_missed.load(Ordering::Relaxed),
+            busy_rejections: c.busy_rejections.load(Ordering::Relaxed),
+            queue_depth: self.engine.queue_depth(),
+            in_flight: self.engine.in_flight(),
+            total_host_ms: f64::from_bits(c.host_ms_bits.load(Ordering::Relaxed)),
+            total_device_ms: f64::from_bits(c.device_ms_bits.load(Ordering::Relaxed)),
+            per_algorithm: c.per_algorithm.lock().unwrap_or_else(PoisonError::into_inner).clone(),
+        }
     }
 }
 
@@ -133,6 +316,30 @@ mod tests {
         }
     }
 
+    /// Completion hooks for jobs cancelled/expired *while queued* fire
+    /// when a worker pops (or a full-queue purge evicts) them — poll
+    /// briefly instead of racing that retirement.
+    fn await_metric(svc: &Service, what: &str, f: impl Fn(&ServiceMetrics) -> bool) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !f(&svc.metrics()) {
+            assert!(std::time::Instant::now() < deadline, "metric `{what}` never converged");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
+    /// A fast request with the cancellable sleep test hook.
+    fn sleepy_request(ms: u64) -> MapRequest {
+        let mut req = MapRequest {
+            instance: "wal_598a".into(),
+            algorithm: Some(Algorithm::SharedMapF),
+            hierarchy: "2:2".into(),
+            distance: "1:10".into(),
+            ..MapRequest::default()
+        };
+        req.options.insert("__sleep_ms".into(), ms.to_string());
+        req
+    }
+
     #[test]
     fn submits_and_maps() {
         let svc = Service::start("artifacts".into(), 1);
@@ -143,6 +350,7 @@ mod tests {
         assert!(resp.outcome.mapping.is_empty(), "mapping withheld unless requested");
         let m = svc.metrics();
         assert_eq!(m.requests, 1);
+        assert_eq!(m.completed, 1);
         assert_eq!(m.failures, 0);
     }
 
@@ -156,6 +364,79 @@ mod tests {
         // gen; just check both returned consistent sizes.
         let (a, b) = (out[0].as_ref().unwrap(), out[1].as_ref().unwrap());
         assert_eq!(a.outcome.n, b.outcome.n);
+    }
+
+    #[test]
+    fn batch_replies_in_request_order_despite_out_of_order_finish() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 2, ..Default::default() });
+        // First request sleeps; the second finishes well before it.
+        let reqs = vec![sleepy_request(400), sleepy_request(0), sleepy_request(0)];
+        let out = svc.submit_batch(reqs);
+        assert_eq!(out.len(), 3);
+        let ids: Vec<u64> = out.iter().map(|r| r.as_ref().unwrap().id).collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "replies out of request order: {ids:?}");
+    }
+
+    #[test]
+    fn batch_survives_a_mid_batch_invalid_request() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 2, ..Default::default() });
+        let reqs =
+            vec![small_request("wal_598a"), small_request("no_such_instance"), small_request("wal_598a")];
+        let out = svc.submit_batch(reqs);
+        assert!(out[0].is_ok(), "{:?}", out[0].as_ref().err());
+        assert!(out[1].is_err());
+        assert!(out[2].is_ok(), "{:?}", out[2].as_ref().err());
+        let m = svc.metrics();
+        assert_eq!(m.failures, 1);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn async_submit_cancel_and_metrics() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let h = svc
+            .submit_async(&sleepy_request(60_000), JobOptions::default())
+            .unwrap();
+        assert!(!h.is_finished(), "submit_async must return before the solve");
+        assert!(svc.job(h.id().0).is_some());
+        let st = svc.cancel(h.id().0).unwrap();
+        assert!(matches!(st.state, JobState::Cancelled | JobState::Running));
+        assert!(h.wait().is_err());
+        assert_eq!(h.status().state, JobState::Cancelled);
+        await_metric(&svc, "cancelled", |m| m.cancelled == 1);
+        assert!(svc.cancel(999_999).is_none(), "unknown job id");
+    }
+
+    #[test]
+    fn deadline_miss_is_counted() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let blocker = svc.submit_async(&sleepy_request(300), JobOptions::default()).unwrap();
+        let late = svc
+            .submit_async(
+                &sleepy_request(0),
+                JobOptions { deadline_ms: Some(30), ..JobOptions::default() },
+            )
+            .unwrap();
+        assert!(late.wait().unwrap_err().to_string().contains("deadline"));
+        blocker.wait().unwrap();
+        await_metric(&svc, "deadline_missed", |m| m.deadline_missed == 1);
+    }
+
+    #[test]
+    fn panicking_job_does_not_poison_metrics_or_kill_the_service() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let mut bad = sleepy_request(0);
+        bad.options.insert("__panic".into(), "1".into());
+        let err = svc.submit(bad).unwrap_err().to_string();
+        assert!(err.contains("panic"), "{err}");
+        // Regression: metrics() used to .lock().unwrap() a mutex the
+        // panicked job had poisoned, taking the service down with it.
+        let m = svc.metrics();
+        assert_eq!(m.failures, 1);
+        // And the same worker keeps serving.
+        let ok = svc.submit(small_request("wal_598a")).unwrap();
+        assert!(ok.outcome.comm_cost > 0.0);
+        assert_eq!(svc.metrics().completed, 1);
     }
 
     #[test]
@@ -206,6 +487,25 @@ mod tests {
     }
 
     #[test]
+    fn session_graphs_are_shared_across_jobs() {
+        let svc = Service::start("artifacts".into(), 1);
+        let g = Arc::new(crate::graph::gen::grid2d(16, 16, false));
+        let (n, m) = svc.put_graph("sess", g.clone());
+        assert_eq!((n, m), (g.n(), g.m()));
+        assert_eq!(svc.graph_names(), vec!["sess".to_string()]);
+        let mut req = small_request("sess");
+        req.algorithm = Some(Algorithm::SharedMapF);
+        req.hierarchy = "2:2".into();
+        req.distance = "1:10".into();
+        let a = svc.submit(req.clone()).unwrap();
+        let b = svc.submit(req.clone()).unwrap();
+        assert_eq!(a.outcome.n, g.n());
+        assert_eq!(b.outcome.n, g.n());
+        assert!(svc.drop_graph("sess"));
+        assert!(svc.submit(req).is_err(), "dropped session graph must not resolve");
+    }
+
+    #[test]
     fn worker_cache_stays_bounded() {
         let svc = Service::with_config(ServiceConfig {
             threads: 1,
@@ -215,9 +515,7 @@ mod tests {
         for name in ["sten_cop20k", "wal_598a", "sten_cont300"] {
             svc.submit(small_request(name)).unwrap();
         }
-        // No way to observe the worker's cache directly; the bound is
-        // enforced by engine::cache (unit-tested there). This just proves
-        // a cap-1 service keeps serving correctly.
+        assert_eq!(svc.engine().cached_graphs(), 1);
         assert_eq!(svc.metrics().failures, 0);
     }
 }

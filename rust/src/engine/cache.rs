@@ -1,6 +1,10 @@
-//! Bounded LRU cache for resolved graphs, so a long-lived engine (the
-//! `heipa serve` coordinator in particular) cannot grow memory without
-//! limit when clients cycle through many instances.
+//! Graph storage for the engine: a bounded LRU cache for resolved
+//! graphs (so a long-lived engine — the `heipa serve` coordinator in
+//! particular — cannot grow memory without limit when clients cycle
+//! through many instances) plus a **pinned session store** for graphs
+//! uploaded once and mapped many times (`graph put` on the wire). Pinned
+//! entries are exempt from LRU eviction and shared — as one
+//! `Arc<CsrGraph>` — across jobs, workers and connections.
 
 use crate::graph::CsrGraph;
 use std::collections::HashMap;
@@ -56,6 +60,59 @@ impl GraphCache {
     }
 }
 
+/// The engine's shared graph storage: pinned session graphs in front of
+/// the LRU cache. Lookups prefer pinned entries, so an uploaded graph
+/// shadows a registry instance of the same name for as long as it lives.
+#[derive(Debug)]
+pub struct GraphStore {
+    pinned: HashMap<String, Arc<CsrGraph>>,
+    lru: GraphCache,
+}
+
+impl GraphStore {
+    pub fn new(lru_cap: usize) -> GraphStore {
+        GraphStore { pinned: HashMap::new(), lru: GraphCache::new(lru_cap) }
+    }
+
+    /// Resolve `name`: pinned store first, then the LRU cache.
+    pub fn get(&mut self, name: &str) -> Option<Arc<CsrGraph>> {
+        if let Some(g) = self.pinned.get(name) {
+            return Some(g.clone());
+        }
+        self.lru.get(name)
+    }
+
+    /// Cache a resolved (registry/file) graph in the LRU tier.
+    pub fn insert_cached(&mut self, name: String, g: Arc<CsrGraph>) {
+        self.lru.insert(name, g);
+    }
+
+    /// Pin a session graph under `name` (replacing any previous pin).
+    pub fn pin(&mut self, name: String, g: Arc<CsrGraph>) {
+        self.pinned.insert(name, g);
+    }
+
+    /// Drop a pinned graph; false when `name` was not pinned.
+    pub fn unpin(&mut self, name: &str) -> bool {
+        self.pinned.remove(name).is_some()
+    }
+
+    /// Names of the pinned session graphs, sorted.
+    pub fn pinned_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.pinned.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn pinned_len(&self) -> usize {
+        self.pinned.len()
+    }
+
+    pub fn cached_len(&self) -> usize {
+        self.lru.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +161,22 @@ mod tests {
         c.insert("a".into(), g());
         c.insert("b".into(), g());
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn pinned_graphs_survive_lru_churn_and_shadow_cached_names() {
+        let mut s = GraphStore::new(1);
+        let pinned = g();
+        s.pin("session".into(), pinned.clone());
+        s.insert_cached("a".into(), g());
+        s.insert_cached("b".into(), g()); // evicts `a` from the LRU tier
+        assert_eq!(s.cached_len(), 1);
+        assert!(Arc::ptr_eq(&s.get("session").unwrap(), &pinned));
+        // A pinned entry shadows a cached one of the same name.
+        s.insert_cached("session".into(), g());
+        assert!(Arc::ptr_eq(&s.get("session").unwrap(), &pinned));
+        assert_eq!(s.pinned_names(), vec!["session".to_string()]);
+        assert!(s.unpin("session"));
+        assert!(!s.unpin("session"));
     }
 }

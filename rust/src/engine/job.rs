@@ -1,0 +1,406 @@
+//! Job identity, lifecycle and handles for the asynchronous engine.
+//!
+//! [`crate::engine::Engine::submit`] enqueues a [`crate::engine::MapSpec`]
+//! and returns a [`JobHandle`] immediately; the job itself runs on one of
+//! the engine's workers. The handle is the only way to observe or steer a
+//! job: [`JobHandle::status`] polls, [`JobHandle::wait`] blocks,
+//! [`JobHandle::cancel`] trips the job's [`CancelToken`].
+
+pub use crate::cancel::CancelToken;
+
+use super::MapOutcome;
+use anyhow::{anyhow, Result};
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Engine-wide job identity (monotonic, starts at 1). Printed bare on the
+/// wire: `ok job=17`.
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Lifecycle of a job. Terminal states are `Done`, `Failed`, `Cancelled`
+/// and `Expired`; a job reaches exactly one of them, exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for a worker.
+    Queued,
+    /// A worker is solving it.
+    Running,
+    /// Finished; the outcome is available via `result`.
+    Done,
+    /// The solver (or graph/machine resolution) errored or panicked.
+    Failed,
+    /// Explicitly cancelled (before or during the solve).
+    Cancelled,
+    /// The per-job deadline passed (while queued, or mid-solve).
+    Expired,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+            JobState::Expired => "expired",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled | JobState::Expired)
+    }
+}
+
+/// Point-in-time snapshot of a job.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub id: JobId,
+    pub state: JobState,
+    /// Failure / cancellation detail (terminal non-`Done` states only).
+    pub error: Option<String>,
+}
+
+/// Completion hook invoked by the worker *before* the terminal state
+/// becomes observable through the handle, so side effects (metrics) are
+/// ordered before any `wait` returns. Receives the terminal status and,
+/// for `Done`, the outcome.
+pub type CompletionHook = Arc<dyn Fn(&JobStatus, Option<&MapOutcome>) + Send + Sync>;
+
+/// Options for [`crate::engine::Engine::submit_opts`].
+#[derive(Clone, Default)]
+pub struct SubmitOpts {
+    /// Higher runs first; FIFO within a priority class.
+    pub priority: i32,
+    /// Reject (queued) or abort (running) the job once this much time has
+    /// passed since submit.
+    pub deadline: Option<Duration>,
+    /// Block until queue space frees up instead of failing with
+    /// [`SubmitError::Busy`]. In-process callers (CLI, harness) block;
+    /// the wire front-end does not, surfacing `err code=busy`.
+    pub block_when_full: bool,
+    /// Invoked once, on whichever worker retires the job.
+    pub on_complete: Option<CompletionHook>,
+}
+
+/// Why a submit was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded job queue is full.
+    Busy { cap: usize },
+    /// The engine is shutting down.
+    ShutDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Busy { cap } => write!(f, "job queue full (cap {cap})"),
+            SubmitError::ShutDown => write!(f, "engine is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+pub(crate) struct JobCell {
+    pub state: JobState,
+    pub outcome: Option<MapOutcome>,
+    pub error: Option<String>,
+}
+
+pub(crate) struct JobShared {
+    pub cell: Mutex<JobCell>,
+    pub cv: Condvar,
+    pub cancel: CancelToken,
+    /// The completion hook fires exactly once per job, whichever path
+    /// retires it (worker, shutdown drain, or a cancel that already
+    /// transitioned the cell).
+    hook_fired: std::sync::atomic::AtomicBool,
+}
+
+fn lock_cell(shared: &JobShared) -> MutexGuard<'_, JobCell> {
+    // A panicking waiter cannot corrupt a JobCell (it only ever holds the
+    // lock to read); recover instead of propagating the poison.
+    shared.cell.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Handle to a submitted job. Clones observe the same job.
+///
+/// Cancellation contract: [`JobHandle::cancel`] marks a still-queued job
+/// `Cancelled` immediately; a running job observes the token at the next
+/// **coarsening-level or Jet-round boundary** (see
+/// [`CancelToken`]) and returns within one such step — its partial result
+/// is discarded, and [`JobHandle::wait`] yields an error.
+#[derive(Clone)]
+pub struct JobHandle {
+    id: JobId,
+    shared: Arc<JobShared>,
+}
+
+impl fmt::Debug for JobHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.status();
+        f.debug_struct("JobHandle").field("id", &self.id).field("state", &st.state).finish()
+    }
+}
+
+impl JobHandle {
+    pub(crate) fn new_queued(id: JobId, cancel: CancelToken) -> JobHandle {
+        JobHandle {
+            id,
+            shared: Arc::new(JobShared {
+                cell: Mutex::new(JobCell { state: JobState::Queued, outcome: None, error: None }),
+                cv: Condvar::new(),
+                cancel,
+                hook_fired: std::sync::atomic::AtomicBool::new(false),
+            }),
+        }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// The job's cancellation token (for threading into nested work).
+    pub fn token(&self) -> &CancelToken {
+        &self.shared.cancel
+    }
+
+    /// Request cancellation. A job still in the queue transitions to
+    /// `Cancelled` right away; a running job stops at its next poll
+    /// point. Idempotent; has no effect on already-terminal jobs.
+    pub fn cancel(&self) {
+        self.shared.cancel.cancel();
+        let mut cell = lock_cell(&self.shared);
+        if cell.state == JobState::Queued {
+            cell.state = JobState::Cancelled;
+            cell.error = Some("cancelled before start".into());
+            self.shared.cv.notify_all();
+        }
+    }
+
+    /// A queued job whose deadline has passed expires the moment anyone
+    /// observes it — no worker needs to pop it first, so `status` never
+    /// reports a stale `queued` past the deadline and `wait` does not
+    /// outlive it. (A *running* job past its deadline keeps reporting
+    /// `running` until the solver hits its next poll point — that is the
+    /// cooperative-cancellation contract.)
+    fn expire_if_overdue(&self, cell: &mut JobCell) {
+        if cell.state == JobState::Queued && self.shared.cancel.deadline_exceeded() {
+            cell.state = JobState::Expired;
+            cell.error = Some("deadline exceeded while queued".into());
+            self.shared.cv.notify_all();
+        }
+    }
+
+    pub fn status(&self) -> JobStatus {
+        let mut cell = lock_cell(&self.shared);
+        self.expire_if_overdue(&mut cell);
+        JobStatus { id: self.id, state: cell.state, error: cell.error.clone() }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        let mut cell = lock_cell(&self.shared);
+        self.expire_if_overdue(&mut cell);
+        cell.state.is_terminal()
+    }
+
+    /// Read the outcome without cloning it (metrics hooks, renderers).
+    /// `f` sees `Some` only for `Done` jobs.
+    pub fn peek_outcome<R>(&self, f: impl FnOnce(Option<&MapOutcome>) -> R) -> R {
+        let cell = lock_cell(&self.shared);
+        f(cell.outcome.as_ref())
+    }
+
+    fn result_of(id: JobId, cell: &JobCell) -> Result<MapOutcome> {
+        match cell.state {
+            JobState::Done => Ok(cell.outcome.clone().expect("done job has an outcome")),
+            JobState::Failed => {
+                Err(anyhow!("job {id} failed: {}", cell.error.as_deref().unwrap_or("unknown error")))
+            }
+            JobState::Cancelled => Err(anyhow!("job {id} cancelled")),
+            JobState::Expired => Err(anyhow!("job {id} deadline exceeded")),
+            JobState::Queued | JobState::Running => unreachable!("non-terminal result"),
+        }
+    }
+
+    /// The outcome if the job already reached a terminal state.
+    pub fn try_result(&self) -> Option<Result<MapOutcome>> {
+        let mut cell = lock_cell(&self.shared);
+        self.expire_if_overdue(&mut cell);
+        cell.state.is_terminal().then(|| Self::result_of(self.id, &cell))
+    }
+
+    /// Block until the job is terminal; `Ok` only for `Done`. Sleeps are
+    /// bounded by the job's deadline (if any), so a queued job expires on
+    /// time even when every worker is busy elsewhere.
+    pub fn wait(&self) -> Result<MapOutcome> {
+        let mut cell = lock_cell(&self.shared);
+        loop {
+            self.expire_if_overdue(&mut cell);
+            if cell.state.is_terminal() {
+                break;
+            }
+            // Bound the sleep only while the deadline is still ahead (to
+            // wake up and expire a queued job on time). Once it passed,
+            // the loop-top check has done all it can — a running job
+            // simply awaits the worker's notify.
+            let pending = self.shared.cancel.deadline_remaining().filter(|l| *l > Duration::ZERO);
+            cell = match pending {
+                Some(left) => {
+                    let (c, _) = self
+                        .shared
+                        .cv
+                        .wait_timeout(cell, left)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    c
+                }
+                None => self.shared.cv.wait(cell).unwrap_or_else(PoisonError::into_inner),
+            };
+        }
+        Self::result_of(self.id, &cell)
+    }
+
+    /// Block up to `timeout`; `None` when the job is still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<MapOutcome>> {
+        let until = Instant::now() + timeout;
+        let mut cell = lock_cell(&self.shared);
+        loop {
+            self.expire_if_overdue(&mut cell);
+            if cell.state.is_terminal() {
+                return Some(Self::result_of(self.id, &cell));
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let mut sleep = until - now;
+            if let Some(left) =
+                self.shared.cancel.deadline_remaining().filter(|l| *l > Duration::ZERO)
+            {
+                sleep = sleep.min(left);
+            }
+            let (c, _) = self
+                .shared
+                .cv
+                .wait_timeout(cell, sleep)
+                .unwrap_or_else(PoisonError::into_inner);
+            cell = c;
+        }
+    }
+
+    /// Publish the terminal state and fire the completion hook (exactly
+    /// once per job, *before* waiters can observe the state, so metrics
+    /// are consistent by the time `wait` returns). If the cell is already
+    /// terminal (a cancel landed while the job was queued), the existing
+    /// state wins — but the hook still fires with it.
+    pub(crate) fn finish(
+        &self,
+        state: JobState,
+        outcome: Option<MapOutcome>,
+        error: Option<String>,
+        hook: Option<&CompletionHook>,
+    ) {
+        use std::sync::atomic::Ordering;
+        debug_assert!(state.is_terminal());
+        let (pub_state, pub_error) = {
+            let cell = lock_cell(&self.shared);
+            if cell.state.is_terminal() {
+                (cell.state, cell.error.clone())
+            } else {
+                (state, error.clone())
+            }
+        };
+        if let Some(h) = hook {
+            if !self.shared.hook_fired.swap(true, Ordering::SeqCst) {
+                let status = JobStatus { id: self.id, state: pub_state, error: pub_error };
+                let out_ref = if pub_state == JobState::Done { outcome.as_ref() } else { None };
+                h(&status, out_ref);
+            }
+        }
+        let mut cell = lock_cell(&self.shared);
+        if !cell.state.is_terminal() {
+            cell.state = state;
+            cell.outcome = outcome;
+            cell.error = error;
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Mark `Running`; returns false when the job is already terminal
+    /// (cancelled while queued), in which case the worker must skip it.
+    pub(crate) fn start_running(&self) -> bool {
+        let mut cell = lock_cell(&self.shared);
+        if cell.state.is_terminal() {
+            return false;
+        }
+        cell.state = JobState::Running;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queued_job_cancel_is_immediate() {
+        let h = JobHandle::new_queued(JobId(7), CancelToken::new());
+        assert_eq!(h.status().state, JobState::Queued);
+        h.cancel();
+        assert_eq!(h.status().state, JobState::Cancelled);
+        let err = h.wait().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+        assert!(!h.start_running(), "terminal job must not start");
+    }
+
+    #[test]
+    fn queued_job_expires_on_observation_without_a_worker() {
+        // No worker ever pops this handle: the deadline must still be
+        // honored — wait() wakes itself at the deadline and status flips
+        // to Expired instead of reporting a stale `queued` forever.
+        let h =
+            JobHandle::new_queued(JobId(9), CancelToken::with_deadline(Duration::from_millis(20)));
+        assert_eq!(h.status().state, JobState::Queued);
+        let t0 = Instant::now();
+        let err = h.wait().unwrap_err().to_string();
+        assert!(t0.elapsed() < Duration::from_secs(5), "wait outlived the deadline");
+        assert!(err.contains("deadline"), "{err}");
+        assert_eq!(h.status().state, JobState::Expired);
+    }
+
+    #[test]
+    fn wait_timeout_reports_pending() {
+        let h = JobHandle::new_queued(JobId(1), CancelToken::new());
+        assert!(h.wait_timeout(Duration::from_millis(10)).is_none());
+        assert!(!h.is_finished());
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_fires_hook_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let h = JobHandle::new_queued(JobId(3), CancelToken::new());
+        let hits = Arc::new(AtomicU64::new(0));
+        let hits2 = hits.clone();
+        let hook: CompletionHook = Arc::new(move |st, out| {
+            assert_eq!(st.state, JobState::Failed);
+            assert!(out.is_none());
+            hits2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(h.start_running());
+        h.finish(JobState::Failed, None, Some("boom".into()), Some(&hook));
+        h.finish(JobState::Done, None, None, Some(&hook));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert_eq!(h.status().state, JobState::Failed);
+        assert!(h.try_result().unwrap().unwrap_err().to_string().contains("boom"));
+    }
+}

@@ -1,26 +1,43 @@
-//! The crate's single front door: one spec, one solver trait, one context.
+//! The crate's single front door: one spec, one job API, one worker pool.
 //!
 //! Every caller — the `heipa` CLI, the TCP coordinator, the benchmark
 //! harness and library users — builds a [`MapSpec`] and hands it to an
-//! [`Engine`]. The engine resolves the graph (through a bounded LRU
-//! cache), parses the hierarchy, routes to a [`Solver`] from the
-//! name-indexed [`registry`], and optionally runs the QAP polish stage
-//! with the device-offloaded kernel when PJRT artifacts are available.
-//! The result is always a [`MapOutcome`].
+//! [`Engine`]. The engine is **job-oriented**: [`Engine::submit`] places
+//! the spec on a bounded priority queue and returns a [`JobHandle`]
+//! immediately; a pool of N engine workers (each owning its device
+//! [`crate::par::Pool`] and lazily-started PJRT runtime) drains the
+//! queue. The old blocking call survives as [`Engine::map`] =
+//! `submit(..)` + `wait()`. In-flight jobs stop at coarsening-level and
+//! Jet-round boundaries when their [`CancelToken`] trips (explicit
+//! cancel or per-job deadline).
+//!
+//! Graphs resolve through a shared [`cache::GraphStore`]: a bounded LRU
+//! tier for named instances/files plus a pinned session tier
+//! ([`Engine::put_graph`]) for the upload-once/map-many pattern. The
+//! result of every job is a [`MapOutcome`].
 //!
 //! ```no_run
 //! use heipa::engine::{Engine, MapSpec};
 //!
 //! let engine = Engine::with_defaults();
+//! // Blocking:
 //! let outcome = engine.map(&MapSpec::named("rgg15").hierarchy("4:8:2").polish(true))?;
 //! println!("J = {:.0} on {} PEs", outcome.comm_cost, outcome.k);
+//! // Asynchronous:
+//! let job = engine.submit(&MapSpec::named("rgg15").seed(2))?;
+//! println!("submitted job {}", job.id());
+//! let outcome = job.wait()?;
 //! # anyhow::Ok(())
 //! ```
 
 pub mod cache;
+pub mod job;
+pub(crate) mod queue;
 pub mod registry;
 pub mod spec;
 
+pub use crate::cancel::CancelToken;
+pub use job::{JobHandle, JobId, JobState, JobStatus, SubmitError, SubmitOpts};
 pub use registry::{solver, solver_by_name, solver_names, solvers};
 pub use spec::{GraphSource, MapSpec, Refinement};
 
@@ -33,9 +50,11 @@ use crate::runtime::{offload, Runtime};
 use crate::topology::{DistanceOracle, Machine};
 use crate::Block;
 use anyhow::{Context, Result};
-use std::cell::{OnceCell, RefCell};
+use std::cell::OnceCell;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 /// Unified result of one mapping run — replaces the old
 /// `MappingResult`/`MapResponse` split.
@@ -66,7 +85,10 @@ pub struct MapOutcome {
 
 /// One solver in the registry. `solve` runs the algorithm end to end and
 /// measures it; routing, graph resolution and polish belong to the
-/// [`Engine`], not the solver.
+/// [`Engine`], not the solver. Implementations must poll `cancel` at
+/// coarsening-level and Jet-round boundaries and bail out early (with any
+/// structurally valid mapping) once it trips — the engine discards the
+/// result of a cancelled run.
 pub trait Solver: Sync {
     fn algorithm(&self) -> Algorithm;
 
@@ -74,7 +96,14 @@ pub trait Solver: Sync {
         self.algorithm().name()
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome;
+    fn solve(
+        &self,
+        ctx: &EngineCtx,
+        g: &CsrGraph,
+        m: &Machine,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> MapOutcome;
 }
 
 /// Router policy for specs that did not pin an algorithm: small graphs get
@@ -94,41 +123,72 @@ pub fn route(n: usize, pinned: Option<Algorithm>) -> Algorithm {
 /// Engine construction parameters.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
-    /// Device worker threads (0 = auto).
+    /// Device worker threads per engine worker (0 = auto).
     pub threads: usize,
     /// Artifact directory for the PJRT offload kernels. The engine still
     /// maps (host polish only) when the runtime cannot come up.
     pub artifacts_dir: String,
-    /// Graph cache entry cap (LRU).
+    /// Graph cache entry cap (LRU tier; pinned session graphs live
+    /// outside it).
     pub graph_cache_cap: usize,
+    /// Engine workers draining the job queue (0 = 1). Each owns its own
+    /// device pool and PJRT runtime; jobs on different workers overlap.
+    pub workers: usize,
+    /// Bounded job-queue capacity — the backpressure knob. A full queue
+    /// blocks in-process submitters and rejects wire submits with
+    /// `err code=busy`.
+    pub queue_cap: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { threads: 0, artifacts_dir: "artifacts".into(), graph_cache_cap: 64 }
+        EngineConfig {
+            threads: 0,
+            artifacts_dir: "artifacts".into(),
+            graph_cache_cap: 64,
+            workers: 1,
+            queue_cap: 256,
+        }
     }
 }
 
-/// Shared execution state: the worker [`Pool`], the PJRT [`Runtime`] and
-/// the graph cache, owned once per engine. Not `Sync` (the runtime holds a
-/// single PJRT client); long-lived services keep the engine on one worker
-/// thread, matching the paper's one-client-per-device model.
+/// Per-worker execution state: the device [`Pool`] and the PJRT
+/// [`Runtime`]. Not `Sync` (the runtime holds a single PJRT client);
+/// every engine worker owns one, matching the paper's
+/// one-client-per-device model.
 ///
 /// The pool's workers are persistent (spawned once, parked between
-/// kernels), so an engine that serves many requests pays thread spawn cost
-/// exactly once for the process lifetime — every solver run reuses the
-/// same warm workers.
+/// kernels), so an engine worker that serves many jobs pays thread spawn
+/// cost exactly once for the process lifetime.
 pub struct EngineCtx {
     pool: Pool,
     artifacts_dir: String,
     /// Lazily-initialized PJRT client: front-ends that never polish (or
     /// offload) must not pay XLA client startup.
     runtime: OnceCell<Option<Runtime>>,
-    cache: RefCell<cache::GraphCache>,
-    /// Parsed machines keyed by `topology=` spec string (bounded FIFO):
-    /// `file:PATH` models re-read and re-validate an O(k²) table on every
-    /// parse, which a long-lived `serve` worker must not pay per request.
-    machines: RefCell<Vec<(String, Machine)>>,
+}
+
+impl EngineCtx {
+    /// Context without a device runtime — for shims and tests that drive
+    /// a solver directly.
+    pub fn host_only(pool: Pool) -> Self {
+        EngineCtx { pool, artifacts_dir: String::new(), runtime: OnceCell::from(None) }
+    }
+
+    /// Context with a lazily-started runtime rooted at `artifacts_dir`.
+    pub fn with_runtime(pool: Pool, artifacts_dir: String) -> Self {
+        EngineCtx { pool, artifacts_dir, runtime: OnceCell::new() }
+    }
+
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The PJRT runtime, brought up on first use; `None` when the client
+    /// cannot start (the engine still maps, host polish only).
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.runtime.get_or_init(|| Runtime::new(&self.artifacts_dir).ok()).as_ref()
+    }
 }
 
 /// Entry cap of the per-engine machine cache.
@@ -152,92 +212,56 @@ fn machine_cache_key(topology: &str) -> String {
     topology.to_string()
 }
 
-impl EngineCtx {
-    /// Context without a device runtime or meaningful cache — for shims and
-    /// tests that drive a solver directly.
-    pub fn host_only(pool: Pool) -> Self {
-        EngineCtx {
-            pool,
-            artifacts_dir: String::new(),
-            runtime: OnceCell::from(None),
-            cache: RefCell::new(cache::GraphCache::new(1)),
-            machines: RefCell::new(Vec::new()),
-        }
-    }
-
-    pub fn pool(&self) -> &Pool {
-        &self.pool
-    }
-
-    /// The PJRT runtime, brought up on first use; `None` when the client
-    /// cannot start (the engine still maps, host polish only).
-    pub fn runtime(&self) -> Option<&Runtime> {
-        self.runtime.get_or_init(|| Runtime::new(&self.artifacts_dir).ok()).as_ref()
-    }
-
-    /// Number of graphs currently cached.
-    pub fn cached_graphs(&self) -> usize {
-        self.cache.borrow().len()
-    }
+/// State shared by the engine handle and its workers.
+struct EngineShared {
+    cfg: EngineConfig,
+    queue: Mutex<queue::JobQueue>,
+    /// Workers park here waiting for jobs.
+    work_cv: Condvar,
+    /// Blocking submitters park here waiting for queue space.
+    space_cv: Condvar,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    next_seq: AtomicU64,
+    in_flight: AtomicUsize,
+    graphs: Mutex<cache::GraphStore>,
+    /// Parsed machines keyed by `topology=` spec string (bounded FIFO):
+    /// `file:PATH` models re-read and re-validate an O(k²) table on every
+    /// parse, which a long-lived `serve` worker must not pay per job.
+    machines: Mutex<Vec<(String, Machine)>>,
 }
 
-/// The mapping engine. See the module docs for the one-spec/one-context
-/// contract.
-pub struct Engine {
-    ctx: EngineCtx,
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panicked job must not poison the whole engine: the shared state is
+    // only ever left consistent under these locks.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-impl Engine {
-    pub fn new(cfg: EngineConfig) -> Engine {
-        let pool = if cfg.threads == 0 { Pool::default() } else { Pool::new(cfg.threads) };
-        Engine {
-            ctx: EngineCtx {
-                pool,
-                artifacts_dir: cfg.artifacts_dir,
-                runtime: OnceCell::new(),
-                cache: RefCell::new(cache::GraphCache::new(cfg.graph_cache_cap)),
-                machines: RefCell::new(Vec::new()),
-            },
-        }
-    }
-
-    pub fn with_defaults() -> Engine {
-        Engine::new(EngineConfig::default())
-    }
-
-    pub fn ctx(&self) -> &EngineCtx {
-        &self.ctx
-    }
-
-    /// Resolve a [`GraphSource`]: in-memory graphs pass through; named ones
-    /// hit the LRU cache, then the instance registry, then METIS I/O.
-    pub fn resolve_graph(&self, src: &GraphSource) -> Result<Arc<CsrGraph>> {
+impl EngineShared {
+    fn resolve_graph(&self, src: &GraphSource) -> Result<Arc<CsrGraph>> {
         match src {
             GraphSource::InMemory(g) => Ok(g.clone()),
             GraphSource::Named(name) => {
-                if let Some(g) = self.ctx.cache.borrow_mut().get(name) {
+                if let Some(g) = lock(&self.graphs).get(name) {
                     return Ok(g);
                 }
+                // Generate/parse outside the lock: resolving a big
+                // instance must not stall every other worker's lookups.
                 let g = if gen::instance_by_name(name).is_some() {
                     gen::generate_by_name(name)
                 } else {
                     io::read_metis(Path::new(name)).with_context(|| {
-                        format!("instance `{name}` is neither a registry name nor a readable METIS file")
+                        format!("instance `{name}` is neither a pinned graph, a registry name nor a readable METIS file")
                     })?
                 };
                 let g = Arc::new(g);
-                self.ctx.cache.borrow_mut().insert(name.clone(), g.clone());
+                lock(&self.graphs).insert_cached(name.clone(), g.clone());
                 Ok(g)
             }
         }
     }
 
-    /// Resolve the spec's machine: the machine carried by the spec when
-    /// present, otherwise parse — through the bounded per-engine cache
-    /// for `topology=` strings (so `file:PATH` tables are read once, not
-    /// per request). `file:` entries key on the file's length + mtime, so
-    /// a regenerated table is picked up instead of served stale.
-    pub fn resolve_machine(&self, spec: &MapSpec) -> Result<Machine> {
+    fn resolve_machine(&self, spec: &MapSpec) -> Result<Machine> {
         if let Some(m) = spec.cached_machine() {
             return Ok(m.clone());
         }
@@ -245,11 +269,11 @@ impl Engine {
             return spec.machine(); // plain hierarchy strings parse in O(ℓ)
         };
         let key = machine_cache_key(topology);
-        if let Some((_, m)) = self.ctx.machines.borrow().iter().find(|(k, _)| *k == key) {
+        if let Some((_, m)) = lock(&self.machines).iter().find(|(k, _)| *k == key) {
             return Ok(m.clone());
         }
         let m = spec.machine()?;
-        let mut cache = self.ctx.machines.borrow_mut();
+        let mut cache = lock(&self.machines);
         cache.push((key, m.clone()));
         if cache.len() > MACHINE_CACHE_CAP {
             cache.remove(0);
@@ -257,25 +281,340 @@ impl Engine {
         Ok(m)
     }
 
-    /// Map with the spec's primary seed.
-    pub fn map(&self, spec: &MapSpec) -> Result<MapOutcome> {
+    /// Solve one spec on this worker's ctx. `Ok(None)` means the token
+    /// tripped before a result was produced (the job is not `Done`).
+    fn execute(
+        &self,
+        ctx: &EngineCtx,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> Result<Option<MapOutcome>> {
+        // Test hooks (used by the cancellation/overlap/panic-recovery
+        // suites; never set by real solvers): `__sleep_ms` busy-waits in
+        // small cancellable slices, `__panic` panics.
+        if let Some(ms) = spec.options.get("__sleep_ms").and_then(|v| v.parse::<u64>().ok()) {
+            let end = Instant::now() + Duration::from_millis(ms);
+            while Instant::now() < end && !cancel.is_cancelled() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        if spec.opt_bool("__panic") == Some(true) {
+            panic!("synthetic solver panic (__panic test hook)");
+        }
+        if cancel.is_cancelled() {
+            return Ok(None);
+        }
         let g = self.resolve_graph(&spec.graph)?;
         let m = self.resolve_machine(spec)?;
         let algo = spec.resolve_algorithm(g.n());
-        let mut out = registry::solver(algo).solve(&self.ctx, &g, &m, spec);
+        let mut out = registry::solver(algo).solve(ctx, &g, &m, spec, cancel);
+        if cancel.is_cancelled() {
+            return Ok(None);
+        }
         if spec.polish {
-            out.polish_improvement = polish_mapping(&self.ctx, &g, &m, &mut out.mapping)?;
+            out.polish_improvement = polish_mapping(ctx, &g, &m, &mut out.mapping)?;
             out.comm_cost -= out.polish_improvement;
         }
         if !spec.return_mapping {
             out.mapping = Vec::new();
         }
-        Ok(out)
+        Ok(Some(out))
+    }
+}
+
+/// Retire one popped job: state checks, the (panic-fenced) solve, and the
+/// terminal transition.
+fn run_job(shared: &EngineShared, ctx: &EngineCtx, job: queue::QueuedJob) {
+    let handle = job.handle;
+    let hook = job.hook;
+    let token = handle.token().clone();
+    if token.deadline_exceeded() {
+        handle.finish(
+            JobState::Expired,
+            None,
+            Some("deadline exceeded while queued".into()),
+            hook.as_ref(),
+        );
+        return;
+    }
+    if token.cancel_requested() || !handle.start_running() {
+        handle.finish(JobState::Cancelled, None, Some("cancelled before start".into()), hook.as_ref());
+        return;
+    }
+    shared.in_flight.fetch_add(1, Ordering::SeqCst);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        shared.execute(ctx, &job.spec, &token)
+    }));
+    shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+    let (state, outcome, error) = match result {
+        Ok(Ok(Some(out))) => {
+            if token.cancel_requested() {
+                (JobState::Cancelled, None, Some("cancelled during solve".into()))
+            } else if token.deadline_exceeded() {
+                (JobState::Expired, None, Some("deadline exceeded during solve".into()))
+            } else {
+                (JobState::Done, Some(out), None)
+            }
+        }
+        Ok(Ok(None)) => {
+            if token.cancel_requested() {
+                (JobState::Cancelled, None, Some("cancelled during solve".into()))
+            } else {
+                (JobState::Expired, None, Some("deadline exceeded during solve".into()))
+            }
+        }
+        Ok(Err(e)) => (JobState::Failed, None, Some(format!("{e:#}"))),
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "solver panicked".into());
+            (JobState::Failed, None, Some(format!("solver panicked: {msg}")))
+        }
+    };
+    handle.finish(state, outcome, error, hook.as_ref());
+}
+
+fn worker_loop(shared: Arc<EngineShared>) {
+    let pool =
+        if shared.cfg.threads == 0 { Pool::default() } else { Pool::new(shared.cfg.threads) };
+    let ctx = EngineCtx::with_runtime(pool, shared.cfg.artifacts_dir.clone());
+    loop {
+        let job = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if let Some(j) = q.pop() {
+                    shared.space_cv.notify_one();
+                    break j;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Draining on shutdown: retire without running.
+            job.handle.finish(
+                JobState::Cancelled,
+                None,
+                Some("engine shut down".into()),
+                job.hook.as_ref(),
+            );
+            continue;
+        }
+        run_job(&shared, &ctx, job);
+    }
+}
+
+/// The mapping engine. See the module docs for the job-API contract.
+///
+/// `Engine` is `Send + Sync`: clones of its handles may submit from many
+/// threads. Dropping the engine stops the workers after their current
+/// job; still-queued jobs retire as `Cancelled`.
+pub struct Engine {
+    shared: Arc<EngineShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        let worker_count = cfg.workers.max(1);
+        let shared = Arc::new(EngineShared {
+            queue: Mutex::new(queue::JobQueue::new(cfg.queue_cap)),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            next_seq: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
+            graphs: Mutex::new(cache::GraphStore::new(cfg.graph_cache_cap)),
+            machines: Mutex::new(Vec::new()),
+            cfg,
+        });
+        let workers = (0..worker_count)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("heipa-engine-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Engine { shared, workers }
     }
 
-    /// Map once per seed in the spec, in order.
+    pub fn with_defaults() -> Engine {
+        Engine::new(EngineConfig::default())
+    }
+
+    /// Enqueue a job with default options (priority 0, no deadline,
+    /// non-blocking). Returns immediately; `Err(Busy)` when the bounded
+    /// queue is full.
+    pub fn submit(&self, spec: &MapSpec) -> std::result::Result<JobHandle, SubmitError> {
+        self.submit_opts(spec, SubmitOpts::default())
+    }
+
+    /// Enqueue a job with explicit [`SubmitOpts`].
+    pub fn submit_opts(
+        &self,
+        spec: &MapSpec,
+        opts: SubmitOpts,
+    ) -> std::result::Result<JobHandle, SubmitError> {
+        let shared = &self.shared;
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShutDown);
+        }
+        let id = JobId(shared.next_id.fetch_add(1, Ordering::Relaxed));
+        let token = match opts.deadline {
+            Some(d) => CancelToken::with_deadline(d),
+            None => CancelToken::new(),
+        };
+        let handle = JobHandle::new_queued(id, token);
+        let mut job = queue::QueuedJob {
+            priority: opts.priority,
+            seq: shared.next_seq.fetch_add(1, Ordering::Relaxed),
+            spec: spec.clone(),
+            handle: handle.clone(),
+            hook: opts.on_complete,
+        };
+        let mut q = lock(&shared.queue);
+        loop {
+            match q.push(job) {
+                Ok(()) => break,
+                Err(back) => {
+                    // Cancelled/expired-while-queued jobs must not hold
+                    // capacity against live work: evict them (and retire
+                    // them — their hooks still owe a firing) before
+                    // deciding the queue is actually full.
+                    let purged = q.purge_terminal();
+                    if !purged.is_empty() {
+                        for dead in purged {
+                            dead.handle.finish(
+                                JobState::Cancelled,
+                                None,
+                                Some("cancelled before start".into()),
+                                dead.hook.as_ref(),
+                            );
+                        }
+                        job = back;
+                        continue;
+                    }
+                    if !opts.block_when_full {
+                        return Err(SubmitError::Busy { cap: q.cap() });
+                    }
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return Err(SubmitError::ShutDown);
+                    }
+                    job = back;
+                    q = shared.space_cv.wait(q).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+        drop(q);
+        shared.work_cv.notify_one();
+        Ok(handle)
+    }
+
+    /// Map with the spec's primary seed: `submit` (blocking on queue
+    /// space) + `wait`. Identical results to the pre-job API.
+    pub fn map(&self, spec: &MapSpec) -> Result<MapOutcome> {
+        self.submit_opts(spec, SubmitOpts { block_when_full: true, ..SubmitOpts::default() })
+            .map_err(anyhow::Error::from)?
+            .wait()
+    }
+
+    /// Map once per seed in the spec. All seeds are submitted up front,
+    /// so with `workers > 1` they solve concurrently; results come back
+    /// in seed order.
     pub fn map_all_seeds(&self, spec: &MapSpec) -> Result<Vec<MapOutcome>> {
-        spec.seeds.iter().map(|&s| self.map(&spec.with_seed(s))).collect()
+        let handles: Vec<JobHandle> = spec
+            .seeds
+            .iter()
+            .map(|&s| {
+                self.submit_opts(
+                    &spec.with_seed(s),
+                    SubmitOpts { block_when_full: true, ..SubmitOpts::default() },
+                )
+                .map_err(anyhow::Error::from)
+            })
+            .collect::<Result<_>>()?;
+        handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    /// Resolve a [`GraphSource`] through the shared store: in-memory
+    /// graphs pass through; named ones hit the pinned tier, the LRU
+    /// cache, the instance registry, then METIS I/O.
+    pub fn resolve_graph(&self, src: &GraphSource) -> Result<Arc<CsrGraph>> {
+        self.shared.resolve_graph(src)
+    }
+
+    /// Resolve the spec's machine (through the bounded machine cache).
+    pub fn resolve_machine(&self, spec: &MapSpec) -> Result<Machine> {
+        self.shared.resolve_machine(spec)
+    }
+
+    /// Pin a session graph: later specs naming `name` reuse this exact
+    /// `Arc<CsrGraph>` across jobs, workers and connections, exempt from
+    /// LRU eviction, until [`Engine::drop_graph`].
+    pub fn put_graph(&self, name: impl Into<String>, g: Arc<CsrGraph>) {
+        lock(&self.shared.graphs).pin(name.into(), g);
+    }
+
+    /// Unpin a session graph; false when `name` was not pinned.
+    pub fn drop_graph(&self, name: &str) -> bool {
+        lock(&self.shared.graphs).unpin(name)
+    }
+
+    /// Names of the pinned session graphs, sorted.
+    pub fn graph_names(&self) -> Vec<String> {
+        lock(&self.shared.graphs).pinned_names()
+    }
+
+    /// Number of graphs in the LRU cache tier (pinned graphs excluded).
+    pub fn cached_graphs(&self) -> usize {
+        lock(&self.shared.graphs).cached_len()
+    }
+
+    /// Jobs waiting in the queue.
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.shared.queue).len()
+    }
+
+    /// Jobs currently being solved.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Capacity of the bounded job queue.
+    pub fn queue_cap(&self) -> usize {
+        self.shared.cfg.queue_cap.max(1)
+    }
+
+    /// Number of engine workers.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Belt and braces: retire anything the workers did not drain.
+        for job in lock(&self.shared.queue).drain() {
+            job.handle.finish(
+                JobState::Cancelled,
+                None,
+                Some("engine shut down".into()),
+                job.hook.as_ref(),
+            );
+        }
     }
 }
 
@@ -341,7 +680,7 @@ mod tests {
         assert_eq!(out.k, 8);
         assert!(out.comm_cost > 0.0);
         validate_mapping(&out.mapping, out.n, out.k).unwrap();
-        assert_eq!(e.ctx().cached_graphs(), 1);
+        assert_eq!(e.cached_graphs(), 1);
     }
 
     #[test]
@@ -353,7 +692,7 @@ mod tests {
             .unwrap();
         assert_eq!(out.n, g.n());
         assert_eq!(out.algorithm, Algorithm::GpuIm);
-        assert_eq!(e.ctx().cached_graphs(), 0);
+        assert_eq!(e.cached_graphs(), 0);
     }
 
     #[test]
@@ -362,7 +701,22 @@ mod tests {
         for name in ["sten_cop20k", "wal_598a", "sten_cont300"] {
             e.map(&MapSpec::named(name).hierarchy("2:2").distance("1:10")).unwrap();
         }
-        assert_eq!(e.ctx().cached_graphs(), 2);
+        assert_eq!(e.cached_graphs(), 2);
+    }
+
+    #[test]
+    fn pinned_session_graphs_resolve_by_name() {
+        let e = engine();
+        let g = Arc::new(gen::grid2d(16, 16, false));
+        e.put_graph("session_grid", g.clone());
+        let out = e
+            .map(&MapSpec::named("session_grid").hierarchy("2:2").distance("1:10").algo(Some(Algorithm::GpuIm)))
+            .unwrap();
+        assert_eq!(out.n, g.n());
+        assert_eq!(e.graph_names(), vec!["session_grid".to_string()]);
+        assert_eq!(e.cached_graphs(), 0, "pinned graphs bypass the LRU tier");
+        assert!(e.drop_graph("session_grid"));
+        assert!(e.map(&MapSpec::named("session_grid")).is_err(), "dropped graph no longer resolves");
     }
 
     #[test]
@@ -432,5 +786,164 @@ mod tests {
         std::fs::write(&path, "2\n0 1\n1 0\n").unwrap();
         assert_eq!(e.map(&spec).unwrap().k, 2, "stale machine served from cache");
         std::fs::remove_file(&path).ok();
+    }
+
+    // ---- job API ---------------------------------------------------
+
+    /// A fast in-memory spec with the cancellable sleep test hook.
+    fn sleepy_spec(ms: u64) -> MapSpec {
+        MapSpec::in_memory(Arc::new(gen::grid2d(8, 8, false)))
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(Algorithm::SharedMapF))
+            .option("__sleep_ms", ms.to_string())
+    }
+
+    #[test]
+    fn submit_returns_before_the_job_finishes() {
+        let e = engine();
+        let job = e.submit(&sleepy_spec(400)).unwrap();
+        assert!(!job.is_finished(), "submit must not block on the solve");
+        assert!(matches!(job.status().state, JobState::Queued | JobState::Running));
+        let out = job.wait().unwrap();
+        assert!(out.comm_cost > 0.0);
+        assert_eq!(job.status().state, JobState::Done);
+    }
+
+    #[test]
+    fn queue_rejects_when_full_and_busy_error_is_typed() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, queue_cap: 1, ..Default::default() });
+        // Worker busy with the first job, queue holds the second.
+        let a = e.submit(&sleepy_spec(500)).unwrap();
+        // Give the worker a moment to pick up `a` so `b` occupies the queue.
+        while e.queue_depth() > 0 && !a.is_finished() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let b = e.submit(&sleepy_spec(500)).unwrap();
+        let c = e.submit(&sleepy_spec(0));
+        assert_eq!(c.unwrap_err(), SubmitError::Busy { cap: 1 });
+        a.cancel();
+        b.cancel();
+        let _ = a.wait_timeout(Duration::from_secs(10));
+        let _ = b.wait_timeout(Duration::from_secs(10));
+    }
+
+    #[test]
+    fn two_workers_overlap_jobs() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 2, ..Default::default() });
+        let t0 = Instant::now();
+        let a = e.submit(&sleepy_spec(500)).unwrap();
+        let b = e.submit(&sleepy_spec(500)).unwrap();
+        a.wait().unwrap();
+        b.wait().unwrap();
+        let elapsed = t0.elapsed();
+        // Serial execution would need ≥ 1000ms of sleep alone.
+        assert!(
+            elapsed < Duration::from_millis(900),
+            "two 500ms jobs took {elapsed:?} on two workers — no overlap"
+        );
+    }
+
+    #[test]
+    fn cancel_stops_an_in_flight_job_quickly() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let job = e.submit(&sleepy_spec(60_000)).unwrap();
+        // Let it start.
+        while job.status().state == JobState::Queued {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let t0 = Instant::now();
+        job.cancel();
+        let err = job.wait().unwrap_err().to_string();
+        assert!(t0.elapsed() < Duration::from_secs(5), "cancel took {:?}", t0.elapsed());
+        assert!(err.contains("cancelled"), "{err}");
+        assert_eq!(job.status().state, JobState::Cancelled);
+        // The worker survives and serves the next job.
+        assert!(e.map(&sleepy_spec(0)).is_ok());
+    }
+
+    #[test]
+    fn deadline_expires_queued_and_running_work() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        // Occupy the single worker…
+        let blocker = e.submit(&sleepy_spec(400)).unwrap();
+        // …so this one's 50ms deadline passes while it waits in the queue.
+        let late = e
+            .submit_opts(
+                &sleepy_spec(0),
+                SubmitOpts { deadline: Some(Duration::from_millis(50)), ..Default::default() },
+            )
+            .unwrap();
+        let err = late.wait().unwrap_err().to_string();
+        assert!(err.contains("deadline"), "{err}");
+        assert_eq!(late.status().state, JobState::Expired);
+        blocker.wait().unwrap();
+        // A running job also aborts once its deadline trips mid-solve.
+        let slow = e
+            .submit_opts(
+                &sleepy_spec(60_000),
+                SubmitOpts { deadline: Some(Duration::from_millis(80)), ..Default::default() },
+            )
+            .unwrap();
+        let t0 = Instant::now();
+        let err = slow.wait().unwrap_err().to_string();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(err.contains("deadline"), "{err}");
+        assert_eq!(slow.status().state, JobState::Expired);
+    }
+
+    #[test]
+    fn priorities_run_before_fifo_backlog() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        // Worker busy; then a low- and a high-priority job queue up, in
+        // that (FIFO-losing) order. The single worker must pick the
+        // high-priority job first — observable because the low one
+        // sleeps 500ms: when `high` completes, `low` cannot be done yet.
+        let blocker = e.submit(&sleepy_spec(300)).unwrap();
+        while e.queue_depth() > 0 && !blocker.is_finished() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let low = e.submit(&sleepy_spec(500)).unwrap();
+        let high = e
+            .submit_opts(&sleepy_spec(0), SubmitOpts { priority: 10, ..Default::default() })
+            .unwrap();
+        let high_out = high.wait().unwrap();
+        assert!(high_out.comm_cost > 0.0);
+        assert!(
+            !low.is_finished(),
+            "low-priority job finished before the high-priority one — priority inverted"
+        );
+        assert!(low.wait().unwrap().comm_cost > 0.0);
+        blocker.wait().unwrap();
+    }
+
+    #[test]
+    fn cancelled_queued_jobs_free_their_queue_slots() {
+        // A cancelled (or deadline-expired) job sitting in the queue must
+        // not hold capacity against live submits while the worker is busy.
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, queue_cap: 1, ..Default::default() });
+        let blocker = e.submit(&sleepy_spec(2_000)).unwrap();
+        while e.queue_depth() > 0 && !blocker.is_finished() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let zombie = e.submit(&sleepy_spec(0)).unwrap();
+        // Queue is now full: a live submit is rejected…
+        assert!(matches!(e.submit(&sleepy_spec(0)), Err(SubmitError::Busy { .. })));
+        // …but cancelling the queued job frees its slot immediately.
+        zombie.cancel();
+        let fresh = e.submit(&sleepy_spec(0)).expect("cancelled zombie must free its slot");
+        assert!(zombie.wait().is_err());
+        assert!(fresh.wait().is_ok());
+        blocker.wait().unwrap();
+    }
+
+    #[test]
+    fn panicking_job_fails_cleanly_and_worker_survives() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let bad = sleepy_spec(0).option("__panic", "1");
+        let err = e.map(&bad).unwrap_err().to_string();
+        assert!(err.contains("panic"), "{err}");
+        // Same worker keeps serving.
+        assert!(e.map(&sleepy_spec(0)).is_ok());
     }
 }

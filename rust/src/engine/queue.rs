@@ -1,0 +1,159 @@
+//! Bounded priority queue feeding the engine's worker pool.
+//!
+//! Ordering: highest [`priority`](QueuedJob::priority) first, FIFO
+//! (submit sequence) within a priority class. The capacity bound is the
+//! engine's backpressure signal — a full queue either blocks the
+//! submitter or surfaces [`super::SubmitError::Busy`].
+
+use super::job::{CompletionHook, JobHandle};
+use super::MapSpec;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+pub(crate) struct QueuedJob {
+    pub priority: i32,
+    /// Monotonic submit sequence; lower = earlier.
+    pub seq: u64,
+    pub spec: MapSpec,
+    pub handle: JobHandle,
+    pub hook: Option<CompletionHook>,
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedJob {}
+
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedJob {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: larger compares first. Higher priority wins; within a
+        // class the *smaller* sequence number must pop first.
+        self.priority.cmp(&other.priority).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+pub(crate) struct JobQueue {
+    cap: usize,
+    heap: BinaryHeap<QueuedJob>,
+}
+
+impl JobQueue {
+    pub fn new(cap: usize) -> JobQueue {
+        JobQueue { cap: cap.max(1), heap: BinaryHeap::new() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Enqueue, or hand the job back when full.
+    pub fn push(&mut self, job: QueuedJob) -> Result<(), QueuedJob> {
+        if self.heap.len() >= self.cap {
+            return Err(job);
+        }
+        self.heap.push(job);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<QueuedJob> {
+        self.heap.pop()
+    }
+
+    /// Remove jobs that already reached a terminal state (cancelled or
+    /// deadline-expired while queued) so they stop occupying capacity.
+    /// Returns the removed jobs — the caller must still retire them
+    /// (fire their completion hooks).
+    pub fn purge_terminal(&mut self) -> Vec<QueuedJob> {
+        if self.heap.iter().all(|j| !j.handle.is_finished()) {
+            return Vec::new();
+        }
+        let mut purged = Vec::new();
+        let mut keep = BinaryHeap::with_capacity(self.heap.len());
+        for j in self.heap.drain() {
+            if j.handle.is_finished() {
+                purged.push(j);
+            } else {
+                keep.push(j);
+            }
+        }
+        self.heap = keep;
+        purged
+    }
+
+    pub fn drain(&mut self) -> Vec<QueuedJob> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(j) = self.heap.pop() {
+            out.push(j);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cancel::CancelToken;
+    use crate::engine::job::JobId;
+
+    fn job(priority: i32, seq: u64) -> QueuedJob {
+        QueuedJob {
+            priority,
+            seq,
+            spec: MapSpec::named("x"),
+            handle: JobHandle::new_queued(JobId(seq), CancelToken::new()),
+            hook: None,
+        }
+    }
+
+    #[test]
+    fn fifo_within_priority_and_priority_wins() {
+        let mut q = JobQueue::new(8);
+        for (p, s) in [(0, 1), (0, 2), (5, 3), (0, 4), (5, 5)] {
+            q.push(job(p, s)).map_err(|_| ()).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|j| j.seq)).collect();
+        assert_eq!(order, vec![3, 5, 1, 2, 4]);
+    }
+
+    #[test]
+    fn purge_removes_only_terminal_jobs() {
+        let mut q = JobQueue::new(4);
+        let a = job(0, 1);
+        let cancelled_handle = a.handle.clone();
+        q.push(a).map_err(|_| ()).unwrap();
+        q.push(job(0, 2)).map_err(|_| ()).unwrap();
+        assert!(q.purge_terminal().is_empty(), "live jobs must not be purged");
+        cancelled_handle.cancel();
+        let purged = q.purge_terminal();
+        assert_eq!(purged.len(), 1);
+        assert_eq!(purged[0].seq, 1);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().seq, 2);
+    }
+
+    #[test]
+    fn capacity_is_enforced() {
+        let mut q = JobQueue::new(2);
+        assert!(q.push(job(0, 1)).is_ok());
+        assert!(q.push(job(0, 2)).is_ok());
+        let rejected = q.push(job(9, 3));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().seq, 3);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert!(q.push(job(9, 3)).is_ok());
+    }
+}

@@ -2,7 +2,7 @@
 //! evaluation behind the one [`Solver`] trait — no dispatch `match`
 //! anywhere else in the crate.
 
-use super::{EngineCtx, MapOutcome, MapSpec, Solver};
+use super::{CancelToken, EngineCtx, MapOutcome, MapSpec, Solver};
 use crate::algo::{gpu_hm, gpu_im, intmap, jet, sharedmap, Algorithm};
 use crate::graph::CsrGraph;
 use crate::metrics::PhaseBreakdown;
@@ -57,11 +57,20 @@ impl Solver for GpuHmSolver {
         }
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
+    fn solve(
+        &self,
+        ctx: &EngineCtx,
+        g: &CsrGraph,
+        m: &Machine,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> MapOutcome {
         let mut cfg = if self.ultra { gpu_hm::GpuHmConfig::ultra() } else { gpu_hm::GpuHmConfig::default_flavor() };
         if let Some(adaptive) = spec.opt_bool("adaptive") {
             cfg.adaptive = adaptive;
         }
+        cfg.cancel = cancel.clone();
+        cfg.jet.cancel = cancel.clone();
         let seed = spec.primary_seed();
         measured(self.algorithm(), g, m, seed, |ph| {
             gpu_hm::gpu_hm(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph))
@@ -79,11 +88,20 @@ impl Solver for GpuImSolver {
         Algorithm::GpuIm
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
+    fn solve(
+        &self,
+        ctx: &EngineCtx,
+        g: &CsrGraph,
+        m: &Machine,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> MapOutcome {
         let mut cfg = gpu_im::GpuImConfig::default();
         if let Some(v) = spec.opt_bool("rebalance_comm_obj") {
             cfg.rebalance_with_comm_obj = v;
         }
+        cfg.cancel = cancel.clone();
+        cfg.init.cancel = cancel.clone();
         let seed = spec.primary_seed();
         measured(self.algorithm(), g, m, seed, |ph| {
             gpu_im::gpu_im(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph))
@@ -105,8 +123,16 @@ impl Solver for SharedMapSolver {
         }
     }
 
-    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
-        let cfg = if self.strong { sharedmap::SharedMapConfig::strong() } else { sharedmap::SharedMapConfig::fast() };
+    fn solve(
+        &self,
+        _ctx: &EngineCtx,
+        g: &CsrGraph,
+        m: &Machine,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> MapOutcome {
+        let mut cfg = if self.strong { sharedmap::SharedMapConfig::strong() } else { sharedmap::SharedMapConfig::fast() };
+        cfg.cancel = cancel.clone();
         let seed = spec.primary_seed();
         measured(self.algorithm(), g, m, seed, |_ph| sharedmap::sharedmap(g, m, spec.eps, seed, &cfg))
     }
@@ -126,8 +152,17 @@ impl Solver for IntMapSolver {
         }
     }
 
-    fn solve(&self, _ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
-        let cfg = if self.strong { intmap::IntMapConfig::strong() } else { intmap::IntMapConfig::fast() };
+    fn solve(
+        &self,
+        _ctx: &EngineCtx,
+        g: &CsrGraph,
+        m: &Machine,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> MapOutcome {
+        let mut cfg = if self.strong { intmap::IntMapConfig::strong() } else { intmap::IntMapConfig::fast() };
+        cfg.cancel = cancel.clone();
+        cfg.init.cancel = cancel.clone();
         let seed = spec.primary_seed();
         measured(self.algorithm(), g, m, seed, |_ph| intmap::intmap(g, m, spec.eps, seed, &cfg))
     }
@@ -148,8 +183,16 @@ impl Solver for JetSolver {
         }
     }
 
-    fn solve(&self, ctx: &EngineCtx, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> MapOutcome {
-        let cfg = if self.ultra { jet::JetPartConfig::ultra() } else { jet::JetPartConfig::default() };
+    fn solve(
+        &self,
+        ctx: &EngineCtx,
+        g: &CsrGraph,
+        m: &Machine,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+    ) -> MapOutcome {
+        let mut cfg = if self.ultra { jet::JetPartConfig::ultra() } else { jet::JetPartConfig::default() };
+        cfg.cancel = cancel.clone();
         let seed = spec.primary_seed();
         measured(self.algorithm(), g, m, seed, |ph| {
             jet::jet_partition(ctx.pool(), g, m.k(), spec.eps, seed, &cfg, Some(ph))
@@ -225,12 +268,34 @@ mod tests {
         let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
         let spec = MapSpec::named("unused");
         for s in solvers() {
-            let out = s.solve(&ctx, &g, &h, &spec);
+            let out = s.solve(&ctx, &g, &h, &spec, &CancelToken::new());
             crate::partition::validate_mapping(&out.mapping, g.n(), h.k())
                 .unwrap_or_else(|e| panic!("{}: {e}", s.name()));
             assert!(out.comm_cost > 0.0, "{}", s.name());
             assert!(out.host_ms > 0.0, "{}", s.name());
             assert_eq!(out.phases.is_some(), out.algorithm.is_device(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn every_solver_bails_fast_on_a_cancelled_token() {
+        // A pre-cancelled token must still yield a structurally valid
+        // mapping (the engine discards it) — and must not loop to
+        // completion on a graph large enough to coarsen.
+        let g = crate::graph::gen::grid2d(40, 40, false);
+        let h = Machine::hier("2:2:2", "1:10:100").unwrap();
+        let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
+        let spec = MapSpec::named("unused");
+        let cancelled = CancelToken::new();
+        cancelled.cancel();
+        for s in solvers() {
+            let out = s.solve(&ctx, &g, &h, &spec, &cancelled);
+            assert_eq!(out.mapping.len(), g.n(), "{}", s.name());
+            assert!(
+                out.mapping.iter().all(|&b| (b as usize) < h.k()),
+                "{}: out-of-range block in cancelled result",
+                s.name()
+            );
         }
     }
 
@@ -242,7 +307,7 @@ mod tests {
         let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
         for v in ["1", "0"] {
             let spec = MapSpec::named("unused").option("adaptive", v);
-            let out = solver(Algorithm::GpuHm).solve(&ctx, &g, &h, &spec);
+            let out = solver(Algorithm::GpuHm).solve(&ctx, &g, &h, &spec, &CancelToken::new());
             crate::partition::validate_mapping(&out.mapping, g.n(), h.k()).unwrap();
         }
     }

@@ -6,7 +6,7 @@ pub mod profiles;
 pub mod stats;
 
 use crate::algo::Algorithm;
-use crate::engine::{Engine, MapSpec};
+use crate::engine::{Engine, JobHandle, MapSpec, SubmitOpts};
 use crate::graph::gen::InstanceSpec;
 use crate::graph::{gen, CsrGraph};
 use crate::topology::{Hierarchy, Machine};
@@ -52,9 +52,12 @@ impl ExpRecord {
 
 /// Run the full experiment matrix: `algorithms × instances × hierarchies`,
 /// averaging over `seeds`. Each instance is generated once and fed to the
-/// engine in memory; every cell goes through [`Engine::map`], so matrix
-/// numbers are produced by exactly the code path the CLI and the service
-/// use. Progress is printed to stderr.
+/// engine in memory; **the whole matrix is submitted to the engine's job
+/// queue before the first wait**, so with `workers > 1` cells solve
+/// concurrently — matrix numbers are produced by exactly the code path
+/// the CLI and the service use, including the queue. Results aggregate in
+/// matrix order regardless of completion order. Progress is printed to
+/// stderr as cells complete.
 pub fn run_matrix(
     engine: &Engine,
     algorithms: &[Algorithm],
@@ -63,7 +66,16 @@ pub fn run_matrix(
     seeds: &[u64],
     eps: f64,
 ) -> Vec<ExpRecord> {
-    let mut out = Vec::new();
+    struct Cell<'a> {
+        spec: &'a InstanceSpec,
+        machine: &'a Machine,
+        algo: Algorithm,
+        jobs: Vec<JobHandle>,
+    }
+    // Phase 1: submit every (instance, machine, algorithm, seed) job.
+    // Submission blocks on queue space (never drops cells), so a matrix
+    // larger than `queue_cap` interleaves submission with execution.
+    let mut cells: Vec<Cell> = Vec::new();
     for spec in instances {
         let g = Arc::new(spec.generate());
         for h in machines {
@@ -74,40 +86,57 @@ pub fn run_matrix(
                     .algo(Some(algo))
                     .return_mapping(false)
                     .seeds(seeds.to_vec());
-                let mut cost = 0.0;
-                let mut host = 0.0;
-                let mut device = 0.0;
-                for r in engine.map_all_seeds(&base).expect("in-memory matrix cell") {
-                    cost += r.comm_cost;
-                    host += r.host_ms;
-                    device += r.device_ms;
-                }
-                let ns = seeds.len() as f64;
-                let rec = ExpRecord {
-                    algorithm: algo,
-                    instance: spec.name.to_string(),
-                    group: spec.group.to_string(),
-                    large: spec.size_class() == crate::graph::gen::SizeClass::Large,
-                    // Model labels may contain commas (fat-tree arity
-                    // lists); keep the CSV column count stable.
-                    hierarchy: h.label().replace(',', ";"),
-                    comm_cost: cost / ns,
-                    host_ms: host / ns,
-                    device_ms: device / ns,
-                    seeds: seeds.len(),
-                };
-                eprintln!(
-                    "  [{}] {} {} J={:.0} host={:.1}ms dev={:.2}ms",
-                    rec.algorithm.name(),
-                    rec.instance,
-                    rec.hierarchy,
-                    rec.comm_cost,
-                    rec.host_ms,
-                    rec.device_ms
-                );
-                out.push(rec);
+                let jobs = seeds
+                    .iter()
+                    .map(|&s| {
+                        engine
+                            .submit_opts(
+                                &base.with_seed(s),
+                                SubmitOpts { block_when_full: true, ..SubmitOpts::default() },
+                            )
+                            .expect("matrix submit (engine running)")
+                    })
+                    .collect();
+                cells.push(Cell { spec, machine: h, algo, jobs });
             }
         }
+    }
+    // Phase 2: wait in matrix order and aggregate.
+    let mut out = Vec::new();
+    for cell in cells {
+        let mut cost = 0.0;
+        let mut host = 0.0;
+        let mut device = 0.0;
+        for job in cell.jobs {
+            let r = job.wait().expect("in-memory matrix cell");
+            cost += r.comm_cost;
+            host += r.host_ms;
+            device += r.device_ms;
+        }
+        let ns = seeds.len() as f64;
+        let rec = ExpRecord {
+            algorithm: cell.algo,
+            instance: cell.spec.name.to_string(),
+            group: cell.spec.group.to_string(),
+            large: cell.spec.size_class() == crate::graph::gen::SizeClass::Large,
+            // Model labels may contain commas (fat-tree arity
+            // lists); keep the CSV column count stable.
+            hierarchy: cell.machine.label().replace(',', ";"),
+            comm_cost: cost / ns,
+            host_ms: host / ns,
+            device_ms: device / ns,
+            seeds: seeds.len(),
+        };
+        eprintln!(
+            "  [{}] {} {} J={:.0} host={:.1}ms dev={:.2}ms",
+            rec.algorithm.name(),
+            rec.instance,
+            rec.hierarchy,
+            rec.comm_cost,
+            rec.host_ms,
+            rec.device_ms
+        );
+        out.push(rec);
     }
     out
 }
@@ -229,6 +258,33 @@ mod tests {
             assert!(r.comm_cost > 0.0);
             assert!(r.to_csv().split(',').count() == ExpRecord::csv_header().split(',').count());
         }
+    }
+
+    #[test]
+    fn matrix_submits_through_the_job_queue_and_keeps_order() {
+        // Two engine workers + a tiny queue: submission must interleave
+        // with execution (blocking on space) and records must come back
+        // in matrix order even when cells finish out of order.
+        let engine = Engine::new(crate::engine::EngineConfig {
+            threads: 1,
+            workers: 2,
+            queue_cap: 2,
+            ..Default::default()
+        });
+        let specs: Vec<_> = smoke_suite().into_iter().take(1).collect();
+        let hs = vec![Machine::hier("2:2", "1:10").unwrap(), Machine::hier("4", "1").unwrap()];
+        let recs = run_matrix(
+            &engine,
+            &[Algorithm::SharedMapF, Algorithm::GpuIm],
+            &specs,
+            &hs,
+            &[1, 2],
+            0.03,
+        );
+        assert_eq!(recs.len(), 4);
+        let algos: Vec<&str> = recs.iter().map(|r| r.algorithm.name()).collect();
+        assert_eq!(algos, vec!["sharedmap-f", "gpu-im", "sharedmap-f", "gpu-im"]);
+        assert!(recs.iter().all(|r| r.comm_cost > 0.0 && r.seeds == 2));
     }
 
     #[test]

@@ -41,14 +41,24 @@
 //!   in for Kokkos/CUDA, with a calibrated GPU cost model;
 //! * a PJRT runtime ([`runtime`]) that executes AOT-compiled JAX/Pallas
 //!   kernels (QAP swap scoring, J evaluation) from the Rust hot path;
-//! * a mapping-as-a-service coordinator ([`coordinator`]) — the engine
-//!   behind a job queue and a line-oriented TCP protocol — and the
-//!   benchmark harness ([`harness`]) regenerating every paper table/figure.
+//! * a mapping-as-a-service coordinator ([`coordinator`]) — the engine's
+//!   asynchronous job API (`submit`/`status`/`wait`/`result`/`cancel`,
+//!   graph-as-resource sessions) behind a line-oriented TCP protocol —
+//!   and the benchmark harness ([`harness`]) regenerating every paper
+//!   table/figure.
+//!
+//! The engine itself is **job-oriented**: [`engine::Engine::submit`]
+//! enqueues a spec on a bounded priority queue served by a pool of
+//! engine workers and returns a [`engine::JobHandle`] immediately;
+//! [`engine::Engine::map`] is simply `submit(..)` + `wait()`. In-flight
+//! jobs are cancellable through a [`cancel::CancelToken`] polled at
+//! coarsening-level and Jet-round boundaries.
 //!
 //! See `DESIGN.md` for the hardware-substitution notes and the experiment
 //! index, and `examples/quickstart.rs` for the five-line end-to-end usage.
 
 pub mod algo;
+pub mod cancel;
 pub mod coarsen;
 pub mod config;
 pub mod coordinator;

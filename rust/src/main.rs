@@ -7,7 +7,8 @@
 //! * `eval`    — evaluate J(C, D, Π) of an existing partition file
 //! * `phases`  — GPU-IM phase breakdown for one instance (Table 2 row)
 //! * `suite`   — run an experiment matrix and write CSV
-//! * `serve`   — start the mapping-as-a-service coordinator (TCP)
+//! * `serve`   — start the mapping-as-a-service coordinator (TCP job API)
+//! * `client`  — drive a running coordinator over the async wire protocol
 //!
 //! Every mapping subcommand builds an [`heipa::engine::MapSpec`] — from a
 //! `--config FILE` (`key = value`, see [`heipa::config::RunConfig`]) when
@@ -193,6 +194,7 @@ fn run() -> Result<()> {
         "phases" => cmd_phases(&args)?,
         "suite" => cmd_suite(&args)?,
         "serve" => cmd_serve(&args)?,
+        "client" => cmd_client(&args)?,
         other => bail!("unknown subcommand `{other}` (try `heipa help`)"),
     }
     Ok(())
@@ -214,6 +216,13 @@ fn print_help() {
          suite  --algos a,b,… [--config FILE] [--instances x,y|smoke|paper] [--seeds 1,2]\n\
                 [--out results.csv] [--eps 0.03]\n\
          serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0] [--cache-cap 64]\n\
+                [--workers 2] [--queue-cap 256] [--max-conns 64]\n\
+         client --addr HOST:PORT (--send \"CMD\" | --script \"CMD; CMD; …\") [--timeout-ms 60000]\n\
+         \n\
+         The serve wire protocol is an async job API: `submit …` returns `ok job=<id>`\n\
+         immediately; poll with `status`/`wait`/`result`/`cancel`/`jobs`; upload task\n\
+         graphs once with `graph put name=… path=…|csr=…` and map them by `graph=<name>`\n\
+         (full grammar in README \"Service & job API\").\n\
          \n\
          `--config FILE` reads `key = value` defaults (see config::RunConfig);\n\
          explicit flags always win. Boolean flags (--polish, --stats) take no value.\n\
@@ -407,6 +416,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         artifacts_dir: args.get_or("artifacts", "artifacts"),
         threads: args.get_or("threads", "0").parse()?,
         graph_cache_cap: args.get_or("cache-cap", "64").parse().context("--cache-cap")?,
+        workers: args.get_or("workers", "2").parse().context("--workers")?,
+        queue_cap: args.get_or("queue-cap", "256").parse().context("--queue-cap")?,
+        ..ServiceConfig::default()
     }));
-    heipa::coordinator::protocol::serve_tcp(svc, &addr)
+    let opts = heipa::coordinator::protocol::ServeOptions {
+        max_conns: args.get_or("max-conns", "64").parse().context("--max-conns")?,
+    };
+    heipa::coordinator::protocol::serve_tcp(svc, &addr, opts)
+}
+
+/// Drive a running coordinator: send protocol lines, print each reply.
+/// `--send` sends one command; `--script` sends several, `;`-separated,
+/// over one connection (so job ids from `submit` can be awaited by later
+/// commands in the same script via a shell loop). Protocol-level `err`
+/// replies are printed, not fatal — transport failures are.
+fn cmd_client(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.required("addr")?;
+    let commands: Vec<String> = if let Some(cmd) = args.get("send") {
+        vec![cmd.to_string()]
+    } else if let Some(script) = args.get("script") {
+        script.split(';').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect()
+    } else {
+        bail!("client needs --send \"CMD\" or --script \"CMD; CMD; …\"");
+    };
+    let timeout_ms: u64 = args.get_or("timeout-ms", "60000").parse().context("--timeout-ms")?;
+    let mut conn = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect to coordinator at {addr}"))?;
+    conn.set_read_timeout(Some(std::time::Duration::from_millis(timeout_ms.max(1))))?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    for cmd in commands {
+        writeln!(conn, "{cmd}")?;
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).context("read reply (timeout?)")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        print!("{reply}");
+    }
+    Ok(())
 }

@@ -18,7 +18,7 @@ fn help_lists_subcommands() {
     let out = heipa().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["gen", "map", "eval", "phases", "suite", "serve"] {
+    for cmd in ["gen", "map", "eval", "phases", "suite", "serve", "client"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
 }
@@ -209,6 +209,96 @@ fn map_and_eval_accept_topology_specs() {
         .output()
         .unwrap();
     assert!(!out.status.success());
+}
+
+/// A running `heipa serve` child, killed on drop (even when the test
+/// panics mid-way).
+struct ServeProc {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl ServeProc {
+    fn start(extra: &[&str]) -> ServeProc {
+        let mut cmd = heipa();
+        cmd.args(["serve", "--addr", "127.0.0.1:0"]).args(extra);
+        cmd.stdout(std::process::Stdio::piped()).stderr(std::process::Stdio::null());
+        let mut child = cmd.spawn().unwrap();
+        // `serve` prints "… listening on <addr>" right after binding.
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut std::io::BufReader::new(stdout), &mut line).unwrap();
+        let addr = line
+            .rsplit("listening on ")
+            .next()
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| panic!("no bound address in `{line}`"));
+        ServeProc { child, addr }
+    }
+
+    fn client(&self, send: &str) -> String {
+        let out = heipa().args(["client", "--addr", &self.addr, "--send", send]).output().unwrap();
+        assert!(
+            out.status.success(),
+            "client `{send}` failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).trim_end().to_string()
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn serve_and_client_drive_the_async_job_api_end_to_end() {
+    let server = ServeProc::start(&["--workers", "2", "--queue-cap", "16"]);
+
+    // submit returns a job id before the solve completes.
+    let submitted = server.client(
+        "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 seed=1",
+    );
+    assert!(submitted.starts_with("ok job="), "{submitted}");
+    let job: u64 = submitted
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("job=").and_then(|v| v.parse().ok()))
+        .expect("job id");
+
+    // wait → done; result → the outcome line.
+    let waited = server.client(&format!("wait job={job}"));
+    assert!(waited.contains("state=done"), "{waited}");
+    let result = server.client(&format!("result job={job}"));
+    assert!(result.starts_with("ok id="), "{result}");
+    assert!(result.contains(" j="), "{result}");
+
+    // cancel flow: a sleeping job cancelled from a separate client call.
+    let slow = server.client(
+        "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 opt.__sleep_ms=60000",
+    );
+    let slow_job: u64 = slow
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("job=").and_then(|v| v.parse().ok()))
+        .expect("job id");
+    let cancelled = server.client(&format!("cancel job={slow_job}"));
+    assert!(cancelled.starts_with("ok job="), "{cancelled}");
+    let waited = server.client(&format!("wait job={slow_job}"));
+    assert!(waited.contains("state=cancelled"), "{waited}");
+
+    // The --script form drives several commands over one connection.
+    let out = heipa()
+        .args(["client", "--addr", &server.addr, "--script", "ping; jobs; metrics"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pong"), "{text}");
+    assert!(text.contains(&format!("{job}:done")), "{text}");
+    assert!(text.contains("cancelled=1"), "{text}");
 }
 
 #[test]

@@ -1,10 +1,12 @@
-//! Engine-level integration tests: the one-spec/one-context contract.
+//! Engine-level integration tests: the one-spec/one-job-API contract.
 //!
 //! * spec round-trips: kv config file → `MapSpec` → wire `MapRequest` →
 //!   `MapSpec` without loss;
 //! * polish parity: the library engine and the service produce the same
 //!   polished `comm_cost` for the same spec (the CLI drives the very same
 //!   `Engine::map`, covered by `tests/cli.rs`);
+//! * job parity: `submit(..).wait()` reproduces `map(..)` field for
+//!   field, and a cancelled multilevel job aborts mid-solve;
 //! * registry: every solver name resolves and solves a smoke instance
 //!   through the engine.
 
@@ -12,7 +14,9 @@ use heipa::algo::Algorithm;
 use heipa::config::RunConfig;
 use heipa::coordinator::service::Service;
 use heipa::coordinator::MapRequest;
-use heipa::engine::{solver_by_name, solver_names, Engine, EngineConfig, MapSpec, Refinement};
+use heipa::engine::{
+    solver_by_name, solver_names, Engine, EngineConfig, JobState, MapSpec, Refinement,
+};
 use heipa::partition::validate_mapping;
 
 fn engine() -> Engine {
@@ -40,13 +44,21 @@ fn kv_file_to_spec_to_wire_roundtrip() {
     let spec2 = req.to_spec();
     assert_eq!(spec2, spec);
 
-    // And the wire protocol parses to the same request.
+    // And the wire protocol parses to the same request (via both the
+    // blocking `map` verb and the async `submit` verb).
     let line = "map instance=rgg15 algorithm=gpu-hm hierarchy=4:8:2 distance=1:10:100 \
                 eps=0.05 seed=9 refinement=strong polish=1 mapping=1 opt.adaptive=0";
-    let heipa::coordinator::protocol::Command::Map(parsed) =
+    let heipa::coordinator::protocol::Command::Map { req: parsed, .. } =
         heipa::coordinator::protocol::parse_command(line).unwrap()
     else {
         panic!("expected map command");
+    };
+    assert_eq!(parsed, req);
+    let heipa::coordinator::protocol::Command::Submit { req: parsed, .. } =
+        heipa::coordinator::protocol::parse_command(&format!("submit{}", line.strip_prefix("map").unwrap()))
+            .unwrap()
+    else {
+        panic!("expected submit command");
     };
     assert_eq!(parsed, req);
 }
@@ -134,12 +146,79 @@ fn topology_spec_round_trips_through_config_and_wire() {
     assert_eq!(req.to_spec(), spec);
 
     let line = "map instance=rgg15 topology=torus:4x4x4 seed=3 mapping=1";
-    let heipa::coordinator::protocol::Command::Map(parsed) =
+    let heipa::coordinator::protocol::Command::Map { req: parsed, .. } =
         heipa::coordinator::protocol::parse_command(line).unwrap()
     else {
         panic!("expected map command");
     };
     assert_eq!(parsed.topology, req.topology);
+}
+
+#[test]
+fn submit_wait_reproduces_the_blocking_map_exactly() {
+    // The acceptance parity check, in-process: the async job path must
+    // produce the very MapOutcome the old blocking path did.
+    let e = engine();
+    let spec = MapSpec::named("sten_cop20k")
+        .hierarchy("2:2:2")
+        .distance("1:10:100")
+        .algo(Some(Algorithm::GpuIm))
+        .seed(4)
+        .return_mapping(true);
+    let blocking = e.map(&spec).unwrap();
+    let job = e.submit(&spec).unwrap();
+    let async_out = job.wait().unwrap();
+    assert_eq!(job.status().state, JobState::Done);
+    assert_eq!(blocking.algorithm, async_out.algorithm);
+    assert_eq!(blocking.n, async_out.n);
+    assert_eq!(blocking.k, async_out.k);
+    assert_eq!(blocking.seed, async_out.seed);
+    assert_eq!(blocking.mapping, async_out.mapping, "same seed must yield the same mapping");
+    assert!((blocking.comm_cost - async_out.comm_cost).abs() < 1e-9 * blocking.comm_cost.max(1.0));
+    assert!((blocking.imbalance - async_out.imbalance).abs() < 1e-12);
+}
+
+#[test]
+fn cancelling_a_running_multilevel_job_aborts_the_solve() {
+    // A real multilevel solve (no sleep hook): repeatedly submit + cancel
+    // mid-flight; a cancelled job must come back as Cancelled, never
+    // hang, and the worker must stay usable. (The hard wall-clock bound
+    // on cancellation latency is asserted with the synthetic slow solver
+    // in the engine's unit tests; solver-level poll behavior is pinned by
+    // the registry/jet_loop cancellation tests.)
+    let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..EngineConfig::default() });
+    let g = std::sync::Arc::new(heipa::graph::gen::rgg(
+        20_000,
+        heipa::graph::gen::rgg_paper_radius(20_000),
+        3,
+    ));
+    let spec = MapSpec::in_memory(g)
+        .hierarchy("4:8:2")
+        .distance("1:10:100")
+        .algo(Some(Algorithm::GpuIm));
+    let mut saw_cancel = false;
+    for _ in 0..4 {
+        let job = e.submit(&spec).unwrap();
+        while job.status().state == JobState::Queued {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        job.cancel();
+        let t0 = std::time::Instant::now();
+        let result = job.wait();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(30), "cancel hung");
+        match job.status().state {
+            JobState::Cancelled => {
+                assert!(result.unwrap_err().to_string().contains("cancelled"));
+                saw_cancel = true;
+                break;
+            }
+            JobState::Done => continue, // solve won the race; try again
+            other => panic!("unexpected terminal state {other:?}"),
+        }
+    }
+    assert!(saw_cancel, "solve always beat the cancel — graph too small for this test");
+    // Worker is still healthy.
+    assert!(e.map(&MapSpec::named("wal_598a").hierarchy("2:2").distance("1:10")).is_ok());
 }
 
 #[test]

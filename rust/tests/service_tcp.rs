@@ -1,43 +1,52 @@
-//! TCP front-end integration: drive the coordinator over a real socket.
+//! TCP front-end integration: drive the coordinator's real accept loop
+//! (`protocol::serve_listener`) over real sockets — the async job API,
+//! graph sessions, the legacy blocking `map`, and the connection cap.
 
-use heipa::coordinator::protocol;
-use heipa::coordinator::service::Service;
+use heipa::coordinator::protocol::{self, ServeOptions};
+use heipa::coordinator::service::{Service, ServiceConfig};
 use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-fn spawn(svc: Arc<Service>) -> std::net::SocketAddr {
+/// Bind an ephemeral port and serve the real protocol loop on it.
+fn spawn(svc: Arc<Service>, opts: ServeOptions) -> SocketAddr {
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { break };
-            let svc = svc.clone();
-            std::thread::spawn(move || {
-                let reader = BufReader::new(stream.try_clone().unwrap());
-                let mut writer = stream;
-                for line in reader.lines() {
-                    let Ok(line) = line else { break };
-                    let reply = match protocol::parse_command(&line) {
-                        Ok(protocol::Command::Ping) => "ok pong=1".to_string(),
-                        Ok(protocol::Command::Metrics) => protocol::render_metrics(&svc.metrics()),
-                        Ok(protocol::Command::Map(req)) => match svc.submit(req) {
-                            Ok(resp) => protocol::render_response(&resp),
-                            Err(e) => protocol::render_error(&e),
-                        },
-                        Err(e) => protocol::render_error(&e),
-                    };
-                    if writeln!(writer, "{reply}").is_err() {
-                        break;
-                    }
-                }
-            });
-        }
+        let _ = protocol::serve_listener(svc, listener, opts);
     });
     addr
 }
 
-fn roundtrip(addr: std::net::SocketAddr, lines_in: &[&str]) -> Vec<String> {
-    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+fn two_worker_service() -> Arc<Service> {
+    Arc::new(Service::with_config(ServiceConfig { threads: 1, workers: 2, ..Default::default() }))
+}
+
+/// An interactive connection: send one line, read one reply.
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        Conn { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+/// Pipelined helper: write all lines, then collect all replies.
+fn roundtrip(addr: SocketAddr, lines_in: &[&str]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
     for l in lines_in {
         writeln!(conn, "{l}").unwrap();
     }
@@ -45,10 +54,16 @@ fn roundtrip(addr: std::net::SocketAddr, lines_in: &[&str]) -> Vec<String> {
     BufReader::new(conn).lines().map(|l| l.unwrap()).collect()
 }
 
+fn job_id_of(reply: &str) -> u64 {
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("job=").and_then(|v| v.parse().ok()))
+        .unwrap_or_else(|| panic!("no job id in `{reply}`"))
+}
+
 #[test]
 fn ping_map_metrics_over_tcp() {
-    let svc = Arc::new(Service::start("artifacts".into(), 1));
-    let addr = spawn(svc);
+    let addr = spawn(two_worker_service(), ServeOptions::default());
     let replies = roundtrip(
         addr,
         &[
@@ -63,23 +78,29 @@ fn ping_map_metrics_over_tcp() {
     assert!(replies[1].contains("algorithm=gpu-im"));
     assert!(replies[1].contains(" j="));
     assert!(replies[2].contains("requests=1"));
+    assert!(replies[2].contains("completed=1"));
+    assert!(replies[2].contains("queue_depth="));
 }
 
 #[test]
 fn protocol_errors_do_not_kill_connection() {
-    let svc = Arc::new(Service::start("artifacts".into(), 1));
-    let addr = spawn(svc);
+    let addr = spawn(two_worker_service(), ServeOptions::default());
     let replies = roundtrip(addr, &["bogus", "map instance=missing_instance", "ping"]);
     assert_eq!(replies.len(), 3);
-    assert!(replies[0].starts_with("err "));
-    assert!(replies[1].starts_with("err "));
+    assert!(replies[0].starts_with("err code=bad_request"), "{}", replies[0]);
+    assert!(replies[1].starts_with("err "), "{}", replies[1]);
+    // The error message survives escaping: unescape restores real text
+    // with spaces (the old renderer flattened them to `_`).
+    let msg = replies[1].split_once("message=").map(|(_, v)| v).unwrap();
+    let text = protocol::unescape_value(msg);
+    assert!(text.contains("missing_instance"), "{text}");
+    assert!(text.contains(' '), "message lost its spaces: {text}");
     assert!(replies[2].contains("pong"));
 }
 
 #[test]
 fn mapping_payload_roundtrips() {
-    let svc = Arc::new(Service::start("artifacts".into(), 1));
-    let addr = spawn(svc);
+    let addr = spawn(two_worker_service(), ServeOptions::default());
     let replies = roundtrip(
         addr,
         &["map instance=sten_cop20k algorithm=jet hierarchy=2:2 distance=1:10 eps=0.05 seed=2 mapping=1"],
@@ -91,4 +112,132 @@ fn mapping_payload_roundtrips() {
     let g = heipa::graph::gen::generate_by_name("sten_cop20k");
     assert_eq!(ids.len(), g.n());
     assert!(ids.iter().all(|&b| b < 4));
+}
+
+#[test]
+fn submit_over_tcp_returns_before_the_solve_and_matches_blocking_map() {
+    let addr = spawn(two_worker_service(), ServeOptions::default());
+    let mut conn = Conn::open(addr);
+    let body = "instance=sten_cop20k algorithm=gpu-im hierarchy=2:2:2 distance=1:10:100 eps=0.03 seed=5 mapping=1";
+
+    // Async path: submit → (immediate job id) → wait → result.
+    let t0 = Instant::now();
+    let submitted = conn.send(&format!("submit {body} opt.__sleep_ms=300"));
+    let submit_latency = t0.elapsed();
+    assert!(submitted.starts_with("ok job="), "{submitted}");
+    assert!(submitted.contains("state=queued"), "{submitted}");
+    // The solve sleeps ≥ 300ms; the submit reply must not have waited for it.
+    assert!(
+        submit_latency < Duration::from_millis(300),
+        "submit blocked for {submit_latency:?} — not asynchronous"
+    );
+    let job = job_id_of(&submitted);
+    let waited = conn.send(&format!("wait job={job}"));
+    assert!(waited.contains("state=done"), "{waited}");
+    let result = conn.send(&format!("result job={job}"));
+
+    // Parity: the legacy blocking path must produce the identical outcome
+    // fields (same spec, same seed — the sleep hook does not affect the
+    // solve). Wall-clock fields (host_ms/device_ms) naturally vary per
+    // run and are excluded.
+    let blocking = conn.send(&format!("map {body}"));
+    let fields = |s: &str| -> Vec<(String, String)> {
+        s.split_whitespace()
+            .filter_map(|t| t.split_once('='))
+            .filter(|(k, _)| ["algorithm", "n", "k", "j", "imbalance", "polish_dj", "mapping"].contains(k))
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    };
+    assert_eq!(
+        fields(&result),
+        fields(&blocking),
+        "async result and blocking map disagree:\n  {result}\n  {blocking}"
+    );
+    assert!(!fields(&result).is_empty());
+}
+
+#[test]
+fn cancel_over_tcp_stops_a_running_job() {
+    let addr = spawn(two_worker_service(), ServeOptions::default());
+    let mut conn = Conn::open(addr);
+    let submitted = conn.send(
+        "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 opt.__sleep_ms=60000",
+    );
+    let job = job_id_of(&submitted);
+    // Cancel from a *different* connection: job identity is server-side.
+    let mut other = Conn::open(addr);
+    let cancelled = other.send(&format!("cancel job={job}"));
+    assert!(cancelled.starts_with("ok job="), "{cancelled}");
+    let t0 = Instant::now();
+    let waited = conn.send(&format!("wait job={job}"));
+    assert!(t0.elapsed() < Duration::from_secs(10), "cancelled job still blocked the wait");
+    assert!(waited.contains("state=cancelled"), "{waited}");
+    let result = conn.send(&format!("result job={job}"));
+    assert!(result.starts_with("err code=cancelled"), "{result}");
+    // The cancelled counter is bumped when the job is retired (at worker
+    // pop for a queued cancel) — poll briefly rather than race it.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let metrics = other.send("metrics");
+        if metrics.contains("cancelled=1") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "cancelled never counted: {metrics}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn graph_sessions_survive_across_connections() {
+    let addr = spawn(two_worker_service(), ServeOptions::default());
+    let mut a = Conn::open(addr);
+    let put = a.send("graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6");
+    assert_eq!(put, "ok graph=ring n=8 m=8");
+    drop(a); // the session graph outlives the uploading connection
+    let mut b = Conn::open(addr);
+    assert_eq!(b.send("graph list"), "ok count=1 graphs=ring");
+    let mapped = b.send("map graph=ring algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3");
+    assert!(mapped.starts_with("ok id="), "{mapped}");
+    assert!(mapped.contains("k=4"), "{mapped}");
+    assert_eq!(b.send("graph del name=ring"), "ok dropped=ring");
+}
+
+#[test]
+fn connection_cap_rejects_with_busy_and_recovers() {
+    let addr = spawn(two_worker_service(), ServeOptions { max_conns: 1 });
+    let mut first = Conn::open(addr);
+    assert!(first.send("ping").contains("pong"));
+    // Second concurrent connection: one busy line, then closed.
+    let over = TcpStream::connect(addr).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut lines = BufReader::new(over).lines();
+    let busy = lines.next().unwrap().unwrap();
+    assert!(busy.starts_with("err code=busy"), "{busy}");
+    assert!(lines.next().is_none(), "over-cap connection must be closed");
+    // Dropping the first connection frees the slot (poll briefly: the
+    // server decrements when the handler thread exits). An over-cap
+    // connection announces itself with an unsolicited busy line; an
+    // accepted one stays silent until spoken to — probe with a short
+    // read timeout before committing to a ping.
+    drop(first);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "slot never freed");
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        if reader.read_line(&mut line).is_ok() && line.starts_with("err code=busy") {
+            std::thread::sleep(Duration::from_millis(10));
+            continue; // still over cap
+        }
+        // No busy line → the connection was accepted; it must serve.
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut writer = stream;
+        writeln!(writer, "ping").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "{line}");
+        break;
+    }
 }
