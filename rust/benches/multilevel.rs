@@ -1,0 +1,196 @@
+//! Multilevel-subsystem perf harness: (1) hierarchy build cost of the
+//! matching vs cluster coarsening schemes on regular and irregular
+//! graphs, and (2) cold vs hierarchy-cached time-to-result of repeat
+//! engine jobs on a pinned session graph (the upload-once/map-many
+//! pattern). Wall-clock *and* modeled device ms land in
+//! `BENCH_multilevel.json` (override the path with `HEIPA_BENCH_OUT`;
+//! set `HEIPA_BENCH_SMOKE=1` for a seconds-scale CI run).
+
+use heipa::algo::Algorithm;
+use heipa::cancel::CancelToken;
+use heipa::engine::{Engine, EngineConfig, MapSpec};
+use heipa::graph::builder::GraphBuilder;
+use heipa::graph::{gen, CsrGraph};
+use heipa::multilevel::{BuildParams, CoarsenConfig, CoarseHierarchy, SchemeKind};
+use heipa::par::cost::DeviceTimer;
+use heipa::par::Pool;
+use std::sync::Arc;
+
+struct Record {
+    bench: &'static str,
+    graph: String,
+    scheme: &'static str,
+    mode: &'static str,
+    wall_ms: f64,
+    device_ms: f64,
+    levels: usize,
+    coarsest_n: usize,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(records: &[Record], path: &str) {
+    let mut out = String::from("{\n  \"bench\": \"multilevel\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"bench\": \"{}\", \"graph\": \"{}\", \"scheme\": \"{}\", \"mode\": \"{}\", \
+             \"wall_ms\": {:.3}, \"device_ms\": {:.3}, \"levels\": {}, \"coarsest_n\": {}}}{}\n",
+            json_escape(r.bench),
+            json_escape(&r.graph),
+            r.scheme,
+            r.mode,
+            r.wall_ms,
+            r.device_ms,
+            r.levels,
+            r.coarsest_n,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).expect("write bench json");
+}
+
+/// Best-of-`reps` measurement of `f` (wall ms, modeled device ms, result).
+fn measure<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, f64, T) {
+    let mut best_wall = f64::INFINITY;
+    let mut best_dev = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..reps {
+        let t = DeviceTimer::start();
+        let r = f();
+        let m = t.stop();
+        best_wall = best_wall.min(m.host_ms);
+        best_dev = best_dev.min(m.device_ms);
+        last = Some(r);
+    }
+    (best_wall, best_dev, last.unwrap())
+}
+
+/// A forest of wide stars — the irregular, matching-hostile shape the
+/// cluster scheme exists for.
+fn star_forest(stars: u32, leaves: u32) -> CsrGraph {
+    let mut b = GraphBuilder::new((stars * (leaves + 1)) as usize);
+    for s in 0..stars {
+        let hub = s * (leaves + 1);
+        for i in 1..=leaves {
+            b.add_edge(hub, hub + i, 1.0);
+        }
+    }
+    b.build()
+}
+
+fn main() {
+    let smoke = std::env::var("HEIPA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("HEIPA_BENCH_OUT").unwrap_or_else(|_| "BENCH_multilevel.json".to_string());
+    let reps = if smoke { 1 } else { 3 };
+
+    let graphs: Vec<(String, Arc<CsrGraph>)> = if smoke {
+        vec![
+            ("rgg11".into(), Arc::new(gen::rgg(1 << 11, gen::rgg_paper_radius(1 << 11), 3))),
+            ("stars-2k".into(), Arc::new(star_forest(40, 49))),
+        ]
+    } else {
+        vec![
+            ("rgg15".into(), Arc::new(gen::rgg(1 << 15, gen::rgg_paper_radius(1 << 15), 3))),
+            ("stencil128".into(), Arc::new(gen::stencil9(128, 128, 7))),
+            ("stars-50k".into(), Arc::new(star_forest(500, 99))),
+        ]
+    };
+
+    let mut records = Vec::new();
+    println!("| bench | graph | scheme/mode | wall ms | device ms | levels | coarsest n |");
+    println!("|---|---|---|---|---|---|---|");
+
+    // Part 1: scheme shoot-out on raw hierarchy builds.
+    let pool = Pool::new(if smoke { 2 } else { 4 });
+    for (name, g) in &graphs {
+        for (label, scheme) in [
+            ("matching", SchemeKind::Matching),
+            ("cluster", SchemeKind::Cluster),
+            ("auto", SchemeKind::Auto),
+        ] {
+            let cfg = CoarsenConfig { scheme, ..CoarsenConfig::device() };
+            let params = BuildParams { coarsest: 64.max(g.n() / 256), lmax: i64::MAX, seed: cfg.salt };
+            let (wall, dev, hier) = measure(reps, || {
+                CoarseHierarchy::build(&pool, g.clone(), &params, &cfg, &CancelToken::new(), None)
+                    .expect("uncancelled build")
+            });
+            println!(
+                "| build | {name} | {label} | {wall:.2} | {dev:.2} | {} | {} |",
+                hier.levels(),
+                hier.coarsest().n()
+            );
+            records.push(Record {
+                bench: "build",
+                graph: name.clone(),
+                scheme: label,
+                mode: "cold",
+                wall_ms: wall,
+                device_ms: dev,
+                levels: hier.levels(),
+                coarsest_n: hier.coarsest().n(),
+            });
+        }
+    }
+
+    // Part 2: cold vs cached time-to-result on a pinned session graph.
+    for (name, g) in &graphs {
+        let engine = Engine::new(EngineConfig { threads: if smoke { 2 } else { 4 }, ..Default::default() });
+        engine.put_graph("sess", g.clone());
+        let spec = MapSpec::named("sess")
+            .hierarchy("4:4")
+            .distance("1:10")
+            .algo(Some(Algorithm::GpuIm))
+            .return_mapping(false);
+        // Cold: the first job builds (and caches) the hierarchy.
+        let t = DeviceTimer::start();
+        let cold_out = engine.map(&spec.clone().seed(1)).unwrap();
+        let cold = t.stop();
+        // Cached: repeat jobs (fresh seeds) skip coarsening entirely.
+        let (warm_wall, warm_dev, warm_out) = measure(reps.max(2), || {
+            let seed = 2 + records.len() as u64;
+            engine.map(&spec.clone().seed(seed)).unwrap()
+        });
+        assert_eq!(cold_out.hierarchy_cache, Some(false));
+        assert_eq!(warm_out.hierarchy_cache, Some(true));
+        for (mode, wall, dev) in
+            [("cold", cold.host_ms, cold.device_ms), ("cached", warm_wall, warm_dev)]
+        {
+            println!("| job | {name} | {mode} | {wall:.2} | {dev:.2} | - | - |");
+            records.push(Record {
+                bench: "job",
+                graph: name.clone(),
+                scheme: "auto",
+                mode,
+                wall_ms: wall,
+                device_ms: dev,
+                levels: 0,
+                coarsest_n: 0,
+            });
+        }
+    }
+
+    write_json(&records, &out_path);
+    println!("\nwrote {} records to {out_path}", records.len());
+
+    // Headline: cached speedup per graph.
+    for (name, _) in &graphs {
+        let grab = |mode: &str| -> Option<f64> {
+            records
+                .iter()
+                .find(|r| r.bench == "job" && r.graph == *name && r.mode == mode)
+                .map(|r| r.wall_ms)
+        };
+        if let (Some(cold), Some(cached)) = (grab("cold"), grab("cached")) {
+            if cached > 0.0 {
+                println!(
+                    "{name}: cold {cold:.2} ms vs cached {cached:.2} ms ({:.2}x time-to-result)",
+                    cold / cached
+                );
+            }
+        }
+    }
+}

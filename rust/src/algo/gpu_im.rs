@@ -1,34 +1,34 @@
 //! GPU-IM — integrated mapping inside the multilevel pipeline
 //! (paper §4.2; the paper's fastest algorithm).
 //!
-//! Device preference matching with the `expansion*²` rating (+ two-hop),
-//! CAS-hash contraction (Alg. 3), CPU hierarchical-multisection initial
-//! mapping on the ≤ 8·k coarsest graph, parallel uncontraction, and the
+//! Built on the unified [`crate::multilevel`] subsystem: the configured
+//! coarsening scheme (preference matching with the `expansion*²` rating
+//! + two-hop fallback, or size-constrained cluster LP) with CAS-hash
+//! contraction (Alg. 3), CPU hierarchical-multisection initial mapping
+//! on the ≤ 8·k coarsest graph, parallel uncontraction, and the
 //! Jet-adapted refinement driven by the mapping gain Eq. 1 (Alg. 4–6)
 //! with the non-negative first filter.
 
 use super::sharedmap::{sharedmap, SharedMapConfig};
-use crate::coarsen::contract_cas::contract_cas;
-use crate::coarsen::{matched_fraction, matching_to_map, match_par::preference_matching, twohop::twohop_matching};
-use crate::graph::{CsrGraph, EdgeList};
+use crate::graph::CsrGraph;
 use crate::metrics::{Phase, PhaseBreakdown};
+use crate::multilevel::{CoarsenConfig, CoarseHierarchy};
 use crate::par::Pool;
 use crate::partition::l_max;
 use crate::refine::jet_loop::{jet_refine_with, JetConfig};
 use crate::refine::jet_lp::Filter;
 use crate::refine::{Objective, RefineWorkspace};
 use crate::topology::Machine;
-use crate::{Block, Vertex};
+use crate::Block;
 
 /// GPU-IM configuration.
 #[derive(Clone, Debug)]
 pub struct GpuImConfig {
     /// Refinement iteration limit (12).
     pub iter_limit: usize,
-    /// Coarsen until `coarsest_factor · k` vertices (paper: 8).
-    pub coarsest_factor: usize,
-    /// Matching rounds per level.
-    pub match_rounds: usize,
+    /// Coarsening stage (scheme, rounds, level cap, salt) — shared with
+    /// every other multilevel pipeline.
+    pub coarsen: CoarsenConfig,
     /// Initial-partitioning flavor (CPU multisection).
     pub init: SharedMapConfig,
     /// Ablation A2: use `J` for the rebalance loss instead of edge-cut.
@@ -42,8 +42,7 @@ impl Default for GpuImConfig {
     fn default() -> Self {
         GpuImConfig {
             iter_limit: 12,
-            coarsest_factor: 8,
-            match_rounds: 8,
+            coarsen: CoarsenConfig::device(),
             // The coarsest graph is tiny (<= 8*k vertices): afford the
             // default multilevel effort for the initial mapping.
             init: SharedMapConfig {
@@ -67,79 +66,57 @@ pub fn gpu_im(
     eps: f64,
     seed: u64,
     cfg: &GpuImConfig,
+    phases: Option<&mut PhaseBreakdown>,
+) -> Vec<Block> {
+    gpu_im_with(pool, g, m, eps, seed, cfg, phases, None)
+}
+
+/// [`gpu_im`] over an optional prebuilt hierarchy (the engine's
+/// hierarchy cache). `prebuilt` must have been built for this graph with
+/// `cfg.coarsen` and this machine's `(k, eps)`; when `None`, the
+/// hierarchy is built here (and its build phases land in `phases`).
+#[allow(clippy::too_many_arguments)]
+pub fn gpu_im_with(
+    pool: &Pool,
+    g: &CsrGraph,
+    m: &Machine,
+    eps: f64,
+    seed: u64,
+    cfg: &GpuImConfig,
     mut phases: Option<&mut PhaseBreakdown>,
+    prebuilt: Option<&CoarseHierarchy>,
 ) -> Vec<Block> {
     let k = m.k();
     let total = g.total_vweight();
     let lmax = l_max(total, k, eps);
-    let coarsest = (cfg.coarsest_factor * k).max(64);
 
-    macro_rules! timed {
-        ($ph:expr, $e:expr) => {{
-            match phases.as_deref_mut() {
-                Some(p) => p.time($ph, || $e),
-                None => $e,
-            }
-        }};
-    }
-    macro_rules! timed_cpu {
-        ($ph:expr, $e:expr) => {{
-            match phases.as_deref_mut() {
-                Some(p) => p.time_cpu($ph, || $e),
-                None => $e,
-            }
-        }};
-    }
-
-    // Coarsening (matching = "Coarsening" row, contraction separate).
-    let mut graphs: Vec<CsrGraph> = vec![];
-    let mut edge_lists: Vec<EdgeList> = vec![];
-    let mut maps: Vec<Vec<Vertex>> = vec![];
-    let mut cur = g.clone();
-    // Misc charges include the ECSR build and the (simulated) host↔device
-    // transfers of the input graph and the resulting mapping.
-    let mut cur_el = timed!(Phase::Misc, {
-        // Modeled H2D upload of the CSR graph (xadj + adj + weights).
-        crate::par::ledger::charge(3, (cur.n() + 2 * cur.num_directed()) as u64);
-        EdgeList::build_par(pool, &cur)
-    });
-    let mut level = 0u64;
-    while cur.n() > coarsest {
-        // Coarsening-level cancellation boundary: the engine discards the
-        // result of a cancelled run, so bail with a valid assignment.
-        if cfg.cancel.is_cancelled() {
-            return vec![0 as Block; g.n()];
-        }
-        let mut mate = timed!(
-            Phase::Coarsening,
-            preference_matching(&cur, pool, lmax, seed ^ (level << 32), cfg.match_rounds)
-        );
-        if matched_fraction(&mate) < 0.75 {
-            timed_cpu!(Phase::Coarsening, {
-                twohop_matching(&cur, &mut mate, lmax);
-            });
-        }
-        let (map, nc) = matching_to_map(&mate);
-        if nc as f64 > cur.n() as f64 * 0.96 {
-            break;
-        }
-        let coarse = timed!(Phase::Contraction, contract_cas(pool, &cur, &cur_el, &map, nc));
-        let coarse_el = timed!(Phase::Misc, EdgeList::build_par(pool, &coarse));
-        graphs.push(cur);
-        edge_lists.push(cur_el);
-        maps.push(map);
-        cur = coarse;
-        cur_el = coarse_el;
-        level += 1;
-    }
+    let mut owned = None;
+    let Some(hier) = CoarseHierarchy::resolve(
+        prebuilt,
+        &mut owned,
+        pool,
+        g,
+        k,
+        lmax,
+        &cfg.coarsen,
+        &cfg.cancel,
+        phases.as_deref_mut(),
+    ) else {
+        // Cancelled mid-coarsening: the engine discards the result, so
+        // bail with a valid assignment.
+        return vec![0 as Block; g.n()];
+    };
 
     // Initial mapping on the CPU (paper: hierarchical multisection; GPU
     // offers no advantage at this size). `cfg.init` carries the same
     // cancel token, so the multisection bails at its own boundaries.
-    let mut mapping = timed_cpu!(
-        Phase::InitialPartitioning,
-        sharedmap(&cur, m, eps, seed ^ 0xabcd, &cfg.init)
-    );
+    let mapping = {
+        let run = || sharedmap(hier.coarsest(), m, eps, seed ^ 0xabcd, &cfg.init);
+        match phases.as_deref_mut() {
+            Some(p) => p.time_cpu(Phase::InitialPartitioning, run),
+            None => run(),
+        }
+    };
 
     let jet_cfg = JetConfig {
         iter_limit: cfg.iter_limit,
@@ -149,46 +126,22 @@ pub fn gpu_im(
         cancel: cfg.cancel.clone(),
         ..Default::default()
     };
-
     // One workspace for the whole uncoarsening chain, sized at the finest
     // level so coarser levels never reallocate.
     let mut ws = RefineWorkspace::with_capacity(g.n(), k);
-
-    // Refine the coarsest level.
-    if !cfg.cancel.is_cancelled() {
-        timed!(Phase::RefineRebalance, {
-            jet_refine_with(
-                pool, &cur, &cur_el, &mut mapping, k, lmax, &Objective::Comm(m), &jet_cfg, &mut ws,
-            )
-        });
-    }
-
-    // Uncoarsening. A cancelled run still projects down to the finest
-    // level (the mapping must stay structurally valid) but skips the
-    // per-level refinement.
-    for lev in (0..maps.len()).rev() {
-        let fine = &graphs[lev];
-        let el = &edge_lists[lev];
-        let map = &maps[lev];
-        let mut fine_mapping = vec![0 as Block; fine.n()];
-        timed!(Phase::Uncontraction, {
-            let fp = crate::par::SharedMut::new(&mut fine_mapping);
-            pool.parallel_for(fine.n(), |v| unsafe {
-                fp.write(v, mapping[map[v] as usize]);
-            });
-        });
+    // Uncoarsening: project + refine per level. A cancelled run still
+    // projects to the finest level (the mapping must stay structurally
+    // valid) but skips the per-level refinement.
+    let mapping = hier.uncoarsen(pool, mapping, phases.as_deref_mut(), |_lev, gl, el, p| {
         if !cfg.cancel.is_cancelled() {
-            timed!(Phase::RefineRebalance, {
-                jet_refine_with(
-                    pool, fine, el, &mut fine_mapping, k, lmax, &Objective::Comm(m), &jet_cfg,
-                    &mut ws,
-                )
-            });
+            jet_refine_with(pool, gl, el, p, k, lmax, &Objective::Comm(m), &jet_cfg, &mut ws);
         }
-        mapping = fine_mapping;
-    }
+    });
     // Modeled D2H download of the final mapping.
-    timed!(Phase::Misc, crate::par::ledger::charge(1, mapping.len() as u64));
+    match phases.as_deref_mut() {
+        Some(p) => p.time(Phase::Misc, || crate::par::ledger::charge(1, mapping.len() as u64)),
+        None => crate::par::ledger::charge(1, mapping.len() as u64),
+    }
     mapping
 }
 
@@ -196,6 +149,8 @@ pub fn gpu_im(
 mod tests {
     use super::*;
     use crate::graph::gen;
+    use crate::multilevel::BuildParams;
+    use std::sync::Arc;
     use crate::partition::{comm_cost, is_balanced, validate_mapping};
 
     #[test]
@@ -251,5 +206,50 @@ mod tests {
         let a = gpu_im(&pool, &g, &h, 0.03, 9, &GpuImConfig::default(), None);
         let b = gpu_im(&pool, &g, &h, 0.03, 9, &GpuImConfig::default(), None);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cluster_scheme_end_to_end() {
+        // The cluster coarsener must carry a full GPU-IM run on a mesh
+        // just like matching does.
+        let g = gen::grid2d(36, 36, false);
+        let h = Machine::hier("4:4", "1:10").unwrap();
+        let pool = Pool::new(1);
+        let cfg = GpuImConfig {
+            coarsen: CoarsenConfig {
+                scheme: crate::multilevel::SchemeKind::Cluster,
+                ..CoarsenConfig::device()
+            },
+            ..GpuImConfig::default()
+        };
+        let m = gpu_im(&pool, &g, &h, 0.03, 3, &cfg, None);
+        validate_mapping(&m, g.n(), h.k()).unwrap();
+        assert!(is_balanced(&g, &m, h.k(), 0.05));
+    }
+
+    #[test]
+    fn prebuilt_hierarchy_is_bit_identical_to_inline_build() {
+        let g = gen::stencil9(30, 30, 2);
+        let h = Machine::hier("4:4", "1:10").unwrap();
+        let pool = Pool::new(1);
+        let cfg = GpuImConfig::default();
+        let params = BuildParams {
+            coarsest: cfg.coarsen.coarsest_for(h.k()),
+            lmax: l_max(g.total_vweight(), h.k(), 0.03),
+            seed: cfg.coarsen.salt,
+        };
+        let hier = CoarseHierarchy::build(
+            &pool,
+            Arc::new(g.clone()),
+            &params,
+            &cfg.coarsen,
+            &crate::cancel::CancelToken::new(),
+            None,
+        )
+        .unwrap();
+        hier.validate().unwrap();
+        let fresh = gpu_im(&pool, &g, &h, 0.03, 11, &cfg, None);
+        let reused = gpu_im_with(&pool, &g, &h, 0.03, 11, &cfg, None, Some(&hier));
+        assert_eq!(fresh, reused, "cached-hierarchy path must be bit-identical");
     }
 }

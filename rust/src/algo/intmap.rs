@@ -1,28 +1,29 @@
 //! IntMap-like serial integrated mapping (Faraj et al., SEA 2020).
 //!
 //! Integrates the mapping objective `J(C, D, Π)` into a serial multilevel
-//! pipeline: matching-based coarsening (`expansion*` rating family),
-//! hierarchical multisection as initial mapping, and J-objective label
-//! propagation during uncoarsening. The Fast/Strong flavors mirror
-//! IntMap's configurations.
+//! pipeline — the serial build of the unified [`crate::multilevel`]
+//! subsystem (matching or cluster coarsening), hierarchical multisection
+//! as initial mapping, and J-objective label propagation during
+//! uncoarsening. The Fast/Strong flavors mirror IntMap's configurations.
 
 use super::sharedmap::{sharedmap, SharedMapConfig};
-use crate::coarsen::coarsen_step_serial;
 use crate::graph::CsrGraph;
+use crate::multilevel::{BuildParams, CoarsenConfig, CoarseHierarchy};
 use crate::partition::l_max;
 use crate::refine::{
     lp_serial::{force_balance_serial, lp_refine_serial},
     Objective,
 };
 use crate::topology::Machine;
-use crate::{Block, Vertex};
+use crate::Block;
 
 /// Configuration of the serial integrated mapper.
 #[derive(Clone, Debug)]
 pub struct IntMapConfig {
-    /// Coarsen until `max(coarsest_factor · k, coarsest_min)` vertices.
-    pub coarsest_factor: usize,
-    pub coarsest_min: usize,
+    /// Coarsening stage (scheme, level cap `max(factor · k, min)`) —
+    /// shared with every other multilevel pipeline. The per-level seeds
+    /// derive from the job seed (serial runs are not hierarchy-cached).
+    pub coarsen: CoarsenConfig,
     /// LP refinement rounds per level.
     pub lp_rounds: usize,
     /// Extra LP rounds on the finest level.
@@ -37,8 +38,7 @@ pub struct IntMapConfig {
 impl IntMapConfig {
     pub fn fast() -> Self {
         IntMapConfig {
-            coarsest_factor: 8,
-            coarsest_min: 400,
+            coarsen: CoarsenConfig::serial(400),
             lp_rounds: 2,
             finest_extra_rounds: 0,
             init: SharedMapConfig::fast(),
@@ -48,8 +48,7 @@ impl IntMapConfig {
 
     pub fn strong() -> Self {
         IntMapConfig {
-            coarsest_factor: 8,
-            coarsest_min: 400,
+            coarsen: CoarsenConfig::serial(400),
             lp_rounds: 6,
             finest_extra_rounds: 6,
             init: SharedMapConfig::strong(),
@@ -63,54 +62,36 @@ pub fn intmap(g: &CsrGraph, m: &Machine, eps: f64, seed: u64, cfg: &IntMapConfig
     let k = m.k();
     let total = g.total_vweight();
     let lmax = l_max(total, k, eps);
-    let coarsest = (cfg.coarsest_factor * k).max(cfg.coarsest_min);
 
-    // Coarsening.
-    let mut graphs: Vec<CsrGraph> = vec![];
-    let mut maps: Vec<Vec<Vertex>> = vec![];
-    let mut cur = g.clone();
-    let mut level = 0u64;
-    while cur.n() > coarsest {
-        // Coarsening-level cancellation boundary.
-        if cfg.cancel.is_cancelled() {
-            return vec![0 as Block; g.n()];
-        }
-        let (coarse, map) = coarsen_step_serial(&cur, lmax, seed ^ (level << 24));
-        if coarse.n() as f64 > cur.n() as f64 * 0.96 {
-            break;
-        }
-        graphs.push(cur);
-        maps.push(map);
-        cur = coarse;
-        level += 1;
-    }
+    let params = BuildParams { coarsest: cfg.coarsen.coarsest_for(k), lmax, seed };
+    let Some(hier) = CoarseHierarchy::build_serial(g, &params, &cfg.coarsen, &cfg.cancel) else {
+        // Cancelled mid-coarsening: any structurally valid mapping will
+        // do — the engine discards it.
+        return vec![0 as Block; g.n()];
+    };
 
     // Initial mapping: hierarchical multisection on the coarsest graph.
-    // Coarse vertex weights are chunky relative to L_max, so repair the
-    // balance explicitly before refining.
-    let mut mapping = sharedmap(&cur, m, eps, seed ^ 0xabcd, &cfg.init);
-    if !cfg.cancel.is_cancelled() {
-        force_balance_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), seed ^ 2);
-        lp_refine_serial(&cur, &mut mapping, k, lmax, &Objective::Comm(m), cfg.lp_rounds, seed ^ 1);
-    }
+    let mapping = sharedmap(hier.coarsest(), m, eps, seed ^ 0xabcd, &cfg.init);
 
-    // Uncoarsening with J-objective label propagation. A cancelled run
-    // still projects to the finest level but skips the refinement.
-    for lev in (0..maps.len()).rev() {
-        let fine = &graphs[lev];
-        let map = &maps[lev];
-        let mut fine_mapping = vec![0 as Block; fine.n()];
-        for v in 0..fine.n() {
-            fine_mapping[v] = mapping[map[v] as usize];
+    // Uncoarsening with J-objective label propagation. The coarsest
+    // level repairs balance explicitly first (coarse vertex weights are
+    // chunky relative to L_max). A cancelled run still projects to the
+    // finest level but skips the refinement.
+    let coarsest_level = hier.levels();
+    hier.uncoarsen_serial(mapping, |lev, gl, part| {
+        if cfg.cancel.is_cancelled() {
+            return;
         }
-        if !cfg.cancel.is_cancelled() {
-            let rounds = if lev == 0 { cfg.lp_rounds + cfg.finest_extra_rounds } else { cfg.lp_rounds };
-            force_balance_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), seed ^ 3);
-            lp_refine_serial(fine, &mut fine_mapping, k, lmax, &Objective::Comm(m), rounds, seed ^ (lev as u64) << 16);
+        if lev == coarsest_level {
+            force_balance_serial(gl, part, k, lmax, &Objective::Comm(m), seed ^ 2);
+            lp_refine_serial(gl, part, k, lmax, &Objective::Comm(m), cfg.lp_rounds, seed ^ 1);
+        } else {
+            let rounds =
+                if lev == 0 { cfg.lp_rounds + cfg.finest_extra_rounds } else { cfg.lp_rounds };
+            force_balance_serial(gl, part, k, lmax, &Objective::Comm(m), seed ^ 3);
+            lp_refine_serial(gl, part, k, lmax, &Objective::Comm(m), rounds, seed ^ (lev as u64) << 16);
         }
-        mapping = fine_mapping;
-    }
-    mapping
+    })
 }
 
 #[cfg(test)]

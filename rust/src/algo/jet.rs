@@ -2,23 +2,23 @@
 //! SISC 2024) — the partitioning engine inside GPU-HM and the edge-cut
 //! comparison point of §5.4.
 //!
-//! Multilevel: device preference matching (+ two-hop when < 75 % matched),
-//! CAS-hash contraction (Alg. 3), CPU initial partitioning on the ≤ 8·k
-//! coarsest graph (the paper delegates to METIS; we use the kaffpa-lite
-//! substrate), then per-level Jet refinement (Alg. 4–6) with the edge-cut
-//! objective and Jet's original negative-move filter.
+//! Multilevel, via the unified [`crate::multilevel`] subsystem: the
+//! configured coarsening scheme (preference matching + two-hop fallback,
+//! or cluster LP) with CAS-hash contraction, CPU initial partitioning on
+//! the ≤ 8·k coarsest graph (the paper delegates to METIS; we use the
+//! kaffpa-lite substrate), then per-level Jet refinement (Alg. 4–6) with
+//! the edge-cut objective and Jet's original negative-move filter.
 
-use crate::coarsen::{match_par::preference_matching, matched_fraction, matching_to_map, twohop::twohop_matching};
-use crate::coarsen::contract_cas::contract_cas;
-use crate::graph::{CsrGraph, EdgeList};
+use crate::graph::CsrGraph;
 use crate::initial::{recursive_kway, MlConfig};
 use crate::metrics::{Phase, PhaseBreakdown};
+use crate::multilevel::{CoarsenConfig, CoarseHierarchy};
 use crate::par::Pool;
 use crate::partition::l_max;
 use crate::refine::jet_loop::{jet_refine_with, JetConfig};
 use crate::refine::jet_lp::Filter;
 use crate::refine::{Objective, RefineWorkspace};
-use crate::{Block, Vertex};
+use crate::Block;
 
 /// Jet partitioner configuration.
 #[derive(Clone, Debug)]
@@ -27,10 +27,9 @@ pub struct JetPartConfig {
     pub iter_limit: usize,
     /// Negative-move filter constant `c`.
     pub c_factor: f64,
-    /// Coarsen until `coarsest_factor · k` vertices (paper: 8).
-    pub coarsest_factor: usize,
-    /// Matching rounds per level.
-    pub match_rounds: usize,
+    /// Coarsening stage (scheme, rounds, level cap, salt) — shared with
+    /// every other multilevel pipeline.
+    pub coarsen: CoarsenConfig,
     /// Cooperative cancellation, polled at every coarsening-level
     /// boundary (and inside each Jet refinement round via [`JetConfig`]).
     pub cancel: crate::cancel::CancelToken,
@@ -41,8 +40,7 @@ impl Default for JetPartConfig {
         JetPartConfig {
             iter_limit: 12,
             c_factor: 0.25,
-            coarsest_factor: 8,
-            match_rounds: 8,
+            coarsen: CoarsenConfig::device(),
             cancel: crate::cancel::CancelToken::default(),
         }
     }
@@ -63,76 +61,55 @@ pub fn jet_partition(
     eps: f64,
     seed: u64,
     cfg: &JetPartConfig,
+    phases: Option<&mut PhaseBreakdown>,
+) -> Vec<Block> {
+    jet_partition_with(pool, g, k, eps, seed, cfg, phases, None)
+}
+
+/// [`jet_partition`] over an optional prebuilt hierarchy (the engine's
+/// hierarchy cache). `prebuilt` must have been built for this graph with
+/// `cfg.coarsen` and this `(k, eps)`; when `None`, the hierarchy is
+/// built here (and its build phases land in `phases`).
+#[allow(clippy::too_many_arguments)]
+pub fn jet_partition_with(
+    pool: &Pool,
+    g: &CsrGraph,
+    k: usize,
+    eps: f64,
+    seed: u64,
+    cfg: &JetPartConfig,
     mut phases: Option<&mut PhaseBreakdown>,
+    prebuilt: Option<&CoarseHierarchy>,
 ) -> Vec<Block> {
     let total = g.total_vweight();
     let lmax = l_max(total, k, eps);
-    let coarsest = (cfg.coarsest_factor * k).max(64);
 
-    macro_rules! timed {
-        ($ph:expr, $e:expr) => {{
-            match phases.as_deref_mut() {
-                Some(p) => p.time($ph, || $e),
-                None => $e,
-            }
-        }};
-    }
-    macro_rules! timed_cpu {
-        ($ph:expr, $e:expr) => {{
-            match phases.as_deref_mut() {
-                Some(p) => p.time_cpu($ph, || $e),
-                None => $e,
-            }
-        }};
-    }
-
-    // Coarsening.
-    let mut graphs: Vec<CsrGraph> = vec![];
-    let mut edge_lists: Vec<EdgeList> = vec![];
-    let mut maps: Vec<Vec<Vertex>> = vec![];
-    let mut cur = g.clone();
-    let mut cur_el = timed!(Phase::Misc, {
-        // Modeled H2D upload of the CSR graph (xadj + adj + weights).
-        crate::par::ledger::charge(3, (cur.n() + 2 * cur.num_directed()) as u64);
-        EdgeList::build_par(pool, &cur)
-    });
-    let mut level = 0u64;
-    while cur.n() > coarsest {
-        // Coarsening-level cancellation boundary: the result is discarded
-        // by the engine, so any structurally valid assignment will do.
-        if cfg.cancel.is_cancelled() {
-            return vec![0 as Block; g.n()];
-        }
-        let mut mate = timed!(
-            Phase::Coarsening,
-            preference_matching(&cur, pool, lmax, seed ^ (level << 32), cfg.match_rounds)
-        );
-        if matched_fraction(&mate) < 0.75 {
-            timed_cpu!(Phase::Coarsening, {
-                twohop_matching(&cur, &mut mate, lmax);
-            });
-        }
-        let (map, nc) = matching_to_map(&mate);
-        if nc as f64 > cur.n() as f64 * 0.96 {
-            break; // stalled
-        }
-        let coarse = timed!(Phase::Contraction, contract_cas(pool, &cur, &cur_el, &map, nc));
-        let coarse_el = timed!(Phase::Misc, EdgeList::build_par(pool, &coarse));
-        graphs.push(cur);
-        edge_lists.push(cur_el);
-        maps.push(map);
-        cur = coarse;
-        cur_el = coarse_el;
-        level += 1;
-    }
+    let mut owned = None;
+    let Some(hier) = CoarseHierarchy::resolve(
+        prebuilt,
+        &mut owned,
+        pool,
+        g,
+        k,
+        lmax,
+        &cfg.coarsen,
+        &cfg.cancel,
+        phases.as_deref_mut(),
+    ) else {
+        // Cancelled mid-coarsening: the engine discards the result, so
+        // any structurally valid assignment will do.
+        return vec![0 as Block; g.n()];
+    };
 
     // Initial partitioning on the CPU.
-    let mut part = timed_cpu!(
-        Phase::InitialPartitioning,
-        recursive_kway(&cur, k, eps, seed ^ 0x1111, &MlConfig::fast())
-    );
+    let part = {
+        let run = || recursive_kway(hier.coarsest(), k, eps, seed ^ 0x1111, &MlConfig::fast());
+        match phases.as_deref_mut() {
+            Some(p) => p.time_cpu(Phase::InitialPartitioning, run),
+            None => run(),
+        }
+    };
 
-    // Refine the coarsest level too.
     let jet_cfg = JetConfig {
         iter_limit: cfg.iter_limit,
         filter: Filter::JetNegative { c_factor: cfg.c_factor },
@@ -142,39 +119,19 @@ pub fn jet_partition(
     };
     // One workspace reused across every level of the uncoarsening chain.
     let mut ws = RefineWorkspace::with_capacity(g.n(), k);
-    if !cfg.cancel.is_cancelled() {
-        timed!(Phase::RefineRebalance, {
-            jet_refine_with(
-                pool, &cur, &cur_el, &mut part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
-            )
-        });
-    }
-
-    // Uncoarsening. A cancelled run still projects down to the finest
-    // level (the mapping must stay structurally valid) but skips the
-    // per-level refinement.
-    for lev in (0..maps.len()).rev() {
-        let fine = &graphs[lev];
-        let el = &edge_lists[lev];
-        let map = &maps[lev];
-        let mut fine_part = vec![0 as Block; fine.n()];
-        timed!(Phase::Uncontraction, {
-            let fp = crate::par::SharedMut::new(&mut fine_part);
-            pool.parallel_for(fine.n(), |v| unsafe {
-                fp.write(v, part[map[v] as usize]);
-            });
-        });
+    // Uncoarsening: project + refine per level. A cancelled run still
+    // projects to the finest level (the mapping must stay structurally
+    // valid) but skips the per-level refinement.
+    let part = hier.uncoarsen(pool, part, phases.as_deref_mut(), |_lev, gl, el, p| {
         if !cfg.cancel.is_cancelled() {
-            timed!(Phase::RefineRebalance, {
-                jet_refine_with(
-                    pool, fine, el, &mut fine_part, k, lmax, &Objective::Cut, &jet_cfg, &mut ws,
-                )
-            });
+            jet_refine_with(pool, gl, el, p, k, lmax, &Objective::Cut, &jet_cfg, &mut ws);
         }
-        part = fine_part;
-    }
+    });
     // Modeled D2H download of the final partition.
-    timed!(Phase::Misc, crate::par::ledger::charge(1, part.len() as u64));
+    match phases.as_deref_mut() {
+        Some(p) => p.time(Phase::Misc, || crate::par::ledger::charge(1, part.len() as u64)),
+        None => crate::par::ledger::charge(1, part.len() as u64),
+    }
     part
 }
 
@@ -182,6 +139,8 @@ pub fn jet_partition(
 mod tests {
     use super::*;
     use crate::graph::gen;
+    use crate::multilevel::BuildParams;
+    use std::sync::Arc;
     use crate::partition::{edge_cut, is_balanced};
 
     #[test]
@@ -225,6 +184,7 @@ mod tests {
         assert!(phases.device_ms(Phase::Contraction) > 0.0);
         assert!(phases.device_ms(Phase::InitialPartitioning) > 0.0);
         assert!(phases.device_ms(Phase::RefineRebalance) > 0.0);
+        assert!(!phases.matched_fractions().is_empty(), "matched fractions recorded per level");
     }
 
     #[test]
@@ -233,5 +193,29 @@ mod tests {
         let pool = Pool::new(1);
         let part = jet_partition(&pool, &g, 2, 0.10, 1, &JetPartConfig::default(), None);
         assert!(is_balanced(&g, &part, 2, 0.11));
+    }
+
+    #[test]
+    fn prebuilt_hierarchy_is_bit_identical_to_inline_build() {
+        let g = gen::rgg(2_500, 0.05, 6);
+        let pool = Pool::new(1);
+        let cfg = JetPartConfig::default();
+        let params = BuildParams {
+            coarsest: cfg.coarsen.coarsest_for(8),
+            lmax: l_max(g.total_vweight(), 8, 0.03),
+            seed: cfg.coarsen.salt,
+        };
+        let hier = CoarseHierarchy::build(
+            &pool,
+            Arc::new(g.clone()),
+            &params,
+            &cfg.coarsen,
+            &crate::cancel::CancelToken::new(),
+            None,
+        )
+        .unwrap();
+        let fresh = jet_partition(&pool, &g, 8, 0.03, 5, &cfg, None);
+        let reused = jet_partition_with(&pool, &g, 8, 0.03, 5, &cfg, None, Some(&hier));
+        assert_eq!(fresh, reused, "cached-hierarchy path must be bit-identical");
     }
 }

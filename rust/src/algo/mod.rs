@@ -108,7 +108,7 @@ pub fn run_algorithm(
     let ctx = EngineCtx::host_only(pool.clone());
     // Solvers never touch spec.graph; the caller already resolved `g`.
     let spec = MapSpec::named("<caller-resolved>").eps(eps).seed(seed);
-    crate::engine::solver(algo).solve(&ctx, g, m, &spec, &crate::cancel::CancelToken::new())
+    crate::engine::solver(algo).solve(&ctx, g, m, &spec, &crate::cancel::CancelToken::new(), None)
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 
 use crate::algo::Algorithm;
 use crate::engine::{EngineConfig, MapSpec, Refinement};
+use crate::multilevel::SchemeKind;
 use crate::topology::{Hierarchy, Machine};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -32,6 +33,9 @@ pub struct RunConfig {
     pub algorithm: Option<Algorithm>,
     /// Refinement flavor (`refinement = standard|strong`).
     pub refinement: Refinement,
+    /// Multilevel coarsening scheme
+    /// (`coarsening = matching|cluster|auto`).
+    pub coarsening: SchemeKind,
     /// Run the QAP polish stage (`polish = 1`).
     pub polish: bool,
     /// Seeds (the paper averages over five).
@@ -58,6 +62,7 @@ impl Default for RunConfig {
             eps: 0.03,
             algorithm: Some(Algorithm::GpuIm),
             refinement: Refinement::Standard,
+            coarsening: SchemeKind::Auto,
             polish: false,
             seeds: vec![1, 2, 3, 4, 5],
             threads: 0,
@@ -90,6 +95,7 @@ impl RunConfig {
             .seeds(self.seeds.clone())
             .algo(self.algorithm)
             .refinement(self.refinement)
+            .coarsening(self.coarsening)
             .polish(self.polish)
             .options(self.options.clone());
         spec.topology = self.topology.clone();
@@ -135,6 +141,7 @@ impl RunConfig {
                     }
                 }
                 "refinement" => cfg.refinement = Refinement::from_name(&value)?,
+                "coarsening" => cfg.coarsening = SchemeKind::from_name(&value)?,
                 "polish" => cfg.polish = parse_bool(&value).context("polish")?,
                 "seeds" => {
                     cfg.seeds = value
@@ -255,6 +262,15 @@ mod tests {
         assert_eq!(ecfg.queue_cap, 32);
         assert_eq!(ecfg.threads, 2);
         assert!(RunConfig::from_kv_text("workers = lots").is_err());
+    }
+
+    #[test]
+    fn coarsening_key_lowers_to_spec() {
+        let cfg = RunConfig::from_kv_text("graph = rgg15\ncoarsening = cluster\n").unwrap();
+        assert_eq!(cfg.coarsening, SchemeKind::Cluster);
+        assert_eq!(cfg.to_spec("rgg15").coarsening, SchemeKind::Cluster);
+        assert_eq!(RunConfig::default().coarsening, SchemeKind::Auto);
+        assert!(RunConfig::from_kv_text("coarsening = frob").is_err());
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod service;
 
 use crate::algo::Algorithm;
 use crate::engine::{GraphSource, MapOutcome, MapSpec, Refinement};
+use crate::multilevel::SchemeKind;
 use anyhow::{bail, Result};
 
 pub use crate::engine::route;
@@ -47,6 +48,9 @@ pub struct MapRequest {
     pub eps: f64,
     pub seed: u64,
     pub refinement: Refinement,
+    /// Multilevel coarsening scheme (`coarsening=matching|cluster|auto`
+    /// on the wire).
+    pub coarsening: SchemeKind,
     /// Run the QAP polish stage after mapping.
     pub polish: bool,
     /// Return the full mapping vector in the reply.
@@ -66,6 +70,7 @@ impl Default for MapRequest {
             eps: 0.03,
             seed: 1,
             refinement: Refinement::Standard,
+            coarsening: SchemeKind::Auto,
             polish: false,
             return_mapping: false,
             options: std::collections::BTreeMap::new(),
@@ -83,6 +88,7 @@ impl MapRequest {
             .seed(self.seed)
             .algo(self.algorithm)
             .refinement(self.refinement)
+            .coarsening(self.coarsening)
             .polish(self.polish)
             .return_mapping(self.return_mapping)
             .options(self.options.clone());
@@ -116,6 +122,7 @@ impl MapRequest {
             eps: spec.eps,
             seed: spec.primary_seed(),
             refinement: spec.refinement,
+            coarsening: spec.coarsening,
             polish: spec.polish,
             return_mapping: spec.return_mapping,
             options: spec.options.clone(),
@@ -147,6 +154,12 @@ pub struct ServiceMetrics {
     pub deadline_missed: u64,
     /// Submits rejected because the bounded job queue was full.
     pub busy_rejections: u64,
+    /// Jobs whose multilevel hierarchy came from the engine's hierarchy
+    /// cache (cumulative).
+    pub hierarchy_cache_hits: u64,
+    /// Jobs that built (and cached) their multilevel hierarchy
+    /// (cumulative).
+    pub hierarchy_cache_misses: u64,
     /// Jobs currently waiting in the queue (gauge).
     pub queue_depth: usize,
     /// Jobs currently being solved (gauge).
@@ -178,6 +191,7 @@ mod tests {
             eps: 0.05,
             seed: 9,
             refinement: Refinement::Strong,
+            coarsening: SchemeKind::Cluster,
             polish: true,
             return_mapping: true,
             options: std::collections::BTreeMap::new(),

@@ -33,6 +33,7 @@ use super::service::{JobOptions, Service};
 use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::algo::Algorithm;
 use crate::engine::{JobState, JobStatus, Refinement, SubmitError};
+use crate::multilevel::SchemeKind;
 use crate::graph::CsrGraph;
 use anyhow::{bail, Context, Result};
 use std::io::Write;
@@ -96,6 +97,7 @@ fn parse_job_body<'a>(
             "eps" => req.eps = v.parse()?,
             "seed" => req.seed = v.parse()?,
             "refinement" => req.refinement = Refinement::from_name(v)?,
+            "coarsening" => req.coarsening = SchemeKind::from_name(v)?,
             "polish" => req.polish = v == "1" || v == "true",
             "mapping" => req.return_mapping = v == "1" || v == "true",
             "priority" => opts.priority = v.parse().context("priority")?,
@@ -281,6 +283,9 @@ pub fn render_response(r: &MapReply) -> String {
         r.id, o.algorithm.name(), o.n, o.k, o.comm_cost, o.imbalance, o.host_ms, o.device_ms,
         o.polish_improvement
     );
+    if let Some(cached) = o.hierarchy_cache {
+        s.push_str(if cached { " hier_cache=hit" } else { " hier_cache=miss" });
+    }
     if !o.mapping.is_empty() {
         s.push_str(" mapping=");
         let parts: Vec<String> = o.mapping.iter().map(|b| b.to_string()).collect();
@@ -294,13 +299,16 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
     let per: Vec<String> = m.per_algorithm.iter().map(|(k, v)| format!("{k}:{v}")).collect();
     format!(
         "ok requests={} failures={} completed={} cancelled={} deadline_missed={} \
-         busy_rejections={} queue_depth={} in_flight={} host_ms={:.1} device_ms={:.1} per_algorithm={}",
+         busy_rejections={} hier_hits={} hier_misses={} queue_depth={} in_flight={} \
+         host_ms={:.1} device_ms={:.1} per_algorithm={}",
         m.requests,
         m.failures,
         m.completed,
         m.cancelled,
         m.deadline_missed,
         m.busy_rejections,
+        m.hierarchy_cache_hits,
+        m.hierarchy_cache_misses,
         m.queue_depth,
         m.in_flight,
         m.total_host_ms,
@@ -635,6 +643,21 @@ mod tests {
     }
 
     #[test]
+    fn parses_coarsening_key() {
+        let Command::Map { req, .. } =
+            parse_command("map instance=x coarsening=cluster").unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(req.coarsening, SchemeKind::Cluster);
+        assert_eq!(req.to_spec().coarsening, SchemeKind::Cluster);
+        assert!(parse_command("map instance=x coarsening=bogus").is_err());
+        // Default when absent.
+        let Command::Map { req, .. } = parse_command("map instance=x").unwrap() else { panic!() };
+        assert_eq!(req.coarsening, SchemeKind::Auto);
+    }
+
+    #[test]
     fn parses_refinement_and_solver_options() {
         let Command::Map { req, .. } =
             parse_command("map instance=x refinement=strong opt.adaptive=0").unwrap()
@@ -694,10 +717,12 @@ mod tests {
                 device_ms: 0.2,
                 phases: None,
                 polish_improvement: 1.0,
+                hierarchy_cache: Some(true),
             },
         };
         let line = render_response(&r);
         assert!(line.starts_with("ok id=3 algorithm=gpu-hm"));
+        assert!(line.contains(" hier_cache=hit"));
         assert!(line.contains("mapping=0,1,2,3"));
     }
 

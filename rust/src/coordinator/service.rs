@@ -151,6 +151,7 @@ impl Service {
             graph_cache_cap: cfg.graph_cache_cap,
             workers: cfg.workers,
             queue_cap: cfg.queue_cap,
+            ..EngineConfig::default()
         });
         Service {
             engine,
@@ -290,6 +291,8 @@ impl Service {
             cancelled: c.cancelled.load(Ordering::Relaxed),
             deadline_missed: c.deadline_missed.load(Ordering::Relaxed),
             busy_rejections: c.busy_rejections.load(Ordering::Relaxed),
+            hierarchy_cache_hits: self.engine.hierarchy_cache_hits(),
+            hierarchy_cache_misses: self.engine.hierarchy_cache_misses(),
             queue_depth: self.engine.queue_depth(),
             in_flight: self.engine.in_flight(),
             total_host_ms: f64::from_bits(c.host_ms_bits.load(Ordering::Relaxed)),
@@ -503,6 +506,26 @@ mod tests {
         assert_eq!(b.outcome.n, g.n());
         assert!(svc.drop_graph("sess"));
         assert!(svc.submit(req).is_err(), "dropped session graph must not resolve");
+    }
+
+    #[test]
+    fn second_submit_on_a_pinned_graph_reports_a_hierarchy_cache_hit() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let g = Arc::new(crate::graph::gen::rgg(2_000, 0.05, 7));
+        svc.put_graph("sess", g);
+        let mut req = small_request("sess");
+        req.hierarchy = "2:2".into();
+        req.distance = "1:10".into();
+        let first = svc.submit(req.clone()).unwrap();
+        assert!(first.outcome.hierarchy_cache == Some(false), "first job builds");
+        let m = svc.metrics();
+        assert_eq!((m.hierarchy_cache_hits, m.hierarchy_cache_misses), (0, 1));
+        req.seed = 2;
+        let second = svc.submit(req).unwrap();
+        assert_eq!(second.outcome.hierarchy_cache, Some(true), "repeat job must hit");
+        let m = svc.metrics();
+        assert_eq!(m.hierarchy_cache_hits, 1);
+        assert_eq!(m.hierarchy_cache_misses, 1);
     }
 
     #[test]

@@ -5,8 +5,17 @@
 //! uploaded once and mapped many times (`graph put` on the wire). Pinned
 //! entries are exempt from LRU eviction and shared — as one
 //! `Arc<CsrGraph>` — across jobs, workers and connections.
+//!
+//! Alongside it lives the [`HierarchyCache`]: bounded LRU of built
+//! [`CoarseHierarchy`] instances keyed by **graph identity** (the
+//! resolved `Arc`, compared by pointer — entries hold the `Arc` strongly,
+//! so an address can never be reused while its entry lives) plus the
+//! full [`HierarchyParams`]. Repeat jobs against a pinned session graph
+//! — and `run_matrix` seed sweeps over one in-memory graph — skip the
+//! Coarsening/Contraction phases entirely.
 
 use crate::graph::CsrGraph;
+use crate::multilevel::{CoarseHierarchy, HierarchyParams};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -92,9 +101,11 @@ impl GraphStore {
         self.pinned.insert(name, g);
     }
 
-    /// Drop a pinned graph; false when `name` was not pinned.
-    pub fn unpin(&mut self, name: &str) -> bool {
-        self.pinned.remove(name).is_some()
+    /// Drop a pinned graph, returning it so the caller can purge
+    /// derived state (hierarchy-cache entries keyed on its identity);
+    /// `None` when `name` was not pinned.
+    pub fn unpin(&mut self, name: &str) -> Option<Arc<CsrGraph>> {
+        self.pinned.remove(name)
     }
 
     /// Names of the pinned session graphs, sorted.
@@ -110,6 +121,78 @@ impl GraphStore {
 
     pub fn cached_len(&self) -> usize {
         self.lru.len()
+    }
+}
+
+struct HierEntry {
+    graph: Arc<CsrGraph>,
+    params: HierarchyParams,
+    hier: Arc<CoarseHierarchy>,
+    stamp: u64,
+}
+
+/// Bounded LRU of built hierarchies. Lookup is a linear scan — the cap
+/// is small and an entry is worth an entire coarsening pipeline.
+pub struct HierarchyCache {
+    cap: usize,
+    stamp: u64,
+    entries: Vec<HierEntry>,
+}
+
+impl HierarchyCache {
+    pub fn new(cap: usize) -> Self {
+        HierarchyCache { cap: cap.max(1), stamp: 0, entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn position(&self, g: &Arc<CsrGraph>, params: &HierarchyParams) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| Arc::ptr_eq(&e.graph, g) && e.params == *params)
+    }
+
+    /// Look up the hierarchy for `(graph identity, params)`, refreshing
+    /// its recency on a hit.
+    pub fn get(&mut self, g: &Arc<CsrGraph>, params: &HierarchyParams) -> Option<Arc<CoarseHierarchy>> {
+        let pos = self.position(g, params)?;
+        self.stamp += 1;
+        self.entries[pos].stamp = self.stamp;
+        Some(self.entries[pos].hier.clone())
+    }
+
+    /// Insert (or refresh) an entry, evicting the least recently used
+    /// one when full.
+    pub fn insert(&mut self, g: Arc<CsrGraph>, params: HierarchyParams, hier: Arc<CoarseHierarchy>) {
+        self.stamp += 1;
+        if let Some(pos) = self.position(&g, &params) {
+            self.entries[pos].hier = hier;
+            self.entries[pos].stamp = self.stamp;
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            if let Some(oldest) =
+                self.entries.iter().enumerate().min_by_key(|(_, e)| e.stamp).map(|(i, _)| i)
+            {
+                self.entries.swap_remove(oldest);
+            }
+        }
+        let stamp = self.stamp;
+        self.entries.push(HierEntry { graph: g, params, hier, stamp });
+    }
+
+    /// Drop every entry built for `g` (by identity). Called when a
+    /// session graph is unpinned: the entries could never be hit again,
+    /// yet would keep the graph — and its whole hierarchy — alive until
+    /// LRU churn happened to evict them.
+    pub fn purge_graph(&mut self, g: &Arc<CsrGraph>) {
+        self.entries.retain(|e| !Arc::ptr_eq(&e.graph, g));
     }
 }
 
@@ -164,6 +247,41 @@ mod tests {
     }
 
     #[test]
+    fn hierarchy_cache_keys_on_graph_identity_and_params() {
+        use crate::cancel::CancelToken;
+        use crate::multilevel::{CoarsenConfig, SchemeKind};
+        let build = |g: &Arc<CsrGraph>, params: &HierarchyParams| {
+            Arc::new(
+                CoarseHierarchy::build_serial(g, &params.build, &params.cfg, &CancelToken::new())
+                    .unwrap(),
+            )
+        };
+        let pa = HierarchyParams::device(&g(), 2, 0.03, CoarsenConfig::device());
+        let pb = HierarchyParams::device(
+            &g(),
+            2,
+            0.03,
+            CoarsenConfig { scheme: SchemeKind::Cluster, ..CoarsenConfig::device() },
+        );
+        let (g1, g2, g3) = (g(), g(), g());
+        let mut c = HierarchyCache::new(2);
+        c.insert(g1.clone(), pa.clone(), build(&g1, &pa));
+        assert!(c.get(&g1, &pa).is_some());
+        // Same content, different Arc: identity miss.
+        assert!(c.get(&g2, &pa).is_none());
+        // Same graph, different scheme: param miss.
+        assert!(c.get(&g1, &pb).is_none());
+        // Bounded: inserting past the cap evicts the LRU entry.
+        c.insert(g2.clone(), pa.clone(), build(&g2, &pa));
+        assert!(c.get(&g1, &pa).is_some(), "refresh g1 so g2 is the LRU entry");
+        c.insert(g3.clone(), pa.clone(), build(&g3, &pa));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&g2, &pa).is_none(), "LRU entry evicted");
+        assert!(c.get(&g1, &pa).is_some());
+        assert!(c.get(&g3, &pa).is_some());
+    }
+
+    #[test]
     fn pinned_graphs_survive_lru_churn_and_shadow_cached_names() {
         let mut s = GraphStore::new(1);
         let pinned = g();
@@ -176,7 +294,7 @@ mod tests {
         s.insert_cached("session".into(), g());
         assert!(Arc::ptr_eq(&s.get("session").unwrap(), &pinned));
         assert_eq!(s.pinned_names(), vec!["session".to_string()]);
-        assert!(s.unpin("session"));
-        assert!(!s.unpin("session"));
+        assert!(Arc::ptr_eq(&s.unpin("session").unwrap(), &pinned));
+        assert!(s.unpin("session").is_none());
     }
 }

@@ -44,6 +44,7 @@ pub use spec::{GraphSource, MapSpec, Refinement};
 use crate::algo::{qap, Algorithm};
 use crate::graph::{gen, io, CsrGraph};
 use crate::metrics::PhaseBreakdown;
+use crate::multilevel::{CoarseHierarchy, HierarchyHandle, HierarchyParams};
 use crate::par::Pool;
 use crate::partition::{block_comm_matrix, comm_cost_blocks};
 use crate::runtime::{offload, Runtime};
@@ -81,6 +82,11 @@ pub struct MapOutcome {
     pub phases: Option<PhaseBreakdown>,
     /// `J` improvement from the polish stage (0 when disabled).
     pub polish_improvement: f64,
+    /// Whether this job's multilevel hierarchy came from the engine's
+    /// hierarchy cache: `Some(true)` = cache hit (Coarsening/Contraction
+    /// skipped), `Some(false)` = built by this job, `None` = the solver
+    /// has no engine-cacheable hierarchy.
+    pub hierarchy_cache: Option<bool>,
 }
 
 /// One solver in the registry. `solve` runs the algorithm end to end and
@@ -96,6 +102,21 @@ pub trait Solver: Sync {
         self.algorithm().name()
     }
 
+    /// The multilevel hierarchy this solver would build for
+    /// `(g, m, spec)` — the engine uses it to serve and populate the
+    /// hierarchy cache before calling [`Solver::solve`]. `None` (the
+    /// default) for solvers without an engine-cacheable hierarchy
+    /// (multisection recursion, serial baselines). Implementations must
+    /// return exactly the parameters their `solve` builds with, or the
+    /// cached hierarchy would diverge from a fresh run.
+    fn hierarchy_params(&self, _g: &CsrGraph, _m: &Machine, _spec: &MapSpec) -> Option<HierarchyParams> {
+        None
+    }
+
+    /// Run the algorithm end to end. `hier` is the prebuilt multilevel
+    /// hierarchy for solvers that declared [`Solver::hierarchy_params`]
+    /// (`None` when driven outside the engine); cached handles skip the
+    /// Coarsening/Contraction phases entirely.
     fn solve(
         &self,
         ctx: &EngineCtx,
@@ -103,6 +124,7 @@ pub trait Solver: Sync {
         m: &Machine,
         spec: &MapSpec,
         cancel: &CancelToken,
+        hier: Option<&HierarchyHandle>,
     ) -> MapOutcome;
 }
 
@@ -131,6 +153,10 @@ pub struct EngineConfig {
     /// Graph cache entry cap (LRU tier; pinned session graphs live
     /// outside it).
     pub graph_cache_cap: usize,
+    /// Hierarchy cache entry cap (bounded LRU of built multilevel
+    /// hierarchies, keyed by graph identity + coarsening parameters).
+    /// Each entry holds roughly 2× its graph, so the cap stays small.
+    pub hierarchy_cache_cap: usize,
     /// Engine workers draining the job queue (0 = 1). Each owns its own
     /// device pool and PJRT runtime; jobs on different workers overlap.
     pub workers: usize,
@@ -146,6 +172,7 @@ impl Default for EngineConfig {
             threads: 0,
             artifacts_dir: "artifacts".into(),
             graph_cache_cap: 64,
+            hierarchy_cache_cap: 8,
             workers: 1,
             queue_cap: 256,
         }
@@ -225,6 +252,13 @@ struct EngineShared {
     next_seq: AtomicU64,
     in_flight: AtomicUsize,
     graphs: Mutex<cache::GraphStore>,
+    /// Built multilevel hierarchies, keyed by graph identity + coarsening
+    /// parameters (bounded LRU). Repeat jobs on a session graph — and
+    /// seed sweeps, whose coarsening salt is seed-independent — skip the
+    /// Coarsening/Contraction phases entirely.
+    hierarchies: Mutex<cache::HierarchyCache>,
+    hierarchy_hits: AtomicU64,
+    hierarchy_misses: AtomicU64,
     /// Parsed machines keyed by `topology=` spec string (bounded FIFO):
     /// `file:PATH` models re-read and re-validate an O(k²) table on every
     /// parse, which a long-lived `serve` worker must not pay per job.
@@ -281,6 +315,36 @@ impl EngineShared {
         Ok(m)
     }
 
+    /// The hierarchy for `(graph identity, params)`: served from the
+    /// bounded cache on a hit, built on this worker's pool (and
+    /// inserted) on a miss. `None` means the build was cancelled.
+    fn hierarchy_for(
+        &self,
+        ctx: &EngineCtx,
+        g: &Arc<CsrGraph>,
+        params: &HierarchyParams,
+        cancel: &CancelToken,
+    ) -> Option<HierarchyHandle> {
+        if let Some(hier) = lock(&self.hierarchies).get(g, params) {
+            self.hierarchy_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(HierarchyHandle { hier, cached: true });
+        }
+        // Build outside the lock: coarsening a big graph must not stall
+        // every other worker's lookups. Two workers racing on the same
+        // key build identical hierarchies; the second insert wins.
+        let hier = Arc::new(CoarseHierarchy::build(
+            ctx.pool(),
+            g.clone(),
+            &params.build,
+            &params.cfg,
+            cancel,
+            None,
+        )?);
+        self.hierarchy_misses.fetch_add(1, Ordering::Relaxed);
+        lock(&self.hierarchies).insert(g.clone(), params.clone(), hier.clone());
+        Some(HierarchyHandle { hier, cached: false })
+    }
+
     /// Solve one spec on this worker's ctx. `Ok(None)` means the token
     /// tripped before a result was produced (the job is not `Done`).
     fn execute(
@@ -307,7 +371,16 @@ impl EngineShared {
         let g = self.resolve_graph(&spec.graph)?;
         let m = self.resolve_machine(spec)?;
         let algo = spec.resolve_algorithm(g.n());
-        let mut out = registry::solver(algo).solve(ctx, &g, &m, spec, cancel);
+        let solver = registry::solver(algo);
+        let hier = match solver.hierarchy_params(&g, &m, spec) {
+            Some(params) => match self.hierarchy_for(ctx, &g, &params, cancel) {
+                Some(h) => Some(h),
+                // Cancelled mid-coarsening — the job is not `Done`.
+                None => return Ok(None),
+            },
+            None => None,
+        };
+        let mut out = solver.solve(ctx, &g, &m, spec, cancel, hier.as_ref());
         if cancel.is_cancelled() {
             return Ok(None);
         }
@@ -430,6 +503,9 @@ impl Engine {
             next_seq: AtomicU64::new(0),
             in_flight: AtomicUsize::new(0),
             graphs: Mutex::new(cache::GraphStore::new(cfg.graph_cache_cap)),
+            hierarchies: Mutex::new(cache::HierarchyCache::new(cfg.hierarchy_cache_cap)),
+            hierarchy_hits: AtomicU64::new(0),
+            hierarchy_misses: AtomicU64::new(0),
             machines: Mutex::new(Vec::new()),
             cfg,
         });
@@ -562,9 +638,16 @@ impl Engine {
         lock(&self.shared.graphs).pin(name.into(), g);
     }
 
-    /// Unpin a session graph; false when `name` was not pinned.
+    /// Unpin a session graph; false when `name` was not pinned. Also
+    /// purges the dropped graph's hierarchy-cache entries — they could
+    /// never be hit again (identity is gone) but would otherwise pin the
+    /// graph and its hierarchy in memory until LRU churn.
     pub fn drop_graph(&self, name: &str) -> bool {
-        lock(&self.shared.graphs).unpin(name)
+        let removed = lock(&self.shared.graphs).unpin(name);
+        if let Some(g) = &removed {
+            lock(&self.shared.hierarchies).purge_graph(g);
+        }
+        removed.is_some()
     }
 
     /// Names of the pinned session graphs, sorted.
@@ -575,6 +658,23 @@ impl Engine {
     /// Number of graphs in the LRU cache tier (pinned graphs excluded).
     pub fn cached_graphs(&self) -> usize {
         lock(&self.shared.graphs).cached_len()
+    }
+
+    /// Number of multilevel hierarchies in the bounded hierarchy cache.
+    pub fn cached_hierarchies(&self) -> usize {
+        lock(&self.shared.hierarchies).len()
+    }
+
+    /// Jobs whose multilevel hierarchy was served from the cache
+    /// (cumulative since engine start).
+    pub fn hierarchy_cache_hits(&self) -> u64 {
+        self.shared.hierarchy_hits.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that had to build (and cache) their multilevel hierarchy
+    /// (cumulative since engine start).
+    pub fn hierarchy_cache_misses(&self) -> u64 {
+        self.shared.hierarchy_misses.load(Ordering::Relaxed)
     }
 
     /// Jobs waiting in the queue.
@@ -717,6 +817,54 @@ mod tests {
         assert_eq!(e.cached_graphs(), 0, "pinned graphs bypass the LRU tier");
         assert!(e.drop_graph("session_grid"));
         assert!(e.map(&MapSpec::named("session_grid")).is_err(), "dropped graph no longer resolves");
+    }
+
+    #[test]
+    fn hierarchy_cache_serves_repeat_jobs_on_pinned_graphs() {
+        use crate::metrics::Phase;
+        let e = engine();
+        let g = Arc::new(gen::rgg(2_000, 0.05, 3));
+        e.put_graph("sess", g.clone());
+        let spec = MapSpec::named("sess")
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(Algorithm::GpuIm))
+            .seed(1);
+        let first = e.map(&spec).unwrap();
+        assert_eq!(first.hierarchy_cache, Some(false), "first job builds the hierarchy");
+        assert_eq!((e.hierarchy_cache_misses(), e.hierarchy_cache_hits()), (1, 0));
+        assert_eq!(e.cached_hierarchies(), 1);
+        let p1 = first.phases.as_ref().unwrap();
+        assert!(p1.device_ms(Phase::Coarsening) > 0.0);
+        assert!(p1.device_ms(Phase::Contraction) > 0.0);
+        // Second job — different seed, same coarsening key (the salt is
+        // deliberately seed-independent) — skips Coarsening/Contraction
+        // entirely via the cache.
+        let second = e.map(&spec.clone().seed(2)).unwrap();
+        assert_eq!(second.hierarchy_cache, Some(true));
+        assert_eq!(e.hierarchy_cache_hits(), 1);
+        let p2 = second.phases.as_ref().unwrap();
+        assert!(p2.device_ms(Phase::Coarsening) == 0.0, "cache hit must skip coarsening");
+        assert!(p2.device_ms(Phase::Contraction) == 0.0, "cache hit must skip contraction");
+        // Determinism parity: a seed-1 rerun through the cache is
+        // bit-identical to the cold run that populated it.
+        let again = e.map(&spec).unwrap();
+        assert_eq!(again.mapping, first.mapping);
+        assert_eq!(again.comm_cost, first.comm_cost);
+    }
+
+    #[test]
+    fn coarsening_scheme_is_part_of_the_hierarchy_key() {
+        let e = engine();
+        let g = Arc::new(gen::grid2d(30, 30, false));
+        e.put_graph("sess", g);
+        let base = MapSpec::named("sess").hierarchy("2:2").distance("1:10").algo(Some(Algorithm::GpuIm));
+        e.map(&base.clone().coarsening(crate::multilevel::SchemeKind::Matching)).unwrap();
+        e.map(&base.clone().coarsening(crate::multilevel::SchemeKind::Cluster)).unwrap();
+        assert_eq!(e.hierarchy_cache_misses(), 2, "different schemes must not share entries");
+        assert_eq!(e.hierarchy_cache_hits(), 0);
+        e.map(&base.coarsening(crate::multilevel::SchemeKind::Cluster)).unwrap();
+        assert_eq!(e.hierarchy_cache_hits(), 1);
     }
 
     #[test]

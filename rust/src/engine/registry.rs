@@ -6,6 +6,7 @@ use super::{CancelToken, EngineCtx, MapOutcome, MapSpec, Solver};
 use crate::algo::{gpu_hm, gpu_im, intmap, jet, sharedmap, Algorithm};
 use crate::graph::CsrGraph;
 use crate::metrics::PhaseBreakdown;
+use crate::multilevel::{CoarsenConfig, HierarchyHandle, HierarchyParams};
 use crate::par::cost::DeviceTimer;
 use crate::partition::{comm_cost, imbalance};
 use crate::topology::Machine;
@@ -39,7 +40,16 @@ fn measured(
         device_ms,
         phases: if algo.is_device() { Some(phases) } else { None },
         polish_improvement: 0.0,
+        hierarchy_cache: None,
     }
+}
+
+/// The coarsening configuration of the device multilevel pipelines for a
+/// spec — the single definition both [`Solver::hierarchy_params`] and the
+/// solver configs derive from, so the cache key can never diverge from
+/// what `solve` actually builds.
+fn device_coarsen(spec: &MapSpec) -> CoarsenConfig {
+    CoarsenConfig { scheme: spec.coarsening, ..CoarsenConfig::device() }
 }
 
 /// GPU hierarchical multisection (paper Alg. 2 with Jet). Honors the
@@ -64,11 +74,16 @@ impl Solver for GpuHmSolver {
         m: &Machine,
         spec: &MapSpec,
         cancel: &CancelToken,
+        _hier: Option<&HierarchyHandle>,
     ) -> MapOutcome {
         let mut cfg = if self.ultra { gpu_hm::GpuHmConfig::ultra() } else { gpu_hm::GpuHmConfig::default_flavor() };
         if let Some(adaptive) = spec.opt_bool("adaptive") {
             cfg.adaptive = adaptive;
         }
+        // The multisection recursion partitions fresh subgraphs at every
+        // node, so GPU-HM has no engine-cacheable hierarchy; the scheme
+        // knob still reaches the inner Jet partitioner.
+        cfg.jet.coarsen = device_coarsen(spec);
         cfg.cancel = cancel.clone();
         cfg.jet.cancel = cancel.clone();
         let seed = spec.primary_seed();
@@ -88,6 +103,10 @@ impl Solver for GpuImSolver {
         Algorithm::GpuIm
     }
 
+    fn hierarchy_params(&self, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> Option<HierarchyParams> {
+        Some(HierarchyParams::device(g, m.k(), spec.eps, device_coarsen(spec)))
+    }
+
     fn solve(
         &self,
         ctx: &EngineCtx,
@@ -95,17 +114,38 @@ impl Solver for GpuImSolver {
         m: &Machine,
         spec: &MapSpec,
         cancel: &CancelToken,
+        hier: Option<&HierarchyHandle>,
     ) -> MapOutcome {
-        let mut cfg = gpu_im::GpuImConfig::default();
+        let mut cfg =
+            gpu_im::GpuImConfig { coarsen: device_coarsen(spec), ..gpu_im::GpuImConfig::default() };
         if let Some(v) = spec.opt_bool("rebalance_comm_obj") {
             cfg.rebalance_with_comm_obj = v;
         }
         cfg.cancel = cancel.clone();
         cfg.init.cancel = cancel.clone();
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, m, seed, |ph| {
-            gpu_im::gpu_im(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph))
-        })
+        let mut out = measured(self.algorithm(), g, m, seed, |ph| match hier {
+            Some(h) => {
+                if !h.cached {
+                    // This job triggered the build: its phase times (and
+                    // the modeled H2D charge) belong to this outcome.
+                    ph.merge(h.hier.phases());
+                }
+                gpu_im::gpu_im_with(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph), Some(h.hier.as_ref()))
+            }
+            None => gpu_im::gpu_im(ctx.pool(), g, m, spec.eps, seed, &cfg, Some(ph)),
+        });
+        if let Some(h) = hier {
+            if !h.cached {
+                // The engine built the hierarchy just before this solve
+                // (outside the timer): its wall time belongs to this
+                // job's host_ms; device time is already in the merged
+                // phase breakdown.
+                out.host_ms += h.hier.phases().total_host_ms();
+            }
+        }
+        out.hierarchy_cache = hier.map(|h| h.cached);
+        out
     }
 }
 
@@ -130,8 +170,10 @@ impl Solver for SharedMapSolver {
         m: &Machine,
         spec: &MapSpec,
         cancel: &CancelToken,
+        _hier: Option<&HierarchyHandle>,
     ) -> MapOutcome {
         let mut cfg = if self.strong { sharedmap::SharedMapConfig::strong() } else { sharedmap::SharedMapConfig::fast() };
+        cfg.ml.coarsen.scheme = spec.coarsening;
         cfg.cancel = cancel.clone();
         let seed = spec.primary_seed();
         measured(self.algorithm(), g, m, seed, |_ph| sharedmap::sharedmap(g, m, spec.eps, seed, &cfg))
@@ -159,8 +201,10 @@ impl Solver for IntMapSolver {
         m: &Machine,
         spec: &MapSpec,
         cancel: &CancelToken,
+        _hier: Option<&HierarchyHandle>,
     ) -> MapOutcome {
         let mut cfg = if self.strong { intmap::IntMapConfig::strong() } else { intmap::IntMapConfig::fast() };
+        cfg.coarsen.scheme = spec.coarsening;
         cfg.cancel = cancel.clone();
         cfg.init.cancel = cancel.clone();
         let seed = spec.primary_seed();
@@ -183,6 +227,13 @@ impl Solver for JetSolver {
         }
     }
 
+    fn hierarchy_params(&self, g: &CsrGraph, m: &Machine, spec: &MapSpec) -> Option<HierarchyParams> {
+        // Identical parameters to GPU-IM on the same (graph, k, eps), so
+        // the two solvers share cache entries — the hierarchy is
+        // objective-agnostic.
+        Some(HierarchyParams::device(g, m.k(), spec.eps, device_coarsen(spec)))
+    }
+
     fn solve(
         &self,
         ctx: &EngineCtx,
@@ -190,13 +241,28 @@ impl Solver for JetSolver {
         m: &Machine,
         spec: &MapSpec,
         cancel: &CancelToken,
+        hier: Option<&HierarchyHandle>,
     ) -> MapOutcome {
         let mut cfg = if self.ultra { jet::JetPartConfig::ultra() } else { jet::JetPartConfig::default() };
+        cfg.coarsen = device_coarsen(spec);
         cfg.cancel = cancel.clone();
         let seed = spec.primary_seed();
-        measured(self.algorithm(), g, m, seed, |ph| {
-            jet::jet_partition(ctx.pool(), g, m.k(), spec.eps, seed, &cfg, Some(ph))
-        })
+        let mut out = measured(self.algorithm(), g, m, seed, |ph| match hier {
+            Some(h) => {
+                if !h.cached {
+                    ph.merge(h.hier.phases());
+                }
+                jet::jet_partition_with(ctx.pool(), g, m.k(), spec.eps, seed, &cfg, Some(ph), Some(h.hier.as_ref()))
+            }
+            None => jet::jet_partition(ctx.pool(), g, m.k(), spec.eps, seed, &cfg, Some(ph)),
+        });
+        if let Some(h) = hier {
+            if !h.cached {
+                out.host_ms += h.hier.phases().total_host_ms();
+            }
+        }
+        out.hierarchy_cache = hier.map(|h| h.cached);
+        out
     }
 }
 
@@ -268,7 +334,7 @@ mod tests {
         let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
         let spec = MapSpec::named("unused");
         for s in solvers() {
-            let out = s.solve(&ctx, &g, &h, &spec, &CancelToken::new());
+            let out = s.solve(&ctx, &g, &h, &spec, &CancelToken::new(), None);
             crate::partition::validate_mapping(&out.mapping, g.n(), h.k())
                 .unwrap_or_else(|e| panic!("{}: {e}", s.name()));
             assert!(out.comm_cost > 0.0, "{}", s.name());
@@ -289,7 +355,7 @@ mod tests {
         let cancelled = CancelToken::new();
         cancelled.cancel();
         for s in solvers() {
-            let out = s.solve(&ctx, &g, &h, &spec, &cancelled);
+            let out = s.solve(&ctx, &g, &h, &spec, &cancelled, None);
             assert_eq!(out.mapping.len(), g.n(), "{}", s.name());
             assert!(
                 out.mapping.iter().all(|&b| (b as usize) < h.k()),
@@ -307,7 +373,7 @@ mod tests {
         let ctx = EngineCtx::host_only(crate::par::Pool::new(1));
         for v in ["1", "0"] {
             let spec = MapSpec::named("unused").option("adaptive", v);
-            let out = solver(Algorithm::GpuHm).solve(&ctx, &g, &h, &spec, &CancelToken::new());
+            let out = solver(Algorithm::GpuHm).solve(&ctx, &g, &h, &spec, &CancelToken::new(), None);
             crate::partition::validate_mapping(&out.mapping, g.n(), h.k()).unwrap();
         }
     }

@@ -9,6 +9,7 @@
 
 use crate::algo::Algorithm;
 use crate::graph::CsrGraph;
+use crate::multilevel::SchemeKind;
 use crate::topology::{Hierarchy, Machine};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -103,6 +104,11 @@ pub struct MapSpec {
     /// Pinned algorithm, or `None` for router choice.
     pub algorithm: Option<Algorithm>,
     pub refinement: Refinement,
+    /// Coarsening scheme of the multilevel pipelines
+    /// (`coarsening = matching|cluster|auto`): preference matching,
+    /// size-constrained cluster LP, or matching with per-level cluster
+    /// fallback when it stalls.
+    pub coarsening: SchemeKind,
     /// Run the QAP polish stage (device-offloaded when artifacts exist).
     pub polish: bool,
     /// Keep the full mapping vector in the outcome (cleared when false).
@@ -124,6 +130,7 @@ impl PartialEq for MapSpec {
             && self.seeds == other.seeds
             && self.algorithm == other.algorithm
             && self.refinement == other.refinement
+            && self.coarsening == other.coarsening
             && self.polish == other.polish
             && self.return_mapping == other.return_mapping
             && self.options == other.options
@@ -142,6 +149,7 @@ impl MapSpec {
             seeds: vec![1],
             algorithm: None,
             refinement: Refinement::Standard,
+            coarsening: SchemeKind::Auto,
             polish: false,
             return_mapping: true,
             options: BTreeMap::new(),
@@ -222,6 +230,12 @@ impl MapSpec {
 
     pub fn refinement(mut self, refinement: Refinement) -> Self {
         self.refinement = refinement;
+        self
+    }
+
+    /// Pick the multilevel coarsening scheme (default `Auto`).
+    pub fn coarsening(mut self, coarsening: SchemeKind) -> Self {
+        self.coarsening = coarsening;
         self
     }
 

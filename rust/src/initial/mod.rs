@@ -5,12 +5,13 @@
 //! the coarsest graphs (the paper keeps initial partitioning on the CPU —
 //! §4.2 "Initial Partitioning").
 //!
-//! Pipeline: serial heavy-edge coarsening → greedy graph growing (multiple
-//! tries) → FM refinement during uncoarsening; k-way via recursive
-//! bisection with proportional target weights.
+//! Pipeline: serial coarsening through the unified multilevel subsystem
+//! → greedy graph growing (multiple tries) → FM refinement during
+//! uncoarsening; k-way via recursive bisection with proportional target
+//! weights.
 
-use crate::coarsen::coarsen_step_serial;
 use crate::graph::CsrGraph;
+use crate::multilevel::{BuildParams, CoarsenConfig, CoarseHierarchy};
 use crate::refine::fm2::{fm2_refine, Fm2Config};
 use crate::rng::Rng;
 use crate::{Block, VWeight, Vertex};
@@ -18,8 +19,9 @@ use crate::{Block, VWeight, Vertex};
 /// Multilevel bisection configuration.
 #[derive(Clone, Debug)]
 pub struct MlConfig {
-    /// Stop coarsening below this many vertices.
-    pub coarsest_size: usize,
+    /// Coarsening stage; `coarsen.coarsest_min` is the stop size (the
+    /// former `coarsest_size`).
+    pub coarsen: CoarsenConfig,
     /// Initial-partition attempts (keep the best).
     pub tries: usize,
     /// FM passes per level.
@@ -30,21 +32,21 @@ pub struct MlConfig {
 
 impl Default for MlConfig {
     fn default() -> Self {
-        MlConfig { coarsest_size: 160, tries: 4, fm_passes: 3, fm_stall: 400 }
+        MlConfig { coarsen: CoarsenConfig::serial(160), tries: 4, fm_passes: 3, fm_stall: 400 }
     }
 }
 
 impl MlConfig {
     /// The "fast" flavor (fewer tries/passes) used by -F baselines.
     pub fn fast() -> Self {
-        MlConfig { coarsest_size: 160, tries: 2, fm_passes: 1, fm_stall: 150 }
+        MlConfig { coarsen: CoarsenConfig::serial(160), tries: 2, fm_passes: 1, fm_stall: 150 }
     }
 
     /// The "strong" flavor used by -S baselines. Mirrors Kaffpa-strong's
     /// effort profile (many initial tries, deep FM) — the quality/runtime
     /// anchor of the paper's comparison.
     pub fn strong() -> Self {
-        MlConfig { coarsest_size: 100, tries: 16, fm_passes: 8, fm_stall: 1500 }
+        MlConfig { coarsen: CoarsenConfig::serial(100), tries: 16, fm_passes: 8, fm_stall: 1500 }
     }
 }
 
@@ -55,29 +57,15 @@ pub fn bisect_multilevel(g: &CsrGraph, frac0: f64, eps: f64, seed: u64, cfg: &Ml
     let max0 = (((1.0 + eps) * total as f64) * frac0).ceil() as VWeight;
     let max1 = (((1.0 + eps) * total as f64) * (1.0 - frac0)).ceil() as VWeight;
 
-    // Coarsening.
-    let mut graphs: Vec<CsrGraph> = vec![];
-    let mut maps: Vec<Vec<Vertex>> = vec![];
-    {
-        let mut cur = g.clone();
-        let mut level = 0u64;
-        while cur.n() > cfg.coarsest_size {
-            // Cap pair weight so the coarsest graph stays bisectable.
-            let cap = (total as f64 * frac0.min(1.0 - frac0) * (1.0 + eps)).ceil() as VWeight;
-            let (coarse, map) = coarsen_step_serial(&cur, cap.max(1), seed ^ (level << 32));
-            if coarse.n() as f64 > cur.n() as f64 * 0.96 {
-                break; // contraction stalled
-            }
-            graphs.push(cur);
-            maps.push(map);
-            cur = coarse;
-            level += 1;
-        }
-        graphs.push(cur);
-    }
+    // Coarsening; cap pair weight so the coarsest graph stays bisectable.
+    let cap = (total as f64 * frac0.min(1.0 - frac0) * (1.0 + eps)).ceil() as VWeight;
+    let params =
+        BuildParams { coarsest: cfg.coarsen.coarsest_min, lmax: cap.max(1), seed };
+    let hier = CoarseHierarchy::build_serial(g, &params, &cfg.coarsen, &Default::default())
+        .expect("bisection build has no cancel token");
 
     // Initial bisection on the coarsest graph (best of `tries`).
-    let coarsest = graphs.last().unwrap();
+    let coarsest = hier.coarsest();
     let mut best_part: Option<(f64, Vec<Block>)> = None;
     let mut rng = Rng::new(seed ^ 0x9e37);
     for t in 0..cfg.tries.max(1) {
@@ -93,24 +81,21 @@ pub fn bisect_multilevel(g: &CsrGraph, frac0: f64, eps: f64, seed: u64, cfg: &Ml
         }
         let _ = t;
     }
-    let mut part = best_part.unwrap().1;
+    let part = best_part.unwrap().1;
 
-    // Uncoarsening with FM refinement.
-    for level in (0..maps.len()).rev() {
-        let fine = &graphs[level];
-        let map = &maps[level];
-        let mut fine_part = vec![0 as Block; fine.n()];
-        for v in 0..fine.n() {
-            fine_part[v] = part[map[v] as usize];
+    // Uncoarsening with FM refinement (the coarsest level was already
+    // FM-refined inside the tries loop above).
+    let coarsest_level = hier.levels();
+    hier.uncoarsen_serial(part, |lev, fine, fine_part| {
+        if lev == coarsest_level {
+            return;
         }
         fm2_refine(
             fine,
-            &mut fine_part,
+            fine_part,
             &Fm2Config { max0, max1, passes: cfg.fm_passes, stall_limit: cfg.fm_stall },
         );
-        part = fine_part;
-    }
-    part
+    })
 }
 
 /// Greedy graph growing: grow block 0 from a random seed vertex by max

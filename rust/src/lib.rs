@@ -37,6 +37,11 @@
 //!   pipeline (paper Alg. 3–6);
 //! * the CPU baselines the paper compares against
 //!   ([`algo::sharedmap`], [`algo::intmap`], [`algo::jet`]);
+//! * the **unified multilevel subsystem** ([`multilevel`]): pluggable
+//!   coarsening schemes (matching / size-constrained cluster LP), one
+//!   [`multilevel::CoarseHierarchy`] shared by every pipeline, and an
+//!   engine-level hierarchy cache so repeat jobs on a session graph skip
+//!   coarsening entirely;
 //! * a bulk-synchronous data-parallel execution substrate ([`par`]) standing
 //!   in for Kokkos/CUDA, with a calibrated GPU cost model;
 //! * a PJRT runtime ([`runtime`]) that executes AOT-compiled JAX/Pallas
@@ -67,6 +72,7 @@ pub mod graph;
 pub mod harness;
 pub mod initial;
 pub mod metrics;
+pub mod multilevel;
 pub mod par;
 pub mod partition;
 pub mod refine;

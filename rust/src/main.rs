@@ -139,6 +139,9 @@ fn spec_from_args(args: &Args) -> Result<(MapSpec, EngineConfig)> {
     if let Some(v) = args.get("refine") {
         spec.refinement = Refinement::from_name(v)?;
     }
+    if let Some(v) = args.get("coarsening") {
+        spec.coarsening = heipa::multilevel::SchemeKind::from_name(v)?;
+    }
     if args.get("polish").is_some() {
         spec.polish = args.get_bool("polish");
     }
@@ -209,8 +212,8 @@ fn print_help() {
          gen    --suite paper|smoke [--out-dir DIR] [--stats]\n\
          map    --graph NAME|FILE [--config FILE] [--algo gpu-im|auto] [--hier 4:8:6]\n\
                 [--dist 1:10:100] [--topology SPEC] [--eps 0.03] [--seed 1,2,…]\n\
-                [--refine standard|strong] [--polish] [--opts k=v,…] [--artifacts DIR]\n\
-                [--threads N] [--out part.txt]\n\
+                [--refine standard|strong] [--coarsening matching|cluster|auto]\n\
+                [--polish] [--opts k=v,…] [--artifacts DIR] [--threads N] [--out part.txt]\n\
          eval   --graph NAME|FILE --part FILE [--hier …] [--dist …] [--topology SPEC]\n\
          phases --graph NAME|FILE [--hier …] [--dist …] [--topology SPEC] [--seed 1]\n\
          suite  --algos a,b,… [--config FILE] [--instances x,y|smoke|paper] [--seeds 1,2]\n\
@@ -224,6 +227,8 @@ fn print_help() {
          graphs once with `graph put name=… path=…|csr=…` and map them by `graph=<name>`\n\
          (full grammar in README \"Service & job API\").\n\
          \n\
+         --coarsening picks the multilevel coarsening scheme (matching, size-\n\
+         constrained cluster LP, or auto = matching with per-level cluster fallback).\n\
          `--config FILE` reads `key = value` defaults (see config::RunConfig);\n\
          explicit flags always win. Boolean flags (--polish, --stats) take no value.\n\
          --topology SPEC picks a machine model and overrides --hier/--dist:\n\
@@ -335,6 +340,9 @@ fn cmd_phases(args: &Args) -> Result<()> {
         .algo(Some(Algorithm::GpuIm));
     if let Some(v) = args.get("topology") {
         spec.topology = Some(v.to_string());
+    }
+    if let Some(v) = args.get("coarsening") {
+        spec.coarsening = heipa::multilevel::SchemeKind::from_name(v)?;
     }
     let engine = Engine::with_defaults();
     let r = engine.map(&spec)?;

@@ -65,11 +65,14 @@ impl Phase {
     }
 }
 
-/// Accumulates per-phase host + modeled-device time.
+/// Accumulates per-phase host + modeled-device time, plus the final
+/// matched fraction of every coarsening level (recorded by the
+/// multilevel hierarchy builder after its bounded two-hop fallback).
 #[derive(Clone, Debug, Default)]
 pub struct PhaseBreakdown {
     device_ms: BTreeMap<Phase, f64>,
     host_ms: BTreeMap<Phase, f64>,
+    matched: Vec<f64>,
 }
 
 impl PhaseBreakdown {
@@ -124,6 +127,17 @@ impl PhaseBreakdown {
         }
     }
 
+    /// Record the final matched fraction of one coarsening level (after
+    /// every two-hop fallback pass ran).
+    pub fn record_matched_fraction(&mut self, frac: f64) {
+        self.matched.push(frac);
+    }
+
+    /// Final matched fraction per coarsening level, finest first.
+    pub fn matched_fractions(&self) -> &[f64] {
+        &self.matched
+    }
+
     /// Merge another breakdown into this one.
     pub fn merge(&mut self, other: &PhaseBreakdown) {
         for (p, v) in &other.device_ms {
@@ -132,6 +146,7 @@ impl PhaseBreakdown {
         for (p, v) in &other.host_ms {
             *self.host_ms.entry(*p).or_insert(0.0) += v;
         }
+        self.matched.extend_from_slice(&other.matched);
     }
 
     /// Table-2-style row dump: `(label, share %, device ms)`.

@@ -1,0 +1,589 @@
+//! The coarse-graph hierarchy: the one place the multilevel loop lives.
+//!
+//! [`CoarseHierarchy::build`] (device kernels + CAS-hash contraction)
+//! and [`CoarseHierarchy::build_serial`] (CPU-baseline oracles) run the
+//! configured [`super::CoarsenScheme`] level by level, with stall
+//! detection ([`super::STALL_FRACTION`]), per-level cancellation
+//! boundaries, phase timing and the modeled H2D upload charged exactly
+//! once per build. [`CoarseHierarchy::uncoarsen`] /
+//! [`CoarseHierarchy::uncoarsen_serial`] drive projection + per-level
+//! refinement over the caller's closure (which shares one
+//! [`crate::refine::RefineWorkspace`] across every level).
+//!
+//! A hierarchy is a pure function of `(graph, CoarsenConfig, BuildParams)`
+//! — it never sees the job seed — so the engine caches instances per
+//! session graph and repeat jobs skip straight to initial mapping.
+
+use super::scheme::{LevelStep, CLUSTER};
+use super::{CoarsenConfig, CoarsenScheme, SchemeKind, STALL_FRACTION};
+use crate::cancel::CancelToken;
+use crate::coarsen::{contract_cas::contract_cas, contract_serial};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::metrics::{Phase, PhaseBreakdown};
+use crate::par::Pool;
+use crate::{Block, VWeight, Vertex};
+use std::sync::Arc;
+
+/// What to build: the level cap, the pair/cluster weight cap, and the
+/// base seed of the coarsening streams.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BuildParams {
+    /// Stop once the coarsest graph has at most this many vertices.
+    pub coarsest: usize,
+    /// Maximum matched-pair / cluster weight (`L_max`).
+    pub lmax: VWeight,
+    /// Base seed, mixed per level via [`crate::rng::level_seed`].
+    pub seed: u64,
+}
+
+/// Everything the engine needs to build — or find in its cache — the
+/// hierarchy a solver is about to consume. Equality over the full
+/// parameter set is the cache key (together with graph identity).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HierarchyParams {
+    pub cfg: CoarsenConfig,
+    pub build: BuildParams,
+}
+
+impl HierarchyParams {
+    /// The parameters of a device pipeline mapping `g` onto `k` PEs with
+    /// imbalance `eps` — exactly what `gpu_im`/`jet_partition` build when
+    /// handed no prebuilt hierarchy.
+    pub fn device(g: &CsrGraph, k: usize, eps: f64, cfg: CoarsenConfig) -> HierarchyParams {
+        let lmax = crate::partition::l_max(g.total_vweight(), k, eps);
+        let build = BuildParams { coarsest: cfg.coarsest_for(k), lmax, seed: cfg.salt };
+        HierarchyParams { cfg, build }
+    }
+}
+
+/// A hierarchy as handed to a solver: the instance plus whether it came
+/// out of the engine cache (`cached` jobs must not re-account the build's
+/// phase times — an earlier job already paid them).
+#[derive(Clone)]
+pub struct HierarchyHandle {
+    pub hier: Arc<CoarseHierarchy>,
+    pub cached: bool,
+}
+
+/// The multilevel hierarchy: `graphs[0]` is the input graph, each
+/// `maps[i]` contracts `graphs[i]` onto `graphs[i + 1]`.
+pub struct CoarseHierarchy {
+    graphs: Vec<Arc<CsrGraph>>,
+    /// Extended CSR edge lists, parallel to `graphs` (device builds
+    /// only; empty for serial builds).
+    edge_lists: Vec<EdgeList>,
+    maps: Vec<Vec<Vertex>>,
+    matched: Vec<f64>,
+    stalled: bool,
+    scheme: SchemeKind,
+    params: BuildParams,
+    phases: PhaseBreakdown,
+}
+
+/// Time `$e` into `$pb` under `$ph`, or just run it when no breakdown is
+/// being collected.
+macro_rules! timed_opt {
+    ($phases:expr, $ph:expr, $e:expr) => {
+        match $phases.as_deref_mut() {
+            Some(p) => p.time($ph, || $e),
+            None => $e,
+        }
+    };
+}
+
+/// One level of the configured scheme, with the `Auto` stall fallback:
+/// when matching barely shrinks the graph, the level is redone with the
+/// cluster scheme before the builder gives up on it.
+fn run_level(
+    scheme_kind: SchemeKind,
+    pool: &Pool,
+    g: &CsrGraph,
+    el: &EdgeList,
+    lmax: VWeight,
+    seed: u64,
+    cfg: &CoarsenConfig,
+) -> LevelStep {
+    let first: &dyn CoarsenScheme = super::scheme(scheme_kind);
+    let step = first.step(pool, g, el, lmax, seed, cfg);
+    if scheme_kind == SchemeKind::Auto && level_stalled(step.nc, g.n()) {
+        return CLUSTER.step(pool, g, el, lmax, seed, cfg);
+    }
+    step
+}
+
+fn run_level_serial(
+    scheme_kind: SchemeKind,
+    g: &CsrGraph,
+    lmax: VWeight,
+    seed: u64,
+    cfg: &CoarsenConfig,
+) -> LevelStep {
+    let first: &dyn CoarsenScheme = super::scheme(scheme_kind);
+    let step = first.step_serial(g, lmax, seed, cfg);
+    if scheme_kind == SchemeKind::Auto && level_stalled(step.nc, g.n()) {
+        return CLUSTER.step_serial(g, lmax, seed, cfg);
+    }
+    step
+}
+
+fn level_stalled(nc: usize, n: usize) -> bool {
+    nc as f64 > n as f64 * STALL_FRACTION
+}
+
+impl CoarseHierarchy {
+    /// Build with device kernels (preference matching / cluster LP +
+    /// CAS-hash contraction). Charges the modeled H2D upload of the
+    /// input graph once, times every level into both `phases` (when
+    /// given) and the hierarchy's own breakdown (served to later cache
+    /// hits for inspection, never re-merged), and polls `cancel` at
+    /// every level boundary — `None` means the build was cancelled.
+    pub fn build(
+        pool: &Pool,
+        g: Arc<CsrGraph>,
+        params: &BuildParams,
+        cfg: &CoarsenConfig,
+        cancel: &CancelToken,
+        mut phases: Option<&mut PhaseBreakdown>,
+    ) -> Option<CoarseHierarchy> {
+        let mut pb = PhaseBreakdown::default();
+        let first_el = pb.time(Phase::Misc, || {
+            // Modeled H2D upload of the CSR graph (xadj + adj + weights);
+            // paid once per hierarchy, not once per job.
+            crate::par::ledger::charge(3, (g.n() + 2 * g.num_directed()) as u64);
+            EdgeList::build_par(pool, &g)
+        });
+        let mut graphs = vec![g];
+        let mut edge_lists = vec![first_el];
+        let mut maps: Vec<Vec<Vertex>> = Vec::new();
+        let mut matched: Vec<f64> = Vec::new();
+        let mut stalled = false;
+        let mut level = 0u64;
+        while graphs.last().unwrap().n() > params.coarsest {
+            // Level cancellation boundary: the engine discards the job's
+            // result, so the partial build is simply dropped.
+            if cancel.is_cancelled() {
+                if let Some(ph) = phases.as_deref_mut() {
+                    ph.merge(&pb);
+                }
+                return None;
+            }
+            let cur = graphs.last().unwrap().clone();
+            let lseed = crate::rng::level_seed(params.seed, level);
+            let next = {
+                let el = edge_lists.last().unwrap();
+                let step = pb.time(Phase::Coarsening, || {
+                    run_level(cfg.scheme, pool, &cur, el, params.lmax, lseed, cfg)
+                });
+                // The step's serial host passes (two-hop fallback, cluster
+                // apply sweep) stall the device timeline: charge their wall
+                // time as device time, like the old `timed_cpu!` blocks
+                // (the ledger only sees the pool kernels).
+                pb.add(
+                    Phase::Coarsening,
+                    crate::par::cost::Measurement {
+                        device_ms: step.host_cpu_ms,
+                        host_ms: 0.0,
+                        ledger: Default::default(),
+                    },
+                );
+                if level_stalled(step.nc, cur.n()) {
+                    None
+                } else {
+                    let coarse = pb.time(Phase::Contraction, || {
+                        contract_cas(pool, &cur, el, &step.map, step.nc)
+                    });
+                    let coarse_el = pb.time(Phase::Misc, || EdgeList::build_par(pool, &coarse));
+                    Some((step, coarse, coarse_el))
+                }
+            };
+            let Some((step, coarse, coarse_el)) = next else {
+                stalled = true;
+                break;
+            };
+            pb.record_matched_fraction(step.matched_fraction);
+            matched.push(step.matched_fraction);
+            maps.push(step.map);
+            graphs.push(Arc::new(coarse));
+            edge_lists.push(coarse_el);
+            level += 1;
+        }
+        if let Some(ph) = phases.as_deref_mut() {
+            ph.merge(&pb);
+        }
+        Some(CoarseHierarchy {
+            graphs,
+            edge_lists,
+            maps,
+            matched,
+            stalled,
+            scheme: cfg.scheme,
+            params: params.clone(),
+            phases: pb,
+        })
+    }
+
+    /// Resolve the hierarchy a device pipeline runs on: `prebuilt` (the
+    /// engine's cache) when supplied — asserted to belong to `g` — or an
+    /// inline build parked in `owned`. `None` means the build was
+    /// cancelled. This is the one place the pipelines derive
+    /// `BuildParams` from a [`CoarsenConfig`], so the engine's cache key
+    /// ([`HierarchyParams::device`]) can never diverge from what an
+    /// inline build produces.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resolve<'a>(
+        prebuilt: Option<&'a CoarseHierarchy>,
+        owned: &'a mut Option<CoarseHierarchy>,
+        pool: &Pool,
+        g: &CsrGraph,
+        k: usize,
+        lmax: VWeight,
+        cfg: &CoarsenConfig,
+        cancel: &CancelToken,
+        phases: Option<&mut PhaseBreakdown>,
+    ) -> Option<&'a CoarseHierarchy> {
+        if let Some(h) = prebuilt {
+            debug_assert_eq!(h.finest().n(), g.n(), "prebuilt hierarchy for a different graph");
+            return Some(h);
+        }
+        let params = BuildParams { coarsest: cfg.coarsest_for(k), lmax, seed: cfg.salt };
+        *owned = Some(Self::build(pool, Arc::new(g.clone()), &params, cfg, cancel, phases)?);
+        owned.as_ref()
+    }
+
+    /// Build with the serial oracles (CPU baselines): no pool, no edge
+    /// lists, no device-ledger charges. `None` means cancelled.
+    pub fn build_serial(
+        g: &CsrGraph,
+        params: &BuildParams,
+        cfg: &CoarsenConfig,
+        cancel: &CancelToken,
+    ) -> Option<CoarseHierarchy> {
+        let mut graphs = vec![Arc::new(g.clone())];
+        let mut maps: Vec<Vec<Vertex>> = Vec::new();
+        let mut matched: Vec<f64> = Vec::new();
+        let mut stalled = false;
+        let mut level = 0u64;
+        while graphs.last().unwrap().n() > params.coarsest {
+            if cancel.is_cancelled() {
+                return None;
+            }
+            let cur = graphs.last().unwrap().clone();
+            let lseed = crate::rng::level_seed(params.seed, level);
+            let step = run_level_serial(cfg.scheme, &cur, params.lmax, lseed, cfg);
+            if level_stalled(step.nc, cur.n()) {
+                stalled = true;
+                break;
+            }
+            let coarse = contract_serial(&cur, &step.map, step.nc);
+            matched.push(step.matched_fraction);
+            maps.push(step.map);
+            graphs.push(Arc::new(coarse));
+            level += 1;
+        }
+        Some(CoarseHierarchy {
+            graphs,
+            edge_lists: Vec::new(),
+            maps,
+            matched,
+            stalled,
+            scheme: cfg.scheme,
+            params: params.clone(),
+            phases: PhaseBreakdown::default(),
+        })
+    }
+
+    /// Number of coarsening levels (contractions).
+    pub fn levels(&self) -> usize {
+        self.maps.len()
+    }
+
+    /// The input graph.
+    pub fn finest(&self) -> &CsrGraph {
+        &self.graphs[0]
+    }
+
+    /// The coarsest graph (equal to [`CoarseHierarchy::finest`] when no
+    /// level was built).
+    pub fn coarsest(&self) -> &CsrGraph {
+        self.graphs.last().unwrap()
+    }
+
+    /// The coarsest graph's edge list. Panics on serial builds.
+    pub fn coarsest_el(&self) -> &EdgeList {
+        self.edge_lists.last().expect("edge lists exist on device-built hierarchies")
+    }
+
+    /// The graph at `level` (0 = finest, `levels()` = coarsest).
+    pub fn graph(&self, level: usize) -> &CsrGraph {
+        &self.graphs[level]
+    }
+
+    /// The contraction map from `level` onto `level + 1`.
+    pub fn map(&self, level: usize) -> &[Vertex] {
+        &self.maps[level]
+    }
+
+    /// Whether this hierarchy was built with device kernels (and thus
+    /// carries edge lists).
+    pub fn is_device(&self) -> bool {
+        !self.edge_lists.is_empty()
+    }
+
+    /// True when the last attempted level barely shrank and the builder
+    /// stopped early.
+    pub fn stalled(&self) -> bool {
+        self.stalled
+    }
+
+    pub fn scheme(&self) -> SchemeKind {
+        self.scheme
+    }
+
+    pub fn params(&self) -> &BuildParams {
+        &self.params
+    }
+
+    /// The build's own phase breakdown (Coarsening / Contraction / Misc
+    /// and per-level matched fractions). Jobs that triggered the build
+    /// merge it into their outcome; cache hits do not.
+    pub fn phases(&self) -> &PhaseBreakdown {
+        &self.phases
+    }
+
+    /// Final matched fraction per level, finest first.
+    pub fn matched_fractions(&self) -> &[f64] {
+        &self.matched
+    }
+
+    /// Check the structural invariants every hierarchy must satisfy:
+    /// each level strictly shrinks, each map is a surjection onto the
+    /// coarser vertex set, and contraction preserves total vertex weight.
+    pub fn validate(&self) -> Result<(), String> {
+        for lev in 0..self.maps.len() {
+            let fine = &self.graphs[lev];
+            let coarse = &self.graphs[lev + 1];
+            let map = &self.maps[lev];
+            if map.len() != fine.n() {
+                return Err(format!("level {lev}: map len {} != n {}", map.len(), fine.n()));
+            }
+            if coarse.n() >= fine.n() {
+                return Err(format!(
+                    "level {lev}: does not strictly shrink ({} -> {})",
+                    fine.n(),
+                    coarse.n()
+                ));
+            }
+            let mut seen = vec![false; coarse.n()];
+            for (v, &c) in map.iter().enumerate() {
+                let Some(slot) = seen.get_mut(c as usize) else {
+                    return Err(format!("level {lev}: map[{v}] = {c} out of range {}", coarse.n()));
+                };
+                *slot = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("level {lev}: map not surjective onto [{}]", coarse.n()));
+            }
+            if fine.total_vweight() != coarse.total_vweight() {
+                return Err(format!(
+                    "level {lev}: vertex weight not preserved ({} -> {})",
+                    fine.total_vweight(),
+                    coarse.total_vweight()
+                ));
+            }
+        }
+        if self.is_device() && self.edge_lists.len() != self.graphs.len() {
+            return Err("edge lists not parallel to graphs".into());
+        }
+        Ok(())
+    }
+
+    /// Device-style uncoarsening: refine the coarsest solution, then for
+    /// every finer level project it down (parallel kernel, timed as
+    /// Uncontraction) and refine again (timed as Refine + Rebalance).
+    /// `refine(level, graph, edge_list, part)` receives the graph index
+    /// (`levels()` for the coarsest, 0 for the finest) and is expected to
+    /// check its own cancellation token — projection always completes so
+    /// cancelled runs still return a structurally valid assignment.
+    pub fn uncoarsen(
+        &self,
+        pool: &Pool,
+        mut part: Vec<Block>,
+        mut phases: Option<&mut PhaseBreakdown>,
+        mut refine: impl FnMut(usize, &CsrGraph, &EdgeList, &mut Vec<Block>),
+    ) -> Vec<Block> {
+        assert!(self.is_device(), "uncoarsen() needs a device-built hierarchy");
+        debug_assert_eq!(part.len(), self.coarsest().n());
+        let coarsest_level = self.maps.len();
+        timed_opt!(phases, Phase::RefineRebalance, {
+            refine(coarsest_level, self.coarsest(), self.coarsest_el(), &mut part)
+        });
+        for lev in (0..coarsest_level).rev() {
+            let fine = &self.graphs[lev];
+            let map = &self.maps[lev];
+            let mut fine_part = vec![0 as Block; fine.n()];
+            timed_opt!(phases, Phase::Uncontraction, {
+                let fp = crate::par::SharedMut::new(&mut fine_part);
+                pool.parallel_for(fine.n(), |v| unsafe {
+                    fp.write(v, part[map[v] as usize]);
+                });
+            });
+            timed_opt!(phases, Phase::RefineRebalance, {
+                refine(lev, fine, &self.edge_lists[lev], &mut fine_part)
+            });
+            part = fine_part;
+        }
+        part
+    }
+
+    /// Serial uncoarsening for the CPU baselines: identical contract,
+    /// minus the pool, the edge lists and the phase timing.
+    pub fn uncoarsen_serial(
+        &self,
+        mut part: Vec<Block>,
+        mut refine: impl FnMut(usize, &CsrGraph, &mut Vec<Block>),
+    ) -> Vec<Block> {
+        debug_assert_eq!(part.len(), self.coarsest().n());
+        let coarsest_level = self.maps.len();
+        refine(coarsest_level, self.coarsest(), &mut part);
+        for lev in (0..coarsest_level).rev() {
+            let fine = &self.graphs[lev];
+            let map = &self.maps[lev];
+            let mut fine_part = vec![0 as Block; fine.n()];
+            for v in 0..fine.n() {
+                fine_part[v] = part[map[v] as usize];
+            }
+            refine(lev, fine, &mut fine_part);
+            part = fine_part;
+        }
+        part
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn params(coarsest: usize) -> BuildParams {
+        BuildParams { coarsest, lmax: i64::MAX, seed: 42 }
+    }
+
+    #[test]
+    fn device_build_validates_and_reaches_target() {
+        let g = Arc::new(gen::rgg(3_000, 0.05, 4));
+        let pool = Pool::new(2);
+        let cfg = CoarsenConfig::device();
+        let h = CoarseHierarchy::build(&pool, g.clone(), &params(200), &cfg, &CancelToken::new(), None)
+            .unwrap();
+        h.validate().unwrap();
+        assert!(h.levels() >= 1);
+        assert!(h.is_device());
+        assert!(h.coarsest().n() <= 200 || h.stalled());
+        assert_eq!(h.finest().n(), g.n());
+        assert_eq!(h.matched_fractions().len(), h.levels());
+        // The builder's breakdown covers the build phases.
+        assert!(h.phases().device_ms(Phase::Coarsening) > 0.0);
+        assert!(h.phases().device_ms(Phase::Contraction) > 0.0);
+    }
+
+    #[test]
+    fn serial_build_validates() {
+        let g = gen::grid2d(40, 40, false);
+        let cfg = CoarsenConfig::serial(160);
+        let h = CoarseHierarchy::build_serial(&g, &params(160), &cfg, &CancelToken::new()).unwrap();
+        h.validate().unwrap();
+        assert!(!h.is_device());
+        assert!(h.levels() >= 1);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let g = Arc::new(gen::rgg(2_000, 0.05, 8));
+        let cfg = CoarsenConfig::device();
+        let pool = Pool::new(1);
+        let a = CoarseHierarchy::build(&pool, g.clone(), &params(100), &cfg, &CancelToken::new(), None)
+            .unwrap();
+        let b = CoarseHierarchy::build(&pool, g.clone(), &params(100), &cfg, &CancelToken::new(), None)
+            .unwrap();
+        assert_eq!(a.levels(), b.levels());
+        for lev in 0..a.levels() {
+            assert_eq!(a.map(lev), b.map(lev), "level {lev} maps diverge");
+            assert_eq!(a.graph(lev + 1).xadj, b.graph(lev + 1).xadj);
+        }
+    }
+
+    #[test]
+    fn cancelled_build_returns_none() {
+        let g = Arc::new(gen::grid2d(40, 40, false));
+        let cancelled = CancelToken::new();
+        cancelled.cancel();
+        let pool = Pool::new(1);
+        assert!(CoarseHierarchy::build(
+            &pool,
+            g,
+            &params(64),
+            &CoarsenConfig::device(),
+            &cancelled,
+            None
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn tiny_graph_builds_zero_levels() {
+        let g = Arc::new(gen::grid2d(4, 4, false));
+        let pool = Pool::new(1);
+        let h = CoarseHierarchy::build(
+            &pool,
+            g.clone(),
+            &params(64),
+            &CoarsenConfig::device(),
+            &CancelToken::new(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(h.levels(), 0);
+        assert_eq!(h.coarsest().n(), g.n());
+        // Uncoarsening degenerates to one refine call on the input graph.
+        let out = h.uncoarsen(&pool, vec![0; g.n()], None, |lev, gl, _el, part| {
+            assert_eq!(lev, 0);
+            assert_eq!(gl.n(), part.len());
+        });
+        assert_eq!(out.len(), g.n());
+    }
+
+    #[test]
+    fn uncoarsen_projects_through_every_level() {
+        let g = Arc::new(gen::grid2d(30, 30, false));
+        let pool = Pool::new(2);
+        let h = CoarseHierarchy::build(
+            &pool,
+            g.clone(),
+            &params(64),
+            &CoarsenConfig::device(),
+            &CancelToken::new(),
+            None,
+        )
+        .unwrap();
+        // Label the coarsest graph by parity; projection must carry the
+        // labels down exactly along the composed maps.
+        let part: Vec<Block> = (0..h.coarsest().n() as Block).map(|c| c % 2).collect();
+        let mut calls = 0usize;
+        let out = h.uncoarsen(&pool, part.clone(), None, |_lev, _g, _el, _p| calls += 1);
+        assert_eq!(calls, h.levels() + 1);
+        // Compose the maps manually.
+        let mut expect: Vec<Block> = part;
+        for lev in (0..h.levels()).rev() {
+            let map = h.map(lev);
+            let next: Vec<Block> = (0..h.graph(lev).n()).map(|v| expect[map[v] as usize]).collect();
+            expect = next;
+        }
+        assert_eq!(out, expect);
+        // Serial driver agrees (device hierarchy still projects fine).
+        let ser = h.uncoarsen_serial(
+            (0..h.coarsest().n() as Block).map(|c| c % 2).collect(),
+            |_lev, _g, _p| {},
+        );
+        assert_eq!(ser, expect);
+    }
+}

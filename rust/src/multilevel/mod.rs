@@ -1,0 +1,173 @@
+//! The unified multilevel subsystem: pluggable coarsening schemes, the
+//! coarse-graph hierarchy, and the uncoarsening driver.
+//!
+//! Before this module existed, the coarsen → initial → uncoarsen-refine
+//! skeleton was duplicated four times — device-style in
+//! [`crate::algo::jet`] and [`crate::algo::gpu_im`], serially in
+//! [`crate::algo::intmap`] and [`crate::initial`]. Now every pipeline is
+//! three calls:
+//!
+//! 1. [`CoarseHierarchy::build`] (or [`CoarseHierarchy::build_serial`])
+//!    runs the configured [`CoarsenScheme`] level by level until the
+//!    graph is below the target size or contraction stalls, contracting
+//!    with the CAS-hash kernel (serial oracle for CPU baselines) and
+//!    recording per-level stats, phase timing and the modeled H2D upload
+//!    exactly once;
+//! 2. the caller produces an initial partition/mapping of
+//!    [`CoarseHierarchy::coarsest`];
+//! 3. [`CoarseHierarchy::uncoarsen`] (or `uncoarsen_serial`) projects the
+//!    solution level by level and hands each finer graph to the caller's
+//!    refinement closure.
+//!
+//! Two schemes exist: [`MatchingScheme`] (preference matching + bounded
+//! two-hop fallback — the paper's §4.2 coarsening) and [`ClusterScheme`]
+//! (size-constrained label-propagation clustering, after Shared-Memory
+//! Hierarchical Process Mapping), which keeps shrinking graphs whose
+//! matchings stall — star-like and other irregular instances.
+//! [`SchemeKind::Auto`] runs matching and falls back to clustering on any
+//! level where matching stalls.
+//!
+//! A built [`CoarseHierarchy`] is independent of the initial-mapping and
+//! refinement seeds, so the engine caches hierarchies for session graphs
+//! (keyed by graph identity + [`CoarsenConfig`] + level cap + salt) and
+//! repeat jobs skip the Coarsening/Contraction phases entirely.
+
+pub mod hierarchy;
+pub mod scheme;
+
+pub use hierarchy::{BuildParams, CoarseHierarchy, HierarchyHandle, HierarchyParams};
+pub use scheme::{scheme, ClusterScheme, CoarsenScheme, LevelStep, MatchingScheme};
+
+use anyhow::{bail, Result};
+
+/// A level whose contraction keeps more than this fraction of its
+/// vertices has stalled; the hierarchy stops there.
+pub const STALL_FRACTION: f64 = 0.96;
+
+/// Matched-fraction target of the matching scheme: below it, the bounded
+/// two-hop fallback passes run (paper §4.2 "Matching").
+pub const TWOHOP_TARGET: f64 = 0.75;
+
+/// Default base seed for device coarsening. Deliberately **not** the
+/// per-job seed: one graph + one scheme then yield one hierarchy, so the
+/// engine's hierarchy cache serves every seed of a `run_matrix` sweep and
+/// every repeat job on a pinned session graph. Initial mapping and
+/// refinement still consume the job seed.
+pub const DEFAULT_COARSEN_SALT: u64 = 0x5eed_c0a7_5a17_0001;
+
+/// Which coarsening scheme a pipeline runs — the `coarsening=` knob of
+/// the spec, config files, the wire protocol and the CLI.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// Preference matching + bounded two-hop fallback (paper §4.2).
+    Matching,
+    /// Size-constrained label-propagation clustering.
+    Cluster,
+    /// Matching first; any level where matching stalls is redone with
+    /// clustering. The default: identical to `Matching` on well-behaved
+    /// graphs, robust on irregular ones.
+    #[default]
+    Auto,
+}
+
+impl SchemeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemeKind::Matching => "matching",
+            SchemeKind::Cluster => "cluster",
+            SchemeKind::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "matching" | "match" => Ok(SchemeKind::Matching),
+            "cluster" | "lp" => Ok(SchemeKind::Cluster),
+            "auto" => Ok(SchemeKind::Auto),
+            other => bail!("unknown coarsening scheme `{other}` (matching|cluster|auto)"),
+        }
+    }
+}
+
+/// Every knob of the coarsening stage, shared by all four multilevel
+/// pipelines (the former per-algo `coarsest_factor`/`match_rounds`
+/// duplicates collapsed into one place).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CoarsenConfig {
+    /// Scheme selection (see [`SchemeKind`]).
+    pub scheme: SchemeKind,
+    /// Preference-matching rounds per level.
+    pub match_rounds: usize,
+    /// Label-propagation rounds per level (cluster scheme).
+    pub cluster_rounds: usize,
+    /// Upper bound on two-hop fallback passes per level; each pass runs
+    /// only while the matched fraction is below [`TWOHOP_TARGET`] and the
+    /// previous pass made progress.
+    pub max_twohop_passes: usize,
+    /// Coarsen until `coarsest_factor · k` vertices (paper: 8)…
+    pub coarsest_factor: usize,
+    /// …but never below this floor (64 for the device pipelines, 400 for
+    /// the serial integrated mapper, the `coarsest_size` of the
+    /// bisection substrate).
+    pub coarsest_min: usize,
+    /// Base seed of the per-level coarsening streams (mixed through
+    /// [`crate::rng::level_seed`]). Device pipelines default to
+    /// [`DEFAULT_COARSEN_SALT`] instead of the job seed so the engine's
+    /// hierarchy cache can serve seed sweeps; serial baselines pass the
+    /// job seed explicitly at build time.
+    pub salt: u64,
+}
+
+impl Default for CoarsenConfig {
+    fn default() -> Self {
+        CoarsenConfig::device()
+    }
+}
+
+impl CoarsenConfig {
+    /// The device-pipeline flavor (GPU-IM / Jet).
+    pub fn device() -> Self {
+        CoarsenConfig {
+            scheme: SchemeKind::Auto,
+            match_rounds: 8,
+            cluster_rounds: 6,
+            max_twohop_passes: 2,
+            coarsest_factor: 8,
+            coarsest_min: 64,
+            salt: DEFAULT_COARSEN_SALT,
+        }
+    }
+
+    /// The serial-baseline flavor with an explicit coarsest-size floor.
+    pub fn serial(coarsest_min: usize) -> Self {
+        CoarsenConfig { coarsest_min, ..CoarsenConfig::device() }
+    }
+
+    /// The level cap for a `k`-way partition/mapping.
+    pub fn coarsest_for(&self, k: usize) -> usize {
+        (self.coarsest_factor * k).max(self.coarsest_min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_kind_round_trips() {
+        for kind in [SchemeKind::Matching, SchemeKind::Cluster, SchemeKind::Auto] {
+            assert_eq!(SchemeKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(SchemeKind::from_name("lp").unwrap(), SchemeKind::Cluster);
+        assert!(SchemeKind::from_name("bogus").is_err());
+        assert_eq!(SchemeKind::default(), SchemeKind::Auto);
+    }
+
+    #[test]
+    fn coarsest_respects_factor_and_floor() {
+        let cfg = CoarsenConfig::device();
+        assert_eq!(cfg.coarsest_for(64), 512);
+        assert_eq!(cfg.coarsest_for(2), 64, "floor dominates for tiny k");
+        assert_eq!(CoarsenConfig::serial(400).coarsest_for(8), 400);
+    }
+}

@@ -1,0 +1,447 @@
+//! Pluggable coarsening schemes.
+//!
+//! A [`CoarsenScheme`] turns one graph into a cluster map `V → [n_c]`
+//! that the hierarchy builder contracts along. Two implementations:
+//!
+//! * [`MatchingScheme`] — the paper's §4.2 coarsening: device preference
+//!   matching with the `expansion*²` rating, then bounded two-hop
+//!   fallback passes (leaves/twins/relatives) while the matched fraction
+//!   stays below [`super::TWOHOP_TARGET`];
+//! * [`ClusterScheme`] — size-constrained label-propagation clustering
+//!   for graphs where matchings stall (stars, hubs, highly irregular
+//!   degree distributions): clusters may hold more than two vertices, so
+//!   one level can shrink a star to a point where a matching removes at
+//!   most half of it.
+//!
+//! Both run **device-style** (pool kernels computing per-vertex decisions,
+//! a deterministic host pass applying them — the same split the two-hop
+//! fallback always had) and expose a **serial oracle** (`step_serial`)
+//! for the CPU baselines, which must stay pool-free.
+
+use super::{CoarsenConfig, SchemeKind, TWOHOP_TARGET};
+use crate::coarsen::{
+    match_par::preference_matching, matched_fraction, matching_to_map, serial_hem,
+    twohop::twohop_matching, Matching,
+};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::par::Pool;
+use crate::refine::ConnBuf;
+use crate::rng::{edge_noise, hash_u64};
+use crate::{VWeight, Vertex};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// The product of one coarsening level.
+pub struct LevelStep {
+    /// Cluster map `V → [nc]`.
+    pub map: Vec<Vertex>,
+    /// Number of coarse vertices.
+    pub nc: usize,
+    /// Fraction of vertices in non-singleton clusters, after every
+    /// fallback pass ran (recorded into the phase breakdown).
+    pub matched_fraction: f64,
+    /// Wall milliseconds of the *serial host* passes inside this step
+    /// (two-hop fallback, cluster apply sweep). The device timeline
+    /// stalls on them, so the hierarchy builder charges this as device
+    /// time on top of the ledger — the `timed_cpu!` accounting the old
+    /// inline pipelines had.
+    pub host_cpu_ms: f64,
+}
+
+/// One coarsening scheme. Implementations produce cluster maps only; the
+/// hierarchy builder owns contraction (CAS-hash kernel or serial oracle),
+/// stall detection and level bookkeeping.
+pub trait CoarsenScheme: Sync {
+    fn kind(&self) -> SchemeKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Device-style step: pool kernels plus a deterministic host pass.
+    /// `el` is the extended CSR edge list of `g` (unused by the current
+    /// schemes but part of the contract — contraction-adjacent kernels
+    /// are edge-parallel).
+    fn step(
+        &self,
+        pool: &Pool,
+        g: &CsrGraph,
+        el: &EdgeList,
+        lmax: VWeight,
+        seed: u64,
+        cfg: &CoarsenConfig,
+    ) -> LevelStep;
+
+    /// Serial oracle step for the CPU baselines: no pool, no edge list.
+    fn step_serial(&self, g: &CsrGraph, lmax: VWeight, seed: u64, cfg: &CoarsenConfig) -> LevelStep;
+}
+
+/// Preference matching + bounded two-hop fallback (paper §4.2).
+pub struct MatchingScheme;
+
+/// Size-constrained label-propagation clustering.
+pub struct ClusterScheme;
+
+/// The scheme singletons.
+pub static MATCHING: MatchingScheme = MatchingScheme;
+pub static CLUSTER: ClusterScheme = ClusterScheme;
+
+/// The scheme for a concrete kind. `Auto` resolves to [`MatchingScheme`]
+/// as its first choice; the per-level stall fallback to [`ClusterScheme`]
+/// lives in the hierarchy builder.
+pub fn scheme(kind: SchemeKind) -> &'static dyn CoarsenScheme {
+    match kind {
+        SchemeKind::Cluster => &CLUSTER,
+        SchemeKind::Matching | SchemeKind::Auto => &MATCHING,
+    }
+}
+
+/// Iterate the two-hop fallback (bounded) and lower the matching to a
+/// cluster map. Each pass runs only while the matched fraction is below
+/// [`TWOHOP_TARGET`] and the previous pass still matched someone — the
+/// old pipelines ran at most one pass even when it left the matching
+/// far short of the target.
+fn finish_matching(
+    g: &CsrGraph,
+    mut mate: Matching,
+    lmax: VWeight,
+    cfg: &CoarsenConfig,
+) -> LevelStep {
+    let host_start = std::time::Instant::now();
+    let mut frac = matched_fraction(&mate);
+    let mut passes = 0;
+    while frac < TWOHOP_TARGET && passes < cfg.max_twohop_passes {
+        if twohop_matching(g, &mut mate, lmax) == 0 {
+            break;
+        }
+        frac = matched_fraction(&mate);
+        passes += 1;
+    }
+    let host_cpu_ms = host_start.elapsed().as_secs_f64() * 1e3;
+    let (map, nc) = matching_to_map(&mate);
+    LevelStep { map, nc, matched_fraction: frac, host_cpu_ms }
+}
+
+impl CoarsenScheme for MatchingScheme {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Matching
+    }
+
+    fn step(
+        &self,
+        pool: &Pool,
+        g: &CsrGraph,
+        _el: &EdgeList,
+        lmax: VWeight,
+        seed: u64,
+        cfg: &CoarsenConfig,
+    ) -> LevelStep {
+        let mate = preference_matching(g, pool, lmax, seed, cfg.match_rounds);
+        finish_matching(g, mate, lmax, cfg)
+    }
+
+    fn step_serial(&self, g: &CsrGraph, lmax: VWeight, seed: u64, cfg: &CoarsenConfig) -> LevelStep {
+        let mate = serial_hem(g, lmax, seed);
+        finish_matching(g, mate, lmax, cfg)
+    }
+}
+
+const NO_MOVE: u32 = u32::MAX;
+
+/// Aggregate a vertex's edge weight per neighboring cluster label and
+/// visit each `(label, total)` pair once. Low-degree vertices use the
+/// allocation-light [`ConnBuf`] linear scan; past its stack capacity —
+/// hubs can see up to `deg` *distinct* labels, which would make the scan
+/// O(deg²) on exactly the irregular graphs the cluster scheme targets —
+/// the pairs are sorted by label and merged in O(deg log deg).
+fn for_each_label_weight(
+    g: &CsrGraph,
+    labels: &[Vertex],
+    v: usize,
+    mut visit: impl FnMut(Vertex, f64),
+) {
+    let (nbrs, ws) = g.neighbors_w(v as Vertex);
+    if nbrs.len() <= ConnBuf::STACK {
+        let mut conn = ConnBuf::new();
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            conn.add(labels[u as usize], w);
+        }
+        conn.for_each(visit);
+        return;
+    }
+    let mut pairs: Vec<(Vertex, f64)> =
+        nbrs.iter().zip(ws).map(|(&u, &w)| (labels[u as usize], w)).collect();
+    pairs.sort_unstable_by_key(|&(l, _)| l);
+    let mut i = 0;
+    while i < pairs.len() {
+        let label = pairs[i].0;
+        let mut total = 0.0;
+        while i < pairs.len() && pairs[i].0 == label {
+            total += pairs[i].1;
+            i += 1;
+        }
+        visit(label, total);
+    }
+}
+
+/// Size-constrained label propagation, shared by the device and serial
+/// entry points (the device variant runs the per-vertex label-choice
+/// kernel on the pool; the apply pass is a deterministic host sweep in
+/// vertex order either way, so results are identical across thread
+/// counts).
+///
+/// Each round, half the vertices (a per-round hash parity, preventing
+/// symmetric label swaps) pick the neighboring cluster they are most
+/// strongly connected to — provided joining keeps the cluster below
+/// `lmax` and beats their connection to their current cluster.
+fn cluster_core(
+    g: &CsrGraph,
+    lmax: VWeight,
+    seed: u64,
+    rounds: usize,
+    pool: Option<&Pool>,
+) -> LevelStep {
+    let n = g.n();
+    if n == 0 {
+        return LevelStep { map: Vec::new(), nc: 0, matched_fraction: 0.0, host_cpu_ms: 0.0 };
+    }
+    let mut host_cpu = std::time::Duration::ZERO;
+    let mut labels: Vec<Vertex> = (0..n as Vertex).collect();
+    let mut cw: Vec<VWeight> = g.vw.clone();
+    let desired: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(NO_MOVE)).collect();
+
+    for round in 0..rounds.max(1) {
+        let rseed = hash_u64(seed ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        {
+            let labels = &labels;
+            let cw = &cw;
+            let desired = &desired;
+            let choose = move |v: usize| {
+                desired[v].store(NO_MOVE, Ordering::Relaxed);
+                // Parity gate: only half the vertices move per round, so
+                // two singletons can never swap labels within one round.
+                if hash_u64(rseed ^ v as u64) & 1 != 0 {
+                    return;
+                }
+                let own_label = labels[v];
+                let mut own = 0.0f64;
+                let mut best: Option<(f64, Vertex)> = None;
+                for_each_label_weight(g, labels, v, |label, w| {
+                    if label == own_label {
+                        own = w;
+                        return;
+                    }
+                    // Capacity pre-check against last round's weights;
+                    // re-checked exactly in the apply pass.
+                    if cw[label as usize] + g.vw[v] > lmax {
+                        return;
+                    }
+                    let r = w + 1e-12 * edge_noise(v as Vertex, label, rseed);
+                    if best.map(|(br, bl)| r > br || (r == br && label < bl)).unwrap_or(true) {
+                        best = Some((r, label));
+                    }
+                });
+                if let Some((r, label)) = best {
+                    if r > own {
+                        desired[v].store(label, Ordering::Relaxed);
+                    }
+                }
+            };
+            match pool {
+                Some(p) => p.parallel_for(n, choose),
+                None => (0..n).for_each(choose),
+            }
+        }
+        // Apply in vertex order with exact running cluster weights —
+        // deterministic under any pool size. A serial host pass: its
+        // wall time is charged to the device timeline by the builder.
+        let apply_start = std::time::Instant::now();
+        let mut moved = 0usize;
+        for v in 0..n {
+            let target = desired[v].load(Ordering::Relaxed);
+            if target == NO_MOVE || target == labels[v] {
+                continue;
+            }
+            if cw[target as usize] + g.vw[v] > lmax {
+                continue;
+            }
+            cw[labels[v] as usize] -= g.vw[v];
+            cw[target as usize] += g.vw[v];
+            labels[v] = target;
+            moved += 1;
+        }
+        host_cpu += apply_start.elapsed();
+        if moved == 0 {
+            break;
+        }
+    }
+
+    // Dense relabel in vertex order + cluster sizes.
+    let relabel_start = std::time::Instant::now();
+    let mut remap = vec![u32::MAX; n];
+    let mut map = vec![0 as Vertex; n];
+    let mut nc = 0u32;
+    for v in 0..n {
+        let l = labels[v] as usize;
+        if remap[l] == u32::MAX {
+            remap[l] = nc;
+            nc += 1;
+        }
+        map[v] = remap[l];
+    }
+    let mut size = vec![0u32; nc as usize];
+    for &c in &map {
+        size[c as usize] += 1;
+    }
+    let grouped = map.iter().filter(|&&c| size[c as usize] >= 2).count();
+    host_cpu += relabel_start.elapsed();
+    LevelStep {
+        map,
+        nc: nc as usize,
+        matched_fraction: grouped as f64 / n as f64,
+        host_cpu_ms: host_cpu.as_secs_f64() * 1e3,
+    }
+}
+
+impl CoarsenScheme for ClusterScheme {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Cluster
+    }
+
+    fn step(
+        &self,
+        pool: &Pool,
+        g: &CsrGraph,
+        _el: &EdgeList,
+        lmax: VWeight,
+        seed: u64,
+        cfg: &CoarsenConfig,
+    ) -> LevelStep {
+        cluster_core(g, lmax, seed, cfg.cluster_rounds, Some(pool))
+    }
+
+    fn step_serial(&self, g: &CsrGraph, lmax: VWeight, seed: u64, cfg: &CoarsenConfig) -> LevelStep {
+        cluster_core(g, lmax, seed, cfg.cluster_rounds, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+
+    fn check_map(step: &LevelStep, n: usize) {
+        assert_eq!(step.map.len(), n);
+        let mut seen = vec![false; step.nc];
+        for &c in &step.map {
+            seen[c as usize] = true;
+        }
+        assert!(seen.into_iter().all(|s| s), "cluster map not surjective");
+        assert!((0.0..=1.0).contains(&step.matched_fraction));
+    }
+
+    /// A forest of stars: preference matching pairs at most (hub, one
+    /// leaf) per star, so the matched fraction stays low without the
+    /// two-hop / cluster machinery.
+    fn star_forest(stars: u32, leaves: u32) -> CsrGraph {
+        let n = stars * (leaves + 1);
+        let mut b = GraphBuilder::new(n as usize);
+        for s in 0..stars {
+            let hub = s * (leaves + 1);
+            for i in 1..=leaves {
+                b.add_edge(hub, hub + i, 1.0);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn matching_step_device_matches_serial_shape() {
+        let g = gen::grid2d(24, 24, false);
+        let cfg = CoarsenConfig::device();
+        let el = EdgeList::build(&g);
+        let pool = Pool::new(2);
+        let dev = MATCHING.step(&pool, &g, &el, i64::MAX, 7, &cfg);
+        check_map(&dev, g.n());
+        let ser = MATCHING.step_serial(&g, i64::MAX, 7, &cfg);
+        check_map(&ser, g.n());
+        assert!(dev.matched_fraction > 0.6);
+        assert!(ser.matched_fraction > 0.6);
+    }
+
+    #[test]
+    fn bounded_twohop_fallback_iterates_until_target_or_dry() {
+        let g = star_forest(8, 9);
+        let pool = Pool::new(1);
+        let el = EdgeList::build(&g);
+        let none = CoarsenConfig { max_twohop_passes: 0, ..CoarsenConfig::device() };
+        let some = CoarsenConfig { max_twohop_passes: 2, ..CoarsenConfig::device() };
+        let bare = MATCHING.step(&pool, &g, &el, i64::MAX, 3, &none);
+        let full = MATCHING.step(&pool, &g, &el, i64::MAX, 3, &some);
+        assert!(
+            full.matched_fraction > bare.matched_fraction,
+            "fallback passes must raise the matched fraction ({} vs {})",
+            full.matched_fraction,
+            bare.matched_fraction
+        );
+        assert!(full.nc < bare.nc);
+        check_map(&full, g.n());
+    }
+
+    #[test]
+    fn cluster_step_deterministic_across_thread_counts() {
+        let g = gen::rgg(1_500, 0.06, 9);
+        let cfg = CoarsenConfig::device();
+        let el = EdgeList::build(&g);
+        let one = CLUSTER.step(&Pool::new(1), &g, &el, i64::MAX, 5, &cfg);
+        let four = CLUSTER.step(&Pool::new(4), &g, &el, i64::MAX, 5, &cfg);
+        assert_eq!(one.map, four.map);
+        assert_eq!(one.nc, four.nc);
+        let serial = CLUSTER.step_serial(&g, i64::MAX, 5, &cfg);
+        assert_eq!(one.map, serial.map, "serial oracle diverges from the device step");
+        check_map(&one, g.n());
+    }
+
+    #[test]
+    fn cluster_respects_weight_cap() {
+        let mut g = gen::grid2d(8, 8, false);
+        for v in 0..g.n() {
+            g.vw[v] = 1 + (v % 4) as i64;
+        }
+        let cap = 6;
+        let step = CLUSTER.step_serial(&g, cap, 11, &CoarsenConfig::device());
+        let mut cw = vec![0i64; step.nc];
+        for v in 0..g.n() {
+            cw[step.map[v] as usize] += g.vw[v];
+        }
+        // Singletons heavier than the cap are allowed (they never moved);
+        // multi-vertex clusters must respect it.
+        let mut size = vec![0u32; step.nc];
+        for &c in &step.map {
+            size[c as usize] += 1;
+        }
+        for c in 0..step.nc {
+            if size[c] >= 2 {
+                assert!(cw[c] <= cap, "cluster {c} weight {} over cap", cw[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_shrinks_star_forest_where_matching_stalls() {
+        let g = star_forest(10, 12);
+        let cfg = CoarsenConfig::device();
+        let matching = MATCHING.step_serial(&g, i64::MAX, 3, &CoarsenConfig {
+            max_twohop_passes: 0,
+            ..cfg.clone()
+        });
+        let cluster = CLUSTER.step_serial(&g, i64::MAX, 3, &cfg);
+        assert!(
+            cluster.nc < matching.nc,
+            "cluster {} should out-shrink stalled matching {}",
+            cluster.nc,
+            matching.nc
+        );
+        check_map(&cluster, g.n());
+    }
+}

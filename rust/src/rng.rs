@@ -98,6 +98,23 @@ pub fn hash_u64(x: u64) -> u64 {
     splitmix64(&mut h)
 }
 
+/// Per-level stream seed for multilevel coarsening.
+///
+/// The pipelines used to salt ad hoc — `seed ^ (level << 32)` in the
+/// device algorithms, `seed ^ (level << 24)` in the serial ones — which
+/// collides across `(seed, level)` pairs that differ only in the shifted
+/// bit (e.g. `(s ^ 1 << 24, 0)` and `(s, 1)` fed the serial matcher the
+/// same stream). The seed is mixed through SplitMix64 *before* the level
+/// is folded in, so structured seed relationships no longer line up with
+/// level offsets.
+#[inline]
+pub fn level_seed(seed: u64, level: u64) -> u64 {
+    let mut s = seed;
+    let mixed = splitmix64(&mut s);
+    let mut t = mixed ^ level;
+    splitmix64(&mut t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +177,32 @@ mod tests {
     #[test]
     fn edge_noise_seed_sensitive() {
         assert_ne!(edge_noise(1, 2, 1), edge_noise(1, 2, 2));
+    }
+
+    #[test]
+    fn level_seed_has_no_structured_collisions() {
+        // Regression for the old `seed ^ (level << K)` salting: the pairs
+        // (s, 1) and (s ^ (1 << 24), 0) collided under the serial scheme,
+        // and (s, 1) / (s ^ (1 << 32), 0) under the device scheme.
+        use std::collections::HashSet;
+        let base = 0x0123_4567_89ab_cdefu64;
+        for shift in [16u32, 24, 32] {
+            assert_ne!(
+                level_seed(base, 1),
+                level_seed(base ^ (1 << shift), 0),
+                "shift {shift} collision survived the rework"
+            );
+        }
+        // Broad sweep: every (seed, level) pair in a practical range gets
+        // its own stream.
+        let mut seen = HashSet::new();
+        for s in 0..64u64 {
+            for level in 0..64u64 {
+                assert!(
+                    seen.insert(level_seed(base.wrapping_add(s), level)),
+                    "collision at seed offset {s}, level {level}"
+                );
+            }
+        }
     }
 }

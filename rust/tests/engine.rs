@@ -26,7 +26,8 @@ fn engine() -> Engine {
 #[test]
 fn kv_file_to_spec_to_wire_roundtrip() {
     let text = "graph = rgg15\nhierarchy = 4:8:2\ndistance = 1:10:100\neps = 0.05\n\
-                algorithm = gpu-hm\nrefinement = strong\npolish = 1\nseeds = 9\nopt.adaptive = 0\n";
+                algorithm = gpu-hm\nrefinement = strong\ncoarsening = cluster\npolish = 1\n\
+                seeds = 9\nopt.adaptive = 0\n";
     let cfg = RunConfig::from_kv_text(text).unwrap();
     let spec = cfg.to_spec(cfg.graph.as_deref().unwrap());
 
@@ -34,6 +35,7 @@ fn kv_file_to_spec_to_wire_roundtrip() {
     assert_eq!(spec.eps, 0.05);
     assert_eq!(spec.algorithm, Some(Algorithm::GpuHm));
     assert_eq!(spec.refinement, Refinement::Strong);
+    assert_eq!(spec.coarsening, heipa::multilevel::SchemeKind::Cluster);
     assert!(spec.polish);
     assert_eq!(spec.primary_seed(), 9);
     assert_eq!(spec.opt_bool("adaptive"), Some(false));
@@ -47,7 +49,8 @@ fn kv_file_to_spec_to_wire_roundtrip() {
     // And the wire protocol parses to the same request (via both the
     // blocking `map` verb and the async `submit` verb).
     let line = "map instance=rgg15 algorithm=gpu-hm hierarchy=4:8:2 distance=1:10:100 \
-                eps=0.05 seed=9 refinement=strong polish=1 mapping=1 opt.adaptive=0";
+                eps=0.05 seed=9 refinement=strong coarsening=cluster polish=1 mapping=1 \
+                opt.adaptive=0";
     let heipa::coordinator::protocol::Command::Map { req: parsed, .. } =
         heipa::coordinator::protocol::parse_command(line).unwrap()
     else {

@@ -1,0 +1,183 @@
+//! Integration tests of the unified multilevel subsystem:
+//!
+//! * hierarchy invariants — every level strictly shrinks, every map is a
+//!   valid surjection onto the coarser vertex set, and contraction
+//!   preserves total vertex weight — for both schemes, device and serial;
+//! * cached-hierarchy determinism parity: a prebuilt (engine-cached)
+//!   hierarchy yields bit-identical solver output to an inline build;
+//! * the cluster scheme keeps coarsening where matchings stall;
+//! * the engine's hierarchy cache end to end: a second job on a pinned
+//!   session graph skips the Coarsening/Contraction phases and reports a
+//!   hit through the metrics.
+
+use heipa::algo::Algorithm;
+use heipa::cancel::CancelToken;
+use heipa::engine::{Engine, EngineConfig, MapSpec};
+use heipa::graph::builder::GraphBuilder;
+use heipa::graph::{gen, CsrGraph};
+use heipa::metrics::Phase;
+use heipa::multilevel::{BuildParams, CoarsenConfig, CoarseHierarchy, SchemeKind};
+use heipa::par::Pool;
+use std::sync::Arc;
+
+fn params(coarsest: usize, lmax: i64) -> BuildParams {
+    BuildParams { coarsest, lmax, seed: 42 }
+}
+
+/// Exhaustive invariant check on top of `CoarseHierarchy::validate`:
+/// recompute the per-level weight totals independently.
+fn check_invariants(h: &CoarseHierarchy) {
+    h.validate().unwrap();
+    for lev in 0..h.levels() {
+        let fine = h.graph(lev);
+        let coarse = h.graph(lev + 1);
+        assert!(coarse.n() < fine.n(), "level {lev} must strictly shrink");
+        let map = h.map(lev);
+        let mut w = vec![0i64; coarse.n()];
+        for v in 0..fine.n() {
+            w[map[v] as usize] += fine.vw[v];
+        }
+        assert_eq!(w, coarse.vw, "level {lev}: coarse vertex weights must be member sums");
+    }
+}
+
+#[test]
+fn hierarchy_invariants_hold_for_every_scheme() {
+    let g = Arc::new(gen::rgg(4_000, 0.045, 11));
+    let pool = Pool::new(2);
+    for scheme in [SchemeKind::Matching, SchemeKind::Cluster, SchemeKind::Auto] {
+        let cfg = CoarsenConfig { scheme, ..CoarsenConfig::device() };
+        let h = CoarseHierarchy::build(&pool, g.clone(), &params(128, i64::MAX), &cfg, &CancelToken::new(), None)
+            .unwrap();
+        assert!(h.levels() >= 1, "{scheme:?}: expected at least one coarsening level");
+        assert!(h.coarsest().n() <= 128 || h.stalled(), "{scheme:?}: target not reached");
+        check_invariants(&h);
+        assert_eq!(h.matched_fractions().len(), h.levels());
+        assert!(h.matched_fractions().iter().all(|f| (0.0..=1.0).contains(f)), "{scheme:?}");
+    }
+    // Serial builds satisfy the same invariants.
+    let cfg = CoarsenConfig::serial(160);
+    let hs = CoarseHierarchy::build_serial(&g, &params(160, i64::MAX), &cfg, &CancelToken::new()).unwrap();
+    check_invariants(&hs);
+}
+
+/// A forest of stars — the canonical matching-hostile instance.
+fn star_forest(stars: u32, leaves: u32) -> CsrGraph {
+    let mut b = GraphBuilder::new((stars * (leaves + 1)) as usize);
+    for s in 0..stars {
+        let hub = s * (leaves + 1);
+        for i in 1..=leaves {
+            b.add_edge(hub, hub + i, 1.0);
+        }
+    }
+    b.build()
+}
+
+#[test]
+fn cluster_and_auto_coarsen_star_forests_further_than_pure_matching() {
+    // 20 stars of 49 leaves: a matching removes one pair per star, so a
+    // level keeps 980/1000 > STALL_FRACTION of its vertices and stalls.
+    let g = Arc::new(star_forest(20, 49));
+    let pool = Pool::new(1);
+    let build = |scheme: SchemeKind| {
+        // Two-hop fallback disabled to isolate the scheme comparison.
+        let cfg = CoarsenConfig { scheme, max_twohop_passes: 0, ..CoarsenConfig::device() };
+        CoarseHierarchy::build(&pool, g.clone(), &params(64, i64::MAX), &cfg, &CancelToken::new(), None)
+            .unwrap()
+    };
+    let stalled = build(SchemeKind::Matching);
+    assert!(stalled.stalled(), "pure matching must stall on wide stars");
+    assert_eq!(stalled.coarsest().n(), g.n(), "stalled on the first level");
+    let cluster = build(SchemeKind::Cluster);
+    let auto = build(SchemeKind::Auto);
+    assert!(
+        cluster.coarsest().n() < stalled.coarsest().n() / 4,
+        "cluster ({}) must out-coarsen stalled matching ({})",
+        cluster.coarsest().n(),
+        stalled.coarsest().n()
+    );
+    assert!(
+        auto.coarsest().n() < stalled.coarsest().n() / 4,
+        "auto must fall back to clustering on stalled levels"
+    );
+    check_invariants(&cluster);
+    check_invariants(&auto);
+}
+
+#[test]
+fn gpu_im_output_is_identical_through_a_cached_hierarchy_end_to_end() {
+    // Engine-level determinism parity: three runs — cold (populates the
+    // cache), warm (hit), and a fresh engine (no cache at all) — must
+    // produce the same mapping bit for bit.
+    let g = Arc::new(gen::stencil9(40, 40, 3));
+    let spec = MapSpec::in_memory(g.clone())
+        .hierarchy("2:2:2")
+        .distance("1:10:100")
+        .algo(Some(Algorithm::GpuIm))
+        .seed(5);
+    let warm_engine = Engine::new(EngineConfig { threads: 1, ..Default::default() });
+    let cold = warm_engine.map(&spec).unwrap();
+    let warm = warm_engine.map(&spec).unwrap();
+    assert_eq!(cold.hierarchy_cache, Some(false));
+    assert_eq!(warm.hierarchy_cache, Some(true));
+    assert_eq!(cold.mapping, warm.mapping, "cache hit must be bit-identical");
+    let fresh = Engine::new(EngineConfig { threads: 1, ..Default::default() }).map(&spec).unwrap();
+    assert_eq!(cold.mapping, fresh.mapping, "cache must not change results across engines");
+}
+
+#[test]
+fn second_job_on_a_pinned_graph_skips_coarsening_phases() {
+    // The acceptance path: pin a session graph, submit twice with
+    // different seeds, and observe the hierarchy cache short-circuit the
+    // Coarsening/Contraction phases of the second outcome.
+    let e = Engine::new(EngineConfig { threads: 1, ..Default::default() });
+    e.put_graph("sess", Arc::new(gen::rgg(3_000, 0.05, 9)));
+    let spec = MapSpec::named("sess").hierarchy("2:2").distance("1:10").algo(Some(Algorithm::GpuIm));
+    let first = e.map(&spec.clone().seed(1)).unwrap();
+    let second = e.map(&spec.seed(2)).unwrap();
+    assert_eq!((e.hierarchy_cache_misses(), e.hierarchy_cache_hits()), (1, 1));
+    let p1 = first.phases.as_ref().unwrap();
+    let p2 = second.phases.as_ref().unwrap();
+    assert!(p1.device_ms(Phase::Coarsening) > 0.0);
+    assert!(p1.device_ms(Phase::Contraction) > 0.0);
+    assert!(p2.device_ms(Phase::Coarsening) == 0.0, "hit must skip coarsening");
+    assert!(p2.device_ms(Phase::Contraction) == 0.0, "hit must skip contraction");
+    // Both are full, valid mappings regardless of the cache path.
+    heipa::partition::validate_mapping(&first.mapping, first.n, first.k).unwrap();
+    heipa::partition::validate_mapping(&second.mapping, second.n, second.k).unwrap();
+}
+
+#[test]
+fn jet_and_gpu_im_share_hierarchy_cache_entries() {
+    // The hierarchy is objective-agnostic: same graph, same (k, eps),
+    // same coarsening key — the edge-cut Jet solver reuses the entry the
+    // mapping solver built.
+    let e = Engine::new(EngineConfig { threads: 1, ..Default::default() });
+    e.put_graph("sess", Arc::new(gen::grid2d(40, 40, false)));
+    let base = MapSpec::named("sess").hierarchy("2:2").distance("1:10");
+    e.map(&base.clone().algo(Some(Algorithm::GpuIm))).unwrap();
+    let jet = e.map(&base.algo(Some(Algorithm::Jet))).unwrap();
+    assert_eq!(jet.hierarchy_cache, Some(true), "jet must reuse the gpu-im hierarchy");
+    assert_eq!(e.hierarchy_cache_misses(), 1);
+    assert_eq!(e.hierarchy_cache_hits(), 1);
+}
+
+#[test]
+fn run_matrix_seed_sweep_coarsens_once_per_cell_shape() {
+    // The upload-once/map-many payoff for the harness: a 3-seed sweep
+    // over one in-memory graph and one machine builds exactly one
+    // hierarchy per (graph, k, eps) key and serves the rest from cache.
+    let e = Engine::new(EngineConfig { threads: 1, ..Default::default() });
+    let spec = MapSpec::in_memory(Arc::new(gen::rgg(2_500, 0.05, 4)))
+        .hierarchy("2:2")
+        .distance("1:10")
+        .algo(Some(Algorithm::GpuIm))
+        .seeds(vec![1, 2, 3]);
+    let outs = e.map_all_seeds(&spec).unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(e.hierarchy_cache_misses(), 1, "one build for the whole sweep");
+    assert_eq!(e.hierarchy_cache_hits(), 2);
+    // Seeds still diversify the results (initial mapping + refinement
+    // remain seed-driven even though coarsening is shared).
+    assert!(outs.iter().all(|o| o.comm_cost > 0.0));
+}
