@@ -9,7 +9,7 @@
 
 use super::{rating_exp2, Matching};
 use crate::graph::CsrGraph;
-use crate::par::Pool;
+use crate::par::{ledger, Pool};
 use crate::rng::edge_noise;
 use crate::{VWeight, Vertex};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -34,7 +34,11 @@ pub fn preference_matching(
     let mut matched_total = 0u64;
     for _round in 0..max_rounds {
         // Kernel 1: compute preferences of unmatched vertices.
+        let _k = ledger::kernel("coarsen/match_par:prefs");
         pool.parallel_for(n, |v| {
+            // relaxed: `mate` is frozen during this kernel (only kernel 2
+            // writes it, after a barrier), and `pref[v]` is written only
+            // by unit `v` and read only in the next kernel.
             if mate[v].load(Ordering::Relaxed) != UNMATCHED {
                 return;
             }
@@ -53,11 +57,19 @@ pub fn preference_matching(
                     best = Some((r, u));
                 }
             }
+            // relaxed: `pref[v]` is owned by unit `v` this superstep.
             pref[v].store(best.map(|(_, u)| u).unwrap_or(UNMATCHED), Ordering::Relaxed);
         });
+        drop(_k);
 
         // Kernel 2: match mutual preferences.
+        let _k = ledger::kernel("coarsen/match_par:mutual");
         let matched_this_round = pool.reduce_sum_u64(n, |v| {
+            // relaxed: `pref` is frozen after kernel 1's barrier. `mate`
+            // is written this superstep, but only by the smaller endpoint
+            // of a *mutual* pair: unit `v`'s decision depends only on the
+            // frozen prefs, so a racy `mate` read can only skip work that
+            // would return 0 anyway — the outcome is interleaving-free.
             if mate[v].load(Ordering::Relaxed) != UNMATCHED {
                 return 0;
             }
@@ -67,6 +79,9 @@ pub fn preference_matching(
             }
             if pref[u as usize].load(Ordering::Relaxed) == v as u32 {
                 // Mutual; the smaller endpoint writes both sides.
+                // relaxed: both stores target a mutually-agreed pair — only
+                // the smaller endpoint writes, and the values are read
+                // host-side after the kernel barrier.
                 if (v as u32) < u {
                     mate[v].store(u, Ordering::Relaxed);
                     mate[u as usize].store(v as u32, Ordering::Relaxed);
@@ -75,6 +90,7 @@ pub fn preference_matching(
             }
             0
         });
+        drop(_k);
         if matched_this_round == 0 {
             break;
         }
@@ -86,6 +102,7 @@ pub fn preference_matching(
 
     (0..n)
         .map(|v| {
+            // relaxed: host-side read after the final kernel barrier.
             let m = mate[v].load(Ordering::Relaxed);
             if m == UNMATCHED {
                 v as Vertex
@@ -113,6 +130,8 @@ impl ClaimTable {
     /// Try to claim `v` with tag `tag`; true iff this call won.
     #[inline]
     pub fn claim(&self, v: usize, tag: u64) -> bool {
+        // relaxed: a pure single-location claim — exactly one CAS wins and
+        // no other data is published through it.
         self.slots[v]
             .compare_exchange(u64::MAX, tag, Ordering::Relaxed, Ordering::Relaxed)
             .is_ok()
@@ -136,6 +155,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: multi-thread matching over a 1024-vertex grid, too slow
     fn matches_most_of_a_grid() {
         let g = gen::grid2d(32, 32, false);
         for threads in [1, 4] {
@@ -147,6 +167,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: 1500-vertex rgg at two thread counts, too slow
     fn deterministic_across_thread_counts() {
         let g = gen::rgg(1_500, 0.06, 9);
         let m1 = preference_matching(&g, &Pool::new(1), i64::MAX, 3, 8);

@@ -84,6 +84,8 @@ struct Counters {
 }
 
 fn add_f64(cell: &AtomicU64, v: f64) {
+    // relaxed: commutative f64 accumulation via CAS loop on a statistics
+    // counter; readers only need an approximate snapshot.
     let mut cur = cell.load(Ordering::Relaxed);
     loop {
         let next = (f64::from_bits(cur) + v).to_bits();
@@ -98,6 +100,8 @@ fn add_f64(cell: &AtomicU64, v: f64) {
 fn completion_hook(counters: &Arc<Counters>) -> crate::engine::job::CompletionHook {
     let c = counters.clone();
     Arc::new(move |st: &JobStatus, out: Option<&MapOutcome>| {
+        // relaxed: every arm bumps a monotone statistics counter, read
+        // approximately by `metrics()`.
         match st.state {
             JobState::Done => {
                 c.completed.fetch_add(1, Ordering::Relaxed);
@@ -109,12 +113,15 @@ fn completion_hook(counters: &Arc<Counters>) -> crate::engine::job::CompletionHo
                 }
             }
             JobState::Failed => {
+                // relaxed: statistics counter.
                 c.failures.fetch_add(1, Ordering::Relaxed);
             }
             JobState::Cancelled => {
+                // relaxed: statistics counter.
                 c.cancelled.fetch_add(1, Ordering::Relaxed);
             }
             JobState::Expired => {
+                // relaxed: statistics counter.
                 c.deadline_missed.fetch_add(1, Ordering::Relaxed);
             }
             JobState::Queued | JobState::Running => {}
@@ -203,12 +210,14 @@ impl Service {
         };
         match self.engine.submit_opts(&request.to_spec(), submit) {
             Ok(h) => {
+                // relaxed: statistics counter.
                 self.counters.requests.fetch_add(1, Ordering::Relaxed);
                 self.register(h.clone());
                 Ok(h)
             }
             Err(e) => {
                 if matches!(e, SubmitError::Busy { .. }) {
+                    // relaxed: statistics counter.
                     self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(e)
@@ -284,6 +293,8 @@ impl Service {
 
     pub fn metrics(&self) -> ServiceMetrics {
         let c = &self.counters;
+        // relaxed: every load below is an approximate statistics snapshot;
+        // exactness across counters is not promised to callers.
         ServiceMetrics {
             requests: c.requests.load(Ordering::Relaxed),
             failures: c.failures.load(Ordering::Relaxed),
@@ -295,6 +306,7 @@ impl Service {
             hierarchy_cache_misses: self.engine.hierarchy_cache_misses(),
             queue_depth: self.engine.queue_depth(),
             in_flight: self.engine.in_flight(),
+            // relaxed: same approximate-snapshot rationale as above.
             total_host_ms: f64::from_bits(c.host_ms_bits.load(Ordering::Relaxed)),
             total_device_ms: f64::from_bits(c.device_ms_bits.load(Ordering::Relaxed)),
             per_algorithm: c.per_algorithm.lock().unwrap_or_else(PoisonError::into_inner).clone(),

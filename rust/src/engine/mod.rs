@@ -326,6 +326,7 @@ impl EngineShared {
         cancel: &CancelToken,
     ) -> Option<HierarchyHandle> {
         if let Some(hier) = lock(&self.hierarchies).get(g, params) {
+            // relaxed: monotone statistics counter, read approximately.
             self.hierarchy_hits.fetch_add(1, Ordering::Relaxed);
             return Some(HierarchyHandle { hier, cached: true });
         }
@@ -340,6 +341,7 @@ impl EngineShared {
             cancel,
             None,
         )?);
+        // relaxed: monotone statistics counter, read approximately.
         self.hierarchy_misses.fetch_add(1, Ordering::Relaxed);
         lock(&self.hierarchies).insert(g.clone(), params.clone(), hier.clone());
         Some(HierarchyHandle { hier, cached: false })
@@ -542,6 +544,8 @@ impl Engine {
         if shared.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::ShutDown);
         }
+        // relaxed: the fetch_add itself guarantees unique ids; no other
+        // data is published through these counters.
         let id = JobId(shared.next_id.fetch_add(1, Ordering::Relaxed));
         let token = match opts.deadline {
             Some(d) => CancelToken::with_deadline(d),
@@ -550,6 +554,8 @@ impl Engine {
         let handle = JobHandle::new_queued(id, token);
         let mut job = queue::QueuedJob {
             priority: opts.priority,
+            // relaxed: uniqueness comes from the RMW; FIFO tie-breaking
+            // only needs distinct, not globally ordered, values.
             seq: shared.next_seq.fetch_add(1, Ordering::Relaxed),
             spec: spec.clone(),
             handle: handle.clone(),
@@ -668,12 +674,14 @@ impl Engine {
     /// Jobs whose multilevel hierarchy was served from the cache
     /// (cumulative since engine start).
     pub fn hierarchy_cache_hits(&self) -> u64 {
+        // relaxed: approximate statistics read.
         self.shared.hierarchy_hits.load(Ordering::Relaxed)
     }
 
     /// Jobs that had to build (and cache) their multilevel hierarchy
     /// (cumulative since engine start).
     pub fn hierarchy_cache_misses(&self) -> u64 {
+        // relaxed: approximate statistics read.
         self.shared.hierarchy_misses.load(Ordering::Relaxed)
     }
 

@@ -173,6 +173,7 @@ impl EdgeList {
     pub fn build_par(pool: &crate::par::Pool, g: &CsrGraph) -> Self {
         let mut eu = vec![0 as Vertex; g.adj.len()];
         let ptr = crate::par::SharedMut::new(&mut eu);
+        let _k = crate::par::ledger::kernel("graph:edge_sources");
         pool.parallel_for(g.n(), |v| {
             for i in g.xadj[v] as usize..g.xadj[v + 1] as usize {
                 // SAFETY: CSR ranges are disjoint per vertex.

@@ -8,7 +8,7 @@
 //! provided for the CPU baselines and as a differential-testing oracle.
 
 use super::CsrGraph;
-use crate::par::Pool;
+use crate::par::{ledger, Pool};
 use crate::{Block, Vertex};
 use std::sync::atomic::{AtomicU32, Ordering};
 
@@ -26,27 +26,38 @@ pub fn build_subgraph(pool: &Pool, g: &CsrGraph, part: &[Block], block: Block) -
     debug_assert_eq!(part.len(), n);
 
     // Phase 1: n', m' (directed), w' via parallel_reduce.
+    let _k = ledger::kernel("graph/subgraph:count");
     let n_sub = pool.reduce_sum_u64(n, |v| (part[v] == block) as u64) as usize;
+    drop(_k);
     // (w' is not needed by the construction itself; the caller computes it.)
 
     // Phase 2: remap M via parallel_scan over the indicator.
+    let _k = ledger::kernel("graph/subgraph:remap_scan");
     let map = pool.scan_exclusive(n, |v| (part[v] == block) as u64);
+    drop(_k);
 
     // Phase 3a: new degrees, then offsets by prefix sum.
     let deg = {
         let deg: Vec<AtomicU32> = (0..n_sub).map(|_| AtomicU32::new(0)).collect();
+        let _k = ledger::kernel("graph/subgraph:degrees");
         pool.parallel_for(n, |v| {
             if part[v] == block {
                 let mut d = 0u32;
                 for &u in g.neighbors(v as Vertex) {
                     d += (part[u as usize] == block) as u32;
                 }
+                // relaxed: `map[v]` is unique per selected `v` (exclusive
+                // scan of the indicator), so each slot has one writer and
+                // is read only after the barrier.
                 deg[map[v] as usize].store(d, Ordering::Relaxed);
             }
         });
         deg
     };
+    let _k = ledger::kernel("graph/subgraph:offsets_scan");
+    // relaxed: degrees are frozen after the barrier above.
     let xadj_scan = pool.scan_exclusive(n_sub, |v| deg[v].load(Ordering::Relaxed) as u64);
+    drop(_k);
     let m_sub_dir = xadj_scan[n_sub] as usize;
 
     // Phase 3b: insert edges. Each vertex owns a disjoint output range, so
@@ -58,6 +69,7 @@ pub fn build_subgraph(pool: &Pool, g: &CsrGraph, part: &[Block], block: Block) -
         let adj_ptr = crate::par::SharedMut::new(&mut adj);
         let ew_ptr = crate::par::SharedMut::new(&mut ew);
         let l2p_ptr = crate::par::SharedMut::new(&mut local_to_parent);
+        let _k = ledger::kernel("graph/subgraph:insert_edges");
         pool.parallel_for(n, |v| {
             if part[v] != block {
                 return;
@@ -69,6 +81,9 @@ pub fn build_subgraph(pool: &Pool, g: &CsrGraph, part: &[Block], block: Block) -
             let (nbrs, ws) = g.neighbors_w(v as Vertex);
             for (&u, &w) in nbrs.iter().zip(ws) {
                 if part[u as usize] == block {
+                    // SAFETY: unit `v` writes only inside its own output
+                    // range [xadj_scan[lv], xadj_scan[lv+1]) — disjoint by
+                    // construction of the offsets prefix sum.
                     unsafe {
                         adj_ptr.write(i, map[u as usize] as Vertex);
                         ew_ptr.write(i, w);

@@ -72,6 +72,7 @@ pub fn run_matrix(
         algo: Algorithm,
         jobs: Vec<JobHandle>,
     }
+    device_check_banner();
     // Phase 1: submit every (instance, machine, algorithm, seed) job.
     // Submission blocks on queue space (never drops cells), so a matrix
     // larger than `queue_cap` interleaves submission with execution.
@@ -150,6 +151,28 @@ pub fn write_csv(records: &[ExpRecord], path: &std::path::Path) -> anyhow::Resul
         writeln!(f, "{}", r.to_csv())?;
     }
     Ok(())
+}
+
+/// Report checked-device mode once per run. The `HEIPA_DEVICE_CHECK`
+/// switch only has teeth when the `device-check` feature is compiled in;
+/// a user who sets the variable on a normal build gets a loud warning
+/// instead of silently-unchecked kernels. Returns whether the shadow
+/// checker is live so callers can annotate their own output.
+pub fn device_check_banner() -> bool {
+    let active = crate::par::device_check_active();
+    let requested = std::env::var("HEIPA_DEVICE_CHECK").map(|v| v != "0").unwrap_or(false);
+    if active {
+        eprintln!(
+            "heipa: checked-device mode ON (shadow access log validates every kernel; \
+             expect a large slowdown — timings are not comparable)"
+        );
+    } else if requested {
+        eprintln!(
+            "heipa: warning: HEIPA_DEVICE_CHECK is set but this binary was built without \
+             `--features device-check`; kernels are NOT being checked"
+        );
+    }
+    active
 }
 
 /// Seeds/machine subsetting from the environment, so the full paper

@@ -423,6 +423,9 @@ impl CoarseHierarchy {
             let mut fine_part = vec![0 as Block; fine.n()];
             timed_opt!(phases, Phase::Uncontraction, {
                 let fp = crate::par::SharedMut::new(&mut fine_part);
+                let _k = crate::par::ledger::kernel("multilevel/hierarchy:project");
+                // SAFETY: unit `v` writes only slot `v`; `part`/`map` are
+                // read-only in this kernel.
                 pool.parallel_for(fine.n(), |v| unsafe {
                     fp.write(v, part[map[v] as usize]);
                 });

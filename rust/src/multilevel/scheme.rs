@@ -216,6 +216,8 @@ fn cluster_core(
             let cw = &cw;
             let desired = &desired;
             let choose = move |v: usize| {
+                // relaxed: `desired[v]` is owned by unit `v` during this
+                // kernel; the host reads it after the barrier.
                 desired[v].store(NO_MOVE, Ordering::Relaxed);
                 // Parity gate: only half the vertices move per round, so
                 // two singletons can never swap labels within one round.
@@ -242,10 +244,12 @@ fn cluster_core(
                 });
                 if let Some((r, label)) = best {
                     if r > own {
+                        // relaxed: unit-owned slot (see above).
                         desired[v].store(label, Ordering::Relaxed);
                     }
                 }
             };
+            let _k = crate::par::ledger::kernel("multilevel/scheme:lp_choose");
             match pool {
                 Some(p) => p.parallel_for(n, choose),
                 None => (0..n).for_each(choose),
@@ -257,6 +261,7 @@ fn cluster_core(
         let apply_start = std::time::Instant::now();
         let mut moved = 0usize;
         for v in 0..n {
+            // relaxed: host-side read after the kernel barrier.
             let target = desired[v].load(Ordering::Relaxed);
             if target == NO_MOVE || target == labels[v] {
                 continue;

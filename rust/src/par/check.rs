@@ -1,0 +1,455 @@
+//! Checked-device mode: a shadow access log that validates the BSP
+//! disjointness contract at every kernel barrier.
+//!
+//! Compiled only under `feature = "device-check"`. Every kernel launch
+//! opens a *launch epoch*; while it is open, [`super::SharedMut`] and
+//! [`super::AtomicList`] record each access tagged with the **logical work
+//! unit** that performed it (the `parallel_for` index, the reduce worker
+//! slot, the scan block id — not the OS thread). When the launch's barrier
+//! completes, the log is validated:
+//!
+//! - **write/write** — no location may be written non-atomically by two
+//!   distinct logical units within one superstep;
+//! - **write/read** — no unit may read a location another unit wrote (or
+//!   atomically appended) within the same superstep; reads of data written
+//!   by *earlier* kernels are fine, that is what the barrier is for.
+//!
+//! Tagging by logical index makes the check *interleaving-independent*:
+//! two units that would collide are flagged even when the scheduler happens
+//! to run them on the same thread — including at `threads == 1`, where no
+//! data race can physically occur but the contract violation is still a
+//! bug on a real device. Atomic appends never conflict with each other.
+//!
+//! Conflicts panic by default, naming the kernel label (see
+//! [`super::ledger::kernel`]), the buffer, the element index, and the two
+//! logical units. Tests call [`set_panic_on_conflict`] +
+//! [`take_conflicts`] to assert on diagnostics instead.
+
+use super::ledger;
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Logical unit ids at or above this base denote *internal* pool units
+/// (reduce worker slots, scan blocks) rather than user work-item indices;
+/// the offset only disambiguates diagnostics — conflict detection treats
+/// all unit ids uniformly.
+pub const INTERNAL_UNIT_BASE: u64 = 1 << 62;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+    /// Atomically-published write (e.g. an [`super::AtomicList`] append):
+    /// never conflicts with other atomic writes, still conflicts with a
+    /// same-superstep non-atomic read or write by another unit.
+    AtomicWrite,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConflictKind {
+    /// Two distinct logical units wrote one location in one superstep.
+    WriteWrite,
+    /// A location written this superstep was read non-atomically by a
+    /// different logical unit in the same superstep.
+    ReadWrite,
+}
+
+impl std::fmt::Display for ConflictKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConflictKind::WriteWrite => write!(f, "write/write"),
+            ConflictKind::ReadWrite => write!(f, "write/read"),
+        }
+    }
+}
+
+/// One validated contract violation, as reported at a kernel barrier.
+#[derive(Clone, Debug)]
+pub struct Conflict {
+    /// Label of the launch site ([`ledger::kernel`]), or `"<unlabeled>"`.
+    pub kernel: &'static str,
+    pub kind: ConflictKind,
+    /// Base address of the shadowed buffer (identifies *which* buffer).
+    pub base: usize,
+    /// Element index within that buffer.
+    pub index: usize,
+    /// The two conflicting logical unit ids (writer first for
+    /// [`ConflictKind::ReadWrite`]).
+    pub units: (u64, u64),
+}
+
+impl std::fmt::Display for Conflict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "device-check: {} conflict in kernel `{}` at buffer {:#x} index {}: logical units {} and {}",
+            self.kind,
+            self.kernel,
+            self.base,
+            self.index,
+            fmt_unit(self.units.0),
+            fmt_unit(self.units.1),
+        )
+    }
+}
+
+fn fmt_unit(u: u64) -> String {
+    if u >= INTERNAL_UNIT_BASE {
+        format!("internal#{}", u - INTERNAL_UNIT_BASE)
+    } else {
+        u.to_string()
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Access {
+    base: usize,
+    index: usize,
+    unit: u64,
+    kind: AccessKind,
+}
+
+struct LaunchLog {
+    label: &'static str,
+    accesses: Vec<Access>,
+}
+
+struct Registry {
+    /// Open launches by id. A map (not a single slot) because independent
+    /// pools on different host threads may have kernels in flight at once.
+    open: Mutex<HashMap<u64, LaunchLog>>,
+    next_id: AtomicU64,
+    conflicts: Mutex<Vec<Conflict>>,
+    panic_on_conflict: AtomicBool,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        open: Mutex::new(HashMap::new()),
+        next_id: AtomicU64::new(1),
+        conflicts: Mutex::new(Vec::new()),
+        panic_on_conflict: AtomicBool::new(true),
+    })
+}
+
+thread_local! {
+    /// Launch id the current thread is executing inside (0 = host code).
+    static CURRENT_LAUNCH: Cell<u64> = const { Cell::new(0) };
+    /// Logical unit id the current thread is executing on behalf of.
+    static CURRENT_UNIT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Is checked mode on? Compiled-in by the feature, it defaults to
+/// **enabled** and can be switched off with `HEIPA_DEVICE_CHECK=0`
+/// (the harness reports the state; any other value, or unset, keeps it on).
+pub fn enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var("HEIPA_DEVICE_CHECK").map_or(true, |v| v != "0"))
+}
+
+/// Route conflicts to [`take_conflicts`] instead of panicking (tests).
+/// Returns the previous setting.
+pub fn set_panic_on_conflict(panic: bool) -> bool {
+    // relaxed: a test-harness toggle flipped outside any kernel; the value
+    // is only consulted at barriers, which fully synchronize via mutexes.
+    registry().panic_on_conflict.swap(panic, Ordering::Relaxed)
+}
+
+/// Drain the conflicts recorded since the last call.
+pub fn take_conflicts() -> Vec<Conflict> {
+    std::mem::take(&mut *lock(&registry().conflicts))
+}
+
+/// Number of conflicts currently recorded (not yet drained).
+pub fn conflict_count() -> usize {
+    lock(&registry().conflicts).len()
+}
+
+/// Poison-tolerant lock: checker state stays consistent across the panics
+/// the checker itself throws (straight-line updates only under the lock).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Open a launch epoch; returns its id (0 when checking is disabled).
+/// Captures the submitting thread's kernel label.
+pub(super) fn begin_launch() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let reg = registry();
+    // relaxed: the id is a unique ticket; the registry mutex below is the
+    // synchronization point for the log itself.
+    let id = reg.next_id.fetch_add(1, Ordering::Relaxed);
+    let label = ledger::current_kernel().unwrap_or("<unlabeled>");
+    lock(&reg.open).insert(id, LaunchLog { label, accesses: Vec::new() });
+    id
+}
+
+/// Close a launch epoch and validate its access log; called on the
+/// submitting thread after the pool barrier, so every worker's accesses
+/// are already published (the barrier's mutex orders them). Panics on the
+/// first conflict unless [`set_panic_on_conflict`]`(false)`.
+pub(super) fn end_launch(id: u64) {
+    if id == 0 {
+        return;
+    }
+    let reg = registry();
+    let Some(log) = lock(&reg.open).remove(&id) else { return };
+    let conflicts = validate(&log);
+    if conflicts.is_empty() {
+        return;
+    }
+    let first = conflicts[0].clone();
+    let n = conflicts.len();
+    lock(&reg.conflicts).extend(conflicts);
+    // relaxed: see set_panic_on_conflict.
+    if reg.panic_on_conflict.load(Ordering::Relaxed) {
+        panic!("{first}{}", if n > 1 { format!(" (+{} more)", n - 1) } else { String::new() });
+    }
+}
+
+/// Per-location summary accumulated while scanning a launch's access log.
+#[derive(Default)]
+struct LocState {
+    writer: Option<u64>,
+    atomic_writer: Option<u64>,
+    reader: Option<u64>,
+    reported: bool,
+}
+
+fn validate(log: &LaunchLog) -> Vec<Conflict> {
+    // Cap the report per launch: one seeded race in an n-sized kernel
+    // would otherwise produce n conflicts.
+    const MAX_CONFLICTS: usize = 16;
+    let mut locs: HashMap<(usize, usize), LocState> = HashMap::new();
+    let mut out = Vec::new();
+    for a in &log.accesses {
+        if out.len() >= MAX_CONFLICTS {
+            break;
+        }
+        let st = locs.entry((a.base, a.index)).or_default();
+        if st.reported {
+            continue;
+        }
+        let mut conflict = None;
+        match a.kind {
+            AccessKind::Write => {
+                if let Some(w) = st.writer.or(st.atomic_writer) {
+                    if w != a.unit {
+                        conflict = Some((ConflictKind::WriteWrite, (w, a.unit)));
+                    }
+                }
+                if conflict.is_none() {
+                    if let Some(r) = st.reader {
+                        if r != a.unit {
+                            conflict = Some((ConflictKind::ReadWrite, (a.unit, r)));
+                        }
+                    }
+                }
+                st.writer.get_or_insert(a.unit);
+            }
+            AccessKind::AtomicWrite => {
+                if let Some(w) = st.writer {
+                    if w != a.unit {
+                        conflict = Some((ConflictKind::WriteWrite, (w, a.unit)));
+                    }
+                }
+                if conflict.is_none() {
+                    if let Some(r) = st.reader {
+                        if r != a.unit {
+                            conflict = Some((ConflictKind::ReadWrite, (a.unit, r)));
+                        }
+                    }
+                }
+                st.atomic_writer.get_or_insert(a.unit);
+            }
+            AccessKind::Read => {
+                if let Some(w) = st.writer.or(st.atomic_writer) {
+                    if w != a.unit {
+                        conflict = Some((ConflictKind::ReadWrite, (w, a.unit)));
+                    }
+                }
+                st.reader.get_or_insert(a.unit);
+            }
+        }
+        if let Some((kind, units)) = conflict {
+            st.reported = true;
+            out.push(Conflict {
+                kernel: log.label,
+                kind,
+                base: a.base,
+                index: a.index,
+                units,
+            });
+        }
+    }
+    out
+}
+
+/// RAII guard marking the current thread as executing inside launch `id`;
+/// restores the previous launch/unit on drop (nested inline launches).
+pub(super) struct EnterGuard {
+    prev_launch: u64,
+    prev_unit: u64,
+}
+
+pub(super) fn enter(id: u64) -> EnterGuard {
+    let prev_launch = CURRENT_LAUNCH.with(|c| c.replace(id));
+    let prev_unit = CURRENT_UNIT.with(|c| c.replace(0));
+    EnterGuard { prev_launch, prev_unit }
+}
+
+impl Drop for EnterGuard {
+    fn drop(&mut self) {
+        CURRENT_LAUNCH.with(|c| c.set(self.prev_launch));
+        CURRENT_UNIT.with(|c| c.set(self.prev_unit));
+    }
+}
+
+/// Tag subsequent accesses on this thread with logical unit `u`.
+#[inline]
+pub(super) fn set_unit(u: u64) {
+    CURRENT_UNIT.with(|c| c.set(u));
+}
+
+/// Record one element access against the current launch (no-op in host
+/// code, i.e. outside any launch epoch on this thread).
+#[inline]
+pub(super) fn record(base: usize, index: usize, kind: AccessKind) {
+    let id = CURRENT_LAUNCH.with(|c| c.get());
+    if id == 0 {
+        return;
+    }
+    let unit = CURRENT_UNIT.with(|c| c.get());
+    let mut open = lock(&registry().open);
+    if let Some(log) = open.get_mut(&id) {
+        log.accesses.push(Access { base, index, unit, kind });
+    }
+}
+
+/// Record a contiguous range of accesses (e.g. a `SharedMut::slice` claim).
+#[inline]
+pub(super) fn record_range(base: usize, start: usize, len: usize, kind: AccessKind) {
+    let id = CURRENT_LAUNCH.with(|c| c.get());
+    if id == 0 {
+        return;
+    }
+    let unit = CURRENT_UNIT.with(|c| c.get());
+    let mut open = lock(&registry().open);
+    if let Some(log) = open.get_mut(&id) {
+        log.accesses.extend((start..start + len).map(|index| Access { base, index, unit, kind }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(accesses: Vec<Access>) -> LaunchLog {
+        LaunchLog { label: "test:kernel", accesses }
+    }
+
+    fn acc(index: usize, unit: u64, kind: AccessKind) -> Access {
+        Access { base: 0x1000, index, unit, kind }
+    }
+
+    #[test]
+    fn disjoint_writes_are_clean() {
+        let log = log_with((0..100).map(|i| acc(i, i as u64, AccessKind::Write)).collect());
+        assert!(validate(&log).is_empty());
+    }
+
+    #[test]
+    fn same_unit_write_then_read_is_clean() {
+        let log = log_with(vec![
+            acc(3, 7, AccessKind::Write),
+            acc(3, 7, AccessKind::Read),
+        ]);
+        assert!(validate(&log).is_empty());
+    }
+
+    #[test]
+    fn write_write_flagged_once_per_location() {
+        let log = log_with(vec![
+            acc(5, 1, AccessKind::Write),
+            acc(5, 2, AccessKind::Write),
+            acc(5, 3, AccessKind::Write),
+        ]);
+        let c = validate(&log);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].kind, ConflictKind::WriteWrite);
+        assert_eq!(c[0].units, (1, 2));
+        assert_eq!(c[0].kernel, "test:kernel");
+        assert_eq!(c[0].index, 5);
+    }
+
+    #[test]
+    fn cross_unit_read_of_written_slot_flagged() {
+        let log = log_with(vec![
+            acc(9, 4, AccessKind::Write),
+            acc(9, 6, AccessKind::Read),
+        ]);
+        let c = validate(&log);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].kind, ConflictKind::ReadWrite);
+        assert_eq!(c[0].units, (4, 6));
+    }
+
+    #[test]
+    fn read_then_other_unit_write_flagged() {
+        // Order in the log is arbitrary (interleaving-independent): the
+        // read may be recorded before the write and must still be flagged.
+        let log = log_with(vec![
+            acc(2, 6, AccessKind::Read),
+            acc(2, 4, AccessKind::Write),
+        ]);
+        let c = validate(&log);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].kind, ConflictKind::ReadWrite);
+        assert_eq!(c[0].units, (4, 6), "writer reported first");
+    }
+
+    #[test]
+    fn atomic_appends_do_not_conflict_with_each_other() {
+        let log = log_with(vec![
+            acc(0, 1, AccessKind::AtomicWrite),
+            acc(0, 2, AccessKind::AtomicWrite),
+            acc(1, 3, AccessKind::AtomicWrite),
+        ]);
+        assert!(validate(&log).is_empty());
+    }
+
+    #[test]
+    fn atomic_write_vs_plain_access_conflicts() {
+        let log = log_with(vec![
+            acc(0, 1, AccessKind::AtomicWrite),
+            acc(0, 2, AccessKind::Read),
+        ]);
+        let c = validate(&log);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].kind, ConflictKind::ReadWrite);
+
+        let log = log_with(vec![
+            acc(4, 1, AccessKind::Write),
+            acc(4, 2, AccessKind::AtomicWrite),
+        ]);
+        let c = validate(&log);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].kind, ConflictKind::WriteWrite);
+    }
+
+    #[test]
+    fn conflict_report_is_capped() {
+        let mut accesses = Vec::new();
+        for i in 0..1000 {
+            accesses.push(acc(i, 1, AccessKind::Write));
+            accesses.push(acc(i, 2, AccessKind::Write));
+        }
+        let c = validate(&log_with(accesses));
+        assert!(!c.is_empty() && c.len() <= 16);
+    }
+}

@@ -5,11 +5,59 @@
 //! the GPU cost model ([`super::cost`]): the paper's algorithms are
 //! sequences of bulk-synchronous device kernels, so `(launches, items)`
 //! fully determines the modeled device time.
+//!
+//! The ledger also carries the **kernel label scope**: launch sites open a
+//! [`KernelScope`] naming the kernel (`"coarsen/match_par:prefs"`, …), and
+//! diagnostics — in particular the `device-check` race checker — read
+//! [`current_kernel`] to attribute a launch to its site.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+// relaxed: the ledger counters are independent monotonic tallies; readers
+// only consume them after the kernel barrier (or tolerate small skew in
+// live snapshots), so no cross-location ordering is required.
 static LAUNCHES: AtomicU64 = AtomicU64::new(0);
 static WORK_ITEMS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Stack of kernel labels opened on this (submitting) thread. A stack,
+    /// not a cell, so nested launches (which run inline) restore the outer
+    /// label on drop.
+    static KERNEL_STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard naming every launch issued while it is alive; created by
+/// [`kernel`], popped on drop.
+pub struct KernelScope(());
+
+impl Drop for KernelScope {
+    fn drop(&mut self) {
+        KERNEL_STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// Open a label scope for the kernels launched until the guard drops:
+///
+/// ```ignore
+/// let _k = ledger::kernel("coarsen/match_par:prefs");
+/// pool.parallel_for(n, |v| { ... });
+/// ```
+///
+/// Labels are `&'static str` by design — launch sites are static program
+/// points, and the checker must not allocate per launch.
+#[must_use = "the label is popped when the guard drops"]
+pub fn kernel(label: &'static str) -> KernelScope {
+    KERNEL_STACK.with(|s| s.borrow_mut().push(label));
+    KernelScope(())
+}
+
+/// The innermost kernel label on this thread, if any launch site named one.
+pub fn current_kernel() -> Option<&'static str> {
+    KERNEL_STACK.with(|s| s.borrow().last().copied())
+}
 
 /// A snapshot of the ledger counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -30,6 +78,7 @@ impl Snapshot {
 
 #[inline]
 pub(crate) fn record_launch(items: u64) {
+    // relaxed: independent statistics counters (see the statics above).
     LAUNCHES.fetch_add(1, Ordering::Relaxed);
     WORK_ITEMS.fetch_add(items, Ordering::Relaxed);
 }
@@ -39,12 +88,15 @@ pub(crate) fn record_launch(items: u64) {
 /// moved). Used by the pipelines to account the paper's "Misc" phase.
 #[inline]
 pub fn charge(launches: u64, items: u64) {
+    // relaxed: independent statistics counters (see the statics above).
     LAUNCHES.fetch_add(launches, Ordering::Relaxed);
     WORK_ITEMS.fetch_add(items, Ordering::Relaxed);
 }
 
 /// Read the current counters.
 pub fn snapshot() -> Snapshot {
+    // relaxed: live snapshots tolerate skew between the two counters;
+    // per-experiment accounting reads after the kernel barrier anyway.
     Snapshot {
         launches: LAUNCHES.load(Ordering::Relaxed),
         work_items: WORK_ITEMS.load(Ordering::Relaxed),
@@ -53,6 +105,7 @@ pub fn snapshot() -> Snapshot {
 
 /// Reset both counters to zero (tests / per-experiment accounting).
 pub fn reset() {
+    // relaxed: callers reset between experiments, never inside a kernel.
     LAUNCHES.store(0, Ordering::Relaxed);
     WORK_ITEMS.store(0, Ordering::Relaxed);
 }
@@ -71,6 +124,21 @@ mod tests {
         let delta = snapshot().since(before);
         assert_eq!(delta.launches, 2);
         assert_eq!(delta.work_items, 150);
+    }
+
+    #[test]
+    fn kernel_labels_nest_and_restore() {
+        assert_eq!(current_kernel(), None);
+        {
+            let _outer = kernel("outer");
+            assert_eq!(current_kernel(), Some("outer"));
+            {
+                let _inner = kernel("inner");
+                assert_eq!(current_kernel(), Some("inner"));
+            }
+            assert_eq!(current_kernel(), Some("outer"));
+        }
+        assert_eq!(current_kernel(), None);
     }
 
     #[test]

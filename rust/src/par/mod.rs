@@ -22,11 +22,33 @@
 //! rationale. Wall-clock on this host and modeled device time are reported
 //! side by side by the benchmark harness.
 
+//!
+//! A **checked-device mode** (`feature = "device-check"`, module `check`)
+//! adds a shadow access log to [`SharedMut`], [`AtomicList`] and the
+//! reduce/scan scratch buffers, and validates the BSP disjointness
+//! contract at every kernel barrier — see `check` for the conflict rules.
+
+#[cfg(feature = "device-check")]
+pub mod check;
 pub mod cost;
 pub mod ledger;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Is the checked-device shadow log active in this build and run?
+/// Always `false` without `feature = "device-check"`; with it, defaults to
+/// `true` unless `HEIPA_DEVICE_CHECK=0` (see `check::enabled`).
+pub fn device_check_active() -> bool {
+    #[cfg(feature = "device-check")]
+    {
+        check::enabled()
+    }
+    #[cfg(not(feature = "device-check"))]
+    {
+        false
+    }
+}
 
 /// A worker pool executing bulk-synchronous parallel primitives.
 ///
@@ -113,24 +135,45 @@ impl Pool {
         F: Fn(usize) + Sync,
     {
         ledger::record_launch(n as u64);
+        #[cfg(feature = "device-check")]
+        let launch = check::begin_launch();
         let Some(ws) = self.dispatchable(n) else {
-            for i in 0..n {
-                f(i);
+            {
+                #[cfg(feature = "device-check")]
+                let _chk = check::enter(launch);
+                for i in 0..n {
+                    #[cfg(feature = "device-check")]
+                    check::set_unit(i as u64);
+                    f(i);
+                }
             }
+            #[cfg(feature = "device-check")]
+            check::end_launch(launch);
             return;
         };
         let next = AtomicUsize::new(0);
         let chunk = chunk_size(n, self.threads);
-        ws.run(&|_w| loop {
-            let start = next.fetch_add(chunk, Ordering::Relaxed);
-            if start >= n {
-                break;
-            }
-            let end = (start + chunk).min(n);
-            for i in start..end {
-                f(i);
+        ws.run(&|_w| {
+            #[cfg(feature = "device-check")]
+            let _chk = check::enter(launch);
+            loop {
+                // relaxed: chunk-claim ticket; each index is processed by
+                // exactly one claimant and the pool barrier (mutex/condvar)
+                // publishes all results to the submitter.
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    #[cfg(feature = "device-check")]
+                    check::set_unit(i as u64);
+                    f(i);
+                }
             }
         });
+        #[cfg(feature = "device-check")]
+        check::end_launch(launch);
     }
 
     /// `parallel_reduce` with an associative combiner:
@@ -142,11 +185,21 @@ impl Pool {
         C: Fn(T, T) -> T + Sync + Send,
     {
         ledger::record_launch(n as u64);
+        #[cfg(feature = "device-check")]
+        let launch = check::begin_launch();
         let Some(ws) = self.dispatchable(n) else {
             let mut acc = identity;
-            for i in 0..n {
-                acc = combine(acc, f(i));
+            {
+                #[cfg(feature = "device-check")]
+                let _chk = check::enter(launch);
+                for i in 0..n {
+                    #[cfg(feature = "device-check")]
+                    check::set_unit(i as u64);
+                    acc = combine(acc, f(i));
+                }
             }
+            #[cfg(feature = "device-check")]
+            check::end_launch(launch);
             return acc;
         };
         let next = AtomicUsize::new(0);
@@ -160,22 +213,34 @@ impl Pool {
             let f = &f;
             let combine = &combine;
             ws.run(&move |w| {
+                #[cfg(feature = "device-check")]
+                let _chk = check::enter(launch);
+                // The scratch slot is claimed under an *internal* unit id
+                // (one per worker) so the checker validates the partials
+                // buffer too: a duplicate worker id would be flagged.
+                #[cfg(feature = "device-check")]
+                check::set_unit(check::INTERNAL_UNIT_BASE + w as u64);
                 // SAFETY: worker ids are distinct, so slots are disjoint.
                 let slot = unsafe { pp.slice(w, 1) };
                 let mut acc = slot[0].take().expect("partial seeded");
                 loop {
+                    // relaxed: chunk-claim ticket (see parallel_for).
                     let start = next.fetch_add(chunk, Ordering::Relaxed);
                     if start >= n {
                         break;
                     }
                     let end = (start + chunk).min(n);
                     for i in start..end {
+                        #[cfg(feature = "device-check")]
+                        check::set_unit(i as u64);
                         acc = combine(acc, f(i));
                     }
                 }
                 slot[0] = Some(acc);
             });
         }
+        #[cfg(feature = "device-check")]
+        check::end_launch(launch);
         partials.into_iter().flatten().fold(identity, |a, b| combine(a, b))
     }
 
@@ -209,12 +274,22 @@ impl Pool {
         let ws = match self.dispatchable(n) {
             Some(ws) => ws,
             None => {
-                let mut acc = 0u64;
-                for i in 0..n {
-                    out[i] = acc;
-                    acc += f(i);
+                #[cfg(feature = "device-check")]
+                let launch = check::begin_launch();
+                {
+                    #[cfg(feature = "device-check")]
+                    let _chk = check::enter(launch);
+                    let mut acc = 0u64;
+                    for i in 0..n {
+                        #[cfg(feature = "device-check")]
+                        check::set_unit(i as u64);
+                        out[i] = acc;
+                        acc += f(i);
+                    }
+                    out[n] = acc;
                 }
-                out[n] = acc;
+                #[cfg(feature = "device-check")]
+                check::end_launch(launch);
                 return out;
             }
         };
@@ -223,23 +298,36 @@ impl Pool {
         let mut block_sums = vec![0u64; nblocks];
         // Pass 1: per-block sums (blocks claimed via an atomic counter).
         {
+            #[cfg(feature = "device-check")]
+            let launch = check::begin_launch();
             let bs = SharedMut::new(&mut block_sums);
             let next = AtomicUsize::new(0);
             let f = &f;
-            ws.run(&move |_w| loop {
-                let b = next.fetch_add(1, Ordering::Relaxed);
-                if b >= nblocks {
-                    break;
+            ws.run(&move |_w| {
+                #[cfg(feature = "device-check")]
+                let _chk = check::enter(launch);
+                loop {
+                    // relaxed: block-claim ticket (see parallel_for).
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= nblocks {
+                        break;
+                    }
+                    // The block id is the logical unit of a scan pass: the
+                    // scratch write below must be unique per block.
+                    #[cfg(feature = "device-check")]
+                    check::set_unit(b as u64);
+                    let start = b * block;
+                    let end = ((b + 1) * block).min(n);
+                    let mut acc = 0u64;
+                    for i in start..end {
+                        acc += f(i);
+                    }
+                    // SAFETY: one work unit per block index.
+                    unsafe { bs.write(b, acc) };
                 }
-                let start = b * block;
-                let end = ((b + 1) * block).min(n);
-                let mut acc = 0u64;
-                for i in start..end {
-                    acc += f(i);
-                }
-                // SAFETY: one work unit per block index.
-                unsafe { bs.write(b, acc) };
             });
+            #[cfg(feature = "device-check")]
+            check::end_launch(launch);
         }
         // Serial scan of the block sums.
         let mut block_off = vec![0u64; nblocks + 1];
@@ -248,24 +336,35 @@ impl Pool {
         }
         // Pass 2: per-block exclusive scan into the output.
         {
+            #[cfg(feature = "device-check")]
+            let launch = check::begin_launch();
             let op = SharedMut::new(&mut out);
             let next = AtomicUsize::new(0);
             let f = &f;
             let off = &block_off;
-            ws.run(&move |_w| loop {
-                let b = next.fetch_add(1, Ordering::Relaxed);
-                if b >= nblocks {
-                    break;
-                }
-                let start = b * block;
-                let end = ((b + 1) * block).min(n);
-                let mut acc = off[b];
-                for i in start..end {
-                    // SAFETY: disjoint index ranges per block.
-                    unsafe { op.write(i, acc) };
-                    acc += f(i);
+            ws.run(&move |_w| {
+                #[cfg(feature = "device-check")]
+                let _chk = check::enter(launch);
+                loop {
+                    // relaxed: block-claim ticket (see parallel_for).
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= nblocks {
+                        break;
+                    }
+                    #[cfg(feature = "device-check")]
+                    check::set_unit(b as u64);
+                    let start = b * block;
+                    let end = ((b + 1) * block).min(n);
+                    let mut acc = off[b];
+                    for i in start..end {
+                        // SAFETY: disjoint index ranges per block.
+                        unsafe { op.write(i, acc) };
+                        acc += f(i);
+                    }
                 }
             });
+            #[cfg(feature = "device-check")]
+            check::end_launch(launch);
         }
         out[n] = block_off[nblocks];
         out
@@ -454,13 +553,51 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
 /// writes: many work units write non-overlapping slots of one output
 /// array (the GPU programming model). The caller must guarantee
 /// disjointness; helpers are `unsafe` to keep that contract visible.
-pub struct SharedMut<T>(*mut T);
+///
+/// # The checked-mode contract
+///
+/// The contract every caller must uphold, per kernel launch:
+///
+/// 1. every index is in bounds of the source slice (debug builds assert
+///    this unconditionally);
+/// 2. no location is written by two distinct **logical work units**
+///    (`parallel_for` indices, not threads) within one launch;
+/// 3. no unit reads a location another unit wrote in the same launch —
+///    data written by a previous kernel is safe, the barrier orders it.
+///
+/// Under `feature = "device-check"` (module `check`) every `read`,
+/// `write` and `slice` is recorded in a shadow log tagged with the logical
+/// unit, and the pool validates rules 2–3 at the kernel barrier,
+/// reporting the kernel label and the two conflicting unit indices. The
+/// check is interleaving-independent and works at any thread count,
+/// including 1. Instances are per-launch temporaries; in debug builds,
+/// `slice` additionally asserts that claimed ranges never overlap over
+/// the instance's lifetime.
+pub struct SharedMut<T> {
+    ptr: *mut T,
+    len: usize,
+    /// Ranges handed out by `slice` (debug builds): overlap is a contract
+    /// violation caught eagerly at claim time.
+    #[cfg(debug_assertions)]
+    claims: Mutex<Vec<(usize, usize)>>,
+}
+
+// SAFETY: SharedMut is a plain pointer+length pair; it performs no access
+// on its own, and every dereference goes through the `unsafe` methods
+// below whose documented disjointness contract is exactly what makes
+// cross-thread use sound. (Checked-device mode verifies that contract.)
 unsafe impl<T> Send for SharedMut<T> {}
+// SAFETY: as above — `&SharedMut` exposes only the `unsafe` accessors.
 unsafe impl<T> Sync for SharedMut<T> {}
 
 impl<T> SharedMut<T> {
     pub fn new(data: &mut [T]) -> Self {
-        SharedMut(data.as_mut_ptr())
+        SharedMut {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(Vec::new()),
+        }
     }
 
     /// Write `val` to slot `i`.
@@ -470,7 +607,10 @@ impl<T> SharedMut<T> {
     /// be in bounds of the source slice.
     #[inline]
     pub unsafe fn write(&self, i: usize, val: T) {
-        *self.0.add(i) = val;
+        debug_assert!(i < self.len, "SharedMut::write out of bounds: index {i}, len {}", self.len);
+        #[cfg(feature = "device-check")]
+        check::record(self.ptr as usize, i, check::AccessKind::Write);
+        *self.ptr.add(i) = val;
     }
 
     /// Read slot `i`.
@@ -483,7 +623,10 @@ impl<T> SharedMut<T> {
     where
         T: Copy,
     {
-        *self.0.add(i)
+        debug_assert!(i < self.len, "SharedMut::read out of bounds: index {i}, len {}", self.len);
+        #[cfg(feature = "device-check")]
+        check::record(self.ptr as usize, i, check::AccessKind::Read);
+        *self.ptr.add(i)
     }
 
     /// Exclusive sub-slice `[start, start+len)`.
@@ -494,7 +637,29 @@ impl<T> SharedMut<T> {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
-        std::slice::from_raw_parts_mut(self.0.add(start), len)
+        debug_assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.len),
+            "SharedMut::slice out of bounds: [{start}, {start}+{len}), len {}",
+            self.len
+        );
+        #[cfg(debug_assertions)]
+        {
+            let mut claims = self.claims.lock().unwrap_or_else(|e| e.into_inner());
+            for &(s, l) in claims.iter() {
+                assert!(
+                    start >= s + l || s >= start + len,
+                    "SharedMut::slice overlap: [{start}, {}) intersects prior claim [{s}, {})",
+                    start + len,
+                    s + l
+                );
+            }
+            claims.push((start, len));
+        }
+        // The claim is conservatively logged as a write of the whole range
+        // (slices are handed out for writing).
+        #[cfg(feature = "device-check")]
+        check::record_range(self.ptr as usize, start, len, check::AccessKind::Write);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
 }
 
@@ -522,10 +687,20 @@ impl AtomicList {
     /// are dropped and raise [`AtomicList::overflowed`].
     #[inline]
     pub fn push(&self, x: u64) -> usize {
+        // relaxed: `fetch_add` makes slot claims unique without any
+        // cross-location ordering; readers consume slots only after the
+        // kernel barrier, which is the publication point. The overflow
+        // flag is likewise only read after the barrier.
         let i = self.len.fetch_add(1, Ordering::Relaxed);
         if let Some(slot) = self.data.get(i) {
+            // Checked mode logs the append as an *atomic* write: appends
+            // never conflict with each other, but a same-superstep
+            // non-atomic read or write of the slot by another unit does.
+            #[cfg(feature = "device-check")]
+            check::record(self.data.as_ptr() as usize, i, check::AccessKind::AtomicWrite);
             slot.store(x, Ordering::Relaxed);
         } else {
+            // relaxed: sticky flag, read host-side after the barrier.
             self.overflow.store(true, Ordering::Relaxed);
         }
         i
@@ -533,6 +708,8 @@ impl AtomicList {
 
     /// Number of retained elements (≤ capacity).
     pub fn len(&self) -> usize {
+        // relaxed: meta-reads are either host-side (after the barrier) or
+        // intentionally approximate mid-kernel.
         self.len.load(Ordering::Relaxed).min(self.data.len())
     }
 
@@ -546,21 +723,28 @@ impl AtomicList {
 
     /// Did any append get dropped since the last [`AtomicList::reset`]?
     pub fn overflowed(&self) -> bool {
+        // relaxed: read host-side after the kernel barrier.
         self.overflow.load(Ordering::Relaxed)
     }
 
     /// Element `i` (must be `< len()`; call between kernels only).
     #[inline]
     pub fn get(&self, i: usize) -> u64 {
+        #[cfg(feature = "device-check")]
+        check::record(self.data.as_ptr() as usize, i, check::AccessKind::Read);
+        // relaxed: slots are published by the kernel barrier; a `get`
+        // racing an in-superstep `push` is a contract violation that
+        // checked mode flags as write/read.
         self.data[i].load(Ordering::Relaxed)
     }
 
     /// Snapshot the contents into a `Vec` (barrier between kernels).
     pub fn to_vec(&self) -> Vec<u64> {
-        (0..self.len()).map(|i| self.data[i].load(Ordering::Relaxed)).collect()
+        (0..self.len()).map(|i| self.get(i)).collect()
     }
 
     pub fn reset(&self) {
+        // relaxed: reset happens host-side between kernels.
         self.len.store(0, Ordering::Relaxed);
         self.overflow.store(false, Ordering::Relaxed);
     }
@@ -569,6 +753,9 @@ impl AtomicList {
 /// Atomic `f64` add via CAS on the bit pattern (device-style atomic_add).
 #[inline]
 pub fn atomic_f64_add(cell: &AtomicU64, add: f64) {
+    // relaxed: the accumulated value is only read after the kernel
+    // barrier; the CAS loop itself needs no ordering beyond atomicity of
+    // each exchange (the retry re-reads the latest value).
     let mut cur = cell.load(Ordering::Relaxed);
     loop {
         let new = f64::from_bits(cur) + add;
@@ -588,6 +775,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: multi-thread pools over dispatch-sized n are too slow under the interpreter
     fn parallel_for_covers_all_indices() {
         for pool in pools() {
             let n = 10_000;
@@ -600,6 +788,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized reduction, too slow
     fn reduce_matches_serial() {
         for pool in pools() {
             let n = 50_000;
@@ -609,6 +798,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized reduction, too slow
     fn reduce_f64_close() {
         for pool in pools() {
             let n = 10_000;
@@ -619,6 +809,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized scan, too slow
     fn scan_matches_serial() {
         for pool in pools() {
             let n = 30_000;
@@ -641,6 +832,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized fan-out, too slow
     fn atomic_list_collects_everything() {
         for pool in pools() {
             let list = AtomicList::with_capacity(10_000);
@@ -658,6 +850,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized fan-out, too slow
     fn atomic_list_saturates_instead_of_panicking() {
         // Regression: appends past capacity used to index out of bounds.
         for pool in pools() {
@@ -676,6 +869,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized fan-out, too slow
     fn atomic_f64_add_accumulates() {
         let pool = Pool::new(4);
         let cell = AtomicU64::new(0f64.to_bits());
@@ -684,6 +878,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: 60 rounds of dispatch-sized kernels, far too slow
     fn persistent_pool_reuse_many_kernels() {
         // One pool, many sequential kernels of every primitive: the
         // workers park and wake without being respawned, and results stay
@@ -704,6 +899,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized nested launch, too slow
     fn nested_launch_runs_inline() {
         // A kernel body that launches another kernel must not deadlock on
         // the barrier; the inner launch degrades to inline execution.
@@ -720,6 +916,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: unwinding across a 50k-unit dispatch, too slow
     fn worker_panic_propagates_without_deadlock() {
         // The panic may surface either as the wrapped "worker panicked in
         // pool kernel" (a spawned worker hit it) or as the original payload
@@ -738,6 +935,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: dispatch-sized reductions on a shared worker set, too slow
     fn clones_share_workers() {
         let pool = Pool::new(3);
         let clone = pool.clone();
@@ -745,5 +943,70 @@ mod tests {
         assert_eq!(clone.reduce_sum_u64(30_000, |_| 1), 30_000);
         drop(clone);
         assert_eq!(pool.reduce_sum_u64(30_000, |_| 1), 30_000);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SharedMut::write out of bounds")]
+    fn shared_mut_write_bounds_checked() {
+        let mut data = vec![0u32; 8];
+        let p = SharedMut::new(&mut data);
+        // SAFETY: intentionally out of bounds to exercise the debug assert.
+        unsafe { p.write(8, 1) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SharedMut::read out of bounds")]
+    fn shared_mut_read_bounds_checked() {
+        let mut data = vec![0u32; 8];
+        let p = SharedMut::new(&mut data);
+        // SAFETY: intentionally out of bounds to exercise the debug assert.
+        let _ = unsafe { p.read(9) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SharedMut::slice out of bounds")]
+    fn shared_mut_slice_bounds_checked() {
+        let mut data = vec![0u32; 8];
+        let p = SharedMut::new(&mut data);
+        // SAFETY: intentionally out of bounds to exercise the debug assert.
+        let _ = unsafe { p.slice(4, 5) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SharedMut::slice overlap")]
+    fn shared_mut_overlapping_slices_detected() {
+        let mut data = vec![0u32; 16];
+        let p = SharedMut::new(&mut data);
+        // SAFETY: in bounds; the second claim intentionally overlaps the
+        // first to exercise the debug overlap check.
+        unsafe {
+            let _a = p.slice(0, 8);
+            let _b = p.slice(7, 4);
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn shared_mut_disjoint_slices_allowed() {
+        let mut data = vec![0u32; 16];
+        let p = SharedMut::new(&mut data);
+        // SAFETY: the two claims are disjoint and in bounds.
+        unsafe {
+            p.slice(0, 8)[0] = 1;
+            p.slice(8, 8)[7] = 2;
+        }
+        assert_eq!((data[0], data[15]), (1, 2));
+    }
+
+    #[test]
+    fn device_check_active_matches_build() {
+        // Without the feature this is constant `false`; with it, it follows
+        // HEIPA_DEVICE_CHECK (default on). Either way it must not panic.
+        let active = device_check_active();
+        assert_eq!(active, cfg!(feature = "device-check") && active);
     }
 }

@@ -218,6 +218,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // miri: 1200-vertex rgg generation dominates, too slow
     fn force_balance_repairs_overload() {
         let g = gen::rgg(1_200, 0.07, 6);
         let k = 8;

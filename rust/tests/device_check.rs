@@ -1,0 +1,166 @@
+//! Checked-device mode end to end: seeded known-bad kernels must be
+//! flagged with the right kernel label, and the full solver stack must run
+//! conflict-free at 1, 2 and 4 threads.
+//!
+//! The checker's registry is process-global, so every test takes
+//! [`checker_lock`] to serialize against the others (including the clean
+//! solves, which would otherwise observe a seeded test's conflicts).
+
+#![cfg(feature = "device-check")]
+
+use heipa::algo::gpu_im::{gpu_im, GpuImConfig};
+use heipa::graph::{gen, EdgeList};
+use heipa::partition::l_max;
+use heipa::refine::jet_loop::{jet_refine, JetConfig};
+use heipa::refine::Objective;
+use heipa::par::{check, ledger, Pool, SharedMut};
+use heipa::topology::Machine;
+use std::sync::{Mutex, MutexGuard};
+
+fn checker_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    // A seeded-kernel test that failed an assertion poisons the lock;
+    // the serialized state itself is drained below, so keep going.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Flip the checker into collect mode and restore the previous mode (and
+/// drain leftovers) on drop, so a failing test cannot leak panics into
+/// the next one.
+struct CollectMode {
+    prev: bool,
+}
+
+impl CollectMode {
+    fn new() -> Self {
+        let prev = check::set_panic_on_conflict(false);
+        check::take_conflicts();
+        CollectMode { prev }
+    }
+}
+
+impl Drop for CollectMode {
+    fn drop(&mut self) {
+        check::take_conflicts();
+        check::set_panic_on_conflict(self.prev);
+    }
+}
+
+#[test]
+fn seeded_write_write_race_is_flagged() {
+    let _guard = checker_lock();
+    let _mode = CollectMode::new();
+    let pool = Pool::new(2);
+    // 20k units so the pool genuinely dispatches to workers (the inline
+    // fallback only covers n < 2 * MIN_CHUNK); all units hammer slot 0.
+    let n = 20_000;
+    let mut buf = vec![0u32; 8];
+    let ptr = SharedMut::new(&mut buf);
+    let _k = ledger::kernel("tests:seeded_ww");
+    pool.parallel_for(n, |i| {
+        // SAFETY: deliberately violates the disjoint-writes contract (the
+        // point of this test); u32 stores cannot produce invalid values.
+        unsafe { ptr.write(0, i as u32) };
+    });
+    drop(_k);
+    let conflicts = check::take_conflicts();
+    assert!(!conflicts.is_empty(), "seeded write/write race not flagged");
+    for c in &conflicts {
+        assert_eq!(c.kernel, "tests:seeded_ww", "wrong kernel label: {c}");
+        assert_eq!(c.kind, check::ConflictKind::WriteWrite, "wrong kind: {c}");
+        assert_eq!(c.index, 0, "wrong element index: {c}");
+        assert_ne!(c.units.0, c.units.1, "conflict must name two distinct units: {c}");
+    }
+}
+
+#[test]
+fn seeded_write_read_race_is_flagged() {
+    let _guard = checker_lock();
+    let _mode = CollectMode::new();
+    let pool = Pool::new(2);
+    let n = 20_000;
+    let mut buf = vec![0u32; n];
+    let ptr = SharedMut::new(&mut buf);
+    let _k = ledger::kernel("tests:seeded_wr");
+    pool.parallel_for(n, |i| {
+        // SAFETY: in-bounds, and each unit writes only its own slot — the
+        // *read* of the neighbor's freshly-written slot inside the same
+        // superstep is the seeded contract violation.
+        unsafe {
+            ptr.write(i, i as u32);
+            let _ = ptr.read((i + 1) % n);
+        }
+    });
+    drop(_k);
+    let conflicts = check::take_conflicts();
+    assert!(!conflicts.is_empty(), "seeded write/read race not flagged");
+    assert!(
+        conflicts.iter().any(|c| c.kind == check::ConflictKind::ReadWrite),
+        "expected a write/read conflict, got: {conflicts:?}"
+    );
+    for c in &conflicts {
+        assert_eq!(c.kernel, "tests:seeded_wr", "wrong kernel label: {c}");
+        assert_ne!(c.units.0, c.units.1, "conflict must name two distinct units: {c}");
+    }
+}
+
+#[test]
+fn conflicts_panic_by_default_with_label() {
+    let _guard = checker_lock();
+    check::take_conflicts();
+    let result = std::panic::catch_unwind(|| {
+        let pool = Pool::new(1);
+        let mut buf = vec![0u32; 4];
+        let ptr = SharedMut::new(&mut buf);
+        let _k = ledger::kernel("tests:panicking_ww");
+        pool.parallel_for(16_384, |i| {
+            // SAFETY: deliberate write/write violation; see above.
+            unsafe { ptr.write(1, i as u32) };
+        });
+    });
+    let err = result.expect_err("checked mode must panic on a conflict");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("tests:panicking_ww") && msg.contains("write/write"),
+        "panic message must carry the kernel label and kind: {msg:?}"
+    );
+    check::take_conflicts();
+}
+
+/// The real solver stack, end to end, must be conflict-free at every
+/// thread count — including `threads = 1`, where the logical-unit tagging
+/// still detects contract violations no interleaving could expose.
+#[test]
+fn full_solve_is_conflict_free_at_1_2_4_threads() {
+    let _guard = checker_lock();
+    check::take_conflicts();
+    let g = gen::rgg(3_000, gen::rgg_paper_radius(3_000), 42);
+    let m = Machine::hier("2:2", "1:10").unwrap();
+    let k = m.k();
+    let eps = 0.03;
+    for threads in [1usize, 2, 4] {
+        let pool = Pool::new(threads);
+        let mapping = gpu_im(&pool, &g, &m, eps, 7, &GpuImConfig::default(), None);
+        assert_eq!(mapping.len(), g.n(), "threads={threads}");
+        assert_eq!(
+            check::conflict_count(),
+            0,
+            "gpu_im raised conflicts at threads={threads}"
+        );
+
+        // Standalone Jet pass over a fresh edge list on the same graph.
+        let el = EdgeList::build_par(&pool, &g);
+        let mut part = mapping.clone();
+        let lmax = l_max(g.total_vweight(), k, eps);
+        jet_refine(&pool, &g, &el, &mut part, k, lmax, &Objective::Comm(&m), &JetConfig::default());
+        assert_eq!(
+            check::conflict_count(),
+            0,
+            "jet_refine raised conflicts at threads={threads}"
+        );
+    }
+}

@@ -1,0 +1,416 @@
+//! Static unsafe-contract lint for the device substrate.
+//!
+//! Standalone (std-only, no Cargo needed):
+//!
+//! ```text
+//! rustc -O tools/lint.rs -o /tmp/heipa-lint
+//! /tmp/heipa-lint rust/src                  # lint the tree
+//! /tmp/heipa-lint --self-test tools/lint_fixtures
+//! /tmp/heipa-lint rust/src --report lint-report.txt
+//! ```
+//!
+//! Rules (comments and string/char literals are stripped before keyword
+//! matching; `tools/../shadow` implementations must stay in sync):
+//!
+//! * **A — unsafe allowlist.** The word `unsafe` may appear only in files
+//!   under `par/` or in the seeded [`ALLOWLIST`], unless the site carries a
+//!   `lint: allow-unsafe` annotation on the same line's comment or on a
+//!   comment line directly above. New unsafe code elsewhere must either be
+//!   moved behind the `par` primitives or explicitly annotated and
+//!   reviewed.
+//! * **B — SAFETY comments.** Every line bearing `unsafe` must reach a
+//!   comment containing `SAFETY` (or `Safety`, covering `# Safety` rustdoc
+//!   sections) by walking up through lines that are blank, comments,
+//!   attributes, or themselves bear `unsafe`.
+//! * **C — Relaxed justifications.** Every `Ordering::Relaxed` outside a
+//!   `#[cfg(test)] mod` region must have a comment containing `relaxed:`
+//!   (case-insensitive) on the same line or within the 12 preceding lines.
+//!
+//! Exit status: 0 when clean, 1 when problems were found (or a self-test
+//! fixture disagreed with its `EXPECT:` header), 2 on usage errors.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files outside `par/` that legitimately contain `unsafe` today (each
+/// site individually carries a SAFETY comment; rule B still applies).
+/// Grow this list deliberately — prefer routing new code through the
+/// `par::SharedMut` / `par::AtomicList` primitives instead.
+const ALLOWLIST: &[&str] = &[
+    "coarsen/contract_cas.rs",
+    "graph/mod.rs",
+    "graph/subgraph.rs",
+    "multilevel/hierarchy.rs",
+    "refine/jet_loop.rs",
+    "refine/jet_lp.rs",
+    "refine/rebalance.rs",
+];
+
+/// One finding: file-relative path, 1-based line, message.
+struct Problem {
+    rel: String,
+    line: usize,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut report: Option<PathBuf> = None;
+    let mut self_test = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--self-test" => self_test = true,
+            "--report" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => report = Some(PathBuf::from(p)),
+                    None => {
+                        eprintln!("--report needs a file argument");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--help" | "-h" => {
+                eprintln!("usage: lint [--self-test] [--report FILE] DIR");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                if root.is_some() {
+                    eprintln!("unexpected argument: {other}");
+                    return ExitCode::from(2);
+                }
+                root = Some(PathBuf::from(other));
+            }
+        }
+        i += 1;
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from("rust/src"));
+    if !root.is_dir() {
+        eprintln!("not a directory: {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    if self_test {
+        return run_self_test(&root);
+    }
+
+    let mut problems = Vec::new();
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    files.sort();
+    for path in &files {
+        let rel = rel_of(path, &root);
+        match fs::read_to_string(path) {
+            Ok(src) => lint_source(&src, &rel, &mut problems),
+            Err(e) => {
+                eprintln!("cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for p in &problems {
+        out.push_str(&format!("{}:{}: {}\n", p.rel, p.line, p.msg));
+    }
+    out.push_str(&format!(
+        "-- {} problem(s) in {} file(s)\n",
+        problems.len(),
+        files.len()
+    ));
+    print!("{out}");
+    if let Some(r) = report {
+        if let Err(e) = fs::write(&r, &out) {
+            eprintln!("cannot write report {}: {e}", r.display());
+            return ExitCode::from(2);
+        }
+    }
+    if problems.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// Self-test mode: every `*.rs` fixture carries an `// EXPECT: N` header;
+/// the lint must report exactly `N` problems for that file (fixtures are
+/// linted as if they lived at the repo-relative path named by an optional
+/// `// AT: path` header, default the fixture's own file name).
+fn run_self_test(dir: &Path) -> ExitCode {
+    let mut files = Vec::new();
+    collect_rs_files(dir, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("self-test: no fixtures under {}", dir.display());
+        return ExitCode::from(2);
+    }
+    let mut failed = 0usize;
+    for path in &files {
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let mut expect: Option<usize> = None;
+        let mut at: Option<String> = None;
+        for line in src.lines().take(5) {
+            let t = line.trim();
+            if let Some(rest) = t.strip_prefix("// EXPECT:") {
+                expect = rest.trim().parse().ok();
+            } else if let Some(rest) = t.strip_prefix("// AT:") {
+                at = Some(rest.trim().to_string());
+            }
+        }
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let rel = at.unwrap_or_else(|| name.clone());
+        let expect = match expect {
+            Some(n) => n,
+            None => {
+                eprintln!("self-test: {name} lacks an `// EXPECT: N` header");
+                failed += 1;
+                continue;
+            }
+        };
+        let mut problems = Vec::new();
+        lint_source(&src, &rel, &mut problems);
+        if problems.len() == expect {
+            println!("self-test: {name} ok ({expect} problem(s))");
+        } else {
+            println!(
+                "self-test: {name} FAILED — expected {expect}, found {}:",
+                problems.len()
+            );
+            for p in &problems {
+                println!("    {}:{}: {}", p.rel, p.line, p.msg);
+            }
+            failed += 1;
+        }
+    }
+    if failed == 0 {
+        println!("self-test: all {} fixture(s) ok", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("self-test: {failed} fixture(s) FAILED");
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_of(path: &Path, root: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Split one physical line into (code, comment) with string/char literals
+/// removed from the code part. `in_block` tracks `/* ... */` across lines.
+fn strip_line(line: &str, in_block: &mut bool) -> (String, String) {
+    let mut code = String::new();
+    let mut comment = String::new();
+    let b: Vec<char> = line.chars().collect();
+    let n = b.len();
+    let mut i = 0;
+    let mut in_str = false;
+    while i < n {
+        if *in_block {
+            // inside /* ... */
+            if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                *in_block = false;
+                i += 2;
+            } else {
+                comment.push(b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        if in_str {
+            if b[i] == '\\' {
+                i += 2;
+                continue;
+            }
+            if b[i] == '"' {
+                in_str = false;
+            }
+            i += 1;
+            continue;
+        }
+        match b[i] {
+            '"' => {
+                in_str = true;
+                i += 1;
+            }
+            '\'' => {
+                // char literal ('x', '\n') or lifetime ('a) — skip the
+                // closed forms, treat lifetimes as plain code.
+                if i + 2 < n && b[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < n && b[j] != '\'' {
+                        j += 1;
+                    }
+                    i = if j < n { j + 1 } else { i + 2 };
+                } else if i + 2 < n && b[i + 2] == '\'' {
+                    i += 3;
+                } else {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                comment.extend(&b[i + 2..]);
+                i = n;
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                *in_block = true;
+                i += 2;
+            }
+            c => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    (code, comment)
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Word-boundary match of `word` in `text`.
+fn has_word(text: &str, word: &str) -> bool {
+    let tb = text.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(word) {
+        let a = from + pos;
+        let b = a + word.len();
+        let left_ok = a == 0 || !is_word_char(tb[a - 1] as char);
+        let right_ok = b == text.len() || !is_word_char(tb[b] as char);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = b;
+    }
+    false
+}
+
+fn lint_source(src: &str, rel: &str, problems: &mut Vec<Problem>) {
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut comment_lines: Vec<String> = Vec::new();
+    let mut in_block = false;
+    for line in src.lines() {
+        let (c, m) = strip_line(line, &mut in_block);
+        code_lines.push(c);
+        comment_lines.push(m);
+    }
+    let nlines = code_lines.len();
+
+    // Start of the `#[cfg(test)] mod …` region, if any (the Relaxed rule
+    // does not apply inside tests; unsafe rules still do).
+    let mut test_start = nlines;
+    'scan: for i in 0..nlines {
+        let squeezed: String =
+            code_lines[i].chars().filter(|c| !c.is_whitespace()).collect();
+        if squeezed.contains("#[cfg(test)]") {
+            let hi = (i + 4).min(nlines);
+            for j in (i + 1)..hi {
+                if has_word(&code_lines[j], "mod") {
+                    test_start = i;
+                    break 'scan;
+                }
+            }
+        }
+    }
+
+    let in_par = rel.starts_with("par/");
+    let allowed_file = in_par || ALLOWLIST.contains(&rel);
+
+    for i in 0..nlines {
+        let c = &code_lines[i];
+        if has_word(c, "unsafe") {
+            // Rule A: allowlist or per-site annotation.
+            if !allowed_file {
+                let mut marked = comment_lines[i].contains("lint: allow-unsafe");
+                let mut k = i;
+                while !marked && k > 0 {
+                    k -= 1;
+                    if !code_lines[k].trim().is_empty() {
+                        break;
+                    }
+                    if comment_lines[k].contains("lint: allow-unsafe") {
+                        marked = true;
+                    }
+                    if comment_lines[k].is_empty() {
+                        break;
+                    }
+                }
+                if !marked {
+                    problems.push(Problem {
+                        rel: rel.to_string(),
+                        line: i + 1,
+                        msg: "unsafe outside allowlist (add to tools/lint.rs \
+                              ALLOWLIST or annotate `// lint: allow-unsafe`)"
+                            .to_string(),
+                    });
+                }
+            }
+            // Rule B: a SAFETY comment must be reachable upwards.
+            let mut ok = comment_lines[i].contains("SAFETY")
+                || comment_lines[i].contains("Safety");
+            let mut j = i;
+            while !ok && j > 0 {
+                j -= 1;
+                let mj = &comment_lines[j];
+                if mj.contains("SAFETY") || mj.contains("Safety") {
+                    ok = true;
+                    break;
+                }
+                let cj = code_lines[j].trim();
+                if cj.is_empty() || cj.starts_with("#[") || has_word(&code_lines[j], "unsafe")
+                {
+                    continue;
+                }
+                break;
+            }
+            if !ok {
+                problems.push(Problem {
+                    rel: rel.to_string(),
+                    line: i + 1,
+                    msg: "`unsafe` without a SAFETY comment".to_string(),
+                });
+            }
+        }
+        // Rule C: Relaxed justification (non-test code only).
+        if c.contains("Ordering::Relaxed") && i < test_start {
+            let lo = i.saturating_sub(12);
+            let ok = (lo..=i).any(|j| comment_lines[j].to_lowercase().contains("relaxed:"));
+            if !ok {
+                problems.push(Problem {
+                    rel: rel.to_string(),
+                    line: i + 1,
+                    msg: "Ordering::Relaxed without a `relaxed:` justification comment"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+// EXPECT: 0
+// AT: topology/fixture_annotated.rs
+//! A reviewed `unsafe` site outside the allowlist, explicitly annotated:
+//! both rules are satisfied.
+
+pub fn peek(v: &[u32]) -> u32 {
+    // lint: allow-unsafe
+    // SAFETY: caller guarantees v is non-empty.
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,8 @@
+// EXPECT: 1
+// AT: par/fixture_bad_safety.rs
+//! `unsafe` under `par/` (allowlisted by prefix) but with no SAFETY
+//! comment: rule B fires.
+
+pub fn peek(v: &[u32]) -> u32 {
+    unsafe { *v.get_unchecked(0) }
+}

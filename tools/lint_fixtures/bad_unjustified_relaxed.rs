@@ -1,0 +1,9 @@
+// EXPECT: 1
+// AT: engine/fixture_bad_relaxed.rs
+//! `Ordering::Relaxed` with no justification comment: rule C fires.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}

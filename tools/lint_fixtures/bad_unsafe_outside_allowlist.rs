@@ -1,0 +1,9 @@
+// EXPECT: 1
+// AT: engine/fixture_bad_unsafe.rs
+//! `unsafe` in a file outside `par/` and the allowlist: rule A fires even
+//! though the SAFETY comment satisfies rule B.
+
+pub fn peek(v: &[u32]) -> u32 {
+    // SAFETY: caller guarantees v is non-empty.
+    unsafe { *v.get_unchecked(0) }
+}

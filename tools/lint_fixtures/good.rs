@@ -1,0 +1,27 @@
+// EXPECT: 0
+// AT: engine/fixture_good.rs
+//! Clean fixture: no unsafe, every Relaxed justified.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // relaxed: monotone statistics counter, read approximately.
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn stringly() -> &'static str {
+    // The keyword inside a string must not trip the lint:
+    "unsafe Ordering::Relaxed"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relaxed_in_tests_needs_no_comment() {
+        let c = AtomicU64::new(0);
+        bump(&c);
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+}
