@@ -7,7 +7,7 @@
 //! through exactly the same path as hand-built specs.
 
 use crate::algo::Algorithm;
-use crate::engine::{EngineConfig, MapSpec, Refinement};
+use crate::engine::{EngineConfig, MapSpec, Refinement, RetryPolicy};
 use crate::multilevel::SchemeKind;
 use crate::topology::{Hierarchy, Machine};
 use anyhow::{bail, Context, Result};
@@ -46,6 +46,12 @@ pub struct RunConfig {
     pub workers: usize,
     /// Bounded job-queue capacity (`queue_cap = 256`).
     pub queue_cap: usize,
+    /// Total execution attempts per job (`max_attempts = 3`; 1 = no
+    /// retry). Lowered into [`EngineConfig::retry`].
+    pub max_attempts: u32,
+    /// Base retry backoff in ms (`backoff_ms = 100`; doubles per
+    /// attempt, capped at [`crate::engine::RetryPolicy::MAX_BACKOFF`]).
+    pub backoff_ms: u64,
     /// Artifact directory for the PJRT offload kernels.
     pub artifacts_dir: String,
     /// Solver-specific options (`opt.NAME = value`).
@@ -68,6 +74,8 @@ impl Default for RunConfig {
             threads: 0,
             workers: 1,
             queue_cap: 256,
+            max_attempts: RetryPolicy::default().max_attempts,
+            backoff_ms: RetryPolicy::default().base_backoff.as_millis() as u64,
             artifacts_dir: "artifacts".into(),
             options: BTreeMap::new(),
         }
@@ -109,6 +117,10 @@ impl RunConfig {
             artifacts_dir: self.artifacts_dir.clone(),
             workers: self.workers,
             queue_cap: self.queue_cap,
+            retry: RetryPolicy {
+                max_attempts: self.max_attempts.max(1),
+                base_backoff: std::time::Duration::from_millis(self.backoff_ms),
+            },
             ..EngineConfig::default()
         }
     }
@@ -152,6 +164,8 @@ impl RunConfig {
                 "threads" => cfg.threads = value.parse().context("threads")?,
                 "workers" => cfg.workers = value.parse().context("workers")?,
                 "queue_cap" => cfg.queue_cap = value.parse().context("queue_cap")?,
+                "max_attempts" => cfg.max_attempts = value.parse().context("max_attempts")?,
+                "backoff_ms" => cfg.backoff_ms = value.parse().context("backoff_ms")?,
                 "artifacts_dir" => cfg.artifacts_dir = value,
                 other => {
                     if let Some(opt) = other.strip_prefix("opt.") {
@@ -262,6 +276,20 @@ mod tests {
         assert_eq!(ecfg.queue_cap, 32);
         assert_eq!(ecfg.threads, 2);
         assert!(RunConfig::from_kv_text("workers = lots").is_err());
+    }
+
+    #[test]
+    fn retry_keys_reach_the_engine_config() {
+        let cfg = RunConfig::from_kv_text("max_attempts = 3\nbackoff_ms = 250\n").unwrap();
+        let ecfg = cfg.engine_config();
+        assert_eq!(ecfg.retry.max_attempts, 3);
+        assert_eq!(ecfg.retry.base_backoff, std::time::Duration::from_millis(250));
+        // Defaults: one attempt (no retry), and `max_attempts = 0` is
+        // clamped to 1 rather than producing an unrunnable job.
+        assert_eq!(RunConfig::default().engine_config().retry, RetryPolicy::default());
+        let zero = RunConfig::from_kv_text("max_attempts = 0\n").unwrap();
+        assert_eq!(zero.engine_config().retry.max_attempts, 1);
+        assert!(RunConfig::from_kv_text("backoff_ms = soon").is_err());
     }
 
     #[test]

@@ -160,6 +160,14 @@ pub struct ServiceMetrics {
     /// Jobs that built (and cached) their multilevel hierarchy
     /// (cumulative).
     pub hierarchy_cache_misses: u64,
+    /// Failed attempts re-queued for retry (cumulative).
+    pub retries: u64,
+    /// Failures attributed to the fault plane (`HEIPA_FAULTS` /
+    /// `opt.__fault.*`), cumulative across attempts.
+    pub faults_injected: u64,
+    /// Jobs that completed through the degradation fallback chain (their
+    /// outcomes carry `degraded=1` on the wire).
+    pub degraded_completions: u64,
     /// Jobs currently waiting in the queue (gauge).
     pub queue_depth: usize,
     /// Jobs currently being solved (gauge).

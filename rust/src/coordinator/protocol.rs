@@ -21,18 +21,24 @@
 //!
 //! Responses are single lines. `submit` replies `ok job=<id> state=queued`
 //! **before the solve runs**; `map`/`result` reply the full outcome
-//! (`ok id=… algorithm=… j=…`); errors are `err code=<code> message=…`
-//! with the message percent-escaped ([`escape_value`]) so clients can
-//! recover the real text — including its spaces — via
-//! [`unescape_value`]. Error codes: `bad_request`, `busy` (bounded job
-//! queue or connection limit), `unknown_job`, `unknown_graph`,
-//! `not_done`, `timeout`, `failed`, `cancelled`, `expired`,
-//! `unavailable`.
+//! (`ok id=… algorithm=… j=…`, plus `degraded=1` / `attempts=N` when the
+//! self-healing pipeline retried or fell back — see [`crate::fault`]);
+//! errors are `err code=<code> message=…` with the message
+//! percent-escaped ([`escape_value`]) so clients can recover the real
+//! text — including its spaces — via [`unescape_value`]. Error codes:
+//! `parse` (malformed request line), `toobig` (request line longer than
+//! [`ServeOptions::max_line_len`]), `busy` (bounded job queue or
+//! connection limit), `unknown_job`, `unknown_graph`, `not_done`,
+//! `timeout`, `failed`, `cancelled`, `expired`, `unavailable`.
+//!
+//! Submits accept `max_attempts=`/`backoff_ms=` to override the
+//! service's retry policy per job.
 
 use super::service::{JobOptions, Service};
 use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::algo::Algorithm;
 use crate::engine::{JobState, JobStatus, Refinement, SubmitError};
+use crate::fault::{self, FaultPoint};
 use crate::multilevel::SchemeKind;
 use crate::graph::CsrGraph;
 use anyhow::{bail, Context, Result};
@@ -40,11 +46,16 @@ use std::io::Write;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Per-submit wire options (`priority=`, `deadline_ms=`).
+/// Per-submit wire options (`priority=`, `deadline_ms=`,
+/// `max_attempts=`, `backoff_ms=`).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct WireSubmitOpts {
     pub priority: i32,
     pub deadline_ms: Option<u64>,
+    /// Total execution attempts (retry policy override).
+    pub max_attempts: Option<u32>,
+    /// Base retry backoff in ms (doubles per attempt, capped).
+    pub backoff_ms: Option<u64>,
 }
 
 /// Parsed client command.
@@ -102,6 +113,8 @@ fn parse_job_body<'a>(
             "mapping" => req.return_mapping = v == "1" || v == "true",
             "priority" => opts.priority = v.parse().context("priority")?,
             "deadline_ms" => opts.deadline_ms = Some(v.parse().context("deadline_ms")?),
+            "max_attempts" => opts.max_attempts = Some(v.parse().context("max_attempts")?),
+            "backoff_ms" => opts.backoff_ms = Some(v.parse().context("backoff_ms")?),
             other => {
                 if let Some(opt) = other.strip_prefix("opt.") {
                     req.options.insert(opt.to_string(), v.to_string());
@@ -286,6 +299,12 @@ pub fn render_response(r: &MapReply) -> String {
     if let Some(cached) = o.hierarchy_cache {
         s.push_str(if cached { " hier_cache=hit" } else { " hier_cache=miss" });
     }
+    if o.degraded {
+        s.push_str(" degraded=1");
+    }
+    if o.attempts > 1 {
+        s.push_str(&format!(" attempts={}", o.attempts));
+    }
     if !o.mapping.is_empty() {
         s.push_str(" mapping=");
         let parts: Vec<String> = o.mapping.iter().map(|b| b.to_string()).collect();
@@ -299,7 +318,8 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
     let per: Vec<String> = m.per_algorithm.iter().map(|(k, v)| format!("{k}:{v}")).collect();
     format!(
         "ok requests={} failures={} completed={} cancelled={} deadline_missed={} \
-         busy_rejections={} hier_hits={} hier_misses={} queue_depth={} in_flight={} \
+         busy_rejections={} hier_hits={} hier_misses={} retries={} faults_injected={} \
+         degraded={} queue_depth={} in_flight={} \
          host_ms={:.1} device_ms={:.1} per_algorithm={}",
         m.requests,
         m.failures,
@@ -309,6 +329,9 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
         m.busy_rejections,
         m.hierarchy_cache_hits,
         m.hierarchy_cache_misses,
+        m.retries,
+        m.faults_injected,
+        m.degraded_completions,
         m.queue_depth,
         m.in_flight,
         m.total_host_ms,
@@ -322,14 +345,18 @@ pub fn render_err(code: &str, msg: &str) -> String {
     format!("err code={code} message={}", escape_value(msg))
 }
 
-/// Render a request-level error line (`code=bad_request`).
+/// Render a request-level error line (`code=parse`).
 pub fn render_error(e: &anyhow::Error) -> String {
-    render_err("bad_request", &format!("{e:#}"))
+    render_err("parse", &format!("{e:#}"))
 }
 
-/// Render a job status line: `ok job=<id> state=<state> [error=…]`.
+/// Render a job status line:
+/// `ok job=<id> state=<state> [attempts=…] [error=…]`.
 pub fn render_job_status(st: &JobStatus) -> String {
     let mut s = format!("ok job={} state={}", st.id, st.state.name());
+    if st.attempts > 1 {
+        s.push_str(&format!(" attempts={}", st.attempts));
+    }
     if let Some(e) = &st.error {
         s.push_str(" error=");
         s.push_str(&escape_value(e));
@@ -369,6 +396,8 @@ pub fn dispatch(svc: &Service, cmd: Command) -> String {
                 priority: opts.priority,
                 deadline_ms: opts.deadline_ms,
                 block_when_full: false,
+                max_attempts: opts.max_attempts,
+                backoff_ms: opts.backoff_ms,
             };
             match svc.submit_async(&req, jopts) {
                 Err(e @ SubmitError::Busy { .. }) => render_err("busy", &e.to_string()),
@@ -384,6 +413,8 @@ pub fn dispatch(svc: &Service, cmd: Command) -> String {
                 priority: opts.priority,
                 deadline_ms: opts.deadline_ms,
                 block_when_full: false,
+                max_attempts: opts.max_attempts,
+                backoff_ms: opts.backoff_ms,
             };
             match svc.submit_async(&req, jopts) {
                 Ok(h) => format!("ok job={} state=queued", h.id()),
@@ -480,11 +511,75 @@ pub struct ServeOptions {
     /// Concurrent connection cap; connections past it receive one
     /// `err code=busy` line and are closed instead of spawning a thread.
     pub max_conns: usize,
+    /// Per-connection socket read/write timeout in ms; a connection that
+    /// stays silent (or cannot be written to) this long is closed. `0`
+    /// disables the timeout.
+    pub read_timeout_ms: u64,
+    /// Longest accepted request line in bytes. An oversize line is
+    /// answered with `err code=toobig` and discarded through its
+    /// terminating newline; the connection stays usable.
+    pub max_line_len: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_conns: 64 }
+        ServeOptions { max_conns: 64, read_timeout_ms: 120_000, max_line_len: 4 << 20 }
+    }
+}
+
+/// One framed request line, or why there isn't one.
+enum WireLine {
+    Line(String),
+    /// The line overran [`ServeOptions::max_line_len`]; its bytes were
+    /// discarded through the terminating newline.
+    TooLong,
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `max_len` bytes (exclusive
+/// of the terminator; a trailing `\r` is stripped). Unlike
+/// `BufRead::read_line`, an oversize line cannot balloon memory: its
+/// bytes are dropped as they stream in and `TooLong` is reported once
+/// the newline (or EOF) arrives.
+fn read_bounded_line<R: std::io::BufRead>(
+    reader: &mut R,
+    max_len: usize,
+) -> std::io::Result<WireLine> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut overflowed = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF; a trailing unterminated line is still served.
+            return Ok(match (overflowed, buf.is_empty()) {
+                (true, _) => WireLine::TooLong,
+                (false, true) => WireLine::Eof,
+                (false, false) => WireLine::Line(String::from_utf8_lossy(&buf).into_owned()),
+            });
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            let fits = !overflowed && buf.len() + pos <= max_len;
+            if fits {
+                buf.extend_from_slice(&chunk[..pos]);
+            }
+            reader.consume(pos + 1);
+            return Ok(if fits {
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                WireLine::Line(String::from_utf8_lossy(&buf).into_owned())
+            } else {
+                WireLine::TooLong
+            });
+        }
+        let len = chunk.len();
+        if !overflowed && buf.len() + len <= max_len {
+            buf.extend_from_slice(chunk);
+        } else {
+            overflowed = true;
+            buf.clear();
+        }
+        reader.consume(len);
     }
 }
 
@@ -506,8 +601,11 @@ pub fn serve_listener(
     listener: std::net::TcpListener,
     opts: ServeOptions,
 ) -> Result<()> {
-    use std::io::{BufRead, BufReader};
+    use std::io::BufReader;
     let cap = opts.max_conns.max(1);
+    let max_len = opts.max_line_len.max(1);
+    let timeout = (opts.read_timeout_ms > 0)
+        .then(|| std::time::Duration::from_millis(opts.read_timeout_ms));
     let active = Arc::new(AtomicUsize::new(0));
     let mut conn_seq = 0u64;
     for stream in listener.incoming() {
@@ -522,12 +620,32 @@ pub fn serve_listener(
         conn_seq += 1;
         let _ = std::thread::Builder::new().name(format!("heipa-conn-{conn_seq}")).spawn(move || {
             let _guard = guard;
+            // A connection that stalls mid-line (or mid-write) is closed
+            // once the socket timeout fires; `read_bounded_line` surfaces
+            // the timeout as an Err and the loop below drops the stream.
+            let _ = stream.set_read_timeout(timeout);
+            let _ = stream.set_write_timeout(timeout);
             let Ok(read_half) = stream.try_clone() else { return };
-            let reader = BufReader::new(read_half);
+            let mut reader = BufReader::new(read_half);
             let mut writer = stream;
-            for line in reader.lines() {
-                let Ok(line) = line else { break };
-                let reply = handle_command(&svc, &line);
+            loop {
+                // Fault plane: `wire_read`/`wire_write` model a flaky
+                // transport — the connection drops; jobs already
+                // submitted keep running and remain queryable on the
+                // client's next connection.
+                if fault::fire_global(FaultPoint::WireRead) {
+                    break;
+                }
+                let reply = match read_bounded_line(&mut reader, max_len) {
+                    Err(_) | Ok(WireLine::Eof) => break, // timeout, reset or clean EOF
+                    Ok(WireLine::TooLong) => {
+                        render_err("toobig", &format!("request line exceeds {max_len} bytes"))
+                    }
+                    Ok(WireLine::Line(line)) => handle_command(&svc, &line),
+                };
+                if fault::fire_global(FaultPoint::WireWrite) {
+                    break;
+                }
                 if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err()
                 {
                     break;
@@ -567,7 +685,8 @@ mod tests {
     #[test]
     fn parses_submit_with_job_options_and_graph_alias() {
         let Command::Submit { req, opts } = parse_command(
-            "submit graph=mesh topology=torus:4x4 priority=5 deadline_ms=2500 opt.adaptive=0",
+            "submit graph=mesh topology=torus:4x4 priority=5 deadline_ms=2500 \
+             max_attempts=3 backoff_ms=50 opt.adaptive=0",
         )
         .unwrap() else {
             panic!()
@@ -576,7 +695,16 @@ mod tests {
         assert_eq!(req.topology.as_deref(), Some("torus:4x4"));
         assert_eq!(opts.priority, 5);
         assert_eq!(opts.deadline_ms, Some(2500));
+        assert_eq!(opts.max_attempts, Some(3));
+        assert_eq!(opts.backoff_ms, Some(50));
         assert_eq!(req.options.get("adaptive").map(String::as_str), Some("0"));
+        // Absent retry keys stay None so the service default applies.
+        let Command::Submit { opts, .. } = parse_command("submit graph=mesh").unwrap() else {
+            panic!()
+        };
+        assert_eq!(opts.max_attempts, None);
+        assert_eq!(opts.backoff_ms, None);
+        assert!(parse_command("submit graph=mesh max_attempts=lots").is_err());
     }
 
     #[test]
@@ -673,8 +801,8 @@ mod tests {
         // Regression: render_error used to replace every space with `_`,
         // mangling messages beyond recovery.
         let original = "instance `no such thing` is neither\na registry name (100% sure)";
-        let line = render_err("bad_request", original);
-        assert!(line.starts_with("err code=bad_request message="), "{line}");
+        let line = render_err("parse", original);
+        assert!(line.starts_with("err code=parse message="), "{line}");
         let value = line.split_once("message=").unwrap().1;
         assert!(!value.contains(' ') && !value.contains('\n'), "raw separators leaked: {line}");
         assert_eq!(unescape_value(value), original);
@@ -718,12 +846,23 @@ mod tests {
                 phases: None,
                 polish_improvement: 1.0,
                 hierarchy_cache: Some(true),
+                degraded: false,
+                attempts: 1,
             },
         };
         let line = render_response(&r);
         assert!(line.starts_with("ok id=3 algorithm=gpu-hm"));
         assert!(line.contains(" hier_cache=hit"));
         assert!(line.contains("mapping=0,1,2,3"));
+        // First-try, non-degraded outcomes stay byte-compatible with the
+        // pre-retry wire format.
+        assert!(!line.contains("degraded") && !line.contains("attempts"), "{line}");
+        let mut r = r;
+        r.outcome.degraded = true;
+        r.outcome.attempts = 3;
+        let line = render_response(&r);
+        assert!(line.contains(" degraded=1"), "{line}");
+        assert!(line.contains(" attempts=3"), "{line}");
     }
 
     fn quick_service() -> Service {
@@ -810,6 +949,98 @@ mod tests {
             handle_command(&svc, &format!("cancel job={id}"));
             handle_command(&svc, &format!("wait job={id}"));
         }
+    }
+
+    #[test]
+    fn bounded_reader_frames_lines_and_survives_oversize() {
+        use std::io::Cursor;
+        let mut r = Cursor::new(b"ping\r\nmetrics\n".to_vec());
+        let WireLine::Line(l) = read_bounded_line(&mut r, 16).unwrap() else { panic!() };
+        assert_eq!(l, "ping");
+        let WireLine::Line(l) = read_bounded_line(&mut r, 16).unwrap() else { panic!() };
+        assert_eq!(l, "metrics");
+        assert!(matches!(read_bounded_line(&mut r, 16).unwrap(), WireLine::Eof));
+
+        // Oversize line: reported once, discarded through its newline;
+        // the connection stays usable for the next request. A tiny
+        // BufReader forces the chunked overflow path.
+        let mut big = vec![b'x'; 100];
+        big.push(b'\n');
+        big.extend_from_slice(b"ping\n");
+        let mut r = std::io::BufReader::with_capacity(3, Cursor::new(big));
+        assert!(matches!(read_bounded_line(&mut r, 8).unwrap(), WireLine::TooLong));
+        let WireLine::Line(l) = read_bounded_line(&mut r, 8).unwrap() else { panic!() };
+        assert_eq!(l, "ping");
+
+        // A line of exactly max_len bytes fits.
+        let mut r = Cursor::new(b"12345678\n".to_vec());
+        let WireLine::Line(l) = read_bounded_line(&mut r, 8).unwrap() else { panic!() };
+        assert_eq!(l, "12345678");
+
+        // Unterminated trailing lines are served; oversize ones are not.
+        let mut r = Cursor::new(b"tail".to_vec());
+        let WireLine::Line(l) = read_bounded_line(&mut r, 8).unwrap() else { panic!() };
+        assert_eq!(l, "tail");
+        let mut r = Cursor::new(vec![b'y'; 50]);
+        assert!(matches!(read_bounded_line(&mut r, 8).unwrap(), WireLine::TooLong));
+    }
+
+    /// Every reply is `ok …` or `err code=<known>` — no panics, no
+    /// unframed text — for any input line.
+    fn assert_typed(reply: &str, line: &str) {
+        const CODES: &[&str] = &[
+            "parse", "toobig", "busy", "unknown_job", "unknown_graph", "not_done",
+            "timeout", "failed", "cancelled", "expired", "unavailable",
+        ];
+        if reply == "ok" || reply.starts_with("ok ") {
+            return;
+        }
+        let code = reply
+            .strip_prefix("err code=")
+            .and_then(|r| r.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unframed reply for {line:?}: {reply}"));
+        assert!(CODES.contains(&code), "unknown code `{code}` for {line:?}: {reply}");
+    }
+
+    #[test]
+    fn garbage_lines_always_get_a_typed_reply() {
+        let svc = quick_service();
+        // Seeded fuzz over protocol fragments: verbs, half-formed keys,
+        // broken escapes, overflowing numbers, binary-ish noise.
+        const FRAGS: &[&str] = &[
+            "map", "submit", "status", "wait", "result", "cancel", "graph", "put", "del",
+            "jobs", "metrics", "ping", "instance=", "graph=", "job=", "csr=", "name=",
+            "algorithm=gpu-im", "algorithm=", "hierarchy=2:2", "deadline_ms=",
+            "max_attempts=", "backoff_ms=", "opt.", "=", "=x", "%", "%2", "%25", "%zz",
+            "0,2,4/1,0,1", "/", ",", ":", "\t", "\u{1F4A5}", "-1",
+            "18446744073709551616", "priority=high", "job=0x10",
+        ];
+        let mut state = 0xC0FFEE_u64;
+        for _ in 0..500 {
+            let parts = 1 + (crate::rng::splitmix64(&mut state) % 6) as usize;
+            let line: Vec<&str> = (0..parts)
+                .map(|_| FRAGS[(crate::rng::splitmix64(&mut state) % FRAGS.len() as u64) as usize])
+                .collect();
+            let line = line.join(" ");
+            assert_typed(&handle_command(&svc, &line), &line);
+        }
+    }
+
+    #[test]
+    fn truncated_commands_always_get_a_typed_reply() {
+        let svc = quick_service();
+        // Every split point of a valid upload — both halves of a csr
+        // payload cut mid-token included — must yield a framed reply.
+        let full = "graph put name=tri csr=0,2,4,6/1,2,0,2,0,1";
+        for cut in 0..=full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            assert_typed(&handle_command(&svc, &full[..cut]), &full[..cut]);
+            assert_typed(&handle_command(&svc, &full[cut..]), &full[cut..]);
+        }
+        // The intact command still works afterwards.
+        assert!(handle_command(&svc, full).starts_with("ok graph=tri"));
     }
 
     #[test]

@@ -8,11 +8,12 @@
 //! Metrics live in atomics (plus one poison-recovering mutex for the
 //! per-algorithm map), so a panicking job can never take the whole
 //! service down with a poisoned lock — regression-tested with the
-//! `__panic` solver hook.
+//! fault plane's `solve` injection point (`opt.__fault.solve`).
 
 use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::engine::{
-    Engine, EngineConfig, JobHandle, JobState, JobStatus, MapOutcome, SubmitError, SubmitOpts,
+    Engine, EngineConfig, JobHandle, JobState, JobStatus, MapOutcome, RetryPolicy, SubmitError,
+    SubmitOpts,
 };
 use crate::graph::CsrGraph;
 use anyhow::Result;
@@ -41,6 +42,9 @@ pub struct ServiceConfig {
     /// Finished jobs retained for `status`/`result` lookups; the oldest
     /// finished jobs are evicted beyond this.
     pub job_retention: usize,
+    /// Default retry policy for jobs that did not set per-job
+    /// `max_attempts`/`backoff_ms` (see [`JobOptions`]).
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -52,11 +56,13 @@ impl Default for ServiceConfig {
             workers: 1,
             queue_cap: 256,
             job_retention: 1024,
+            retry: RetryPolicy::default(),
         }
     }
 }
 
-/// Per-submit options on the wire (`priority=`, `deadline_ms=`).
+/// Per-submit options on the wire (`priority=`, `deadline_ms=`,
+/// `max_attempts=`, `backoff_ms=`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct JobOptions {
     /// Higher runs first; FIFO within a class.
@@ -66,6 +72,12 @@ pub struct JobOptions {
     /// Block on a full queue instead of failing with `Busy` (in-process
     /// callers only; the wire front-end never blocks).
     pub block_when_full: bool,
+    /// Total execution attempts; overrides the service default. When only
+    /// one of `max_attempts`/`backoff_ms` is set, the other half comes
+    /// from the service's [`ServiceConfig::retry`].
+    pub max_attempts: Option<u32>,
+    /// Base retry backoff in ms (doubles per attempt, capped).
+    pub backoff_ms: Option<u64>,
 }
 
 /// Lock-free counters + one poison-recovering map. `f64` totals are
@@ -142,6 +154,8 @@ pub struct Service {
     jobs: Mutex<JobRegistry>,
     counters: Arc<Counters>,
     retention: usize,
+    /// Service-default retry policy (base for per-job overrides).
+    retry: RetryPolicy,
 }
 
 impl Service {
@@ -158,6 +172,7 @@ impl Service {
             graph_cache_cap: cfg.graph_cache_cap,
             workers: cfg.workers,
             queue_cap: cfg.queue_cap,
+            retry: cfg.retry,
             ..EngineConfig::default()
         });
         Service {
@@ -165,6 +180,7 @@ impl Service {
             jobs: Mutex::new(JobRegistry::default()),
             counters: Arc::new(Counters::default()),
             retention: cfg.job_retention.max(1),
+            retry: cfg.retry,
         }
     }
 
@@ -202,11 +218,22 @@ impl Service {
         request: &MapRequest,
         opts: JobOptions,
     ) -> std::result::Result<JobHandle, SubmitError> {
+        // Per-job retry override: either wire key fills in the other half
+        // from the service default; neither set → engine default applies.
+        let retry = match (opts.max_attempts, opts.backoff_ms) {
+            (None, None) => None,
+            (attempts, backoff) => Some(RetryPolicy {
+                max_attempts: attempts.unwrap_or(self.retry.max_attempts).max(1),
+                base_backoff: backoff
+                    .map_or(self.retry.base_backoff, Duration::from_millis),
+            }),
+        };
         let submit = SubmitOpts {
             priority: opts.priority,
             deadline: opts.deadline_ms.map(Duration::from_millis),
             block_when_full: opts.block_when_full,
             on_complete: Some(completion_hook(&self.counters)),
+            retry,
         };
         match self.engine.submit_opts(&request.to_spec(), submit) {
             Ok(h) => {
@@ -304,6 +331,9 @@ impl Service {
             busy_rejections: c.busy_rejections.load(Ordering::Relaxed),
             hierarchy_cache_hits: self.engine.hierarchy_cache_hits(),
             hierarchy_cache_misses: self.engine.hierarchy_cache_misses(),
+            retries: self.engine.retries(),
+            faults_injected: self.engine.faults_injected(),
+            degraded_completions: self.engine.degraded_completions(),
             queue_depth: self.engine.queue_depth(),
             in_flight: self.engine.in_flight(),
             // relaxed: same approximate-snapshot rationale as above.
@@ -441,17 +471,50 @@ mod tests {
     fn panicking_job_does_not_poison_metrics_or_kill_the_service() {
         let svc = Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
         let mut bad = sleepy_request(0);
-        bad.options.insert("__panic".into(), "1".into());
-        let err = svc.submit(bad).unwrap_err().to_string();
-        assert!(err.contains("panic"), "{err}");
+        // The solve panics (injected) on every attempt; the self-healing
+        // pipeline degrades the job to a fallback solver instead of
+        // failing it.
+        bad.options.insert("__fault.solve".into(), "1".into());
+        let reply = svc.submit(bad).unwrap();
+        assert!(reply.outcome.degraded, "all-attempts fault must degrade");
         // Regression: metrics() used to .lock().unwrap() a mutex the
-        // panicked job had poisoned, taking the service down with it.
+        // panicked attempt had poisoned, taking the service down with it.
         let m = svc.metrics();
-        assert_eq!(m.failures, 1);
-        // And the same worker keeps serving.
+        assert_eq!(m.failures, 0, "degraded completions are not failures");
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.degraded_completions, 1);
+        assert_eq!(m.faults_injected, 1);
+        // And the same worker keeps serving, organically.
         let ok = svc.submit(small_request("wal_598a")).unwrap();
         assert!(ok.outcome.comm_cost > 0.0);
-        assert_eq!(svc.metrics().completed, 1);
+        assert!(!ok.outcome.degraded);
+        assert_eq!(svc.metrics().completed, 2);
+    }
+
+    #[test]
+    fn per_job_retry_options_override_the_service_default() {
+        let svc = Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let mut flaky = sleepy_request(0);
+        flaky.options.insert("__fault.solve".into(), "1".into());
+        let h = svc
+            .submit_async(
+                &flaky,
+                JobOptions {
+                    max_attempts: Some(3),
+                    backoff_ms: Some(1),
+                    block_when_full: true,
+                    ..JobOptions::default()
+                },
+            )
+            .unwrap();
+        let out = h.wait().unwrap();
+        assert!(out.degraded);
+        assert_eq!(out.attempts, 3);
+        assert_eq!(h.status().attempts, 3);
+        let m = svc.metrics();
+        assert_eq!(m.retries, 2);
+        assert_eq!(m.faults_injected, 3);
+        assert_eq!(m.degraded_completions, 1);
     }
 
     #[test]

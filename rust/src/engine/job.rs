@@ -67,6 +67,47 @@ pub struct JobStatus {
     pub state: JobState,
     /// Failure / cancellation detail (terminal non-`Done` states only).
     pub error: Option<String>,
+    /// 1-based execution attempt (grows past 1 only under retry).
+    pub attempts: u32,
+}
+
+/// Retry policy for failed attempts: a job whose solve fails (injected
+/// fault, solver panic, resolution error) is re-queued up to
+/// `max_attempts` total executions, sleeping a capped exponential
+/// backoff between them — `base_backoff · 2^(attempt-1)`, capped at
+/// [`RetryPolicy::MAX_BACKOFF`]. Retries are deadline- and cancel-aware:
+/// a job whose remaining deadline cannot cover the backoff skips
+/// straight to the degradation fallback chain, and a cancelled job is
+/// never re-queued.
+///
+/// `max_attempts == 1` (the default) means no retries — failures go
+/// directly to the fallback chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total execution attempts (≥ 1; 1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub base_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 1, base_backoff: Duration::from_millis(100) }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff cap — exponential growth never exceeds this.
+    pub const MAX_BACKOFF: Duration = Duration::from_secs(5);
+
+    /// Backoff to sleep after attempt number `attempt` (1-based) failed:
+    /// `base · 2^(attempt-1)`, capped at [`Self::MAX_BACKOFF`].
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let exp = attempt.saturating_sub(1).min(32);
+        self.base_backoff
+            .checked_mul(1u32 << exp.min(31))
+            .map_or(Self::MAX_BACKOFF, |d| d.min(Self::MAX_BACKOFF))
+    }
 }
 
 /// Completion hook invoked by the worker *before* the terminal state
@@ -89,6 +130,9 @@ pub struct SubmitOpts {
     pub block_when_full: bool,
     /// Invoked once, on whichever worker retires the job.
     pub on_complete: Option<CompletionHook>,
+    /// Per-job retry policy; `None` inherits the engine's
+    /// [`crate::engine::EngineConfig::retry`].
+    pub retry: Option<RetryPolicy>,
 }
 
 /// Why a submit was not accepted.
@@ -115,6 +159,8 @@ pub(crate) struct JobCell {
     pub state: JobState,
     pub outcome: Option<MapOutcome>,
     pub error: Option<String>,
+    /// 1-based execution attempt; bumped by [`JobHandle::requeue_for_retry`].
+    pub attempts: u32,
 }
 
 pub(crate) struct JobShared {
@@ -158,7 +204,12 @@ impl JobHandle {
         JobHandle {
             id,
             shared: Arc::new(JobShared {
-                cell: Mutex::new(JobCell { state: JobState::Queued, outcome: None, error: None }),
+                cell: Mutex::new(JobCell {
+                    state: JobState::Queued,
+                    outcome: None,
+                    error: None,
+                    attempts: 1,
+                }),
                 cv: Condvar::new(),
                 cancel,
                 hook_fired: std::sync::atomic::AtomicBool::new(false),
@@ -205,7 +256,12 @@ impl JobHandle {
     pub fn status(&self) -> JobStatus {
         let mut cell = lock_cell(&self.shared);
         self.expire_if_overdue(&mut cell);
-        JobStatus { id: self.id, state: cell.state, error: cell.error.clone() }
+        JobStatus {
+            id: self.id,
+            state: cell.state,
+            error: cell.error.clone(),
+            attempts: cell.attempts,
+        }
     }
 
     pub fn is_finished(&self) -> bool {
@@ -312,17 +368,22 @@ impl JobHandle {
     ) {
         use std::sync::atomic::Ordering;
         debug_assert!(state.is_terminal());
-        let (pub_state, pub_error) = {
+        let (pub_state, pub_error, pub_attempts) = {
             let cell = lock_cell(&self.shared);
             if cell.state.is_terminal() {
-                (cell.state, cell.error.clone())
+                (cell.state, cell.error.clone(), cell.attempts)
             } else {
-                (state, error.clone())
+                (state, error.clone(), cell.attempts)
             }
         };
         if let Some(h) = hook {
             if !self.shared.hook_fired.swap(true, Ordering::SeqCst) {
-                let status = JobStatus { id: self.id, state: pub_state, error: pub_error };
+                let status = JobStatus {
+                    id: self.id,
+                    state: pub_state,
+                    error: pub_error,
+                    attempts: pub_attempts,
+                };
                 let out_ref = if pub_state == JobState::Done { outcome.as_ref() } else { None };
                 h(&status, out_ref);
             }
@@ -344,6 +405,20 @@ impl JobHandle {
             return false;
         }
         cell.state = JobState::Running;
+        true
+    }
+
+    /// Transition a failed attempt back to `Queued` for a retry, bumping
+    /// the attempt counter. Returns false when the job already reached a
+    /// terminal state (a cancel raced the failure) — the caller must not
+    /// re-queue it.
+    pub(crate) fn requeue_for_retry(&self) -> bool {
+        let mut cell = lock_cell(&self.shared);
+        if cell.state.is_terminal() {
+            return false;
+        }
+        cell.state = JobState::Queued;
+        cell.attempts += 1;
         true
     }
 }
@@ -383,6 +458,33 @@ mod tests {
         let h = JobHandle::new_queued(JobId(1), CancelToken::new());
         assert!(h.wait_timeout(Duration::from_millis(10)).is_none());
         assert!(!h.is_finished());
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_caps() {
+        let p = RetryPolicy { max_attempts: 10, base_backoff: Duration::from_millis(100) };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(100));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(200));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(400));
+        assert_eq!(p.backoff_for(7), Duration::from_millis(6400).min(RetryPolicy::MAX_BACKOFF));
+        assert_eq!(p.backoff_for(40), RetryPolicy::MAX_BACKOFF, "huge exponents must cap");
+        let z = RetryPolicy { max_attempts: 3, base_backoff: Duration::ZERO };
+        assert_eq!(z.backoff_for(5), Duration::ZERO, "zero base stays zero");
+    }
+
+    #[test]
+    fn requeue_bumps_attempts_and_respects_terminal_states() {
+        let h = JobHandle::new_queued(JobId(4), CancelToken::new());
+        assert_eq!(h.status().attempts, 1);
+        assert!(h.start_running());
+        assert!(h.requeue_for_retry());
+        assert_eq!(h.status().state, JobState::Queued);
+        assert_eq!(h.status().attempts, 2);
+        assert!(h.start_running());
+        h.cancel();
+        h.finish(JobState::Cancelled, None, Some("cancelled".into()), None);
+        assert!(!h.requeue_for_retry(), "terminal jobs must not re-queue");
+        assert_eq!(h.status().attempts, 2);
     }
 
     #[test]

@@ -37,11 +37,12 @@ pub mod registry;
 pub mod spec;
 
 pub use crate::cancel::CancelToken;
-pub use job::{JobHandle, JobId, JobState, JobStatus, SubmitError, SubmitOpts};
+pub use job::{JobHandle, JobId, JobState, JobStatus, RetryPolicy, SubmitError, SubmitOpts};
 pub use registry::{solver, solver_by_name, solver_names, solvers};
 pub use spec::{GraphSource, MapSpec, Refinement};
 
 use crate::algo::{qap, Algorithm};
+use crate::fault::{self, FaultPlane, FaultPoint};
 use crate::graph::{gen, io, CsrGraph};
 use crate::metrics::PhaseBreakdown;
 use crate::multilevel::{CoarseHierarchy, HierarchyHandle, HierarchyParams};
@@ -87,6 +88,13 @@ pub struct MapOutcome {
     /// skipped), `Some(false)` = built by this job, `None` = the solver
     /// has no engine-cacheable hierarchy.
     pub hierarchy_cache: Option<bool>,
+    /// True when this outcome came from the graceful-degradation
+    /// fallback chain (all regular attempts failed): the mapping is
+    /// valid, but a cheaper solver than configured produced it.
+    pub degraded: bool,
+    /// 1-based number of execution attempts this job took (> 1 only
+    /// under [`RetryPolicy`] retries).
+    pub attempts: u32,
 }
 
 /// One solver in the registry. `solve` runs the algorithm end to end and
@@ -164,6 +172,10 @@ pub struct EngineConfig {
     /// blocks in-process submitters and rejects wire submits with
     /// `err code=busy`.
     pub queue_cap: usize,
+    /// Default retry policy for jobs that did not set
+    /// [`SubmitOpts::retry`]. The default (`max_attempts = 1`) keeps
+    /// failures single-shot; degradation still applies.
+    pub retry: RetryPolicy,
 }
 
 impl Default for EngineConfig {
@@ -175,6 +187,7 @@ impl Default for EngineConfig {
             hierarchy_cache_cap: 8,
             workers: 1,
             queue_cap: 256,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -263,6 +276,13 @@ struct EngineShared {
     /// `file:PATH` models re-read and re-validate an O(k²) table on every
     /// parse, which a long-lived `serve` worker must not pay per job.
     machines: Mutex<Vec<(String, Machine)>>,
+    /// Failed attempts re-queued for retry (cumulative).
+    retries: AtomicU64,
+    /// Failures attributed to the fault plane (message carries
+    /// [`fault::INJECTED_MARKER`]), cumulative across attempts.
+    faults_injected: AtomicU64,
+    /// Jobs completed through the degradation fallback chain.
+    degraded: AtomicU64,
 }
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -349,31 +369,41 @@ impl EngineShared {
 
     /// Solve one spec on this worker's ctx. `Ok(None)` means the token
     /// tripped before a result was produced (the job is not `Done`).
+    /// `plane` is the job's fault plane (from `__fault.*` options);
+    /// injection points here also consult the process-global plane.
     fn execute(
         &self,
         ctx: &EngineCtx,
         spec: &MapSpec,
         cancel: &CancelToken,
+        plane: Option<&FaultPlane>,
     ) -> Result<Option<MapOutcome>> {
-        // Test hooks (used by the cancellation/overlap/panic-recovery
-        // suites; never set by real solvers): `__sleep_ms` busy-waits in
-        // small cancellable slices, `__panic` panics.
+        // Test hook (used by the cancellation/overlap suites; never set
+        // by real solvers): `__sleep_ms` busy-waits in small cancellable
+        // slices. Synthetic failures go through the fault plane
+        // (`__fault.*` options / HEIPA_FAULTS) instead.
         if let Some(ms) = spec.options.get("__sleep_ms").and_then(|v| v.parse::<u64>().ok()) {
             let end = Instant::now() + Duration::from_millis(ms);
             while Instant::now() < end && !cancel.is_cancelled() {
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
-        if spec.opt_bool("__panic") == Some(true) {
-            panic!("synthetic solver panic (__panic test hook)");
-        }
         if cancel.is_cancelled() {
             return Ok(None);
+        }
+        if fault::fire(plane, FaultPoint::GraphStore) {
+            anyhow::bail!(fault::failure(FaultPoint::GraphStore));
         }
         let g = self.resolve_graph(&spec.graph)?;
         let m = self.resolve_machine(spec)?;
         let algo = spec.resolve_algorithm(g.n());
         let solver = registry::solver(algo);
+        // Job-plane hierarchy fault: fires here (once, before the build)
+        // rather than inside `CoarseHierarchy` — the global plane fires
+        // per level in the build itself.
+        if plane.is_some_and(|p| p.should_fire(FaultPoint::HierarchyBuild)) {
+            panic!("{}", fault::failure(FaultPoint::HierarchyBuild));
+        }
         let hier = match solver.hierarchy_params(&g, &m, spec) {
             Some(params) => match self.hierarchy_for(ctx, &g, &params, cancel) {
                 Some(h) => Some(h),
@@ -382,6 +412,9 @@ impl EngineShared {
             },
             None => None,
         };
+        if fault::fire(plane, FaultPoint::Solve) {
+            panic!("{}", fault::failure(FaultPoint::Solve));
+        }
         let mut out = solver.solve(ctx, &g, &m, spec, cancel, hier.as_ref());
         if cancel.is_cancelled() {
             return Ok(None);
@@ -397,11 +430,130 @@ impl EngineShared {
     }
 }
 
-/// Retire one popped job: state checks, the (panic-fenced) solve, and the
-/// terminal transition.
+/// Human-readable payload of a caught panic.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "solver panicked".into())
+}
+
+/// The graceful-degradation ladder for `spec`: the configured solver
+/// first (with every `__`-prefixed test/fault option stripped), then
+/// `jet`, then the serial `intmap-f` baseline (polish disabled — the
+/// cheapest rung must be as dependable as possible).
+fn fallback_chain(spec: &MapSpec) -> Vec<MapSpec> {
+    let mut base = spec.clone();
+    base.options.retain(|k, _| !k.starts_with("__"));
+    let mut chain = vec![base.clone()];
+    if base.algorithm != Some(Algorithm::Jet) {
+        let mut jet = base.clone();
+        jet.algorithm = Some(Algorithm::Jet);
+        jet.refinement = Refinement::Standard;
+        chain.push(jet);
+    }
+    if base.algorithm != Some(Algorithm::IntMapF) {
+        let mut intmap = base;
+        intmap.algorithm = Some(Algorithm::IntMapF);
+        intmap.refinement = Refinement::Standard;
+        intmap.polish = false;
+        chain.push(intmap);
+    }
+    chain
+}
+
+/// Retries exhausted: walk the fallback chain and complete the job with
+/// a degraded (but valid) mapping if any rung succeeds. Rungs run with
+/// fault checks [suppressed](fault::suppress) — degradation must not be
+/// re-faulted into oblivion by an always-on plane. Only when every rung
+/// fails does the job turn terminal `Failed`.
+fn degrade(
+    shared: &EngineShared,
+    ctx: &EngineCtx,
+    spec: &MapSpec,
+    token: &CancelToken,
+    attempt: u32,
+    original_error: String,
+    handle: &JobHandle,
+    hook: Option<&job::CompletionHook>,
+) {
+    let mut notes: Vec<String> = Vec::new();
+    for fspec in fallback_chain(spec) {
+        if token.cancel_requested() {
+            handle.finish(JobState::Cancelled, None, Some("cancelled during solve".into()), hook);
+            return;
+        }
+        if token.deadline_exceeded() {
+            handle.finish(
+                JobState::Expired,
+                None,
+                Some("deadline exceeded during solve".into()),
+                hook,
+            );
+            return;
+        }
+        let label = fspec.algorithm.map_or("auto", Algorithm::name);
+        shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fault::suppress(|| shared.execute(ctx, &fspec, token, None))
+        }));
+        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        match result {
+            Ok(Ok(Some(mut out))) => {
+                if token.cancel_requested() {
+                    handle.finish(
+                        JobState::Cancelled,
+                        None,
+                        Some("cancelled during solve".into()),
+                        hook,
+                    );
+                } else if token.deadline_exceeded() {
+                    handle.finish(
+                        JobState::Expired,
+                        None,
+                        Some("deadline exceeded during solve".into()),
+                        hook,
+                    );
+                } else {
+                    out.degraded = true;
+                    out.attempts = attempt;
+                    // relaxed: monotone statistics counter, read approximately.
+                    shared.degraded.fetch_add(1, Ordering::Relaxed);
+                    handle.finish(JobState::Done, Some(out), None, hook);
+                }
+                return;
+            }
+            Ok(Ok(None)) => {
+                let (state, why) = if token.cancel_requested() {
+                    (JobState::Cancelled, "cancelled during solve")
+                } else {
+                    (JobState::Expired, "deadline exceeded during solve")
+                };
+                handle.finish(state, None, Some(why.into()), hook);
+                return;
+            }
+            Ok(Err(e)) => notes.push(format!("{label}: {e:#}")),
+            Err(panic) => notes.push(format!("{label}: panicked: {}", panic_message(&*panic))),
+        }
+    }
+    handle.finish(
+        JobState::Failed,
+        None,
+        Some(format!(
+            "{original_error} (after {attempt} attempt(s); fallback chain failed: {})",
+            notes.join("; ")
+        )),
+        hook,
+    );
+}
+
+/// Retire one popped job: state checks, the (panic-fenced) solve, and —
+/// on failure — the self-healing path: re-queue with backoff while the
+/// [`RetryPolicy`] allows, then degrade down the fallback chain. Every
+/// job still reaches exactly one terminal state exactly once.
 fn run_job(shared: &EngineShared, ctx: &EngineCtx, job: queue::QueuedJob) {
-    let handle = job.handle;
-    let hook = job.hook;
+    let queue::QueuedJob { priority, seq, attempt, retry, spec, handle, hook } = job;
     let token = handle.token().clone();
     if token.deadline_exceeded() {
         handle.finish(
@@ -416,39 +568,101 @@ fn run_job(shared: &EngineShared, ctx: &EngineCtx, job: queue::QueuedJob) {
         handle.finish(JobState::Cancelled, None, Some("cancelled before start".into()), hook.as_ref());
         return;
     }
+    // Per-job fault plane from `__fault.*` options, salted with the
+    // attempt number (a retry draws fresh decisions). A malformed option
+    // is a spec error: terminal, no retry, no fallback.
+    let plane = match FaultPlane::from_options(&spec.options, attempt as u64) {
+        Ok(p) => p,
+        Err(e) => {
+            handle.finish(JobState::Failed, None, Some(format!("{e:#}")), hook.as_ref());
+            return;
+        }
+    };
     shared.in_flight.fetch_add(1, Ordering::SeqCst);
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        shared.execute(ctx, &job.spec, &token)
-    }));
+    let result = if fault::fire(plane.as_ref(), FaultPoint::JobPickup) {
+        Ok(Err(anyhow::anyhow!(fault::failure(FaultPoint::JobPickup))))
+    } else {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.execute(ctx, &spec, &token, plane.as_ref())
+        }))
+    };
     shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-    let (state, outcome, error) = match result {
-        Ok(Ok(Some(out))) => {
-            if token.cancel_requested() {
+    let failure = match result {
+        Ok(Ok(Some(mut out))) => {
+            let (state, outcome, error) = if token.cancel_requested() {
                 (JobState::Cancelled, None, Some("cancelled during solve".into()))
             } else if token.deadline_exceeded() {
                 (JobState::Expired, None, Some("deadline exceeded during solve".into()))
             } else {
+                out.attempts = attempt;
                 (JobState::Done, Some(out), None)
-            }
+            };
+            handle.finish(state, outcome, error, hook.as_ref());
+            return;
         }
         Ok(Ok(None)) => {
-            if token.cancel_requested() {
-                (JobState::Cancelled, None, Some("cancelled during solve".into()))
+            let (state, why) = if token.cancel_requested() {
+                (JobState::Cancelled, "cancelled during solve")
             } else {
-                (JobState::Expired, None, Some("deadline exceeded during solve".into()))
+                (JobState::Expired, "deadline exceeded during solve")
+            };
+            handle.finish(state, None, Some(why.into()), hook.as_ref());
+            return;
+        }
+        Ok(Err(e)) => format!("{e:#}"),
+        Err(panic) => format!("solver panicked: {}", panic_message(&*panic)),
+    };
+    if failure.contains(fault::INJECTED_MARKER) {
+        // relaxed: monotone statistics counter, read approximately.
+        shared.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+    // Retry while the policy allows, the job is not cancelled, and the
+    // remaining deadline can still cover the backoff sleep.
+    let backoff = retry.backoff_for(attempt);
+    let deadline_allows = !token.deadline_exceeded()
+        && token.deadline_remaining().is_none_or(|left| left > backoff);
+    if attempt < retry.max_attempts && !token.cancel_requested() && deadline_allows {
+        if !handle.requeue_for_retry() {
+            // A cancel raced the failure: the cell is already terminal.
+            handle.finish(
+                JobState::Cancelled,
+                None,
+                Some("cancelled during solve".into()),
+                hook.as_ref(),
+            );
+            return;
+        }
+        // relaxed: monotone statistics counter, read approximately.
+        shared.retries.fetch_add(1, Ordering::Relaxed);
+        let requeued = queue::QueuedJob {
+            priority,
+            seq,
+            attempt: attempt + 1,
+            retry,
+            spec,
+            handle: handle.clone(),
+            hook,
+        };
+        let pushed = lock(&shared.queue).push_delayed(Instant::now() + backoff, requeued);
+        match pushed {
+            Ok(()) => {
+                shared.work_cv.notify_one();
+            }
+            Err(back) => {
+                // The queue closed (engine shutting down) between the
+                // failure and the re-queue: retire the job here instead
+                // of losing it.
+                back.handle.finish(
+                    JobState::Cancelled,
+                    None,
+                    Some("engine shut down".into()),
+                    back.hook.as_ref(),
+                );
             }
         }
-        Ok(Err(e)) => (JobState::Failed, None, Some(format!("{e:#}"))),
-        Err(panic) => {
-            let msg = panic
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| panic.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "solver panicked".into());
-            (JobState::Failed, None, Some(format!("solver panicked: {msg}")))
-        }
-    };
-    handle.finish(state, outcome, error, hook.as_ref());
+        return;
+    }
+    degrade(shared, ctx, &spec, &token, attempt, failure, &handle, hook.as_ref());
 }
 
 fn worker_loop(shared: Arc<EngineShared>) {
@@ -459,6 +673,7 @@ fn worker_loop(shared: Arc<EngineShared>) {
         let job = {
             let mut q = lock(&shared.queue);
             loop {
+                q.promote_ready(Instant::now());
                 if let Some(j) = q.pop() {
                     shared.space_cv.notify_one();
                     break j;
@@ -466,7 +681,22 @@ fn worker_loop(shared: Arc<EngineShared>) {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = shared.work_cv.wait(q).unwrap_or_else(PoisonError::into_inner);
+                // With retries parked in the delayed lane, bound the wait
+                // by the earliest backoff expiry so the promotion above
+                // happens on time even when no fresh submit notifies.
+                q = match q.next_ready_at() {
+                    Some(at) => {
+                        let wait = at
+                            .saturating_duration_since(Instant::now())
+                            .max(Duration::from_millis(1));
+                        shared
+                            .work_cv
+                            .wait_timeout(q, wait)
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .0
+                    }
+                    None => shared.work_cv.wait(q).unwrap_or_else(PoisonError::into_inner),
+                };
             }
         };
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -509,6 +739,9 @@ impl Engine {
             hierarchy_hits: AtomicU64::new(0),
             hierarchy_misses: AtomicU64::new(0),
             machines: Mutex::new(Vec::new()),
+            retries: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             cfg,
         });
         let workers = (0..worker_count)
@@ -552,11 +785,15 @@ impl Engine {
             None => CancelToken::new(),
         };
         let handle = JobHandle::new_queued(id, token);
+        let retry = opts.retry.unwrap_or(shared.cfg.retry);
+        let retry = RetryPolicy { max_attempts: retry.max_attempts.max(1), ..retry };
         let mut job = queue::QueuedJob {
             priority: opts.priority,
             // relaxed: uniqueness comes from the RMW; FIFO tie-breaking
             // only needs distinct, not globally ordered, values.
             seq: shared.next_seq.fetch_add(1, Ordering::Relaxed),
+            attempt: 1,
+            retry,
             spec: spec.clone(),
             handle: handle.clone(),
             hook: opts.on_complete,
@@ -704,11 +941,36 @@ impl Engine {
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
+
+    /// Failed attempts re-queued for retry (cumulative since start).
+    pub fn retries(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.retries.load(Ordering::Relaxed)
+    }
+
+    /// Failures attributed to the fault plane (cumulative across
+    /// attempts; an injected fault retried twice counts every firing).
+    pub fn faults_injected(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.faults_injected.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that completed `Done` through the degradation fallback chain
+    /// (their outcomes carry `degraded = true`).
+    pub fn degraded_completions(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.degraded.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Seal the queue *before* waking anyone: a worker about to
+        // re-queue a failed attempt observes `closed`, retires the job as
+        // `Cancelled` itself, and the final drain below cannot race a
+        // late retry back into a lane it has already emptied.
+        lock(&self.shared.queue).close();
         self.shared.work_cv.notify_all();
         self.shared.space_cv.notify_all();
         for w in self.workers.drain(..) {
@@ -1094,12 +1356,148 @@ mod tests {
     }
 
     #[test]
-    fn panicking_job_fails_cleanly_and_worker_survives() {
+    fn injected_solver_fault_degrades_to_a_valid_mapping() {
         let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
-        let bad = sleepy_spec(0).option("__panic", "1");
-        let err = e.map(&bad).unwrap_err().to_string();
-        assert!(err.contains("panic"), "{err}");
-        // Same worker keeps serving.
-        assert!(e.map(&sleepy_spec(0)).is_ok());
+        // The solve fires (panics) on every attempt; with the default
+        // single-shot policy the job must complete through the fallback
+        // chain instead of failing.
+        let bad = sleepy_spec(0).option("__fault.solve", "1").option("__fault.seed", "7");
+        let out = e.map(&bad).unwrap();
+        assert!(out.degraded, "all-attempts fault must degrade, not fail");
+        assert_eq!(out.attempts, 1);
+        validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        assert_eq!(e.faults_injected(), 1);
+        assert_eq!(e.degraded_completions(), 1);
+        assert_eq!(e.retries(), 0);
+        // Same worker keeps serving — and organically.
+        let ok = e.map(&sleepy_spec(0)).unwrap();
+        assert!(!ok.degraded);
+        assert_eq!(ok.attempts, 1);
+    }
+
+    #[test]
+    fn malformed_fault_option_is_a_terminal_spec_error() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let err = e.map(&sleepy_spec(0).option("__fault.bogus", "0.5")).unwrap_err().to_string();
+        assert!(err.contains("unknown fault point"), "{err}");
+        assert_eq!(e.degraded_completions(), 0, "spec errors must not degrade");
+    }
+
+    /// A `__fault.seed` whose solve arm fires on attempt 1's stream but
+    /// not on attempt 2's — the deterministic "flaky once" job.
+    fn flaky_once_seed(prob: &str) -> u64 {
+        use std::collections::BTreeMap;
+        (0..10_000u64)
+            .find(|seed| {
+                let mut opts = BTreeMap::new();
+                opts.insert("__fault.solve".to_string(), prob.to_string());
+                opts.insert("__fault.seed".to_string(), seed.to_string());
+                let fires = |salt: u64| {
+                    FaultPlane::from_options(&opts, salt)
+                        .unwrap()
+                        .unwrap()
+                        .should_fire(FaultPoint::Solve)
+                };
+                fires(1) && !fires(2)
+            })
+            .expect("a flaky-once seed exists in 0..10000")
+    }
+
+    #[test]
+    fn retry_recovers_a_flaky_job_without_degradation() {
+        let seed = flaky_once_seed("0.5");
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let spec = sleepy_spec(0)
+            .option("__fault.solve", "0.5")
+            .option("__fault.seed", seed.to_string());
+        let job = e
+            .submit_opts(
+                &spec,
+                SubmitOpts {
+                    retry: Some(RetryPolicy {
+                        max_attempts: 2,
+                        base_backoff: Duration::from_millis(1),
+                    }),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let out = job.wait().unwrap();
+        assert!(!out.degraded, "the second attempt must succeed organically");
+        assert_eq!(out.attempts, 2);
+        assert_eq!(job.status().attempts, 2);
+        assert_eq!(e.retries(), 1);
+        assert_eq!(e.faults_injected(), 1);
+        assert_eq!(e.degraded_completions(), 0);
+    }
+
+    #[test]
+    fn exhausted_retries_fall_back_to_degradation() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let spec = sleepy_spec(0).option("__fault.solve", "1");
+        let job = e
+            .submit_opts(
+                &spec,
+                SubmitOpts {
+                    retry: Some(RetryPolicy {
+                        max_attempts: 3,
+                        base_backoff: Duration::from_millis(1),
+                    }),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let out = job.wait().unwrap();
+        assert!(out.degraded);
+        assert_eq!(out.attempts, 3);
+        validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        assert_eq!(e.retries(), 2);
+        assert_eq!(e.faults_injected(), 3, "every attempt's fault counts");
+        assert_eq!(e.degraded_completions(), 1);
+    }
+
+    #[test]
+    fn engine_default_retry_policy_applies_to_plain_submits() {
+        let e = Engine::new(EngineConfig {
+            threads: 1,
+            workers: 1,
+            retry: RetryPolicy { max_attempts: 2, base_backoff: Duration::from_millis(1) },
+            ..Default::default()
+        });
+        let out = e.map(&sleepy_spec(0).option("__fault.solve", "1")).unwrap();
+        assert!(out.degraded);
+        assert_eq!(out.attempts, 2, "engine-level policy must apply");
+        assert_eq!(e.retries(), 1);
+    }
+
+    #[test]
+    fn dropping_the_engine_cancels_pending_retries() {
+        // Regression: a retry parked in the delayed lane (long backoff)
+        // when the engine drops must retire as `Cancelled`, not linger
+        // queued forever or be re-queued after the final drain.
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let spec = sleepy_spec(0).option("__fault.solve", "1");
+        let job = e
+            .submit_opts(
+                &spec,
+                SubmitOpts {
+                    retry: Some(RetryPolicy {
+                        max_attempts: 10,
+                        base_backoff: Duration::from_secs(60),
+                    }),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        // Wait until the first attempt failed and the retry is parked.
+        let t0 = Instant::now();
+        while e.retries() == 0 && t0.elapsed() < Duration::from_secs(30) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(e.retries(), 1, "first attempt should have re-queued");
+        drop(e);
+        let st = job.status();
+        assert_eq!(st.state, JobState::Cancelled, "pending retry must not outlive the engine");
+        assert!(st.error.unwrap().contains("shut down"));
     }
 }

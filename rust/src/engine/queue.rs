@@ -4,16 +4,27 @@
 //! (submit sequence) within a priority class. The capacity bound is the
 //! engine's backpressure signal — a full queue either blocks the
 //! submitter or surfaces [`super::SubmitError::Busy`].
+//!
+//! Retries ride a separate **delayed lane**: [`JobQueue::push_delayed`]
+//! parks a job until its backoff elapses, [`JobQueue::promote_ready`]
+//! moves due jobs into the heap (bypassing the capacity bound — a retry
+//! already holds its slot and must never be dropped for backpressure).
+//! [`JobQueue::close`] seals both lanes so a shutdown drain cannot race
+//! a late re-queue (see `Engine::drop`).
 
-use super::job::{CompletionHook, JobHandle};
+use super::job::{CompletionHook, JobHandle, RetryPolicy};
 use super::MapSpec;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::time::Instant;
 
 pub(crate) struct QueuedJob {
     pub priority: i32,
     /// Monotonic submit sequence; lower = earlier.
     pub seq: u64,
+    /// 1-based attempt number this pop will execute.
+    pub attempt: u32,
+    pub retry: RetryPolicy,
     pub spec: MapSpec,
     pub handle: JobHandle,
     pub hook: Option<CompletionHook>,
@@ -44,28 +55,78 @@ impl Ord for QueuedJob {
 pub(crate) struct JobQueue {
     cap: usize,
     heap: BinaryHeap<QueuedJob>,
+    /// Backoff lane: jobs waiting for their retry moment, unordered (the
+    /// list stays tiny — bounded by in-flight retries).
+    delayed: Vec<(Instant, QueuedJob)>,
+    /// Once closed (engine shutdown), pushes into either lane fail and
+    /// hand the job back so the caller retires it.
+    closed: bool,
 }
 
 impl JobQueue {
     pub fn new(cap: usize) -> JobQueue {
-        JobQueue { cap: cap.max(1), heap: BinaryHeap::new() }
+        JobQueue { cap: cap.max(1), heap: BinaryHeap::new(), delayed: Vec::new(), closed: false }
     }
 
     pub fn cap(&self) -> usize {
         self.cap
     }
 
+    /// Jobs in the queue, both ready and backoff-delayed.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + self.delayed.len()
     }
 
-    /// Enqueue, or hand the job back when full.
+    /// Seal the queue: all further pushes (fresh or delayed) are refused.
+    /// Called by `Engine::drop` *before* the final drain so a retry that
+    /// lost the race finishes `Cancelled` instead of being lost.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Enqueue, or hand the job back when full or closed.
     pub fn push(&mut self, job: QueuedJob) -> Result<(), QueuedJob> {
-        if self.heap.len() >= self.cap {
+        if self.closed || self.heap.len() >= self.cap {
             return Err(job);
         }
         self.heap.push(job);
         Ok(())
+    }
+
+    /// Park a retry until `ready_at`. Not capacity-bounded (the job held
+    /// a slot when first admitted); refused only once the queue closed.
+    pub fn push_delayed(&mut self, ready_at: Instant, job: QueuedJob) -> Result<(), QueuedJob> {
+        if self.closed {
+            return Err(job);
+        }
+        self.delayed.push((ready_at, job));
+        Ok(())
+    }
+
+    /// Move every delayed job whose backoff has elapsed into the ready
+    /// heap. Returns how many were promoted.
+    pub fn promote_ready(&mut self, now: Instant) -> usize {
+        let mut promoted = 0;
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= now {
+                let (_, job) = self.delayed.swap_remove(i);
+                self.heap.push(job);
+                promoted += 1;
+            } else {
+                i += 1;
+            }
+        }
+        promoted
+    }
+
+    /// The earliest instant at which a delayed job becomes ready.
+    pub fn next_ready_at(&self) -> Option<Instant> {
+        self.delayed.iter().map(|(t, _)| *t).min()
     }
 
     pub fn pop(&mut self) -> Option<QueuedJob> {
@@ -75,29 +136,38 @@ impl JobQueue {
     /// Remove jobs that already reached a terminal state (cancelled or
     /// deadline-expired while queued) so they stop occupying capacity.
     /// Returns the removed jobs — the caller must still retire them
-    /// (fire their completion hooks).
+    /// (fire their completion hooks). Scans both lanes.
     pub fn purge_terminal(&mut self) -> Vec<QueuedJob> {
-        if self.heap.iter().all(|j| !j.handle.is_finished()) {
-            return Vec::new();
-        }
         let mut purged = Vec::new();
-        let mut keep = BinaryHeap::with_capacity(self.heap.len());
-        for j in self.heap.drain() {
-            if j.handle.is_finished() {
-                purged.push(j);
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].1.handle.is_finished() {
+                purged.push(self.delayed.swap_remove(i).1);
             } else {
-                keep.push(j);
+                i += 1;
             }
         }
-        self.heap = keep;
+        if self.heap.iter().any(|j| j.handle.is_finished()) {
+            let mut keep = BinaryHeap::with_capacity(self.heap.len());
+            for j in self.heap.drain() {
+                if j.handle.is_finished() {
+                    purged.push(j);
+                } else {
+                    keep.push(j);
+                }
+            }
+            self.heap = keep;
+        }
         purged
     }
 
+    /// Empty both lanes (shutdown drain).
     pub fn drain(&mut self) -> Vec<QueuedJob> {
-        let mut out = Vec::with_capacity(self.heap.len());
+        let mut out = Vec::with_capacity(self.len());
         while let Some(j) = self.heap.pop() {
             out.push(j);
         }
+        out.extend(self.delayed.drain(..).map(|(_, j)| j));
         out
     }
 }
@@ -107,11 +177,14 @@ mod tests {
     use super::*;
     use crate::cancel::CancelToken;
     use crate::engine::job::JobId;
+    use std::time::Duration;
 
     fn job(priority: i32, seq: u64) -> QueuedJob {
         QueuedJob {
             priority,
             seq,
+            attempt: 1,
+            retry: RetryPolicy::default(),
             spec: MapSpec::named("x"),
             handle: JobHandle::new_queued(JobId(seq), CancelToken::new()),
             hook: None,
@@ -155,5 +228,49 @@ mod tests {
         assert_eq!(q.len(), 2);
         q.pop();
         assert!(q.push(job(9, 3)).is_ok());
+    }
+
+    #[test]
+    fn delayed_jobs_promote_when_due_and_bypass_cap() {
+        let mut q = JobQueue::new(1);
+        assert!(q.push(job(0, 1)).is_ok());
+        let now = Instant::now();
+        // Queue is full, but the retry lane must still admit the job.
+        assert!(q.push_delayed(now + Duration::from_millis(50), job(0, 2)).is_ok());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.promote_ready(now), 0, "not due yet");
+        assert!(q.next_ready_at().is_some());
+        assert_eq!(q.promote_ready(now + Duration::from_millis(60)), 1);
+        assert!(q.next_ready_at().is_none());
+        assert_eq!(q.pop().unwrap().seq, 1);
+        assert_eq!(q.pop().unwrap().seq, 2);
+    }
+
+    #[test]
+    fn closed_queue_refuses_both_lanes_and_drains_everything() {
+        let mut q = JobQueue::new(4);
+        assert!(q.push(job(0, 1)).is_ok());
+        assert!(q.push_delayed(Instant::now() + Duration::from_secs(60), job(0, 2)).is_ok());
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.push(job(0, 3)).is_err());
+        assert!(q.push_delayed(Instant::now(), job(0, 4)).is_err());
+        let drained: Vec<u64> = q.drain().into_iter().map(|j| j.seq).collect();
+        assert_eq!(drained.len(), 2);
+        assert!(drained.contains(&1) && drained.contains(&2));
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn purge_scans_the_delayed_lane() {
+        let mut q = JobQueue::new(4);
+        let a = job(0, 1);
+        let h = a.handle.clone();
+        assert!(q.push_delayed(Instant::now() + Duration::from_secs(60), a).is_ok());
+        h.cancel();
+        let purged = q.purge_terminal();
+        assert_eq!(purged.len(), 1);
+        assert_eq!(purged[0].seq, 1);
+        assert_eq!(q.len(), 0);
     }
 }

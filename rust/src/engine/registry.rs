@@ -41,6 +41,8 @@ fn measured(
         phases: if algo.is_device() { Some(phases) } else { None },
         polish_improvement: 0.0,
         hierarchy_cache: None,
+        degraded: false,
+        attempts: 1,
     }
 }
 

@@ -1,0 +1,489 @@
+//! Deterministic fault-injection plane.
+//!
+//! A [`FaultPlane`] arms named injection points — [`FaultPoint`] — with a
+//! probability and a seed; every armed check draws from a SplitMix64
+//! stream keyed by `(seed, point, check index)`, so a given plane fires
+//! at exactly the same checks on every run. Two planes exist:
+//!
+//! * the **process-global plane**, parsed once from the `HEIPA_FAULTS`
+//!   environment variable (see [`FaultPlane::parse`] for the grammar) and
+//!   consulted by the hot layers themselves — kernel launches
+//!   ([`crate::par::Pool`]), multilevel hierarchy builds
+//!   ([`crate::multilevel::CoarseHierarchy`]), METIS parsing
+//!   ([`crate::graph::io`]) and the TCP accept loop
+//!   ([`crate::coordinator::protocol::serve_listener`]);
+//! * **per-job planes**, built by the engine from `__fault.*` spec
+//!   options (`opt.__fault.solve=0.5`, `opt.__fault.seed=9` on the
+//!   wire). Their check counters start at zero for every attempt (with
+//!   the attempt number salted into the stream), so a job's fault
+//!   sequence is bit-for-bit reproducible regardless of worker
+//!   scheduling. See [`FaultPlane::from_options`].
+//!
+//! Injection semantics by point (who observes the failure is part of the
+//! contract — the engine's panic fence turns every one into a clean
+//! `Failed` attempt, never a dead worker):
+//!
+//! | point             | fires in                                   | failure mode |
+//! |-------------------|--------------------------------------------|--------------|
+//! | `kernel_launch`   | `Pool::parallel_for`/`reduce`/`scan`, pre-dispatch, submitting thread only | panic |
+//! | `hierarchy_build` | each level of `CoarseHierarchy::build`/`build_serial`; per-job plane: before the engine's hierarchy step | panic |
+//! | `graph_load`      | `graph::io::parse_metis` entry             | `Err`        |
+//! | `graph_store`     | engine graph resolution (`resolve_graph`)  | `Err`        |
+//! | `job_pickup`      | worker job pickup, before the solve        | `Err`        |
+//! | `solve`           | engine `execute`, before the solver runs   | panic        |
+//! | `wire_read`       | coordinator connection loop, before a read | connection closed |
+//! | `wire_write`      | coordinator connection loop, before a reply| connection closed |
+//!
+//! Injected failures carry the [`INJECTED_MARKER`] substring in their
+//! message, which is how the engine attributes them to its
+//! `faults_injected` counter. The self-healing pipeline's fallback chain
+//! runs under [`suppress`], which silences *every* plane on the current
+//! thread so degradation can succeed even when the environment plane is
+//! armed at probability 1.
+
+use anyhow::{bail, Result};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Marker substring present in every injected failure message; the
+/// engine uses it to tell injected faults apart from organic failures.
+pub const INJECTED_MARKER: &str = "injected fault";
+
+/// Named injection points of the fault plane. See the module docs for
+/// where each one may fire and with which failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Device kernel launch (`par::Pool` primitives), pre-dispatch.
+    KernelLaunch,
+    /// Multilevel hierarchy construction, per level.
+    HierarchyBuild,
+    /// METIS graph parsing/loading.
+    GraphLoad,
+    /// Engine graph-store resolution.
+    GraphStore,
+    /// Worker job pickup, before the solve starts.
+    JobPickup,
+    /// The solve itself (replaces the old ad-hoc `__panic` hook).
+    Solve,
+    /// Coordinator wire read.
+    WireRead,
+    /// Coordinator wire write.
+    WireWrite,
+}
+
+/// Number of distinct fault points.
+const POINTS: usize = 8;
+
+impl FaultPoint {
+    /// All points, in a fixed order (`all` in the `HEIPA_FAULTS` grammar
+    /// expands to this list).
+    pub const ALL: [FaultPoint; POINTS] = [
+        FaultPoint::KernelLaunch,
+        FaultPoint::HierarchyBuild,
+        FaultPoint::GraphLoad,
+        FaultPoint::GraphStore,
+        FaultPoint::JobPickup,
+        FaultPoint::Solve,
+        FaultPoint::WireRead,
+        FaultPoint::WireWrite,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::KernelLaunch => "kernel_launch",
+            FaultPoint::HierarchyBuild => "hierarchy_build",
+            FaultPoint::GraphLoad => "graph_load",
+            FaultPoint::GraphStore => "graph_store",
+            FaultPoint::JobPickup => "job_pickup",
+            FaultPoint::Solve => "solve",
+            FaultPoint::WireRead => "wire_read",
+            FaultPoint::WireWrite => "wire_write",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<FaultPoint> {
+        FaultPoint::ALL.iter().copied().find(|p| p.name() == name)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultPoint::KernelLaunch => 0,
+            FaultPoint::HierarchyBuild => 1,
+            FaultPoint::GraphLoad => 2,
+            FaultPoint::GraphStore => 3,
+            FaultPoint::JobPickup => 4,
+            FaultPoint::Solve => 5,
+            FaultPoint::WireRead => 6,
+            FaultPoint::WireWrite => 7,
+        }
+    }
+}
+
+/// The failure message injected at `point` (carries [`INJECTED_MARKER`]).
+pub fn failure(point: FaultPoint) -> String {
+    format!("{INJECTED_MARKER} at {}", point.name())
+}
+
+/// One armed point: fire with `prob` on a seeded deterministic stream.
+struct Arm {
+    prob: f64,
+    seed: u64,
+    /// Per-point check index — the position in this arm's decision
+    /// stream. Monotonically increasing across checks.
+    checks: AtomicU64,
+}
+
+impl Arm {
+    fn decide(&self, point: FaultPoint) -> bool {
+        // relaxed: the counter is a monotone ticket; each check claims a
+        // unique stream index via the RMW itself, no other data is
+        // published through it.
+        let i = self.checks.fetch_add(1, Ordering::Relaxed);
+        // One SplitMix64 draw keyed by (seed, point, index): bit-for-bit
+        // reproducible for a fixed plane, independent across points.
+        let mut x = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((point.index() as u64 + 1).wrapping_mul(0xA24BAED4963EE407))
+            .wrapping_add(i);
+        let draw = crate::rng::splitmix64(&mut x);
+        let u = (draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.prob
+    }
+}
+
+/// A set of armed injection points. Checks on unarmed points are free
+/// (an array lookup); the engine and the hot layers consult a plane via
+/// [`fire`] / [`FaultPlane::should_fire`].
+pub struct FaultPlane {
+    arms: [Option<Arm>; POINTS],
+    /// Faults actually injected through this plane (not just checks).
+    injected: AtomicU64,
+}
+
+impl Default for FaultPlane {
+    fn default() -> Self {
+        FaultPlane::disarmed()
+    }
+}
+
+impl FaultPlane {
+    /// A plane with no armed points — every check returns false.
+    pub fn disarmed() -> FaultPlane {
+        FaultPlane { arms: Default::default(), injected: AtomicU64::new(0) }
+    }
+
+    /// Arm `point` to fire with probability `prob` (clamped to `[0, 1]`)
+    /// on the deterministic stream seeded by `seed`.
+    pub fn arm(&mut self, point: FaultPoint, prob: f64, seed: u64) {
+        self.arms[point.index()] = Some(Arm {
+            prob: prob.clamp(0.0, 1.0),
+            seed,
+            checks: AtomicU64::new(0),
+        });
+    }
+
+    /// Is any point armed? (Fast pre-check for hot paths.)
+    pub fn armed_any(&self) -> bool {
+        self.arms.iter().any(|a| a.is_some())
+    }
+
+    /// Is `point` armed?
+    pub fn is_armed(&self, point: FaultPoint) -> bool {
+        self.arms[point.index()].is_some()
+    }
+
+    /// Draw the next decision for `point`: true = inject a fault here.
+    /// Unarmed points and suppressed threads (see [`suppress`]) never
+    /// fire and do not advance the decision stream.
+    pub fn should_fire(&self, point: FaultPoint) -> bool {
+        let Some(arm) = &self.arms[point.index()] else {
+            return false;
+        };
+        if suppressed() {
+            return false;
+        }
+        let fire = arm.decide(point);
+        if fire {
+            // relaxed: monotone statistics counter, read approximately.
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Faults injected through this plane so far.
+    pub fn injected(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Parse the `HEIPA_FAULTS` grammar:
+    /// `point:prob[:seed][;point:prob[:seed]…]`, where `point` is a
+    /// [`FaultPoint::name`] or `all`, `prob` is a float in `[0, 1]` and
+    /// `seed` defaults to 1. Empty input yields a disarmed plane.
+    ///
+    /// ```
+    /// let p = heipa::fault::FaultPlane::parse("solve:0.5:7;graph_load:1").unwrap();
+    /// assert!(p.is_armed(heipa::fault::FaultPoint::Solve));
+    /// assert!(!p.is_armed(heipa::fault::FaultPoint::WireRead));
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultPlane> {
+        let mut plane = FaultPlane::disarmed();
+        for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            if !(2..=3).contains(&fields.len()) {
+                bail!("fault spec `{part}` wants point:prob[:seed]");
+            }
+            let prob: f64 = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault probability `{}` in `{part}`", fields[1]))?;
+            if !(0.0..=1.0).contains(&prob) {
+                bail!("fault probability {prob} out of [0, 1] in `{part}`");
+            }
+            let seed: u64 = match fields.get(2) {
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault seed `{s}` in `{part}`"))?,
+                None => 1,
+            };
+            if fields[0] == "all" {
+                for point in FaultPoint::ALL {
+                    plane.arm(point, prob, seed);
+                }
+            } else {
+                let point = FaultPoint::from_name(fields[0]).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown fault point `{}` (expected one of {}, or `all`)",
+                        fields[0],
+                        FaultPoint::ALL.map(FaultPoint::name).join(", ")
+                    )
+                })?;
+                plane.arm(point, prob, seed);
+            }
+        }
+        Ok(plane)
+    }
+
+    /// Build a per-job plane from `__fault.*` spec options:
+    /// `__fault.<point> = <prob>` arms a point, `__fault.seed = <u64>`
+    /// seeds the streams (default: 1). `attempt_salt` (the job's attempt
+    /// number) is folded into every seed so retries of the same job draw
+    /// fresh decisions. Returns `Ok(None)` when no `__fault.*` key is
+    /// present; unknown points and malformed values are errors.
+    pub fn from_options(
+        options: &BTreeMap<String, String>,
+        attempt_salt: u64,
+    ) -> Result<Option<FaultPlane>> {
+        let mut plane = FaultPlane::disarmed();
+        let mut any = false;
+        let seed: u64 = match options.get("__fault.seed") {
+            Some(v) => {
+                any = true;
+                v.parse().map_err(|_| anyhow::anyhow!("bad __fault.seed `{v}`"))?
+            }
+            None => 1,
+        };
+        for (key, value) in options {
+            let Some(name) = key.strip_prefix("__fault.") else {
+                continue;
+            };
+            if name == "seed" {
+                continue;
+            }
+            let point = FaultPoint::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown fault point `__fault.{name}`"))?;
+            let prob: f64 = value
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad probability `{value}` for __fault.{name}"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                bail!("probability {prob} for __fault.{name} out of [0, 1]");
+            }
+            // Salt the attempt number in so a retried attempt draws a
+            // fresh (still deterministic) decision sequence.
+            plane.arm(point, prob, seed ^ attempt_salt.wrapping_mul(0xD1B54A32D192ED03));
+            any = true;
+        }
+        Ok(any.then_some(plane))
+    }
+}
+
+/// The process-global plane, parsed once from `HEIPA_FAULTS` on first
+/// use. An unset or empty variable yields a disarmed plane; a malformed
+/// one panics on first access (loudly, at startup of whatever consults
+/// it) rather than silently running without faults.
+pub fn global() -> &'static FaultPlane {
+    static GLOBAL: OnceLock<FaultPlane> = OnceLock::new();
+    GLOBAL.get_or_init(|| match std::env::var("HEIPA_FAULTS") {
+        Ok(spec) => FaultPlane::parse(&spec)
+            .unwrap_or_else(|e| panic!("invalid HEIPA_FAULTS `{spec}`: {e:#}")),
+        Err(_) => FaultPlane::disarmed(),
+    })
+}
+
+thread_local! {
+    /// Suppression depth for the current thread (see [`suppress`]).
+    static SUPPRESS: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Are fault checks suppressed on this thread?
+pub fn suppressed() -> bool {
+    SUPPRESS.with(|s| s.get() > 0)
+}
+
+/// Run `f` with every fault check on this thread suppressed. The engine
+/// wraps its fallback chain in this so a degraded completion cannot be
+/// re-faulted into oblivion by an always-on plane. Nests.
+pub fn suppress<R>(f: impl FnOnce() -> R) -> R {
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            SUPPRESS.with(|s| s.set(s.get() - 1));
+        }
+    }
+    SUPPRESS.with(|s| s.set(s.get() + 1));
+    let _guard = Guard;
+    f()
+}
+
+/// Check `point` against the per-job plane (if any), then the global
+/// plane. True = inject a fault here. The short-circuit means a job-plane
+/// hit does not advance the global stream (each plane owns its own
+/// per-point decision sequence).
+pub fn fire(plane: Option<&FaultPlane>, point: FaultPoint) -> bool {
+    plane.is_some_and(|p| p.should_fire(point)) || global().should_fire(point)
+}
+
+/// Global-plane-only check — for layers that have no job context (the
+/// device pool, graph IO, the wire loop).
+#[inline]
+pub fn fire_global(point: FaultPoint) -> bool {
+    let g = global();
+    g.is_armed(point) && g.should_fire(point)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plane_never_fires() {
+        let p = FaultPlane::disarmed();
+        for point in FaultPoint::ALL {
+            assert!(!p.should_fire(point));
+        }
+        assert_eq!(p.injected(), 0);
+        assert!(!p.armed_any());
+    }
+
+    #[test]
+    fn point_names_round_trip() {
+        for point in FaultPoint::ALL {
+            assert_eq!(FaultPoint::from_name(point.name()), Some(point));
+        }
+        assert_eq!(FaultPoint::from_name("nope"), None);
+        assert!(failure(FaultPoint::Solve).contains(INJECTED_MARKER));
+        assert!(failure(FaultPoint::Solve).contains("solve"));
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let mut p = FaultPlane::disarmed();
+        p.arm(FaultPoint::Solve, 1.0, 42);
+        p.arm(FaultPoint::GraphLoad, 0.0, 42);
+        for _ in 0..64 {
+            assert!(p.should_fire(FaultPoint::Solve));
+            assert!(!p.should_fire(FaultPoint::GraphLoad));
+        }
+        assert_eq!(p.injected(), 64);
+    }
+
+    #[test]
+    fn decision_streams_are_deterministic_and_seeded() {
+        let draw = |seed: u64| -> Vec<bool> {
+            let mut p = FaultPlane::disarmed();
+            p.arm(FaultPoint::Solve, 0.5, seed);
+            (0..256).map(|_| p.should_fire(FaultPoint::Solve)).collect()
+        };
+        let a = draw(7);
+        assert_eq!(a, draw(7), "same seed must reproduce the same sequence");
+        assert_ne!(a, draw(8), "different seeds must diverge");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!((64..192).contains(&fires), "p=0.5 fired {fires}/256 times");
+    }
+
+    #[test]
+    fn points_draw_independent_streams() {
+        let mut p = FaultPlane::disarmed();
+        p.arm(FaultPoint::Solve, 0.5, 3);
+        p.arm(FaultPoint::JobPickup, 0.5, 3);
+        let a: Vec<bool> = (0..128).map(|_| p.should_fire(FaultPoint::Solve)).collect();
+        let b: Vec<bool> = (0..128).map(|_| p.should_fire(FaultPoint::JobPickup)).collect();
+        assert_ne!(a, b, "same seed, different points must not share a stream");
+    }
+
+    #[test]
+    fn parse_grammar() {
+        let p = FaultPlane::parse("solve:0.5:7; graph_load:1").unwrap();
+        assert!(p.is_armed(FaultPoint::Solve));
+        assert!(p.is_armed(FaultPoint::GraphLoad));
+        assert!(!p.is_armed(FaultPoint::WireRead));
+        let all = FaultPlane::parse("all:0.25:9").unwrap();
+        for point in FaultPoint::ALL {
+            assert!(all.is_armed(point), "{}", point.name());
+        }
+        assert!(!FaultPlane::parse("").unwrap().armed_any());
+        assert!(FaultPlane::parse("bogus:0.5").is_err());
+        assert!(FaultPlane::parse("solve").is_err());
+        assert!(FaultPlane::parse("solve:2.0").is_err());
+        assert!(FaultPlane::parse("solve:0.5:x").is_err());
+    }
+
+    #[test]
+    fn from_options_builds_salted_job_planes() {
+        let mut opts = BTreeMap::new();
+        assert!(FaultPlane::from_options(&opts, 1).unwrap().is_none());
+        opts.insert("__fault.solve".into(), "0.5".into());
+        opts.insert("__fault.seed".into(), "11".into());
+        opts.insert("unrelated".into(), "1".into());
+        let p1 = FaultPlane::from_options(&opts, 1).unwrap().unwrap();
+        let p1b = FaultPlane::from_options(&opts, 1).unwrap().unwrap();
+        let p2 = FaultPlane::from_options(&opts, 2).unwrap().unwrap();
+        let seq = |p: &FaultPlane| -> Vec<bool> {
+            (0..128).map(|_| p.should_fire(FaultPoint::Solve)).collect()
+        };
+        assert_eq!(seq(&p1), seq(&p1b), "same attempt must reproduce");
+        assert_ne!(seq(&p1), seq(&p2), "attempts must draw fresh decisions");
+        opts.insert("__fault.frob".into(), "0.5".into());
+        assert!(FaultPlane::from_options(&opts, 1).is_err());
+        opts.remove("__fault.frob");
+        opts.insert("__fault.solve".into(), "nan?".into());
+        assert!(FaultPlane::from_options(&opts, 1).is_err());
+    }
+
+    #[test]
+    fn suppression_silences_checks_without_advancing_streams() {
+        let mut p = FaultPlane::disarmed();
+        p.arm(FaultPoint::Solve, 1.0, 1);
+        assert!(p.should_fire(FaultPoint::Solve));
+        suppress(|| {
+            assert!(suppressed());
+            assert!(!p.should_fire(FaultPoint::Solve));
+            suppress(|| assert!(suppressed()));
+            assert!(suppressed(), "nested suppression must not unwind early");
+        });
+        assert!(!suppressed());
+        assert!(p.should_fire(FaultPoint::Solve));
+        // Only the two unsuppressed checks were injected.
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn fire_prefers_the_job_plane() {
+        let mut p = FaultPlane::disarmed();
+        p.arm(FaultPoint::JobPickup, 1.0, 5);
+        assert!(fire(Some(&p), FaultPoint::JobPickup));
+        assert!(!fire(None, FaultPoint::JobPickup) || global().is_armed(FaultPoint::JobPickup));
+    }
+}

@@ -20,6 +20,10 @@ pub fn read_metis(path: &Path) -> Result<CsrGraph> {
 
 /// Parse METIS format from any reader (testable without files).
 pub fn parse_metis<R: BufRead>(reader: R) -> Result<CsrGraph> {
+    // Fault plane: `graph_load` (global plane; fails the parse cleanly).
+    if crate::fault::fire_global(crate::fault::FaultPoint::GraphLoad) {
+        bail!("{}", crate::fault::failure(crate::fault::FaultPoint::GraphLoad));
+    }
     let mut lines = reader.lines();
     let header = loop {
         match lines.next() {

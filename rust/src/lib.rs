@@ -50,7 +50,12 @@
 //!   asynchronous job API (`submit`/`status`/`wait`/`result`/`cancel`,
 //!   graph-as-resource sessions) behind a line-oriented TCP protocol —
 //!   and the benchmark harness ([`harness`]) regenerating every paper
-//!   table/figure.
+//!   table/figure;
+//! * a deterministic **fault-injection plane** ([`fault`]) threaded
+//!   through kernel launch, hierarchy build, graph IO, job pickup and the
+//!   wire, driving the engine's self-healing pipeline (retry with capped
+//!   exponential backoff, then graceful degradation down a solver
+//!   fallback chain).
 //!
 //! The engine itself is **job-oriented**: [`engine::Engine::submit`]
 //! enqueues a spec on a bounded priority queue served by a pool of
@@ -68,6 +73,7 @@ pub mod coarsen;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod fault;
 pub mod graph;
 pub mod harness;
 pub mod initial;

@@ -219,13 +219,17 @@ fn print_help() {
          suite  --algos a,b,… [--config FILE] [--instances x,y|smoke|paper] [--seeds 1,2]\n\
                 [--out results.csv] [--eps 0.03]\n\
          serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0] [--cache-cap 64]\n\
-                [--workers 2] [--queue-cap 256] [--max-conns 64]\n\
+                [--workers 2] [--queue-cap 256] [--max-conns 64] [--max-attempts 1]\n\
+                [--backoff-ms 100] [--read-timeout-ms 120000] [--max-line-len 4194304]\n\
          client --addr HOST:PORT (--send \"CMD\" | --script \"CMD; CMD; …\") [--timeout-ms 60000]\n\
          \n\
          The serve wire protocol is an async job API: `submit …` returns `ok job=<id>`\n\
          immediately; poll with `status`/`wait`/`result`/`cancel`/`jobs`; upload task\n\
          graphs once with `graph put name=… path=…|csr=…` and map them by `graph=<name>`\n\
-         (full grammar in README \"Service & job API\").\n\
+         (full grammar in README \"Service & job API\"). --max-attempts/--backoff-ms set\n\
+         the default retry policy (per-job `max_attempts=`/`backoff_ms=` keys override);\n\
+         exhausted retries degrade through the solver fallback chain instead of failing\n\
+         (README \"Fault tolerance & degradation\").\n\
          \n\
          --coarsening picks the multilevel coarsening scheme (matching, size-\n\
          constrained cluster LP, or auto = matching with per-level cluster fallback).\n\
@@ -426,10 +430,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         graph_cache_cap: args.get_or("cache-cap", "64").parse().context("--cache-cap")?,
         workers: args.get_or("workers", "2").parse().context("--workers")?,
         queue_cap: args.get_or("queue-cap", "256").parse().context("--queue-cap")?,
+        retry: heipa::engine::RetryPolicy {
+            max_attempts: args
+                .get_or("max-attempts", "1")
+                .parse::<u32>()
+                .context("--max-attempts")?
+                .max(1),
+            base_backoff: std::time::Duration::from_millis(
+                args.get_or("backoff-ms", "100").parse().context("--backoff-ms")?,
+            ),
+        },
         ..ServiceConfig::default()
     }));
+    let defaults = heipa::coordinator::protocol::ServeOptions::default();
     let opts = heipa::coordinator::protocol::ServeOptions {
         max_conns: args.get_or("max-conns", "64").parse().context("--max-conns")?,
+        read_timeout_ms: args
+            .get_or("read-timeout-ms", &defaults.read_timeout_ms.to_string())
+            .parse()
+            .context("--read-timeout-ms")?,
+        max_line_len: args
+            .get_or("max-line-len", &defaults.max_line_len.to_string())
+            .parse()
+            .context("--max-line-len")?,
     };
     heipa::coordinator::protocol::serve_tcp(svc, &addr, opts)
 }

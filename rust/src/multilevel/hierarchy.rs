@@ -167,6 +167,11 @@ impl CoarseHierarchy {
                 }
                 return None;
             }
+            // Fault plane: `hierarchy_build` (global plane, one check per
+            // level; panics into the engine's per-job fence).
+            if crate::fault::fire_global(crate::fault::FaultPoint::HierarchyBuild) {
+                panic!("{}", crate::fault::failure(crate::fault::FaultPoint::HierarchyBuild));
+            }
             let cur = graphs.last().unwrap().clone();
             let lseed = crate::rng::level_seed(params.seed, level);
             let next = {
@@ -266,6 +271,10 @@ impl CoarseHierarchy {
         while graphs.last().unwrap().n() > params.coarsest {
             if cancel.is_cancelled() {
                 return None;
+            }
+            // Fault plane: `hierarchy_build`, per level (see `build`).
+            if crate::fault::fire_global(crate::fault::FaultPoint::HierarchyBuild) {
+                panic!("{}", crate::fault::failure(crate::fault::FaultPoint::HierarchyBuild));
             }
             let cur = graphs.last().unwrap().clone();
             let lseed = crate::rng::level_seed(params.seed, level);

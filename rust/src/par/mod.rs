@@ -104,6 +104,20 @@ fn in_kernel() -> bool {
     IN_KERNEL.with(|c| c.get())
 }
 
+/// Fault-plane hook for kernel launches (process-global plane only,
+/// `kernel_launch` point). Deliberately never fires from inside a
+/// kernel: a nested launch runs inline on a pool *worker* thread, where
+/// a panic would unwind past the barrier and wedge the whole pool —
+/// firing only on the submitting thread keeps the failure inside the
+/// engine's per-job panic fence.
+#[inline]
+fn launch_fault_check() {
+    use crate::fault::{self, FaultPoint};
+    if !in_kernel() && fault::fire_global(FaultPoint::KernelLaunch) {
+        panic!("{}", fault::failure(FaultPoint::KernelLaunch));
+    }
+}
+
 impl Pool {
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
@@ -135,6 +149,7 @@ impl Pool {
         F: Fn(usize) + Sync,
     {
         ledger::record_launch(n as u64);
+        launch_fault_check();
         #[cfg(feature = "device-check")]
         let launch = check::begin_launch();
         let Some(ws) = self.dispatchable(n) else {
@@ -185,6 +200,7 @@ impl Pool {
         C: Fn(T, T) -> T + Sync + Send,
     {
         ledger::record_launch(n as u64);
+        launch_fault_check();
         #[cfg(feature = "device-check")]
         let launch = check::begin_launch();
         let Some(ws) = self.dispatchable(n) else {
@@ -270,6 +286,7 @@ impl Pool {
         // Two-pass blocked scan: 2 launches, 2n work items.
         ledger::record_launch(n as u64);
         ledger::record_launch(n as u64);
+        launch_fault_check();
         let mut out = vec![0u64; n + 1];
         let ws = match self.dispatchable(n) {
             Some(ws) => ws,

@@ -1,0 +1,271 @@
+//! Seeded chaos suite: the full solver matrix under the fault plane.
+//!
+//! Runs every registered solver with per-job fault planes (`__fault.*`
+//! options) arming the solve, graph-store and job-pickup injection
+//! points, with retry + degradation enabled, and asserts the
+//! self-healing contract:
+//!
+//! * every job reaches a terminal state — a valid mapping (possibly
+//!   `degraded`) or a typed error, never a hang or a lost job;
+//! * the engine worker pool survives (a clean job still completes
+//!   afterwards);
+//! * the fault metrics stay consistent: `retries == Σ (attempts − 1)`,
+//!   `degraded_completions` matches the degraded outcomes, and every
+//!   failed attempt is attributed to `faults_injected`.
+//!
+//! The suite also runs under a process-global `HEIPA_FAULTS` plane (the
+//! CI chaos-smoke job arms kernel-launch and hierarchy-build faults on
+//! top); the invariants are written to hold under both planes at once.
+//! `chaos_report_for_fixed_seeds` additionally emits a per-job report to
+//! `$HEIPA_CHAOS_REPORT` so CI can diff two isolated runs bit-for-bit.
+
+use heipa::engine::{
+    solver_by_name, solver_names, Engine, EngineConfig, GraphSource, JobHandle, MapSpec,
+    RetryPolicy,
+};
+use heipa::partition::validate_mapping;
+use heipa::topology::Machine;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const INSTANCE: &str = "wal_598a";
+const HIERARCHY: &str = "2:2";
+const DISTANCE: &str = "1:10";
+
+/// Per-job plane: solve panics, graph-store and job-pickup errors, all
+/// drawn from one reproducible seed.
+fn fault_options(seed: u64) -> BTreeMap<String, String> {
+    let mut o = BTreeMap::new();
+    o.insert("__fault.solve".into(), "0.5".into());
+    o.insert("__fault.graph_store".into(), "0.3".into());
+    o.insert("__fault.job_pickup".into(), "0.2".into());
+    o.insert("__fault.seed".into(), seed.to_string());
+    o
+}
+
+fn chaos_engine(threads: usize, workers: usize) -> Engine {
+    Engine::new(EngineConfig {
+        threads,
+        workers,
+        retry: RetryPolicy { max_attempts: 3, base_backoff: Duration::from_millis(1) },
+        ..EngineConfig::default()
+    })
+}
+
+fn chaos_spec(algo: heipa::algo::Algorithm, fault_seed: u64) -> MapSpec {
+    MapSpec::named(INSTANCE)
+        .hierarchy(HIERARCHY)
+        .distance(DISTANCE)
+        .algo(Some(algo))
+        .seed(1)
+        .return_mapping(true)
+        .options(fault_options(fault_seed))
+}
+
+/// Validate a completed outcome end to end: mapping shape, and the
+/// independent quality oracle accepts it. The oracle runs under
+/// [`heipa::fault::suppress`] so a process-global plane can neither kill
+/// the verification nor have its decision streams advanced by it (the
+/// report test depends on the latter for bit-for-bit reproducibility).
+fn assert_outcome_valid(label: &str, out: &heipa::engine::MapOutcome) {
+    assert!(!out.mapping.is_empty(), "{label}: no mapping returned");
+    validate_mapping(&out.mapping, out.n, out.k).unwrap_or_else(|e| panic!("{label}: {e}"));
+    heipa::fault::suppress(|| {
+        let g = Engine::new(EngineConfig { threads: 1, ..EngineConfig::default() })
+            .resolve_graph(&GraphSource::Named(INSTANCE.into()))
+            .expect("resolve instance");
+        let m = Machine::resolve(None, HIERARCHY, DISTANCE).expect("machine");
+        let q = heipa::metrics::mapping_quality(&g, &out.mapping, &m);
+        assert!(q.comm_cost.is_finite() && q.comm_cost >= 0.0, "{label}: bad J {}", q.comm_cost);
+        assert!(
+            (q.comm_cost - out.comm_cost).abs() < 1e-6 * q.comm_cost.max(1.0),
+            "{label}: outcome J {} != oracle J {}",
+            out.comm_cost,
+            q.comm_cost
+        );
+    });
+}
+
+#[test]
+fn chaos_matrix_reaches_terminal_states_with_consistent_metrics() {
+    // threads = 0: auto, honoring HEIPA_THREADS — CI's chaos-smoke runs
+    // this matrix at 1/2/4 device threads.
+    let e = chaos_engine(0, 2);
+    let mut jobs: Vec<(String, JobHandle)> = Vec::new();
+    for (i, name) in solver_names().into_iter().enumerate() {
+        let algo = solver_by_name(name).expect("registered").algorithm();
+        for round in 0..3u64 {
+            let spec = chaos_spec(algo, 1000 + 17 * i as u64 + round);
+            jobs.push((format!("{name}/r{round}"), e.submit(&spec).expect("submit")));
+        }
+    }
+
+    let mut attempts_total = 0u64;
+    let mut degraded_seen = 0u64;
+    let mut failed_paths = 0u64;
+    for (label, h) in &jobs {
+        let result = h.wait();
+        let st = h.status();
+        assert!(st.state.is_terminal(), "{label}: non-terminal state {:?}", st.state);
+        assert!(st.attempts >= 1 && st.attempts <= 3, "{label}: attempts {}", st.attempts);
+        attempts_total += u64::from(st.attempts);
+        match result {
+            Ok(out) => {
+                assert_outcome_valid(label, &out);
+                assert_eq!(out.attempts, st.attempts, "{label}: attempt counts disagree");
+                if out.degraded {
+                    degraded_seen += 1;
+                    assert_eq!(out.attempts, 3, "{label}: degraded before retries exhausted");
+                }
+            }
+            Err(err) => {
+                // Typed error: a terminal non-Done state with a reason.
+                let msg = err.to_string();
+                assert!(!msg.is_empty(), "{label}: empty error");
+                assert!(st.error.is_some(), "{label}: terminal failure without detail");
+                failed_paths += 1;
+            }
+        }
+    }
+
+    // Metrics consistency. Every requeue bumped exactly one attempt
+    // counter past 1, so the retry counter is fully accounted for.
+    assert_eq!(
+        e.retries(),
+        attempts_total - jobs.len() as u64,
+        "retries != Σ(attempts-1)"
+    );
+    assert_eq!(e.degraded_completions(), degraded_seen);
+    // Every failed attempt here is plane-injected (the solvers are sound
+    // on this instance): each retry consumed one injected failure and
+    // each degradation entry one more.
+    assert!(
+        e.faults_injected() >= e.retries() + degraded_seen + failed_paths,
+        "injected {} < retries {} + degraded {} + failed {}",
+        e.faults_injected(),
+        e.retries(),
+        degraded_seen,
+        failed_paths
+    );
+    // With solve at p=0.5 across the whole matrix, silence means the
+    // plane is not wired in.
+    assert!(e.faults_injected() > 0, "no faults fired across the matrix");
+
+    // The worker pool survived: a clean job (no per-job plane) completes.
+    let clean = MapSpec::named(INSTANCE)
+        .hierarchy(HIERARCHY)
+        .distance(DISTANCE)
+        .algo(Some(heipa::algo::Algorithm::SharedMapF))
+        .seed(2)
+        .return_mapping(true);
+    let out = e.map(&clean).expect("engine workers died during chaos");
+    assert_outcome_valid("clean-after-chaos", &out);
+}
+
+#[test]
+fn same_fault_seed_reproduces_the_same_outcome() {
+    // The per-job plane is keyed only by (options, attempt), so two
+    // identical submits replay the identical fault sequence. A
+    // process-global HEIPA_FAULTS plane has shared streams that advance
+    // across runs — reproducibility across *processes* for that tier is
+    // asserted by CI diffing two isolated chaos-report runs.
+    if heipa::fault::global().armed_any() {
+        return;
+    }
+    let run = || {
+        let e = chaos_engine(1, 1);
+        let algo = heipa::algo::Algorithm::SharedMapF;
+        let h = e.submit(&chaos_spec(algo, 7)).expect("submit");
+        let outcome = h.wait();
+        let st = h.status();
+        let fingerprint = match outcome {
+            Ok(out) => format!(
+                "{:?}:{}:{}:{}:{:?}",
+                st.state,
+                out.attempts,
+                out.degraded,
+                out.comm_cost.to_bits(),
+                out.mapping
+            ),
+            Err(err) => format!("{:?}:{}:{}", st.state, st.attempts, err),
+        };
+        fingerprint
+    };
+    assert_eq!(run(), run(), "same seed must replay the same fault sequence");
+}
+
+#[test]
+fn chaos_report_for_fixed_seeds() {
+    // Serial engine (one worker, one device thread, zero backoff): the
+    // whole run is deterministic for fixed seeds, including a global
+    // HEIPA_FAULTS plane — jobs are submitted and awaited one at a time,
+    // so global decision streams are consumed in a fixed order. CI runs
+    // this test twice in isolated processes (`--exact`) with
+    // HEIPA_CHAOS_REPORT set and diffs the two reports bit-for-bit.
+    let e = Engine::new(EngineConfig {
+        threads: 1,
+        workers: 1,
+        retry: RetryPolicy { max_attempts: 3, base_backoff: Duration::ZERO },
+        ..EngineConfig::default()
+    });
+    let mut lines = Vec::new();
+    for (i, name) in solver_names().into_iter().enumerate() {
+        let algo = solver_by_name(name).expect("registered").algorithm();
+        let h = e.submit(&chaos_spec(algo, 31 * (i as u64 + 1))).expect("submit");
+        let _ = h.wait();
+        let st = h.status();
+        assert!(st.state.is_terminal(), "{name}: non-terminal");
+        let line = match h.try_result() {
+            Some(Ok(out)) => {
+                assert_outcome_valid(name, &out);
+                format!(
+                    "solver={name} state={} attempts={} degraded={} j_bits={}",
+                    st.state.name(),
+                    st.attempts,
+                    u8::from(out.degraded),
+                    out.comm_cost.to_bits()
+                )
+            }
+            Some(Err(err)) => format!(
+                "solver={name} state={} attempts={} error={}",
+                st.state.name(),
+                st.attempts,
+                err.to_string().replace(' ', "_")
+            ),
+            None => unreachable!("terminal job without result"),
+        };
+        lines.push(line);
+    }
+    lines.push(format!(
+        "totals retries={} faults_injected={} degraded={}",
+        e.retries(),
+        e.faults_injected(),
+        e.degraded_completions()
+    ));
+    if let Ok(path) = std::env::var("HEIPA_CHAOS_REPORT") {
+        std::fs::write(&path, lines.join("\n") + "\n")
+            .unwrap_or_else(|err| panic!("write {path}: {err}"));
+    }
+}
+
+#[test]
+fn malformed_fault_spec_is_a_terminal_typed_error() {
+    // A bad `__fault.*` option must fail the job (typed, terminal), not
+    // wedge it or take the worker down.
+    let e = chaos_engine(1, 1);
+    let mut opts = BTreeMap::new();
+    opts.insert("__fault.solve".into(), "not-a-probability".into());
+    let spec = MapSpec::named(INSTANCE)
+        .hierarchy(HIERARCHY)
+        .distance(DISTANCE)
+        .algo(Some(heipa::algo::Algorithm::SharedMapF))
+        .options(opts);
+    let h = e.submit(&spec).expect("submit");
+    let err = h.wait().expect_err("malformed plane must fail the job");
+    assert!(err.to_string().contains("__fault"), "untyped error: {err}");
+    assert_eq!(h.status().state, heipa::engine::JobState::Failed);
+    // Worker still alive.
+    assert!(e
+        .map(&MapSpec::named(INSTANCE).hierarchy(HIERARCHY).distance(DISTANCE))
+        .is_ok());
+}

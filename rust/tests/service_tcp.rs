@@ -87,7 +87,7 @@ fn protocol_errors_do_not_kill_connection() {
     let addr = spawn(two_worker_service(), ServeOptions::default());
     let replies = roundtrip(addr, &["bogus", "map instance=missing_instance", "ping"]);
     assert_eq!(replies.len(), 3);
-    assert!(replies[0].starts_with("err code=bad_request"), "{}", replies[0]);
+    assert!(replies[0].starts_with("err code=parse"), "{}", replies[0]);
     assert!(replies[1].starts_with("err "), "{}", replies[1]);
     // The error message survives escaping: unescape restores real text
     // with spaces (the old renderer flattened them to `_`).
@@ -203,8 +203,29 @@ fn graph_sessions_survive_across_connections() {
 }
 
 #[test]
+fn oversize_lines_get_toobig_and_the_connection_survives() {
+    let addr = spawn(
+        two_worker_service(),
+        ServeOptions { max_line_len: 64, ..ServeOptions::default() },
+    );
+    let mut conn = Conn::open(addr);
+    // An oversize request — e.g. a huge inline `graph put csr=` payload —
+    // is answered with `err code=toobig` and discarded; the same
+    // connection keeps serving afterwards.
+    let oversize = format!("graph put name=big csr=0,{}", "1,".repeat(200));
+    let reply = conn.send(&oversize);
+    assert!(reply.starts_with("err code=toobig"), "{reply}");
+    assert!(conn.send("ping").contains("pong"));
+    // A line at the limit still parses normally (as a protocol error for
+    // this garbage body, not a framing error).
+    let at_limit = "x".repeat(64);
+    let reply = conn.send(&at_limit);
+    assert!(reply.starts_with("err code=parse"), "{reply}");
+}
+
+#[test]
 fn connection_cap_rejects_with_busy_and_recovers() {
-    let addr = spawn(two_worker_service(), ServeOptions { max_conns: 1 });
+    let addr = spawn(two_worker_service(), ServeOptions { max_conns: 1, ..ServeOptions::default() });
     let mut first = Conn::open(addr);
     assert!(first.send("ping").contains("pong"));
     // Second concurrent connection: one busy line, then closed.
