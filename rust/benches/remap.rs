@@ -1,0 +1,221 @@
+//! Incremental-remapping perf harness: (1) warm vs cold time-to-result
+//! for patch→map cycles on a pinned session graph (the subsystem's
+//! headline number), and (2) batch vs sequential submission throughput
+//! for fleets of small same-machine jobs. Per-cycle wall p50/p99 and
+//! modeled device ms land in `BENCH_remap.json` (override the path with
+//! `HEIPA_BENCH_OUT`; set `HEIPA_BENCH_SMOKE=1` for a seconds-scale CI
+//! run).
+
+use heipa::algo::Algorithm;
+use heipa::engine::{Engine, EngineConfig, MapSpec, RemapKind};
+use heipa::graph::{gen, CsrGraph};
+use heipa::incremental::GraphPatch;
+use heipa::par::cost::DeviceTimer;
+use heipa::Vertex;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Record {
+    bench: &'static str,
+    graph: String,
+    mode: &'static str,
+    /// Median per-cycle (or total, for throughput rows) wall ms.
+    wall_ms: f64,
+    p99_ms: f64,
+    device_ms: f64,
+    /// Cycles measured (patch-map) or jobs retired (batch rows).
+    jobs: usize,
+    /// Jobs per second for throughput rows, 0 otherwise.
+    jobs_per_sec: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(records: &[Record], path: &str) {
+    let mut out = String::from("{\n  \"bench\": \"remap\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"bench\": \"{}\", \"graph\": \"{}\", \"mode\": \"{}\", \"wall_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"device_ms\": {:.3}, \"jobs\": {}, \"jobs_per_sec\": {:.2}}}{}\n",
+            json_escape(r.bench),
+            json_escape(&r.graph),
+            r.mode,
+            r.wall_ms,
+            r.p99_ms,
+            r.device_ms,
+            r.jobs,
+            r.jobs_per_sec,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).expect("write bench json");
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
+/// A rotation of non-adjacent vertex pairs to patch in and back out —
+/// each cycle perturbs the graph without unbounded growth.
+fn patch_pairs(g: &CsrGraph, want: usize) -> Vec<(Vertex, Vertex)> {
+    let n = g.n() as Vertex;
+    let mut pairs = Vec::new();
+    let mut u = 0u32;
+    while pairs.len() < want && u < n {
+        let v = n - 1 - (pairs.len() as Vertex % (n / 2));
+        if u != v && g.find_edge(u, v).is_none() {
+            pairs.push((u.min(v), u.max(v)));
+        }
+        u += 7;
+    }
+    pairs
+}
+
+/// Measured patch→map cycles on a fresh engine; `force_cold` pins
+/// `remap.max_region_frac=0` so every cycle pays the full multilevel
+/// solve — the baseline the warm path is judged against.
+fn patch_map_cycles(
+    g: &Arc<CsrGraph>,
+    cycles: usize,
+    threads: usize,
+    force_cold: bool,
+) -> (Vec<f64>, f64) {
+    let e = Engine::new(EngineConfig { threads, workers: 1, ..Default::default() });
+    e.put_graph("sess", g.clone());
+    let mut spec = MapSpec::named("sess")
+        .hierarchy("2:4")
+        .distance("1:10")
+        .algo(Some(Algorithm::GpuIm))
+        .seed(1);
+    if force_cold {
+        spec = spec.option("remap.max_region_frac", "0");
+    }
+    e.map(&spec).unwrap();
+    let pairs = patch_pairs(g, cycles.div_ceil(2).max(1));
+    let mut walls = Vec::with_capacity(cycles);
+    let mut device_ms = 0.0;
+    for c in 0..cycles {
+        let (u, v) = pairs[(c / 2) % pairs.len()];
+        let ops = if c % 2 == 0 { format!("ae:{u}:{v}:1.0") } else { format!("re:{u}:{v}") };
+        let patch = GraphPatch::parse(&ops).unwrap();
+        let t = DeviceTimer::start();
+        e.patch_graph("sess", &patch).unwrap();
+        let out = e.map(&spec.clone().seed(2 + c as u64)).unwrap();
+        let m = t.stop();
+        let want = if force_cold { RemapKind::Cold } else { RemapKind::Warm };
+        assert_eq!(out.remap, Some(want), "cycle {c} took the wrong path");
+        walls.push(m.host_ms);
+        device_ms += m.device_ms;
+    }
+    walls.sort_by(|a, b| a.total_cmp(b));
+    (walls, device_ms)
+}
+
+fn main() {
+    let smoke = std::env::var("HEIPA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("HEIPA_BENCH_OUT").unwrap_or_else(|_| "BENCH_remap.json".to_string());
+    let threads = if smoke { 2 } else { 4 };
+    let cycles = if smoke { 6 } else { 20 };
+
+    let graphs: Vec<(String, Arc<CsrGraph>)> = if smoke {
+        vec![("rgg11".into(), Arc::new(gen::rgg(1 << 11, gen::rgg_paper_radius(1 << 11), 3)))]
+    } else {
+        vec![
+            ("rgg15".into(), Arc::new(gen::rgg(1 << 15, gen::rgg_paper_radius(1 << 15), 3))),
+            ("stencil128".into(), Arc::new(gen::stencil9(128, 128, 7))),
+        ]
+    };
+
+    let mut records = Vec::new();
+    println!("| bench | graph | mode | p50 ms | p99 ms | jobs/s |");
+    println!("|---|---|---|---|---|---|");
+
+    // Part 1: warm vs cold time-to-result per patch→map cycle.
+    for (name, g) in &graphs {
+        for (mode, force_cold) in [("warm", false), ("cold", true)] {
+            let (walls, dev) = patch_map_cycles(g, cycles, threads, force_cold);
+            let (p50, p99) = (percentile(&walls, 0.5), percentile(&walls, 0.99));
+            println!("| patch-map | {name} | {mode} | {p50:.2} | {p99:.2} | - |");
+            records.push(Record {
+                bench: "patch-map",
+                graph: name.clone(),
+                mode,
+                wall_ms: p50,
+                p99_ms: p99,
+                device_ms: dev,
+                jobs: walls.len(),
+                jobs_per_sec: 0.0,
+            });
+        }
+    }
+
+    // Part 2: batch vs sequential submission throughput. Small jobs on
+    // one shared graph/machine so the worker drain can pack a whole
+    // batch into one worker-pool pass.
+    let bg = Arc::new(gen::grid2d(64, 64, false));
+    let fleet = if smoke { 8 } else { 32 };
+    let specs: Vec<MapSpec> = (0..fleet)
+        .map(|s| {
+            MapSpec::in_memory(bg.clone())
+                .hierarchy("2:2")
+                .distance("1:10")
+                .algo(Some(Algorithm::GpuIm))
+                .seed(1 + s as u64)
+        })
+        .collect();
+    for (mode, batched) in [("sequential", false), ("batch", true)] {
+        let e = Engine::new(EngineConfig { threads, workers: 2, ..Default::default() });
+        let t0 = Instant::now();
+        let handles: Vec<_> = if batched {
+            e.submit_batch(&specs, Default::default()).unwrap()
+        } else {
+            specs.iter().map(|s| e.submit(s).unwrap()).collect()
+        };
+        for h in &handles {
+            h.wait().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let jps = fleet as f64 / (wall / 1e3).max(1e-9);
+        println!("| submit | grid64 | {mode} | {wall:.2} | - | {jps:.1} |");
+        records.push(Record {
+            bench: "submit",
+            graph: "grid64".into(),
+            mode,
+            wall_ms: wall,
+            p99_ms: 0.0,
+            device_ms: 0.0,
+            jobs: fleet,
+            jobs_per_sec: jps,
+        });
+    }
+
+    write_json(&records, &out_path);
+    println!("\nwrote {} records to {out_path}", records.len());
+
+    // Headline: warm speedup per graph.
+    for (name, _) in &graphs {
+        let grab = |mode: &str| -> Option<f64> {
+            records
+                .iter()
+                .find(|r| r.bench == "patch-map" && r.graph == *name && r.mode == mode)
+                .map(|r| r.wall_ms)
+        };
+        if let (Some(warm), Some(cold)) = (grab("warm"), grab("cold")) {
+            if warm > 0.0 {
+                println!(
+                    "{name}: cold {cold:.2} ms vs warm {warm:.2} ms per cycle \
+                     ({:.2}x time-to-result)",
+                    cold / warm
+                );
+            }
+        }
+    }
+}

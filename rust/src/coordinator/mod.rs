@@ -10,7 +10,11 @@
 //!   queue, and clients `status`/`wait`/`result`/`cancel` by id,
 //! * **graph-as-resource sessions** — `graph put` pins a task graph
 //!   server-side (`Arc<CsrGraph>` shared across jobs, workers and
-//!   connections) for the upload-once/map-many pattern,
+//!   connections) for the upload-once/map-many pattern; `graph patch`
+//!   edits the pinned graph in place (bumping its session version and
+//!   arming warm-start incremental remapping — see
+//!   [`crate::incremental`]) and `batch submit` admits several jobs as
+//!   one all-or-nothing unit,
 //! * the wire-level [`MapRequest`], which lowers into the engine's
 //!   [`MapSpec`] (routing, refinement upgrade and the QAP polish stage all
 //!   happen inside the engine, identically to every other front-end), and
@@ -168,6 +172,20 @@ pub struct ServiceMetrics {
     /// Jobs that completed through the degradation fallback chain (their
     /// outcomes carry `degraded=1` on the wire).
     pub degraded_completions: u64,
+    /// Graph patches applied to pinned session graphs (cumulative).
+    pub patches_applied: u64,
+    /// Session re-puts that replaced an existing pinned graph.
+    pub graphs_replaced: u64,
+    /// Jobs answered by warm-start region refinement after a patch
+    /// (`remap=warm` on the wire).
+    pub warm_remaps: u64,
+    /// Patched sessions that fell back to a full cold solve
+    /// (`remap=cold` on the wire).
+    pub cold_fallbacks: u64,
+    /// Engine batches admitted via `batch submit` (cumulative).
+    pub batches: u64,
+    /// Jobs submitted through those batches (cumulative).
+    pub batched_jobs: u64,
     /// Jobs currently waiting in the queue (gauge).
     pub queue_depth: usize,
     /// Jobs currently being solved (gauge).

@@ -14,6 +14,9 @@
 //! graph put name=tri csr=0,2,4,6/1,2,0,2,0,1
 //! graph list
 //! graph del name=mesh
+//! graph patch name=mesh ops=ae:0:9:1.0,re:3:4
+//! batch submit jobs=<job>;<job>        # each <job> a percent-escaped submit body
+//! batch wait id=7 timeout_ms=5000
 //! map instance=rgg15 polish=1          # legacy blocking path (submit+wait+result)
 //! metrics
 //! ping
@@ -28,8 +31,18 @@
 //! text — including its spaces — via [`unescape_value`]. Error codes:
 //! `parse` (malformed request line), `toobig` (request line longer than
 //! [`ServeOptions::max_line_len`]), `busy` (bounded job queue or
-//! connection limit), `unknown_job`, `unknown_graph`, `not_done`,
-//! `timeout`, `failed`, `cancelled`, `expired`, `unavailable`.
+//! connection limit), `unknown_job`, `unknown_graph`, `unknown_batch`,
+//! `not_done`, `timeout`, `failed`, `cancelled`, `expired`, `patch`
+//! (a [`crate::incremental::GraphPatch`] that does not apply),
+//! `unavailable`.
+//!
+//! `graph patch` applies an incremental edit to a pinned session graph
+//! (bumping its version, shown as `name@vN` in `graph list`); the next
+//! `map`/`submit` over that session warm-starts from the previous
+//! mapping and replies with `remap=warm` (or `remap=cold` when the
+//! engine fell back to a full solve). `batch submit` admits several
+//! jobs as one all-or-nothing unit that engine workers may drain into
+//! a single worker-pool pass.
 //!
 //! Submits accept `max_attempts=`/`backoff_ms=` to override the
 //! service's retry policy per job.
@@ -38,6 +51,7 @@ use super::service::{JobOptions, Service};
 use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::algo::Algorithm;
 use crate::engine::{JobState, JobStatus, Refinement, SubmitError};
+use crate::incremental::PatchError;
 use crate::fault::{self, FaultPoint};
 use crate::multilevel::SchemeKind;
 use crate::graph::CsrGraph;
@@ -73,6 +87,14 @@ pub enum Command {
     GraphPut { name: String, path: Option<String>, csr: Option<String> },
     GraphList,
     GraphDrop { name: String },
+    /// Apply an incremental edit to a pinned session graph
+    /// (`ops=` uses the [`crate::incremental::GraphPatch`] grammar).
+    GraphPatch { name: String, ops: String },
+    /// Submit several jobs as one batch unit (all-or-nothing admission;
+    /// the first job's submit options apply to the whole batch).
+    BatchSubmit { reqs: Vec<MapRequest>, opts: WireSubmitOpts },
+    /// Block until every job of a batch reaches a terminal state.
+    BatchWait { id: u64, timeout_ms: Option<u64> },
     Metrics,
     Ping,
 }
@@ -195,7 +217,51 @@ pub fn parse_command(line: &str) -> Result<Command> {
                     let name = kv.get("name").context("graph del needs name=…")?.to_string();
                     Ok(Command::GraphDrop { name })
                 }
-                other => bail!("unknown graph subcommand `{other}` (put|list|del)"),
+                "patch" => {
+                    let kv = parse_kv_args(tokens)?;
+                    let name = kv.get("name").context("graph patch needs name=…")?.to_string();
+                    let ops = kv.get("ops").context("graph patch needs ops=…")?.to_string();
+                    Ok(Command::GraphPatch { name, ops })
+                }
+                other => bail!("unknown graph subcommand `{other}` (put|list|del|patch)"),
+            }
+        }
+        "batch" => {
+            let sub = tokens.next().unwrap_or("");
+            match sub {
+                "submit" => {
+                    let kv = parse_kv_args(tokens)?;
+                    let jobs = kv.get("jobs").context("batch submit needs jobs=…")?;
+                    let mut reqs = Vec::new();
+                    let mut opts = None;
+                    for (i, part) in jobs.split(';').enumerate() {
+                        if part.is_empty() {
+                            continue;
+                        }
+                        let body = unescape_value(part);
+                        let (req, o) = parse_job_body(body.split_whitespace())
+                            .with_context(|| format!("batch job #{}", i + 1))?;
+                        if opts.is_none() {
+                            opts = Some(o);
+                        }
+                        reqs.push(req);
+                    }
+                    if reqs.is_empty() {
+                        bail!("batch submit needs at least one job");
+                    }
+                    Ok(Command::BatchSubmit { reqs, opts: opts.unwrap_or_default() })
+                }
+                "wait" => {
+                    let kv = parse_kv_args(tokens)?;
+                    let id =
+                        kv.get("id").context("missing id=<batch>")?.parse().context("batch id")?;
+                    let timeout_ms = match kv.get("timeout_ms") {
+                        Some(v) => Some(v.parse().context("timeout_ms")?),
+                        None => None,
+                    };
+                    Ok(Command::BatchWait { id, timeout_ms })
+                }
+                other => bail!("unknown batch subcommand `{other}` (submit|wait)"),
             }
         }
         "" => bail!("empty command"),
@@ -305,6 +371,9 @@ pub fn render_response(r: &MapReply) -> String {
     if o.attempts > 1 {
         s.push_str(&format!(" attempts={}", o.attempts));
     }
+    if let Some(kind) = o.remap {
+        s.push_str(&format!(" remap={}", kind.name()));
+    }
     if !o.mapping.is_empty() {
         s.push_str(" mapping=");
         let parts: Vec<String> = o.mapping.iter().map(|b| b.to_string()).collect();
@@ -319,7 +388,8 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
     format!(
         "ok requests={} failures={} completed={} cancelled={} deadline_missed={} \
          busy_rejections={} hier_hits={} hier_misses={} retries={} faults_injected={} \
-         degraded={} queue_depth={} in_flight={} \
+         degraded={} patches={} graphs_replaced={} warm_remaps={} cold_fallbacks={} \
+         batches={} batched_jobs={} queue_depth={} in_flight={} \
          host_ms={:.1} device_ms={:.1} per_algorithm={}",
         m.requests,
         m.failures,
@@ -332,6 +402,12 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
         m.retries,
         m.faults_injected,
         m.degraded_completions,
+        m.patches_applied,
+        m.graphs_replaced,
+        m.warm_remaps,
+        m.cold_fallbacks,
+        m.batches,
+        m.batched_jobs,
         m.queue_depth,
         m.in_flight,
         m.total_host_ms,
@@ -473,18 +549,24 @@ pub fn dispatch(svc: &Service, cmd: Command) -> String {
             };
             match built {
                 Ok(g) => {
-                    let (n, m) = svc.put_graph(&name, Arc::new(g));
-                    format!("ok graph={name} n={n} m={m}")
+                    let (n, m, version, replaced) = svc.put_graph(&name, Arc::new(g));
+                    let mut s = format!("ok graph={name} n={n} m={m} version={version}");
+                    if replaced {
+                        s.push_str(" replaced=1");
+                    }
+                    s
                 }
                 Err(e) => render_error(&e),
             }
         }
         Command::GraphList => {
-            let names = svc.graph_names();
-            if names.is_empty() {
+            let entries = svc.graph_entries();
+            if entries.is_empty() {
                 "ok count=0".to_string()
             } else {
-                format!("ok count={} graphs={}", names.len(), names.join(","))
+                let list: Vec<String> =
+                    entries.iter().map(|(name, v)| format!("{name}@v{v}")).collect();
+                format!("ok count={} graphs={}", entries.len(), list.join(","))
             }
         }
         Command::GraphDrop { name } => {
@@ -494,6 +576,76 @@ pub fn dispatch(svc: &Service, cmd: Command) -> String {
                 render_err("unknown_graph", &format!("no pinned graph named {name}"))
             }
         }
+        Command::GraphPatch { name, ops } => match crate::incremental::GraphPatch::parse(&ops) {
+            Err(e) => render_err("patch", &e),
+            Ok(p) => match svc.patch_graph(&name, &p) {
+                Ok(s) => format!(
+                    "ok graph={name} n={} m={} version={} touched={} ops={}",
+                    s.n, s.m, s.version, s.touched, s.ops
+                ),
+                Err(PatchError::UnknownGraph(_)) => {
+                    render_err("unknown_graph", &format!("no pinned graph named {name}"))
+                }
+                Err(PatchError::Invalid(msg)) => render_err("patch", &msg),
+            },
+        },
+        Command::BatchSubmit { reqs, opts } => {
+            let jopts = JobOptions {
+                priority: opts.priority,
+                deadline_ms: opts.deadline_ms,
+                block_when_full: false,
+                max_attempts: opts.max_attempts,
+                backoff_ms: opts.backoff_ms,
+            };
+            match svc.submit_engine_batch(&reqs, jopts) {
+                Ok((batch, handles)) => {
+                    let ids: Vec<String> = handles.iter().map(|h| h.id().to_string()).collect();
+                    format!("ok batch={batch} count={} jobs={}", handles.len(), ids.join(","))
+                }
+                Err(e @ SubmitError::Busy { .. }) => render_err("busy", &e.to_string()),
+                Err(e) => render_err("unavailable", &e.to_string()),
+            }
+        }
+        Command::BatchWait { id, timeout_ms } => match svc.batch_jobs(id) {
+            None => render_err("unknown_batch", &format!("no batch with id {id}")),
+            Some(jobs) => {
+                let deadline = timeout_ms
+                    .map(|ms| std::time::Instant::now() + std::time::Duration::from_millis(ms));
+                let mut states = Vec::with_capacity(jobs.len());
+                for j in &jobs {
+                    // A job evicted from the retention window finished
+                    // long ago; it just drops out of the tally.
+                    let Some(h) = svc.job(*j) else { continue };
+                    match deadline {
+                        None => {
+                            let _ = h.wait();
+                        }
+                        Some(d) => {
+                            let left = d.saturating_duration_since(std::time::Instant::now());
+                            if h.wait_timeout(left).is_none() {
+                                return render_err(
+                                    "timeout",
+                                    &format!(
+                                        "batch {id} still has pending jobs after {}ms",
+                                        timeout_ms.unwrap_or(0)
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                    states.push(h.status().state);
+                }
+                let count = |s: JobState| states.iter().filter(|&&x| x == s).count();
+                format!(
+                    "ok batch={id} count={} done={} failed={} cancelled={} expired={}",
+                    jobs.len(),
+                    count(JobState::Done),
+                    count(JobState::Failed),
+                    count(JobState::Cancelled),
+                    count(JobState::Expired),
+                )
+            }
+        },
     }
 }
 
@@ -848,6 +1000,7 @@ mod tests {
                 hierarchy_cache: Some(true),
                 degraded: false,
                 attempts: 1,
+                remap: None,
             },
         };
         let line = render_response(&r);
@@ -856,13 +1009,20 @@ mod tests {
         assert!(line.contains("mapping=0,1,2,3"));
         // First-try, non-degraded outcomes stay byte-compatible with the
         // pre-retry wire format.
-        assert!(!line.contains("degraded") && !line.contains("attempts"), "{line}");
+        assert!(
+            !line.contains("degraded") && !line.contains("attempts") && !line.contains("remap"),
+            "{line}"
+        );
         let mut r = r;
         r.outcome.degraded = true;
         r.outcome.attempts = 3;
+        r.outcome.remap = Some(crate::engine::RemapKind::Warm);
         let line = render_response(&r);
         assert!(line.contains(" degraded=1"), "{line}");
         assert!(line.contains(" attempts=3"), "{line}");
+        assert!(line.contains(" remap=warm"), "{line}");
+        r.outcome.remap = Some(crate::engine::RemapKind::Cold);
+        assert!(render_response(&r).contains(" remap=cold"));
     }
 
     fn quick_service() -> Service {
@@ -989,8 +1149,8 @@ mod tests {
     /// unframed text — for any input line.
     fn assert_typed(reply: &str, line: &str) {
         const CODES: &[&str] = &[
-            "parse", "toobig", "busy", "unknown_job", "unknown_graph", "not_done",
-            "timeout", "failed", "cancelled", "expired", "unavailable",
+            "parse", "toobig", "busy", "unknown_job", "unknown_graph", "unknown_batch",
+            "not_done", "timeout", "failed", "cancelled", "expired", "patch", "unavailable",
         ];
         if reply == "ok" || reply.starts_with("ok ") {
             return;
@@ -1014,6 +1174,8 @@ mod tests {
             "max_attempts=", "backoff_ms=", "opt.", "=", "=x", "%", "%2", "%25", "%zz",
             "0,2,4/1,0,1", "/", ",", ":", "\t", "\u{1F4A5}", "-1",
             "18446744073709551616", "priority=high", "job=0x10",
+            "patch", "batch", "ops=", "ops=ae:0:1:1.0", "ops=zz", "id=", "jobs=", ";",
+            "jobs=instance%3Dx", "ae:0:1", "rv:",
         ];
         let mut state = 0xC0FFEE_u64;
         for _ in 0..500 {
@@ -1051,8 +1213,8 @@ mod tests {
             &svc,
             "graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6",
         );
-        assert_eq!(put, "ok graph=ring n=8 m=8");
-        assert_eq!(handle_command(&svc, "graph list"), "ok count=1 graphs=ring");
+        assert_eq!(put, "ok graph=ring n=8 m=8 version=1");
+        assert_eq!(handle_command(&svc, "graph list"), "ok count=1 graphs=ring@v1");
         // Two jobs over the same pinned graph, different machines.
         for (hier, dist, k) in [("2:2", "1:10", 4), ("4", "1", 4)] {
             let reply = handle_command(
@@ -1065,5 +1227,102 @@ mod tests {
         assert_eq!(handle_command(&svc, "graph del name=ring"), "ok dropped=ring");
         assert!(handle_command(&svc, "graph del name=ring").starts_with("err code=unknown_graph"));
         assert_eq!(handle_command(&svc, "graph list"), "ok count=0");
+    }
+
+    #[test]
+    fn parses_batch_and_patch_commands() {
+        assert_eq!(
+            parse_command("graph patch name=m ops=ae:0:5:2.0,re:1:2").unwrap(),
+            Command::GraphPatch { name: "m".into(), ops: "ae:0:5:2.0,re:1:2".into() }
+        );
+        assert!(parse_command("graph patch name=m").is_err(), "ops= required");
+        assert!(parse_command("graph patch ops=ae:0:1:1").is_err(), "name= required");
+        let line = format!(
+            "batch submit jobs={};{}",
+            escape_value("graph=g hierarchy=2:2 distance=1:10 priority=3"),
+            escape_value("graph=g hierarchy=2:2 distance=1:10 seed=2"),
+        );
+        let Command::BatchSubmit { reqs, opts } = parse_command(&line).unwrap() else { panic!() };
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[1].seed, 2);
+        assert_eq!(opts.priority, 3, "first job's options apply to the batch");
+        assert_eq!(
+            parse_command("batch wait id=7 timeout_ms=100").unwrap(),
+            Command::BatchWait { id: 7, timeout_ms: Some(100) }
+        );
+        assert_eq!(
+            parse_command("batch wait id=7").unwrap(),
+            Command::BatchWait { id: 7, timeout_ms: None }
+        );
+        assert!(parse_command("batch submit").is_err());
+        assert!(parse_command("batch submit jobs=;").is_err(), "empty batch");
+        assert!(parse_command("batch submit jobs=nokv").is_err(), "jobs must be key=value");
+        assert!(parse_command("batch wait").is_err());
+        assert!(parse_command("batch frob").is_err());
+    }
+
+    #[test]
+    fn dispatcher_patches_and_warm_remaps_over_the_wire() {
+        let svc = quick_service();
+        let put = handle_command(
+            &svc,
+            "graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6",
+        );
+        assert_eq!(put, "ok graph=ring n=8 m=8 version=1");
+        // Pin gpu-im (the warm path needs a solver with cacheable
+        // hierarchy params) and lift the region cap — on an 8-vertex ring
+        // the one-hop halo of any edge covers most of the graph.
+        let map_cmd = "map graph=ring algorithm=gpu-im hierarchy=2:2 distance=1:10 \
+                       eps=0.3 seed=1 opt.remap.max_region_frac=1";
+        let first = handle_command(&svc, map_cmd);
+        assert!(first.starts_with("ok id="), "{first}");
+        assert!(!first.contains("remap="), "{first}");
+        let patch = handle_command(&svc, "graph patch name=ring ops=ae:0:4:1.0");
+        assert_eq!(patch, "ok graph=ring n=8 m=9 version=2 touched=2 ops=1");
+        assert_eq!(handle_command(&svc, "graph list"), "ok count=1 graphs=ring@v2");
+        let second = handle_command(&svc, map_cmd);
+        assert!(second.contains(" remap=warm"), "{second}");
+        // Re-putting over the live session replaces it.
+        let reput = handle_command(
+            &svc,
+            "graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6",
+        );
+        assert_eq!(reput, "ok graph=ring n=8 m=8 version=3 replaced=1");
+        // Bad ops and unknown names are typed errors.
+        assert!(handle_command(&svc, "graph patch name=ring ops=zz").starts_with("err code=patch"));
+        assert!(handle_command(&svc, "graph patch name=nope ops=re:0:1")
+            .starts_with("err code=unknown_graph"));
+        // Structurally inapplicable patches (removing a missing edge) too.
+        assert!(handle_command(&svc, "graph patch name=ring ops=re:2:6")
+            .starts_with("err code=patch"));
+        let metrics = handle_command(&svc, "metrics");
+        assert!(metrics.contains(" patches=1 "), "{metrics}");
+        assert!(metrics.contains(" graphs_replaced=1 "), "{metrics}");
+        assert!(metrics.contains(" warm_remaps=1 "), "{metrics}");
+    }
+
+    #[test]
+    fn dispatcher_batch_submit_and_wait() {
+        let svc = quick_service();
+        let body = |seed: u64| {
+            escape_value(&format!(
+                "instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 seed={seed}"
+            ))
+        };
+        let reply = handle_command(&svc, &format!("batch submit jobs={};{}", body(1), body(2)));
+        assert!(reply.starts_with("ok batch="), "{reply}");
+        assert!(reply.contains("count=2"), "{reply}");
+        let batch: u64 = reply
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("batch=").and_then(|v| v.parse().ok()))
+            .expect("batch id");
+        let wait = handle_command(&svc, &format!("batch wait id={batch}"));
+        assert_eq!(
+            wait,
+            format!("ok batch={batch} count=2 done=2 failed=0 cancelled=0 expired=0")
+        );
+        assert!(handle_command(&svc, "batch wait id=99").starts_with("err code=unknown_batch"));
+        let m = svc.metrics();
+        assert_eq!((m.batches, m.batched_jobs, m.requests), (1, 2, 2));
     }
 }

@@ -16,6 +16,7 @@ use crate::engine::{
     SubmitOpts,
 };
 use crate::graph::CsrGraph;
+use crate::incremental::{GraphPatch, PatchError, PatchSummary};
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -148,10 +149,23 @@ struct JobRegistry {
     map: HashMap<u64, JobHandle>,
 }
 
+/// Wire-visible batches: batch id → job ids, bounded to the most recent
+/// [`BATCH_RETENTION`] batches (evicted batches answer `unknown_batch`;
+/// their jobs stay individually queryable under job retention).
+#[derive(Default)]
+struct BatchRegistry {
+    seq: u64,
+    order: VecDeque<u64>,
+    map: HashMap<u64, Vec<u64>>,
+}
+
+const BATCH_RETENTION: usize = 256;
+
 /// Handle to a running coordinator service.
 pub struct Service {
     engine: Engine,
     jobs: Mutex<JobRegistry>,
+    batches: Mutex<BatchRegistry>,
     counters: Arc<Counters>,
     retention: usize,
     /// Service-default retry policy (base for per-job overrides).
@@ -178,6 +192,7 @@ impl Service {
         Service {
             engine,
             jobs: Mutex::new(JobRegistry::default()),
+            batches: Mutex::new(BatchRegistry::default()),
             counters: Arc::new(Counters::default()),
             retention: cfg.job_retention.max(1),
             retry: cfg.retry,
@@ -213,13 +228,11 @@ impl Service {
     /// Submit asynchronously: returns the job handle as soon as the job
     /// is queued. `Err(Busy)` when the bounded queue is full (and
     /// `opts.block_when_full` is off).
-    pub fn submit_async(
-        &self,
-        request: &MapRequest,
-        opts: JobOptions,
-    ) -> std::result::Result<JobHandle, SubmitError> {
-        // Per-job retry override: either wire key fills in the other half
-        // from the service default; neither set → engine default applies.
+    /// Lower wire-level [`JobOptions`] into engine [`SubmitOpts`], wiring
+    /// in the metrics completion hook. Per-job retry override: either
+    /// wire key fills in the other half from the service default; neither
+    /// set → engine default applies.
+    fn lower_opts(&self, opts: JobOptions) -> SubmitOpts {
         let retry = match (opts.max_attempts, opts.backoff_ms) {
             (None, None) => None,
             (attempts, backoff) => Some(RetryPolicy {
@@ -228,13 +241,21 @@ impl Service {
                     .map_or(self.retry.base_backoff, Duration::from_millis),
             }),
         };
-        let submit = SubmitOpts {
+        SubmitOpts {
             priority: opts.priority,
             deadline: opts.deadline_ms.map(Duration::from_millis),
             block_when_full: opts.block_when_full,
             on_complete: Some(completion_hook(&self.counters)),
             retry,
-        };
+        }
+    }
+
+    pub fn submit_async(
+        &self,
+        request: &MapRequest,
+        opts: JobOptions,
+    ) -> std::result::Result<JobHandle, SubmitError> {
+        let submit = self.lower_opts(opts);
         match self.engine.submit_opts(&request.to_spec(), submit) {
             Ok(h) => {
                 // relaxed: statistics counter.
@@ -283,6 +304,54 @@ impl Service {
             .collect()
     }
 
+    /// Submit several requests as one engine batch (`batch submit`):
+    /// admission is all-or-nothing, and a worker popping one of the jobs
+    /// drains its compatible small siblings into the same worker-pool
+    /// pass. Returns the wire-visible batch id plus the job handles in
+    /// request order.
+    pub fn submit_engine_batch(
+        &self,
+        requests: &[MapRequest],
+        opts: JobOptions,
+    ) -> std::result::Result<(u64, Vec<JobHandle>), SubmitError> {
+        let submit = self.lower_opts(opts);
+        let specs: Vec<_> = requests.iter().map(|r| r.to_spec()).collect();
+        match self.engine.submit_batch(&specs, submit) {
+            Ok(handles) => {
+                // relaxed: statistics counter.
+                self.counters.requests.fetch_add(handles.len() as u64, Ordering::Relaxed);
+                for h in &handles {
+                    self.register(h.clone());
+                }
+                let ids: Vec<u64> = handles.iter().map(|h| h.id().0).collect();
+                let mut b = self.batches.lock().unwrap_or_else(PoisonError::into_inner);
+                b.seq += 1;
+                let id = b.seq;
+                b.order.push_back(id);
+                b.map.insert(id, ids);
+                while b.map.len() > BATCH_RETENTION {
+                    if let Some(old) = b.order.pop_front() {
+                        b.map.remove(&old);
+                    }
+                }
+                Ok((id, handles))
+            }
+            Err(e) => {
+                if matches!(e, SubmitError::Busy { .. }) {
+                    // relaxed: statistics counter.
+                    self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Job ids of a wire batch, in request order; `None` for unknown (or
+    /// retention-evicted) batch ids.
+    pub fn batch_jobs(&self, id: u64) -> Option<Vec<u64>> {
+        self.batches.lock().unwrap_or_else(PoisonError::into_inner).map.get(&id).cloned()
+    }
+
     /// Look up a job by wire id.
     pub fn job(&self, id: u64) -> Option<JobHandle> {
         self.registry().map.get(&id).cloned()
@@ -301,11 +370,29 @@ impl Service {
         r.order.iter().filter_map(|id| r.map.get(id).map(|h| h.status())).collect()
     }
 
-    /// Pin a session graph (`graph put`); returns (n, m).
-    pub fn put_graph(&self, name: &str, g: Arc<CsrGraph>) -> (usize, usize) {
+    /// Pin a session graph (`graph put`); returns (n, m, version,
+    /// replaced). Re-putting an existing name atomically replaces the
+    /// session: its version bumps, stale cached hierarchies and any
+    /// stored warm-start mapping are dropped, while in-flight jobs keep
+    /// mapping the `Arc` they already resolved.
+    pub fn put_graph(&self, name: &str, g: Arc<CsrGraph>) -> (usize, usize, u64, bool) {
         let nm = (g.n(), g.m());
-        self.engine.put_graph(name, g);
-        nm
+        let (version, replaced) = self.engine.put_graph(name, g);
+        (nm.0, nm.1, version, replaced)
+    }
+
+    /// Apply a [`GraphPatch`] to a pinned session graph (`graph patch`).
+    pub fn patch_graph(
+        &self,
+        name: &str,
+        patch: &GraphPatch,
+    ) -> std::result::Result<PatchSummary, PatchError> {
+        self.engine.patch_graph(name, patch)
+    }
+
+    /// Pinned session graphs with their patch versions, sorted by name.
+    pub fn graph_entries(&self) -> Vec<(String, u64)> {
+        self.engine.graph_entries()
     }
 
     /// Names of the pinned session graphs, sorted.
@@ -334,6 +421,12 @@ impl Service {
             retries: self.engine.retries(),
             faults_injected: self.engine.faults_injected(),
             degraded_completions: self.engine.degraded_completions(),
+            patches_applied: self.engine.patches_applied(),
+            graphs_replaced: self.engine.graphs_replaced(),
+            warm_remaps: self.engine.warm_remaps(),
+            cold_fallbacks: self.engine.cold_fallbacks(),
+            batches: self.engine.batches(),
+            batched_jobs: self.engine.batched_jobs(),
             queue_depth: self.engine.queue_depth(),
             in_flight: self.engine.in_flight(),
             // relaxed: same approximate-snapshot rationale as above.
@@ -568,8 +661,8 @@ mod tests {
     fn session_graphs_are_shared_across_jobs() {
         let svc = Service::start("artifacts".into(), 1);
         let g = Arc::new(crate::graph::gen::grid2d(16, 16, false));
-        let (n, m) = svc.put_graph("sess", g.clone());
-        assert_eq!((n, m), (g.n(), g.m()));
+        let (n, m, version, replaced) = svc.put_graph("sess", g.clone());
+        assert_eq!((n, m, version, replaced), (g.n(), g.m(), 1, false));
         assert_eq!(svc.graph_names(), vec!["sess".to_string()]);
         let mut req = small_request("sess");
         req.algorithm = Some(Algorithm::SharedMapF);
@@ -601,6 +694,63 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.hierarchy_cache_hits, 1);
         assert_eq!(m.hierarchy_cache_misses, 1);
+    }
+
+    #[test]
+    fn engine_batches_run_all_jobs_and_count() {
+        let svc =
+            Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let reqs: Vec<MapRequest> = (1..=3)
+            .map(|s| {
+                let mut r = sleepy_request(0);
+                r.seed = s;
+                r
+            })
+            .collect();
+        let (batch, handles) = svc.submit_engine_batch(&reqs, JobOptions::default()).unwrap();
+        assert_eq!(handles.len(), 3);
+        assert_eq!(svc.batch_jobs(batch).unwrap().len(), 3);
+        for h in &handles {
+            h.wait().unwrap();
+        }
+        await_metric(&svc, "completed", |m| m.completed == 3);
+        let m = svc.metrics();
+        assert_eq!((m.batches, m.batched_jobs, m.requests), (1, 3, 3));
+        assert!(svc.batch_jobs(999).is_none());
+    }
+
+    #[test]
+    fn incremental_metrics_reconcile_with_job_counts() {
+        let svc =
+            Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let g = Arc::new(crate::graph::gen::rgg(2_000, 0.05, 7));
+        let (_, _, version, replaced) = svc.put_graph("sess", g.clone());
+        assert_eq!((version, replaced), (1, false));
+        let mut req = small_request("sess");
+        req.hierarchy = "2:2".into();
+        req.distance = "1:10".into();
+        let first = svc.submit(req.clone()).unwrap();
+        assert_eq!(first.outcome.remap, None);
+        // Edge-only patch between provably non-adjacent endpoints.
+        let u = 0u32;
+        let v = (1..g.n() as u32).rev().find(|&v| g.find_edge(u, v).is_none()).unwrap();
+        let patch = GraphPatch::parse(&format!("ae:{u}:{v}:1.5")).unwrap();
+        assert_eq!(svc.patch_graph("sess", &patch).unwrap().version, 2);
+        let second = svc.submit(req.clone()).unwrap();
+        assert_eq!(second.outcome.remap, Some(crate::engine::RemapKind::Warm));
+        // Re-putting the graph replaces the session and clears warm state.
+        let (_, _, version, replaced) = svc.put_graph("sess", g);
+        assert_eq!((version, replaced), (3, true));
+        let third = svc.submit(req).unwrap();
+        assert_eq!(third.outcome.remap, None, "replacement cleared the stored mapping");
+        await_metric(&svc, "completed", |m| m.completed == 3);
+        let m = svc.metrics();
+        assert_eq!(
+            (m.patches_applied, m.warm_remaps, m.cold_fallbacks, m.graphs_replaced),
+            (1, 1, 0, 1)
+        );
+        // Every warm or cold remap is a completed job.
+        assert!(m.warm_remaps + m.cold_fallbacks <= m.completed);
     }
 
     #[test]

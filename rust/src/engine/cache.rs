@@ -69,12 +69,20 @@ impl GraphCache {
     }
 }
 
+/// One pinned session graph plus its monotone session version: 1 on the
+/// first `graph put`, bumped on every replace and every applied patch.
+#[derive(Debug, Clone)]
+struct PinnedGraph {
+    graph: Arc<CsrGraph>,
+    version: u64,
+}
+
 /// The engine's shared graph storage: pinned session graphs in front of
 /// the LRU cache. Lookups prefer pinned entries, so an uploaded graph
 /// shadows a registry instance of the same name for as long as it lives.
 #[derive(Debug)]
 pub struct GraphStore {
-    pinned: HashMap<String, Arc<CsrGraph>>,
+    pinned: HashMap<String, PinnedGraph>,
     lru: GraphCache,
 }
 
@@ -85,8 +93,8 @@ impl GraphStore {
 
     /// Resolve `name`: pinned store first, then the LRU cache.
     pub fn get(&mut self, name: &str) -> Option<Arc<CsrGraph>> {
-        if let Some(g) = self.pinned.get(name) {
-            return Some(g.clone());
+        if let Some(p) = self.pinned.get(name) {
+            return Some(p.graph.clone());
         }
         self.lru.get(name)
     }
@@ -96,16 +104,52 @@ impl GraphStore {
         self.lru.insert(name, g);
     }
 
-    /// Pin a session graph under `name` (replacing any previous pin).
-    pub fn pin(&mut self, name: String, g: Arc<CsrGraph>) {
-        self.pinned.insert(name, g);
+    /// Pin a session graph under `name`. Returns the new session version
+    /// (1 for a fresh name, previous + 1 on replace) and the replaced
+    /// `Arc` when one existed — the caller purges its derived state
+    /// (hierarchy-cache entries, remap history). In-flight jobs that
+    /// already resolved the old `Arc` keep it alive and complete against
+    /// the graph they started with.
+    pub fn pin(&mut self, name: String, g: Arc<CsrGraph>) -> (u64, Option<Arc<CsrGraph>>) {
+        match self.pinned.get_mut(&name) {
+            Some(p) => {
+                let old = std::mem::replace(&mut p.graph, g);
+                p.version += 1;
+                (p.version, Some(old))
+            }
+            None => {
+                self.pinned.insert(name, PinnedGraph { graph: g, version: 1 });
+                (1, None)
+            }
+        }
+    }
+
+    /// The pinned graph and its session version, without touching the
+    /// LRU tier.
+    pub fn pinned(&self, name: &str) -> Option<(Arc<CsrGraph>, u64)> {
+        self.pinned.get(name).map(|p| (p.graph.clone(), p.version))
+    }
+
+    /// Swap in a patched graph under an existing pin, bumping the
+    /// session version. Returns the new version and the replaced `Arc`
+    /// (for hierarchy-cache re-keying); `None` when `name` is not
+    /// pinned.
+    pub fn repin_patched(
+        &mut self,
+        name: &str,
+        g: Arc<CsrGraph>,
+    ) -> Option<(u64, Arc<CsrGraph>)> {
+        let p = self.pinned.get_mut(name)?;
+        let old = std::mem::replace(&mut p.graph, g);
+        p.version += 1;
+        Some((p.version, old))
     }
 
     /// Drop a pinned graph, returning it so the caller can purge
     /// derived state (hierarchy-cache entries keyed on its identity);
     /// `None` when `name` was not pinned.
     pub fn unpin(&mut self, name: &str) -> Option<Arc<CsrGraph>> {
-        self.pinned.remove(name)
+        self.pinned.remove(name).map(|p| p.graph)
     }
 
     /// Names of the pinned session graphs, sorted.
@@ -113,6 +157,15 @@ impl GraphStore {
         let mut names: Vec<String> = self.pinned.keys().cloned().collect();
         names.sort();
         names
+    }
+
+    /// `(name, session version)` of every pinned graph, sorted by name
+    /// (the wire's `graph list` renders them as `name@vN`).
+    pub fn pinned_entries(&self) -> Vec<(String, u64)> {
+        let mut entries: Vec<(String, u64)> =
+            self.pinned.iter().map(|(k, p)| (k.clone(), p.version)).collect();
+        entries.sort();
+        entries
     }
 
     pub fn pinned_len(&self) -> usize {
@@ -129,6 +182,20 @@ struct HierEntry {
     params: HierarchyParams,
     hier: Arc<CoarseHierarchy>,
     stamp: u64,
+    /// Bit `l` set ⇔ the level-`l` coarse graph is still exact for
+    /// `graph`. Freshly built entries are fully valid; a `graph patch`
+    /// re-keys the entry to the patched `Arc` and clears the bits the
+    /// patch touched (bit 0 — the finest graph — always goes). Entries
+    /// with a partial mask serve warm remaps only; [`HierarchyCache::get`]
+    /// demands full validity.
+    valid_mask: u64,
+}
+
+/// The fully-valid mask for a hierarchy with `levels` contractions:
+/// bits `0..=levels` (capped at the `u64` width).
+fn full_mask(levels: usize) -> u64 {
+    let top = levels.min(u64::BITS as usize - 2);
+    (1u64 << (top + 1)) - 1
 }
 
 /// Bounded LRU of built hierarchies. Lookup is a linear scan — the cap
@@ -159,21 +226,43 @@ impl HierarchyCache {
     }
 
     /// Look up the hierarchy for `(graph identity, params)`, refreshing
-    /// its recency on a hit.
+    /// its recency on a hit. Only **fully valid** entries hit — a cold
+    /// multilevel solve needs every level exact; partially valid
+    /// (patched) entries are reachable via [`HierarchyCache::get_partial`].
     pub fn get(&mut self, g: &Arc<CsrGraph>, params: &HierarchyParams) -> Option<Arc<CoarseHierarchy>> {
         let pos = self.position(g, params)?;
+        if self.entries[pos].valid_mask != full_mask(self.entries[pos].hier.levels()) {
+            return None;
+        }
         self.stamp += 1;
         self.entries[pos].stamp = self.stamp;
         Some(self.entries[pos].hier.clone())
     }
 
+    /// Look up regardless of validity, returning the hierarchy and its
+    /// level-validity mask. The warm remap path uses this to account a
+    /// `hier_cache=hit` when any coarse level survived the patch.
+    pub fn get_partial(
+        &mut self,
+        g: &Arc<CsrGraph>,
+        params: &HierarchyParams,
+    ) -> Option<(Arc<CoarseHierarchy>, u64)> {
+        let pos = self.position(g, params)?;
+        self.stamp += 1;
+        self.entries[pos].stamp = self.stamp;
+        Some((self.entries[pos].hier.clone(), self.entries[pos].valid_mask))
+    }
+
     /// Insert (or refresh) an entry, evicting the least recently used
-    /// one when full.
+    /// one when full. A fresh build is fully valid, so inserting over a
+    /// partially valid re-keyed entry restores it.
     pub fn insert(&mut self, g: Arc<CsrGraph>, params: HierarchyParams, hier: Arc<CoarseHierarchy>) {
         self.stamp += 1;
+        let valid_mask = full_mask(hier.levels());
         if let Some(pos) = self.position(&g, &params) {
             self.entries[pos].hier = hier;
             self.entries[pos].stamp = self.stamp;
+            self.entries[pos].valid_mask = valid_mask;
             return;
         }
         if self.entries.len() >= self.cap {
@@ -184,7 +273,32 @@ impl HierarchyCache {
             }
         }
         let stamp = self.stamp;
-        self.entries.push(HierEntry { graph: g, params, hier, stamp });
+        self.entries.push(HierEntry { graph: g, params, hier, stamp, valid_mask });
+    }
+
+    /// Re-key every entry of `old` onto the patched graph `new_g`,
+    /// intersecting each entry's validity with `mask_of(hier)` (the
+    /// patch's [`crate::incremental::level_validity_mask`]). Entries
+    /// whose intersection leaves no valid level are dropped — they could
+    /// never serve either path again.
+    pub fn rekey_patched(
+        &mut self,
+        old: &Arc<CsrGraph>,
+        new_g: &Arc<CsrGraph>,
+        mask_of: impl Fn(&CoarseHierarchy) -> u64,
+    ) {
+        self.entries.retain_mut(|e| {
+            if !Arc::ptr_eq(&e.graph, old) {
+                return true;
+            }
+            let mask = e.valid_mask & mask_of(&e.hier);
+            if mask == 0 {
+                return false;
+            }
+            e.graph = new_g.clone();
+            e.valid_mask = mask;
+            true
+        });
     }
 
     /// Drop every entry built for `g` (by identity). Called when a
@@ -285,7 +399,8 @@ mod tests {
     fn pinned_graphs_survive_lru_churn_and_shadow_cached_names() {
         let mut s = GraphStore::new(1);
         let pinned = g();
-        s.pin("session".into(), pinned.clone());
+        let (v, replaced) = s.pin("session".into(), pinned.clone());
+        assert_eq!((v, replaced.is_none()), (1, true));
         s.insert_cached("a".into(), g());
         s.insert_cached("b".into(), g()); // evicts `a` from the LRU tier
         assert_eq!(s.cached_len(), 1);
@@ -296,5 +411,62 @@ mod tests {
         assert_eq!(s.pinned_names(), vec!["session".to_string()]);
         assert!(Arc::ptr_eq(&s.unpin("session").unwrap(), &pinned));
         assert!(s.unpin("session").is_none());
+    }
+
+    #[test]
+    fn pin_and_patch_bump_the_session_version() {
+        let mut s = GraphStore::new(1);
+        let (g1, g2, g3) = (g(), g(), g());
+        assert_eq!(s.pin("sess".into(), g1.clone()), (1, None));
+        assert_eq!(s.pinned("sess").map(|(_, v)| v), Some(1));
+        // Replacing via put returns the shadowed Arc and bumps.
+        let (v, old) = s.pin("sess".into(), g2.clone());
+        assert_eq!(v, 2);
+        assert!(Arc::ptr_eq(&old.unwrap(), &g1));
+        // Patching swaps in place and bumps again.
+        let (v, old) = s.repin_patched("sess", g3.clone()).unwrap();
+        assert_eq!(v, 3);
+        assert!(Arc::ptr_eq(&old, &g2));
+        assert!(Arc::ptr_eq(&s.pinned("sess").unwrap().0, &g3));
+        assert_eq!(s.pinned_entries(), vec![("sess".to_string(), 3)]);
+        assert!(s.repin_patched("nope", g()).is_none());
+    }
+
+    #[test]
+    fn rekey_patched_masks_levels_and_gates_cold_hits() {
+        use crate::cancel::CancelToken;
+        use crate::multilevel::{CoarseHierarchy, CoarsenConfig};
+        let g1 = Arc::new(crate::graph::gen::grid2d(12, 12, false));
+        let g2 = Arc::new(crate::graph::gen::grid2d(12, 12, false));
+        let params = HierarchyParams::device(&g1, 2, 0.03, CoarsenConfig::device());
+        let hier = Arc::new(
+            CoarseHierarchy::build_serial(&g1, &params.build, &params.cfg, &CancelToken::new())
+                .unwrap(),
+        );
+        let levels = hier.levels();
+        assert!(levels >= 1);
+        let mut c = HierarchyCache::new(4);
+        c.insert(g1.clone(), params.clone(), hier);
+        // Fresh entry: fully valid, cold `get` hits.
+        assert!(c.get(&g1, &params).is_some());
+        // Patch keeps all levels except the finest: cold `get` misses,
+        // `get_partial` serves with the reduced mask.
+        let keep_coarse = full_mask(levels) & !1;
+        c.rekey_patched(&g1, &g2, |_| keep_coarse);
+        assert!(c.get(&g1, &params).is_none(), "old identity gone");
+        assert!(c.get(&g2, &params).is_none(), "partial entry must not serve cold");
+        let (_, mask) = c.get_partial(&g2, &params).unwrap();
+        assert_eq!(mask, keep_coarse);
+        // A rebuild over the re-keyed slot restores full validity.
+        let rebuilt = Arc::new(
+            CoarseHierarchy::build_serial(&g2, &params.build, &params.cfg, &CancelToken::new())
+                .unwrap(),
+        );
+        c.insert(g2.clone(), params.clone(), rebuilt);
+        assert!(c.get(&g2, &params).is_some());
+        assert_eq!(c.len(), 1, "rekey + insert reuse one slot");
+        // A mask intersection that leaves nothing drops the entry.
+        c.rekey_patched(&g2, &g1, |_| 0);
+        assert!(c.is_empty());
     }
 }

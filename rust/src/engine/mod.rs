@@ -37,6 +37,7 @@ pub mod registry;
 pub mod spec;
 
 pub use crate::cancel::CancelToken;
+pub use crate::incremental::RemapKind;
 pub use job::{JobHandle, JobId, JobState, JobStatus, RetryPolicy, SubmitError, SubmitOpts};
 pub use registry::{solver, solver_by_name, solver_names, solvers};
 pub use spec::{GraphSource, MapSpec, Refinement};
@@ -44,10 +45,12 @@ pub use spec::{GraphSource, MapSpec, Refinement};
 use crate::algo::{qap, Algorithm};
 use crate::fault::{self, FaultPlane, FaultPoint};
 use crate::graph::{gen, io, CsrGraph};
+use crate::incremental::{self, GraphPatch, PatchError, PatchSummary, RemapPlan, Remapper};
 use crate::metrics::PhaseBreakdown;
 use crate::multilevel::{CoarseHierarchy, HierarchyHandle, HierarchyParams};
+use crate::par::cost::DeviceTimer;
 use crate::par::Pool;
-use crate::partition::{block_comm_matrix, comm_cost_blocks};
+use crate::partition::{block_comm_matrix, comm_cost_blocks, imbalance};
 use crate::runtime::{offload, Runtime};
 use crate::topology::{DistanceOracle, Machine};
 use crate::Block;
@@ -95,6 +98,11 @@ pub struct MapOutcome {
     /// 1-based number of execution attempts this job took (> 1 only
     /// under [`RetryPolicy`] retries).
     pub attempts: u32,
+    /// How this job relates to the session's remap history: `Some(Warm)`
+    /// = warm-start refinement from the previous mapping (after a
+    /// `graph patch`), `Some(Cold)` = a remap was pending but fell back
+    /// to a full solve, `None` = no patch pending (plain solve).
+    pub remap: Option<RemapKind>,
 }
 
 /// One solver in the registry. `solve` runs the algorithm end to end and
@@ -283,6 +291,23 @@ struct EngineShared {
     faults_injected: AtomicU64,
     /// Jobs completed through the degradation fallback chain.
     degraded: AtomicU64,
+    /// Incremental-remap state: the last mapping and pending patch
+    /// region per pinned session graph.
+    remapper: Mutex<Remapper>,
+    /// Batch-id source for [`Engine::submit_batch`].
+    next_batch: AtomicU64,
+    /// Patches applied to pinned session graphs (cumulative).
+    patches_applied: AtomicU64,
+    /// Jobs completed through the warm-start remap path.
+    warm_remaps: AtomicU64,
+    /// Pending remaps that fell back to a full (cold) solve.
+    cold_fallbacks: AtomicU64,
+    /// `submit_batch` calls admitted (cumulative).
+    batches: AtomicU64,
+    /// Jobs admitted through `submit_batch` (cumulative).
+    batched_jobs: AtomicU64,
+    /// `graph put` uploads that replaced an existing pinned name.
+    graphs_replaced: AtomicU64,
 }
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -404,6 +429,50 @@ impl EngineShared {
         if plane.is_some_and(|p| p.should_fire(FaultPoint::HierarchyBuild)) {
             panic!("{}", fault::failure(FaultPoint::HierarchyBuild));
         }
+        // Incremental remap planning: only Named specs still resolving
+        // to the pinned session graph participate (LRU/registry graphs
+        // have no patch history).
+        let session = match &spec.graph {
+            GraphSource::Named(name) => lock(&self.graphs)
+                .pinned(name)
+                .filter(|(pg, _)| Arc::ptr_eq(pg, &g))
+                .map(|(_, version)| (name.clone(), version)),
+            GraphSource::InMemory(_) => None,
+        };
+        let mut remap = None;
+        if let Some((name, version)) = &session {
+            let machine_spec = m.spec_string();
+            let halo = spec.opt_usize("remap.halo").unwrap_or(1);
+            let frac = spec.opt_f64("remap.max_region_frac").unwrap_or(0.25);
+            let plan =
+                lock(&self.remapper).plan(name, *version, &g, m.k(), &machine_spec, halo, frac);
+            match plan {
+                RemapPlan::Skip => {}
+                RemapPlan::Warm { start, .. }
+                    if solver.hierarchy_params(&g, &m, spec).is_some() =>
+                {
+                    return match self.warm_execute(ctx, spec, cancel, &g, &m, algo, start)? {
+                        Some(mut out) => {
+                            lock(&self.remapper)
+                                .record(name, *version, g.n(), m.k(), &machine_spec, &out.mapping);
+                            // relaxed: monotone statistics counter, read approximately.
+                            self.warm_remaps.fetch_add(1, Ordering::Relaxed);
+                            if !spec.return_mapping {
+                                out.mapping = Vec::new();
+                            }
+                            Ok(Some(out))
+                        }
+                        None => Ok(None),
+                    };
+                }
+                // Pending remap, but the warm conditions failed (or the
+                // solver has no warm-startable refinement): full solve,
+                // tagged cold.
+                RemapPlan::Cold | RemapPlan::Warm { .. } => {
+                    remap = Some(RemapKind::Cold);
+                }
+            }
+        }
         let hier = match solver.hierarchy_params(&g, &m, spec) {
             Some(params) => match self.hierarchy_for(ctx, &g, &params, cancel) {
                 Some(h) => Some(h),
@@ -423,8 +492,83 @@ impl EngineShared {
             out.polish_improvement = polish_mapping(ctx, &g, &m, &mut out.mapping)?;
             out.comm_cost -= out.polish_improvement;
         }
+        // Session bookkeeping: remember the (post-polish) mapping so a
+        // later `graph patch` can warm-start from it, and tag a pending
+        // remap that ran cold.
+        if let Some((name, version)) = &session {
+            if out.mapping.len() == g.n() {
+                lock(&self.remapper)
+                    .record(name, *version, g.n(), m.k(), &m.spec_string(), &out.mapping);
+            }
+        }
+        out.remap = remap;
+        if remap == Some(RemapKind::Cold) {
+            // relaxed: monotone statistics counter, read approximately.
+            self.cold_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
         if !spec.return_mapping {
             out.mapping = Vec::new();
+        }
+        Ok(Some(out))
+    }
+
+    /// The warm remap path: skip coarsen→initial→uncoarsen entirely and
+    /// run one Jet refinement pass seeded from the session's previous
+    /// mapping ([`incremental::warm_refine`]). `Ok(None)` = cancelled
+    /// (the pending patch state is untouched — `plan` is read-only — so
+    /// the next attempt re-plans). `hierarchy_cache` reports
+    /// `Some(true)` when re-keyed coarse levels of the patched graph
+    /// survive in the cache (the patch was provably intra-cluster at
+    /// some level), `None` when nothing survived — the warm path builds
+    /// no hierarchy either way.
+    #[allow(clippy::too_many_arguments)]
+    fn warm_execute(
+        &self,
+        ctx: &EngineCtx,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+        g: &Arc<CsrGraph>,
+        m: &Machine,
+        algo: Algorithm,
+        start: Vec<Block>,
+    ) -> Result<Option<MapOutcome>> {
+        let cached = registry::solver(algo)
+            .hierarchy_params(g, m, spec)
+            .and_then(|params| lock(&self.hierarchies).get_partial(g, &params))
+            .is_some_and(|(_, mask)| mask != 0);
+        if cached {
+            // relaxed: monotone statistics counter, read approximately.
+            self.hierarchy_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let seed = spec.primary_seed();
+        let timer = DeviceTimer::start();
+        let mut mapping = start;
+        let stats =
+            incremental::warm_refine(ctx.pool(), g, &mut mapping, m, spec.eps, seed, cancel.clone());
+        let meas = timer.stop();
+        if cancel.is_cancelled() {
+            return Ok(None);
+        }
+        let mut out = MapOutcome {
+            algorithm: algo,
+            n: g.n(),
+            k: m.k(),
+            seed,
+            comm_cost: stats.final_objective,
+            imbalance: imbalance(g, &mapping, m.k()),
+            mapping,
+            host_ms: meas.host_ms,
+            device_ms: if algo.is_device() { meas.device_ms } else { meas.host_ms },
+            phases: None,
+            polish_improvement: 0.0,
+            hierarchy_cache: cached.then_some(true),
+            degraded: false,
+            attempts: 1,
+            remap: Some(RemapKind::Warm),
+        };
+        if spec.polish {
+            out.polish_improvement = polish_mapping(ctx, g, m, &mut out.mapping)?;
+            out.comm_cost -= out.polish_improvement;
         }
         Ok(Some(out))
     }
@@ -553,7 +697,7 @@ fn degrade(
 /// [`RetryPolicy`] allows, then degrade down the fallback chain. Every
 /// job still reaches exactly one terminal state exactly once.
 fn run_job(shared: &EngineShared, ctx: &EngineCtx, job: queue::QueuedJob) {
-    let queue::QueuedJob { priority, seq, attempt, retry, spec, handle, hook } = job;
+    let queue::QueuedJob { priority, seq, attempt, retry, spec, handle, hook, batch } = job;
     let token = handle.token().clone();
     if token.deadline_exceeded() {
         handle.finish(
@@ -642,6 +786,7 @@ fn run_job(shared: &EngineShared, ctx: &EngineCtx, job: queue::QueuedJob) {
             spec,
             handle: handle.clone(),
             hook,
+            batch,
         };
         let pushed = lock(&shared.queue).push_delayed(Instant::now() + backoff, requeued);
         match pushed {
@@ -665,14 +810,25 @@ fn run_job(shared: &EngineShared, ctx: &EngineCtx, job: queue::QueuedJob) {
     degrade(shared, ctx, &spec, &token, attempt, failure, &handle, hook.as_ref());
 }
 
+/// The vertex count a queued spec would solve, *without* resolving it:
+/// in-memory graphs answer directly, named ones only when already in the
+/// graph store. `None` (unknown — would need generate/parse) stops a
+/// batch drain rather than stall the queue on graph I/O.
+fn drainable_n(shared: &EngineShared, spec: &MapSpec) -> Option<usize> {
+    match &spec.graph {
+        GraphSource::InMemory(g) => Some(g.n()),
+        GraphSource::Named(name) => lock(&shared.graphs).get(name).map(|g| g.n()),
+    }
+}
+
 fn worker_loop(shared: Arc<EngineShared>) {
     let pool =
         if shared.cfg.threads == 0 { Pool::default() } else { Pool::new(shared.cfg.threads) };
     let ctx = EngineCtx::with_runtime(pool, shared.cfg.artifacts_dir.clone());
     loop {
-        let job = {
+        let (job, group) = {
             let mut q = lock(&shared.queue);
-            loop {
+            let job = loop {
                 q.promote_ready(Instant::now());
                 if let Some(j) = q.pop() {
                     shared.space_cv.notify_one();
@@ -697,19 +853,44 @@ fn worker_loop(shared: Arc<EngineShared>) {
                     }
                     None => shared.work_cv.wait(q).unwrap_or_else(PoisonError::into_inner),
                 };
+            };
+            // Batch drain: greedily take same-batch machine-compatible
+            // small jobs from the queue head into this worker pass —
+            // never past a higher-priority or foreign job (only the head
+            // is taken), never more than BATCH_DRAIN_MAX in total.
+            let mut group = Vec::new();
+            if let Some(b) = job.batch {
+                while group.len() + 1 < incremental::BATCH_DRAIN_MAX
+                    && q.peek().is_some_and(|next| {
+                        next.batch == Some(b)
+                            && incremental::compatible(&job.spec, &next.spec)
+                            && drainable_n(&shared, &next.spec)
+                                .is_some_and(|n| n <= incremental::BATCH_SMALL_N)
+                    })
+                {
+                    let next = q.pop().expect("peek just matched");
+                    shared.space_cv.notify_one();
+                    group.push(next);
+                }
             }
+            (job, group)
         };
         if shared.shutdown.load(Ordering::SeqCst) {
             // Draining on shutdown: retire without running.
-            job.handle.finish(
-                JobState::Cancelled,
-                None,
-                Some("engine shut down".into()),
-                job.hook.as_ref(),
-            );
+            for j in std::iter::once(job).chain(group) {
+                j.handle.finish(
+                    JobState::Cancelled,
+                    None,
+                    Some("engine shut down".into()),
+                    j.hook.as_ref(),
+                );
+            }
             continue;
         }
         run_job(&shared, &ctx, job);
+        for j in group {
+            run_job(&shared, &ctx, j);
+        }
     }
 }
 
@@ -742,6 +923,14 @@ impl Engine {
             retries: AtomicU64::new(0),
             faults_injected: AtomicU64::new(0),
             degraded: AtomicU64::new(0),
+            remapper: Mutex::new(Remapper::new()),
+            next_batch: AtomicU64::new(1),
+            patches_applied: AtomicU64::new(0),
+            warm_remaps: AtomicU64::new(0),
+            cold_fallbacks: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_jobs: AtomicU64::new(0),
+            graphs_replaced: AtomicU64::new(0),
             cfg,
         });
         let workers = (0..worker_count)
@@ -797,6 +986,7 @@ impl Engine {
             spec: spec.clone(),
             handle: handle.clone(),
             hook: opts.on_complete,
+            batch: None,
         };
         let mut q = lock(&shared.queue);
         loop {
@@ -834,6 +1024,97 @@ impl Engine {
         drop(q);
         shared.work_cv.notify_one();
         Ok(handle)
+    }
+
+    /// Enqueue a group of specs as **one unit**: one queue lock,
+    /// consecutive sequence numbers and a shared batch id, admitted
+    /// all-or-nothing (`Err(Busy)` rejects the entire batch when it does
+    /// not fit — no partial admission). A worker that pops a batched job
+    /// greedily drains machine-compatible small jobs of the same batch
+    /// from the queue head into one worker pass (see
+    /// [`crate::incremental::batch`]); the returned handles behave
+    /// exactly like [`Engine::submit`] handles otherwise. `opts` applies
+    /// to every job in the batch (the hook fires once per job).
+    pub fn submit_batch(
+        &self,
+        specs: &[MapSpec],
+        opts: SubmitOpts,
+    ) -> std::result::Result<Vec<JobHandle>, SubmitError> {
+        let shared = &self.shared;
+        if specs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShutDown);
+        }
+        let retry = opts.retry.unwrap_or(shared.cfg.retry);
+        let retry = RetryPolicy { max_attempts: retry.max_attempts.max(1), ..retry };
+        // relaxed: the fetch_add itself guarantees unique batch ids.
+        let batch = shared.next_batch.fetch_add(1, Ordering::Relaxed);
+        let mut handles = Vec::with_capacity(specs.len());
+        let mut jobs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            // relaxed: the fetch_add itself guarantees unique ids.
+            let id = JobId(shared.next_id.fetch_add(1, Ordering::Relaxed));
+            let token = match opts.deadline {
+                Some(d) => CancelToken::with_deadline(d),
+                None => CancelToken::new(),
+            };
+            let handle = JobHandle::new_queued(id, token);
+            handles.push(handle.clone());
+            jobs.push(queue::QueuedJob {
+                priority: opts.priority,
+                // relaxed: uniqueness comes from the RMW; FIFO
+                // tie-breaking only needs distinct values.
+                seq: shared.next_seq.fetch_add(1, Ordering::Relaxed),
+                attempt: 1,
+                retry,
+                spec: spec.clone(),
+                handle,
+                hook: opts.on_complete.clone(),
+                batch: Some(batch),
+            });
+        }
+        let mut q = lock(&shared.queue);
+        loop {
+            match q.push_all(jobs) {
+                Ok(()) => break,
+                Err(back) => {
+                    // Same eviction dance as submit_opts: free slots held
+                    // by already-terminal queued jobs before giving up.
+                    let purged = q.purge_terminal();
+                    if !purged.is_empty() {
+                        for dead in purged {
+                            dead.handle.finish(
+                                JobState::Cancelled,
+                                None,
+                                Some("cancelled before start".into()),
+                                dead.hook.as_ref(),
+                            );
+                        }
+                        jobs = back;
+                        continue;
+                    }
+                    // A batch larger than the queue can never be
+                    // admitted atomically — typed error, even when the
+                    // caller asked to block.
+                    if !opts.block_when_full || back.len() > q.cap() {
+                        return Err(SubmitError::Busy { cap: q.cap() });
+                    }
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return Err(SubmitError::ShutDown);
+                    }
+                    jobs = back;
+                    q = shared.space_cv.wait(q).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+        drop(q);
+        shared.work_cv.notify_all();
+        // relaxed: monotone statistics counters, read approximately.
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.batched_jobs.fetch_add(handles.len() as u64, Ordering::Relaxed);
+        Ok(handles)
     }
 
     /// Map with the spec's primary seed: `submit` (blocking on queue
@@ -877,18 +1158,76 @@ impl Engine {
     /// Pin a session graph: later specs naming `name` reuse this exact
     /// `Arc<CsrGraph>` across jobs, workers and connections, exempt from
     /// LRU eviction, until [`Engine::drop_graph`].
-    pub fn put_graph(&self, name: impl Into<String>, g: Arc<CsrGraph>) {
-        lock(&self.shared.graphs).pin(name.into(), g);
+    ///
+    /// Returns the session version (1 for a fresh name) and whether an
+    /// existing pin was **replaced** — a put over a live name bumps the
+    /// version, discards the old graph's hierarchy-cache entries and
+    /// remap history, and leaves in-flight jobs completing against the
+    /// `Arc` they already resolved.
+    pub fn put_graph(&self, name: impl Into<String>, g: Arc<CsrGraph>) -> (u64, bool) {
+        let name = name.into();
+        let (version, old) = lock(&self.shared.graphs).pin(name.clone(), g);
+        if let Some(old) = old {
+            lock(&self.shared.hierarchies).purge_graph(&old);
+            lock(&self.shared.remapper).forget(&name);
+            // relaxed: monotone statistics counter, read approximately.
+            self.shared.graphs_replaced.fetch_add(1, Ordering::Relaxed);
+            (version, true)
+        } else {
+            (version, false)
+        }
+    }
+
+    /// Apply a [`GraphPatch`] to the pinned session graph `name`: the
+    /// patched graph becomes a **new version** of the session graph
+    /// (atomically — concurrent jobs see either the old or the new
+    /// `Arc`, never a half-applied patch), hierarchy-cache entries are
+    /// re-keyed with only the levels the patch provably kept intact
+    /// ([`incremental::level_validity_mask`]), and the remapper notes
+    /// the touched region so the next map can plan a warm restart.
+    pub fn patch_graph(&self, name: &str, patch: &GraphPatch) -> Result<PatchSummary, PatchError> {
+        // The graphs lock is held across apply + swap so concurrent
+        // patches serialize; nested lock order (graphs → hierarchies /
+        // remapper) is taken nowhere in reverse.
+        let mut graphs = lock(&self.shared.graphs);
+        let Some((old, _)) = graphs.pinned(name) else {
+            return Err(PatchError::UnknownGraph(name.to_string()));
+        };
+        let applied = patch.apply(&old).map_err(PatchError::Invalid)?;
+        let new_g = Arc::new(applied.graph);
+        let (version, old) =
+            graphs.repin_patched(name, new_g.clone()).expect("pin checked above");
+        lock(&self.shared.hierarchies)
+            .rekey_patched(&old, &new_g, |h| incremental::level_validity_mask(h, patch));
+        lock(&self.shared.remapper).note_patch(
+            name,
+            version,
+            new_g.n(),
+            &applied.touched,
+            applied.vertex_ops,
+        );
+        drop(graphs);
+        // relaxed: monotone statistics counter, read approximately.
+        self.shared.patches_applied.fetch_add(1, Ordering::Relaxed);
+        Ok(PatchSummary {
+            n: new_g.n(),
+            m: new_g.m(),
+            version,
+            touched: applied.touched.len(),
+            ops: patch.ops.len(),
+        })
     }
 
     /// Unpin a session graph; false when `name` was not pinned. Also
     /// purges the dropped graph's hierarchy-cache entries — they could
     /// never be hit again (identity is gone) but would otherwise pin the
-    /// graph and its hierarchy in memory until LRU churn.
+    /// graph and its hierarchy in memory until LRU churn — and its remap
+    /// history.
     pub fn drop_graph(&self, name: &str) -> bool {
         let removed = lock(&self.shared.graphs).unpin(name);
         if let Some(g) = &removed {
             lock(&self.shared.hierarchies).purge_graph(g);
+            lock(&self.shared.remapper).forget(name);
         }
         removed.is_some()
     }
@@ -896,6 +1235,11 @@ impl Engine {
     /// Names of the pinned session graphs, sorted.
     pub fn graph_names(&self) -> Vec<String> {
         lock(&self.shared.graphs).pinned_names()
+    }
+
+    /// `(name, session version)` of every pinned graph, sorted by name.
+    pub fn graph_entries(&self) -> Vec<(String, u64)> {
+        lock(&self.shared.graphs).pinned_entries()
     }
 
     /// Number of graphs in the LRU cache tier (pinned graphs excluded).
@@ -960,6 +1304,45 @@ impl Engine {
     pub fn degraded_completions(&self) -> u64 {
         // relaxed: approximate statistics read.
         self.shared.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Patches applied to pinned session graphs (cumulative).
+    pub fn patches_applied(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.patches_applied.load(Ordering::Relaxed)
+    }
+
+    /// Jobs completed through the warm-start remap path (cumulative;
+    /// their outcomes carry `remap = Some(Warm)`).
+    pub fn warm_remaps(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.warm_remaps.load(Ordering::Relaxed)
+    }
+
+    /// Pending remaps that fell back to a full solve (cumulative; their
+    /// outcomes carry `remap = Some(Cold)`).
+    pub fn cold_fallbacks(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.cold_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Batches admitted through [`Engine::submit_batch`] (cumulative).
+    pub fn batches(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.batches.load(Ordering::Relaxed)
+    }
+
+    /// Jobs admitted through [`Engine::submit_batch`] (cumulative).
+    pub fn batched_jobs(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.batched_jobs.load(Ordering::Relaxed)
+    }
+
+    /// `graph put` uploads that replaced an existing pinned name
+    /// (cumulative).
+    pub fn graphs_replaced(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.graphs_replaced.load(Ordering::Relaxed)
     }
 }
 
@@ -1499,5 +1882,147 @@ mod tests {
         let st = job.status();
         assert_eq!(st.state, JobState::Cancelled, "pending retry must not outlive the engine");
         assert!(st.error.unwrap().contains("shut down"));
+    }
+
+    // ---- incremental remapping & batching --------------------------
+
+    #[test]
+    fn patch_bumps_version_and_put_replaces() {
+        let e = engine();
+        let g = Arc::new(gen::grid2d(10, 10, false));
+        assert_eq!(e.put_graph("sess", g.clone()), (1, false));
+        let p = GraphPatch::parse("ae:0:99:1.0").unwrap();
+        let s = e.patch_graph("sess", &p).unwrap();
+        assert_eq!((s.version, s.ops, s.touched), (2, 1, 2));
+        assert_eq!(s.m, g.m() + 1);
+        assert_eq!(e.graph_entries(), vec![("sess".to_string(), 2)]);
+        assert_eq!(e.patches_applied(), 1);
+        // Replacing via `graph put` bumps the version again and counts.
+        assert_eq!(e.put_graph("sess", g.clone()), (3, true));
+        assert_eq!(e.graphs_replaced(), 1);
+        // Unknown graphs and invalid patches are typed errors.
+        assert!(matches!(e.patch_graph("nope", &p), Err(PatchError::UnknownGraph(_))));
+        let bad = GraphPatch::parse("re:0:99").unwrap();
+        assert!(matches!(e.patch_graph("sess", &bad), Err(PatchError::Invalid(_))));
+        assert_eq!(e.patches_applied(), 1, "failed patches must not count");
+    }
+
+    #[test]
+    fn patch_then_map_warm_remaps_with_exact_objective() {
+        let e = engine();
+        let g = Arc::new(gen::rgg(2_000, 0.05, 3));
+        e.put_graph("sess", g.clone());
+        let spec = MapSpec::named("sess")
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(Algorithm::GpuIm))
+            .seed(1);
+        let first = e.map(&spec).unwrap();
+        assert_eq!(first.remap, None, "no patch pending on the first map");
+        // Edge-only patch between two provably non-adjacent endpoints.
+        let u = 0u32;
+        let v = (1..g.n() as u32).rev().find(|&v| g.find_edge(u, v).is_none()).unwrap();
+        let p = GraphPatch::parse(&format!("ae:{u}:{v}:1.0")).unwrap();
+        e.patch_graph("sess", &p).unwrap();
+        let warm = e.map(&spec).unwrap();
+        assert_eq!(warm.remap, Some(RemapKind::Warm));
+        assert_eq!((e.warm_remaps(), e.cold_fallbacks()), (1, 0));
+        validate_mapping(&warm.mapping, warm.n, warm.k).unwrap();
+        // Exactness oracle: the reported J matches a from-scratch
+        // recompute on the patched graph.
+        let m = e.resolve_machine(&spec).unwrap();
+        let patched = e.resolve_graph(&spec.graph).unwrap();
+        let j = crate::partition::comm_cost(&patched, &warm.mapping, &m);
+        assert!(
+            (warm.comm_cost - j).abs() <= 1e-6 * j.max(1.0),
+            "warm J {} vs oracle {j}",
+            warm.comm_cost
+        );
+        // The warm result was recorded: no pending patch, plain solve.
+        let again = e.map(&spec).unwrap();
+        assert_eq!(again.remap, None);
+        assert_eq!(e.warm_remaps(), 1);
+    }
+
+    #[test]
+    fn vertex_patch_falls_back_cold() {
+        let e = engine();
+        let g = Arc::new(gen::grid2d(16, 16, false));
+        e.put_graph("sess", g);
+        let spec = MapSpec::named("sess")
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(Algorithm::GpuIm))
+            .seed(1);
+        e.map(&spec).unwrap();
+        // `av` + `rv` of the same fresh vertex: structurally a no-op, but
+        // a vertex op poisons the stored mapping — forced cold.
+        let p = GraphPatch::parse("av:1,rv:256").unwrap();
+        e.patch_graph("sess", &p).unwrap();
+        let out = e.map(&spec).unwrap();
+        assert_eq!(out.remap, Some(RemapKind::Cold));
+        assert_eq!((e.warm_remaps(), e.cold_fallbacks()), (0, 1));
+        validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        // Cold completion re-recorded the mapping: pending cleared.
+        assert_eq!(e.map(&spec).unwrap().remap, None);
+    }
+
+    #[test]
+    fn region_threshold_option_forces_cold() {
+        let e = engine();
+        let g = Arc::new(gen::grid2d(12, 12, false));
+        e.put_graph("sess", g);
+        let spec = MapSpec::named("sess")
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(Algorithm::GpuIm))
+            .seed(1);
+        e.map(&spec).unwrap();
+        let p = GraphPatch::parse("ae:0:143:1.0").unwrap();
+        e.patch_graph("sess", &p).unwrap();
+        // Any non-empty region exceeds a zero threshold.
+        let strict = spec.clone().option("remap.max_region_frac", "0");
+        assert_eq!(e.map(&strict).unwrap().remap, Some(RemapKind::Cold));
+        assert_eq!(e.cold_fallbacks(), 1);
+    }
+
+    #[test]
+    fn batch_submit_runs_all_jobs_and_counts() {
+        let e = Engine::new(EngineConfig { threads: 1, workers: 1, ..Default::default() });
+        let g = Arc::new(gen::grid2d(12, 12, false));
+        let base =
+            MapSpec::in_memory(g).hierarchy("2:2").distance("1:10").algo(Some(Algorithm::GpuIm));
+        let specs: Vec<MapSpec> = (1..=4).map(|s| base.clone().seed(s)).collect();
+        let handles = e.submit_batch(&specs, SubmitOpts::default()).unwrap();
+        assert_eq!(handles.len(), 4);
+        let outs: Vec<MapOutcome> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        assert_eq!(outs.iter().map(|o| o.seed).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert_eq!((e.batches(), e.batched_jobs()), (1, 4));
+        // An empty batch is a no-op.
+        assert!(e.submit_batch(&[], SubmitOpts::default()).unwrap().is_empty());
+        assert_eq!(e.batches(), 1);
+    }
+
+    #[test]
+    fn batch_larger_than_the_queue_is_refused_whole() {
+        let e = Engine::new(EngineConfig {
+            threads: 1,
+            workers: 1,
+            queue_cap: 2,
+            ..Default::default()
+        });
+        let specs: Vec<MapSpec> = (0..5).map(|s| sleepy_spec(0).seed(s)).collect();
+        let err = e
+            .submit_batch(&specs, SubmitOpts { block_when_full: true, ..Default::default() })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::Busy { cap: 2 });
+        assert_eq!((e.batches(), e.batched_jobs()), (0, 0));
+        // A fitting batch still goes through afterwards.
+        let ok = e.submit_batch(&specs[..2], SubmitOpts::default()).unwrap();
+        for h in ok {
+            h.wait().unwrap();
+        }
+        assert_eq!((e.batches(), e.batched_jobs()), (1, 2));
     }
 }

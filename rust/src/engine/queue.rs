@@ -28,6 +28,10 @@ pub(crate) struct QueuedJob {
     pub spec: MapSpec,
     pub handle: JobHandle,
     pub hook: Option<CompletionHook>,
+    /// Batch id when submitted via `Engine::submit_batch`; a worker that
+    /// pops a batched job may drain same-batch compatible jobs from the
+    /// queue head into one worker pass. Preserved across retries.
+    pub batch: Option<u64>,
 }
 
 impl PartialEq for QueuedJob {
@@ -133,6 +137,26 @@ impl JobQueue {
         self.heap.pop()
     }
 
+    /// The job the next [`JobQueue::pop`] would return, if any. Batch
+    /// draining peeks before popping so it never takes a job it would
+    /// have to put back.
+    pub fn peek(&self) -> Option<&QueuedJob> {
+        self.heap.peek()
+    }
+
+    /// All-or-nothing batch admission: every job is enqueued, or none is
+    /// and the whole batch is handed back (queue closed, or fewer than
+    /// `jobs.len()` free slots).
+    pub fn push_all(&mut self, jobs: Vec<QueuedJob>) -> Result<(), Vec<QueuedJob>> {
+        if self.closed || self.heap.len() + jobs.len() > self.cap {
+            return Err(jobs);
+        }
+        for job in jobs {
+            self.heap.push(job);
+        }
+        Ok(())
+    }
+
     /// Remove jobs that already reached a terminal state (cancelled or
     /// deadline-expired while queued) so they stop occupying capacity.
     /// Returns the removed jobs — the caller must still retire them
@@ -188,6 +212,7 @@ mod tests {
             spec: MapSpec::named("x"),
             handle: JobHandle::new_queued(JobId(seq), CancelToken::new()),
             hook: None,
+            batch: None,
         }
     }
 
@@ -259,6 +284,24 @@ mod tests {
         assert_eq!(drained.len(), 2);
         assert!(drained.contains(&1) && drained.contains(&2));
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn push_all_is_all_or_nothing_and_peek_matches_pop() {
+        let mut q = JobQueue::new(3);
+        assert!(q.push(job(0, 1)).is_ok());
+        // Three more don't fit into the two free slots: nothing lands.
+        let refused = q.push_all(vec![job(0, 2), job(0, 3), job(0, 4)]);
+        assert_eq!(refused.unwrap_err().len(), 3);
+        assert_eq!(q.len(), 1);
+        // Two do, atomically.
+        assert!(q.push_all(vec![job(5, 2), job(5, 3)]).is_ok());
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek().unwrap().seq, 2);
+        assert_eq!(q.pop().unwrap().seq, 2);
+        assert_eq!(q.peek().unwrap().seq, 3);
+        q.close();
+        assert!(q.push_all(vec![job(0, 9)]).is_err());
     }
 
     #[test]

@@ -43,6 +43,7 @@ fn measured(
         hierarchy_cache: None,
         degraded: false,
         attempts: 1,
+        remap: None,
     }
 }
 

@@ -311,6 +311,18 @@ impl MapSpec {
             _ => None,
         }
     }
+
+    /// Float option lookup (`remap.max_region_frac = 0.4`, …); unset or
+    /// unparsable values read as `None`.
+    pub fn opt_f64(&self, key: &str) -> Option<f64> {
+        self.options.get(key).and_then(|s| s.parse::<f64>().ok()).filter(|v| v.is_finite())
+    }
+
+    /// Integer option lookup (`remap.halo = 2`, …); unset or unparsable
+    /// values read as `None`.
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.options.get(key).and_then(|s| s.parse::<usize>().ok())
+    }
 }
 
 #[cfg(test)]
@@ -332,6 +344,11 @@ mod tests {
         assert_eq!(spec.parse_hierarchy().unwrap().k(), 64);
         assert_eq!(spec.opt_bool("adaptive"), Some(false));
         assert!(spec.polish);
+        let spec = spec.option("remap.halo", "2").option("remap.max_region_frac", "0.4");
+        assert_eq!(spec.opt_usize("remap.halo"), Some(2));
+        assert_eq!(spec.opt_f64("remap.max_region_frac"), Some(0.4));
+        assert_eq!(spec.opt_usize("remap.max_region_frac"), None);
+        assert_eq!(spec.opt_f64("missing"), None);
     }
 
     #[test]

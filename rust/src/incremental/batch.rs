@@ -1,0 +1,50 @@
+//! Batched job submission: compatibility rules and drain limits.
+//!
+//! `Engine::submit_batch` enqueues a group of specs as one unit (one
+//! queue lock, consecutive sequence numbers, a shared batch id). When an
+//! engine worker pops a batched job it greedily drains up to
+//! [`BATCH_DRAIN_MAX`] − 1 more jobs from the queue head that belong to
+//! the **same batch**, target the **same machine** ([`compatible`]) and
+//! are **small** (`n` ≤ [`BATCH_SMALL_N`]), then runs the group in one
+//! worker pass — amortizing condvar wakeups, queue traffic and pool
+//! warm-up across jobs instead of paying them per job. Heterogeneous or
+//! large jobs simply fall out of the drain and run as usual; draining
+//! never reorders across priorities because only the queue head is
+//! taken.
+
+use crate::engine::MapSpec;
+
+/// Jobs at or below this vertex count may be drained into a shared
+/// worker pass (small solves are dominated by fixed per-job overhead).
+pub const BATCH_SMALL_N: usize = 65_536;
+
+/// Maximum number of jobs one worker runs per drain (including the job
+/// it popped) — bounds the latency tail a batch can impose on the queue.
+pub const BATCH_DRAIN_MAX: usize = 32;
+
+/// Whether two specs may share one worker pass: identical machine
+/// (topology override, hierarchy and distance strings) and imbalance.
+/// Seeds, algorithms and solver options may differ — they don't change
+/// the machine the pass maps onto.
+pub fn compatible(a: &MapSpec, b: &MapSpec) -> bool {
+    a.topology == b.topology
+        && a.hierarchy == b.hierarchy
+        && a.distance == b.distance
+        && a.eps == b.eps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compatibility_is_machine_scoped() {
+        let a = MapSpec::named("x").hierarchy("2:2").distance("1:10");
+        let b = a.clone().seed(9);
+        assert!(compatible(&a, &b), "seeds may differ");
+        assert!(!compatible(&a, &a.clone().hierarchy("4:2")));
+        assert!(!compatible(&a, &a.clone().distance("1:20")));
+        assert!(!compatible(&a, &a.clone().eps(0.1)));
+        assert!(!compatible(&a, &a.clone().topology_spec("torus:2x2")));
+    }
+}

@@ -1,0 +1,27 @@
+//! Incremental remapping & batched submission.
+//!
+//! Serving sustained traffic means most jobs arrive against a graph the
+//! engine has already mapped, usually with only a small delta since the
+//! last request. This subsystem turns that observation into latency:
+//!
+//! * [`patch`] — [`GraphPatch`]: delta edge/vertex updates applied to a
+//!   pinned session graph (`graph patch name=… ops=…` on the wire),
+//!   producing a new validated graph version without re-uploading.
+//! * [`remap`] — [`Remapper`]: keeps the last mapping per session graph
+//!   and plans **warm** restarts (one Jet refinement pass seeded from
+//!   the previous mapping, arXiv 2107.02539) versus **cold** full
+//!   solves, gated by the halo-expanded affected region; plus
+//!   [`level_validity_mask`], which lets the engine's hierarchy cache
+//!   keep the coarse levels a patch provably did not change
+//!   (arXiv 2001.07134).
+//! * [`batch`] — compatibility rules and drain limits for
+//!   `Engine::submit_batch`, which packs many small same-machine jobs
+//!   into one worker pass.
+
+pub mod batch;
+pub mod patch;
+pub mod remap;
+
+pub use batch::{compatible, BATCH_DRAIN_MAX, BATCH_SMALL_N};
+pub use patch::{fingerprint, Applied, GraphPatch, PatchError, PatchOp, PatchSummary};
+pub use remap::{halo_region, level_validity_mask, warm_refine, RemapKind, RemapPlan, Remapper};

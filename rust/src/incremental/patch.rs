@@ -1,0 +1,543 @@
+//! Graph patches: delta updates to a pinned session graph.
+//!
+//! A [`GraphPatch`] is an ordered list of [`PatchOp`]s parsed from the
+//! wire grammar (comma-separated, colon-delimited fields):
+//!
+//! | op           | meaning                                              |
+//! |--------------|------------------------------------------------------|
+//! | `ae:u:v:w`   | add undirected edge `{u,v}` with weight `w`          |
+//! | `re:u:v`     | remove edge `{u,v}`                                  |
+//! | `ew:u:v:w`   | set the weight of existing edge `{u,v}` to `w`       |
+//! | `vw:v:w`     | set the weight of vertex `v` to `w`                  |
+//! | `av:w`       | append an isolated vertex (id `n`) with weight `w`   |
+//! | `rv:v`       | remove isolated vertex `v` (ids above shift down)    |
+//!
+//! # Invariants
+//!
+//! * Ops apply **sequentially**; each op sees the graph produced by the
+//!   previous one (so `av:1,ae:0:<n>:1.0` is well-formed).
+//! * The patched graph satisfies every [`CsrGraph`] invariant: edges
+//!   stored twice, adjacency strictly sorted, symmetric weights, no
+//!   self-loops. Applying a patch and rebuilding the same edge set from
+//!   scratch produce byte-identical CSR arrays (see [`fingerprint`] and
+//!   the property test in `tests/incremental.rs`).
+//! * Edge weights must be finite and positive; vertex weights must be
+//!   non-negative. `ae` on an existing edge, `re`/`ew` on a missing one,
+//!   and `rv` on a non-isolated vertex are errors — a patch either
+//!   applies completely or not at all (apply works on a copy).
+//! * Weights-only patches (`ew`/`vw` ops exclusively) take a fast path
+//!   that clones the CSR arrays and edits weights in place — no rebuild
+//!   and no re-sort. (`CsrGraph` owns its buffers, so "structural
+//!   sharing" here means skipping the rebuild, not aliasing memory.)
+
+use crate::graph::CsrGraph;
+use crate::{EWeight, VWeight, Vertex};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// One delta operation (see the module docs for the wire grammar).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PatchOp {
+    /// `ae:u:v:w` — add undirected edge `{u,v}` (must not exist).
+    AddEdge { u: Vertex, v: Vertex, w: EWeight },
+    /// `re:u:v` — remove edge `{u,v}` (must exist).
+    RemoveEdge { u: Vertex, v: Vertex },
+    /// `ew:u:v:w` — set the weight of existing edge `{u,v}`.
+    SetEdgeWeight { u: Vertex, v: Vertex, w: EWeight },
+    /// `vw:v:w` — set the weight of vertex `v`.
+    SetVertexWeight { v: Vertex, w: VWeight },
+    /// `av:w` — append an isolated vertex with weight `w`; its id is the
+    /// current `n`.
+    AddVertex { w: VWeight },
+    /// `rv:v` — remove vertex `v`, which must be isolated; every id
+    /// above `v` shifts down by one.
+    RemoveVertex { v: Vertex },
+}
+
+impl PatchOp {
+    /// Structural vertex-set change (`av`/`rv`) or vertex reweight —
+    /// anything that changes `n` or total vertex weight. These force a
+    /// cold remap and invalidate every cached hierarchy level (coarse
+    /// vertex weights, and thus `L_max`, change).
+    pub fn is_vertex_op(&self) -> bool {
+        matches!(
+            self,
+            PatchOp::SetVertexWeight { .. } | PatchOp::AddVertex { .. } | PatchOp::RemoveVertex { .. }
+        )
+    }
+
+    /// True for ops that keep the adjacency structure (`ew`/`vw`).
+    pub fn is_weight_only(&self) -> bool {
+        matches!(self, PatchOp::SetEdgeWeight { .. } | PatchOp::SetVertexWeight { .. })
+    }
+}
+
+/// An ordered sequence of [`PatchOp`]s (the module docs give the wire
+/// grammar and the apply invariants).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphPatch {
+    pub ops: Vec<PatchOp>,
+}
+
+/// The result of applying a patch: the new graph plus what the remapper
+/// needs to plan a warm start.
+pub struct Applied {
+    /// The patched graph (validated invariants).
+    pub graph: CsrGraph,
+    /// Endpoints touched by the patch, in **new** vertex ids, sorted and
+    /// deduplicated. Seed set for the halo region.
+    pub touched: Vec<Vertex>,
+    /// Whether any op changed the vertex set or a vertex weight.
+    pub vertex_ops: bool,
+    /// Whether every op was `ew`/`vw` (fast path; adjacency unchanged).
+    pub weights_only: bool,
+}
+
+/// What `Engine::patch_graph` reports back to the wire layer.
+#[derive(Clone, Debug)]
+pub struct PatchSummary {
+    pub n: usize,
+    pub m: usize,
+    /// New session version of the pinned graph.
+    pub version: u64,
+    /// Number of touched vertices (new ids).
+    pub touched: usize,
+    /// Number of ops applied.
+    pub ops: usize,
+}
+
+/// Typed patch failure, mapped to wire error codes by the coordinator
+/// (`unknown_graph` / `patch`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PatchError {
+    /// No pinned session graph under that name.
+    UnknownGraph(String),
+    /// Grammar or apply error (out-of-range vertex, duplicate edge, …).
+    Invalid(String),
+}
+
+impl fmt::Display for PatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PatchError::UnknownGraph(name) => write!(f, "unknown session graph `{name}`"),
+            PatchError::Invalid(msg) => write!(f, "invalid patch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PatchError {}
+
+fn parse_vertex(s: &str, op: &str) -> Result<Vertex, String> {
+    s.parse::<Vertex>().map_err(|_| format!("{op}: bad vertex id `{s}`"))
+}
+
+fn parse_eweight(s: &str, op: &str) -> Result<EWeight, String> {
+    let w = s.parse::<EWeight>().map_err(|_| format!("{op}: bad edge weight `{s}`"))?;
+    if !w.is_finite() || w <= 0.0 {
+        return Err(format!("{op}: edge weight must be finite and positive, got `{s}`"));
+    }
+    Ok(w)
+}
+
+fn parse_vweight(s: &str, op: &str) -> Result<VWeight, String> {
+    let w = s.parse::<VWeight>().map_err(|_| format!("{op}: bad vertex weight `{s}`"))?;
+    if w < 0 {
+        return Err(format!("{op}: vertex weight must be non-negative, got `{s}`"));
+    }
+    Ok(w)
+}
+
+impl GraphPatch {
+    /// Parse the wire grammar: comma-separated ops, colon-delimited
+    /// fields (`ae:0:5:1.5,re:2:3,vw:7:4`). Empty input is an error.
+    pub fn parse(s: &str) -> Result<GraphPatch, String> {
+        let mut ops = Vec::new();
+        for raw in s.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = raw.split(':').collect();
+            let op = match fields.as_slice() {
+                ["ae", u, v, w] => PatchOp::AddEdge {
+                    u: parse_vertex(u, "ae")?,
+                    v: parse_vertex(v, "ae")?,
+                    w: parse_eweight(w, "ae")?,
+                },
+                ["re", u, v] => {
+                    PatchOp::RemoveEdge { u: parse_vertex(u, "re")?, v: parse_vertex(v, "re")? }
+                }
+                ["ew", u, v, w] => PatchOp::SetEdgeWeight {
+                    u: parse_vertex(u, "ew")?,
+                    v: parse_vertex(v, "ew")?,
+                    w: parse_eweight(w, "ew")?,
+                },
+                ["vw", v, w] => PatchOp::SetVertexWeight {
+                    v: parse_vertex(v, "vw")?,
+                    w: parse_vweight(w, "vw")?,
+                },
+                ["av", w] => PatchOp::AddVertex { w: parse_vweight(w, "av")? },
+                ["rv", v] => PatchOp::RemoveVertex { v: parse_vertex(v, "rv")? },
+                [tag, ..] => return Err(format!("unknown patch op `{tag}` in `{raw}`")),
+                [] => unreachable!("split yields at least one field"),
+            };
+            if let PatchOp::AddEdge { u, v, .. } | PatchOp::SetEdgeWeight { u, v, .. } = op {
+                if u == v {
+                    return Err(format!("self loop `{raw}` not allowed"));
+                }
+            }
+            ops.push(op);
+        }
+        if ops.is_empty() {
+            return Err("empty patch".into());
+        }
+        Ok(GraphPatch { ops })
+    }
+
+    /// Whether any op changes the vertex set or a vertex weight (forces
+    /// a cold remap; see [`PatchOp::is_vertex_op`]).
+    pub fn has_vertex_ops(&self) -> bool {
+        self.ops.iter().any(|op| op.is_vertex_op())
+    }
+
+    /// Whether every op keeps the adjacency structure intact.
+    pub fn is_weights_only(&self) -> bool {
+        self.ops.iter().all(|op| op.is_weight_only())
+    }
+
+    /// Edge endpoints named by edge ops (`ae`/`re`/`ew`), in patch order.
+    pub fn edge_pairs(&self) -> Vec<(Vertex, Vertex)> {
+        self.ops
+            .iter()
+            .filter_map(|op| match *op {
+                PatchOp::AddEdge { u, v, .. }
+                | PatchOp::RemoveEdge { u, v }
+                | PatchOp::SetEdgeWeight { u, v, .. } => Some((u, v)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Apply the patch to `g`, producing a new validated graph. `g` is
+    /// untouched; an error leaves no side effects (all-or-nothing).
+    pub fn apply(&self, g: &CsrGraph) -> Result<Applied, String> {
+        if self.is_weights_only() {
+            return self.apply_weights_only(g);
+        }
+
+        // General path: explode into per-vertex adjacency vectors (kept
+        // sorted by binary-search insertion/removal), apply sequentially,
+        // reassemble CSR.
+        let mut adjs: Vec<Vec<(Vertex, EWeight)>> = (0..g.n())
+            .map(|v| {
+                let (nbrs, ws) = g.neighbors_w(v as Vertex);
+                nbrs.iter().copied().zip(ws.iter().copied()).collect()
+            })
+            .collect();
+        let mut vw = g.vw.clone();
+        let mut touched: BTreeSet<Vertex> = BTreeSet::new();
+
+        for op in &self.ops {
+            match *op {
+                PatchOp::AddEdge { u, v, w } => {
+                    check_range(u, vw.len(), "ae")?;
+                    check_range(v, vw.len(), "ae")?;
+                    let iu = match adjs[u as usize].binary_search_by_key(&v, |e| e.0) {
+                        Ok(_) => return Err(format!("ae:{u}:{v}: edge already exists")),
+                        Err(i) => i,
+                    };
+                    adjs[u as usize].insert(iu, (v, w));
+                    let iv = adjs[v as usize]
+                        .binary_search_by_key(&u, |e| e.0)
+                        .expect_err("reverse slot mirrors forward");
+                    adjs[v as usize].insert(iv, (u, w));
+                    touched.insert(u);
+                    touched.insert(v);
+                }
+                PatchOp::RemoveEdge { u, v } => {
+                    check_range(u, vw.len(), "re")?;
+                    check_range(v, vw.len(), "re")?;
+                    let iu = adjs[u as usize]
+                        .binary_search_by_key(&v, |e| e.0)
+                        .map_err(|_| format!("re:{u}:{v}: no such edge"))?;
+                    adjs[u as usize].remove(iu);
+                    let iv = adjs[v as usize]
+                        .binary_search_by_key(&u, |e| e.0)
+                        .expect("reverse slot mirrors forward");
+                    adjs[v as usize].remove(iv);
+                    touched.insert(u);
+                    touched.insert(v);
+                }
+                PatchOp::SetEdgeWeight { u, v, w } => {
+                    check_range(u, vw.len(), "ew")?;
+                    check_range(v, vw.len(), "ew")?;
+                    let iu = adjs[u as usize]
+                        .binary_search_by_key(&v, |e| e.0)
+                        .map_err(|_| format!("ew:{u}:{v}: no such edge"))?;
+                    adjs[u as usize][iu].1 = w;
+                    let iv = adjs[v as usize]
+                        .binary_search_by_key(&u, |e| e.0)
+                        .expect("reverse slot mirrors forward");
+                    adjs[v as usize][iv].1 = w;
+                    touched.insert(u);
+                    touched.insert(v);
+                }
+                PatchOp::SetVertexWeight { v, w } => {
+                    check_range(v, vw.len(), "vw")?;
+                    vw[v as usize] = w;
+                    touched.insert(v);
+                }
+                PatchOp::AddVertex { w } => {
+                    let id = vw.len() as Vertex;
+                    vw.push(w);
+                    adjs.push(Vec::new());
+                    touched.insert(id);
+                }
+                PatchOp::RemoveVertex { v } => {
+                    check_range(v, vw.len(), "rv")?;
+                    if !adjs[v as usize].is_empty() {
+                        return Err(format!("rv:{v}: vertex is not isolated"));
+                    }
+                    adjs.remove(v as usize);
+                    vw.remove(v as usize);
+                    // Ids above v shift down, everywhere.
+                    for list in adjs.iter_mut() {
+                        for e in list.iter_mut() {
+                            if e.0 > v {
+                                e.0 -= 1;
+                            }
+                        }
+                    }
+                    touched = touched
+                        .into_iter()
+                        .filter(|&t| t != v)
+                        .map(|t| if t > v { t - 1 } else { t })
+                        .collect();
+                }
+            }
+        }
+
+        // Reassemble CSR. Adjacency lists stayed sorted throughout.
+        let n = vw.len();
+        let mut xadj = vec![0u32; n + 1];
+        for v in 0..n {
+            xadj[v + 1] = xadj[v] + adjs[v].len() as u32;
+        }
+        let total = xadj[n] as usize;
+        let mut adj = Vec::with_capacity(total);
+        let mut ew = Vec::with_capacity(total);
+        for list in &adjs {
+            for &(t, w) in list {
+                adj.push(t);
+                ew.push(w);
+            }
+        }
+        let graph = CsrGraph { xadj, adj, ew, vw };
+        debug_assert_eq!(graph.validate(), Ok(()));
+        Ok(Applied {
+            graph,
+            touched: touched.into_iter().collect(),
+            vertex_ops: self.has_vertex_ops(),
+            weights_only: false,
+        })
+    }
+
+    /// Fast path for `ew`/`vw`-only patches: adjacency arrays are cloned
+    /// verbatim and weights edited in place (both directed slots).
+    fn apply_weights_only(&self, g: &CsrGraph) -> Result<Applied, String> {
+        let mut out = g.clone();
+        let mut touched: BTreeSet<Vertex> = BTreeSet::new();
+        let mut vertex_ops = false;
+        for op in &self.ops {
+            match *op {
+                PatchOp::SetEdgeWeight { u, v, w } => {
+                    check_range(u, out.n(), "ew")?;
+                    check_range(v, out.n(), "ew")?;
+                    set_slot(&mut out, u, v, w).ok_or(format!("ew:{u}:{v}: no such edge"))?;
+                    set_slot(&mut out, v, u, w).expect("reverse slot mirrors forward");
+                    touched.insert(u);
+                    touched.insert(v);
+                }
+                PatchOp::SetVertexWeight { v, w } => {
+                    check_range(v, out.n(), "vw")?;
+                    out.vw[v as usize] = w;
+                    touched.insert(v);
+                    vertex_ops = true;
+                }
+                _ => unreachable!("weights-only path sees only ew/vw"),
+            }
+        }
+        debug_assert_eq!(out.validate(), Ok(()));
+        Ok(Applied {
+            graph: out,
+            touched: touched.into_iter().collect(),
+            vertex_ops,
+            weights_only: true,
+        })
+    }
+}
+
+fn check_range(v: Vertex, n: usize, op: &str) -> Result<(), String> {
+    if (v as usize) < n {
+        Ok(())
+    } else {
+        Err(format!("{op}: vertex {v} out of range (n={n})"))
+    }
+}
+
+/// Set the weight of directed slot `u -> v`; `None` if the edge is absent.
+fn set_slot(g: &mut CsrGraph, u: Vertex, v: Vertex, w: EWeight) -> Option<()> {
+    let base = g.xadj[u as usize] as usize;
+    let i = g.neighbors(u).binary_search(&v).ok()?;
+    g.ew[base + i] = w;
+    Some(())
+}
+
+/// Order-sensitive FNV-1a fingerprint of the full CSR representation
+/// (`n`, offsets, targets, edge-weight bits, vertex weights). Two graphs
+/// with identical CSR arrays — e.g. a patched graph and a from-scratch
+/// rebuild of the same edge set — fingerprint identically.
+pub fn fingerprint(g: &CsrGraph) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    fn mix(h: &mut u64, x: u64) {
+        for b in x.to_le_bytes() {
+            *h = (*h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    mix(&mut h, g.n() as u64);
+    for &x in &g.xadj {
+        mix(&mut h, x as u64);
+    }
+    for &t in &g.adj {
+        mix(&mut h, t as u64);
+    }
+    for &w in &g.ew {
+        mix(&mut h, w.to_bits());
+    }
+    for &w in &g.vw {
+        mix(&mut h, w as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+    use crate::graph::gen;
+
+    fn ring4() -> CsrGraph {
+        from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 1.0)], None)
+    }
+
+    #[test]
+    fn parse_roundtrips_every_op() {
+        let p = GraphPatch::parse("ae:0:5:1.5,re:2:3,ew:1:4:2.25,vw:7:4,av:2,rv:6").unwrap();
+        assert_eq!(p.ops.len(), 6);
+        assert_eq!(p.ops[0], PatchOp::AddEdge { u: 0, v: 5, w: 1.5 });
+        assert_eq!(p.ops[3], PatchOp::SetVertexWeight { v: 7, w: 4 });
+        assert!(p.has_vertex_ops());
+        assert!(!p.is_weights_only());
+        assert_eq!(p.edge_pairs(), vec![(0, 5), (2, 3), (1, 4)]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(GraphPatch::parse("").is_err());
+        assert!(GraphPatch::parse("xx:1:2").is_err());
+        assert!(GraphPatch::parse("ae:1:2").is_err(), "missing weight");
+        assert!(GraphPatch::parse("ae:1:1:1.0").is_err(), "self loop");
+        assert!(GraphPatch::parse("ae:0:1:-2.0").is_err(), "negative edge weight");
+        assert!(GraphPatch::parse("ae:0:1:nan").is_err(), "non-finite weight");
+        assert!(GraphPatch::parse("vw:0:-1").is_err(), "negative vertex weight");
+        assert!(GraphPatch::parse("ae:0:x:1.0").is_err(), "bad vertex");
+    }
+
+    #[test]
+    fn add_and_remove_edges() {
+        let g = ring4();
+        let p = GraphPatch::parse("ae:0:2:2.5,re:1:2").unwrap();
+        let a = p.apply(&g).unwrap();
+        a.graph.validate().unwrap();
+        assert_eq!(a.graph.m(), 4);
+        assert_eq!(a.graph.find_edge(0, 2), Some(2.5));
+        assert_eq!(a.graph.find_edge(1, 2), None);
+        assert_eq!(a.touched, vec![0, 1, 2]);
+        assert!(!a.vertex_ops);
+    }
+
+    #[test]
+    fn weights_only_fast_path_keeps_structure() {
+        let g = ring4();
+        let p = GraphPatch::parse("ew:0:1:9.0,vw:3:5").unwrap();
+        let a = p.apply(&g).unwrap();
+        assert!(a.weights_only);
+        assert!(a.vertex_ops, "vw counts as a vertex op");
+        assert_eq!(a.graph.xadj, g.xadj);
+        assert_eq!(a.graph.adj, g.adj);
+        assert_eq!(a.graph.find_edge(0, 1), Some(9.0));
+        assert_eq!(a.graph.find_edge(1, 0), Some(9.0));
+        assert_eq!(a.graph.vw[3], 5);
+        a.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn vertex_add_remove_shifts_ids() {
+        let g = ring4();
+        // Append vertex 4, wire it to 0, then drop vertex 2 (must be
+        // isolated first).
+        let p = GraphPatch::parse("av:3,ae:0:4:1.0,re:1:2,re:2:3,rv:2").unwrap();
+        let a = p.apply(&g).unwrap();
+        a.graph.validate().unwrap();
+        assert_eq!(a.graph.n(), 4);
+        // Old ids 3, 4 became 2, 3.
+        assert_eq!(a.graph.vw, vec![1, 1, 1, 3]);
+        assert_eq!(a.graph.find_edge(2, 0), Some(1.0), "old edge 3-0");
+        assert_eq!(a.graph.find_edge(0, 3), Some(1.0), "old edge 0-4");
+        assert!(a.vertex_ops);
+    }
+
+    #[test]
+    fn apply_errors_are_total() {
+        let g = ring4();
+        for bad in ["ae:0:1:1.0", "re:0:2", "ew:0:2:1.0", "rv:1", "ae:0:9:1.0", "vw:9:1"] {
+            let p = GraphPatch::parse(bad).unwrap();
+            assert!(p.apply(&g).is_err(), "`{bad}` must fail");
+        }
+    }
+
+    #[test]
+    fn patched_matches_from_scratch_rebuild() {
+        let g = gen::rgg(300, 0.1, 11);
+        let (u, v) = (0u32, (g.n() - 1) as u32);
+        assert_eq!(g.find_edge(u, v), None, "rgg endpoints far apart");
+        let first = g.neighbors(5)[0];
+        let p = GraphPatch::parse(&format!("ae:{u}:{v}:1.25,re:5:{first}")).unwrap();
+        let a = p.apply(&g).unwrap();
+        // Rebuild from scratch with the same edge set.
+        let mut edges = Vec::new();
+        for x in 0..g.n() as Vertex {
+            let (nbrs, ws) = g.neighbors_w(x);
+            for (&y, &w) in nbrs.iter().zip(ws) {
+                if x < y && !(x == 5 && y == first) && !(x == first && y == 5) {
+                    edges.push((x, y, w));
+                }
+            }
+        }
+        edges.push((u, v, 1.25));
+        let rebuilt = from_edges(g.n(), &edges, Some(g.vw.clone()));
+        assert_eq!(fingerprint(&a.graph), fingerprint(&rebuilt));
+        assert_eq!(a.graph.xadj, rebuilt.xadj);
+        assert_eq!(a.graph.adj, rebuilt.adj);
+    }
+
+    #[test]
+    fn fingerprint_is_weight_sensitive() {
+        let g = ring4();
+        let h = GraphPatch::parse("ew:0:1:2.0").unwrap().apply(&g).unwrap().graph;
+        assert_ne!(fingerprint(&g), fingerprint(&h));
+        let same = GraphPatch::parse("ew:0:1:1.0").unwrap().apply(&g).unwrap().graph;
+        assert_eq!(fingerprint(&g), fingerprint(&same));
+    }
+}

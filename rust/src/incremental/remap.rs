@@ -1,0 +1,474 @@
+//! Incremental remapping: warm-start refinement after a graph patch.
+//!
+//! The [`Remapper`] keeps the last mapping produced for each pinned
+//! session graph. When the graph is patched and mapped again, the engine
+//! asks for a [`RemapPlan`]:
+//!
+//! * **Warm** — a prior mapping exists for the same machine/`k`/version
+//!   lineage, the patch kept the vertex set intact, and the affected
+//!   region (touched vertices plus a `remap.halo`-hop halo, default 1)
+//!   covers at most `remap.max_region_frac` of the graph (default 0.25).
+//!   The engine then skips coarsen→initial→uncoarsen entirely and runs
+//!   one Jet refinement pass ([`warm_refine`]) seeded with the previous
+//!   mapping — the re-map-from-warm-start strategy of the dynamic
+//!   process-mapping line (arXiv 2107.02539).
+//! * **Cold** — a remap is pending but the warm conditions fail (first
+//!   map after a patch with no prior mapping, vertex-set change, region
+//!   too large, different machine): full multilevel solve.
+//! * **Skip** — nothing pending (no patch since the last map): the plain
+//!   solve path, untouched.
+//!
+//! # Invariants
+//!
+//! * [`Remapper::record`] stores only full-length mappings (`len == n`);
+//!   the engine records after polish so the warm start always seeds from
+//!   the best known mapping.
+//! * [`Remapper::note_patch`] accumulates touched vertices across
+//!   multiple patches until the next map; a vertex-set change poisons
+//!   the state (forced cold) because stored mappings are positional.
+//! * [`Remapper::plan`] never mutates state: a cancelled or failed warm
+//!   job leaves the pending patch intact for the next attempt.
+//! * Warm results are exact, not approximations: `RefineStats::
+//!   final_objective` is a full exact reduction, and the mapping is
+//!   rebalanced by Jet's weak/strong rebalancer if the patch broke the
+//!   balance constraint.
+//!
+//! Hierarchy-level reuse rides along via [`level_validity_mask`]: a
+//! patch whose edge ops are all intra-cluster at level `l` leaves the
+//! level-`l..` coarse graphs byte-identical (contraction drops
+//! intra-cluster edges as self-loops), so the engine re-keys the cached
+//! hierarchy to the patched graph instead of discarding it — the
+//! level-restricted reuse argument of the hierarchical-mapping line
+//! (arXiv 2001.07134).
+
+use super::patch::GraphPatch;
+use crate::cancel::CancelToken;
+use crate::graph::{CsrGraph, EdgeList};
+use crate::multilevel::CoarseHierarchy;
+use crate::par::Pool;
+use crate::refine::jet_loop::{jet_refine_with, JetConfig, RefineStats};
+use crate::refine::{Objective, RefineWorkspace};
+use crate::topology::Machine;
+use crate::{Block, Vertex};
+use std::collections::HashMap;
+
+/// How a job's mapping was produced relative to the session history.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemapKind {
+    /// Warm-start refinement from the previous mapping.
+    Warm,
+    /// Pending remap fell back to a full multilevel solve.
+    Cold,
+}
+
+impl RemapKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RemapKind::Warm => "warm",
+            RemapKind::Cold => "cold",
+        }
+    }
+}
+
+/// The engine's decision for one job (see the module docs).
+#[derive(Clone, Debug)]
+pub enum RemapPlan {
+    /// No remap pending — plain solve path.
+    Skip,
+    /// Remap pending, warm conditions failed — full solve, tagged cold.
+    Cold,
+    /// Warm-start refinement from `start` (full previous mapping);
+    /// `region` is the halo-expanded affected-vertex count that passed
+    /// the threshold.
+    Warm { start: Vec<Block>, region: usize },
+}
+
+/// Per-session-graph remap state.
+struct RemapState {
+    /// Session version the state was recorded/updated against.
+    version: u64,
+    n: usize,
+    k: usize,
+    /// Canonical machine spec string ([`Machine::spec_string`]).
+    machine_spec: String,
+    /// Last full mapping; empty = poisoned (vertex-set change or a
+    /// patch landed before any map).
+    mapping: Vec<Block>,
+    /// Touched vertices accumulated since the last map (sorted, dedup).
+    touched: Vec<Vertex>,
+    /// Whether a patch landed since the last map.
+    pending: bool,
+}
+
+/// Keeps the last mapping per pinned session graph and plans warm
+/// restarts (module docs have the full contract).
+#[derive(Default)]
+pub struct Remapper {
+    states: HashMap<String, RemapState>,
+}
+
+impl Remapper {
+    pub fn new() -> Self {
+        Remapper::default()
+    }
+
+    /// Record the mapping a finished job produced for session graph
+    /// `name` at `version`. Clears any pending patch state. Ignores
+    /// truncated mappings (`len != n`).
+    pub fn record(
+        &mut self,
+        name: &str,
+        version: u64,
+        n: usize,
+        k: usize,
+        machine_spec: &str,
+        mapping: &[Block],
+    ) {
+        if mapping.len() != n {
+            return;
+        }
+        self.states.insert(
+            name.to_string(),
+            RemapState {
+                version,
+                n,
+                k,
+                machine_spec: machine_spec.to_string(),
+                mapping: mapping.to_vec(),
+                touched: Vec::new(),
+                pending: false,
+            },
+        );
+    }
+
+    /// Note a patch on session graph `name`: bump to `new_version`,
+    /// accumulate `touched` (new-id space), and poison the stored
+    /// mapping when the vertex set changed (`vertex_ops` or a new `n`).
+    pub fn note_patch(
+        &mut self,
+        name: &str,
+        new_version: u64,
+        new_n: usize,
+        touched: &[Vertex],
+        vertex_ops: bool,
+    ) {
+        let state = self.states.entry(name.to_string()).or_insert_with(|| RemapState {
+            version: new_version,
+            n: new_n,
+            k: 0,
+            machine_spec: String::new(),
+            mapping: Vec::new(),
+            touched: Vec::new(),
+            pending: false,
+        });
+        if vertex_ops || state.n != new_n {
+            state.mapping.clear();
+        }
+        state.version = new_version;
+        state.n = new_n;
+        state.pending = true;
+        state.touched.extend_from_slice(touched);
+        state.touched.sort_unstable();
+        state.touched.dedup();
+    }
+
+    /// Drop all state for `name` (graph replaced via `graph put`, or
+    /// dropped).
+    pub fn forget(&mut self, name: &str) {
+        self.states.remove(name);
+    }
+
+    /// Plan the next job on session graph `name` at store `version`.
+    /// Read-only: a cancelled/failed warm attempt can re-plan later.
+    pub fn plan(
+        &self,
+        name: &str,
+        version: u64,
+        g: &CsrGraph,
+        k: usize,
+        machine_spec: &str,
+        halo: usize,
+        max_region_frac: f64,
+    ) -> RemapPlan {
+        let Some(state) = self.states.get(name) else {
+            return RemapPlan::Skip;
+        };
+        if !state.pending {
+            return RemapPlan::Skip;
+        }
+        if state.version != version
+            || state.n != g.n()
+            || state.mapping.len() != g.n()
+            || state.k != k
+            || state.machine_spec != machine_spec
+        {
+            return RemapPlan::Cold;
+        }
+        let region = halo_region(g, &state.touched, halo);
+        if g.n() == 0 || region.len() as f64 > max_region_frac * g.n() as f64 {
+            return RemapPlan::Cold;
+        }
+        RemapPlan::Warm { start: state.mapping.clone(), region: region.len() }
+    }
+}
+
+/// The affected region: `touched` plus every vertex within `hops` BFS
+/// hops of it (out-of-range seeds are ignored). Sorted, deduplicated.
+pub fn halo_region(g: &CsrGraph, touched: &[Vertex], hops: usize) -> Vec<Vertex> {
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut frontier: Vec<Vertex> = Vec::new();
+    for &v in touched {
+        if (v as usize) < n && !seen[v as usize] {
+            seen[v as usize] = true;
+            frontier.push(v);
+        }
+    }
+    let mut region = frontier.clone();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.neighbors(v) {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    next.push(u);
+                }
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        region.extend_from_slice(&next);
+        frontier = next;
+    }
+    region.sort_unstable();
+    region
+}
+
+/// Which levels of a cached hierarchy stay *exact* after `patch` on its
+/// finest graph: bit `l` set ⇔ the level-`l` coarse graph (and every map
+/// above it) is byte-identical on the patched graph. Bit 0 (the finest
+/// graph itself) is always clear. Any vertex op clears everything —
+/// coarse vertex weights, and through `L_max` the cache key itself,
+/// change. An edge op is harmless at level `l` iff both endpoints fall
+/// in the same level-`l` cluster (the edge contracts to a dropped
+/// self-loop); validity is therefore upward-closed: once intra-cluster,
+/// always intra-cluster on coarser levels.
+pub fn level_validity_mask(hier: &CoarseHierarchy, patch: &GraphPatch) -> u64 {
+    if patch.has_vertex_ops() {
+        return 0;
+    }
+    let levels = hier.levels();
+    if levels == 0 {
+        return 0;
+    }
+    let n = hier.finest().n();
+    let pairs = patch.edge_pairs();
+    if pairs.iter().any(|&(u, v)| u as usize >= n || v as usize >= n) {
+        return 0;
+    }
+    // comp[v] = cluster of finest vertex v at the current level.
+    let mut comp: Vec<Vertex> = (0..n as Vertex).collect();
+    let top = levels.min(u64::BITS as usize - 1);
+    for lev in 0..top {
+        let map = hier.map(lev);
+        for c in comp.iter_mut() {
+            *c = map[*c as usize];
+        }
+        if pairs.iter().all(|&(u, v)| comp[u as usize] == comp[v as usize]) {
+            let mut mask = 0u64;
+            for l in (lev + 1)..=top {
+                mask |= 1u64 << l;
+            }
+            return mask;
+        }
+    }
+    0
+}
+
+/// One warm Jet refinement pass: build the edge list, seed from `part`
+/// (the previous mapping) and refine toward `J(C, D, Π)` under
+/// `machine`. Replaces the whole coarsen→initial→uncoarsen pipeline on
+/// the warm path; `RefineStats::final_objective` is an exact reduction
+/// of the returned mapping.
+#[allow(clippy::too_many_arguments)]
+pub fn warm_refine(
+    pool: &Pool,
+    g: &CsrGraph,
+    part: &mut Vec<Block>,
+    machine: &Machine,
+    eps: f64,
+    seed: u64,
+    cancel: CancelToken,
+) -> RefineStats {
+    let el = EdgeList::build_par(pool, g);
+    let k = machine.k();
+    let lmax = crate::partition::l_max(g.total_vweight(), k, eps);
+    let mut ws = RefineWorkspace::with_capacity(g.n(), k);
+    let cfg = JetConfig { seed, cancel, ..Default::default() };
+    jet_refine_with(pool, g, &el, part, k, lmax, &Objective::Comm(machine), &cfg, &mut ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::multilevel::{BuildParams, CoarsenConfig};
+    use crate::partition::{comm_cost, is_balanced};
+
+    fn grid() -> CsrGraph {
+        gen::grid2d(20, 20, false)
+    }
+
+    #[test]
+    fn halo_grows_by_hops() {
+        let g = grid();
+        let r0 = halo_region(&g, &[0], 0);
+        assert_eq!(r0, vec![0]);
+        let r1 = halo_region(&g, &[0], 1);
+        assert_eq!(r1.len(), 3, "corner vertex + 2 neighbors");
+        let r2 = halo_region(&g, &[0], 2);
+        assert!(r2.len() > r1.len());
+        // Out-of-range seeds ignored; duplicates deduped.
+        assert_eq!(halo_region(&g, &[0, 0, 9_999_999], 0), vec![0]);
+    }
+
+    #[test]
+    fn plan_states() {
+        let g = grid();
+        let mut r = Remapper::new();
+        let spec = "hier:2:2/1:10";
+        // Nothing known → Skip.
+        assert!(matches!(r.plan("s", 1, &g, 4, spec, 1, 0.25), RemapPlan::Skip));
+        // Mapping recorded, no patch → Skip.
+        r.record("s", 1, g.n(), 4, spec, &vec![0; g.n()]);
+        assert!(matches!(r.plan("s", 1, &g, 4, spec, 1, 0.25), RemapPlan::Skip));
+        // Small patch → Warm with the recorded start.
+        r.note_patch("s", 2, g.n(), &[0, 1], false);
+        match r.plan("s", 2, &g, 4, spec, 1, 0.25) {
+            RemapPlan::Warm { start, region } => {
+                assert_eq!(start.len(), g.n());
+                assert!(region >= 2);
+            }
+            other => panic!("expected warm, got {other:?}"),
+        }
+        // plan() is read-only: still warm on a retry.
+        assert!(matches!(r.plan("s", 2, &g, 4, spec, 1, 0.25), RemapPlan::Warm { .. }));
+        // Version/machine/k mismatches → Cold.
+        assert!(matches!(r.plan("s", 3, &g, 4, spec, 1, 0.25), RemapPlan::Cold));
+        assert!(matches!(r.plan("s", 2, &g, 8, spec, 1, 0.25), RemapPlan::Cold));
+        assert!(matches!(r.plan("s", 2, &g, 4, "torus:2x2", 1, 0.25), RemapPlan::Cold));
+        // Region too large → Cold.
+        let all: Vec<Vertex> = (0..g.n() as Vertex).collect();
+        r.note_patch("s", 3, g.n(), &all, false);
+        assert!(matches!(r.plan("s", 3, &g, 4, spec, 1, 0.25), RemapPlan::Cold));
+        // record() clears pending.
+        r.record("s", 3, g.n(), 4, spec, &vec![0; g.n()]);
+        assert!(matches!(r.plan("s", 3, &g, 4, spec, 1, 0.25), RemapPlan::Skip));
+        // forget() drops everything.
+        r.note_patch("s", 4, g.n(), &[1], false);
+        r.forget("s");
+        assert!(matches!(r.plan("s", 4, &g, 4, spec, 1, 0.25), RemapPlan::Skip));
+    }
+
+    #[test]
+    fn vertex_ops_poison_the_mapping() {
+        let g = grid();
+        let mut r = Remapper::new();
+        let spec = "hier:2:2/1:10";
+        r.record("s", 1, g.n(), 4, spec, &vec![0; g.n()]);
+        r.note_patch("s", 2, g.n(), &[5], true);
+        assert!(matches!(r.plan("s", 2, &g, 4, spec, 1, 0.25), RemapPlan::Cold));
+        // Patch before any map → Cold too.
+        r.forget("s");
+        r.note_patch("s", 1, g.n(), &[5], false);
+        assert!(matches!(r.plan("s", 1, &g, 4, spec, 1, 0.25), RemapPlan::Cold));
+    }
+
+    #[test]
+    fn truncated_mapping_is_not_recorded() {
+        let g = grid();
+        let mut r = Remapper::new();
+        let spec = "hier:2:2/1:10";
+        r.record("s", 1, g.n(), 4, spec, &[0, 1, 2]);
+        r.note_patch("s", 2, g.n(), &[0], false);
+        assert!(matches!(r.plan("s", 2, &g, 4, spec, 1, 0.25), RemapPlan::Cold));
+    }
+
+    #[test]
+    fn validity_mask_tracks_cluster_boundaries() {
+        let g = gen::rgg(2_000, 0.05, 3);
+        let cfg = CoarsenConfig::device();
+        let params = BuildParams { coarsest: 64, lmax: i64::MAX, seed: cfg.salt };
+        let pool = Pool::new(1);
+        let h = CoarseHierarchy::build(
+            &pool,
+            std::sync::Arc::new(g.clone()),
+            &params,
+            &cfg,
+            &CancelToken::new(),
+            None,
+        )
+        .unwrap();
+        assert!(h.levels() >= 2, "need a real hierarchy");
+        // An edge between two vertices merged at level 1 keeps every
+        // level except the finest.
+        let map0 = h.map(0);
+        let mut pair = None;
+        'outer: for v in 0..g.n() as Vertex {
+            for u in (v + 1)..g.n() as Vertex {
+                if map0[v as usize] == map0[u as usize] && g.find_edge(v, u).is_none() {
+                    pair = Some((v, u));
+                    break 'outer;
+                }
+            }
+        }
+        let (v, u) = pair.expect("some cluster has a non-adjacent pair");
+        let p = GraphPatch::parse(&format!("ae:{v}:{u}:1.0")).unwrap();
+        let mask = level_validity_mask(&h, &p);
+        assert_eq!(mask & 1, 0, "finest level never valid");
+        for l in 1..=h.levels().min(63) {
+            assert_ne!(mask & (1 << l), 0, "level {l} should be valid");
+        }
+        // A vertex op invalidates everything.
+        let pv = GraphPatch::parse("vw:0:3").unwrap();
+        assert_eq!(level_validity_mask(&h, &pv), 0);
+        // A cross-cluster edge at every level invalidates everything
+        // (pick endpoints in different coarsest clusters).
+        let mut comp: Vec<Vertex> = (0..g.n() as Vertex).collect();
+        for lev in 0..h.levels() {
+            let m = h.map(lev);
+            for c in comp.iter_mut() {
+                *c = m[*c as usize];
+            }
+        }
+        let a = 0u32;
+        let b = (0..g.n() as u32).find(|&x| comp[x as usize] != comp[0]).unwrap();
+        if g.find_edge(a, b).is_none() {
+            let p2 = GraphPatch::parse(&format!("ae:{a}:{b}:1.0")).unwrap();
+            assert_eq!(level_validity_mask(&h, &p2), 0);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // miri: full jet refinement pass, too slow
+    fn warm_refine_improves_and_balances() {
+        let g = gen::rgg(1_200, 0.06, 5);
+        let m = Machine::hier("2:2", "1:10").unwrap();
+        let k = m.k();
+        let pool = Pool::new(1);
+        // Start from a mediocre but full mapping (striped).
+        let mut part: Vec<Block> = (0..g.n()).map(|v| (v % k) as Block).collect();
+        let before = comm_cost(&g, &part, &m);
+        let stats =
+            warm_refine(&pool, &g, &mut part, &m, 0.03, 1, CancelToken::new());
+        let after = comm_cost(&g, &part, &m);
+        assert!(is_balanced(&g, &part, k, 0.031));
+        assert!(after <= before);
+        assert!(
+            (stats.final_objective - after).abs() <= 1e-6 * after.max(1.0),
+            "reported {} vs recomputed {after}",
+            stats.final_objective
+        );
+    }
+}

@@ -51,6 +51,11 @@
 //!   graph-as-resource sessions) behind a line-oriented TCP protocol —
 //!   and the benchmark harness ([`harness`]) regenerating every paper
 //!   table/figure;
+//! * an **incremental-remapping subsystem** ([`incremental`]): graph
+//!   patches on pinned session graphs, warm-start region refinement
+//!   (`remap=warm`) reusing untouched hierarchy-cache levels, and
+//!   batched job submission that packs small same-machine jobs into one
+//!   worker pass;
 //! * a deterministic **fault-injection plane** ([`fault`]) threaded
 //!   through kernel launch, hierarchy build, graph IO, job pickup and the
 //!   wire, driving the engine's self-healing pipeline (retry with capped
@@ -76,6 +81,7 @@ pub mod engine;
 pub mod fault;
 pub mod graph;
 pub mod harness;
+pub mod incremental;
 pub mod initial;
 pub mod metrics;
 pub mod multilevel;

@@ -221,12 +221,18 @@ fn print_help() {
          serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0] [--cache-cap 64]\n\
                 [--workers 2] [--queue-cap 256] [--max-conns 64] [--max-attempts 1]\n\
                 [--backoff-ms 100] [--read-timeout-ms 120000] [--max-line-len 4194304]\n\
-         client --addr HOST:PORT (--send \"CMD\" | --script \"CMD; CMD; …\") [--timeout-ms 60000]\n\
+         client --addr HOST:PORT (--send \"CMD\" | --script \"CMD; CMD; …\" | --batch FILE)\n\
+                [--timeout-ms 60000]\n\
          \n\
          The serve wire protocol is an async job API: `submit …` returns `ok job=<id>`\n\
          immediately; poll with `status`/`wait`/`result`/`cancel`/`jobs`; upload task\n\
          graphs once with `graph put name=… path=…|csr=…` and map them by `graph=<name>`\n\
-         (full grammar in README \"Service & job API\"). --max-attempts/--backoff-ms set\n\
+         (full grammar in README \"Service & job API\"). `graph patch name=… ops=…` edits\n\
+         a pinned graph in place; the next map over it warm-starts from the previous\n\
+         mapping (`remap=warm`, README \"Incremental remapping & batching\").\n\
+         `client --batch FILE` submits one job per line of FILE (submit body syntax,\n\
+         `#` comments) as a single all-or-nothing batch and waits for it to retire.\n\
+         --max-attempts/--backoff-ms set\n\
          the default retry policy (per-job `max_attempts=`/`backoff_ms=` keys override);\n\
          exhausted retries degrade through the solver fallback chain instead of failing\n\
          (README \"Fault tolerance & degradation\").\n\
@@ -460,25 +466,57 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Drive a running coordinator: send protocol lines, print each reply.
 /// `--send` sends one command; `--script` sends several, `;`-separated,
 /// over one connection (so job ids from `submit` can be awaited by later
-/// commands in the same script via a shell loop). Protocol-level `err`
-/// replies are printed, not fatal — transport failures are.
+/// commands in the same script via a shell loop); `--batch FILE` turns
+/// one submit body per line of FILE into a single `batch submit` (all-
+/// or-nothing admission) and follows it with `batch wait`. Protocol-
+/// level `err` replies are printed, not fatal — transport failures are.
 fn cmd_client(args: &Args) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
     let addr = args.required("addr")?;
-    let commands: Vec<String> = if let Some(cmd) = args.get("send") {
+    let batch_mode = args.get("batch").is_some();
+    let commands: Vec<String> = if let Some(path) = args.get("batch") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read batch file {path}"))?;
+        let jobs: Vec<String> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(heipa::coordinator::protocol::escape_value)
+            .collect();
+        if jobs.is_empty() {
+            bail!("batch file {path} has no jobs (one `key=value …` submit body per line)");
+        }
+        vec![format!("batch submit jobs={}", jobs.join(";"))]
+    } else if let Some(cmd) = args.get("send") {
         vec![cmd.to_string()]
     } else if let Some(script) = args.get("script") {
         script.split(';').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect()
     } else {
-        bail!("client needs --send \"CMD\" or --script \"CMD; CMD; …\"");
+        bail!("client needs --send \"CMD\", --script \"CMD; CMD; …\" or --batch FILE");
     };
     let timeout_ms: u64 = args.get_or("timeout-ms", "60000").parse().context("--timeout-ms")?;
     let mut conn = std::net::TcpStream::connect(addr)
         .with_context(|| format!("connect to coordinator at {addr}"))?;
     conn.set_read_timeout(Some(std::time::Duration::from_millis(timeout_ms.max(1))))?;
     let mut reader = BufReader::new(conn.try_clone()?);
+    let mut last_reply = String::new();
     for cmd in commands {
         writeln!(conn, "{cmd}")?;
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).context("read reply (timeout?)")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        print!("{reply}");
+        last_reply = reply;
+    }
+    if batch_mode {
+        // Block until the whole batch retires so shell pipelines can
+        // treat `client --batch` as synchronous.
+        let Some(id) = last_reply.split_whitespace().find_map(|t| t.strip_prefix("batch=")) else {
+            bail!("batch submit was rejected: {}", last_reply.trim_end());
+        };
+        writeln!(conn, "batch wait id={id}")?;
         let mut reply = String::new();
         let n = reader.read_line(&mut reply).context("read reply (timeout?)")?;
         if n == 0 {

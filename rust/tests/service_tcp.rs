@@ -192,14 +192,71 @@ fn graph_sessions_survive_across_connections() {
     let addr = spawn(two_worker_service(), ServeOptions::default());
     let mut a = Conn::open(addr);
     let put = a.send("graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6");
-    assert_eq!(put, "ok graph=ring n=8 m=8");
+    assert_eq!(put, "ok graph=ring n=8 m=8 version=1");
     drop(a); // the session graph outlives the uploading connection
     let mut b = Conn::open(addr);
-    assert_eq!(b.send("graph list"), "ok count=1 graphs=ring");
+    assert_eq!(b.send("graph list"), "ok count=1 graphs=ring@v1");
     let mapped = b.send("map graph=ring algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3");
     assert!(mapped.starts_with("ok id="), "{mapped}");
     assert!(mapped.contains("k=4"), "{mapped}");
     assert_eq!(b.send("graph del name=ring"), "ok dropped=ring");
+}
+
+#[test]
+fn patch_then_remap_warm_over_tcp() {
+    let addr = spawn(two_worker_service(), ServeOptions::default());
+    let mut conn = Conn::open(addr);
+    let put = conn.send("graph put name=ring csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6");
+    assert_eq!(put, "ok graph=ring n=8 m=8 version=1");
+    // On an 8-ring the one-hop halo around a patched edge covers most of
+    // the graph, so lift the region cap to keep the warm path open.
+    let map_cmd = "map graph=ring algorithm=gpu-im hierarchy=2:2 distance=1:10 eps=0.3 seed=1 \
+                   opt.remap.max_region_frac=1";
+    let first = conn.send(map_cmd);
+    assert!(first.starts_with("ok id="), "{first}");
+    assert!(!first.contains("remap="), "first solve has nothing to warm-start from: {first}");
+    let patched = conn.send("graph patch name=ring ops=ae:0:4:1.0");
+    assert_eq!(patched, "ok graph=ring n=8 m=9 version=2 touched=2 ops=1");
+    assert_eq!(conn.send("graph list"), "ok count=1 graphs=ring@v2");
+    let second = conn.send(map_cmd);
+    assert!(second.contains(" remap=warm"), "{second}");
+    // Patch errors are typed and leave the session graph untouched.
+    let bad = conn.send("graph patch name=ring ops=zz:1");
+    assert!(bad.starts_with("err code=patch"), "{bad}");
+    let missing = conn.send("graph patch name=nope ops=ae:0:1:1.0");
+    assert!(missing.starts_with("err code=unknown_graph"), "{missing}");
+    let metrics = conn.send("metrics");
+    assert!(metrics.contains(" patches=1 "), "{metrics}");
+    assert!(metrics.contains(" warm_remaps=1 "), "{metrics}");
+}
+
+#[test]
+fn batch_submit_and_wait_over_tcp() {
+    let addr = spawn(two_worker_service(), ServeOptions::default());
+    let mut conn = Conn::open(addr);
+    let body = "instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3";
+    let jobs: Vec<String> = (1..=3)
+        .map(|s| protocol::escape_value(&format!("{body} seed={s}")))
+        .collect();
+    let reply = conn.send(&format!("batch submit jobs={}", jobs.join(";")));
+    assert!(reply.starts_with("ok batch="), "{reply}");
+    assert!(reply.contains("count=3"), "{reply}");
+    let batch: u64 = reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("batch=").and_then(|v| v.parse().ok()))
+        .unwrap();
+    // Waiting works from a different connection: batch identity is
+    // server-side, like job identity.
+    let mut other = Conn::open(addr);
+    let waited = other.send(&format!("batch wait id={batch}"));
+    assert_eq!(
+        waited,
+        format!("ok batch={batch} count=3 done=3 failed=0 cancelled=0 expired=0")
+    );
+    assert!(other.send("batch wait id=9999").starts_with("err code=unknown_batch"));
+    let metrics = other.send("metrics");
+    assert!(metrics.contains(" batches=1 "), "{metrics}");
+    assert!(metrics.contains(" batched_jobs=3 "), "{metrics}");
 }
 
 #[test]

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Soft bench-regression diff: compare freshly produced BENCH_*.json
+files against the in-repo baselines (rust/benches/baselines/).
+
+Matches records by their identity fields (every string-valued field:
+bench/graph/mode/scheme/scenario/...), then compares the measurement
+fields. Time-like fields (wall_ms, p99_ms, host_ms, device_ms) warn past
+--time-ratio (default 1.5x); quality fields (j, objective) warn past
+--quality-ratio (default 1.05x). Empty baselines (the schema skeletons)
+are skipped silently.
+
+Exit code is always 0 unless --strict is passed: CI runs this as a
+non-blocking soft-warning step, because smoke-sized wall clocks on
+shared runners are too noisy to gate merges on.
+
+Stdlib only; no third-party imports.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+TIME_KEYS = ("wall_ms", "p99_ms", "host_ms", "device_ms")
+QUALITY_KEYS = ("j", "objective")
+
+
+def load_records(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        return doc.get("records", [])
+    if isinstance(doc, list):
+        return doc
+    return []
+
+
+def identity(rec):
+    """The identity of a record: its string-valued fields, sorted."""
+    return tuple(sorted((k, v) for k, v in rec.items() if isinstance(v, str)))
+
+
+def index(records):
+    by_id = {}
+    for rec in records:
+        by_id.setdefault(identity(rec), []).append(rec)
+    return by_id
+
+
+def diff_file(name, baseline_path, current_path, time_ratio, quality_ratio):
+    base = load_records(baseline_path)
+    cur = load_records(current_path)
+    warnings = []
+    if not base:
+        print(f"{name}: baseline is an empty skeleton, nothing to compare")
+        return warnings
+    if not cur:
+        warnings.append(f"{name}: current run produced no records (baseline has {len(base)})")
+        return warnings
+    base_by_id, cur_by_id = index(base), index(cur)
+    for key, base_recs in base_by_id.items():
+        cur_recs = cur_by_id.get(key)
+        if cur_recs is None:
+            label = " ".join(f"{k}={v}" for k, v in key)
+            warnings.append(f"{name}: record [{label}] vanished from the current run")
+            continue
+        for b, c in zip(base_recs, cur_recs):
+            label = " ".join(f"{k}={v}" for k, v in key)
+            for field, ratio in [(f, time_ratio) for f in TIME_KEYS] + [
+                (f, quality_ratio) for f in QUALITY_KEYS
+            ]:
+                bv, cv = b.get(field), c.get(field)
+                if not isinstance(bv, (int, float)) or not isinstance(cv, (int, float)):
+                    continue
+                if bv > 1e-9 and cv > ratio * bv:
+                    warnings.append(
+                        f"{name}: [{label}] {field} {bv:.3f} -> {cv:.3f} "
+                        f"({cv / bv:.2f}x, threshold {ratio:.2f}x)"
+                    )
+    return warnings
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benches/baselines", help="baseline directory")
+    ap.add_argument("--current", default=".", help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--time-ratio", type=float, default=1.5)
+    ap.add_argument("--quality-ratio", type=float, default=1.05)
+    ap.add_argument("--strict", action="store_true", help="exit 1 when any warning fires")
+    args = ap.parse_args()
+
+    names = sorted(
+        f for f in os.listdir(args.baseline) if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print(f"no BENCH_*.json baselines under {args.baseline}", file=sys.stderr)
+        return 1
+
+    all_warnings = []
+    for name in names:
+        current_path = os.path.join(args.current, name)
+        if not os.path.exists(current_path):
+            print(f"{name}: not produced by this run, skipping")
+            continue
+        all_warnings += diff_file(
+            name,
+            os.path.join(args.baseline, name),
+            current_path,
+            args.time_ratio,
+            args.quality_ratio,
+        )
+
+    if all_warnings:
+        print(f"\n{len(all_warnings)} bench-diff warning(s):")
+        for w in all_warnings:
+            print(f"  WARNING: {w}")
+    else:
+        print("\nbench-diff: no regressions past thresholds")
+    return 1 if (args.strict and all_warnings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
