@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             reader.read_line(&mut reply)?;
             Ok(reply.trim_end().to_string())
         };
-        assert!(send(&mut conn, "ping")?.contains("pong"));
+        assert!(send(&mut conn, "ping")?.starts_with("ok version="));
         // Upload-once/map-many: pin a task graph server-side…
         let put = send(&mut conn, "graph put name=halo csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6")?;
         assert!(put.starts_with("ok graph=halo"), "bad graph put reply: {put}");

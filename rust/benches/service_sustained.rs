@@ -1,0 +1,183 @@
+//! Sustained service-throughput harness: a fixed-duration stream of
+//! mixed cold/warm mapping jobs against one in-process coordinator
+//! [`Service`], driven through the real wire dispatcher
+//! (`protocol::handle_command`) on a pinned session graph. Per-job wall
+//! p50/p99 and jobs/sec per mode land in `BENCH_service.json` (override
+//! the path with `HEIPA_BENCH_OUT`; set `HEIPA_BENCH_SMOKE=1` for a
+//! seconds-scale CI run).
+//!
+//! Modes:
+//! * `cold`  — every job pays the full multilevel solve
+//!   (`opt.remap.max_region_frac=0` disables warm starts);
+//! * `warm`  — patch→map cycles with the warm path open
+//!   (`opt.remap.max_region_frac=1`);
+//! * `mixed` — alternating cold/warm, the steady-state shape of a
+//!   session-serving deployment.
+
+use heipa::coordinator::protocol::handle_command;
+use heipa::coordinator::service::{Service, ServiceConfig};
+use heipa::graph::gen;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Record {
+    mode: &'static str,
+    graph: String,
+    wall_ms: f64,
+    p99_ms: f64,
+    jobs: usize,
+    jobs_per_sec: f64,
+    warm_hits: usize,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(records: &[Record], path: &str) {
+    let mut out = String::from("{\n  \"bench\": \"service\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"bench\": \"sustained\", \"graph\": \"{}\", \"mode\": \"{}\", \
+             \"wall_ms\": {:.3}, \"p99_ms\": {:.3}, \"jobs\": {}, \"jobs_per_sec\": {:.2}, \
+             \"warm_hits\": {}}}{}\n",
+            json_escape(&r.graph),
+            r.mode,
+            r.wall_ms,
+            r.p99_ms,
+            r.jobs,
+            r.jobs_per_sec,
+            r.warm_hits,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).expect("write bench json");
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
+/// One fixed-duration stream of blocking `map` jobs in `mode`, on a
+/// fresh service with the session graph pinned. Returns sorted per-job
+/// wall times, the stream's wall seconds, and the warm-path hit count.
+fn sustained(graph_name: &str, mode: &'static str, duration: Duration) -> (Vec<f64>, f64, usize) {
+    let svc = Service::with_config(ServiceConfig { threads: 2, workers: 2, ..Default::default() });
+    let g = match graph_name {
+        "rgg12" => Arc::new(gen::rgg(1 << 12, gen::rgg_paper_radius(1 << 12), 3)),
+        _ => Arc::new(gen::stencil9(96, 96, 7)),
+    };
+    // A non-adjacent vertex pair to patch in and back out each warm
+    // cycle (perturbation without unbounded growth).
+    let (pu, pv) = {
+        let n = g.n() as u32;
+        let mut found = (0, n / 2);
+        'outer: for u in 0..n.min(64) {
+            for v in (n / 2)..(n / 2 + 64).min(n) {
+                if u != v && g.find_edge(u, v).is_none() {
+                    found = (u, v);
+                    break 'outer;
+                }
+            }
+        }
+        found
+    };
+    svc.put_graph("sess", g);
+    let map_line = |frac: &str, seed: u64| {
+        format!(
+            "map graph=sess algorithm=gpu-im hierarchy=2:4 distance=1:10 eps=0.05 seed={seed} \
+             opt.remap.max_region_frac={frac}"
+        )
+    };
+    // Prime the hierarchy cache so warm cycles have a state to start from.
+    let first = handle_command(&svc, &map_line("1", 1));
+    assert!(first.starts_with("ok "), "{first}");
+    let mut walls = Vec::new();
+    let mut warm_hits = 0usize;
+    let mut edge_flip = false;
+    let t0 = Instant::now();
+    let mut seed = 2u64;
+    while t0.elapsed() < duration {
+        let warm_job = match mode {
+            "cold" => false,
+            "warm" => true,
+            _ => seed % 2 == 0,
+        };
+        if warm_job {
+            // Perturb the session graph, then remap with the warm path
+            // open — the patch keeps the warm region small.
+            let ops =
+                if edge_flip { format!("re:{pu}:{pv}") } else { format!("ae:{pu}:{pv}:1.0") };
+            edge_flip = !edge_flip;
+            let patched = handle_command(&svc, &format!("graph patch name=sess ops={ops}"));
+            assert!(patched.starts_with("ok "), "{patched}");
+        }
+        let line = map_line(if warm_job { "1" } else { "0" }, seed);
+        let t = Instant::now();
+        let reply = handle_command(&svc, &line);
+        let wall = t.elapsed().as_secs_f64() * 1e3;
+        assert!(reply.starts_with("ok "), "{reply}");
+        if reply.contains(" remap=warm") {
+            warm_hits += 1;
+        }
+        walls.push(wall);
+        seed += 1;
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    walls.sort_by(|a, b| a.total_cmp(b));
+    (walls, total_s, warm_hits)
+}
+
+fn main() {
+    let smoke = std::env::var("HEIPA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("HEIPA_BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
+    let duration = Duration::from_millis(if smoke { 1000 } else { 10_000 });
+    let graphs: &[&str] = if smoke { &["rgg12"] } else { &["rgg12", "stencil96"] };
+
+    let mut records = Vec::new();
+    println!("| graph | mode | p50 ms | p99 ms | jobs | jobs/s | warm hits |");
+    println!("|---|---|---|---|---|---|---|");
+    for graph in graphs {
+        for mode in ["cold", "warm", "mixed"] {
+            let (walls, total_s, warm_hits) = sustained(graph, mode, duration);
+            let (p50, p99) = (percentile(&walls, 0.5), percentile(&walls, 0.99));
+            let jps = walls.len() as f64 / total_s.max(1e-9);
+            println!(
+                "| {graph} | {mode} | {p50:.2} | {p99:.2} | {} | {jps:.1} | {warm_hits} |",
+                walls.len()
+            );
+            records.push(Record {
+                mode,
+                graph: graph.to_string(),
+                wall_ms: p50,
+                p99_ms: p99,
+                jobs: walls.len(),
+                jobs_per_sec: jps,
+                warm_hits,
+            });
+        }
+    }
+    write_json(&records, &out_path);
+    println!("\nwrote {} records to {out_path}", records.len());
+
+    // Headline: sustained mixed throughput vs all-cold, per graph.
+    for graph in graphs {
+        let grab = |mode: &str| -> Option<f64> {
+            records.iter().find(|r| r.graph == *graph && r.mode == mode).map(|r| r.jobs_per_sec)
+        };
+        if let (Some(cold), Some(mixed)) = (grab("cold"), grab("mixed")) {
+            if cold > 0.0 {
+                println!(
+                    "{graph}: {cold:.1} jobs/s all-cold vs {mixed:.1} jobs/s mixed ({:.2}x)",
+                    mixed / cold
+                );
+            }
+        }
+    }
+}

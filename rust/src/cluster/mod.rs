@@ -1,0 +1,42 @@
+//! Cluster tier: horizontal scale-out of the coordinator service.
+//!
+//! One [`Router`] process accepts the ordinary wire protocol
+//! ([`crate::coordinator::protocol`]) and forwards every job to a fleet
+//! of downstream `heipa serve` engine processes over TCP — the same
+//! line protocol doubles as the inter-node transport, so a node needs
+//! no cluster awareness beyond the (node-local) `ping`, `drain` and
+//! `cluster …` verbs every coordinator already speaks.
+//!
+//! The pieces:
+//!
+//! - [`ring::HashRing`] — consistent hashing with virtual nodes routes
+//!   `graph put`/`graph patch`/session `map`s to stable owners, pinning
+//!   each session graph on a configurable number of replicas
+//!   ([`RouterConfig::replication`]) with minimal remapping when the
+//!   fleet changes shape.
+//! - [`node::Node`] — one downstream process: pooled client
+//!   connections, health from periodic typed `ping` probes *and* live
+//!   traffic, and the queue-depth/in-flight gauges that drive
+//!   least-loaded, backpressure-aware dispatch (`err code=busy` spills
+//!   to the next candidate).
+//! - [`Router`] — job-ID translation (router ↔ node), retained session
+//!   graph copies, **failover** (a node dying mid-job re-homes the work
+//!   onto a replica, re-uploading the graph, tagging replies
+//!   `failover=1`), and fleet-aggregated `metrics` with the extra
+//!   `routed_jobs`/`failovers`/`nodes_up` counters.
+//!
+//! Chaos hooks: the `route_dispatch` and `node_probe` fault points
+//! ([`crate::fault::FaultPoint`]) sever links and lose probes
+//! deterministically; under any seeding every job stays terminal —
+//! a valid mapping or a typed error, never a hang.
+//!
+//! `heipa cluster` (see `main.rs`) spawns and supervises a local fleet
+//! — router + N `serve` children — for tests and demos.
+
+pub mod node;
+pub mod ring;
+pub mod router;
+
+pub use node::{Health, Node};
+pub use ring::HashRing;
+pub use router::{serve_router, Router, RouterConfig};

@@ -1,0 +1,300 @@
+//! One downstream engine process as the router sees it: a pooled client
+//! connection, health tracked by probes *and* live traffic, and the
+//! load gauges that drive least-loaded dispatch.
+//!
+//! Health transitions: a successful request or probe marks the node
+//! `Up` and resets the failure streak; a probe failure marks it
+//! `Suspect`, and a second consecutive failure (or a transport error on
+//! a live request, via [`Node::mark_down`]) marks it `Down`. Down nodes
+//! are deprioritized — not excluded — by the router, so a total
+//! blackout self-heals as soon as any node answers again.
+
+use crate::fault::{self, FaultPlane, FaultPoint};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Duration;
+
+/// Node health as seen by the router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Answering probes/requests.
+    Up,
+    /// One probe failure; still tried, watched closely.
+    Suspect,
+    /// Repeated probe failures or a mid-request transport error.
+    Down,
+}
+
+impl Health {
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Up => "up",
+            Health::Suspect => "suspect",
+            Health::Down => "down",
+        }
+    }
+
+    fn from_u8(v: u8) -> Health {
+        match v {
+            0 => Health::Up,
+            1 => Health::Suspect,
+            _ => Health::Down,
+        }
+    }
+}
+
+/// A checked-in client connection. The protocol is strictly one request
+/// → one reply, so after a full reply line the stream is quiescent and
+/// safe to pool (no half-read bytes can be stranded in the reader).
+struct PooledConn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// One downstream engine process.
+pub struct Node {
+    addr: String,
+    /// [`Health`] as its `u8` discriminant.
+    health: AtomicU8,
+    /// Probe failures since the last success; 2 in a row → `Down`.
+    consecutive_failures: AtomicU32,
+    /// Last probed queue depth / in-flight count (backpressure gauges).
+    queue_depth: AtomicU64,
+    in_flight: AtomicU64,
+    pool: Mutex<Vec<PooledConn>>,
+    timeout: Duration,
+}
+
+/// Connections pooled per node; excess check-ins just close.
+const POOL_CAP: usize = 4;
+
+impl Node {
+    pub fn new(addr: &str, timeout: Duration) -> Node {
+        Node {
+            addr: addr.to_string(),
+            health: AtomicU8::new(Health::Up as u8),
+            consecutive_failures: AtomicU32::new(0),
+            queue_depth: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+            timeout,
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn health(&self) -> Health {
+        // relaxed: health is an advisory routing hint; a stale read only
+        // costs one misrouted attempt, which the failover loop absorbs.
+        Health::from_u8(self.health.load(Ordering::Relaxed))
+    }
+
+    /// Backpressure score for least-loaded dispatch (lower is better).
+    pub fn load(&self) -> u64 {
+        // relaxed: advisory gauges refreshed by the probe loop; dispatch
+        // only needs a roughly current ordering across nodes.
+        self.queue_depth.load(Ordering::Relaxed) + self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Last probed queue depth (wire `cluster nodes` rendering).
+    pub fn queue_depth(&self) -> u64 {
+        // relaxed: advisory gauge.
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Last probed in-flight count (wire `cluster nodes` rendering).
+    pub fn in_flight(&self) -> u64 {
+        // relaxed: advisory gauge.
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// A transport error on a live request: the node is gone right now.
+    pub fn mark_down(&self) {
+        // relaxed: advisory routing hint (see `health`).
+        self.health.store(Health::Down as u8, Ordering::Relaxed);
+        self.pool.lock().unwrap_or_else(PoisonError::into_inner).clear();
+    }
+
+    fn mark_up(&self) {
+        // relaxed: advisory routing hint (see `health`).
+        self.health.store(Health::Up as u8, Ordering::Relaxed);
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+    }
+
+    fn probe_failed(&self) {
+        // relaxed: the failure streak is only consulted by the single
+        // probe thread that also bumps it; health is advisory.
+        let streak = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        let next = if streak >= 2 { Health::Down } else { Health::Suspect };
+        self.health.store(next as u8, Ordering::Relaxed);
+        if next == Health::Down {
+            self.pool.lock().unwrap_or_else(PoisonError::into_inner).clear();
+        }
+    }
+
+    fn connect(&self) -> std::io::Result<PooledConn> {
+        use std::net::ToSocketAddrs;
+        let addr = self
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::NotFound, "unresolvable addr"))?;
+        let stream = TcpStream::connect_timeout(&addr, self.timeout.max(Duration::from_millis(1)))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(PooledConn { writer: stream, reader })
+    }
+
+    fn roundtrip(conn: &mut PooledConn, line: &str) -> std::io::Result<String> {
+        conn.writer.write_all(line.as_bytes())?;
+        conn.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        let n = conn.reader.read_line(&mut reply)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before reply",
+            ));
+        }
+        while reply.ends_with('\n') || reply.ends_with('\r') {
+            reply.pop();
+        }
+        Ok(reply)
+    }
+
+    fn check_in(&self, conn: PooledConn) {
+        let mut pool = self.pool.lock().unwrap_or_else(PoisonError::into_inner);
+        if pool.len() < POOL_CAP {
+            pool.push(conn);
+        }
+    }
+
+    /// One request → one reply over a pooled connection. A stale pooled
+    /// socket (peer restarted since check-in) gets one fresh-dial retry
+    /// before the error surfaces; a surfaced error means the node is
+    /// unreachable *now* and the caller should fail over.
+    pub fn request(&self, line: &str) -> std::io::Result<String> {
+        let pooled = self.pool.lock().unwrap_or_else(PoisonError::into_inner).pop();
+        if let Some(mut conn) = pooled {
+            if let Ok(reply) = Node::roundtrip(&mut conn, line) {
+                self.check_in(conn);
+                self.mark_up();
+                return Ok(reply);
+            }
+            // Stale pooled socket — fall through to a fresh dial.
+        }
+        let mut conn = self.connect()?;
+        let reply = Node::roundtrip(&mut conn, line)?;
+        self.check_in(conn);
+        self.mark_up();
+        Ok(reply)
+    }
+
+    /// One health-probe round: a typed `ping`, refreshing the load
+    /// gauges on success. `plane` is the router's injectable fault plane
+    /// (the `node_probe` point models a lost probe). Returns whether the
+    /// node answered.
+    pub fn probe(&self, plane: Option<&FaultPlane>) -> bool {
+        if fault::fire(plane, FaultPoint::NodeProbe) {
+            self.probe_failed();
+            return false;
+        }
+        match self.request("ping") {
+            Ok(reply) if reply.starts_with("ok ") => {
+                for tok in reply.split_whitespace() {
+                    if let Some(v) = tok.strip_prefix("queue_depth=") {
+                        if let Ok(d) = v.parse() {
+                            // relaxed: advisory gauge (see `load`).
+                            self.queue_depth.store(d, Ordering::Relaxed);
+                        }
+                    } else if let Some(v) = tok.strip_prefix("in_flight=") {
+                        if let Ok(f) = v.parse() {
+                            // relaxed: advisory gauge (see `load`).
+                            self.in_flight.store(f, Ordering::Relaxed);
+                        }
+                    }
+                }
+                self.mark_up();
+                true
+            }
+            _ => {
+                self.probe_failed();
+                false
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_degrades_suspect_then_down_and_recovers() {
+        let node = Node::new("127.0.0.1:1", Duration::from_millis(50));
+        assert_eq!(node.health(), Health::Up);
+        node.probe_failed();
+        assert_eq!(node.health(), Health::Suspect);
+        node.probe_failed();
+        assert_eq!(node.health(), Health::Down);
+        node.mark_up();
+        assert_eq!(node.health(), Health::Up);
+        node.mark_down();
+        assert_eq!(node.health(), Health::Down);
+    }
+
+    #[test]
+    fn request_against_a_dead_addr_errors_fast() {
+        // Port 1 on localhost refuses (or times out) immediately.
+        let node = Node::new("127.0.0.1:1", Duration::from_millis(100));
+        assert!(node.request("ping").is_err());
+        assert!(!node.probe(None));
+        assert_eq!(node.health(), Health::Suspect);
+    }
+
+    #[test]
+    fn probe_round_trips_against_a_live_listener() {
+        // A hand-rolled one-shot server speaking the typed ping reply.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut line = String::new();
+            while reader.read_line(&mut line).unwrap() > 0 {
+                assert_eq!(line.trim(), "ping");
+                writer
+                    .write_all(b"ok version=test queue_depth=3 in_flight=2 graphs=0\n")
+                    .unwrap();
+                line.clear();
+            }
+        });
+        let node = Node::new(&addr.to_string(), Duration::from_secs(5));
+        assert!(node.probe(None));
+        assert_eq!(node.health(), Health::Up);
+        assert_eq!(node.load(), 5);
+        assert_eq!((node.queue_depth(), node.in_flight()), (3, 2));
+        // The pooled connection is reused for the next probe.
+        assert!(node.probe(None));
+        drop(node);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn armed_probe_plane_fails_probes_deterministically() {
+        let mut plane = FaultPlane::disarmed();
+        plane.arm(FaultPoint::NodeProbe, 1.0, 42);
+        let node = Node::new("127.0.0.1:1", Duration::from_millis(50));
+        assert!(!node.probe(Some(&plane)));
+        assert_eq!(node.health(), Health::Suspect);
+        assert!(!node.probe(Some(&plane)));
+        assert_eq!(node.health(), Health::Down);
+    }
+}

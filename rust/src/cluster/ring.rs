@@ -1,0 +1,279 @@
+//! Consistent-hash ring for session-graph routing.
+//!
+//! Each node contributes [`HashRing::vnodes`] virtual points on a `u64`
+//! ring; a key's owners are the first `r` *distinct* nodes clockwise
+//! from the key's hash. The point positions depend only on the node
+//! name, so adding or removing a node moves only the keys whose
+//! clockwise walk crossed that node's points — the classic minimal
+//! remapping property the cluster tier relies on to keep session
+//! graphs pinned while the fleet changes shape.
+//!
+//! The ring is a routing table, not a membership service: health lives
+//! in [`super::node::Node`], and the router skips unhealthy owners at
+//! dispatch time rather than mutating the ring (so a node coming back
+//! up owns its old keys again without any remapping).
+
+/// Virtual points per node. High enough that 8 nodes keep their key
+/// shares within 2× of each other (property-tested below), low enough
+/// that rebuilds stay trivial for fleet sizes the router targets.
+pub const DEFAULT_VNODES: usize = 128;
+
+/// FNV-1a over the bytes, finished with a SplitMix64 scramble so short
+/// keys with shared prefixes still spread over the whole ring.
+fn hash_key(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    crate::rng::splitmix64(&mut h)
+}
+
+/// A consistent-hash ring over named nodes.
+#[derive(Clone, Debug, Default)]
+pub struct HashRing {
+    /// Member node names, insertion-ordered (stable for rendering).
+    nodes: Vec<String>,
+    /// Ring points, sorted by hash: `(point_hash, index into nodes)`.
+    points: Vec<(u64, usize)>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    /// An empty ring with [`DEFAULT_VNODES`] points per node.
+    pub fn new() -> HashRing {
+        HashRing::with_vnodes(DEFAULT_VNODES)
+    }
+
+    /// An empty ring with `vnodes` points per node (min 1).
+    pub fn with_vnodes(vnodes: usize) -> HashRing {
+        HashRing { nodes: Vec::new(), points: Vec::new(), vnodes: vnodes.max(1) }
+    }
+
+    /// Member count.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Member node names, in insertion order.
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    /// Add a node; false if it is already a member.
+    pub fn add(&mut self, node: &str) -> bool {
+        if self.nodes.iter().any(|n| n == node) {
+            return false;
+        }
+        self.nodes.push(node.to_string());
+        self.rebuild();
+        true
+    }
+
+    /// Remove a node; false if it was not a member.
+    pub fn remove(&mut self, node: &str) -> bool {
+        let Some(pos) = self.nodes.iter().position(|n| n == node) else {
+            return false;
+        };
+        self.nodes.remove(pos);
+        self.rebuild();
+        true
+    }
+
+    /// Point positions depend only on `(node name, replica index)`, so a
+    /// full rebuild reproduces every surviving node's points exactly —
+    /// membership changes move only the departed/arrived points.
+    fn rebuild(&mut self) {
+        self.points.clear();
+        self.points.reserve(self.nodes.len() * self.vnodes);
+        for (i, node) in self.nodes.iter().enumerate() {
+            for v in 0..self.vnodes {
+                self.points.push((hash_key(&format!("{node}#{v}")), i));
+            }
+        }
+        // Ties (hash collisions across nodes) break by node index, which
+        // is insertion order — deterministic for a fixed member sequence.
+        self.points.sort_unstable();
+    }
+
+    /// The first `r` distinct nodes clockwise from `key`'s hash — the
+    /// key's replica set, primary first. Fewer than `r` members yields
+    /// every member (still primary-first).
+    pub fn owners(&self, key: &str, r: usize) -> Vec<&str> {
+        let want = r.max(1).min(self.nodes.len());
+        let mut out: Vec<&str> = Vec::with_capacity(want);
+        if self.points.is_empty() {
+            return out;
+        }
+        let h = hash_key(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for step in 0..self.points.len() {
+            let (_, idx) = self.points[(start + step) % self.points.len()];
+            let name = self.nodes[idx].as_str();
+            if !out.contains(&name) {
+                out.push(name);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The key's primary owner (first ring owner), if the ring has any
+    /// member.
+    pub fn primary(&self, key: &str) -> Option<&str> {
+        self.owners(key, 1).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn ring_of(n: usize) -> HashRing {
+        let mut ring = HashRing::new();
+        for i in 0..n {
+            ring.add(&format!("127.0.0.1:{}", 9000 + i));
+        }
+        ring
+    }
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("session-graph-{i}")).collect()
+    }
+
+    #[test]
+    fn membership_round_trips() {
+        let mut ring = HashRing::new();
+        assert!(ring.is_empty());
+        assert!(ring.primary("x").is_none());
+        assert!(ring.add("a"));
+        assert!(!ring.add("a"), "duplicate add");
+        assert!(ring.add("b"));
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.nodes(), ["a".to_string(), "b".to_string()]);
+        assert!(ring.remove("a"));
+        assert!(!ring.remove("a"), "double remove");
+        assert_eq!(ring.owners("anything", 3), vec!["b"]);
+    }
+
+    #[test]
+    fn owners_are_deterministic() {
+        let ring = ring_of(5);
+        for key in keys(50) {
+            assert_eq!(ring.owners(&key, 3), ring.owners(&key, 3));
+        }
+        // Rebuilding the same membership reproduces the same routing.
+        let again = ring_of(5);
+        for key in keys(50) {
+            assert_eq!(ring.owners(&key, 3), again.owners(&key, 3));
+        }
+    }
+
+    /// Property (balance): across 8 nodes, the largest primary key share
+    /// stays within 2× of the smallest.
+    #[test]
+    fn key_shares_stay_balanced_across_eight_nodes() {
+        let ring = ring_of(8);
+        let mut share: BTreeMap<String, usize> = BTreeMap::new();
+        let keys = keys(16_000);
+        for key in &keys {
+            *share.entry(ring.primary(key).unwrap().to_string()).or_insert(0) += 1;
+        }
+        assert_eq!(share.len(), 8, "every node must own some keys");
+        let max = *share.values().max().unwrap();
+        let min = *share.values().min().unwrap();
+        assert!(
+            max <= 2 * min,
+            "imbalanced shares: max {max} > 2 × min {min} ({share:?})"
+        );
+    }
+
+    /// Property (minimal remapping, join): adding a node to an N−1 ring
+    /// moves at most 2/N of the primary assignments.
+    #[test]
+    fn node_join_moves_few_keys() {
+        let before = ring_of(8);
+        let mut after = before.clone();
+        after.add("127.0.0.1:9999");
+        let keys = keys(16_000);
+        let moved = keys
+            .iter()
+            .filter(|k| before.primary(k) != after.primary(k))
+            .count();
+        let bound = keys.len() * 2 / after.len();
+        assert!(moved <= bound, "join moved {moved} keys > bound {bound}");
+        // Every moved key must have moved *to* the new node — nothing
+        // shuffles between survivors.
+        for k in &keys {
+            if before.primary(k) != after.primary(k) {
+                assert_eq!(after.primary(k), Some("127.0.0.1:9999"), "{k} moved sideways");
+            }
+        }
+        assert!(moved > 0, "the new node must take some keys");
+    }
+
+    /// Property (minimal remapping, leave): removing one of N nodes moves
+    /// at most 2/N of the primary assignments, and only the departed
+    /// node's keys move.
+    #[test]
+    fn node_leave_moves_only_the_departed_nodes_keys() {
+        let before = ring_of(8);
+        let victim = "127.0.0.1:9003";
+        let mut after = before.clone();
+        after.remove(victim);
+        let keys = keys(16_000);
+        let mut moved = 0usize;
+        for k in &keys {
+            let was = before.primary(k).unwrap();
+            let now = after.primary(k).unwrap();
+            if was == victim {
+                moved += 1;
+                assert_ne!(now, victim);
+            } else {
+                assert_eq!(was, now, "{k}: survivor-owned key moved on leave");
+            }
+        }
+        let bound = keys.len() * 2 / before.len();
+        assert!(moved <= bound, "leave moved {moved} keys > bound {bound}");
+        assert!(moved > 0, "the departed node owned no keys?");
+    }
+
+    /// Property (replica distinctness): the replica set never repeats a
+    /// node and is capped by the membership size.
+    #[test]
+    fn replica_sets_are_distinct() {
+        for members in [1usize, 2, 3, 8] {
+            let ring = ring_of(members);
+            for key in keys(500) {
+                for r in 1..=4usize {
+                    let owners = ring.owners(&key, r);
+                    assert_eq!(owners.len(), r.min(members), "key {key} r {r}");
+                    let mut dedup = owners.clone();
+                    dedup.sort_unstable();
+                    dedup.dedup();
+                    assert_eq!(dedup.len(), owners.len(), "{key}: repeated replica");
+                }
+            }
+        }
+    }
+
+    /// Replica sets are clockwise-stable: owners(key, 1) is a prefix of
+    /// owners(key, 2), which is a prefix of owners(key, 3) — so bumping R
+    /// only *adds* replicas, never re-homes a session.
+    #[test]
+    fn growing_r_extends_the_replica_set() {
+        let ring = ring_of(6);
+        for key in keys(200) {
+            let three = ring.owners(&key, 3);
+            assert_eq!(ring.owners(&key, 1), three[..1].to_vec());
+            assert_eq!(ring.owners(&key, 2), three[..2].to_vec());
+        }
+    }
+}

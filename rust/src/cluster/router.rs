@@ -1,0 +1,886 @@
+//! The router coordinator: speaks the ordinary wire protocol on the
+//! front, forwards every job to a fleet of downstream `serve` processes
+//! on the back, and owns the cluster-wide state a single node cannot —
+//! the consistent-hash ring, the retained session-graph copies that
+//! make failover possible, and the router↔node job-ID translation.
+//!
+//! ## Routing
+//! A `map`/`submit` whose `graph=` names a retained session graph goes
+//! to the graph's ring owners (primary first, replicas next, then the
+//! rest of the fleet by health and load); anonymous jobs go to the
+//! least-loaded healthy node. A node answering `err code=busy` is soft
+//! backpressure — the router moves to the next candidate.
+//!
+//! ## Failover
+//! A transport error (connection drop, probe-detected death, or an
+//! injected `route_dispatch` fault) fails the *candidate*, not the job:
+//! the router re-sends to the next candidate, re-uploading the session
+//! graph from its retained copy (`graph put` + every `graph patch`, in
+//! order) when the replacement node does not hold it. Replies for work
+//! that survived a failover carry `failover=1`, and the aggregated
+//! `metrics` line counts `routed_jobs`/`failovers`/`nodes_up`.
+
+use super::node::{Health, Node};
+use super::ring::HashRing;
+use crate::coordinator::protocol::{
+    parse_command, render_err, render_error, serve_lines, Command, LineHandler, ServeOptions,
+};
+use crate::fault::{self, FaultPlane, FaultPoint};
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// Router construction parameters.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Ring replication factor: a session graph is pinned on this many
+    /// nodes (capped by the fleet size).
+    pub replication: usize,
+    /// Per-request socket timeout in ms (connect, read, write). Bounds
+    /// how long one blocking `map`/`wait` can hold a router connection.
+    pub request_timeout_ms: u64,
+    /// Injectable fault plane for the `route_dispatch`/`node_probe`
+    /// points (tests); the process-global `HEIPA_FAULTS` plane is
+    /// always consulted as well.
+    pub plane: Option<FaultPlane>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { replication: 2, request_timeout_ms: 120_000, plane: None }
+    }
+}
+
+/// The router's retained copy of a session graph — enough to rebuild it
+/// on any node: the original `graph put` line plus every accepted
+/// `graph patch` line, in order.
+struct GraphRecord {
+    put_line: String,
+    patches: Vec<String>,
+    /// Router-side version: 1 on put, +1 per accepted patch or re-put.
+    version: u64,
+    /// Nodes known to hold the current version; anyone else gets a full
+    /// re-upload before serving this session.
+    synced: BTreeSet<String>,
+}
+
+/// Where a router job lives right now.
+#[derive(Clone)]
+struct JobRoute {
+    node: String,
+    node_job: u64,
+    /// The original submit line — replayed on a replacement node when
+    /// the owning node dies before the job is retired.
+    submit_line: String,
+    /// Session graph the job maps (drives re-upload on failover).
+    graph: Option<String>,
+    /// The job survived at least one failover; replies carry
+    /// `failover=1`.
+    failover: bool,
+}
+
+/// Tracked router-side jobs/batches; the oldest ids are evicted beyond
+/// these (evicted ids answer `unknown_job`/`unknown_batch`).
+const JOB_RETENTION: usize = 4096;
+const BATCH_RETENTION: usize = 256;
+
+/// The router coordinator. See the module docs for semantics.
+pub struct Router {
+    nodes: Vec<Arc<Node>>,
+    ring: HashRing,
+    replication: usize,
+    graphs: Mutex<BTreeMap<String, GraphRecord>>,
+    jobs: Mutex<BTreeMap<u64, JobRoute>>,
+    job_seq: AtomicU64,
+    /// Router batch id → (node addr, node batch id).
+    batches: Mutex<BTreeMap<u64, (String, u64)>>,
+    batch_seq: AtomicU64,
+    routed_jobs: AtomicU64,
+    failovers: AtomicU64,
+    plane: Option<FaultPlane>,
+}
+
+/// `key=<u64>` token value from a reply line.
+fn token_u64(reply: &str, key: &str) -> Option<u64> {
+    reply.split_whitespace().find_map(|t| t.strip_prefix(key)?.parse().ok())
+}
+
+/// Rewrite one `key=<value>` token of a reply line (exact token prefix,
+/// so `id=` never matches inside `job=`).
+fn rewrite_token(reply: &str, key: &str, value: u64) -> String {
+    let toks: Vec<String> = reply
+        .split(' ')
+        .map(|t| if t.starts_with(key) { format!("{key}{value}") } else { t.to_string() })
+        .collect();
+    toks.join(" ")
+}
+
+fn health_rank(h: Health) -> u8 {
+    match h {
+        Health::Up => 0,
+        Health::Suspect => 1,
+        Health::Down => 2,
+    }
+}
+
+impl Router {
+    /// A router over a fixed fleet of node addresses.
+    pub fn new(addrs: &[String], cfg: RouterConfig) -> Router {
+        let timeout = Duration::from_millis(cfg.request_timeout_ms.max(1));
+        let mut ring = HashRing::new();
+        let nodes: Vec<Arc<Node>> = addrs
+            .iter()
+            .map(|a| {
+                ring.add(a);
+                Arc::new(Node::new(a, timeout))
+            })
+            .collect();
+        Router {
+            nodes,
+            ring,
+            replication: cfg.replication.max(1),
+            graphs: Mutex::new(BTreeMap::new()),
+            jobs: Mutex::new(BTreeMap::new()),
+            job_seq: AtomicU64::new(0),
+            batches: Mutex::new(BTreeMap::new()),
+            batch_seq: AtomicU64::new(0),
+            routed_jobs: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            plane: cfg.plane,
+        }
+    }
+
+    /// The node table, in fleet order.
+    pub fn nodes(&self) -> &[Arc<Node>] {
+        &self.nodes
+    }
+
+    /// Completed failovers so far.
+    pub fn failovers(&self) -> u64 {
+        // relaxed: monotone statistics counter.
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Jobs successfully forwarded so far.
+    pub fn routed_jobs(&self) -> u64 {
+        // relaxed: monotone statistics counter.
+        self.routed_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Start the background health-probe loop: every `interval`, each
+    /// node gets a typed `ping` refreshing its health and load gauges.
+    /// The loop holds only a weak reference and exits when the router is
+    /// dropped.
+    pub fn start_probes(self: &Arc<Self>, interval: Duration) {
+        let weak = Arc::downgrade(self);
+        let _ = std::thread::Builder::new().name("heipa-probe".into()).spawn(move || loop {
+            std::thread::sleep(interval);
+            let Some(router) = weak.upgrade() else { return };
+            for node in &router.nodes {
+                node.probe(router.plane.as_ref());
+            }
+        });
+    }
+
+    fn node(&self, addr: &str) -> Option<Arc<Node>> {
+        self.nodes.iter().find(|n| n.addr() == addr).cloned()
+    }
+
+    /// Dispatch candidates for a job: the session graph's ring owners
+    /// first (primary, then replicas), then every remaining node by
+    /// (health, load). Down nodes rank last rather than never — a total
+    /// blackout self-heals as soon as anything answers.
+    fn candidates(&self, graph: Option<&str>) -> Vec<Arc<Node>> {
+        let mut list: Vec<Arc<Node>> = Vec::new();
+        if let Some(name) = graph {
+            for addr in self.ring.owners(name, self.replication) {
+                if let Some(n) = self.node(addr) {
+                    list.push(n);
+                }
+            }
+        }
+        let mut rest: Vec<Arc<Node>> = self
+            .nodes
+            .iter()
+            .filter(|n| !list.iter().any(|c| c.addr() == n.addr()))
+            .cloned()
+            .collect();
+        rest.sort_by_key(|n| (health_rank(n.health()), n.load()));
+        list.extend(rest);
+        list
+    }
+
+    /// One request to one node, through the `route_dispatch` fault
+    /// point. A transport error marks the node down (its probe revives
+    /// it); an injected fault models a severed link and leaves the
+    /// node's health untouched.
+    fn send(&self, node: &Node, line: &str) -> std::io::Result<String> {
+        if fault::fire(self.plane.as_ref(), FaultPoint::RouteDispatch) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                fault::failure(FaultPoint::RouteDispatch),
+            ));
+        }
+        let reply = node.request(line);
+        if reply.is_err() {
+            node.mark_down();
+        }
+        reply
+    }
+
+    /// Push the retained copy of `name` to `node`: the stored `graph
+    /// put` line, then every accepted patch, in order.
+    fn resync_graph(&self, node: &Node, name: &str) -> std::io::Result<()> {
+        let lines: Option<Vec<String>> = {
+            let graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+            graphs.get(name).map(|rec| {
+                let mut ls = Vec::with_capacity(1 + rec.patches.len());
+                ls.push(rec.put_line.clone());
+                ls.extend(rec.patches.iter().cloned());
+                ls
+            })
+        };
+        let Some(lines) = lines else {
+            return Err(std::io::Error::new(std::io::ErrorKind::NotFound, "graph not retained"));
+        };
+        for line in &lines {
+            let reply = node.request(line)?;
+            if !reply.starts_with("ok") {
+                return Err(std::io::Error::other(format!("resync rejected: {reply}")));
+            }
+        }
+        let mut graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(rec) = graphs.get_mut(name) {
+            rec.synced.insert(node.addr().to_string());
+        }
+        Ok(())
+    }
+
+    fn is_synced(&self, name: &str, addr: &str) -> bool {
+        let graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+        graphs.get(name).is_some_and(|rec| rec.synced.contains(addr))
+    }
+
+    fn graph_retained(&self, name: &str) -> bool {
+        self.graphs.lock().unwrap_or_else(PoisonError::into_inner).contains_key(name)
+    }
+
+    /// Forward a job line to the first candidate that takes it,
+    /// re-uploading the session graph where needed. `skip` excludes a
+    /// node known-dead (the failover path). Returns the serving node,
+    /// its reply, and whether any candidate had to be failed over.
+    fn forward_job(
+        &self,
+        graph: Option<&str>,
+        line: &str,
+        skip: Option<&str>,
+    ) -> std::result::Result<(Arc<Node>, String, bool), String> {
+        let mut failed_over = false;
+        let mut busy_reply: Option<String> = None;
+        for node in self.candidates(graph) {
+            if skip == Some(node.addr()) {
+                continue;
+            }
+            // Proactive re-upload: a retained session graph the node does
+            // not hold is pushed before the job lands on it.
+            if let Some(name) = graph {
+                if !self.is_synced(name, node.addr()) && self.resync_graph(&node, name).is_err() {
+                    failed_over = true;
+                    continue;
+                }
+            }
+            match self.send(&node, line) {
+                Ok(reply) if reply.starts_with("err code=busy") => {
+                    // Backpressure, not failure: spill to the next node.
+                    busy_reply.get_or_insert(reply);
+                }
+                Ok(reply) if reply.starts_with("err code=unknown_graph") && graph.is_some() => {
+                    // Reactive safety net (a node lost state while marked
+                    // synced): re-upload and retry this node once.
+                    let name = graph.unwrap_or_default();
+                    match self.resync_graph(&node, name).and_then(|()| self.send(&node, line)) {
+                        Ok(retry) => return Ok((node, retry, failed_over)),
+                        Err(_) => failed_over = true,
+                    }
+                }
+                Ok(reply) => return Ok((node, reply, failed_over)),
+                Err(_) => failed_over = true,
+            }
+        }
+        Err(busy_reply
+            .unwrap_or_else(|| render_err("unavailable", "no cluster node accepted the job")))
+    }
+
+    fn track_job(&self, route: JobRoute) -> u64 {
+        // relaxed: monotone id allocator; the registry mutex below
+        // orders the insert against lookups.
+        let rid = self.job_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut jobs = self.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+        jobs.insert(rid, route);
+        while jobs.len() > JOB_RETENTION {
+            jobs.pop_first();
+        }
+        rid
+    }
+
+    /// Re-home a job whose node died: replay the stored submit line on a
+    /// replacement (re-uploading the session graph), update the route,
+    /// and hand back the new node + node-side job id.
+    fn failover_job(
+        &self,
+        rid: u64,
+        route: &JobRoute,
+    ) -> std::result::Result<(Arc<Node>, u64), String> {
+        let (node, reply, _) =
+            self.forward_job(route.graph.as_deref(), &route.submit_line, Some(&route.node))?;
+        let Some(node_job) = token_u64(&reply, "job=") else {
+            return Err(render_err("unavailable", &format!("failover resubmit got: {reply}")));
+        };
+        // relaxed: monotone statistics counter.
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+        let mut jobs = self.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+        jobs.insert(
+            rid,
+            JobRoute {
+                node: node.addr().to_string(),
+                node_job,
+                submit_line: route.submit_line.clone(),
+                graph: route.graph.clone(),
+                failover: true,
+            },
+        );
+        Ok((node, node_job))
+    }
+
+    /// Run a job-scoped command (`status`/`wait`/`result`): forward to
+    /// the owning node, fail the job over to a replacement when that
+    /// node is gone, and translate ids in the reply.
+    fn job_command(&self, rid: u64, make_line: impl Fn(u64) -> String) -> String {
+        let route = {
+            let jobs = self.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+            jobs.get(&rid).cloned()
+        };
+        let Some(route) = route else {
+            return render_err("unknown_job", &format!("no job with id {rid}"));
+        };
+        let first = self
+            .node(&route.node)
+            .ok_or(())
+            .and_then(|node| self.send(&node, &make_line(route.node_job)).map_err(|_| ()));
+        let (reply, failover) = match first {
+            Ok(reply) => (reply, route.failover),
+            Err(()) => {
+                // The owning node died with the job: re-submit elsewhere
+                // and re-issue the command against the replacement.
+                match self.failover_job(rid, &route) {
+                    Err(e) => return e,
+                    Ok((node, node_job)) => match self.send(&node, &make_line(node_job)) {
+                        Ok(reply) => (reply, true),
+                        Err(_) => {
+                            return render_err(
+                                "unavailable",
+                                &format!("job {rid} lost its replacement node mid-command"),
+                            )
+                        }
+                    },
+                }
+            }
+        };
+        let mut out = rewrite_token(&rewrite_token(&reply, "job=", rid), "id=", rid);
+        if failover && out.starts_with("ok") {
+            out.push_str(" failover=1");
+        }
+        out
+    }
+
+    /// Aggregate `metrics` across the fleet: numeric counters sum,
+    /// `per_algorithm` maps merge, and the router appends its own
+    /// `routed_jobs`/`failovers`/`nodes_up`.
+    fn aggregate_metrics(&self) -> String {
+        // Keys in the exact render order of
+        // [`crate::coordinator::protocol::render_metrics`].
+        const SUM_KEYS: &[&str] = &[
+            "requests", "failures", "completed", "cancelled", "deadline_missed",
+            "busy_rejections", "hier_hits", "hier_misses", "retries", "faults_injected",
+            "degraded", "patches", "graphs_replaced", "warm_remaps", "cold_fallbacks",
+            "batches", "batched_jobs", "queue_depth", "in_flight",
+        ];
+        let mut sums: BTreeMap<&str, u64> = BTreeMap::new();
+        let (mut host_ms, mut device_ms) = (0.0f64, 0.0f64);
+        let mut per: BTreeMap<String, u64> = BTreeMap::new();
+        for node in &self.nodes {
+            let Ok(reply) = self.send(node, "metrics") else { continue };
+            for tok in reply.split_whitespace() {
+                let Some((k, v)) = tok.split_once('=') else { continue };
+                if let Some(key) = SUM_KEYS.iter().find(|&&s| s == k) {
+                    *sums.entry(key).or_insert(0) += v.parse::<u64>().unwrap_or(0);
+                } else if k == "host_ms" {
+                    host_ms += v.parse::<f64>().unwrap_or(0.0);
+                } else if k == "device_ms" {
+                    device_ms += v.parse::<f64>().unwrap_or(0.0);
+                } else if k == "per_algorithm" {
+                    for entry in v.split(';').filter(|e| !e.is_empty()) {
+                        if let Some((alg, count)) = entry.split_once(':') {
+                            *per.entry(alg.to_string()).or_insert(0) +=
+                                count.parse::<u64>().unwrap_or(0);
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = String::from("ok");
+        for key in SUM_KEYS {
+            out.push_str(&format!(" {key}={}", sums.get(key).copied().unwrap_or(0)));
+        }
+        out.push_str(&format!(" host_ms={host_ms:.1} device_ms={device_ms:.1}"));
+        let per_s: Vec<String> = per.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+        out.push_str(&format!(" per_algorithm={}", per_s.join(";")));
+        let nodes_up = self.nodes.iter().filter(|n| n.health() == Health::Up).count();
+        out.push_str(&format!(
+            " routed_jobs={} failovers={} nodes_up={nodes_up}",
+            self.routed_jobs(),
+            self.failovers(),
+        ));
+        out
+    }
+
+    /// The session name a request routes by — its `graph=`/`instance=`
+    /// when the router retains a graph of that name.
+    fn session_of(&self, instance: &str) -> Option<String> {
+        self.graph_retained(instance).then(|| instance.to_string())
+    }
+
+    /// Handle one wire line — the router's analogue of
+    /// [`crate::coordinator::protocol::handle_command`].
+    pub fn handle_line(&self, line: &str) -> String {
+        match parse_command(line) {
+            Err(e) => render_error(&e),
+            Ok(cmd) => self.dispatch(line, cmd),
+        }
+    }
+
+    fn dispatch(&self, line: &str, cmd: Command) -> String {
+        match cmd {
+            Command::Ping => {
+                let (qd, inf) = self
+                    .nodes
+                    .iter()
+                    .fold((0, 0), |(q, f), n| (q + n.queue_depth(), f + n.in_flight()));
+                let graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner).len();
+                let up = self.nodes.iter().filter(|n| n.health() == Health::Up).count();
+                format!(
+                    "ok version={} queue_depth={qd} in_flight={inf} graphs={graphs} \
+                     nodes={} nodes_up={up}",
+                    env!("CARGO_PKG_VERSION"),
+                    self.nodes.len(),
+                )
+            }
+            Command::Metrics => self.aggregate_metrics(),
+            Command::ClusterNodes => {
+                let list: Vec<String> = self
+                    .nodes
+                    .iter()
+                    .map(|n| {
+                        format!(
+                            "{}/{}/{}/{}",
+                            n.addr(),
+                            n.health().name(),
+                            n.queue_depth(),
+                            n.in_flight()
+                        )
+                    })
+                    .collect();
+                format!("ok count={} nodes={}", self.nodes.len(), list.join(","))
+            }
+            Command::ClusterRoute { name } => {
+                if !self.graph_retained(&name) {
+                    return render_err("unknown_graph", &format!("no pinned graph named {name}"));
+                }
+                let owners: Vec<&str> = self.ring.owners(&name, self.replication);
+                format!("ok graph={name} owners={}", owners.join(","))
+            }
+            Command::Drain { .. } => {
+                // Fleet-wide drain; unreachable nodes have nothing left
+                // to drain.
+                for node in &self.nodes {
+                    match self.send(node, line) {
+                        Ok(reply) if reply.starts_with("ok") => {}
+                        Ok(reply) => return reply,
+                        Err(_) => {}
+                    }
+                }
+                "ok drained=1".to_string()
+            }
+            Command::Map { ref req, .. } => {
+                let graph = self.session_of(&req.instance);
+                match self.forward_job(graph.as_deref(), line, None) {
+                    Err(e) => e,
+                    Ok((_, reply, failed_over)) => {
+                        if !reply.starts_with("ok") {
+                            return reply;
+                        }
+                        // relaxed: monotone statistics counter.
+                        self.routed_jobs.fetch_add(1, Ordering::Relaxed);
+                        if failed_over {
+                            // relaxed: monotone statistics counter.
+                            self.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // A blocking map is retired by the time it
+                        // replies: allocate a router id for the reply but
+                        // keep it out of the route table (a later
+                        // `status` answers `unknown_job`, as for any
+                        // retired-and-evicted job).
+                        // relaxed: monotone id allocator.
+                        let rid = self.job_seq.fetch_add(1, Ordering::Relaxed) + 1;
+                        let mut out = rewrite_token(&reply, "id=", rid);
+                        if failed_over {
+                            out.push_str(" failover=1");
+                        }
+                        out
+                    }
+                }
+            }
+            Command::Submit { ref req, .. } => {
+                let graph = self.session_of(&req.instance);
+                match self.forward_job(graph.as_deref(), line, None) {
+                    Err(e) => e,
+                    Ok((node, reply, failed_over)) => {
+                        let Some(node_job) = token_u64(&reply, "job=") else {
+                            return reply; // typed node-side error
+                        };
+                        // relaxed: monotone statistics counter.
+                        self.routed_jobs.fetch_add(1, Ordering::Relaxed);
+                        if failed_over {
+                            // relaxed: monotone statistics counter.
+                            self.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let rid = self.track_job(JobRoute {
+                            node: node.addr().to_string(),
+                            node_job,
+                            submit_line: line.to_string(),
+                            graph,
+                            failover: failed_over,
+                        });
+                        let mut out = rewrite_token(&reply, "job=", rid);
+                        if failed_over {
+                            out.push_str(" failover=1");
+                        }
+                        out
+                    }
+                }
+            }
+            Command::Status { job } => self.job_command(job, |nid| format!("status job={nid}")),
+            Command::Wait { job, timeout_ms } => self.job_command(job, |nid| match timeout_ms {
+                Some(ms) => format!("wait job={nid} timeout_ms={ms}"),
+                None => format!("wait job={nid}"),
+            }),
+            Command::JobResult { job } => self.job_command(job, |nid| format!("result job={nid}")),
+            Command::Cancel { job } => {
+                let route = {
+                    let jobs = self.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+                    jobs.get(&job).cloned()
+                };
+                let Some(route) = route else {
+                    return render_err("unknown_job", &format!("no job with id {job}"));
+                };
+                let sent = self.node(&route.node).ok_or(()).and_then(|n| {
+                    self.send(&n, &format!("cancel job={}", route.node_job)).map_err(|_| ())
+                });
+                match sent {
+                    Ok(reply) => rewrite_token(&reply, "job=", job),
+                    // The job died with its node; cancel's goal is met.
+                    Err(()) => format!("ok job={job} cancelled=1 state=cancelled"),
+                }
+            }
+            Command::Jobs => {
+                let routes: Vec<(u64, JobRoute)> = {
+                    let jobs = self.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+                    jobs.iter().map(|(k, v)| (*k, v.clone())).collect()
+                };
+                if routes.is_empty() {
+                    return "ok count=0".to_string();
+                }
+                let list: Vec<String> = routes
+                    .iter()
+                    .map(|(rid, route)| {
+                        let state = self
+                            .node(&route.node)
+                            .and_then(|n| {
+                                self.send(&n, &format!("status job={}", route.node_job)).ok()
+                            })
+                            .and_then(|r| {
+                                r.split_whitespace()
+                                    .find_map(|t| t.strip_prefix("state=").map(str::to_string))
+                            })
+                            .unwrap_or_else(|| "lost".to_string());
+                        format!("{rid}:{state}")
+                    })
+                    .collect();
+                format!("ok count={} jobs={}", routes.len(), list.join(","))
+            }
+            Command::GraphPut { ref name, .. } => self.graph_put(name, line),
+            Command::GraphPatch { ref name, .. } => self.graph_patch(name, line),
+            Command::GraphList => {
+                let graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+                if graphs.is_empty() {
+                    return "ok count=0".to_string();
+                }
+                let list: Vec<String> =
+                    graphs.iter().map(|(n, r)| format!("{n}@v{}", r.version)).collect();
+                format!("ok count={} graphs={}", graphs.len(), list.join(","))
+            }
+            Command::GraphDrop { ref name, .. } => {
+                let existed = {
+                    let mut graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+                    graphs.remove(name.as_str()).is_some()
+                };
+                if !existed {
+                    return render_err("unknown_graph", &format!("no pinned graph named {name}"));
+                }
+                // Best-effort fleet-wide drop; a node that never held the
+                // graph answers unknown_graph, which is fine.
+                for node in &self.nodes {
+                    let _ = self.send(node, line);
+                }
+                format!("ok dropped={name}")
+            }
+            Command::BatchSubmit { ref reqs, .. } => {
+                let graph = reqs.first().and_then(|r| self.session_of(&r.instance));
+                match self.forward_job(graph.as_deref(), line, None) {
+                    Err(e) => e,
+                    Ok((node, reply, failed_over)) => {
+                        let Some(node_batch) = token_u64(&reply, "batch=") else {
+                            return reply; // typed node-side error
+                        };
+                        let node_jobs: Vec<u64> = reply
+                            .split_whitespace()
+                            .find_map(|t| t.strip_prefix("jobs="))
+                            .map(|list| list.split(',').filter_map(|v| v.parse().ok()).collect())
+                            .unwrap_or_default();
+                        // relaxed: monotone statistics counter.
+                        self.routed_jobs.fetch_add(node_jobs.len() as u64, Ordering::Relaxed);
+                        if failed_over {
+                            // relaxed: monotone statistics counter.
+                            self.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let rids: Vec<u64> = node_jobs
+                            .iter()
+                            .map(|&nid| {
+                                self.track_job(JobRoute {
+                                    node: node.addr().to_string(),
+                                    node_job: nid,
+                                    submit_line: String::new(), // batch jobs re-home as a unit
+                                    graph: graph.clone(),
+                                    failover: failed_over,
+                                })
+                            })
+                            .collect();
+                        let rbatch = {
+                            // relaxed: monotone id allocator; the registry
+                            // mutex below orders the insert.
+                            let id = self.batch_seq.fetch_add(1, Ordering::Relaxed) + 1;
+                            let mut batches =
+                                self.batches.lock().unwrap_or_else(PoisonError::into_inner);
+                            batches.insert(id, (node.addr().to_string(), node_batch));
+                            while batches.len() > BATCH_RETENTION {
+                                batches.pop_first();
+                            }
+                            id
+                        };
+                        let ids: Vec<String> = rids.iter().map(|r| r.to_string()).collect();
+                        let mut out = format!(
+                            "ok batch={rbatch} count={} jobs={}",
+                            rids.len(),
+                            ids.join(",")
+                        );
+                        if failed_over {
+                            out.push_str(" failover=1");
+                        }
+                        out
+                    }
+                }
+            }
+            Command::BatchWait { id, timeout_ms } => {
+                let target = {
+                    let batches = self.batches.lock().unwrap_or_else(PoisonError::into_inner);
+                    batches.get(&id).cloned()
+                };
+                let Some((addr, node_batch)) = target else {
+                    return render_err("unknown_batch", &format!("no batch with id {id}"));
+                };
+                let wire = match timeout_ms {
+                    Some(ms) => format!("batch wait id={node_batch} timeout_ms={ms}"),
+                    None => format!("batch wait id={node_batch}"),
+                };
+                match self.node(&addr).ok_or(()).and_then(|n| self.send(&n, &wire).map_err(|_| ()))
+                {
+                    Ok(reply) => rewrite_token(&reply, "batch=", id),
+                    Err(()) => render_err(
+                        "unavailable",
+                        &format!("batch {id} lost its node; batch jobs do not re-home"),
+                    ),
+                }
+            }
+        }
+    }
+
+    /// `graph put`: pin the session on its ring owners, retain the put
+    /// line for failover re-uploads. At least one owner must accept.
+    fn graph_put(&self, name: &str, line: &str) -> String {
+        let owners: Vec<String> =
+            self.ring.owners(name, self.replication).iter().map(|s| s.to_string()).collect();
+        let mut ok_reply: Option<String> = None;
+        let mut err_reply: Option<String> = None;
+        let mut synced = BTreeSet::new();
+        for addr in &owners {
+            let Some(node) = self.node(addr) else { continue };
+            match self.send(&node, line) {
+                Ok(reply) if reply.starts_with("ok") => {
+                    synced.insert(addr.clone());
+                    ok_reply.get_or_insert(reply);
+                }
+                Ok(reply) => {
+                    err_reply.get_or_insert(reply);
+                }
+                Err(_) => {}
+            }
+        }
+        let Some(reply) = ok_reply else {
+            return err_reply
+                .unwrap_or_else(|| render_err("unavailable", "no graph owner reachable"));
+        };
+        let mut graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+        let (version, replaced) = match graphs.get(name) {
+            Some(prev) => (prev.version + 1, true),
+            None => (1, false),
+        };
+        graphs.insert(
+            name.to_string(),
+            GraphRecord { put_line: line.to_string(), patches: Vec::new(), version, synced },
+        );
+        let n = token_u64(&reply, "n=").unwrap_or(0);
+        let m = token_u64(&reply, "m=").unwrap_or(0);
+        let mut out = format!("ok graph={name} n={n} m={m} version={version}");
+        if replaced {
+            out.push_str(" replaced=1");
+        }
+        out
+    }
+
+    /// `graph patch`: apply on every synced owner (resyncing stragglers
+    /// first), retain the patch line on success.
+    fn graph_patch(&self, name: &str, line: &str) -> String {
+        if !self.graph_retained(name) {
+            return render_err("unknown_graph", &format!("no pinned graph named {name}"));
+        }
+        let owners: Vec<String> =
+            self.ring.owners(name, self.replication).iter().map(|s| s.to_string()).collect();
+        let mut ok_reply: Option<String> = None;
+        let mut err_reply: Option<String> = None;
+        let mut appliers = BTreeSet::new();
+        for addr in &owners {
+            let Some(node) = self.node(addr) else { continue };
+            let sent = if self.is_synced(name, addr) {
+                self.send(&node, line)
+            } else {
+                self.resync_graph(&node, name).and_then(|()| self.send(&node, line))
+            };
+            match sent {
+                Ok(reply) if reply.starts_with("ok") => {
+                    appliers.insert(addr.clone());
+                    ok_reply.get_or_insert(reply);
+                }
+                Ok(reply) => {
+                    err_reply.get_or_insert(reply);
+                }
+                Err(_) => {}
+            }
+        }
+        let mut graphs = self.graphs.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(rec) = graphs.get_mut(name) else {
+            return render_err("unknown_graph", &format!("no pinned graph named {name}"));
+        };
+        match ok_reply {
+            Some(reply) => {
+                rec.version += 1;
+                rec.patches.push(line.to_string());
+                rec.synced = appliers;
+                rewrite_token(&reply, "version=", rec.version)
+            }
+            None => {
+                // Nothing applied: the record is unchanged, so synced
+                // nodes stay synced.
+                err_reply.unwrap_or_else(|| render_err("unavailable", "no graph owner reachable"))
+            }
+        }
+    }
+}
+
+/// Bind `addr`, print the bound address, and serve the router forever.
+/// The accept loop is the shared [`serve_lines`], so connection caps,
+/// line bounds and the wire fault points behave exactly as on a node.
+pub fn serve_router(router: Arc<Router>, addr: &str, opts: ServeOptions) -> Result<()> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("heipa router listening on {}", listener.local_addr()?);
+    let handler: LineHandler = Arc::new(move |line| router.handle_line(line));
+    serve_lines(listener, opts, handler)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_helpers_rewrite_exact_keys_only() {
+        assert_eq!(token_u64("ok job=17 state=queued", "job="), Some(17));
+        assert_eq!(token_u64("ok id=3 j=120.0", "id="), Some(3));
+        assert_eq!(token_u64("ok state=done", "job="), None);
+        // `id=` must not match inside `job=` (token prefix, not substr).
+        assert_eq!(rewrite_token("ok job=17 id=17", "id=", 2), "ok job=17 id=2");
+        assert_eq!(rewrite_token("ok job=17 state=queued", "job=", 5), "ok job=5 state=queued");
+        // Unrelated tokens pass through untouched.
+        assert_eq!(rewrite_token("ok mapping=1,2,3", "id=", 9), "ok mapping=1,2,3");
+    }
+
+    #[test]
+    fn unknown_ids_are_typed_errors() {
+        let router = Router::new(&[], RouterConfig::default());
+        assert!(router.handle_line("status job=1").starts_with("err code=unknown_job"));
+        assert!(router.handle_line("cancel job=1").starts_with("err code=unknown_job"));
+        assert!(router.handle_line("batch wait id=1").starts_with("err code=unknown_batch"));
+        assert!(router
+            .handle_line("cluster route name=x")
+            .starts_with("err code=unknown_graph"));
+        assert_eq!(router.handle_line("jobs"), "ok count=0");
+        assert_eq!(router.handle_line("graph list"), "ok count=0");
+        // Garbage still parses to a typed reply through the shared parser.
+        assert!(router.handle_line("frob").starts_with("err code=parse"));
+    }
+
+    #[test]
+    fn empty_fleet_reports_unavailable_not_hangs() {
+        let router = Router::new(&[], RouterConfig::default());
+        let reply = router.handle_line("map instance=wal_598a hierarchy=2:2 distance=1:10");
+        assert!(reply.starts_with("err code=unavailable"), "{reply}");
+        let reply = router.handle_line("graph put name=t csr=0,2,4,6/1,2,0,2,0,1");
+        assert!(reply.starts_with("err code=unavailable"), "{reply}");
+        // Aggregated metrics over zero nodes still render every key.
+        let m = router.handle_line("metrics");
+        assert!(m.starts_with("ok requests=0"), "{m}");
+        assert!(m.contains(" routed_jobs=0 failovers=0 nodes_up=0"), "{m}");
+    }
+
+    #[test]
+    fn dead_fleet_fails_over_to_unavailable() {
+        // Two unreachable addrs: every candidate fails, the job is
+        // terminal (typed error), never hung.
+        let cfg = RouterConfig { request_timeout_ms: 100, ..RouterConfig::default() };
+        let router = Router::new(&["127.0.0.1:1".into(), "127.0.0.1:2".into()], cfg);
+        let reply = router.handle_line("map instance=wal_598a hierarchy=2:2 distance=1:10");
+        assert!(reply.starts_with("err code=unavailable"), "{reply}");
+        assert_eq!(router.routed_jobs(), 0);
+        assert!(router.nodes().iter().all(|n| n.health() == Health::Down));
+    }
+}

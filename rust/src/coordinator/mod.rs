@@ -24,7 +24,11 @@
 //!
 //! Front-ends: an in-process handle ([`service::Service`]) and a
 //! line-oriented TCP protocol ([`protocol`], `heipa serve` / `heipa
-//! client`) with a bounded connection pool.
+//! client`) with a bounded connection pool. A fleet of these processes
+//! scales horizontally behind the [`crate::cluster`] router, which
+//! speaks the same protocol and needs nothing from a node beyond the
+//! typed `ping`, `drain` and `cluster …` verbs every coordinator
+//! answers for itself.
 
 pub mod protocol;
 pub mod service;

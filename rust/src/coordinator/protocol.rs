@@ -19,7 +19,10 @@
 //! batch wait id=7 timeout_ms=5000
 //! map instance=rgg15 polish=1          # legacy blocking path (submit+wait+result)
 //! metrics
-//! ping
+//! ping                                 # ok version=… queue_depth=… in_flight=… graphs=…
+//! drain timeout_ms=5000                # stop admitting, finish in-flight → ok drained=1
+//! cluster nodes                        # node table (routers: the fleet; nodes: self)
+//! cluster route name=mesh              # which node(s) own a session graph
 //! ```
 //!
 //! Responses are single lines. `submit` replies `ok job=<id> state=queued`
@@ -96,7 +99,22 @@ pub enum Command {
     /// Block until every job of a batch reaches a terminal state.
     BatchWait { id: u64, timeout_ms: Option<u64> },
     Metrics,
+    /// Cheap typed health probe:
+    /// `ok version=<crate> queue_depth=<d> in_flight=<f> graphs=<g>`.
     Ping,
+    /// Graceful drain: stop admitting (new submits get
+    /// `err code=unavailable`), finish queued + in-flight work, then
+    /// reply `ok drained=1` (or `err code=timeout` past `timeout_ms`).
+    Drain { timeout_ms: Option<u64> },
+    /// The node table. A plain `serve` node answers for itself
+    /// (`ok count=1 nodes=self/up/<qd>/<if>`); the cluster router
+    /// answers with one `addr/health/queue_depth/in_flight` entry per
+    /// downstream node.
+    ClusterNodes,
+    /// Which node(s) own a session graph. A plain node answers
+    /// `owners=self` when it pins the graph; the router answers with
+    /// the ring's replica set.
+    ClusterRoute { name: String },
 }
 
 /// Parse the shared `key=value` body of `map`/`submit`.
@@ -179,6 +197,26 @@ pub fn parse_command(line: &str) -> Result<Command> {
         "ping" => Ok(Command::Ping),
         "metrics" => Ok(Command::Metrics),
         "jobs" => Ok(Command::Jobs),
+        "drain" => {
+            let kv = parse_kv_args(tokens)?;
+            let timeout_ms = match kv.get("timeout_ms") {
+                Some(v) => Some(v.parse().context("timeout_ms")?),
+                None => None,
+            };
+            Ok(Command::Drain { timeout_ms })
+        }
+        "cluster" => {
+            let sub = tokens.next().unwrap_or("");
+            match sub {
+                "nodes" => Ok(Command::ClusterNodes),
+                "route" => {
+                    let kv = parse_kv_args(tokens)?;
+                    let name = kv.get("name").context("cluster route needs name=…")?.to_string();
+                    Ok(Command::ClusterRoute { name })
+                }
+                other => bail!("unknown cluster subcommand `{other}` (nodes|route)"),
+            }
+        }
         "map" => {
             let (req, opts) = parse_job_body(tokens)?;
             Ok(Command::Map { req, opts })
@@ -460,7 +498,45 @@ fn render_job_error(st: &JobStatus) -> String {
 /// dispatcher, so the wire semantics cannot drift between them.
 pub fn dispatch(svc: &Service, cmd: Command) -> String {
     match cmd {
-        Command::Ping => "ok pong=1".to_string(),
+        Command::Ping => format!(
+            "ok version={} queue_depth={} in_flight={} graphs={}",
+            env!("CARGO_PKG_VERSION"),
+            svc.engine().queue_depth(),
+            svc.engine().in_flight(),
+            svc.graph_entries().len(),
+        ),
+        Command::Drain { timeout_ms } => {
+            svc.start_drain();
+            let deadline = timeout_ms
+                .map(|ms| std::time::Instant::now() + std::time::Duration::from_millis(ms));
+            loop {
+                if svc.drained() {
+                    return "ok drained=1".to_string();
+                }
+                if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+                    return render_err(
+                        "timeout",
+                        &format!(
+                            "drain still has work in flight after {}ms",
+                            timeout_ms.unwrap_or(0)
+                        ),
+                    );
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+        Command::ClusterNodes => format!(
+            "ok count=1 nodes=self/up/{}/{}",
+            svc.engine().queue_depth(),
+            svc.engine().in_flight(),
+        ),
+        Command::ClusterRoute { name } => {
+            if svc.graph_names().iter().any(|n| n == &name) {
+                format!("ok graph={name} owners=self")
+            } else {
+                render_err("unknown_graph", &format!("no pinned graph named {name}"))
+            }
+        }
         Command::Metrics => render_metrics(&svc.metrics()),
         Command::Map { req, opts } => {
             // The wire never blocks on queue admission — a full queue is
@@ -744,14 +820,19 @@ impl Drop for ConnGuard {
     }
 }
 
-/// Serve the protocol on an already-bound listener until the process
+/// A per-line request handler: one request line in, one reply line out.
+/// [`serve_listener`] binds it to a [`Service`]; the cluster router
+/// ([`crate::cluster`]) binds it to its forwarding table.
+pub type LineHandler = Arc<dyn Fn(&str) -> String + Send + Sync>;
+
+/// Serve a line protocol on an already-bound listener until the process
 /// exits. Connections are thin command shells — one named thread each,
 /// bounded by [`ServeOptions::max_conns`] — and every line goes through
-/// [`handle_command`].
-pub fn serve_listener(
-    service: Arc<Service>,
+/// `handler`.
+pub fn serve_lines(
     listener: std::net::TcpListener,
     opts: ServeOptions,
+    handler: LineHandler,
 ) -> Result<()> {
     use std::io::BufReader;
     let cap = opts.max_conns.max(1);
@@ -768,7 +849,7 @@ pub fn serve_listener(
         }
         active.fetch_add(1, Ordering::SeqCst);
         let guard = ConnGuard(active.clone());
-        let svc = service.clone();
+        let handler = handler.clone();
         conn_seq += 1;
         let _ = std::thread::Builder::new().name(format!("heipa-conn-{conn_seq}")).spawn(move || {
             let _guard = guard;
@@ -793,7 +874,7 @@ pub fn serve_listener(
                     Ok(WireLine::TooLong) => {
                         render_err("toobig", &format!("request line exceeds {max_len} bytes"))
                     }
-                    Ok(WireLine::Line(line)) => handle_command(&svc, &line),
+                    Ok(WireLine::Line(line)) => handler(&line),
                 };
                 if fault::fire_global(FaultPoint::WireWrite) {
                     break;
@@ -806,6 +887,17 @@ pub fn serve_listener(
         });
     }
     Ok(())
+}
+
+/// Serve the job protocol on an already-bound listener until the
+/// process exits: [`serve_lines`] with every line dispatched through
+/// [`handle_command`] against `service`.
+pub fn serve_listener(
+    service: Arc<Service>,
+    listener: std::net::TcpListener,
+    opts: ServeOptions,
+) -> Result<()> {
+    serve_lines(listener, opts, Arc::new(move |line| handle_command(&service, line)))
 }
 
 /// Bind `addr`, print the bound address, and serve forever.
@@ -1176,6 +1268,7 @@ mod tests {
             "18446744073709551616", "priority=high", "job=0x10",
             "patch", "batch", "ops=", "ops=ae:0:1:1.0", "ops=zz", "id=", "jobs=", ";",
             "jobs=instance%3Dx", "ae:0:1", "rv:",
+            "drain", "cluster", "nodes", "route", "timeout_ms=5",
         ];
         let mut state = 0xC0FFEE_u64;
         for _ in 0..500 {
@@ -1259,6 +1352,59 @@ mod tests {
         assert!(parse_command("batch submit jobs=nokv").is_err(), "jobs must be key=value");
         assert!(parse_command("batch wait").is_err());
         assert!(parse_command("batch frob").is_err());
+    }
+
+    #[test]
+    fn ping_reports_typed_health_fields() {
+        let svc = quick_service();
+        let reply = handle_command(&svc, "ping");
+        assert_eq!(
+            reply,
+            format!("ok version={} queue_depth=0 in_flight=0 graphs=0", env!("CARGO_PKG_VERSION"))
+        );
+        handle_command(&svc, "graph put name=t csr=0,2,4,6/1,2,0,2,0,1");
+        assert!(handle_command(&svc, "ping").ends_with(" graphs=1"));
+    }
+
+    #[test]
+    fn parses_drain_and_cluster_commands() {
+        assert_eq!(parse_command("drain").unwrap(), Command::Drain { timeout_ms: None });
+        assert_eq!(
+            parse_command("drain timeout_ms=250").unwrap(),
+            Command::Drain { timeout_ms: Some(250) }
+        );
+        assert!(parse_command("drain timeout_ms=x").is_err());
+        assert_eq!(parse_command("cluster nodes").unwrap(), Command::ClusterNodes);
+        assert_eq!(
+            parse_command("cluster route name=m").unwrap(),
+            Command::ClusterRoute { name: "m".into() }
+        );
+        assert!(parse_command("cluster route").is_err(), "name= required");
+        assert!(parse_command("cluster frob").is_err());
+    }
+
+    #[test]
+    fn dispatcher_drains_and_refuses_new_work() {
+        let svc = quick_service();
+        assert_eq!(handle_command(&svc, "drain timeout_ms=2000"), "ok drained=1");
+        let refused = handle_command(
+            &svc,
+            "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10",
+        );
+        assert!(refused.starts_with("err code=unavailable"), "{refused}");
+        // Idempotent: a second drain of an already-drained service is ok.
+        assert_eq!(handle_command(&svc, "drain timeout_ms=2000"), "ok drained=1");
+    }
+
+    #[test]
+    fn cluster_verbs_on_a_plain_node_answer_for_self() {
+        let svc = quick_service();
+        assert_eq!(handle_command(&svc, "cluster nodes"), "ok count=1 nodes=self/up/0/0");
+        assert!(
+            handle_command(&svc, "cluster route name=m").starts_with("err code=unknown_graph")
+        );
+        handle_command(&svc, "graph put name=m csr=0,2,4,6/1,2,0,2,0,1");
+        assert_eq!(handle_command(&svc, "cluster route name=m"), "ok graph=m owners=self");
     }
 
     #[test]

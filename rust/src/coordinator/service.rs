@@ -19,7 +19,7 @@ use crate::graph::CsrGraph;
 use crate::incremental::{GraphPatch, PatchError, PatchSummary};
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
@@ -170,6 +170,9 @@ pub struct Service {
     retention: usize,
     /// Service-default retry policy (base for per-job overrides).
     retry: RetryPolicy,
+    /// Set by `drain`: admissions refuse with [`SubmitError::Draining`]
+    /// while in-flight work runs to completion.
+    draining: AtomicBool,
 }
 
 impl Service {
@@ -196,6 +199,7 @@ impl Service {
             counters: Arc::new(Counters::default()),
             retention: cfg.job_retention.max(1),
             retry: cfg.retry,
+            draining: AtomicBool::new(false),
         }
     }
 
@@ -255,6 +259,9 @@ impl Service {
         request: &MapRequest,
         opts: JobOptions,
     ) -> std::result::Result<JobHandle, SubmitError> {
+        if self.is_draining() {
+            return Err(SubmitError::Draining);
+        }
         let submit = self.lower_opts(opts);
         match self.engine.submit_opts(&request.to_spec(), submit) {
             Ok(h) => {
@@ -314,6 +321,9 @@ impl Service {
         requests: &[MapRequest],
         opts: JobOptions,
     ) -> std::result::Result<(u64, Vec<JobHandle>), SubmitError> {
+        if self.is_draining() {
+            return Err(SubmitError::Draining);
+        }
         let submit = self.lower_opts(opts);
         let specs: Vec<_> = requests.iter().map(|r| r.to_spec()).collect();
         match self.engine.submit_batch(&specs, submit) {
@@ -403,6 +413,24 @@ impl Service {
     /// Drop a pinned session graph; false when unknown.
     pub fn drop_graph(&self, name: &str) -> bool {
         self.engine.drop_graph(name)
+    }
+
+    /// Start draining (`drain` wire command): every subsequent admission
+    /// refuses with [`SubmitError::Draining`]; queued and in-flight jobs
+    /// run to completion. Idempotent.
+    pub fn start_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has been requested.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Whether the drain has completed: drain requested *and* neither
+    /// queued nor in-flight work remains.
+    pub fn drained(&self) -> bool {
+        self.is_draining() && self.engine.queue_depth() == 0 && self.engine.in_flight() == 0
     }
 
     pub fn metrics(&self) -> ServiceMetrics {
@@ -751,6 +779,30 @@ mod tests {
         );
         // Every warm or cold remap is a completed job.
         assert!(m.warm_remaps + m.cold_fallbacks <= m.completed);
+    }
+
+    #[test]
+    fn drain_refuses_new_work_and_finishes_in_flight() {
+        let svc =
+            Service::with_config(ServiceConfig { threads: 1, workers: 1, ..Default::default() });
+        let h = svc.submit_async(&sleepy_request(100), JobOptions::default()).unwrap();
+        svc.start_drain();
+        assert!(svc.is_draining());
+        assert!(matches!(
+            svc.submit_async(&sleepy_request(0), JobOptions::default()),
+            Err(SubmitError::Draining)
+        ));
+        assert!(matches!(
+            svc.submit_engine_batch(&[sleepy_request(0)], JobOptions::default()),
+            Err(SubmitError::Draining)
+        ));
+        h.wait().unwrap();
+        // The in-flight gauge can lag wait() by a beat; poll briefly.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !svc.drained() {
+            assert!(std::time::Instant::now() < deadline, "drain never completed");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
     }
 
     #[test]

@@ -142,6 +142,9 @@ pub enum SubmitError {
     Busy { cap: usize },
     /// The engine is shutting down.
     ShutDown,
+    /// The service is draining (`drain` wire command): in-flight jobs
+    /// finish, new admissions are refused.
+    Draining,
 }
 
 impl fmt::Display for SubmitError {
@@ -149,6 +152,7 @@ impl fmt::Display for SubmitError {
         match self {
             SubmitError::Busy { cap } => write!(f, "job queue full (cap {cap})"),
             SubmitError::ShutDown => write!(f, "engine is shutting down"),
+            SubmitError::Draining => write!(f, "service is draining"),
         }
     }
 }

@@ -33,6 +33,8 @@
 //! | `solve`           | engine `execute`, before the solver runs   | panic        |
 //! | `wire_read`       | coordinator connection loop, before a read | connection closed |
 //! | `wire_write`      | coordinator connection loop, before a reply| connection closed |
+//! | `route_dispatch`  | cluster router, before forwarding a request to a node | `Err` (dispatch retried on a replica) |
+//! | `node_probe`      | cluster health probe, before pinging a node | probe failure (node marked suspect) |
 //!
 //! Injected failures carry the [`INJECTED_MARKER`] substring in their
 //! message, which is how the engine attributes them to its
@@ -71,10 +73,14 @@ pub enum FaultPoint {
     WireRead,
     /// Coordinator wire write.
     WireWrite,
+    /// Cluster router, before forwarding a request to a node.
+    RouteDispatch,
+    /// Cluster health probe, before pinging a node.
+    NodeProbe,
 }
 
 /// Number of distinct fault points.
-const POINTS: usize = 8;
+const POINTS: usize = 10;
 
 impl FaultPoint {
     /// All points, in a fixed order (`all` in the `HEIPA_FAULTS` grammar
@@ -88,6 +94,8 @@ impl FaultPoint {
         FaultPoint::Solve,
         FaultPoint::WireRead,
         FaultPoint::WireWrite,
+        FaultPoint::RouteDispatch,
+        FaultPoint::NodeProbe,
     ];
 
     pub fn name(self) -> &'static str {
@@ -100,6 +108,8 @@ impl FaultPoint {
             FaultPoint::Solve => "solve",
             FaultPoint::WireRead => "wire_read",
             FaultPoint::WireWrite => "wire_write",
+            FaultPoint::RouteDispatch => "route_dispatch",
+            FaultPoint::NodeProbe => "node_probe",
         }
     }
 
@@ -117,6 +127,8 @@ impl FaultPoint {
             FaultPoint::Solve => 5,
             FaultPoint::WireRead => 6,
             FaultPoint::WireWrite => 7,
+            FaultPoint::RouteDispatch => 8,
+            FaultPoint::NodeProbe => 9,
         }
     }
 }

@@ -60,7 +60,11 @@
 //!   through kernel launch, hierarchy build, graph IO, job pickup and the
 //!   wire, driving the engine's self-healing pipeline (retry with capped
 //!   exponential backoff, then graceful degradation down a solver
-//!   fallback chain).
+//!   fallback chain);
+//! * a **cluster tier** ([`cluster`]): a router coordinator speaking the
+//!   same wire protocol in front of N engine processes, with
+//!   consistent-hash session routing, replication, health probes,
+//!   backpressure-aware dispatch and mid-job failover (`failover=1`).
 //!
 //! The engine itself is **job-oriented**: [`engine::Engine::submit`]
 //! enqueues a spec on a bounded priority queue served by a pool of
@@ -74,6 +78,7 @@
 
 pub mod algo;
 pub mod cancel;
+pub mod cluster;
 pub mod coarsen;
 pub mod config;
 pub mod coordinator;

@@ -8,6 +8,7 @@
 //! * `phases`  — GPU-IM phase breakdown for one instance (Table 2 row)
 //! * `suite`   — run an experiment matrix and write CSV
 //! * `serve`   — start the mapping-as-a-service coordinator (TCP job API)
+//! * `cluster` — spawn/supervise a local fleet: router + N `serve` engine nodes
 //! * `client`  — drive a running coordinator over the async wire protocol
 //!
 //! Every mapping subcommand builds an [`heipa::engine::MapSpec`] — from a
@@ -197,6 +198,7 @@ fn run() -> Result<()> {
         "phases" => cmd_phases(&args)?,
         "suite" => cmd_suite(&args)?,
         "serve" => cmd_serve(&args)?,
+        "cluster" => cmd_cluster(&args)?,
         "client" => cmd_client(&args)?,
         other => bail!("unknown subcommand `{other}` (try `heipa help`)"),
     }
@@ -221,6 +223,10 @@ fn print_help() {
          serve  [--addr 127.0.0.1:7171] [--artifacts artifacts] [--threads 0] [--cache-cap 64]\n\
                 [--workers 2] [--queue-cap 256] [--max-conns 64] [--max-attempts 1]\n\
                 [--backoff-ms 100] [--read-timeout-ms 120000] [--max-line-len 4194304]\n\
+         cluster [--addr 127.0.0.1:7070] [--nodes 2 | --join ADDR,ADDR,…] [--replication 2]\n\
+                [--probe-ms 500] [--request-timeout-ms 120000] [--max-conns 64]\n\
+                (plus --workers/--queue-cap/--max-attempts/--backoff-ms/--artifacts/\n\
+                --threads/--cache-cap, passed through to each spawned engine node)\n\
          client --addr HOST:PORT (--send \"CMD\" | --script \"CMD; CMD; …\" | --batch FILE)\n\
                 [--timeout-ms 60000]\n\
          \n\
@@ -461,6 +467,112 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .context("--max-line-len")?,
     };
     heipa::coordinator::protocol::serve_tcp(svc, &addr, opts)
+}
+
+/// Spawn and supervise a local fleet: N `heipa serve` engine children on
+/// ephemeral ports (or `--join` an existing set of addresses), then run
+/// the cluster router in front of them. Each child's address and pid are
+/// printed (`node I: addr=A pid=P`) before the router binds, so scripts
+/// can target — or kill — individual engines. Child stdout is drained
+/// under a `node I|` prefix so a chatty engine can never block on a full
+/// pipe; a child exiting is reported but not restarted (the router's
+/// failover re-homes its work onto the survivors).
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Child, Command, Stdio};
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let replication: usize = args.get_or("replication", "2").parse().context("--replication")?;
+    let probe_ms: u64 = args.get_or("probe-ms", "500").parse().context("--probe-ms")?;
+    let mut node_addrs: Vec<String> = Vec::new();
+    let mut children: Vec<Child> = Vec::new();
+    if let Some(list) = args.get("join") {
+        node_addrs =
+            list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect();
+        if node_addrs.is_empty() {
+            bail!("--join needs at least one HOST:PORT");
+        }
+    } else {
+        let n: usize = args.get_or("nodes", "2").parse().context("--nodes")?;
+        if n == 0 {
+            bail!("--nodes must be at least 1");
+        }
+        let exe = std::env::current_exe().context("locate the heipa binary")?;
+        for i in 0..n {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("serve").arg("--addr").arg("127.0.0.1:0");
+            for flag in [
+                "workers", "queue-cap", "max-attempts", "backoff-ms", "artifacts", "threads",
+                "cache-cap",
+            ] {
+                if let Some(v) = args.get(flag) {
+                    cmd.arg(format!("--{flag}")).arg(v);
+                }
+            }
+            cmd.stdin(Stdio::null()).stdout(Stdio::piped());
+            let mut child = cmd.spawn().with_context(|| format!("spawn engine node {i}"))?;
+            let stdout = child.stdout.take().expect("stdout was piped");
+            let mut reader = BufReader::new(stdout);
+            // The first line a node prints announces its bound address.
+            let mut line = String::new();
+            let node_addr = loop {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    bail!("engine node {i} exited before binding a port");
+                }
+                if let Some((_, a)) = line.trim_end().rsplit_once("listening on ") {
+                    break a.to_string();
+                }
+            };
+            println!("node {i}: addr={node_addr} pid={}", child.id());
+            std::thread::Builder::new()
+                .name(format!("heipa-node-out-{i}"))
+                .spawn(move || {
+                    let mut line = String::new();
+                    loop {
+                        line.clear();
+                        match reader.read_line(&mut line) {
+                            Ok(0) | Err(_) => {
+                                println!("node {i}: exited");
+                                return;
+                            }
+                            Ok(_) => print!("node {i}| {line}"),
+                        }
+                    }
+                })
+                .context("spawn node output drain")?;
+            node_addrs.push(node_addr);
+            children.push(child);
+        }
+    }
+    let cfg = heipa::cluster::RouterConfig {
+        replication,
+        request_timeout_ms: args
+            .get_or("request-timeout-ms", "120000")
+            .parse()
+            .context("--request-timeout-ms")?,
+        plane: None,
+    };
+    let router = std::sync::Arc::new(heipa::cluster::Router::new(&node_addrs, cfg));
+    if probe_ms > 0 {
+        router.start_probes(std::time::Duration::from_millis(probe_ms));
+    }
+    let defaults = heipa::coordinator::protocol::ServeOptions::default();
+    let opts = heipa::coordinator::protocol::ServeOptions {
+        max_conns: args.get_or("max-conns", "64").parse().context("--max-conns")?,
+        read_timeout_ms: args
+            .get_or("read-timeout-ms", &defaults.read_timeout_ms.to_string())
+            .parse()
+            .context("--read-timeout-ms")?,
+        max_line_len: args
+            .get_or("max-line-len", &defaults.max_line_len.to_string())
+            .parse()
+            .context("--max-line-len")?,
+    };
+    let result = heipa::cluster::serve_router(router, &addr, opts);
+    for mut child in children {
+        let _ = child.kill();
+    }
+    result
 }
 
 /// Drive a running coordinator: send protocol lines, print each reply.

@@ -296,7 +296,7 @@ fn serve_and_client_drive_the_async_job_api_end_to_end() {
         .unwrap();
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("pong"), "{text}");
+    assert!(text.contains("ok version="), "{text}");
     assert!(text.contains(&format!("{job}:done")), "{text}");
     assert!(text.contains("cancelled=1"), "{text}");
 }

@@ -1,0 +1,341 @@
+//! Cluster-tier integration: a real [`heipa::cluster::Router`] in front
+//! of real [`Service`] nodes speaking the wire protocol over real TCP.
+//!
+//! Nodes are spawned as `MortalNode`s — the protocol dispatcher behind a
+//! killable accept loop — so tests can simulate a node dying mid-job
+//! (port closed, live connections reset) without leaving the process.
+
+use heipa::cluster::{Health, Router, RouterConfig};
+use heipa::coordinator::protocol::{self, ServeOptions};
+use heipa::coordinator::service::{Service, ServiceConfig};
+use heipa::fault::{FaultPlane, FaultPoint};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A coordinator node that can be killed: the real protocol dispatcher
+/// ([`protocol::handle_command`]) behind a hand-rolled accept loop with
+/// a stop flag. `kill` closes the listening port and resets every live
+/// connection — the TCP signature of a `kill -9`d process.
+struct MortalNode {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl MortalNode {
+    fn spawn(svc: Arc<Service>) -> MortalNode {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let (stop2, conns2) = (stop.clone(), conns.clone());
+        std::thread::spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).unwrap();
+                        conns2.lock().unwrap().push(stream.try_clone().unwrap());
+                        let svc = svc.clone();
+                        let stop = stop2.clone();
+                        std::thread::spawn(move || {
+                            let mut reader = BufReader::new(stream.try_clone().unwrap());
+                            let mut writer = stream;
+                            let mut line = String::new();
+                            loop {
+                                line.clear();
+                                match reader.read_line(&mut line) {
+                                    Ok(0) | Err(_) => return,
+                                    Ok(_) => {}
+                                }
+                                if stop.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                let reply = protocol::handle_command(&svc, line.trim_end());
+                                if writeln!(writer, "{reply}").is_err() {
+                                    return;
+                                }
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => return,
+                }
+            }
+            // Dropping the listener here closes the port.
+        });
+        MortalNode { addr, stop, conns }
+    }
+
+    fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for c in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        // Let the accept loop notice the flag and drop the port.
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+fn node_service() -> Arc<Service> {
+    Arc::new(Service::with_config(ServiceConfig { threads: 1, workers: 2, ..Default::default() }))
+}
+
+/// N mortal nodes plus a router over them.
+fn fleet(n: usize, replication: usize, plane: Option<FaultPlane>) -> (Vec<MortalNode>, Router) {
+    let nodes: Vec<MortalNode> = (0..n).map(|_| MortalNode::spawn(node_service())).collect();
+    let addrs: Vec<String> = nodes.iter().map(|m| m.addr.to_string()).collect();
+    let cfg = RouterConfig { replication, request_timeout_ms: 15_000, plane };
+    (nodes, Router::new(&addrs, cfg))
+}
+
+/// One request → one reply straight to a node (bypassing the router).
+fn ask(addr: SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    writeln!(s, "{line}").unwrap();
+    let mut r = String::new();
+    BufReader::new(s).read_line(&mut r).unwrap();
+    r.trim_end().to_string()
+}
+
+const RING_PUT: &str =
+    "graph put name=g csr=0,2,4,6,8,10,12,14,16/1,7,0,2,1,3,2,4,3,5,4,6,5,7,0,6";
+const ANON_JOB: &str =
+    "instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3";
+
+fn owners_of(router: &Router, name: &str) -> Vec<String> {
+    let reply = router.handle_line(&format!("cluster route name={name}"));
+    assert!(reply.starts_with("ok "), "{reply}");
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("owners="))
+        .unwrap()
+        .split(',')
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn router_routes_jobs_translates_ids_and_aggregates_metrics() {
+    let (_nodes, router) = fleet(2, 2, None);
+    // Router-side job ids are dense (1, 2, …) regardless of which node
+    // served the job or what id it used locally.
+    for expect in 1..=2u64 {
+        let submitted = router.handle_line(&format!("submit {ANON_JOB} seed={expect}"));
+        assert_eq!(
+            submitted, format!("ok job={expect} state=queued"),
+            "router must hand out its own dense ids"
+        );
+        let waited = router.handle_line(&format!("wait job={expect}"));
+        assert!(waited.starts_with(&format!("ok job={expect} ")), "{waited}");
+        assert!(waited.contains("state=done"), "{waited}");
+        let result = router.handle_line(&format!("result job={expect}"));
+        assert!(result.starts_with(&format!("ok id={expect} ")), "{result}");
+        assert!(result.contains(" j="), "{result}");
+    }
+    // The fleet-aggregated metrics line: node counters summed, router
+    // counters appended.
+    let metrics = router.handle_line("metrics");
+    assert!(metrics.contains(" completed=2 "), "{metrics}");
+    assert!(metrics.contains("per_algorithm=sharedmap-f:2"), "{metrics}");
+    assert!(metrics.contains(" routed_jobs=2 failovers=0 nodes_up=2"), "{metrics}");
+    let ping = router.handle_line("ping");
+    assert!(ping.contains("nodes=2 nodes_up=2"), "{ping}");
+    let listed = router.handle_line("cluster nodes");
+    assert!(listed.starts_with("ok count=2 nodes="), "{listed}");
+    assert_eq!(listed.matches("/up/").count(), 2, "{listed}");
+}
+
+#[test]
+fn router_speaks_the_wire_over_tcp() {
+    // The router behind the shared accept loop (`serve_lines`), exactly
+    // as `serve_router` wires it — driven over a real client socket.
+    let (_nodes, router) = fleet(2, 2, None);
+    let router = Arc::new(router);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let router = router.clone();
+        let handler: protocol::LineHandler = Arc::new(move |line| router.handle_line(line));
+        std::thread::spawn(move || {
+            let _ = protocol::serve_lines(listener, ServeOptions::default(), handler);
+        });
+    }
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut send = |line: &str| -> String {
+        writeln!(writer, "{line}").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    };
+    let ping = send("ping");
+    assert!(ping.starts_with("ok version="), "{ping}");
+    assert!(ping.contains("nodes=2"), "{ping}");
+    assert_eq!(send(&format!("submit {ANON_JOB} seed=7")), "ok job=1 state=queued");
+    assert!(send("wait job=1").contains("state=done"));
+    assert!(send("bogus").starts_with("err code=parse"));
+}
+
+#[test]
+fn session_graphs_pin_on_exactly_r_replicas() {
+    let (nodes, router) = fleet(3, 2, None);
+    let put = router.handle_line(RING_PUT);
+    assert_eq!(put, "ok graph=g n=8 m=8 version=1");
+    let owners = owners_of(&router, "g");
+    assert_eq!(owners.len(), 2, "replication=2 → two ring owners: {owners:?}");
+    // Exactly the two owners hold the graph — verified against each node
+    // directly, behind the router's back.
+    for node in &nodes {
+        let held = ask(node.addr, "graph list");
+        if owners.contains(&node.addr.to_string()) {
+            assert_eq!(held, "ok count=1 graphs=g@v1", "owner {}", node.addr);
+        } else {
+            assert_eq!(held, "ok count=0", "non-owner {}", node.addr);
+        }
+    }
+    // Session jobs and patches flow through the router; the patch lands
+    // on every owner and bumps the router-side version.
+    let mapped =
+        router.handle_line("map graph=g algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3");
+    assert!(mapped.starts_with("ok id="), "{mapped}");
+    let patched = router.handle_line("graph patch name=g ops=ae:0:4:1.0");
+    assert!(patched.contains("version=2"), "{patched}");
+    for addr in &owners {
+        let node = nodes.iter().find(|n| n.addr.to_string() == *addr).unwrap();
+        assert_eq!(ask(node.addr, "graph list"), "ok count=1 graphs=g@v2");
+    }
+    assert_eq!(router.handle_line("graph del name=g"), "ok dropped=g");
+    for node in &nodes {
+        assert_eq!(ask(node.addr, "graph list"), "ok count=0");
+    }
+}
+
+#[test]
+fn blocking_map_fails_over_when_the_owner_dies() {
+    let (nodes, router) = fleet(2, 1, None);
+    assert_eq!(router.handle_line(RING_PUT), "ok graph=g n=8 m=8 version=1");
+    let owners = owners_of(&router, "g");
+    assert_eq!(owners.len(), 1);
+    let owner = nodes.iter().find(|n| n.addr.to_string() == owners[0]).unwrap();
+    let survivor = nodes.iter().find(|n| n.addr.to_string() != owners[0]).unwrap();
+    assert_eq!(ask(survivor.addr, "graph list"), "ok count=0", "graph pinned on owner only");
+    owner.kill();
+    // The session job lands on the survivor: the router re-uploads the
+    // graph from its retained copy and tags the reply.
+    let mapped =
+        router.handle_line("map graph=g algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3");
+    assert!(mapped.starts_with("ok id="), "{mapped}");
+    assert!(mapped.ends_with(" failover=1"), "{mapped}");
+    assert_eq!(ask(survivor.addr, "graph list"), "ok count=1 graphs=g@v1", "graph re-uploaded");
+    let metrics = router.handle_line("metrics");
+    assert!(metrics.contains(" failovers=1 "), "{metrics}");
+    let dead = router.nodes().iter().find(|n| n.addr() == owners[0]).unwrap();
+    assert_eq!(dead.health(), Health::Down);
+}
+
+#[test]
+fn async_job_rehomes_when_its_node_dies_mid_job() {
+    let (nodes, router) = fleet(2, 1, None);
+    assert_eq!(router.handle_line(RING_PUT), "ok graph=g n=8 m=8 version=1");
+    let owners = owners_of(&router, "g");
+    let owner = nodes.iter().find(|n| n.addr.to_string() == owners[0]).unwrap();
+    // The job routes to the graph's owner and sleeps there…
+    let submitted = router.handle_line(
+        "submit graph=g algorithm=sharedmap-f hierarchy=2:2 distance=1:10 eps=0.3 opt.__sleep_ms=300",
+    );
+    assert_eq!(submitted, "ok job=1 state=queued");
+    // …which dies mid-job. The wait hits the dead node, and the router
+    // re-submits the retained line to the survivor (re-uploading the
+    // graph) instead of surfacing the transport error.
+    owner.kill();
+    let waited = router.handle_line("wait job=1");
+    assert!(waited.starts_with("ok job=1 "), "{waited}");
+    assert!(waited.contains("state=done"), "{waited}");
+    assert!(waited.ends_with(" failover=1"), "{waited}");
+    let result = router.handle_line("result job=1");
+    assert!(result.starts_with("ok id=1 "), "{result}");
+    assert!(result.contains(" j="), "{result}");
+    assert!(result.ends_with(" failover=1"), "{result}");
+    let metrics = router.handle_line("metrics");
+    assert!(metrics.contains(" failovers=1 "), "{metrics}");
+    assert!(metrics.contains(" routed_jobs=1 "), "{metrics}");
+    assert!(metrics.contains(" nodes_up=1"), "{metrics}");
+}
+
+#[test]
+fn seeded_chaos_leaves_every_job_terminal() {
+    // Severed links (route_dispatch) and lost probes (node_probe) at
+    // high rates: every reply must still be terminal — `ok …` or a
+    // typed `err code=…` — never a hang (the test completing is the
+    // liveness assertion; socket timeouts bound every wait).
+    let mut plane = FaultPlane::disarmed();
+    plane.arm(FaultPoint::RouteDispatch, 0.35, 11);
+    plane.arm(FaultPoint::NodeProbe, 0.5, 5);
+    let (_nodes, router) = fleet(2, 2, Some(plane));
+    let router = Arc::new(router);
+    router.start_probes(Duration::from_millis(25));
+    let terminal = |r: &str| r.starts_with("ok ") || r.starts_with("err code=");
+    let mut accepted = Vec::new();
+    for seed in 0..8u64 {
+        let reply = router.handle_line(&format!("submit {ANON_JOB} seed={seed}"));
+        assert!(terminal(&reply), "submit not terminal: {reply}");
+        if let Some(id) = reply.split_whitespace().find_map(|t| t.strip_prefix("job=")) {
+            accepted.push(id.parse::<u64>().unwrap());
+        }
+    }
+    assert!(!accepted.is_empty(), "a 35% fault rate must not reject everything");
+    for id in &accepted {
+        let reply = router.handle_line(&format!("wait job={id}"));
+        assert!(terminal(&reply), "wait not terminal: {reply}");
+        if reply.starts_with("ok ") {
+            assert!(reply.contains("state="), "{reply}");
+        }
+    }
+    // The control plane stays coherent under the same chaos.
+    let jobs = router.handle_line("jobs");
+    assert!(terminal(&jobs), "{jobs}");
+    let metrics = router.handle_line("metrics");
+    assert!(metrics.starts_with("ok requests="), "{metrics}");
+    assert!(metrics.contains(" routed_jobs="), "{metrics}");
+}
+
+#[test]
+fn batches_route_as_a_unit_through_the_router() {
+    let (_nodes, router) = fleet(2, 2, None);
+    let jobs: Vec<String> = (1..=3)
+        .map(|s| protocol::escape_value(&format!("{ANON_JOB} seed={s}")))
+        .collect();
+    let reply = router.handle_line(&format!("batch submit jobs={}", jobs.join(";")));
+    assert!(reply.starts_with("ok batch=1 count=3 jobs=1,2,3"), "{reply}");
+    let waited = router.handle_line("batch wait id=1");
+    assert_eq!(waited, "ok batch=1 count=3 done=3 failed=0 cancelled=0 expired=0");
+    // The three batched jobs are individually addressable by router id.
+    for id in 1..=3u64 {
+        let status = router.handle_line(&format!("status job={id}"));
+        assert!(status.contains("state=done"), "{status}");
+    }
+    let metrics = router.handle_line("metrics");
+    assert!(metrics.contains(" batches=1 "), "{metrics}");
+    assert!(metrics.contains(" routed_jobs=3 "), "{metrics}");
+}
+
+#[test]
+fn drain_fans_out_to_the_fleet() {
+    let (nodes, router) = fleet(2, 2, None);
+    assert_eq!(router.handle_line("drain timeout_ms=30000"), "ok drained=1");
+    // Every node refuses new work afterwards — the drain really reached
+    // them all.
+    for node in &nodes {
+        let refused = ask(node.addr, &format!("submit {ANON_JOB}"));
+        assert!(refused.starts_with("err code=unavailable"), "{refused}");
+    }
+}

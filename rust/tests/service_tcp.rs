@@ -73,7 +73,9 @@ fn ping_map_metrics_over_tcp() {
         ],
     );
     assert_eq!(replies.len(), 3, "replies: {replies:?}");
-    assert!(replies[0].contains("pong"));
+    assert!(replies[0].starts_with("ok version="), "{}", replies[0]);
+    assert!(replies[0].contains("queue_depth="), "{}", replies[0]);
+    assert!(replies[0].contains("graphs=0"), "{}", replies[0]);
     assert!(replies[1].starts_with("ok "), "{}", replies[1]);
     assert!(replies[1].contains("algorithm=gpu-im"));
     assert!(replies[1].contains(" j="));
@@ -95,7 +97,7 @@ fn protocol_errors_do_not_kill_connection() {
     let text = protocol::unescape_value(msg);
     assert!(text.contains("missing_instance"), "{text}");
     assert!(text.contains(' '), "message lost its spaces: {text}");
-    assert!(replies[2].contains("pong"));
+    assert!(replies[2].starts_with("ok version="), "{}", replies[2]);
 }
 
 #[test]
@@ -260,6 +262,32 @@ fn batch_submit_and_wait_over_tcp() {
 }
 
 #[test]
+fn drain_finishes_in_flight_work_and_refuses_new_jobs() {
+    let addr = spawn(two_worker_service(), ServeOptions::default());
+    let mut conn = Conn::open(addr);
+    let submitted = conn.send(
+        "submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10 opt.__sleep_ms=300",
+    );
+    let job = job_id_of(&submitted);
+    // Drain from a different connection: it blocks until the in-flight
+    // job retires, then acknowledges.
+    let mut other = Conn::open(addr);
+    let drained = other.send("drain timeout_ms=30000");
+    assert_eq!(drained, "ok drained=1");
+    // The in-flight job finished normally rather than being dropped.
+    let waited = conn.send(&format!("wait job={job}"));
+    assert!(waited.contains("state=done"), "{waited}");
+    // New work — async and blocking alike — is refused with a typed error.
+    let refused = conn.send("submit instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10");
+    assert!(refused.starts_with("err code=unavailable"), "{refused}");
+    let refused = conn.send("map instance=wal_598a algorithm=sharedmap-f hierarchy=2:2 distance=1:10");
+    assert!(refused.starts_with("err code=unavailable"), "{refused}");
+    // Reads still work on a drained node, and drain is idempotent.
+    assert!(conn.send(&format!("result job={job}")).starts_with("ok "), "result after drain");
+    assert_eq!(other.send("drain timeout_ms=1000"), "ok drained=1");
+}
+
+#[test]
 fn oversize_lines_get_toobig_and_the_connection_survives() {
     let addr = spawn(
         two_worker_service(),
@@ -272,7 +300,7 @@ fn oversize_lines_get_toobig_and_the_connection_survives() {
     let oversize = format!("graph put name=big csr=0,{}", "1,".repeat(200));
     let reply = conn.send(&oversize);
     assert!(reply.starts_with("err code=toobig"), "{reply}");
-    assert!(conn.send("ping").contains("pong"));
+    assert!(conn.send("ping").starts_with("ok version="));
     // A line at the limit still parses normally (as a protocol error for
     // this garbage body, not a framing error).
     let at_limit = "x".repeat(64);
@@ -284,7 +312,7 @@ fn oversize_lines_get_toobig_and_the_connection_survives() {
 fn connection_cap_rejects_with_busy_and_recovers() {
     let addr = spawn(two_worker_service(), ServeOptions { max_conns: 1, ..ServeOptions::default() });
     let mut first = Conn::open(addr);
-    assert!(first.send("ping").contains("pong"));
+    assert!(first.send("ping").starts_with("ok version="));
     // Second concurrent connection: one busy line, then closed.
     let over = TcpStream::connect(addr).unwrap();
     over.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
@@ -315,7 +343,7 @@ fn connection_cap_rejects_with_busy_and_recovers() {
         writeln!(writer, "ping").unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
-        assert!(line.contains("pong"), "{line}");
+        assert!(line.starts_with("ok version="), "{line}");
         break;
     }
 }
