@@ -1,0 +1,18 @@
+# Repo-level build helpers. The rust crate builds with plain cargo (from
+# rust/); this Makefile only wraps the cross-language steps.
+
+.PHONY: artifacts test bench-offload
+
+# AOT-compile the JAX/Pallas kernels to the HLO artifacts the PJRT
+# runtime loads (rust/artifacts/*.hlo.txt): the QAP polish kernels and
+# the per-class graph kernels (match_round / contract_gather /
+# jet_round). Needs jax[cpu] in the active Python environment.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+test:
+	cd rust && cargo test --release
+
+# Per-phase CPU-vs-device crossover (writes rust/BENCH_offload.json).
+bench-offload: artifacts
+	cd rust && cargo bench --bench offload

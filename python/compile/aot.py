@@ -11,6 +11,13 @@ Usage: `python -m compile.aot --out-dir ../artifacts` (from python/).
 import argparse
 import pathlib
 
+import jax
+
+# The graph/batched kernels carry f64 edge weights and u64 noise state;
+# x64 must be on before anything is traced. The f32 QAP kernels pin their
+# dtypes explicitly and are unaffected.
+jax.config.update("jax_enable_x64", True)
+
 from jax._src.lib import xla_client as xc
 
 from . import model
@@ -18,6 +25,10 @@ from . import model
 # Padded QAP kernel sizes; must match
 # rust/src/runtime/offload.rs::QAP_KERNEL_SIZES.
 QAP_SIZES = (32, 64, 256)
+
+# Padded graph classes (n; edge slots m = 8n); must match
+# rust/src/runtime/device.rs::GRAPH_CLASSES.
+GRAPH_SIZES = (1024, 4096, 16384)
 
 
 def to_hlo_text(lowered) -> str:
@@ -33,13 +44,21 @@ def to_hlo_text(lowered) -> str:
 def build_all(out_dir: pathlib.Path) -> list[pathlib.Path]:
     out_dir.mkdir(parents=True, exist_ok=True)
     written = []
-    for k in QAP_SIZES:
-        lowered = model.qap_step_jit(k)
+
+    def emit(name: str, lowered) -> None:
         text = to_hlo_text(lowered)
-        path = out_dir / f"qap_step_k{k}.hlo.txt"
+        path = out_dir / f"{name}.hlo.txt"
         path.write_text(text)
         written.append(path)
         print(f"wrote {path} ({len(text)} chars)")
+
+    for k in QAP_SIZES:
+        emit(f"qap_step_k{k}", model.qap_step_jit(k))
+        emit(f"qap_sweep_k{k}", model.qap_sweep_jit(k))
+    for n in GRAPH_SIZES:
+        emit(f"match_round_n{n}", model.match_round_jit(n))
+        emit(f"contract_gather_n{n}", model.contract_gather_jit(n))
+        emit(f"jet_round_n{n}", model.jet_round_jit(n))
     return written
 
 

@@ -1,1 +1,3 @@
-# L1: Pallas kernel(s) for the paper's compute hot-spot.
+# L1: Pallas/device kernels for the paper's compute hot-spots: the dense
+# QAP swap search (qap_swap, batched in qap_batch) and the irregular
+# multilevel graph phases (graph: matching, contraction, Jet gains).

@@ -1,0 +1,180 @@
+"""L1 device kernels for the irregular multilevel graph phases.
+
+The paper's coarsening/refinement hot spots are CSR sweeps; here each is
+reformulated as one *batched* device program over a padded edge list so a
+whole superstep is a single PJRT launch:
+
+* `match_round`     — one round of heavy-edge preference matching:
+                      per-edge ratings -> per-vertex best preference ->
+                      mutual handshake, all on device,
+* `contract_gather` — the gather half of CAS contraction: map both edge
+                      endpoints through the coarse map in one launch,
+* `jet_round`       — Jet candidate selection: dense per-vertex block
+                      connectivity (segment-sum) x distance matrix
+                      (Pallas f64 matmul) -> best destination + gain.
+
+Graphs are padded to the compiled class size `n` (with `m = 8·n` edge
+slots); the actual `n`/`m`/`k` arrive as scalar operands so one artifact
+serves every graph below its class. Ratings replicate the Rust host
+bit-for-bit: `rating_exp2 = w²/(c(u)·c(v))` plus the `1e-12`-scaled
+splitmix64 edge noise from `rust/src/rng.rs`, so device and CPU matchings
+agree exactly. Requires `jax_enable_x64` (f64 weights, u64 noise).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Jet kernels are compiled for one dense-block class: k <= 256.
+JET_K = 256
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def _splitmix64(h: jax.Array) -> jax.Array:
+    """One splitmix64 draw from state `h` (uint64, wrapping) — the exact
+    finalizer in `rust/src/rng.rs::splitmix64`."""
+    h = h + _GOLDEN
+    z = h
+    z = (z ^ (z >> np.uint64(30))) * _MIX1
+    z = (z ^ (z >> np.uint64(27))) * _MIX2
+    return z ^ (z >> np.uint64(31))
+
+
+def _edge_noise(u: jax.Array, v: jax.Array, seed: jax.Array) -> jax.Array:
+    """Symmetric per-edge tie-break noise in [0,1) — bit-for-bit
+    `rust/src/rng.rs::edge_noise` (min/max endpoint packing, one
+    splitmix64 draw, 53-bit mantissa scaling)."""
+    a = jnp.minimum(u, v).astype(jnp.uint64)
+    b = jnp.maximum(u, v).astype(jnp.uint64)
+    h = seed ^ ((a << np.uint64(32)) | b)
+    x = _splitmix64(h)
+    return (x >> np.uint64(11)).astype(jnp.float64) * 2.0**-53
+
+
+def match_round(eu, adj, ew, vw, mate, nm, maxw, seed):
+    """One preference-matching round over the padded directed edge list.
+
+    Inputs: `eu`/`adj` i32[M] edge endpoints, `ew` f64[M], `vw` f64[N]
+    (i64 vertex weights, exact below 2^53), `mate` i32[N] with -1 =
+    unmatched, `nm` i64[2] = [n, m], `maxw` f64[1] max pair weight,
+    `seed` u64[1]. Returns `(pref i32[N], mate' i32[N])`; the host counts
+    `mate' != mate` (two per new pair, as the CPU kernel does) and decides
+    the stop condition.
+    """
+    big_n = vw.shape[0]
+    n, m = nm[0], nm[1]
+    iota_v = jnp.arange(big_n, dtype=jnp.int32)
+    iota_e = jnp.arange(eu.shape[0], dtype=jnp.int64)
+
+    # Per-edge rating, -inf where the edge can't participate: padding,
+    # either endpoint matched, or the pair weight cap exceeded.
+    valid = (
+        (iota_e < m)
+        & (mate[eu] == -1)
+        & (mate[adj] == -1)
+        & (vw[eu] + vw[adj] <= maxw[0])
+    )
+    r = (ew * ew) / (vw[eu] * vw[adj]) + 1e-12 * _edge_noise(eu, adj, seed[0])
+    r = jnp.where(valid, r, -jnp.inf)
+
+    # Best preference per vertex: max rating, ties to the smallest
+    # neighbor id — two segment passes reproduce the CPU scan's
+    # `r > best || (r == best && u < best_u)` rule exactly.
+    best = jax.ops.segment_max(r, eu, num_segments=big_n)
+    is_best = valid & (r == best[eu])
+    cand = jnp.where(is_best, adj, jnp.int32(big_n))
+    pref = jax.ops.segment_min(cand, eu, num_segments=big_n)
+    pref = jnp.where((pref >= 0) & (pref < jnp.int32(big_n)), pref, jnp.int32(-1))
+
+    # Mutual handshake: v and pref[v] chose each other.
+    pp = pref[jnp.clip(pref, 0, big_n - 1)]
+    mutual = (pref >= 0) & (pp == iota_v) & (iota_v.astype(jnp.int64) < n)
+    mate_new = jnp.where(mutual, pref, mate)
+    return pref, mate_new
+
+
+def contract_gather(eu, adj, cmap, nm):
+    """CAS-contraction gather: both endpoints of every edge mapped through
+    the coarse vertex map in one launch. Inputs `eu`/`adj` i32[M], `cmap`
+    i32[N], `nm` i64[2] = [n, m]; returns `(cu i32[M], cv i32[M])` with -1
+    in the padding slots (the host reads only the first `m`)."""
+    iota_e = jnp.arange(eu.shape[0], dtype=jnp.int64)
+    live = iota_e < nm[1]
+    cu = jnp.where(live, cmap[eu], jnp.int32(-1))
+    cv = jnp.where(live, cmap[adj], jnp.int32(-1))
+    return cu, cv
+
+
+def _matmul_f64_kernel(a_ref, b_ref, o_ref):
+    """Rectangular f64 tile-matmul, accumulated over the inner grid axis
+    (same revisited-VMEM-tile idiom as `qap_swap._matmul_kernel`)."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float64)
+
+
+def matmul_f64(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul C = A @ B for f64 A[n,k], B[k,k]."""
+    n, k = a.shape
+    assert b.shape == (k, k)
+    bt = 128
+    grid = (n // bt, k // bt, k // bt)
+    return pl.pallas_call(
+        _matmul_f64_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float64),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bt), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bt, bt), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bt), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+def jet_round(eu, adj, ew, part, locked, dmat, nmk):
+    """Jet candidate selection for one LP superstep.
+
+    Dense per-vertex block connectivity `conn[v,b] = Σ w(v,u)·[part(u)=b]`
+    by segment-sum, then `G = conn @ D` (Pallas f64 matmul) gives every
+    move's gain at once: `gain(v, from→b) = G[v,from] − G[v,b]` (paper
+    Eq. 1 for the Comm objective, exactly `refine::Objective::gain`).
+
+    Inputs: `eu`/`adj` i32[M], `ew` f64[M], `part` i32[N], `locked`
+    i32[N] (non-zero = skip), `dmat` f64[256,256] zero-padded distance
+    matrix, `nmk` i64[3] = [n, m, k]. Returns `(dest i32[N], gain
+    f64[N])`: the best destination block per vertex (ties to the smallest
+    block id, matching the CPU scan) or -1 for locked/padded/no-move
+    vertices; the host applies the Jet filter to `gain`.
+    """
+    big_n = part.shape[0]
+    n, m, k = nmk[0], nmk[1], nmk[2]
+    iota_v = jnp.arange(big_n, dtype=jnp.int32)
+    iota_e = jnp.arange(eu.shape[0], dtype=jnp.int64)
+    iota_b = jnp.arange(JET_K, dtype=jnp.int64)
+
+    ids = eu * JET_K + part[adj]
+    vals = jnp.where(iota_e < m, ew, 0.0)
+    conn = jax.ops.segment_sum(vals, ids, num_segments=big_n * JET_K)
+    g = matmul_f64(conn.reshape(big_n, JET_K), dmat)
+
+    frm = part
+    g_from = jnp.take_along_axis(g, frm[:, None].astype(jnp.int64), axis=1)
+    score = g_from - g
+    movable = (iota_b[None, :] < k) & (iota_b[None, :] != frm[:, None].astype(jnp.int64))
+    score = jnp.where(movable, score, -jnp.inf)
+    dest = jnp.argmax(score, axis=1).astype(jnp.int32)
+    gain = jnp.take_along_axis(score, dest[:, None].astype(jnp.int64), axis=1)[:, 0]
+
+    ok = (iota_v.astype(jnp.int64) < n) & (locked == 0) & jnp.isfinite(gain)
+    dest = jnp.where(ok, dest, jnp.int32(-1))
+    gain = jnp.where(ok, gain, 0.0)
+    return dest, gain

@@ -1,0 +1,52 @@
+"""L1 batched QAP sweep: sigma stays on device across swap sweeps.
+
+The legacy `qap_step` artifact scores all K² swaps in one launch but the
+host downloads the full delta matrix every sweep and re-uploads the
+one-hot assignment. `qap_sweep` bakes [`SWEEPS`] greedy sweeps into a
+single program — "device proposes, device applies": each `fori_loop`
+iteration rebuilds P from the on-device `sigma`, reuses the Pallas
+`qap_swap_kernel` to score every candidate, and applies the single best
+swap when it improves beyond the legacy `-1e-6` threshold. Only the final
+`sigma` (K i32) crosses back to the host.
+
+Padding: rows/cols ≥ k are masked out of the argmin (their W rows are
+zero but their *diagonal* M terms are not, so unmasked padding swaps
+could look improving); padded `sigma` entries are -1 so `one_hot` leaves
+their P rows zero, exactly like the host-built padding.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import qap_swap
+
+# Greedy best-swap steps baked per launch; the host loops launches for
+# larger sweep budgets and stops when sigma reaches a fixed point.
+SWEEPS = 16
+
+
+def qap_sweep(w: jax.Array, d: jax.Array, sigma: jax.Array, kk: jax.Array):
+    """`SWEEPS` on-device greedy swap sweeps; returns (sigma i32[K], j f32[1])."""
+    kp = w.shape[0]
+    iota = jnp.arange(kp, dtype=jnp.int32)
+    k = kk[0].astype(jnp.int32)
+    valid = (
+        (iota[:, None] < k) & (iota[None, :] < k) & (iota[:, None] != iota[None, :])
+    )
+
+    def body(_, carry):
+        sigma, _j = carry
+        p = jax.nn.one_hot(sigma, kp, dtype=jnp.float32)
+        delta, j = qap_swap.qap_swap_kernel(w, d, p)
+        masked = jnp.where(valid, delta, jnp.inf)
+        idx = jnp.argmin(masked)
+        x = (idx // kp).astype(jnp.int32)
+        y = (idx % kp).astype(jnp.int32)
+        improving = masked.reshape(-1)[idx] < -1e-6
+        sx, sy = sigma[x], sigma[y]
+        sigma = sigma.at[x].set(jnp.where(improving, sy, sx))
+        sigma = sigma.at[y].set(jnp.where(improving, sx, sy))
+        return sigma, j
+
+    sigma, j = jax.lax.fori_loop(0, SWEEPS, body, (sigma, jnp.float32(0.0)))
+    return sigma, jnp.reshape(j, (1,))

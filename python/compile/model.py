@@ -1,19 +1,21 @@
-"""L2 compute graph: the device-side QAP swap step.
+"""L2 compute graphs: the device-side programs the Rust runtime executes.
 
-`qap_step(W, D, P)` composes the L1 Pallas kernels into the computation
-the Rust coordinator executes per refinement sweep:
+* `qap_step(W, D, P)` — one QAP swap scoring sweep (delta[k,k], j),
+* `qap_sweep(W, D, sigma, k)` — a batch of greedy swap sweeps with sigma
+  resident on device,
+* `match_round` / `contract_gather` / `jet_round` — the batched
+  multilevel graph kernels over a padded edge list (one launch per
+  superstep).
 
-* `delta` — exact objective change for all k x k block swaps,
-* `j`     — the current block-level communication cost.
-
-This module is build-time only: `aot.py` lowers `qap_step` once per padded
-size and the Rust runtime executes the artifacts; Python is never on the
-request path.
+This module is build-time only: `aot.py` lowers each program once per
+padded size and the Rust runtime executes the artifacts; Python is never
+on the request path. The graph/batched kernels need `jax_enable_x64`
+(aot.py sets it before lowering).
 """
 
 import jax
 
-from .kernels import qap_swap
+from .kernels import graph, qap_batch, qap_swap
 
 
 def qap_step(w: jax.Array, d: jax.Array, p: jax.Array):
@@ -28,3 +30,60 @@ def qap_step_jit(k: int):
 
     spec = jax.ShapeDtypeStruct((k, k), jnp.float32)
     return jax.jit(qap_step).lower(spec, spec, spec)
+
+
+def qap_sweep_jit(k: int):
+    """Jitted `qap_sweep`: f32[k,k] W/D, i32[k] sigma, i64[1] actual k."""
+    import jax.numpy as jnp
+
+    mat = jax.ShapeDtypeStruct((k, k), jnp.float32)
+    sig = jax.ShapeDtypeStruct((k,), jnp.int32)
+    kk = jax.ShapeDtypeStruct((1,), jnp.int64)
+    return jax.jit(qap_batch.qap_sweep).lower(mat, mat, sig, kk)
+
+
+def _edge_specs(n: int):
+    """Shape specs for the padded edge list of graph class `n` (m = 8n)."""
+    import jax.numpy as jnp
+
+    m = 8 * n
+    return (
+        jax.ShapeDtypeStruct((m,), jnp.int32),  # eu
+        jax.ShapeDtypeStruct((m,), jnp.int32),  # adj
+        jax.ShapeDtypeStruct((m,), jnp.float64),  # ew
+    )
+
+
+def match_round_jit(n: int):
+    """Jitted one-launch preference-matching round for graph class `n`."""
+    import jax.numpy as jnp
+
+    eu, adj, ew = _edge_specs(n)
+    vw = jax.ShapeDtypeStruct((n,), jnp.float64)
+    mate = jax.ShapeDtypeStruct((n,), jnp.int32)
+    nm = jax.ShapeDtypeStruct((2,), jnp.int64)
+    maxw = jax.ShapeDtypeStruct((1,), jnp.float64)
+    seed = jax.ShapeDtypeStruct((1,), jnp.uint64)
+    return jax.jit(graph.match_round).lower(eu, adj, ew, vw, mate, nm, maxw, seed)
+
+
+def contract_gather_jit(n: int):
+    """Jitted contraction endpoint-gather for graph class `n`."""
+    import jax.numpy as jnp
+
+    eu, adj, _ = _edge_specs(n)
+    cmap = jax.ShapeDtypeStruct((n,), jnp.int32)
+    nm = jax.ShapeDtypeStruct((2,), jnp.int64)
+    return jax.jit(graph.contract_gather).lower(eu, adj, cmap, nm)
+
+
+def jet_round_jit(n: int):
+    """Jitted Jet candidate-selection superstep for graph class `n`."""
+    import jax.numpy as jnp
+
+    eu, adj, ew = _edge_specs(n)
+    part = jax.ShapeDtypeStruct((n,), jnp.int32)
+    locked = jax.ShapeDtypeStruct((n,), jnp.int32)
+    dmat = jax.ShapeDtypeStruct((graph.JET_K, graph.JET_K), jnp.float64)
+    nmk = jax.ShapeDtypeStruct((3,), jnp.int64)
+    return jax.jit(graph.jet_round).lower(eu, adj, ew, part, locked, dmat, nmk)

@@ -28,7 +28,13 @@ def test_build_all_writes_expected_files():
         out = pathlib.Path(td)
         written = aot.build_all(out)
         names = sorted(p.name for p in written)
-        assert names == sorted(f"qap_step_k{k}.hlo.txt" for k in aot.QAP_SIZES)
+        want = [f"qap_{kind}_k{k}.hlo.txt" for k in aot.QAP_SIZES for kind in ("step", "sweep")]
+        want += [
+            f"{kernel}_n{n}.hlo.txt"
+            for n in aot.GRAPH_SIZES
+            for kernel in ("match_round", "contract_gather", "jet_round")
+        ]
+        assert names == sorted(want)
         for p in written:
             assert p.stat().st_size > 1000
 

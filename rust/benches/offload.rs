@@ -1,14 +1,70 @@
-//! P1 (§Perf): the PJRT-offloaded QAP swap search vs the host
-//! implementation — quality parity and per-sweep cost of the
-//! AOT-compiled JAX/Pallas kernel at every padded size.
+//! Device-offload crossover harness: CPU worker pool vs batched PJRT
+//! launches, per phase × graph size.
+//!
+//! Phases: `match` (preference matching), `contract` (CAS contraction
+//! with the device gather), `refine` (the Jet loop with the device
+//! candidate kernel) at one graph per compiled class, plus `polish` (the
+//! batched QAP swap search vs the host loop at every padded k). Each row
+//! records best-of-N wall time per backend and lands in
+//! `BENCH_offload.json` (override with `HEIPA_BENCH_OUT`; set
+//! `HEIPA_BENCH_SMOKE=1` for a seconds-scale CI run) — the crossover is
+//! read straight off the `cpu_ms`/`device_ms` columns.
 //!
 //! Requires `make artifacts`; skips gracefully without them.
 
 use heipa::algo::qap;
-use heipa::partition::comm_cost_blocks;
+use heipa::coarsen::contract_cas::contract_cas;
+use heipa::coarsen::match_par::preference_matching;
+use heipa::coarsen::{matching_to_map, serial_hem};
+use heipa::graph::{gen, CsrGraph, EdgeList};
+use heipa::par::Pool;
+use heipa::partition::{comm_cost_blocks, l_max};
+use heipa::refine::jet_loop::{jet_refine, JetConfig};
+use heipa::refine::Objective;
 use heipa::rng::Rng;
-use heipa::runtime::{offload, Runtime};
+use heipa::runtime::{device, offload, Runtime};
 use heipa::topology::Machine;
+use heipa::Block;
+use std::sync::Arc;
+
+struct Record {
+    phase: &'static str,
+    graph: String,
+    n: usize,
+    cpu_ms: f64,
+    device_ms: f64,
+}
+
+fn write_json(records: &[Record], path: &str) {
+    let mut out = String::from("{\n  \"bench\": \"offload\",\n  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let speedup = if r.device_ms > 0.0 { r.cpu_ms / r.device_ms } else { 0.0 };
+        out.push_str(&format!(
+            "    {{\"bench\": \"offload\", \"phase\": \"{}\", \"graph\": \"{}\", \"n\": {}, \
+             \"cpu_ms\": {:.3}, \"device_ms\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            r.phase,
+            r.graph,
+            r.n,
+            r.cpu_ms,
+            r.device_ms,
+            speedup,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).expect("write bench json");
+}
+
+/// Best-of-`reps` wall milliseconds of `f`.
+fn best_of(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
 
 fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
@@ -23,7 +79,75 @@ fn random_bmat(k: usize, seed: u64) -> Vec<f64> {
     b
 }
 
+/// The graph-kernel phases at one size; device timings run inside an
+/// activated session with the graph anchored (first call per backend is
+/// an untimed warm-up so AOT compilation stays out of the crossover).
+fn graph_phases(records: &mut Vec<Record>, g: &Arc<CsrGraph>, label: &str, reps: usize) {
+    let pool = Pool::new(4);
+    let n = g.n();
+    let m = Machine::hier("2:2", "1:10").unwrap();
+    let k = m.k();
+    let lmax = l_max(g.total_vweight(), k, 0.03);
+    let mate = serial_hem(g, i64::MAX, 11);
+    let (map, nc) = matching_to_map(&mate);
+    let el = EdgeList::build(g);
+    let mut rng = Rng::new(17);
+    let part0: Vec<Block> = (0..n).map(|_| rng.below(k as u64) as Block).collect();
+
+    let cpu_match = best_of(reps, || {
+        let _ = preference_matching(g, &pool, i64::MAX, 7, 8);
+    });
+    let cpu_contract = best_of(reps, || {
+        let _ = contract_cas(&pool, g, &el, &map, nc);
+    });
+    let cpu_refine = best_of(reps, || {
+        let mut part = part0.clone();
+        jet_refine(&pool, g, &el, &mut part, k, lmax, &Objective::Comm(&m), &JetConfig::default());
+    });
+
+    let (dev_match, dev_contract, dev_refine) = {
+        let _guard = device::activate("artifacts");
+        let _scope = device::graph_scope(g);
+        if !device::graph_kernels_available() {
+            eprintln!("offload bench: graph kernels unavailable; device columns zeroed");
+            (0.0, 0.0, 0.0)
+        } else {
+            let _ = best_of(1, || {
+                let _ = preference_matching(g, &pool, i64::MAX, 7, 8);
+                let _ = contract_cas(&pool, g, &el, &map, nc);
+            });
+            let dm = best_of(reps, || {
+                let _ = preference_matching(g, &pool, i64::MAX, 7, 8);
+            });
+            let dc = best_of(reps, || {
+                let _ = contract_cas(&pool, g, &el, &map, nc);
+            });
+            let dr = best_of(reps, || {
+                let mut part = part0.clone();
+                jet_refine(
+                    &pool,
+                    g,
+                    &el,
+                    &mut part,
+                    k,
+                    lmax,
+                    &Objective::Comm(&m),
+                    &JetConfig::default(),
+                );
+            });
+            (dm, dc, dr)
+        }
+    };
+
+    records.push(Record { phase: "match", graph: label.into(), n, cpu_ms: cpu_match, device_ms: dev_match });
+    records.push(Record { phase: "contract", graph: label.into(), n, cpu_ms: cpu_contract, device_ms: dev_contract });
+    records.push(Record { phase: "refine", graph: label.into(), n, cpu_ms: cpu_refine, device_ms: dev_refine });
+}
+
 fn main() {
+    let smoke = std::env::var("HEIPA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("HEIPA_BENCH_OUT").unwrap_or_else(|_| "BENCH_offload.json".to_string());
     let Ok(rt) = Runtime::new("artifacts") else {
         eprintln!("offload bench: PJRT client failed to start; skipping");
         return;
@@ -33,11 +157,31 @@ fn main() {
         return;
     }
     println!("PJRT platform: {}", rt.platform());
+    let reps = if smoke { 1 } else { 3 };
+    let mut records: Vec<Record> = Vec::new();
 
-    let cases = [("2:4:4", 4u64), ("4:8:2", 5), ("4:8:6", 6)];
-    println!("\n| k | pad | J init | J host | J device | host ms | device ms | device sweeps ms/sweep |");
+    // Per-phase crossover, one graph per compiled class.
+    let sizes: &[(usize, usize)] = if smoke { &[(30, 30)] } else { &[(30, 30), (60, 60), (120, 120)] };
+    println!("\n| phase | graph | n | cpu ms | device ms |");
+    println!("|---|---|---|---|---|");
+    let before = records.len();
+    for &(w, h) in sizes {
+        let g = Arc::new(gen::grid2d(w, h, false));
+        graph_phases(&mut records, &g, &format!("grid2d_{w}x{h}"), reps);
+    }
+    for r in &records[before..] {
+        println!(
+            "| {} | {} | {} | {:.2} | {:.2} |",
+            r.phase, r.graph, r.n, r.cpu_ms, r.device_ms
+        );
+    }
+
+    // Polish: batched QAP swap search vs the host loop.
+    let cases: &[(&str, u64)] =
+        if smoke { &[("2:4:4", 4)] } else { &[("2:4:4", 4), ("4:8:2", 5), ("4:8:6", 6)] };
+    println!("\n| k | pad | J init | J host | J device | host ms | device ms | device ms/sweep |");
     println!("|---|---|---|---|---|---|---|---|");
-    for (hier, seed) in cases {
+    for &(hier, seed) in cases {
         let h = Machine::hier(hier, "1:10:100").unwrap();
         let k = h.k();
         let d = h.oracle();
@@ -61,7 +205,7 @@ fn main() {
 
         // Per-sweep kernel cost (after warm-up compile).
         let warm = std::time::Instant::now();
-        let sweeps = 10;
+        let sweeps = if smoke { 2 } else { 10 };
         for _ in 0..sweeps {
             let _ = offload::qap_step_device(&rt, &bmat, k, &h, &s_dev).unwrap();
         }
@@ -72,6 +216,19 @@ fn main() {
             offload::qap_kernel_size(k).unwrap()
         );
         assert!(j_dev <= j0, "device refinement must not worsen");
+        records.push(Record {
+            phase: "polish",
+            graph: format!("qap_{hier}"),
+            n: k,
+            cpu_ms: host_ms,
+            device_ms: dev_ms,
+        });
     }
-    println!("\n(device quality must track host quality; per-sweep time is the amortized cost of\nthe AOT-compiled two-matmul Pallas kernel incl. upload/download)");
+
+    write_json(&records, &out_path);
+    println!(
+        "\nwrote {out_path} ({} records)\n(crossover: device wins where device_ms < cpu_ms; \
+         graph-kernel device rows include the one-time graph upload amortized across rounds)",
+        records.len()
+    );
 }

@@ -405,7 +405,8 @@ impl Router {
             "requests", "failures", "completed", "cancelled", "deadline_missed",
             "busy_rejections", "hier_hits", "hier_misses", "retries", "faults_injected",
             "degraded", "patches", "graphs_replaced", "warm_remaps", "cold_fallbacks",
-            "batches", "batched_jobs", "queue_depth", "in_flight",
+            "batches", "batched_jobs", "device_launches", "h2d_bytes", "d2h_bytes",
+            "backend_fallbacks", "queue_depth", "in_flight",
         ];
         let mut sums: BTreeMap<&str, u64> = BTreeMap::new();
         let (mut host_ms, mut device_ms) = (0.0f64, 0.0f64);

@@ -9,6 +9,7 @@
 
 use crate::graph::{CsrGraph, EdgeList};
 use crate::par::{atomic_f64_add, ledger, Pool};
+use crate::runtime::device;
 use crate::{EWeight, VWeight, Vertex};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
@@ -42,13 +43,20 @@ pub fn contract_cas(pool: &Pool, g: &CsrGraph, el: &EdgeList, map: &[Vertex], nc
     let hv: Vec<AtomicU32> = (0..md).map(|_| AtomicU32::new(NULL)).collect();
     let hw: Vec<AtomicU64> = (0..md).map(|_| AtomicU64::new(0f64.to_bits())).collect();
 
+    // Device branch for the gather half: one launch maps both endpoints
+    // of every directed edge through `map` against the session's
+    // device-resident edge list. A pure index gather, so the arrays are
+    // bit-identical to the host lookups; the CAS insert below is the
+    // same on both backends.
+    let gathered = device::contract_gather(g, map);
+
     // Lines 7–10: edge-parallel insertion.
     let _k = ledger::kernel("coarsen/contract_cas:insert");
     pool.parallel_for(md, |i| {
-        let u = el.eu[i] as usize;
-        let v = g.adj[i] as usize;
-        let cu = map[u] as usize;
-        let cv = map[v];
+        let (cu, cv) = match &gathered {
+            Some((cus, cvs)) => (cus[i] as usize, cvs[i]),
+            None => (map[el.eu[i] as usize] as usize, map[g.adj[i] as usize]),
+        };
         if cu == cv as usize {
             return; // self loop discarded
         }

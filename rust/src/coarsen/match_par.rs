@@ -11,6 +11,7 @@ use super::{rating_exp2, Matching};
 use crate::graph::CsrGraph;
 use crate::par::{ledger, Pool};
 use crate::rng::edge_noise;
+use crate::runtime::device;
 use crate::{VWeight, Vertex};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
@@ -33,6 +34,37 @@ pub fn preference_matching(
     // per-round counts — no extra full reduction kernel per round.
     let mut matched_total = 0u64;
     for _round in 0..max_rounds {
+        // Device branch: one batched PJRT launch fuses both kernels of
+        // the superstep against the session's device-resident graph; the
+        // pref/match formulas are bit-identical to the pool kernels
+        // below, so both backends produce the same matching. `None`
+        // (inactive session, unanchored graph, missing artifact) falls
+        // through to the pool.
+        if let Some(next) = {
+            // relaxed: serial host code between launches — no kernel is
+            // in flight while the snapshot is taken or applied below.
+            let snap: Vec<Vertex> = mate.iter().map(|m| m.load(Ordering::Relaxed)).collect();
+            device::match_round(g, &snap, max_pair_weight as f64, seed)
+        } {
+            let mut matched_this_round = 0u64;
+            for (v, &m) in next.iter().enumerate() {
+                // relaxed: host-side apply between launches; the device
+                // round only ever matches previously-unmatched pairs.
+                if mate[v].load(Ordering::Relaxed) != m {
+                    mate[v].store(m, Ordering::Relaxed);
+                    matched_this_round += 1;
+                }
+            }
+            if matched_this_round == 0 {
+                break;
+            }
+            matched_total += matched_this_round;
+            if matched_total as f64 / n as f64 >= 0.75 {
+                break;
+            }
+            continue;
+        }
+
         // Kernel 1: compute preferences of unmatched vertices.
         let _k = ledger::kernel("coarsen/match_par:prefs");
         pool.parallel_for(n, |v| {

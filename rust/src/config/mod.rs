@@ -7,7 +7,7 @@
 //! through exactly the same path as hand-built specs.
 
 use crate::algo::Algorithm;
-use crate::engine::{EngineConfig, MapSpec, Refinement, RetryPolicy};
+use crate::engine::{Backend, EngineConfig, MapSpec, Refinement, RetryPolicy};
 use crate::multilevel::SchemeKind;
 use crate::topology::{Hierarchy, Machine};
 use anyhow::{bail, Context, Result};
@@ -38,6 +38,8 @@ pub struct RunConfig {
     pub coarsening: SchemeKind,
     /// Run the QAP polish stage (`polish = 1`).
     pub polish: bool,
+    /// Kernel execution backend (`backend = cpu|device|auto`).
+    pub backend: Backend,
     /// Seeds (the paper averages over five).
     pub seeds: Vec<u64>,
     /// Device worker threads (0 = auto).
@@ -70,6 +72,7 @@ impl Default for RunConfig {
             refinement: Refinement::Standard,
             coarsening: SchemeKind::Auto,
             polish: false,
+            backend: Backend::Cpu,
             seeds: vec![1, 2, 3, 4, 5],
             threads: 0,
             workers: 1,
@@ -105,6 +108,7 @@ impl RunConfig {
             .refinement(self.refinement)
             .coarsening(self.coarsening)
             .polish(self.polish)
+            .backend(self.backend)
             .options(self.options.clone());
         spec.topology = self.topology.clone();
         spec
@@ -155,6 +159,7 @@ impl RunConfig {
                 "refinement" => cfg.refinement = Refinement::from_name(&value)?,
                 "coarsening" => cfg.coarsening = SchemeKind::from_name(&value)?,
                 "polish" => cfg.polish = parse_bool(&value).context("polish")?,
+                "backend" => cfg.backend = Backend::from_name(&value)?,
                 "seeds" => {
                     cfg.seeds = value
                         .split(',')
@@ -299,6 +304,15 @@ mod tests {
         assert_eq!(cfg.to_spec("rgg15").coarsening, SchemeKind::Cluster);
         assert_eq!(RunConfig::default().coarsening, SchemeKind::Auto);
         assert!(RunConfig::from_kv_text("coarsening = frob").is_err());
+    }
+
+    #[test]
+    fn backend_key_lowers_to_spec() {
+        let cfg = RunConfig::from_kv_text("graph = rgg15\nbackend = device\n").unwrap();
+        assert_eq!(cfg.backend, Backend::Device);
+        assert_eq!(cfg.to_spec("rgg15").backend, Backend::Device);
+        assert_eq!(RunConfig::default().backend, Backend::Cpu);
+        assert!(RunConfig::from_kv_text("backend = tpu").is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod protocol;
 pub mod service;
 
 use crate::algo::Algorithm;
-use crate::engine::{GraphSource, MapOutcome, MapSpec, Refinement};
+use crate::engine::{Backend, GraphSource, MapOutcome, MapSpec, Refinement};
 use crate::multilevel::SchemeKind;
 use anyhow::{bail, Result};
 
@@ -61,6 +61,9 @@ pub struct MapRequest {
     pub coarsening: SchemeKind,
     /// Run the QAP polish stage after mapping.
     pub polish: bool,
+    /// Execution backend for the hot kernels (`backend=cpu|device|auto`
+    /// on the wire; the reply carries the backend actually used).
+    pub backend: Backend,
     /// Return the full mapping vector in the reply.
     pub return_mapping: bool,
     /// Solver-specific options (`opt.NAME=value` on the wire).
@@ -80,6 +83,7 @@ impl Default for MapRequest {
             refinement: Refinement::Standard,
             coarsening: SchemeKind::Auto,
             polish: false,
+            backend: Backend::Cpu,
             return_mapping: false,
             options: std::collections::BTreeMap::new(),
         }
@@ -98,6 +102,7 @@ impl MapRequest {
             .refinement(self.refinement)
             .coarsening(self.coarsening)
             .polish(self.polish)
+            .backend(self.backend)
             .return_mapping(self.return_mapping)
             .options(self.options.clone());
         spec.topology = self.topology.clone();
@@ -132,6 +137,7 @@ impl MapRequest {
             refinement: spec.refinement,
             coarsening: spec.coarsening,
             polish: spec.polish,
+            backend: spec.backend,
             return_mapping: spec.return_mapping,
             options: spec.options.clone(),
         })
@@ -190,6 +196,17 @@ pub struct ServiceMetrics {
     pub batches: u64,
     /// Jobs submitted through those batches (cumulative).
     pub batched_jobs: u64,
+    /// PJRT kernel launches issued by the device backend (cumulative;
+    /// includes the QAP polish offload).
+    pub device_launches: u64,
+    /// Bytes uploaded host→device (cumulative). Stays flat across repeat
+    /// jobs over a pinned session graph — the upload-once contract.
+    pub h2d_bytes: u64,
+    /// Bytes downloaded device→host (cumulative).
+    pub d2h_bytes: u64,
+    /// `backend=device` jobs that fell back to the CPU pool because the
+    /// runtime or an artifact was missing (cumulative).
+    pub backend_fallbacks: u64,
     /// Jobs currently waiting in the queue (gauge).
     pub queue_depth: usize,
     /// Jobs currently being solved (gauge).
@@ -223,6 +240,7 @@ mod tests {
             refinement: Refinement::Strong,
             coarsening: SchemeKind::Cluster,
             polish: true,
+            backend: Backend::Auto,
             return_mapping: true,
             options: std::collections::BTreeMap::new(),
         };

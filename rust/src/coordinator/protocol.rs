@@ -48,12 +48,16 @@
 //! a single worker-pool pass.
 //!
 //! Submits accept `max_attempts=`/`backoff_ms=` to override the
-//! service's retry policy per job.
+//! service's retry policy per job, and `backend=cpu|device|auto` to pick
+//! the kernel execution backend ([`crate::engine::Backend`]); replies
+//! carry ` backend=device` only when the device backend actually ran, so
+//! cpu replies stay byte-compatible. The cluster router forwards these
+//! lines verbatim — backend selection needs nothing router-side.
 
 use super::service::{JobOptions, Service};
 use super::{MapReply, MapRequest, ServiceMetrics};
 use crate::algo::Algorithm;
-use crate::engine::{JobState, JobStatus, Refinement, SubmitError};
+use crate::engine::{Backend, JobState, JobStatus, Refinement, SubmitError};
 use crate::incremental::PatchError;
 use crate::fault::{self, FaultPoint};
 use crate::multilevel::SchemeKind;
@@ -150,6 +154,7 @@ fn parse_job_body<'a>(
             "refinement" => req.refinement = Refinement::from_name(v)?,
             "coarsening" => req.coarsening = SchemeKind::from_name(v)?,
             "polish" => req.polish = v == "1" || v == "true",
+            "backend" => req.backend = Backend::from_name(v)?,
             "mapping" => req.return_mapping = v == "1" || v == "true",
             "priority" => opts.priority = v.parse().context("priority")?,
             "deadline_ms" => opts.deadline_ms = Some(v.parse().context("deadline_ms")?),
@@ -412,6 +417,12 @@ pub fn render_response(r: &MapReply) -> String {
     if let Some(kind) = o.remap {
         s.push_str(&format!(" remap={}", kind.name()));
     }
+    // Only non-default backends render, keeping cpu replies
+    // byte-compatible with the pre-offload wire format. `auto` never
+    // appears: the outcome carries the backend actually used.
+    if o.backend == Backend::Device {
+        s.push_str(" backend=device");
+    }
     if !o.mapping.is_empty() {
         s.push_str(" mapping=");
         let parts: Vec<String> = o.mapping.iter().map(|b| b.to_string()).collect();
@@ -427,7 +438,8 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
         "ok requests={} failures={} completed={} cancelled={} deadline_missed={} \
          busy_rejections={} hier_hits={} hier_misses={} retries={} faults_injected={} \
          degraded={} patches={} graphs_replaced={} warm_remaps={} cold_fallbacks={} \
-         batches={} batched_jobs={} queue_depth={} in_flight={} \
+         batches={} batched_jobs={} device_launches={} h2d_bytes={} d2h_bytes={} \
+         backend_fallbacks={} queue_depth={} in_flight={} \
          host_ms={:.1} device_ms={:.1} per_algorithm={}",
         m.requests,
         m.failures,
@@ -446,6 +458,10 @@ pub fn render_metrics(m: &ServiceMetrics) -> String {
         m.cold_fallbacks,
         m.batches,
         m.batched_jobs,
+        m.device_launches,
+        m.h2d_bytes,
+        m.d2h_bytes,
+        m.backend_fallbacks,
         m.queue_depth,
         m.in_flight,
         m.total_host_ms,
@@ -1093,16 +1109,20 @@ mod tests {
                 degraded: false,
                 attempts: 1,
                 remap: None,
+                backend: Backend::Cpu,
             },
         };
         let line = render_response(&r);
         assert!(line.starts_with("ok id=3 algorithm=gpu-hm"));
         assert!(line.contains(" hier_cache=hit"));
         assert!(line.contains("mapping=0,1,2,3"));
-        // First-try, non-degraded outcomes stay byte-compatible with the
-        // pre-retry wire format.
+        // First-try, non-degraded cpu outcomes stay byte-compatible with
+        // the pre-retry, pre-offload wire format.
         assert!(
-            !line.contains("degraded") && !line.contains("attempts") && !line.contains("remap"),
+            !line.contains("degraded")
+                && !line.contains("attempts")
+                && !line.contains("remap")
+                && !line.contains("backend"),
             "{line}"
         );
         let mut r = r;
@@ -1115,6 +1135,26 @@ mod tests {
         assert!(line.contains(" remap=warm"), "{line}");
         r.outcome.remap = Some(crate::engine::RemapKind::Cold);
         assert!(render_response(&r).contains(" remap=cold"));
+        r.outcome.backend = Backend::Device;
+        assert!(render_response(&r).contains(" backend=device"));
+    }
+
+    #[test]
+    fn parses_backend_key() {
+        let Command::Map { req, .. } = parse_command("map instance=x backend=device").unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(req.backend, Backend::Device);
+        let Command::Submit { req, .. } = parse_command("submit instance=x backend=auto").unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(req.backend, Backend::Auto);
+        // Default when absent; bogus values are parse errors.
+        let Command::Map { req, .. } = parse_command("map instance=x").unwrap() else { panic!() };
+        assert_eq!(req.backend, Backend::Cpu);
+        assert!(parse_command("map instance=x backend=tpu").is_err());
     }
 
     fn quick_service() -> Service {

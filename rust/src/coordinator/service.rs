@@ -455,6 +455,10 @@ impl Service {
             cold_fallbacks: self.engine.cold_fallbacks(),
             batches: self.engine.batches(),
             batched_jobs: self.engine.batched_jobs(),
+            device_launches: self.engine.device_launches(),
+            h2d_bytes: self.engine.h2d_bytes(),
+            d2h_bytes: self.engine.d2h_bytes(),
+            backend_fallbacks: self.engine.backend_fallbacks(),
             queue_depth: self.engine.queue_depth(),
             in_flight: self.engine.in_flight(),
             // relaxed: same approximate-snapshot rationale as above.
@@ -779,6 +783,42 @@ mod tests {
         );
         // Every warm or cold remap is a completed job.
         assert!(m.warm_remaps + m.cold_fallbacks <= m.completed);
+    }
+
+    #[test]
+    fn device_metrics_reconcile_with_engine_counters() {
+        // A bogus artifact dir forces every device job down the cpu
+        // fallback; the wire metrics must mirror the engine's counters.
+        let svc = Service::with_config(ServiceConfig {
+            threads: 1,
+            workers: 1,
+            artifacts_dir: "definitely_missing_artifacts".into(),
+            ..Default::default()
+        });
+        let mut req = small_request("wal_598a");
+        req.hierarchy = "2:2".into();
+        req.distance = "1:10".into();
+        req.backend = crate::engine::Backend::Device;
+        let reply = svc.submit(req.clone()).unwrap();
+        assert_eq!(reply.outcome.backend, crate::engine::Backend::Cpu);
+        assert!(!reply.outcome.degraded, "a backend fallback is not degradation");
+        let m = svc.metrics();
+        assert_eq!(m.backend_fallbacks, svc.engine().backend_fallbacks());
+        assert_eq!(m.backend_fallbacks, 1);
+        assert_eq!(
+            (m.device_launches, m.h2d_bytes, m.d2h_bytes),
+            (
+                svc.engine().device_launches(),
+                svc.engine().h2d_bytes(),
+                svc.engine().d2h_bytes()
+            )
+        );
+        assert_eq!(m.device_launches, 0, "nothing launched without artifacts");
+        // And the wire line carries the new keys.
+        let line = super::super::protocol::render_metrics(&m);
+        for key in ["device_launches=0", "h2d_bytes=0", "d2h_bytes=0", "backend_fallbacks=1"] {
+            assert!(line.contains(key), "missing {key}: {line}");
+        }
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub use crate::cancel::CancelToken;
 pub use crate::incremental::RemapKind;
 pub use job::{JobHandle, JobId, JobState, JobStatus, RetryPolicy, SubmitError, SubmitOpts};
 pub use registry::{solver, solver_by_name, solver_names, solvers};
-pub use spec::{GraphSource, MapSpec, Refinement};
+pub use spec::{Backend, GraphSource, MapSpec, Refinement};
 
 use crate::algo::{qap, Algorithm};
 use crate::fault::{self, FaultPlane, FaultPoint};
@@ -49,9 +49,9 @@ use crate::incremental::{self, GraphPatch, PatchError, PatchSummary, RemapPlan, 
 use crate::metrics::PhaseBreakdown;
 use crate::multilevel::{CoarseHierarchy, HierarchyHandle, HierarchyParams};
 use crate::par::cost::DeviceTimer;
-use crate::par::Pool;
+use crate::par::{ledger, Pool};
 use crate::partition::{block_comm_matrix, comm_cost_blocks, imbalance};
-use crate::runtime::{offload, Runtime};
+use crate::runtime::{device, offload, Runtime};
 use crate::topology::{DistanceOracle, Machine};
 use crate::Block;
 use anyhow::{Context, Result};
@@ -103,6 +103,12 @@ pub struct MapOutcome {
     /// `graph patch`), `Some(Cold)` = a remap was pending but fell back
     /// to a full solve, `None` = no patch pending (plain solve).
     pub remap: Option<RemapKind>,
+    /// The backend that actually executed this job — `Device` only when
+    /// a real PJRT device session was active for the solve. A job that
+    /// *requested* `device` but fell back (artifacts missing, client
+    /// down) reports `Cpu` here and counts in
+    /// [`Engine::backend_fallbacks`]; `auto` resolves silently.
+    pub backend: Backend,
 }
 
 /// One solver in the registry. `solve` runs the algorithm end to end and
@@ -232,6 +238,12 @@ impl EngineCtx {
         &self.pool
     }
 
+    /// The artifact directory this context resolves PJRT kernels from
+    /// (empty for [`EngineCtx::host_only`]).
+    pub fn artifacts_dir(&self) -> &str {
+        &self.artifacts_dir
+    }
+
     /// The PJRT runtime, brought up on first use; `None` when the client
     /// cannot start (the engine still maps, host polish only).
     pub fn runtime(&self) -> Option<&Runtime> {
@@ -308,6 +320,17 @@ struct EngineShared {
     batched_jobs: AtomicU64,
     /// `graph put` uploads that replaced an existing pinned name.
     graphs_replaced: AtomicU64,
+    /// Real PJRT kernel launches executed by jobs (cumulative; folded
+    /// from the worker-thread device ledger after every attempt).
+    device_launches: AtomicU64,
+    /// Host→device bytes uploaded by jobs (cumulative).
+    h2d_bytes: AtomicU64,
+    /// Device→host bytes downloaded by jobs (cumulative).
+    d2h_bytes: AtomicU64,
+    /// Device→cpu fallbacks: jobs that requested `backend=device` but
+    /// resolved to the CPU pool, plus kernel-level PJRT failures that
+    /// fell back mid-solve (cumulative).
+    backend_fallbacks: AtomicU64,
 }
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -396,7 +419,33 @@ impl EngineShared {
     /// tripped before a result was produced (the job is not `Done`).
     /// `plane` is the job's fault plane (from `__fault.*` options);
     /// injection points here also consult the process-global plane.
+    ///
+    /// Wraps the solve proper in a device-counter fold: the thread-local
+    /// PJRT ledger deltas of the attempt (launches, transfer bytes,
+    /// kernel-level fallbacks) accumulate into the engine-wide metrics.
+    /// A panicked attempt loses its deltas — acceptable for approximate
+    /// statistics.
     fn execute(
+        &self,
+        ctx: &EngineCtx,
+        spec: &MapSpec,
+        cancel: &CancelToken,
+        plane: Option<&FaultPlane>,
+    ) -> Result<Option<MapOutcome>> {
+        let dev_before = ledger::device_snapshot();
+        let fb_before = device::fallback_events();
+        let result = self.execute_solve(ctx, spec, cancel, plane);
+        let delta = ledger::device_snapshot().since(dev_before);
+        // relaxed: monotone statistics counters, read approximately.
+        self.device_launches.fetch_add(delta.device_launches, Ordering::Relaxed);
+        self.h2d_bytes.fetch_add(delta.h2d_bytes, Ordering::Relaxed);
+        self.d2h_bytes.fetch_add(delta.d2h_bytes, Ordering::Relaxed);
+        self.backend_fallbacks
+            .fetch_add(device::fallback_events() - fb_before, Ordering::Relaxed);
+        result
+    }
+
+    fn execute_solve(
         &self,
         ctx: &EngineCtx,
         spec: &MapSpec,
@@ -423,6 +472,41 @@ impl EngineShared {
         let m = self.resolve_machine(spec)?;
         let algo = spec.resolve_algorithm(g.n());
         let solver = registry::solver(algo);
+        // Job-plane device fault: a non-CPU job's backend resolution is
+        // the first place a flaky accelerator surfaces (the global plane
+        // fires per launch inside `runtime::device` instead).
+        if spec.backend != Backend::Cpu
+            && plane.is_some_and(|p| p.should_fire(FaultPoint::DeviceLaunch))
+        {
+            panic!("{}", fault::failure(FaultPoint::DeviceLaunch));
+        }
+        // Backend resolution: `device` activates the thread-local PJRT
+        // session for the whole solve (hierarchy build included) and
+        // counts a fallback when it cannot; `auto` resolves quietly —
+        // device only when the artifacts exist and the graph fits a
+        // compiled class. The guard deactivates when the attempt ends.
+        let (_device_guard, backend) = match spec.backend {
+            Backend::Cpu => (None, Backend::Cpu),
+            Backend::Device => match device::activate(ctx.artifacts_dir()) {
+                Some(guard) if device::graph_kernels_available() => {
+                    (Some(guard), Backend::Device)
+                }
+                _ => {
+                    // relaxed: monotone statistics counter, read approximately.
+                    self.backend_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    (None, Backend::Cpu)
+                }
+            },
+            Backend::Auto => {
+                let fits = device::graph_class(g.n(), g.num_directed()).is_some();
+                match if fits { device::activate(ctx.artifacts_dir()) } else { None } {
+                    Some(guard) if device::graph_kernels_available() => {
+                        (Some(guard), Backend::Device)
+                    }
+                    _ => (None, Backend::Cpu),
+                }
+            }
+        };
         // Job-plane hierarchy fault: fires here (once, before the build)
         // rather than inside `CoarseHierarchy` — the global plane fires
         // per level in the build itself.
@@ -451,7 +535,7 @@ impl EngineShared {
                 RemapPlan::Warm { start, .. }
                     if solver.hierarchy_params(&g, &m, spec).is_some() =>
                 {
-                    return match self.warm_execute(ctx, spec, cancel, &g, &m, algo, start)? {
+                    return match self.warm_execute(ctx, spec, cancel, &g, &m, algo, start, backend)? {
                         Some(mut out) => {
                             lock(&self.remapper)
                                 .record(name, *version, g.n(), m.k(), &machine_spec, &out.mapping);
@@ -485,6 +569,7 @@ impl EngineShared {
             panic!("{}", fault::failure(FaultPoint::Solve));
         }
         let mut out = solver.solve(ctx, &g, &m, spec, cancel, hier.as_ref());
+        out.backend = backend;
         if cancel.is_cancelled() {
             return Ok(None);
         }
@@ -531,6 +616,7 @@ impl EngineShared {
         m: &Machine,
         algo: Algorithm,
         start: Vec<Block>,
+        backend: Backend,
     ) -> Result<Option<MapOutcome>> {
         let cached = registry::solver(algo)
             .hierarchy_params(g, m, spec)
@@ -565,6 +651,7 @@ impl EngineShared {
             degraded: false,
             attempts: 1,
             remap: Some(RemapKind::Warm),
+            backend,
         };
         if spec.polish {
             out.polish_improvement = polish_mapping(ctx, g, m, &mut out.mapping)?;
@@ -590,6 +677,11 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
 fn fallback_chain(spec: &MapSpec) -> Vec<MapSpec> {
     let mut base = spec.clone();
     base.options.retain(|k, _| !k.starts_with("__"));
+    // A non-CPU job degrades to the CPU backend *before* any solver
+    // swap: the first rung is the configured solver on the pool, and
+    // the cheaper rungs inherit it — a device flaky enough to exhaust
+    // retries must not be re-entered further down the ladder.
+    base.backend = Backend::Cpu;
     let mut chain = vec![base.clone()];
     if base.algorithm != Some(Algorithm::Jet) {
         let mut jet = base.clone();
@@ -931,6 +1023,10 @@ impl Engine {
             batches: AtomicU64::new(0),
             batched_jobs: AtomicU64::new(0),
             graphs_replaced: AtomicU64::new(0),
+            device_launches: AtomicU64::new(0),
+            h2d_bytes: AtomicU64::new(0),
+            d2h_bytes: AtomicU64::new(0),
+            backend_fallbacks: AtomicU64::new(0),
             cfg,
         });
         let workers = (0..worker_count)
@@ -1344,6 +1440,35 @@ impl Engine {
         // relaxed: approximate statistics read.
         self.shared.graphs_replaced.load(Ordering::Relaxed)
     }
+
+    /// Real PJRT kernel launches executed by jobs (cumulative).
+    pub fn device_launches(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.device_launches.load(Ordering::Relaxed)
+    }
+
+    /// Host→device bytes uploaded by jobs (cumulative). Device-resident
+    /// graphs charge their upload exactly once per `Arc<CsrGraph>` per
+    /// worker session — repeat jobs on a pinned graph add only per-round
+    /// state here.
+    pub fn h2d_bytes(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.h2d_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Device→host bytes downloaded by jobs (cumulative).
+    pub fn d2h_bytes(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.d2h_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Device→cpu fallbacks (cumulative): `backend=device` jobs that
+    /// resolved to the CPU pool plus kernel-level PJRT failures that
+    /// fell back mid-solve. `backend=auto` CPU resolutions do not count.
+    pub fn backend_fallbacks(&self) -> u64 {
+        // relaxed: approximate statistics read.
+        self.shared.backend_fallbacks.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for Engine {
@@ -1396,6 +1521,12 @@ pub fn polish_mapping(ctx: &EngineCtx, g: &CsrGraph, m: &Machine, mapping: &mut 
     let mut sigma: Vec<Block> = (0..k as Block).collect();
     let before = comm_cost_blocks(&bmat, k, &sigma, &oracle);
     let offloaded = match (ctx.runtime(), offload::qap_kernel_size(k)) {
+        // Batched sweeps when the artifact set has them: sigma stays on
+        // the device for up to 16 sweeps per launch.
+        (Some(rt), Ok(kp)) if rt.available(&format!("qap_sweep_k{kp}")) => {
+            offload::swap_refine_batched(rt, &bmat, k, m, &mut sigma, 20)?;
+            true
+        }
         (Some(rt), Ok(kp)) if rt.available(&format!("qap_step_k{kp}")) => {
             offload::swap_refine_offload(rt, &bmat, k, m, &mut sigma, 20)?;
             true
@@ -1736,6 +1867,45 @@ mod tests {
         assert!(zombie.wait().is_err());
         assert!(fresh.wait().is_ok());
         blocker.wait().unwrap();
+    }
+
+    #[test]
+    fn device_backend_falls_back_to_cpu_without_artifacts() {
+        // Deterministic in every environment: the artifact dir is bogus,
+        // so the device session can never offer the graph kernels.
+        let e = Engine::new(EngineConfig {
+            threads: 1,
+            artifacts_dir: "definitely_missing_artifacts".into(),
+            ..EngineConfig::default()
+        });
+        let base = MapSpec::in_memory(Arc::new(gen::grid2d(12, 12, false)))
+            .hierarchy("2:2")
+            .distance("1:10")
+            .algo(Some(Algorithm::GpuIm));
+        let out = e.map(&base.clone().backend(Backend::Device)).unwrap();
+        assert_eq!(out.backend, Backend::Cpu, "missing artifacts must fall back");
+        assert!(!out.degraded, "a backend fallback is not degradation");
+        assert_eq!(e.backend_fallbacks(), 1);
+        validate_mapping(&out.mapping, out.n, out.k).unwrap();
+        // `auto` resolves to cpu silently — no fallback counted.
+        let out = e.map(&base.clone().backend(Backend::Auto)).unwrap();
+        assert_eq!(out.backend, Backend::Cpu);
+        assert_eq!(e.backend_fallbacks(), 1, "auto must not count fallbacks");
+        // Plain cpu jobs never touch the device path at all.
+        let out = e.map(&base).unwrap();
+        assert_eq!(out.backend, Backend::Cpu);
+        assert_eq!(e.device_launches(), 0);
+        assert_eq!((e.h2d_bytes(), e.d2h_bytes()), (0, 0));
+    }
+
+    #[test]
+    fn fallback_chain_forces_cpu_backend_first() {
+        let spec = MapSpec::named("x").algo(Some(Algorithm::GpuIm)).backend(Backend::Device);
+        let chain = fallback_chain(&spec);
+        assert_eq!(chain.len(), 3);
+        assert!(chain.iter().all(|s| s.backend == Backend::Cpu));
+        // First rung keeps the configured solver — only the backend drops.
+        assert_eq!(chain[0].algorithm, Some(Algorithm::GpuIm));
     }
 
     #[test]

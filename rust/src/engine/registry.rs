@@ -2,7 +2,7 @@
 //! evaluation behind the one [`Solver`] trait — no dispatch `match`
 //! anywhere else in the crate.
 
-use super::{CancelToken, EngineCtx, MapOutcome, MapSpec, Solver};
+use super::{Backend, CancelToken, EngineCtx, MapOutcome, MapSpec, Solver};
 use crate::algo::{gpu_hm, gpu_im, intmap, jet, sharedmap, Algorithm};
 use crate::graph::CsrGraph;
 use crate::metrics::PhaseBreakdown;
@@ -44,6 +44,9 @@ fn measured(
         degraded: false,
         attempts: 1,
         remap: None,
+        // Solvers don't know how the engine resolved the backend; the
+        // engine overwrites this right after `solve` returns.
+        backend: Backend::Cpu,
     }
 }
 

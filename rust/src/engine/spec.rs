@@ -76,6 +76,40 @@ impl Refinement {
     }
 }
 
+/// Execution backend for the hot multilevel kernels (`backend=` on the
+/// wire, `--backend` on the CLI): `Cpu` runs the device-style kernels on
+/// the worker pool (the default, bit-for-bit the historical behavior),
+/// `Device` runs them through the PJRT runtime's AOT-compiled artifacts
+/// (falling back to the pool — counted as a `backend_fallback` — when the
+/// runtime or an artifact is missing), and `Auto` probes artifact
+/// availability and problem size, silently choosing per job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    #[default]
+    Cpu,
+    Device,
+    Auto,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Cpu => "cpu",
+            Backend::Device => "device",
+            Backend::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "cpu" => Ok(Backend::Cpu),
+            "device" => Ok(Backend::Device),
+            "auto" => Ok(Backend::Auto),
+            other => bail!("unknown backend `{other}` (cpu|device|auto)"),
+        }
+    }
+}
+
 /// One mapping job, front-end agnostic. Build with [`MapSpec::named`] /
 /// [`MapSpec::in_memory`] and the chainable setters.
 #[derive(Clone, Debug)]
@@ -111,6 +145,8 @@ pub struct MapSpec {
     pub coarsening: SchemeKind,
     /// Run the QAP polish stage (device-offloaded when artifacts exist).
     pub polish: bool,
+    /// Execution backend for the hot kernels (see [`Backend`]).
+    pub backend: Backend,
     /// Keep the full mapping vector in the outcome (cleared when false).
     pub return_mapping: bool,
     /// Solver-specific knobs, e.g. `adaptive = 0` for the GPU-HM Eq. 2
@@ -132,6 +168,7 @@ impl PartialEq for MapSpec {
             && self.refinement == other.refinement
             && self.coarsening == other.coarsening
             && self.polish == other.polish
+            && self.backend == other.backend
             && self.return_mapping == other.return_mapping
             && self.options == other.options
     }
@@ -151,6 +188,7 @@ impl MapSpec {
             refinement: Refinement::Standard,
             coarsening: SchemeKind::Auto,
             polish: false,
+            backend: Backend::Cpu,
             return_mapping: true,
             options: BTreeMap::new(),
         }
@@ -241,6 +279,12 @@ impl MapSpec {
 
     pub fn polish(mut self, polish: bool) -> Self {
         self.polish = polish;
+        self
+    }
+
+    /// Pick the execution backend (default [`Backend::Cpu`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -387,6 +431,16 @@ mod tests {
         assert_eq!(spec.resolve_algorithm(1000), Algorithm::GpuIm);
         assert_eq!(Refinement::from_name("strong").unwrap(), Refinement::Strong);
         assert!(Refinement::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [Backend::Cpu, Backend::Device, Backend::Auto] {
+            assert_eq!(Backend::from_name(b.name()).unwrap(), b);
+        }
+        assert!(Backend::from_name("warp").is_err());
+        assert_eq!(MapSpec::named("x").backend, Backend::Cpu);
+        assert_eq!(MapSpec::named("x").backend(Backend::Auto).backend, Backend::Auto);
     }
 
     #[test]

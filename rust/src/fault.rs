@@ -35,6 +35,7 @@
 //! | `wire_write`      | coordinator connection loop, before a reply| connection closed |
 //! | `route_dispatch`  | cluster router, before forwarding a request to a node | `Err` (dispatch retried on a replica) |
 //! | `node_probe`      | cluster health probe, before pinging a node | probe failure (node marked suspect) |
+//! | `device_launch`   | real PJRT kernel execution ([`crate::runtime::device`]), per launch; also the engine's backend resolution | panic |
 //!
 //! Injected failures carry the [`INJECTED_MARKER`] substring in their
 //! message, which is how the engine attributes them to its
@@ -77,10 +78,13 @@ pub enum FaultPoint {
     RouteDispatch,
     /// Cluster health probe, before pinging a node.
     NodeProbe,
+    /// Real PJRT device kernel execution, per launch (and the engine's
+    /// device-backend resolution, once per job).
+    DeviceLaunch,
 }
 
 /// Number of distinct fault points.
-const POINTS: usize = 10;
+const POINTS: usize = 11;
 
 impl FaultPoint {
     /// All points, in a fixed order (`all` in the `HEIPA_FAULTS` grammar
@@ -96,6 +100,7 @@ impl FaultPoint {
         FaultPoint::WireWrite,
         FaultPoint::RouteDispatch,
         FaultPoint::NodeProbe,
+        FaultPoint::DeviceLaunch,
     ];
 
     pub fn name(self) -> &'static str {
@@ -110,6 +115,7 @@ impl FaultPoint {
             FaultPoint::WireWrite => "wire_write",
             FaultPoint::RouteDispatch => "route_dispatch",
             FaultPoint::NodeProbe => "node_probe",
+            FaultPoint::DeviceLaunch => "device_launch",
         }
     }
 
@@ -129,6 +135,7 @@ impl FaultPoint {
             FaultPoint::WireWrite => 7,
             FaultPoint::RouteDispatch => 8,
             FaultPoint::NodeProbe => 9,
+            FaultPoint::DeviceLaunch => 10,
         }
     }
 }

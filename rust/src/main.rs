@@ -146,6 +146,9 @@ fn spec_from_args(args: &Args) -> Result<(MapSpec, EngineConfig)> {
     if args.get("polish").is_some() {
         spec.polish = args.get_bool("polish");
     }
+    if let Some(v) = args.get("backend") {
+        spec.backend = heipa::engine::Backend::from_name(v)?;
+    }
     if let Some(list) = args.get("opts") {
         for kv in list.split(',').filter(|s| !s.trim().is_empty()) {
             let (k, v) = kv.split_once('=').with_context(|| format!("--opts entry `{kv}` (want k=v)"))?;
@@ -215,7 +218,8 @@ fn print_help() {
          map    --graph NAME|FILE [--config FILE] [--algo gpu-im|auto] [--hier 4:8:6]\n\
                 [--dist 1:10:100] [--topology SPEC] [--eps 0.03] [--seed 1,2,…]\n\
                 [--refine standard|strong] [--coarsening matching|cluster|auto]\n\
-                [--polish] [--opts k=v,…] [--artifacts DIR] [--threads N] [--out part.txt]\n\
+                [--polish] [--backend cpu|device|auto] [--opts k=v,…]\n\
+                [--artifacts DIR] [--threads N] [--out part.txt]\n\
          eval   --graph NAME|FILE --part FILE [--hier …] [--dist …] [--topology SPEC]\n\
          phases --graph NAME|FILE [--hier …] [--dist …] [--topology SPEC] [--seed 1]\n\
          suite  --algos a,b,… [--config FILE] [--instances x,y|smoke|paper] [--seeds 1,2]\n\
@@ -245,6 +249,10 @@ fn print_help() {
          \n\
          --coarsening picks the multilevel coarsening scheme (matching, size-\n\
          constrained cluster LP, or auto = matching with per-level cluster fallback).\n\
+         --backend runs the hot multilevel kernels on the cpu worker pool (default),\n\
+         on the PJRT device runtime (`device`, needs `make artifacts`; falls back to\n\
+         cpu when artifacts are missing), or probes per job (`auto`). The wire key is\n\
+         `backend=` on submit/map lines (README \"Device offload\").\n\
          `--config FILE` reads `key = value` defaults (see config::RunConfig);\n\
          explicit flags always win. Boolean flags (--polish, --stats) take no value.\n\
          --topology SPEC picks a machine model and overrides --hier/--dist:\n\
@@ -290,7 +298,7 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn print_outcome(graph: &str, r: &MapOutcome) {
-    println!(
+    let mut line = format!(
         "instance={} n={} k={} algo={} seed={} J={:.3} imbalance={:.5} host_ms={:.2} device_ms={:.3} polish_dj={:.3}",
         graph,
         r.n,
@@ -303,6 +311,10 @@ fn print_outcome(graph: &str, r: &MapOutcome) {
         r.device_ms,
         r.polish_improvement,
     );
+    if r.backend == heipa::engine::Backend::Device {
+        line.push_str(" backend=device");
+    }
+    println!("{line}");
 }
 
 fn cmd_map(args: &Args) -> Result<()> {

@@ -173,6 +173,11 @@ impl CoarseHierarchy {
                 panic!("{}", crate::fault::failure(crate::fault::FaultPoint::HierarchyBuild));
             }
             let cur = graphs.last().unwrap().clone();
+            // Anchor this level's graph for the device session: the first
+            // kernel launch against it uploads the CSR arrays once; the
+            // scope keeps them resident across the matching rounds and the
+            // contraction gather of this level.
+            let _scope = crate::runtime::device::graph_scope(&cur);
             let lseed = crate::rng::level_seed(params.seed, level);
             let next = {
                 let el = edge_lists.last().unwrap();
@@ -327,6 +332,18 @@ impl CoarseHierarchy {
         &self.graphs[level]
     }
 
+    /// The shared handle to the graph at `level` — the identity the
+    /// device graph store keys its uploads on. Pass this to
+    /// [`crate::runtime::device::graph_scope`] to anchor the level for a
+    /// device session: because the hierarchy (and the engine cache above
+    /// it) owns the `Arc` for its whole lifetime, repeat jobs, seed
+    /// sweeps and warm remaps on the same session graph re-anchor the
+    /// *same* allocation and hit the device-resident copy instead of
+    /// re-uploading.
+    pub fn graph_arc(&self, level: usize) -> &Arc<CsrGraph> {
+        &self.graphs[level]
+    }
+
     /// The contraction map from `level` onto `level + 1`.
     pub fn map(&self, level: usize) -> &[Vertex] {
         &self.maps[level]
@@ -424,6 +441,9 @@ impl CoarseHierarchy {
         debug_assert_eq!(part.len(), self.coarsest().n());
         let coarsest_level = self.maps.len();
         timed_opt!(phases, Phase::RefineRebalance, {
+            // Anchor each level's graph so the refinement kernels reuse
+            // the device-resident copy from the build (or upload once).
+            let _scope = crate::runtime::device::graph_scope(self.graph_arc(coarsest_level));
             refine(coarsest_level, self.coarsest(), self.coarsest_el(), &mut part)
         });
         for lev in (0..coarsest_level).rev() {
@@ -440,6 +460,7 @@ impl CoarseHierarchy {
                 });
             });
             timed_opt!(phases, Phase::RefineRebalance, {
+                let _scope = crate::runtime::device::graph_scope(self.graph_arc(lev));
                 refine(lev, fine, &self.edge_lists[lev], &mut fine_part)
             });
             part = fine_part;

@@ -110,6 +110,62 @@ pub fn reset() {
     WORK_ITEMS.store(0, Ordering::Relaxed);
 }
 
+thread_local! {
+    /// Real-device counters for the PJRT execution path
+    /// ([`crate::runtime::device`]). Thread-local — the device session
+    /// itself is thread-local — so the engine can diff them around one
+    /// job on its worker thread without cross-job interference, then
+    /// fold the delta into its process-wide metrics.
+    static DEVICE_LAUNCHES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    static H2D_BYTES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    static D2H_BYTES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// A snapshot of this thread's real-device counters (PJRT launches and
+/// host↔device traffic in bytes — *measured*, unlike the modeled
+/// [`charge`] tallies).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeviceSnapshot {
+    pub device_launches: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+impl DeviceSnapshot {
+    /// Counters accumulated since `earlier`.
+    pub fn since(self, earlier: DeviceSnapshot) -> DeviceSnapshot {
+        DeviceSnapshot {
+            device_launches: self.device_launches - earlier.device_launches,
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+        }
+    }
+}
+
+/// Record one real PJRT execution with its upload/download volume.
+#[inline]
+pub fn charge_device(h2d_bytes: u64, d2h_bytes: u64) {
+    DEVICE_LAUNCHES.with(|c| c.set(c.get() + 1));
+    H2D_BYTES.with(|c| c.set(c.get() + h2d_bytes));
+    D2H_BYTES.with(|c| c.set(c.get() + d2h_bytes));
+}
+
+/// Record a host→device upload that happens outside an execution (e.g.
+/// building a device-resident graph).
+#[inline]
+pub fn charge_h2d(bytes: u64) {
+    H2D_BYTES.with(|c| c.set(c.get() + bytes));
+}
+
+/// Read this thread's real-device counters.
+pub fn device_snapshot() -> DeviceSnapshot {
+    DeviceSnapshot {
+        device_launches: DEVICE_LAUNCHES.with(|c| c.get()),
+        h2d_bytes: H2D_BYTES.with(|c| c.get()),
+        d2h_bytes: D2H_BYTES.with(|c| c.get()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,6 +21,8 @@ use super::gains::ConnTable;
 use super::Objective;
 use crate::graph::CsrGraph;
 use crate::par::{AtomicList, Pool};
+use crate::runtime::device;
+use crate::topology::Machine;
 use crate::{Block, Vertex};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
@@ -122,8 +124,59 @@ impl JetLp {
         self.moves.reset();
         let gain_ptr = crate::par::SharedMut::new(&mut self.gain);
 
+        // Kernel 1 (device path): one batched launch scores every block
+        // `b < k` for every unlocked vertex against the session's
+        // device-resident graph and a cached dense k×k distance matrix.
+        // The device candidate set is a *superset* of the host kernel's
+        // (which only scans connected blocks) and the dense gain sums in a
+        // different order, so gains can differ in the last ulps — kernel 2
+        // below re-evaluates every candidate on the host either way, which
+        // keeps the move list safe. Only taken for the non-negative filter
+        // with a machine-backed objective; `None` falls through to the
+        // pool kernel.
+        let mut device_done = false;
+        if matches!(filter, Filter::NonNegative) {
+            let machine: Option<&Machine> = match obj {
+                Objective::Comm(m) => Some(*m),
+                Objective::Oracle(o) => Some(o.machine()),
+                Objective::Cut => None,
+            };
+            if let Some(m) = machine {
+                let k = m.k();
+                if k <= device::JET_K_MAX {
+                    let mut dmat = vec![0f64; k * k];
+                    for a in 0..k {
+                        for b in 0..k {
+                            dmat[a * k + b] = m.distance(a as Block, b as Block);
+                        }
+                    }
+                    let key = fnv1a_f64(&dmat);
+                    let l32: Vec<i32> =
+                        (0..n).map(|v| (self.locked[v] == round) as i32).collect();
+                    if let Some((dd, dg)) = device::jet_round(g, part, &l32, k, key, &dmat) {
+                        for v in 0..n {
+                            let (d, gn) = (dd[v], dg[v]);
+                            // dest == -1 ⇔ locked or no movable block; the
+                            // first filter (G ≥ 0) is applied host-side.
+                            if d < 0 || gn < 0.0 {
+                                continue;
+                            }
+                            // relaxed: serial host loop between launches;
+                            // kernel 2 reads after its dispatch barrier.
+                            self.dest[v].store(d as u32, Ordering::Relaxed);
+                            // SAFETY: each v is written exactly once here.
+                            unsafe { gain_ptr.write(v, gn) };
+                            self.stamp[v].store(round, Ordering::Relaxed);
+                            self.cand.push(v as u64);
+                        }
+                        device_done = true;
+                    }
+                }
+            }
+        }
+
         // Kernel 1: best destination + first filter.
-        {
+        if !device_done {
             let locked = &self.locked;
             let dest = &self.dest;
             let stamp = &self.stamp;
@@ -226,6 +279,19 @@ impl JetLp {
 #[inline]
 fn earlier(gain_u: f64, u: Vertex, gain_v: f64, v: Vertex) -> bool {
     gain_u > gain_v || (gain_u == gain_v && u < v)
+}
+
+/// FNV-1a over the raw bits of a distance matrix — cache key for the
+/// device-resident copy (see [`device::jet_round`]).
+fn fnv1a_f64(xs: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in xs {
+        for byte in x.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 #[cfg(test)]

@@ -1,0 +1,487 @@
+//! The real device execution path: device-resident graphs and batched
+//! PJRT launches for the hot multilevel kernels.
+//!
+//! The CPU worker pool ([`crate::par`]) *models* the paper's GPU; this
+//! module *is* the device path: the engine activates a thread-local
+//! device session for jobs whose backend resolves to `device`, and the
+//! multilevel kernels — preference matching ([`match_round`]),
+//! CAS-contraction gather ([`contract_gather`]) and Jet candidate
+//! selection ([`jet_round`]) — execute their whole superstep as **one**
+//! AOT-compiled PJRT launch instead of one pool kernel per operation.
+//!
+//! ## The device graph store
+//!
+//! The session owns a bounded store of device-resident graphs: the
+//! padded CSR-as-edge-list arrays (`eu`, `adj`, `ew`, `vw`) of each
+//! graph are converted to device literals **once** and reused by every
+//! kernel on every round, level, job and seed that touches the same
+//! `Arc<CsrGraph>`. Entries are keyed by graph *identity*
+//! (`Weak<CsrGraph>` + pointer equality), so the lifetime ties itself to
+//! the engine's pinned-graph store and hierarchy cache: as long as a
+//! session graph stays pinned (or a coarse level stays cached), repeat
+//! jobs, seed sweeps and warm remaps never re-upload — only the small
+//! per-round state (matings, partitions, scalars) crosses the bus, and
+//! the `h2d_bytes` counter proves it. Dropped graphs age out via their
+//! dead weak handles; the store is capped at [`STORE_CAP`] entries.
+//!
+//! ## Scoping and fallback
+//!
+//! Kernels receive plain `&CsrGraph`, so the pipelines anchor the owning
+//! `Arc` with [`graph_scope`] (an RAII stack) and the wrappers match it
+//! by pointer. Every wrapper returns `Option`: `None` — session
+//! inactive, graph beyond the largest compiled class, artifact missing,
+//! or a PJRT error (counted in [`fallback_events`]) — means "run the CPU
+//! pool kernel instead", so a partially-offloaded solve is always
+//! well-defined. Graphs are padded to compiled size classes
+//! ([`GRAPH_CLASSES`]); the actual `n`/`m`/`k` travel as scalar operands.
+//!
+//! The [`crate::fault::FaultPoint::DeviceLaunch`] point fires here on
+//! every launch (global plane), panicking like a pool kernel launch so
+//! the engine's fence, retry and degradation chain (device → cpu backend
+//! first) see exactly the failure mode a flaky accelerator would produce.
+
+use super::Runtime;
+use crate::fault::{self, FaultPoint};
+use crate::graph::CsrGraph;
+use crate::par::ledger;
+use crate::{Block, EWeight, Vertex};
+use anyhow::Result;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::{Arc, Weak};
+
+/// Compiled padded graph classes `(n_pad, m_pad)` — must match
+/// `python/compile/aot.py::GRAPH_SIZES` (with `m_pad = 8·n_pad`).
+/// Graphs larger than the last class run on the CPU pool.
+pub const GRAPH_CLASSES: [(usize, usize); 3] =
+    [(1024, 8192), (4096, 32768), (16384, 131072)];
+
+/// Dense-block class of the Jet device kernel; `k` beyond this stays on
+/// the CPU pool (mirrors the dense-oracle cutoff idea, sized for VMEM).
+pub const JET_K_MAX: usize = 256;
+
+/// Max device-resident graphs retained per session.
+pub const STORE_CAP: usize = 32;
+
+/// Smallest compiled class holding `n` vertices and `m` directed edges.
+pub fn graph_class(n: usize, m: usize) -> Option<(usize, usize)> {
+    GRAPH_CLASSES.iter().copied().find(|&(np, mp)| n <= np && m <= mp)
+}
+
+/// One graph's device-resident representation: padded edge-list +
+/// weight literals, uploaded once and shared by all kernels.
+struct DeviceGraph {
+    n: usize,
+    m: usize,
+    n_pad: usize,
+    m_pad: usize,
+    eu: xla::Literal,
+    adj: xla::Literal,
+    ew: xla::Literal,
+    vw: xla::Literal,
+}
+
+impl DeviceGraph {
+    fn build(g: &CsrGraph) -> Option<DeviceGraph> {
+        let (n_pad, m_pad) = graph_class(g.n(), g.num_directed())?;
+        let mut eu = vec![0i32; m_pad];
+        let mut adj = vec![0i32; m_pad];
+        let mut ew = vec![0f64; m_pad];
+        for v in 0..g.n() {
+            for e in g.xadj[v] as usize..g.xadj[v + 1] as usize {
+                eu[e] = v as i32;
+                adj[e] = g.adj[e] as i32;
+                ew[e] = g.ew[e];
+            }
+        }
+        // Padding weight 1 keeps the rating denominator finite; padded
+        // vertices own no edges, so the value is never observed.
+        let mut vw = vec![1.0f64; n_pad];
+        for v in 0..g.n() {
+            vw[v] = g.vw[v] as f64; // exact: vertex weights stay below 2^53
+        }
+        let dg = DeviceGraph {
+            n: g.n(),
+            m: g.num_directed(),
+            n_pad,
+            m_pad,
+            eu: xla::Literal::vec1(&eu),
+            adj: xla::Literal::vec1(&adj),
+            ew: xla::Literal::vec1(&ew),
+            vw: xla::Literal::vec1(&vw),
+        };
+        ledger::charge_h2d((m_pad * (4 + 4 + 8) + n_pad * 8) as u64);
+        Some(dg)
+    }
+}
+
+/// A thread's device session: the PJRT runtime plus the device graph
+/// store and a one-slot distance-matrix cache for the Jet kernel. Owned
+/// by a thread-local (one PJRT client per engine-worker thread, the same
+/// model as the engine's per-process polish [`Runtime`]).
+struct DeviceSession {
+    rt: Runtime,
+    dir: String,
+    graphs: Vec<(Weak<CsrGraph>, Rc<DeviceGraph>)>,
+    /// `(key, padded literal)` of the last Jet distance matrix uploaded;
+    /// topology distances are fixed per machine, so one slot suffices.
+    dmat: Option<(u64, xla::Literal)>,
+    /// Are the three graph-kernel artifact families present? Probed once.
+    kernels: bool,
+}
+
+thread_local! {
+    static SESSION: RefCell<Option<DeviceSession>> = const { RefCell::new(None) };
+    /// Activation depth: wrappers only offload while a [`DeviceGuard`]
+    /// is alive, so `backend=cpu` jobs on the same thread never touch
+    /// the device even though the session outlives the job.
+    static ACTIVE: Cell<u32> = const { Cell::new(0) };
+    /// Stack of anchored graph Arcs (see [`graph_scope`]).
+    static SCOPE: RefCell<Vec<Arc<CsrGraph>>> = const { RefCell::new(Vec::new()) };
+    /// Kernel-level device→cpu fallbacks (PJRT execution errors) on this
+    /// thread; the engine folds the per-job delta into its metrics.
+    static FALLBACK_EVENTS: Cell<u64> = const { Cell::new(0) };
+    /// Did `PjRtClient` creation fail on this thread? Cached so a broken
+    /// plugin costs one attempt, not one per job.
+    static CLIENT_FAILED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// RAII activation for the current job; created by [`activate`].
+pub struct DeviceGuard(());
+
+impl Drop for DeviceGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| a.set(a.get() - 1));
+    }
+}
+
+/// Activate the device path on this thread for the lifetime of the
+/// guard. Returns `None` when the PJRT client cannot be created (cached)
+/// — the caller falls back to the CPU pool. Creating the session lazily
+/// compiles nothing; executables compile on first use per artifact.
+pub fn activate(artifacts_dir: &str) -> Option<DeviceGuard> {
+    if CLIENT_FAILED.with(|c| c.get()) {
+        return None;
+    }
+    let ok = SESSION.with(|s| {
+        let mut s = s.borrow_mut();
+        match s.as_ref() {
+            Some(sess) if sess.dir == artifacts_dir => true,
+            _ => match Runtime::new(artifacts_dir) {
+                Ok(rt) => {
+                    let kernels = ["match_round", "contract_gather", "jet_round"]
+                        .iter()
+                        .all(|k| rt.available(&format!("{k}_n{}", GRAPH_CLASSES[0].0)));
+                    *s = Some(DeviceSession {
+                        rt,
+                        dir: artifacts_dir.to_string(),
+                        graphs: Vec::new(),
+                        dmat: None,
+                        kernels,
+                    });
+                    true
+                }
+                Err(_) => {
+                    CLIENT_FAILED.with(|c| c.set(true));
+                    false
+                }
+            },
+        }
+    });
+    if !ok {
+        return None;
+    }
+    ACTIVE.with(|a| a.set(a.get() + 1));
+    Some(DeviceGuard(()))
+}
+
+/// Is a device session active on this thread?
+pub fn active() -> bool {
+    ACTIVE.with(|a| a.get() > 0)
+}
+
+/// Are the graph-kernel artifacts present in the active session?
+/// (`backend=auto` probes this; the per-kernel `available` checks still
+/// gate each launch individually.)
+pub fn graph_kernels_available() -> bool {
+    active() && SESSION.with(|s| s.borrow().as_ref().is_some_and(|sess| sess.kernels))
+}
+
+/// Cumulative kernel-level device→cpu fallback events on this thread.
+pub fn fallback_events() -> u64 {
+    FALLBACK_EVENTS.with(|c| c.get())
+}
+
+/// RAII anchor for the `Arc` owning a graph; created by [`graph_scope`].
+pub struct GraphScope(());
+
+impl Drop for GraphScope {
+    fn drop(&mut self) {
+        SCOPE.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// Anchor `g` so device kernels called with `&CsrGraph` below this point
+/// can find (and cache against) its owning `Arc`. The multilevel
+/// pipelines open one scope per hierarchy level; kernels on unanchored
+/// graphs simply stay on the CPU pool.
+#[must_use = "the anchor is popped when the guard drops"]
+pub fn graph_scope(g: &Arc<CsrGraph>) -> GraphScope {
+    SCOPE.with(|s| s.borrow_mut().push(g.clone()));
+    GraphScope(())
+}
+
+/// Fire the per-launch fault point, account the transfer, execute.
+fn launch(
+    rt: &Runtime,
+    name: &str,
+    inputs: &[&xla::Literal],
+    h2d_bytes: u64,
+    d2h_bytes: u64,
+) -> Result<xla::Literal> {
+    if fault::fire_global(FaultPoint::DeviceLaunch) {
+        panic!("{}", fault::failure(FaultPoint::DeviceLaunch));
+    }
+    ledger::charge_device(h2d_bytes, d2h_bytes);
+    rt.execute_refs(name, inputs)
+}
+
+/// Run `f` with the session and the device-resident form of `g` (built
+/// on first use), or `None` when the device path does not apply here:
+/// inactive session, unanchored graph, graph beyond the compiled
+/// classes, missing artifact, or (after `f` errors) a PJRT failure.
+fn with_graph<R>(
+    g: &CsrGraph,
+    kernel: &str,
+    f: impl FnOnce(&mut DeviceSession, &DeviceGraph) -> Result<R>,
+) -> Option<R> {
+    if !active() {
+        return None;
+    }
+    let anchor = SCOPE.with(|s| {
+        s.borrow()
+            .iter()
+            .rev()
+            .find(|a| std::ptr::eq(Arc::as_ptr(a), g as *const CsrGraph))
+            .cloned()
+    })?;
+    SESSION.with(|s| {
+        let mut s = s.borrow_mut();
+        let sess = s.as_mut()?;
+        // Identity lookup; dead weaks age out, the oldest entry evicts.
+        let mut found = None;
+        sess.graphs.retain(|(w, dg)| match w.upgrade() {
+            Some(live) => {
+                if Arc::ptr_eq(&live, &anchor) {
+                    found = Some(dg.clone());
+                }
+                true
+            }
+            None => false,
+        });
+        let dg = match found {
+            Some(dg) => dg,
+            None => {
+                let dg = Rc::new(DeviceGraph::build(g)?);
+                if sess.graphs.len() >= STORE_CAP {
+                    sess.graphs.remove(0);
+                }
+                sess.graphs.push((Arc::downgrade(&anchor), dg.clone()));
+                dg
+            }
+        };
+        if !sess.rt.available(&format!("{kernel}_n{}", dg.n_pad)) {
+            return None;
+        }
+        match f(sess, &dg) {
+            Ok(r) => Some(r),
+            Err(_) => {
+                // A real PJRT failure: fall back to the pool kernel for
+                // this superstep (inputs are re-read from host state
+                // every round, so no device state is lost).
+                FALLBACK_EVENTS.with(|c| c.set(c.get() + 1));
+                None
+            }
+        }
+    })
+}
+
+/// `UNMATCHED` on the host side (`coarsen::match_par`).
+const UNMATCHED: Vertex = Vertex::MAX;
+
+/// One preference-matching round as a single device launch: per-edge
+/// ratings (bit-for-bit the host's quotient rating + seeded edge noise),
+/// per-vertex best preference (max rating, ties to the smallest
+/// neighbor) and the mutual handshake. Returns the new mating, or `None`
+/// for "use the CPU pool kernels".
+pub fn match_round(
+    g: &CsrGraph,
+    mate: &[Vertex],
+    max_pair_weight: f64,
+    seed: u64,
+) -> Option<Vec<Vertex>> {
+    with_graph(g, "match_round", |sess, dg| {
+        let mut m32 = vec![-2i32; dg.n_pad]; // padded vertices never match
+        for (v, &mv) in mate.iter().enumerate() {
+            m32[v] = if mv == UNMATCHED { -1 } else { mv as i32 };
+        }
+        let mate_l = xla::Literal::vec1(&m32);
+        let nm_l = xla::Literal::vec1(&[dg.n as i64, dg.m as i64]);
+        let maxw_l = xla::Literal::vec1(&[max_pair_weight]);
+        let seed_l = xla::Literal::vec1(&[seed]);
+        let inputs = [&dg.eu, &dg.adj, &dg.ew, &dg.vw, &mate_l, &nm_l, &maxw_l, &seed_l];
+        let name = format!("match_round_n{}", dg.n_pad);
+        let out = launch(
+            &sess.rt,
+            &name,
+            &inputs,
+            (dg.n_pad * 4 + 32) as u64,
+            (dg.n_pad * 8) as u64,
+        )?;
+        let (_pref, mate_new) = out.to_tuple2()?;
+        let m_new: Vec<i32> = mate_new.to_vec::<i32>()?;
+        Ok(m_new[..dg.n]
+            .iter()
+            .map(|&x| if x < 0 { UNMATCHED } else { x as Vertex })
+            .collect())
+    })
+}
+
+/// The gather half of CAS contraction as one launch: both endpoints of
+/// every directed edge mapped through the coarse map. Returns
+/// `(cu, cv)` of length `m`, or `None` for the CPU path.
+pub fn contract_gather(g: &CsrGraph, cmap: &[Vertex]) -> Option<(Vec<Vertex>, Vec<Vertex>)> {
+    with_graph(g, "contract_gather", |sess, dg| {
+        let mut c32 = vec![0i32; dg.n_pad];
+        for (v, &cv) in cmap.iter().enumerate() {
+            c32[v] = cv as i32;
+        }
+        let cmap_l = xla::Literal::vec1(&c32);
+        let nm_l = xla::Literal::vec1(&[dg.n as i64, dg.m as i64]);
+        let inputs = [&dg.eu, &dg.adj, &cmap_l, &nm_l];
+        let name = format!("contract_gather_n{}", dg.n_pad);
+        let out = launch(
+            &sess.rt,
+            &name,
+            &inputs,
+            (dg.n_pad * 4 + 16) as u64,
+            (dg.m_pad * 8) as u64,
+        )?;
+        let (cu_l, cv_l) = out.to_tuple2()?;
+        let cu: Vec<i32> = cu_l.to_vec::<i32>()?;
+        let cv: Vec<i32> = cv_l.to_vec::<i32>()?;
+        Ok((
+            cu[..dg.m].iter().map(|&x| x as Vertex).collect(),
+            cv[..dg.m].iter().map(|&x| x as Vertex).collect(),
+        ))
+    })
+}
+
+/// Jet candidate selection for one LP superstep as a single launch:
+/// dense per-vertex block connectivity × the distance matrix gives every
+/// move's gain at once (`gain(v, from→b) = Σ_c conn(c)·(D[from,c] −
+/// D[b,c])`). Returns per-vertex `(dest, gain)` — `dest[v] == -1` means
+/// no candidate — or `None` for the CPU path. The caller applies the Jet
+/// filter to `gain` (float tolerance documented in the parity tests: the
+/// dense summation order differs from the conn-table scan). The padded
+/// distance matrix is cached on device under `dmat_key`, so repeat
+/// rounds re-upload nothing.
+pub fn jet_round(
+    g: &CsrGraph,
+    part: &[Block],
+    locked: &[i32],
+    k: usize,
+    dmat_key: u64,
+    dmat: &[EWeight],
+) -> Option<(Vec<i32>, Vec<f64>)> {
+    if k > JET_K_MAX {
+        return None;
+    }
+    debug_assert_eq!(dmat.len(), k * k);
+    with_graph(g, "jet_round", |sess, dg| {
+        if sess.dmat.as_ref().map(|(key, _)| *key) != Some(dmat_key) {
+            let mut padded = vec![0f64; JET_K_MAX * JET_K_MAX];
+            for a in 0..k {
+                padded[a * JET_K_MAX..a * JET_K_MAX + k]
+                    .copy_from_slice(&dmat[a * k..(a + 1) * k]);
+            }
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&[JET_K_MAX as i64, JET_K_MAX as i64])?;
+            ledger::charge_h2d((JET_K_MAX * JET_K_MAX * 8) as u64);
+            sess.dmat = Some((dmat_key, lit));
+        }
+        let mut p32 = vec![0i32; dg.n_pad];
+        for (v, &b) in part.iter().enumerate() {
+            p32[v] = b as i32;
+        }
+        let mut l32 = vec![1i32; dg.n_pad]; // padded vertices stay locked
+        l32[..dg.n].copy_from_slice(&locked[..dg.n]);
+        let part_l = xla::Literal::vec1(&p32);
+        let locked_l = xla::Literal::vec1(&l32);
+        let nmk_l = xla::Literal::vec1(&[dg.n as i64, dg.m as i64, k as i64]);
+        let (_, dmat_l) = sess.dmat.as_ref().expect("dmat cached above");
+        let inputs = [&dg.eu, &dg.adj, &dg.ew, &part_l, &locked_l, dmat_l, &nmk_l];
+        let name = format!("jet_round_n{}", dg.n_pad);
+        let out = launch(
+            &sess.rt,
+            &name,
+            &inputs,
+            (dg.n_pad * 8 + 24) as u64,
+            (dg.n_pad * 12) as u64,
+        )?;
+        let (dest_l, gain_l) = out.to_tuple2()?;
+        let dest: Vec<i32> = dest_l.to_vec::<i32>()?;
+        let gain: Vec<f64> = gain_l.to_vec::<f64>()?;
+        Ok((dest[..dg.n].to_vec(), gain[..dg.n].to_vec()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn graph_classes_cover_and_reject() {
+        assert_eq!(graph_class(10, 50), Some((1024, 8192)));
+        assert_eq!(graph_class(1024, 8192), Some((1024, 8192)));
+        assert_eq!(graph_class(1025, 10), Some((4096, 32768)));
+        // Dense small graph overflows the edge budget of its n-class.
+        assert_eq!(graph_class(1000, 10_000), Some((4096, 32768)));
+        assert_eq!(graph_class(20_000, 10), None);
+        assert_eq!(graph_class(16384, 131_073), None);
+    }
+
+    #[test]
+    fn wrappers_are_none_without_activation() {
+        let g = Arc::new(gen::grid2d(8, 8, false));
+        let _scope = graph_scope(&g);
+        assert!(!active());
+        assert!(match_round(&g, &vec![UNMATCHED; g.n()], 1e18, 1).is_none());
+        assert!(contract_gather(&g, &vec![0; g.n()]).is_none());
+        assert!(jet_round(&g, &vec![0; g.n()], &vec![0; g.n()], 4, 1, &vec![0.0; 16]).is_none());
+    }
+
+    #[test]
+    fn activation_guard_restores_inactive_state() {
+        // Whether or not the PJRT plugin can come up here, activate()
+        // must not panic and the guard must restore the inactive state.
+        assert!(!active());
+        if let Some(guard) = activate("artifacts") {
+            assert!(active());
+            drop(guard);
+        }
+        assert!(!active());
+    }
+
+    #[test]
+    fn unanchored_graphs_stay_on_cpu() {
+        let Some(_guard) = activate("artifacts") else { return };
+        let g = Arc::new(gen::grid2d(8, 8, false));
+        // No graph_scope: the wrapper cannot see the Arc, so it must
+        // decline even with an active session.
+        assert!(match_round(&g, &vec![UNMATCHED; g.n()], 1e18, 1).is_none());
+    }
+}

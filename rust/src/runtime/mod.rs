@@ -6,6 +6,7 @@
 //! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
 //! rejects, while the text parser reassigns ids (see /opt/xla-example).
 
+pub mod device;
 pub mod offload;
 
 use anyhow::{bail, Context, Result};
@@ -76,6 +77,17 @@ impl Runtime {
         let exe = self.load(name)?;
         let result = exe
             .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute artifact {name}"))?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+
+    /// Like [`Self::execute`], but borrowing the input literals — the
+    /// device session ([`device`]) launches against literals cached in
+    /// its graph store, which must not be moved or copied per launch.
+    pub fn execute_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
             .with_context(|| format!("execute artifact {name}"))?;
         Ok(result[0][0].to_literal_sync()?)
     }

@@ -2,7 +2,9 @@
 //!
 //! Runs every registered solver with per-job fault planes (`__fault.*`
 //! options) arming the solve, graph-store and job-pickup injection
-//! points, with retry + degradation enabled, and asserts the
+//! points — plus `device_launch` for the PJRT offload path, whose
+//! degradation chain must fall back to the cpu backend before switching
+//! solvers — with retry + degradation enabled, and asserts the
 //! self-healing contract:
 //!
 //! * every job reaches a terminal state — a valid mapping (possibly
@@ -246,6 +248,37 @@ fn chaos_report_for_fixed_seeds() {
         std::fs::write(&path, lines.join("\n") + "\n")
             .unwrap_or_else(|err| panic!("write {path}: {err}"));
     }
+}
+
+#[test]
+fn device_launch_fault_degrades_to_cpu_backend() {
+    // A flaky accelerator (`device_launch` at p=1) must not fail the job:
+    // the retry fence absorbs the panics and the degradation chain drops
+    // to the cpu backend *before* switching solvers, so the outcome is a
+    // valid mapping that records the backend actually used.
+    let e = chaos_engine(1, 1);
+    let mut opts = BTreeMap::new();
+    opts.insert("__fault.device_launch".into(), "1".into());
+    opts.insert("__fault.seed".into(), "99".into());
+    let spec = MapSpec::named(INSTANCE)
+        .hierarchy(HIERARCHY)
+        .distance(DISTANCE)
+        .algo(Some(heipa::algo::Algorithm::GpuIm))
+        .seed(1)
+        .backend(heipa::engine::Backend::Device)
+        .return_mapping(true)
+        .options(opts);
+    let h = e.submit(&spec).expect("submit");
+    let out = h.wait().expect("device-launch chaos must degrade, not fail");
+    assert_eq!(
+        out.backend,
+        heipa::engine::Backend::Cpu,
+        "degradation must fall back to the cpu backend"
+    );
+    assert!(out.degraded, "p=1 device faults must exhaust retries into degradation");
+    assert_eq!(out.attempts, 3, "degradation fires on the final attempt");
+    assert_outcome_valid("device_launch", &out);
+    assert!(e.faults_injected() > 0, "device_launch plane never fired");
 }
 
 #[test]
